@@ -1,0 +1,37 @@
+//! The motivating failure (§2.2 / Beznosikov et al. Example 1): naive
+//! compressed gradient descent (DCGD) with Top-1 fails on three conflicting
+//! strongly convex quadratics, while EF, EF21 and EF21+ converge at the
+//! same stepsize.
+//!
+//!   cargo run --release --example divergence
+
+use ef21::prelude::*;
+use std::sync::Arc;
+
+fn oracles() -> Vec<Box<dyn GradOracle>> {
+    ef21::oracle::quadratic::divergence_example()
+        .into_iter()
+        .map(|q| Box::new(q) as Box<dyn GradOracle>)
+        .collect()
+}
+
+fn main() {
+    let gamma = ef21::theory::stepsize_theorem1(16.0, 16.0, 1.0 / 3.0);
+    println!("three conflicting quadratics in R^3, Top-1, gamma = {gamma:.4}");
+    println!("{:<8} {:>14} {:>14}", "method", "|grad|^2@5k", "converged");
+    for algo in [AlgoSpec::Dcgd, AlgoSpec::Ef, AlgoSpec::Ef21, AlgoSpec::Ef21Plus] {
+        let (m, w) = ef21::algo::build(
+            algo,
+            vec![1.0; 3],
+            oracles(),
+            Arc::new(TopK::new(1)),
+            gamma,
+            0,
+        );
+        let h = run_protocol(m, w, &RunConfig::rounds(5000).with_record_every(100));
+        let g = h.final_grad_norm_sq();
+        println!("{:<8} {:>14.3e} {:>14}", algo.name(), g, g < 1e-8);
+    }
+    println!("\nDCGD stalls/cycles; the EF family fixes it — EF21 with only");
+    println!("standard assumptions and an O(1/T) rate (Theorem 1).");
+}

@@ -1,0 +1,61 @@
+//! Quickstart: 20-node EF21 with Top-1 on the (synthetic) a9a dataset at
+//! the Theorem-1 stepsize — the minimal end-to-end use of the public API.
+//!
+//!   cargo run --release --example quickstart
+
+use ef21::prelude::*;
+use std::sync::Arc;
+
+fn main() {
+    // 1. Data: Table-3 a9a (real LibSVM file if present under data/,
+    //    deterministic synthetic stand-in otherwise), split across 20
+    //    heterogeneous workers as in §5.1.
+    let ds = ef21::data::synth::load_or_generate("a9a", std::path::Path::new("data"), 0);
+    let shards = ef21::data::partition::shards(&ds, 20);
+    println!("dataset {}: N={} d={} workers=20", ds.name, ds.n, ds.d);
+
+    // 2. Local objectives: Eq. (19) logistic regression with the nonconvex
+    //    regularizer (lambda = 0.1).
+    let lam = 0.1;
+    let oracles: Vec<Box<dyn GradOracle>> = shards
+        .iter()
+        .map(|s| Box::new(LogRegOracle::new(*s, lam)) as Box<dyn GradOracle>)
+        .collect();
+
+    // 3. Theory stepsize (Theorem 1): gamma = 1/(L + Ltilde sqrt(beta/theta)).
+    let l_i: Vec<f64> = shards.iter().map(|s| ef21::theory::logreg_l(s.a, s.n, s.d, lam)).collect();
+    let l = ef21::theory::logreg_l(&ds.a, ds.n, ds.d, lam);
+    let sm = ef21::theory::Smoothness::from_l_i(l_i, l);
+    let k = 1;
+    let alpha = k as f64 / ds.d as f64;
+    let gamma = ef21::theory::stepsize_theorem1(sm.l, sm.l_tilde, alpha);
+    println!("L={:.4} Ltilde={:.4} alpha={:.4} -> gamma={:.5e}", sm.l, sm.l_tilde, alpha, gamma);
+
+    // 4. EF21 (Algorithm 2) with Top-1 for 2000 rounds.
+    let (master, workers) = ef21::algo::build(
+        AlgoSpec::Ef21,
+        vec![0.0; ds.d],
+        oracles,
+        Arc::new(TopK::new(k)),
+        gamma,
+        0,
+    );
+    let history = run_protocol(
+        master,
+        workers,
+        &RunConfig::rounds(2000).with_record_every(100).with_label("EF21 top1 a9a"),
+    );
+
+    // 5. Report.
+    for r in &history.records {
+        println!(
+            "round {:>5}  bits/n {:>10.0}  f(x) {:.6}  |grad|^2 {:.3e}  G^t {:.3e}",
+            r.round, r.bits_per_client, r.loss, r.grad_norm_sq, r.gt
+        );
+    }
+    println!(
+        "done: final f={:.6}, |grad|^2={:.3e}",
+        history.final_loss(),
+        history.final_grad_norm_sq()
+    );
+}

@@ -1,0 +1,253 @@
+"""AOT lowering: JAX (L2, calling Pallas L1) -> HLO text artifacts + manifest.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+results via ``HloModuleProto::from_text_file`` and never touches Python.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (shapes are static, so shards are zero-padded + masked):
+
+  logreg_grad_<ds>   (a, y, w, x, lam) -> (loss, grad)     per Table-3 dataset
+  lstsq_grad_<ds>    (a, b, w, x)      -> (loss, grad)     per Table-3 dataset
+  transformer_step   (flat, tokens)    -> (loss, grad)     DL experiment
+  transformer_eval   (flat, tokens)    -> (loss, acc)      DL experiment
+  compress_mask      (v, thresh)       -> (masked,)        Top-k parallel half
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import compress as kcompress
+from .kernels import logreg as klogreg
+
+# Table 3 of the paper: (name, N, d). Shards = 20-way contiguous split,
+# first 19 workers get floor(N/20) rows, the last additionally the remainder.
+DATASETS = [
+    ("phishing", 11055, 68),
+    ("mushrooms", 8120, 112),
+    ("a9a", 32560, 123),
+    ("w8a", 49749, 300),
+]
+N_WORKERS = 20
+
+# DL experiment (Figures 13-15 substitute).
+TRANSFORMER_SPEC = model.TransformerSpec(
+    vocab=256, d_model=128, n_layers=2, n_heads=4, seq_len=64
+)
+TRANSFORMER_BATCH = 8
+
+
+def max_shard_rows(n_total: int, n_workers: int = N_WORKERS) -> int:
+    base = n_total // n_workers
+    return base + n_total % n_workers
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def build_entries():
+    """Yield (artifact_name, jitted_fn, example_specs, manifest_meta)."""
+    entries = []
+
+    for ds_name, n_total, d in DATASETS:
+        n_pad = model.padded_rows(max_shard_rows(n_total))
+
+        def logreg_fn(a, y, w, x, lam):
+            return model.logreg_loss_grad(a, y, w, x, lam)
+
+        entries.append(
+            dict(
+                name=f"logreg_grad_{ds_name}",
+                fn=logreg_fn,
+                specs=[
+                    _spec((n_pad, d)),
+                    _spec((n_pad,)),
+                    _spec((n_pad,)),
+                    _spec((d,)),
+                    _spec(()),
+                ],
+                inputs=[
+                    _io("a", (n_pad, d), "f32"),
+                    _io("y", (n_pad,), "f32"),
+                    _io("w", (n_pad,), "f32"),
+                    _io("x", (d,), "f32"),
+                    _io("lam", (), "f32"),
+                ],
+                outputs=[_io("loss", (), "f32"), _io("grad", (d,), "f32")],
+                meta=dict(
+                    kind="logreg",
+                    dataset=ds_name,
+                    n_total=n_total,
+                    d=d,
+                    n_rows_padded=n_pad,
+                    tile=klogreg.DEFAULT_TILE,
+                    n_workers=N_WORKERS,
+                ),
+            )
+        )
+
+        def lstsq_fn(a, b, w, x):
+            return model.lstsq_loss_grad(a, b, w, x)
+
+        entries.append(
+            dict(
+                name=f"lstsq_grad_{ds_name}",
+                fn=lstsq_fn,
+                specs=[
+                    _spec((n_pad, d)),
+                    _spec((n_pad,)),
+                    _spec((n_pad,)),
+                    _spec((d,)),
+                ],
+                inputs=[
+                    _io("a", (n_pad, d), "f32"),
+                    _io("b", (n_pad,), "f32"),
+                    _io("w", (n_pad,), "f32"),
+                    _io("x", (d,), "f32"),
+                ],
+                outputs=[_io("loss", (), "f32"), _io("grad", (d,), "f32")],
+                meta=dict(
+                    kind="lstsq",
+                    dataset=ds_name,
+                    n_total=n_total,
+                    d=d,
+                    n_rows_padded=n_pad,
+                    tile=klogreg.DEFAULT_TILE,
+                    n_workers=N_WORKERS,
+                ),
+            )
+        )
+
+    spec = TRANSFORMER_SPEC
+    n_params = spec.n_params
+    bsz, slen = TRANSFORMER_BATCH, spec.seq_len
+
+    def tr_step(flat, tokens):
+        return model.transformer_loss_and_grad(spec, flat, tokens)
+
+    def tr_eval(flat, tokens):
+        return model.transformer_eval(spec, flat, tokens)
+
+    tr_meta = dict(
+        kind="transformer",
+        vocab=spec.vocab,
+        d_model=spec.d_model,
+        n_layers=spec.n_layers,
+        n_heads=spec.n_heads,
+        seq_len=slen,
+        batch=bsz,
+        n_params=n_params,
+        param_shapes=[[n, list(s)] for n, s in spec.param_shapes()],
+    )
+    entries.append(
+        dict(
+            name="transformer_step",
+            fn=tr_step,
+            specs=[_spec((n_params,)), _spec((bsz, slen), jnp.int32)],
+            inputs=[
+                _io("flat_params", (n_params,), "f32"),
+                _io("tokens", (bsz, slen), "i32"),
+            ],
+            outputs=[_io("loss", (), "f32"), _io("grad", (n_params,), "f32")],
+            meta=tr_meta,
+        )
+    )
+    entries.append(
+        dict(
+            name="transformer_eval",
+            fn=tr_eval,
+            specs=[_spec((n_params,)), _spec((bsz, slen), jnp.int32)],
+            inputs=[
+                _io("flat_params", (n_params,), "f32"),
+                _io("tokens", (bsz, slen), "i32"),
+            ],
+            outputs=[_io("loss", (), "f32"), _io("accuracy", (), "f32")],
+            meta=tr_meta,
+        )
+    )
+
+    # Threshold mask sized for the transformer gradient (padded to the
+    # vector tile); Rust zero-pads the tail before invoking.
+    vtile = kcompress.DEFAULT_VTILE
+    n_mask = vtile * math.ceil(n_params / vtile)
+
+    def mask_fn(v, thresh):
+        return (kcompress.threshold_mask(v, thresh),)
+
+    entries.append(
+        dict(
+            name="compress_mask",
+            fn=mask_fn,
+            specs=[_spec((n_mask,)), _spec((1,))],
+            inputs=[_io("v", (n_mask,), "f32"), _io("thresh", (1,), "f32")],
+            outputs=[_io("masked", (n_mask,), "f32")],
+            meta=dict(kind="compress_mask", n=n_mask, tile=vtile),
+        )
+    )
+    return entries
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", default=None, help="lower a single artifact")
+    args = parser.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+    for e in build_entries():
+        if args.only and e["name"] != args.only:
+            continue
+        lowered = jax.jit(e["fn"]).lower(*e["specs"])
+        text = to_hlo_text(lowered)
+        fname = f"{e['name']}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[e["name"]] = dict(
+            file=fname,
+            inputs=e["inputs"],
+            outputs=e["outputs"],
+            meta=e["meta"],
+        )
+        print(f"lowered {e['name']:28s} -> {fname} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    if args.only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old.update(manifest)
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest)} entries -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts).
+
+Modules:
+  - :mod:`.logreg`   - fused logistic-regression loss+grad over row tiles
+  - :mod:`.lstsq`    - fused least-squares loss+grad (PL case)
+  - :mod:`.compress` - magnitude-threshold mask (parallel half of Top-k)
+  - :mod:`.ref`      - pure-jnp oracles the kernels are tested against
+"""
+
+from . import compress, logreg, lstsq, ref  # noqa: F401

@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: magnitude-threshold compression mask.
+
+Top-k splits naturally into a sequential part (selecting the k-th largest
+magnitude - done on the host / in Rust via ``select_nth_unstable``) and a
+perfectly data-parallel part (zeroing every entry below the threshold).
+This kernel implements the parallel part, tiled over the vector so that
+arbitrarily large gradients (the DL experiment compresses ~0.7M floats)
+stream through VMEM in fixed-size chunks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_VTILE = 4096
+
+
+def _mask_tile_kernel(v_ref, t_ref, o_ref):
+    v = v_ref[...]
+    t = t_ref[...]  # (1,) threshold, replicated to every tile
+    o_ref[...] = jnp.where(jnp.abs(v) >= t[0], v, jnp.zeros_like(v))
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def threshold_mask(v, thresh, *, tile: int = DEFAULT_VTILE):
+    """Zero all entries of ``v`` with ``|v_j| < thresh``; keep the rest.
+
+    ``thresh`` is a shape-(1,) array. Length must divide into ``tile``; the
+    caller pads (padding entries are zero and stay zero under any mask).
+    """
+    (n,) = v.shape
+    if n % tile != 0:
+        raise ValueError(f"length {n} not divisible by tile {tile}")
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _mask_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), v.dtype),
+        interpret=True,
+    )(v, thresh)

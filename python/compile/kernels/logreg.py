@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: fused logistic-regression loss + gradient (data term).
+
+This is the per-worker compute hot spot of every experiment in the paper:
+each of the ``n`` nodes evaluates ``f_i`` and ``grad f_i`` on its local shard
+every communication round (Algorithm 2, line 5). The kernel fuses the
+forward matvec ``z = A x``, the elementwise logistic link, and the backward
+matvec ``g = A^T r`` into a single pass over row-tiles of ``A``, so each
+tile of the data matrix is read from HBM exactly once.
+
+TPU mapping (see DESIGN.md SHardware-Adaptation): the grid iterates over
+``(TILE_N, d)`` blocks of ``A`` staged through VMEM by the BlockSpec; the
+two matvecs are MXU ``dot``s; sigmoid/softplus ride the VPU between them;
+the ``(d,)`` gradient accumulator lives in the output block that is revisited
+by every grid step (constant index_map), which Pallas keeps resident in VMEM
+across the whole grid. ``interpret=True`` is mandatory on this CPU-only
+image - real TPU lowering emits a Mosaic custom-call the CPU PJRT plugin
+cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height. 256 rows x 300 cols x 4 B = 300 KiB per A-block: three
+# such buffers (double-buffered input + accumulator) sit comfortably in a
+# 16 MiB TPU VMEM while keeping the MXU fed with (256, d) x (d, 1) dots.
+DEFAULT_TILE = 256
+
+
+def _logreg_tile_kernel(a_ref, y_ref, w_ref, x_ref, g_ref, loss_ref):
+    """One grid step: accumulate loss and gradient of a (TILE, d) row block."""
+    a = a_ref[...]  # (TILE, d)  f32, staged in VMEM
+    y = y_ref[...]  # (TILE,)
+    w = w_ref[...]  # (TILE,)    0/1 validity mask (zero-padded rows)
+    x = x_ref[...]  # (d,)       model, replicated to every grid step
+
+    # Forward matvec (MXU): margins for this tile.
+    z = a @ x
+    m = -y * z
+    # Stable softplus on the VPU: log(1+e^m) = max(m,0) + log1p(e^{-|m|}).
+    loss_part = jnp.sum(w * (jnp.maximum(m, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(m)))))
+    # Residual and backward matvec (MXU): r^T A gives the tile's grad share.
+    r = w * (-y) * jax.nn.sigmoid(m)
+    g_part = r @ a
+
+    # First grid step initializes the revisited accumulators.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    g_ref[...] += g_part
+    loss_ref[...] += jnp.reshape(loss_part, (1,))
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def logreg_data_loss_grad(a, y, w, x, *, tile: int = DEFAULT_TILE):
+    """Sum-form loss and gradient of the logistic data term via Pallas.
+
+    Returns ``(loss, grad)`` already divided by ``n = sum(w)``, matching
+    ``ref.logreg_loss_grad``. Row count must be divisible by ``tile``; the
+    L2 wrapper (``model.pad_shard``) guarantees this by zero-padding and
+    masking with ``w``.
+    """
+    n_rows, d = a.shape
+    if n_rows % tile != 0:
+        raise ValueError(f"rows {n_rows} not divisible by tile {tile}")
+    grid = (n_rows // tile,)
+    g_sum, loss_sum = pl.pallas_call(
+        _logreg_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), a.dtype),
+            jax.ShapeDtypeStruct((1,), a.dtype),
+        ],
+        interpret=True,
+    )(a, y, w, x)
+    n = jnp.sum(w)
+    return loss_sum[0] / n, g_sum / n

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: fused least-squares loss + gradient (PL case, SA.2).
+
+Same tiling scheme as :mod:`.logreg` - one pass over row tiles of ``A``,
+forward and backward matvec fused so ``A`` is read once - but with the
+squared-error link, which is the paper's canonical PL-but-not-strongly-convex
+objective (used for Figures 9-12).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .logreg import DEFAULT_TILE
+
+
+def _lstsq_tile_kernel(a_ref, b_ref, w_ref, x_ref, g_ref, loss_ref):
+    """One grid step: accumulate loss/grad of a (TILE, d) row block."""
+    a = a_ref[...]
+    b = b_ref[...]
+    w = w_ref[...]
+    x = x_ref[...]
+
+    z = a @ x - b                      # residual (MXU + VPU)
+    loss_part = jnp.sum(w * z * z)
+    r = 2.0 * w * z
+    g_part = r @ a                     # backward matvec (MXU)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    g_ref[...] += g_part
+    loss_ref[...] += jnp.reshape(loss_part, (1,))
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def lstsq_loss_grad(a, b, w, x, *, tile: int = DEFAULT_TILE):
+    """Mean-form least-squares loss and gradient via Pallas.
+
+    Matches ``ref.lstsq_loss_grad``: loss = (1/n) sum w_i (a_i^T x - b_i)^2,
+    grad = (2/n) A^T (w * (A x - b)), n = sum(w).
+    """
+    n_rows, d = a.shape
+    if n_rows % tile != 0:
+        raise ValueError(f"rows {n_rows} not divisible by tile {tile}")
+    grid = (n_rows // tile,)
+    g_sum, loss_sum = pl.pallas_call(
+        _lstsq_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), a.dtype),
+            jax.ShapeDtypeStruct((1,), a.dtype),
+        ],
+        interpret=True,
+    )(a, b, w, x)
+    n = jnp.sum(w)
+    return loss_sum[0] / n, g_sum / n

@@ -1,0 +1,240 @@
+"""L2: the paper's compute graphs in JAX, calling the L1 Pallas kernels.
+
+Three model families, matching the paper's three experiment suites:
+
+  1. ``logreg_loss_grad``      - nonconvex-regularized logistic regression,
+                                 Eq. (19); Figures 1-8.
+  2. ``lstsq_loss_grad``       - least squares (PL but not strongly convex);
+                                 Figures 9-12.
+  3. ``transformer_*``         - small causal transformer LM, the tractable
+                                 stand-in for the ResNet18/VGG11 CIFAR-10
+                                 appendix (SA.3); Figures 13-15.
+
+Everything here is build-time Python: ``aot.py`` lowers these functions once
+to HLO text; the Rust coordinator executes the artifacts via PJRT and never
+imports this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import compress as kcompress
+from .kernels import logreg as klogreg
+from .kernels import lstsq as klstsq
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Shard padding (static shapes for AOT)
+# ---------------------------------------------------------------------------
+
+
+def padded_rows(n_rows: int, tile: int = klogreg.DEFAULT_TILE) -> int:
+    """Smallest multiple of ``tile`` that is >= n_rows (and >= tile)."""
+    return max(tile, tile * math.ceil(n_rows / tile))
+
+
+def pad_shard(a, y, tile: int = klogreg.DEFAULT_TILE):
+    """Zero-pad a shard to a tile multiple; returns (a_pad, y_pad, w)."""
+    import numpy as np
+
+    n, d = a.shape
+    n_pad = padded_rows(n, tile)
+    a_pad = np.zeros((n_pad, d), dtype=np.float32)
+    y_pad = np.zeros((n_pad,), dtype=np.float32)
+    w = np.zeros((n_pad,), dtype=np.float32)
+    a_pad[:n] = a
+    y_pad[:n] = y
+    w[:n] = 1.0
+    return a_pad, y_pad, w
+
+
+# ---------------------------------------------------------------------------
+# 1. Nonconvex logistic regression (Eq. 19)
+# ---------------------------------------------------------------------------
+
+
+def logreg_loss_grad(a, y, w, x, lam):
+    """Loss and gradient of Eq. (19) on one (padded) shard.
+
+    Data term via the fused Pallas kernel (one pass over A); the O(d)
+    nonconvex-regularizer term is added outside the kernel.
+    """
+    loss, grad = klogreg.logreg_data_loss_grad(a, y, w, x)
+    reg, reg_grad = ref.logreg_reg_term(x, lam)
+    return loss + reg, grad + reg_grad
+
+
+# ---------------------------------------------------------------------------
+# 2. Least squares (PL case)
+# ---------------------------------------------------------------------------
+
+
+def lstsq_loss_grad(a, b, w, x):
+    """Loss and gradient of the least-squares objective on one shard."""
+    return klstsq.lstsq_loss_grad(a, b, w, x)
+
+
+# ---------------------------------------------------------------------------
+# 3. Compression mask (exported so Rust can offload masking to the artifact)
+# ---------------------------------------------------------------------------
+
+
+def compress_mask(v, thresh):
+    """Threshold mask over a padded flat vector (parallel half of Top-k)."""
+    return kcompress.threshold_mask(v, thresh)
+
+
+# ---------------------------------------------------------------------------
+# 4. Small causal transformer LM (DL experiment substitute)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerSpec:
+    """Architecture of the flat-parameter causal LM.
+
+    Parameters are exchanged between Rust and the artifact as ONE flat f32
+    vector: Rust owns the optimizer/compressor state over that vector and
+    never needs to know the pytree structure.
+    """
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    seq_len: int = 64
+    mlp_mult: int = 4
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list defining the flat layout."""
+        d, v, s, m = self.d_model, self.vocab, self.seq_len, self.mlp_mult
+        shapes: List[Tuple[str, Tuple[int, ...]]] = [
+            ("tok_emb", (v, d)),
+            ("pos_emb", (s, d)),
+        ]
+        for layer in range(self.n_layers):
+            p = f"l{layer}."
+            shapes += [
+                (p + "ln1_g", (d,)),
+                (p + "ln1_b", (d,)),
+                (p + "wqkv", (d, 3 * d)),
+                (p + "wo", (d, d)),
+                (p + "ln2_g", (d,)),
+                (p + "ln2_b", (d,)),
+                (p + "w1", (d, m * d)),
+                (p + "b1", (m * d,)),
+                (p + "w2", (m * d, d)),
+                (p + "b2", (d,)),
+            ]
+        shapes += [
+            ("lnf_g", (d,)),
+            ("lnf_b", (d,)),
+            ("head", (d, v)),
+        ]
+        return shapes
+
+    @property
+    def n_params(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_shapes())
+
+
+def unflatten(spec: TransformerSpec, flat):
+    """Split the flat f32 vector into the named parameter dict."""
+    params = {}
+    off = 0
+    for name, shape in spec.param_shapes():
+        size = int(math.prod(shape))
+        params[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return params
+
+
+def init_flat_params(spec: TransformerSpec, seed: int = 0):
+    """Scaled-Gaussian init, returned as the flat vector."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in spec.param_shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            chunk = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", "b1", "b2")):
+            chunk = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 1.0 / math.sqrt(fan_in)
+            chunk = scale * jax.random.normal(sub, shape, jnp.float32)
+        chunks.append(chunk.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(spec: TransformerSpec, p, prefix, h):
+    b, s, d = h.shape
+    nh, dh = spec.n_heads, spec.d_head
+    qkv = h @ p[prefix + "wqkv"]  # (b, s, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(dh)  # (b, nh, s, s)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ p[prefix + "wo"]
+
+
+def transformer_logits(spec: TransformerSpec, flat, tokens):
+    """Causal-LM logits. tokens: (B, S) int32, S == spec.seq_len."""
+    p = unflatten(spec, flat)
+    b, s = tokens.shape
+    h = p["tok_emb"][tokens] + p["pos_emb"][None, :s, :]
+    for layer in range(spec.n_layers):
+        pre = f"l{layer}."
+        h = h + _attention(spec, p, pre, _layer_norm(h, p[pre + "ln1_g"], p[pre + "ln1_b"]))
+        hh = _layer_norm(h, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        hh = jax.nn.gelu(hh @ p[pre + "w1"] + p[pre + "b1"]) @ p[pre + "w2"] + p[pre + "b2"]
+        h = h + hh
+    h = _layer_norm(h, p["lnf_g"], p["lnf_b"])
+    return h @ p["head"]  # (B, S, vocab)
+
+
+def transformer_loss(spec: TransformerSpec, flat, tokens):
+    """Mean next-token cross entropy: predict tokens[:,1:] from tokens[:,:-1]."""
+    logits = transformer_logits(spec, flat, tokens)[:, :-1, :]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def transformer_loss_and_grad(spec: TransformerSpec, flat, tokens):
+    """(loss, flat gradient) - the per-worker step of Algorithm 5."""
+    loss, grad = jax.value_and_grad(lambda f: transformer_loss(spec, f, tokens))(flat)
+    return loss, grad
+
+
+def transformer_eval(spec: TransformerSpec, flat, tokens):
+    """(loss, next-token accuracy) on an eval batch."""
+    logits = transformer_logits(spec, flat, tokens)[:, :-1, :]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32))
+    return jnp.mean(nll), acc

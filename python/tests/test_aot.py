@@ -1,0 +1,100 @@
+"""AOT pipeline: entries are well-formed and the HLO-text bridge works."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_entries_have_unique_names_and_consistent_specs():
+    entries = aot.build_entries()
+    names = [e["name"] for e in entries]
+    assert len(names) == len(set(names))
+    for e in entries:
+        assert len(e["specs"]) == len(e["inputs"])
+        for spec, io in zip(e["specs"], e["inputs"]):
+            assert tuple(io["shape"]) == tuple(spec.shape), e["name"]
+
+
+def test_dataset_entries_match_table3():
+    entries = {e["name"]: e for e in aot.build_entries()}
+    for name, n_total, d in aot.DATASETS:
+        meta = entries[f"logreg_grad_{name}"]["meta"]
+        assert meta["n_total"] == n_total and meta["d"] == d
+        # padded rows hold the largest shard (base + remainder)
+        largest = n_total // aot.N_WORKERS + n_total % aot.N_WORKERS
+        assert meta["n_rows_padded"] >= largest
+        assert meta["n_rows_padded"] % meta["tile"] == 0
+
+
+def test_max_shard_rows():
+    assert aot.max_shard_rows(100, 20) == 5
+    assert aot.max_shard_rows(101, 20) == 6
+    assert aot.max_shard_rows(11055, 20) == 552 + 15
+
+
+def test_to_hlo_text_roundtrips_a_tiny_function():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_logreg_entry_executes_and_matches_ref():
+    """Execute the jitted entry function (pre-lowering) against ref.py."""
+    from compile.kernels import ref
+
+    entries = {e["name"]: e for e in aot.build_entries()}
+    e = entries["logreg_grad_phishing"]
+    n_pad = e["meta"]["n_rows_padded"]
+    d = e["meta"]["d"]
+    rng = np.random.default_rng(0)
+    n = 100
+    a = np.zeros((n_pad, d), np.float32)
+    y = np.zeros((n_pad,), np.float32)
+    w = np.zeros((n_pad,), np.float32)
+    a[:n] = rng.normal(size=(n, d))
+    y[:n] = rng.choice([-1.0, 1.0], size=n)
+    w[:n] = 1.0
+    x = rng.normal(size=d).astype(np.float32)
+    loss, grad = e["fn"](a, y, w, x, jnp.float32(0.1))
+    rl, rg = ref.logreg_full_loss_grad(a, y, w, x, 0.1)
+    np.testing.assert_allclose(loss, rl, rtol=1e-5)
+    np.testing.assert_allclose(grad, rg, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_files_exist_and_parse():
+    with open(os.path.join(ARTIFACT_DIR, "manifest.json")) as f:
+        manifest = json.load(f)
+    expected = {e["name"] for e in aot.build_entries()}
+    assert expected.issubset(set(manifest))
+    for name, entry in manifest.items():
+        path = os.path.join(ARTIFACT_DIR, entry["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(256)
+        assert "HloModule" in head, name
+
+
+def test_transformer_meta_matches_spec():
+    entries = {e["name"]: e for e in aot.build_entries()}
+    meta = entries["transformer_step"]["meta"]
+    spec = aot.TRANSFORMER_SPEC
+    assert meta["n_params"] == spec.n_params
+    assert meta["seq_len"] == spec.seq_len
+    flat_sizes = sum(int(np.prod(s)) for _, s in meta["param_shapes"])
+    assert flat_sizes == spec.n_params

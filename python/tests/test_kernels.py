@@ -1,0 +1,196 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/values; explicit cases pin the tile boundaries and
+degenerate masks. This is the CORE correctness signal for the compute that
+ends up inside the AOT artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import compress, logreg, lstsq, ref
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def _shard(seed, n, d):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    x = rng.normal(size=d).astype(np.float32)
+    return a, y, x
+
+
+# ---------------------------------------------------------------------------
+# logreg kernel
+# ---------------------------------------------------------------------------
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 700),
+    d=st.integers(1, 96),
+)
+def test_logreg_kernel_matches_ref(seed, n, d):
+    a, y, x = _shard(seed, n, d)
+    ap, yp, w = model.pad_shard(a, y)
+    kl, kg = logreg.logreg_data_loss_grad(ap, yp, w, x)
+    rl, rg = ref.logreg_loss_grad(ap, yp, w, x)
+    np.testing.assert_allclose(kl, rl, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(kg, rg, rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 700), d=st.integers(1, 96))
+def test_logreg_padding_is_inert(seed, n, d):
+    """Padded shard must give the same answer as the exact unpadded one."""
+    a, y, x = _shard(seed, n, d)
+    ap, yp, w = model.pad_shard(a, y)
+    kl, kg = logreg.logreg_data_loss_grad(ap, yp, w, x)
+    rl, rg = ref.logreg_loss_grad(a, y, np.ones(n, np.float32), x)
+    np.testing.assert_allclose(kl, rl, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(kg, rg, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [1, 255, 256, 257, 512, 513])
+def test_logreg_tile_boundaries(n):
+    a, y, x = _shard(7, n, 33)
+    ap, yp, w = model.pad_shard(a, y)
+    kl, kg = logreg.logreg_data_loss_grad(ap, yp, w, x)
+    rl, rg = ref.logreg_loss_grad(a, y, np.ones(n, np.float32), x)
+    np.testing.assert_allclose(kl, rl, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(kg, rg, rtol=1e-4, atol=1e-5)
+
+
+def test_logreg_rejects_unaligned_rows():
+    a, y, x = _shard(0, 100, 8)
+    with pytest.raises(ValueError):
+        logreg.logreg_data_loss_grad(a, y, np.ones(100, np.float32), x)
+
+
+def test_logreg_extreme_margins_are_finite():
+    """Stable softplus: huge |margins| must not produce inf/nan."""
+    a, y, x = _shard(1, 256, 4)
+    x = (1e4 * x).astype(np.float32)
+    kl, kg = logreg.logreg_data_loss_grad(a, y, np.ones(256, np.float32), x)
+    assert np.isfinite(float(kl))
+    assert np.all(np.isfinite(np.asarray(kg)))
+
+
+def test_logreg_full_objective_matches_ref():
+    a, y, x = _shard(3, 256, 20)
+    w = np.ones(256, np.float32)
+    lam = jnp.float32(0.1)
+    kl, kg = model.logreg_loss_grad(a, y, w, x, lam)
+    rl, rg = ref.logreg_full_loss_grad(a, y, w, x, 0.1)
+    np.testing.assert_allclose(kl, rl, rtol=1e-5)
+    np.testing.assert_allclose(kg, rg, rtol=1e-4, atol=1e-5)
+
+
+def test_logreg_gradient_is_correct_via_finite_differences():
+    a, y, x = _shard(11, 256, 6)
+    w = np.ones(256, np.float32)
+    lam = 0.1
+    _, g = model.logreg_loss_grad(a, y, w, x, jnp.float32(lam))
+    g = np.asarray(g, np.float64)
+    eps = 1e-3
+    for j in range(6):
+        xp, xm = x.copy(), x.copy()
+        xp[j] += eps
+        xm[j] -= eps
+        lp, _ = ref.logreg_full_loss_grad(a, y, w, xp, lam)
+        lm, _ = ref.logreg_full_loss_grad(a, y, w, xm, lam)
+        fd = (float(lp) - float(lm)) / (2 * eps)
+        assert abs(fd - g[j]) < 5e-3, (j, fd, g[j])
+
+
+# ---------------------------------------------------------------------------
+# lstsq kernel
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 700), d=st.integers(1, 96))
+def test_lstsq_kernel_matches_ref(seed, n, d):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, d)).astype(np.float32)
+    b = rng.normal(size=n).astype(np.float32)
+    x = rng.normal(size=d).astype(np.float32)
+    ap, bp, w = model.pad_shard(a, b)
+    kl, kg = lstsq.lstsq_loss_grad(ap, bp, w, x)
+    rl, rg = ref.lstsq_loss_grad(a, b, np.ones(n, np.float32), x)
+    np.testing.assert_allclose(kl, rl, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(kg, rg, rtol=1e-3, atol=1e-4)
+
+
+def test_lstsq_zero_residual_gives_zero_grad():
+    rng = np.random.default_rng(5)
+    a = rng.normal(size=(256, 10)).astype(np.float32)
+    x = rng.normal(size=10).astype(np.float32)
+    b = (a @ x).astype(np.float32)
+    w = np.ones(256, np.float32)
+    loss, g = lstsq.lstsq_loss_grad(a, b, w, x)
+    assert float(loss) < 1e-8
+    assert float(jnp.linalg.norm(g)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# threshold-mask kernel
+# ---------------------------------------------------------------------------
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_tiles=st.integers(1, 4),
+    thresh=st.floats(0.0, 3.0),
+)
+def test_mask_kernel_matches_ref(seed, n_tiles, thresh):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=compress.DEFAULT_VTILE * n_tiles).astype(np.float32)
+    km = compress.threshold_mask(v, jnp.array([thresh], jnp.float32))
+    rm = ref.threshold_mask(v, np.float32(thresh))
+    np.testing.assert_array_equal(np.asarray(km), np.asarray(rm))
+
+
+def test_mask_zero_threshold_is_identity():
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=compress.DEFAULT_VTILE).astype(np.float32)
+    out = compress.threshold_mask(v, jnp.array([0.0], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), v)
+
+
+def test_mask_huge_threshold_zeros_everything():
+    rng = np.random.default_rng(2)
+    v = rng.normal(size=compress.DEFAULT_VTILE).astype(np.float32)
+    out = compress.threshold_mask(v, jnp.array([1e9], jnp.float32))
+    assert float(jnp.sum(jnp.abs(out))) == 0.0
+
+
+def test_mask_matches_topk_when_threshold_is_kth_magnitude():
+    """Host-selected k-th magnitude + mask == dense Top-k (no tie case)."""
+    rng = np.random.default_rng(3)
+    v = rng.normal(size=compress.DEFAULT_VTILE).astype(np.float32)
+    k = 100
+    mags = np.sort(np.abs(v))[::-1]
+    thresh = mags[k - 1]
+    out = np.asarray(compress.threshold_mask(v, jnp.array([thresh], jnp.float32)))
+    expect = np.asarray(ref.topk_dense(jnp.asarray(v), k))
+    np.testing.assert_array_equal(out, expect)
+
+
+# ---------------------------------------------------------------------------
+# contraction property (3): Top-k is in B(alpha) with alpha = k/d
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 200), k=st.integers(1, 200))
+def test_topk_contraction_bound(seed, d, k):
+    k = min(k, d)
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=d).astype(np.float32)
+    c = np.asarray(ref.topk_dense(jnp.asarray(v), k))
+    lhs = float(np.sum((c - v) ** 2))
+    rhs = (1.0 - k / d) * float(np.sum(v**2))
+    assert lhs <= rhs * (1 + 1e-5) + 1e-7

@@ -1,0 +1,131 @@
+"""L2 correctness: model graphs (shapes, gradients, training signal)."""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+SPEC = model.TransformerSpec(vocab=64, d_model=32, n_layers=2, n_heads=4, seq_len=16)
+
+
+def test_param_shapes_cover_flat_vector_exactly():
+    flat = model.init_flat_params(SPEC, seed=0)
+    assert flat.shape == (SPEC.n_params,)
+    params = model.unflatten(SPEC, flat)
+    total = sum(int(np.prod(p.shape)) for p in params.values())
+    assert total == SPEC.n_params
+
+
+def test_unflatten_layout_is_contiguous_and_ordered():
+    flat = jnp.arange(SPEC.n_params, dtype=jnp.float32)
+    params = model.unflatten(SPEC, flat)
+    off = 0
+    for name, shape in SPEC.param_shapes():
+        size = int(math.prod(shape))
+        np.testing.assert_array_equal(
+            np.asarray(params[name]).reshape(-1),
+            np.arange(off, off + size, dtype=np.float32),
+        )
+        off += size
+
+
+def test_logits_shape():
+    flat = model.init_flat_params(SPEC, seed=1)
+    toks = jnp.zeros((3, SPEC.seq_len), jnp.int32)
+    logits = model.transformer_logits(SPEC, flat, toks)
+    assert logits.shape == (3, SPEC.seq_len, SPEC.vocab)
+
+
+def test_initial_loss_close_to_uniform():
+    flat = model.init_flat_params(SPEC, seed=2)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, SPEC.vocab, size=(4, SPEC.seq_len)).astype(np.int32)
+    loss = float(model.transformer_loss(SPEC, flat, toks))
+    assert abs(loss - math.log(SPEC.vocab)) < 1.0
+
+
+def test_causality_future_tokens_do_not_affect_past_logits():
+    flat = model.init_flat_params(SPEC, seed=3)
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, SPEC.vocab, size=(1, SPEC.seq_len)).astype(np.int32)
+    toks2 = toks.copy()
+    toks2[0, -1] = (toks2[0, -1] + 1) % SPEC.vocab
+    l1 = model.transformer_logits(SPEC, flat, jnp.asarray(toks))
+    l2 = model.transformer_logits(SPEC, flat, jnp.asarray(toks2))
+    np.testing.assert_allclose(
+        np.asarray(l1[0, : SPEC.seq_len - 1]),
+        np.asarray(l2[0, : SPEC.seq_len - 1]),
+        atol=1e-5,
+    )
+
+
+def test_grad_matches_finite_difference_along_random_direction():
+    flat = model.init_flat_params(SPEC, seed=4)
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, SPEC.vocab, size=(2, SPEC.seq_len)).astype(np.int32)
+    _, grad = model.transformer_loss_and_grad(SPEC, flat, toks)
+    u = rng.normal(size=SPEC.n_params).astype(np.float32)
+    u /= np.linalg.norm(u)
+    eps = 1e-2
+    lp = float(model.transformer_loss(SPEC, flat + eps * u, toks))
+    lm = float(model.transformer_loss(SPEC, flat - eps * u, toks))
+    fd = (lp - lm) / (2 * eps)
+    an = float(jnp.dot(grad, u))
+    assert abs(fd - an) < 5e-3, (fd, an)
+
+
+def test_gd_steps_decrease_loss():
+    flat = model.init_flat_params(SPEC, seed=5)
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, SPEC.vocab, size=(4, SPEC.seq_len)).astype(np.int32)
+    loss0, grad = model.transformer_loss_and_grad(SPEC, flat, toks)
+    for _ in range(5):
+        flat = flat - 0.5 * grad
+        loss, grad = model.transformer_loss_and_grad(SPEC, flat, toks)
+    assert float(loss) < float(loss0)
+
+
+def test_eval_reports_accuracy_in_unit_interval():
+    flat = model.init_flat_params(SPEC, seed=6)
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, SPEC.vocab, size=(2, SPEC.seq_len)).astype(np.int32)
+    loss, acc = model.transformer_eval(SPEC, flat, toks)
+    assert 0.0 <= float(acc) <= 1.0
+    assert float(loss) > 0.0
+
+
+def test_padded_rows_properties():
+    t = 256
+    assert model.padded_rows(1, t) == t
+    assert model.padded_rows(t, t) == t
+    assert model.padded_rows(t + 1, t) == 2 * t
+    for n in [3, 100, 999, 5000]:
+        p = model.padded_rows(n, t)
+        assert p >= n and p % t == 0 and p - n < t
+
+
+def test_pad_shard_masks_only_real_rows():
+    rng = np.random.default_rng(5)
+    a = rng.normal(size=(300, 7)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=300).astype(np.float32)
+    ap, yp, w = model.pad_shard(a, y)
+    assert ap.shape[0] % 256 == 0
+    assert w.sum() == 300
+    np.testing.assert_array_equal(ap[300:], 0.0)
+    np.testing.assert_array_equal(yp[300:], 0.0)
+
+
+def test_regularizer_is_bounded_and_nonconvex_shape():
+    # reg(x) = lam * sum x^2/(1+x^2) is bounded by lam*d; grad -> 0 at inf.
+    from compile.kernels import ref
+
+    lam = 0.1
+    d = 13
+    x_big = 1e4 * np.ones(d, np.float32)
+    reg, reg_grad = ref.logreg_reg_term(jnp.asarray(x_big), lam)
+    assert float(reg) <= lam * d + 1e-4
+    assert float(jnp.linalg.norm(reg_grad)) < 1e-6

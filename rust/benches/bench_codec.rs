@@ -1,0 +1,51 @@
+//! §Perf L3 instrument: wire codec + sparse-vector aggregation throughput
+//! (the master's absorb path and the transport's encode/decode path).
+
+#[path = "harness.rs"]
+mod harness;
+
+use ef21::algo::WireMsg;
+use ef21::compress::{Compressed, SparseVec};
+use ef21::transport::codec::{decode, encode, Frame};
+use ef21::util::rng::Rng;
+use harness::{bench, black_box, header};
+
+fn sparse(d: usize, k: usize, rng: &mut Rng) -> SparseVec {
+    let idx = rng.sample_indices(d, k);
+    let val: Vec<f64> = (0..k).map(|_| rng.next_normal()).collect();
+    SparseVec::new(idx, val)
+}
+
+fn main() {
+    let mut rng = Rng::seed(0);
+    header("codec");
+    for &(d, k) in &[(300usize, 32usize), (469_504, 23_475)] {
+        let sv = sparse(d, k, &mut rng);
+        let msg = WireMsg::Sparse(Compressed { bits: sv.standard_bits(), sparse: sv });
+        let up = Frame::Up { msg, loss: 1.0 };
+        bench(&format!("encode Up d={d:>7} k={k:>6}"), || {
+            black_box(encode(&up));
+        });
+        let bytes = encode(&up);
+        bench(&format!("decode Up d={d:>7} k={k:>6}"), || {
+            black_box(decode(&bytes).unwrap());
+        });
+
+        let model = Frame::Model(vec![0.5; d]);
+        bench(&format!("encode Model d={d:>7}"), || {
+            black_box(encode(&model));
+        });
+    }
+
+    header("aggregation (absorb path)");
+    for &(d, k, n) in &[(300usize, 32usize, 20usize), (469_504, 23_475, 4)] {
+        let msgs: Vec<SparseVec> = (0..n).map(|_| sparse(d, k, &mut rng)).collect();
+        let mut acc = vec![0.0f64; d];
+        bench(&format!("absorb {n} msgs d={d:>7} k={k:>6}"), || {
+            for m in &msgs {
+                m.add_scaled_into(1.0 / n as f64, &mut acc);
+            }
+            black_box(&acc);
+        });
+    }
+}

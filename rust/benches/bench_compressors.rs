@@ -1,0 +1,55 @@
+//! §Perf L3 instrument: compressor throughput. Top-k selection over the
+//! ~470k-dim transformer gradient is the coordinator hot spot; this bench
+//! tracks it across compressors and dimensions (see EXPERIMENTS.md §Perf).
+
+#[path = "harness.rs"]
+mod harness;
+
+use ef21::compress::{Compressor, Markov, RandK, ScaledSign, TopK};
+use ef21::util::rng::Rng;
+use harness::{bench, black_box, header};
+
+fn main() {
+    let mut rng = Rng::seed(0);
+    header("compressors");
+
+    for &d in &[300usize, 10_000, 469_504] {
+        let v: Vec<f64> = (0..d).map(|_| rng.next_normal()).collect();
+        let k_small = (d / 100).max(1);
+        let k_big = (d / 20).max(1);
+
+        let c = TopK::new(k_small);
+        let mut r = Rng::seed(1);
+        bench(&format!("top-k    d={d:>7} k={k_small:>6}"), || {
+            black_box(c.compress(&v, &mut r));
+        });
+
+        let c = TopK::new(k_big);
+        bench(&format!("top-k    d={d:>7} k={k_big:>6}"), || {
+            black_box(c.compress(&v, &mut r));
+        });
+
+        // §Perf ablation: the pre-optimization baseline (full sort, fresh
+        // allocation per call) vs the select_nth + thread-local scratch
+        // path above.
+        let c = TopK::new(k_big);
+        bench(&format!("top-k(sort-baseline) d={d:>7} k={k_big:>6}"), || {
+            black_box(c.select_indices_via_sort(&v));
+        });
+
+        let c = RandK::new(k_big);
+        bench(&format!("rand-k   d={d:>7} k={k_big:>6}"), || {
+            black_box(c.compress(&v, &mut r));
+        });
+
+        let c = ScaledSign;
+        bench(&format!("sign     d={d:>7}"), || {
+            black_box(c.compress(&v, &mut r));
+        });
+
+        let mut m = Markov::new(TopK::new(k_big), d);
+        bench(&format!("markov   d={d:>7} k={k_big:>6}"), || {
+            black_box(m.step(&v, &mut r));
+        });
+    }
+}

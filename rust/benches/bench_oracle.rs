@@ -1,0 +1,54 @@
+//! §Perf L3/L2 instrument: gradient-oracle latency — the pure-Rust shard
+//! oracle (simulation hot path) vs the PJRT-executed HLO artifact (the
+//! production path; requires `make artifacts`, silently skipped otherwise).
+
+#[path = "harness.rs"]
+mod harness;
+
+use ef21::data::{partition, synth};
+use ef21::oracle::{GradOracle, LogRegOracle, LstsqOracle};
+use ef21::util::rng::Rng;
+use harness::{bench, black_box, header};
+use std::rc::Rc;
+
+fn main() {
+    header("oracles (pure rust)");
+    let mut rng = Rng::seed(0);
+    for name in ["phishing", "a9a", "w8a"] {
+        let ds = synth::generate(name, 0);
+        let shard = partition::shards(&ds, 20)[19];
+        let x: Vec<f64> = (0..ds.d).map(|_| rng.next_normal()).collect();
+        let mut o = LogRegOracle::new(shard, 0.1);
+        bench(&format!("rust logreg grad {name} shard ({}x{})", shard.n, shard.d), || {
+            black_box(o.loss_grad(&x));
+        });
+        let mut o = LstsqOracle::new(shard);
+        bench(&format!("rust lstsq  grad {name} shard ({}x{})", shard.n, shard.d), || {
+            black_box(o.loss_grad(&x));
+        });
+    }
+
+    match ef21::runtime::Runtime::from_default_dir() {
+        Err(e) => eprintln!("(skipping XLA oracle bench: {e:#})"),
+        Ok(rt) => {
+            let rt = Rc::new(rt);
+            header("oracles (PJRT artifact: L1 pallas + L2 jax)");
+            for name in ["phishing", "a9a"] {
+                let ds = synth::generate(name, 0);
+                let shard = partition::shards(&ds, 20)[19];
+                let x: Vec<f64> = (0..ds.d).map(|_| rng.next_normal()).collect();
+                let mut o = ef21::oracle::xla::XlaShardOracle::new(
+                    rt.clone(),
+                    name,
+                    ef21::oracle::xla::ShardKind::LogReg,
+                    shard,
+                    0.1,
+                )
+                .expect("xla oracle");
+                bench(&format!("xla  logreg grad {name} shard ({}x{})", shard.n, shard.d), || {
+                    black_box(o.loss_grad(&x));
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! §Perf L3 instrument: full-round latency per algorithm — the end-to-end
+//! coordinator cost (oracles + compression + aggregation + step) for one
+//! communication round of the a9a logistic problem, 20 workers. One bench
+//! per paper method == one row per Figure-1/2 curve family.
+
+#[path = "harness.rs"]
+mod harness;
+
+use ef21::algo::{AlgoSpec, MasterNode, WorkerNode};
+use ef21::exp::{Objective, Problem};
+use harness::{bench, header};
+use std::sync::Arc;
+
+fn setup(algo: AlgoSpec, comp: &str) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
+    let p = Problem::new("a9a", Objective::LogReg, 20, 0.1, 0);
+    let c: Arc<dyn ef21::compress::Compressor> =
+        Arc::from(ef21::compress::from_spec(comp).unwrap());
+    let alpha = c.alpha(p.d());
+    let gamma = p.theory_gamma(alpha);
+    let x0 = vec![0.0; p.d()];
+    let (mut m, mut w) = ef21::algo::build(algo, x0, p.oracles(), c, gamma, 0);
+    let x = m.x().to_vec();
+    let msgs: Vec<_> = w.iter_mut().map(|wk| wk.init(&x)).collect();
+    m.init_absorb(&msgs);
+    (m, w)
+}
+
+fn main() {
+    header("full round (a9a, 20 workers)");
+    for (algo, comp) in [
+        (AlgoSpec::Ef21, "top1"),
+        (AlgoSpec::Ef21Plus, "top1"),
+        (AlgoSpec::Ef, "top1"),
+        (AlgoSpec::Dcgd, "top1"),
+        (AlgoSpec::Gd, "identity"),
+        (AlgoSpec::Ef21, "top32"),
+        (AlgoSpec::Ef21, "rand32"),
+        (AlgoSpec::Ef21, "sign"),
+    ] {
+        let (mut m, mut w) = setup(algo, comp);
+        bench(&format!("{:<6} {comp}", algo.name()), || {
+            let x = m.begin_round();
+            let msgs: Vec<_> = w.iter_mut().map(|wk| wk.round(&x)).collect();
+            m.absorb(&msgs);
+        });
+    }
+}

@@ -1,0 +1,76 @@
+//! Minimal shared bench harness (criterion is not vendored offline).
+//! Each bench binary calls [`bench`] per case and prints aligned rows:
+//!
+//!   name                              median        mean     iters
+//!
+//! Timing: warmup, then adaptive iteration count targeting ~0.4 s per
+//! case, median-of-batches to cut scheduler noise.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub iters: u64,
+}
+
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    f();
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let target_ns = 4e8;
+    let batch = ((target_ns / 12.0 / once).ceil() as u64).clamp(1, 1_000_000);
+    let batches = 12;
+
+    let mut samples = Vec::with_capacity(batches);
+    for _ in 0..batches {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_ns = samples[batches / 2];
+    let mean_ns = samples.iter().sum::<f64>() / batches as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        median_ns,
+        mean_ns,
+        iters: batch * batches as u64,
+    };
+    println!(
+        "{:<44} {:>12} {:>12} {:>9}",
+        r.name,
+        fmt_ns(r.median_ns),
+        fmt_ns(r.mean_ns),
+        r.iters
+    );
+    r
+}
+
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!("{:<44} {:>12} {:>12} {:>9}", "case", "median", "mean", "iters");
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

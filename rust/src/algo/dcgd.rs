@@ -1,0 +1,156 @@
+//! DCGD (Eq. 7): naive distributed compressed gradient descent,
+//! `x^{t+1} = x^t - (γ/n) Σ C(∇f_i(x^t))` — the method EF was invented to
+//! fix. With biased compressors it can diverge exponentially
+//! ([Beznosikov et al. 2020, Example 1]; reproduced in
+//! `integration_convergence.rs`). With the identity compressor this is
+//! exact distributed GD (the paper's GD baseline).
+
+use super::{MasterNode, WireMsg, WorkerNode};
+use crate::compress::Compressor;
+use crate::oracle::GradOracle;
+use crate::util::linalg;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+pub struct DcgdWorker {
+    oracle: Box<dyn GradOracle>,
+    c: Arc<dyn Compressor>,
+    rng: Rng,
+    last_loss: f64,
+    last_grad: Vec<f64>,
+}
+
+impl DcgdWorker {
+    pub fn new(oracle: Box<dyn GradOracle>, c: Arc<dyn Compressor>, rng: Rng) -> Self {
+        let d = oracle.dim();
+        DcgdWorker { oracle, c, rng, last_loss: 0.0, last_grad: vec![0.0; d] }
+    }
+}
+
+impl WorkerNode for DcgdWorker {
+    fn init(&mut self, x0: &[f64]) -> WireMsg {
+        self.round(x0)
+    }
+
+    fn round(&mut self, x: &[f64]) -> WireMsg {
+        let (loss, grad) = self.oracle.loss_grad(x);
+        let comp = self.c.compress(&grad, &mut self.rng);
+        self.last_loss = loss;
+        self.last_grad = grad;
+        WireMsg::Sparse(comp)
+    }
+
+    fn last_loss(&self) -> f64 {
+        self.last_loss
+    }
+
+    fn last_grad(&self) -> &[f64] {
+        &self.last_grad
+    }
+}
+
+pub struct DcgdMaster {
+    x: Vec<f64>,
+    /// u = (1/n) Σ C(∇f_i) from the previous absorb.
+    u: Vec<f64>,
+    gamma: f64,
+    n: usize,
+}
+
+impl DcgdMaster {
+    pub fn new(x0: Vec<f64>, n: usize, gamma: f64) -> Self {
+        let d = x0.len();
+        DcgdMaster { x: x0, u: vec![0.0; d], gamma, n }
+    }
+}
+
+impl MasterNode for DcgdMaster {
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn init_absorb(&mut self, msgs: &[WireMsg]) {
+        self.absorb(msgs);
+    }
+
+    fn begin_round(&mut self) -> Vec<f64> {
+        linalg::axpy(-self.gamma, &self.u, &mut self.x);
+        self.x.clone()
+    }
+
+    fn absorb(&mut self, msgs: &[WireMsg]) {
+        debug_assert_eq!(msgs.len(), self.n);
+        self.u.iter_mut().for_each(|v| *v = 0.0);
+        let inv_n = 1.0 / self.n as f64;
+        for m in msgs {
+            m.payload().sparse.add_scaled_into(inv_n, &mut self.u);
+        }
+    }
+}
+
+pub fn build(
+    x0: Vec<f64>,
+    oracles: Vec<Box<dyn GradOracle>>,
+    c: Arc<dyn Compressor>,
+    gamma: f64,
+    seed: u64,
+) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
+    let n = oracles.len();
+    let mut base = Rng::seed(seed);
+    let workers: Vec<Box<dyn WorkerNode>> = oracles
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| {
+            Box::new(DcgdWorker::new(o, c.clone(), base.fork(i as u64))) as Box<dyn WorkerNode>
+        })
+        .collect();
+    let master = Box::new(DcgdMaster::new(x0, n, gamma));
+    (master, workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, TopK};
+    use crate::coordinator::runner::{run_protocol, RunConfig};
+    use crate::oracle::quadratic::divergence_example;
+
+    fn quads() -> Vec<Box<dyn GradOracle>> {
+        divergence_example()
+            .into_iter()
+            .map(|q| Box::new(q) as Box<dyn GradOracle>)
+            .collect()
+    }
+
+    /// GD (= DCGD + identity) converges linearly on the quadratics.
+    #[test]
+    fn gd_converges_on_quadratics() {
+        let (m, ws) = build(vec![1.0; 3], quads(), Arc::new(Identity), 0.05, 0);
+        let h = run_protocol(m, ws, &RunConfig::rounds(600));
+        assert!(
+            h.records.last().unwrap().grad_norm_sq < 1e-16,
+            "GD stalled: {}",
+            h.records.last().unwrap().grad_norm_sq
+        );
+    }
+
+    /// The headline failure mode: DCGD + Top-1 fails to converge on the
+    /// divergence example (gradient norm stays bounded away from zero or
+    /// blows up), at a stepsize where exact GD converges fine.
+    #[test]
+    fn dcgd_top1_fails_on_divergence_example() {
+        let (m, ws) = build(vec![1.0; 3], quads(), Arc::new(TopK::new(1)), 0.05, 0);
+        let h = run_protocol(m, ws, &RunConfig::rounds(3000));
+        let tail_min = h
+            .records
+            .iter()
+            .rev()
+            .take(500)
+            .map(|r| r.grad_norm_sq)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            tail_min > 1e-6 || !tail_min.is_finite(),
+            "DCGD unexpectedly converged (tail min grad^2 = {tail_min})"
+        );
+    }
+}

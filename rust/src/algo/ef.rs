@@ -1,0 +1,208 @@
+//! EF (Algorithm 4) — the original error-feedback method of Seide et al.
+//! (2014), in the paper's formulation.
+//!
+//! Worker i keeps the error accumulator `e_i`, communicates
+//! `w_i^t = C(e_i^t + γ ∇f_i(x^t))` and updates
+//! `e_i^{t+1} = e_i^t + γ ∇f_i(x^t) - w_i^t`. The master steps
+//! `x^{t+1} = x^t - (1/n) Σ w_i^t` (the stepsize is folded into the
+//! messages).
+
+use super::{MasterNode, WireMsg, WorkerNode};
+use crate::compress::Compressor;
+use crate::oracle::GradOracle;
+use crate::util::linalg;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+pub struct EfWorker {
+    oracle: Box<dyn GradOracle>,
+    c: Arc<dyn Compressor>,
+    rng: Rng,
+    gamma: f64,
+    /// Error accumulator e_i.
+    e: Vec<f64>,
+    last_loss: f64,
+    last_grad: Vec<f64>,
+    /// Scratch: v = e + gamma * grad.
+    v: Vec<f64>,
+}
+
+impl EfWorker {
+    pub fn new(oracle: Box<dyn GradOracle>, c: Arc<dyn Compressor>, gamma: f64, rng: Rng) -> Self {
+        let d = oracle.dim();
+        EfWorker {
+            oracle,
+            c,
+            rng,
+            gamma,
+            e: vec![0.0; d],
+            last_loss: 0.0,
+            last_grad: vec![0.0; d],
+            v: vec![0.0; d],
+        }
+    }
+
+    pub fn error(&self) -> &[f64] {
+        &self.e
+    }
+}
+
+impl WorkerNode for EfWorker {
+    fn init(&mut self, x0: &[f64]) -> WireMsg {
+        // e^0 = 0, w^0 = C(γ ∇f(x^0)): identical to a regular round.
+        self.round(x0)
+    }
+
+    fn round(&mut self, x: &[f64]) -> WireMsg {
+        let (loss, grad) = self.oracle.loss_grad(x);
+        for j in 0..grad.len() {
+            self.v[j] = self.e[j] + self.gamma * grad[j];
+        }
+        let comp = self.c.compress(&self.v, &mut self.rng);
+        // e <- v - w
+        self.e.copy_from_slice(&self.v);
+        comp.sparse.add_scaled_into(-1.0, &mut self.e);
+        self.last_loss = loss;
+        self.last_grad = grad;
+        WireMsg::Sparse(comp)
+    }
+
+    fn last_loss(&self) -> f64 {
+        self.last_loss
+    }
+
+    fn last_grad(&self) -> &[f64] {
+        &self.last_grad
+    }
+}
+
+pub struct EfMaster {
+    x: Vec<f64>,
+    /// u = (1/n) Σ w_i from the previous absorb (already γ-scaled).
+    u: Vec<f64>,
+    n: usize,
+}
+
+impl EfMaster {
+    pub fn new(x0: Vec<f64>, n: usize) -> Self {
+        let d = x0.len();
+        EfMaster { x: x0, u: vec![0.0; d], n }
+    }
+}
+
+impl MasterNode for EfMaster {
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn init_absorb(&mut self, msgs: &[WireMsg]) {
+        self.absorb(msgs);
+    }
+
+    fn begin_round(&mut self) -> Vec<f64> {
+        linalg::axpy(-1.0, &self.u, &mut self.x);
+        self.x.clone()
+    }
+
+    fn absorb(&mut self, msgs: &[WireMsg]) {
+        debug_assert_eq!(msgs.len(), self.n);
+        self.u.iter_mut().for_each(|v| *v = 0.0);
+        let inv_n = 1.0 / self.n as f64;
+        for m in msgs {
+            m.payload().sparse.add_scaled_into(inv_n, &mut self.u);
+        }
+    }
+}
+
+pub fn build(
+    x0: Vec<f64>,
+    oracles: Vec<Box<dyn GradOracle>>,
+    c: Arc<dyn Compressor>,
+    gamma: f64,
+    seed: u64,
+) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
+    let n = oracles.len();
+    let mut base = Rng::seed(seed);
+    let workers: Vec<Box<dyn WorkerNode>> = oracles
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| {
+            Box::new(EfWorker::new(o, c.clone(), gamma, base.fork(i as u64)))
+                as Box<dyn WorkerNode>
+        })
+        .collect();
+    let master = Box::new(EfMaster::new(x0, n));
+    (master, workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, TopK};
+    use crate::coordinator::runner::{run_protocol, RunConfig};
+
+    fn quads() -> Vec<Box<dyn GradOracle>> {
+        crate::oracle::quadratic::divergence_example()
+            .into_iter()
+            .map(|q| Box::new(q) as Box<dyn GradOracle>)
+            .collect()
+    }
+
+    /// With identity compression EF is plain distributed GD.
+    #[test]
+    fn identity_is_gd() {
+        let gamma = 0.02;
+        let (mut m, mut ws) = build(vec![1.0; 3], quads(), Arc::new(Identity), gamma, 0);
+        let msgs: Vec<_> = ws.iter_mut().map(|w| w.init(&[1.0; 3])).collect();
+        m.init_absorb(&msgs);
+        let mut x_ref = vec![1.0; 3];
+        let mut oracles = quads();
+        for _ in 0..30 {
+            let x = m.begin_round();
+            let mut g = vec![0.0; 3];
+            for o in oracles.iter_mut() {
+                let (_, gi) = o.loss_grad(&x_ref);
+                linalg::axpy(1.0 / 3.0, &gi, &mut g);
+            }
+            linalg::axpy(-gamma, &g, &mut x_ref);
+            assert!(linalg::dist_sq(&x, &x_ref) < 1e-20);
+            let msgs: Vec<_> = ws.iter_mut().map(|w| w.round(&x)).collect();
+            m.absorb(&msgs);
+        }
+    }
+
+    /// Theorem 3 (restricted equivalence): with a deterministic, positively
+    /// homogeneous AND additive compressor, EF and EF21 generate identical
+    /// iterates. Identity is such a compressor.
+    #[test]
+    fn theorem3_equivalence_under_additive_compressor() {
+        let gamma = 0.015;
+        let (m1, w1) = build(vec![0.7; 3], quads(), Arc::new(Identity), gamma, 0);
+        let (m2, w2) =
+            crate::algo::ef21::build(vec![0.7; 3], quads(), Arc::new(Identity), gamma, 0);
+        let h1 = run_protocol(m1, w1, &RunConfig::rounds(20));
+        let h2 = run_protocol(m2, w2, &RunConfig::rounds(20));
+        for (a, b) in h1.records.iter().zip(&h2.records) {
+            assert!((a.loss - b.loss).abs() < 1e-12, "EF vs EF21 diverged under additivity");
+        }
+    }
+
+    /// Top-k is NOT additive; the equivalence must break (sanity that the
+    /// two methods are genuinely different).
+    #[test]
+    fn ef_and_ef21_differ_under_topk() {
+        let gamma = 0.02;
+        let (m1, w1) = build(vec![0.7; 3], quads(), Arc::new(TopK::new(1)), gamma, 0);
+        let (m2, w2) =
+            crate::algo::ef21::build(vec![0.7; 3], quads(), Arc::new(TopK::new(1)), gamma, 0);
+        let h1 = run_protocol(m1, w1, &RunConfig::rounds(30));
+        let h2 = run_protocol(m2, w2, &RunConfig::rounds(30));
+        let diff: f64 = h1
+            .records
+            .iter()
+            .zip(&h2.records)
+            .map(|(a, b)| (a.loss - b.loss).abs())
+            .sum();
+        assert!(diff > 1e-9, "EF and EF21 should differ under Top-k");
+    }
+}

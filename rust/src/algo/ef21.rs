@@ -1,0 +1,283 @@
+//! EF21 (Algorithm 2) — the paper's main contribution.
+//!
+//! Worker i keeps `g_i` (its Markov-compressor state, mirrored by the
+//! master), sends only `c_i^t = C(∇f_i(x^{t+1}) - g_i^t)` and updates
+//! `g_i^{t+1} = g_i^t + c_i^t`. The master maintains `g^t = avg_i g_i^t`
+//! incrementally (`g^{t+1} = g^t + avg_i c_i^t`) and steps
+//! `x^{t+1} = x^t - γ g^t`.
+
+use super::{MasterNode, WireMsg, WorkerNode};
+use crate::compress::Compressor;
+use crate::oracle::GradOracle;
+use crate::util::linalg;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+pub struct Ef21Worker {
+    oracle: Box<dyn GradOracle>,
+    c: Arc<dyn Compressor>,
+    rng: Rng,
+    /// Local Markov state g_i (mirrored by the master in aggregate).
+    g: Vec<f64>,
+    last_loss: f64,
+    last_grad: Vec<f64>,
+    /// Scratch buffer for grad - g (avoids per-round allocation).
+    diff: Vec<f64>,
+    /// Initialize with the FULL gradient (`g_i^0 = ∇f_i(x^0)`, one dense
+    /// init message) instead of `C(∇f_i(x^0))`. Sanctioned by the paper
+    /// ("our theorems hold for an arbitrary choice of g_i^0; if
+    /// g_i^0 = ∇f_i(x^0), then E[G^0] = 0") — important at aggressive
+    /// compression ratios (the DL experiment's k ≈ 0.05 D), where the
+    /// compressed init otherwise costs a long warm-up.
+    pub full_init: bool,
+}
+
+impl Ef21Worker {
+    pub fn new(oracle: Box<dyn GradOracle>, c: Arc<dyn Compressor>, rng: Rng) -> Self {
+        let d = oracle.dim();
+        Ef21Worker {
+            oracle,
+            c,
+            rng,
+            g: vec![0.0; d],
+            last_loss: 0.0,
+            last_grad: vec![0.0; d],
+            diff: vec![0.0; d],
+            full_init: false,
+        }
+    }
+
+    /// Current Markov state (tests / tracker).
+    pub fn state_g(&self) -> &[f64] {
+        &self.g
+    }
+}
+
+impl WorkerNode for Ef21Worker {
+    fn init(&mut self, x0: &[f64]) -> WireMsg {
+        if self.full_init {
+            // g_i^0 = ∇f_i(x^0): one dense init message (d * 32 bits).
+            let (loss, grad) = self.oracle.loss_grad(x0);
+            self.g.copy_from_slice(&grad);
+            self.last_loss = loss;
+            let sparse = crate::compress::SparseVec::from_dense_full(&grad);
+            self.last_grad = grad;
+            let bits = self.g.len() as u64 * 32;
+            return WireMsg::Sparse(crate::compress::Compressed { sparse, bits });
+        }
+        // g_i^0 = C(∇f_i(x^0)); with g=0 this is exactly one round() step.
+        self.round(x0)
+    }
+
+    fn round(&mut self, x: &[f64]) -> WireMsg {
+        let (loss, grad) = self.oracle.loss_grad(x);
+        for j in 0..grad.len() {
+            self.diff[j] = grad[j] - self.g[j];
+        }
+        let comp = self.c.compress(&self.diff, &mut self.rng);
+        comp.sparse.add_into(&mut self.g);
+        self.last_loss = loss;
+        self.last_grad = grad;
+        WireMsg::Sparse(comp)
+    }
+
+    fn last_loss(&self) -> f64 {
+        self.last_loss
+    }
+
+    fn last_grad(&self) -> &[f64] {
+        &self.last_grad
+    }
+
+    fn distortion_sq(&self) -> Option<f64> {
+        Some(linalg::dist_sq(&self.g, &self.last_grad))
+    }
+}
+
+pub struct Ef21Master {
+    x: Vec<f64>,
+    /// g^t = avg_i g_i^t, maintained incrementally from the deltas.
+    g: Vec<f64>,
+    gamma: f64,
+    n: usize,
+}
+
+impl Ef21Master {
+    pub fn new(x0: Vec<f64>, n: usize, gamma: f64) -> Self {
+        let d = x0.len();
+        Ef21Master { x: x0, g: vec![0.0; d], gamma, n }
+    }
+
+    pub fn aggregate_g(&self) -> &[f64] {
+        &self.g
+    }
+}
+
+impl MasterNode for Ef21Master {
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn init_absorb(&mut self, msgs: &[WireMsg]) {
+        // g^0 = avg_i g_i^0 (deltas against zero state).
+        self.absorb(msgs);
+    }
+
+    fn begin_round(&mut self) -> Vec<f64> {
+        linalg::axpy(-self.gamma, &self.g, &mut self.x);
+        self.x.clone()
+    }
+
+    fn absorb(&mut self, msgs: &[WireMsg]) {
+        debug_assert_eq!(msgs.len(), self.n);
+        let inv_n = 1.0 / self.n as f64;
+        for m in msgs {
+            m.payload().sparse.add_scaled_into(inv_n, &mut self.g);
+        }
+    }
+}
+
+pub fn build(
+    x0: Vec<f64>,
+    oracles: Vec<Box<dyn GradOracle>>,
+    c: Arc<dyn Compressor>,
+    gamma: f64,
+    seed: u64,
+) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
+    build_opts(x0, oracles, c, gamma, seed, false)
+}
+
+/// Like [`build`], optionally with the dense-gradient initialization
+/// `g_i^0 = ∇f_i(x^0)` (see [`Ef21Worker::full_init`]).
+pub fn build_opts(
+    x0: Vec<f64>,
+    oracles: Vec<Box<dyn GradOracle>>,
+    c: Arc<dyn Compressor>,
+    gamma: f64,
+    seed: u64,
+    full_init: bool,
+) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
+    let n = oracles.len();
+    let mut base = Rng::seed(seed);
+    let workers: Vec<Box<dyn WorkerNode>> = oracles
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| {
+            let mut w = Ef21Worker::new(o, c.clone(), base.fork(i as u64));
+            w.full_init = full_init;
+            Box::new(w) as Box<dyn WorkerNode>
+        })
+        .collect();
+    let master = Box::new(Ef21Master::new(x0, n, gamma));
+    (master, workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, TopK};
+
+    fn quad_oracles() -> Vec<Box<dyn GradOracle>> {
+        crate::oracle::quadratic::divergence_example()
+            .into_iter()
+            .map(|q| Box::new(q) as Box<dyn GradOracle>)
+            .collect()
+    }
+
+    /// With the identity compressor EF21 is exactly distributed GD.
+    #[test]
+    fn identity_compressor_reduces_to_gd() {
+        let d = 3;
+        let gamma = 0.02;
+        let (mut master, mut workers) =
+            build(vec![1.0; d], quad_oracles(), Arc::new(Identity), gamma, 0);
+        // Reference GD.
+        let mut x_ref = vec![1.0; d];
+        let mut oracles = quad_oracles();
+
+        let msgs: Vec<_> = workers.iter_mut().map(|w| w.init(&[1.0; 3])).collect();
+        master.init_absorb(&msgs);
+        for _ in 0..25 {
+            let x = master.begin_round();
+            // GD reference step.
+            let mut g = vec![0.0; d];
+            for o in oracles.iter_mut() {
+                let (_, gi) = o.loss_grad(&x_ref);
+                linalg::axpy(1.0 / 3.0, &gi, &mut g);
+            }
+            linalg::axpy(-gamma, &g, &mut x_ref);
+            assert!(
+                linalg::dist_sq(&x, &x_ref) < 1e-20,
+                "EF21+identity diverged from GD"
+            );
+            let msgs: Vec<_> = workers.iter_mut().map(|w| w.round(&x)).collect();
+            master.absorb(&msgs);
+        }
+    }
+
+    /// Master's incremental aggregate equals the true average of worker
+    /// states after every round (the core protocol invariant).
+    #[test]
+    fn master_aggregate_matches_worker_average() {
+        let d = 3;
+        let (mut master, mut workers) =
+            build(vec![0.5; d], quad_oracles(), Arc::new(TopK::new(1)), 0.01, 1);
+        let msgs: Vec<_> = workers.iter_mut().map(|w| w.init(&[0.5; 3])).collect();
+        master.init_absorb(&msgs);
+        for _ in 0..40 {
+            let x = master.begin_round();
+            let msgs: Vec<_> = workers.iter_mut().map(|w| w.round(&x)).collect();
+            master.absorb(&msgs);
+        }
+        // Recover the concrete master to compare aggregates.
+        // (build returns trait objects; rebuild concretely instead.)
+        let mut m2 = Ef21Master::new(vec![0.5; d], 3, 0.01);
+        let mut ws: Vec<Ef21Worker> = quad_oracles()
+            .into_iter()
+            .enumerate()
+            .map(|(i, o)| {
+                Ef21Worker::new(o, Arc::new(TopK::new(1)) as Arc<dyn Compressor>, Rng::seed(i as u64))
+            })
+            .collect();
+        let msgs: Vec<_> = ws.iter_mut().map(|w| w.init(&[0.5; 3])).collect();
+        m2.init_absorb(&msgs);
+        for _ in 0..40 {
+            let x = m2.begin_round();
+            let msgs: Vec<_> = ws.iter_mut().map(|w| w.round(&x)).collect();
+            m2.absorb(&msgs);
+            let mut avg = vec![0.0; d];
+            for w in &ws {
+                linalg::axpy(1.0 / 3.0, w.state_g(), &mut avg);
+            }
+            assert!(
+                linalg::dist_sq(m2.aggregate_g(), &avg) < 1e-18,
+                "master g drifted from avg of worker g_i"
+            );
+        }
+    }
+
+    /// EF21 with Top-1 converges on the divergence example that kills DCGD.
+    #[test]
+    fn converges_on_divergence_example() {
+        let d = 3;
+        // L_i = 16 for all three quadratics, alpha = 1/3.
+        let l = 16.0;
+        let gamma = crate::theory::stepsize_theorem1(l, l, 1.0 / 3.0);
+        let (mut master, mut workers) =
+            build(vec![1.0; d], quad_oracles(), Arc::new(TopK::new(1)), gamma, 2);
+        let msgs: Vec<_> = workers.iter_mut().map(|w| w.init(&[1.0; 3])).collect();
+        master.init_absorb(&msgs);
+        let mut grad_norm = f64::INFINITY;
+        for _ in 0..8000 {
+            let x = master.begin_round();
+            let msgs: Vec<_> = workers.iter_mut().map(|w| w.round(&x)).collect();
+            master.absorb(&msgs);
+            let mut g = vec![0.0; d];
+            for w in &workers {
+                linalg::axpy(1.0 / 3.0, w.last_grad(), &mut g);
+            }
+            grad_norm = linalg::norm2(&g);
+        }
+        assert!(grad_norm < 1e-6, "EF21 failed to converge: ||grad||={grad_norm}");
+    }
+}

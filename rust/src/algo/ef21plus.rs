@@ -1,0 +1,285 @@
+//! EF21+ (Algorithm 3, §3.5): each round, each worker compresses with the
+//! better of the plain biased compressor `C` (DCGD-style message,
+//! `b = C(∇f_i)`) and the Markov compressor (`m = g_i + C(∇f_i - g_i)`),
+//! measured by actual distortion at the current gradient. The new local
+//! state `g_i^{t+1}` is whichever estimate won; the branch is signalled to
+//! the master with a 1-bit tag.
+//!
+//! Master-side reconstruction: the DCGD branch's message IS the new state
+//! (`g_i = dense(b)`, determined entirely by the k-sparse payload), the
+//! Markov branch's message is a delta (`g_i += c`). The master keeps the
+//! per-worker mirrors and the running average.
+
+use super::{MasterNode, WireMsg, WorkerNode};
+use crate::compress::Compressor;
+use crate::oracle::GradOracle;
+use crate::util::linalg;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+pub struct Ef21PlusWorker {
+    oracle: Box<dyn GradOracle>,
+    c: Arc<dyn Compressor>,
+    rng: Rng,
+    g: Vec<f64>,
+    last_loss: f64,
+    last_grad: Vec<f64>,
+    last_branch_dcgd: bool,
+    diff: Vec<f64>,
+}
+
+impl Ef21PlusWorker {
+    pub fn new(oracle: Box<dyn GradOracle>, c: Arc<dyn Compressor>, rng: Rng) -> Self {
+        assert!(
+            c.is_deterministic(),
+            "EF21+ analysis (§3.5) requires a deterministic compressor"
+        );
+        let d = oracle.dim();
+        Ef21PlusWorker {
+            oracle,
+            c,
+            rng,
+            g: vec![0.0; d],
+            last_loss: 0.0,
+            last_grad: vec![0.0; d],
+            last_branch_dcgd: false,
+            diff: vec![0.0; d],
+        }
+    }
+
+    pub fn state_g(&self) -> &[f64] {
+        &self.g
+    }
+}
+
+impl WorkerNode for Ef21PlusWorker {
+    fn init(&mut self, x0: &[f64]) -> WireMsg {
+        // With g = 0 both branches coincide with C(∇f_i(x^0)).
+        self.round(x0)
+    }
+
+    fn round(&mut self, x: &[f64]) -> WireMsg {
+        let d = self.g.len();
+        let (loss, grad) = self.oracle.loss_grad(x);
+
+        // Branch 1 (DCGD): b = C(grad).
+        let b = self.c.compress(&grad, &mut self.rng);
+        // Branch 2 (Markov): m = g + C(grad - g).
+        for j in 0..d {
+            self.diff[j] = grad[j] - self.g[j];
+        }
+        let m_delta = self.c.compress(&self.diff, &mut self.rng);
+
+        // Distortions at ∇f_i(x^{t+1}).
+        // B = ||b - grad||^2; M = ||(g + delta) - grad||^2.
+        let b_dense = b.sparse.to_dense(d);
+        let b_dist = linalg::dist_sq(&b_dense, &grad);
+        let mut m_dense = self.g.clone();
+        m_delta.sparse.add_into(&mut m_dense);
+        let m_dist = linalg::dist_sq(&m_dense, &grad);
+
+        let msg = if m_dist <= b_dist {
+            self.g = m_dense;
+            self.last_branch_dcgd = false;
+            WireMsg::Tagged { dcgd_branch: false, payload: m_delta }
+        } else {
+            self.g = b_dense;
+            self.last_branch_dcgd = true;
+            WireMsg::Tagged { dcgd_branch: true, payload: b }
+        };
+        self.last_loss = loss;
+        self.last_grad = grad;
+        msg
+    }
+
+    fn last_loss(&self) -> f64 {
+        self.last_loss
+    }
+
+    fn last_grad(&self) -> &[f64] {
+        &self.last_grad
+    }
+
+    fn distortion_sq(&self) -> Option<f64> {
+        Some(linalg::dist_sq(&self.g, &self.last_grad))
+    }
+
+    fn used_dcgd_branch(&self) -> Option<bool> {
+        Some(self.last_branch_dcgd)
+    }
+}
+
+pub struct Ef21PlusMaster {
+    x: Vec<f64>,
+    /// Per-worker mirrors of g_i (needed to absorb assignment messages).
+    g_i: Vec<Vec<f64>>,
+    /// Sum over workers of g_i (divided by n at step time).
+    g_sum: Vec<f64>,
+    gamma: f64,
+}
+
+impl Ef21PlusMaster {
+    pub fn new(x0: Vec<f64>, n: usize, gamma: f64) -> Self {
+        let d = x0.len();
+        Ef21PlusMaster { x: x0, g_i: vec![vec![0.0; d]; n], g_sum: vec![0.0; d], gamma }
+    }
+
+    pub fn aggregate_g(&self) -> Vec<f64> {
+        let n = self.g_i.len() as f64;
+        self.g_sum.iter().map(|v| v / n).collect()
+    }
+}
+
+impl MasterNode for Ef21PlusMaster {
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn init_absorb(&mut self, msgs: &[WireMsg]) {
+        self.absorb(msgs);
+    }
+
+    fn begin_round(&mut self) -> Vec<f64> {
+        let scale = -self.gamma / self.g_i.len() as f64;
+        linalg::axpy(scale, &self.g_sum, &mut self.x);
+        self.x.clone()
+    }
+
+    fn absorb(&mut self, msgs: &[WireMsg]) {
+        debug_assert_eq!(msgs.len(), self.g_i.len());
+        for (i, m) in msgs.iter().enumerate() {
+            match m {
+                WireMsg::Tagged { dcgd_branch: false, payload } => {
+                    payload.sparse.add_into(&mut self.g_i[i]);
+                    payload.sparse.add_into(&mut self.g_sum);
+                }
+                WireMsg::Tagged { dcgd_branch: true, payload } => {
+                    // g_sum -= old g_i; g_i = dense(b); g_sum += g_i.
+                    let gi = &mut self.g_i[i];
+                    for (s, old) in self.g_sum.iter_mut().zip(gi.iter()) {
+                        *s -= *old;
+                    }
+                    gi.iter_mut().for_each(|v| *v = 0.0);
+                    payload.sparse.add_into(gi);
+                    for (s, new) in self.g_sum.iter_mut().zip(gi.iter()) {
+                        *s += *new;
+                    }
+                }
+                WireMsg::Sparse(_) => panic!("EF21+ master expects tagged messages"),
+            }
+        }
+    }
+}
+
+pub fn build(
+    x0: Vec<f64>,
+    oracles: Vec<Box<dyn GradOracle>>,
+    c: Arc<dyn Compressor>,
+    gamma: f64,
+    seed: u64,
+) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
+    let n = oracles.len();
+    let mut base = Rng::seed(seed);
+    let workers: Vec<Box<dyn WorkerNode>> = oracles
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| {
+            Box::new(Ef21PlusWorker::new(o, c.clone(), base.fork(i as u64)))
+                as Box<dyn WorkerNode>
+        })
+        .collect();
+    let master = Box::new(Ef21PlusMaster::new(x0, n, gamma));
+    (master, workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::TopK;
+    use crate::coordinator::runner::{run_protocol, RunConfig};
+    use crate::oracle::quadratic::divergence_example;
+    use crate::oracle::GradOracle;
+
+    fn quads() -> Vec<Box<dyn GradOracle>> {
+        divergence_example()
+            .into_iter()
+            .map(|q| Box::new(q) as Box<dyn GradOracle>)
+            .collect()
+    }
+
+    /// Per-worker distortion can never exceed plain EF21's: the worker
+    /// takes the min of the two branches by construction.
+    #[test]
+    fn branch_choice_never_worse_than_markov() {
+        let mut rng = Rng::seed(0);
+        let mut w = Ef21PlusWorker::new(
+            quads().remove(0),
+            Arc::new(TopK::new(1)) as Arc<dyn Compressor>,
+            rng.fork(0),
+        );
+        let mut markov = crate::compress::Markov::new(TopK::new(1), 3);
+        let mut x = vec![1.0; 3];
+        for t in 0..50 {
+            w.round(&x);
+            // Run the plain Markov compressor on the same gradient stream.
+            let grad = w.last_grad().to_vec();
+            markov.step(&grad, &mut rng);
+            let plus = w.distortion_sq().unwrap();
+            let plain = markov.distortion_sq(&grad);
+            assert!(plus <= plain + 1e-12, "t={t}: {plus} > {plain}");
+            x[t % 3] -= 0.05;
+        }
+    }
+
+    /// Master mirrors track worker state exactly through both branches.
+    #[test]
+    fn master_mirror_consistency() {
+        let gamma = 0.02;
+        let mut m = Ef21PlusMaster::new(vec![1.0; 3], 3, gamma);
+        let mut base = Rng::seed(3);
+        let mut ws: Vec<Ef21PlusWorker> = quads()
+            .into_iter()
+            .map(|o| {
+                Ef21PlusWorker::new(o, Arc::new(TopK::new(1)) as Arc<dyn Compressor>, base.fork(7))
+            })
+            .collect();
+        let msgs: Vec<_> = ws.iter_mut().map(|w| w.init(&[1.0; 3])).collect();
+        m.init_absorb(&msgs);
+        for _ in 0..60 {
+            let x = m.begin_round();
+            let msgs: Vec<_> = ws.iter_mut().map(|w| w.round(&x)).collect();
+            m.absorb(&msgs);
+            for (i, w) in ws.iter().enumerate() {
+                assert!(
+                    linalg::dist_sq(&m.g_i[i], w.state_g()) < 1e-20,
+                    "mirror {i} drifted"
+                );
+            }
+            let avg = m.aggregate_g();
+            let mut want = vec![0.0; 3];
+            for w in &ws {
+                linalg::axpy(1.0 / 3.0, w.state_g(), &mut want);
+            }
+            assert!(linalg::dist_sq(&avg, &want) < 1e-20);
+        }
+    }
+
+    /// EF21+ converges on the divergence example (same guarantee as EF21).
+    #[test]
+    fn converges_on_divergence_example() {
+        let gamma = crate::theory::stepsize_theorem1(16.0, 16.0, 1.0 / 3.0);
+        let (m, ws) = build(vec![1.0; 3], quads(), Arc::new(TopK::new(1)), gamma, 5);
+        let h = run_protocol(m, ws, &RunConfig::rounds(8000));
+        assert!(h.records.last().unwrap().grad_norm_sq < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "deterministic")]
+    fn rejects_randomized_compressor() {
+        let _ = Ef21PlusWorker::new(
+            quads().remove(0),
+            Arc::new(crate::compress::RandK::new(1)) as Arc<dyn Compressor>,
+            Rng::seed(0),
+        );
+    }
+}

@@ -1,0 +1,183 @@
+//! The distributed optimization algorithms, factored into per-worker and
+//! master state machines joined by a uniform round protocol:
+//!
+//! ```text
+//!   init:   every worker sends init(x^0);      master absorbs (state g^0/u^0)
+//!   round t: master begin_round() -> x^{t+1};   broadcast
+//!            every worker round(x^{t+1}) -> msg; uplink (metered in bits)
+//!            master absorb(msgs)                (state g^{t+1}/u^{t+1})
+//! ```
+//!
+//! Instances:
+//!   * [`ef21`]     — Algorithm 2 (the paper's contribution)
+//!   * [`ef21plus`] — Algorithm 3 (hybrid C / Markov, §3.5)
+//!   * [`ef`]       — Algorithm 4 (classic error feedback, Seide et al.)
+//!   * [`dcgd`]     — Eq. (7) (naive compressed GD; diverges) and GD
+//!                    (identity compressor)
+//!
+//! The stochastic variant (Algorithm 5) is EF21 composed with
+//! [`crate::oracle::StochasticOracle`] — the mechanism is oracle-agnostic.
+
+pub mod dcgd;
+pub mod ef;
+pub mod ef21;
+pub mod ef21plus;
+
+use crate::compress::{Compressed, Compressor};
+use crate::oracle::GradOracle;
+use std::sync::Arc;
+
+/// One uplink message (worker -> master), with exact wire-bit accounting.
+#[derive(Clone, Debug)]
+pub enum WireMsg {
+    /// Plain compressed payload.
+    Sparse(Compressed),
+    /// EF21+ message: payload plus the branch tag (1 extra bit).
+    /// `dcgd_branch = true` means "the payload IS my new state g_i"
+    /// (assignment); `false` means "the payload is a Markov delta" (add).
+    Tagged { dcgd_branch: bool, payload: Compressed },
+}
+
+impl WireMsg {
+    pub fn bits(&self) -> u64 {
+        match self {
+            WireMsg::Sparse(c) => c.bits,
+            WireMsg::Tagged { payload, .. } => payload.bits + 1,
+        }
+    }
+
+    pub fn payload(&self) -> &Compressed {
+        match self {
+            WireMsg::Sparse(c) => c,
+            WireMsg::Tagged { payload, .. } => payload,
+        }
+    }
+}
+
+/// Worker-side state machine.
+pub trait WorkerNode {
+    /// Produce the initialization message at `x^0` (runs the oracle).
+    fn init(&mut self, x0: &[f64]) -> WireMsg;
+
+    /// One communication round at the broadcast model `x`.
+    fn round(&mut self, x: &[f64]) -> WireMsg;
+
+    // -- instrumentation (free: not counted as communication) --
+
+    /// `f_i` at the last evaluated point.
+    fn last_loss(&self) -> f64;
+
+    /// `∇f_i` at the last evaluated point.
+    fn last_grad(&self) -> &[f64];
+
+    /// `||g_i - ∇f_i(x)||^2` for EF21-family workers (the G^t ingredient).
+    fn distortion_sq(&self) -> Option<f64> {
+        None
+    }
+
+    /// EF21+: whether the last round took the DCGD branch.
+    fn used_dcgd_branch(&self) -> Option<bool> {
+        None
+    }
+}
+
+/// Master-side state machine.
+pub trait MasterNode {
+    /// Current model.
+    fn x(&self) -> &[f64];
+
+    /// Absorb the initialization messages.
+    fn init_absorb(&mut self, msgs: &[WireMsg]);
+
+    /// Take the step producing the model to broadcast this round.
+    fn begin_round(&mut self) -> Vec<f64>;
+
+    /// Absorb this round's uplink messages.
+    fn absorb(&mut self, msgs: &[WireMsg]);
+}
+
+/// Algorithm selector (CLI/config facing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoSpec {
+    Ef21,
+    Ef21Plus,
+    Ef,
+    Dcgd,
+    Gd,
+}
+
+impl AlgoSpec {
+    pub fn parse(s: &str) -> anyhow::Result<AlgoSpec> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "ef21" => AlgoSpec::Ef21,
+            "ef21+" | "ef21plus" | "ef21p" => AlgoSpec::Ef21Plus,
+            "ef" | "ec" => AlgoSpec::Ef,
+            "dcgd" | "cgd" => AlgoSpec::Dcgd,
+            "gd" => AlgoSpec::Gd,
+            other => anyhow::bail!("unknown algorithm '{other}' (ef21|ef21+|ef|dcgd|gd)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoSpec::Ef21 => "EF21",
+            AlgoSpec::Ef21Plus => "EF21+",
+            AlgoSpec::Ef => "EF",
+            AlgoSpec::Dcgd => "DCGD",
+            AlgoSpec::Gd => "GD",
+        }
+    }
+
+    pub const ALL: [AlgoSpec; 5] =
+        [AlgoSpec::Ef21, AlgoSpec::Ef21Plus, AlgoSpec::Ef, AlgoSpec::Dcgd, AlgoSpec::Gd];
+}
+
+/// Build the (master, workers) pair for an algorithm.
+///
+/// `gamma` is the stepsize; `c` the shared compressor (GD ignores it and
+/// uses identity); `seed` drives randomized compressors deterministically.
+pub fn build(
+    spec: AlgoSpec,
+    x0: Vec<f64>,
+    oracles: Vec<Box<dyn GradOracle>>,
+    c: Arc<dyn Compressor>,
+    gamma: f64,
+    seed: u64,
+) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
+    match spec {
+        AlgoSpec::Ef21 => ef21::build(x0, oracles, c, gamma, seed),
+        AlgoSpec::Ef21Plus => ef21plus::build(x0, oracles, c, gamma, seed),
+        AlgoSpec::Ef => ef::build(x0, oracles, c, gamma, seed),
+        AlgoSpec::Dcgd => dcgd::build(x0, oracles, c, gamma, seed),
+        AlgoSpec::Gd => dcgd::build(
+            x0,
+            oracles,
+            Arc::new(crate::compress::Identity),
+            gamma,
+            seed,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(AlgoSpec::parse("EF21").unwrap(), AlgoSpec::Ef21);
+        assert_eq!(AlgoSpec::parse("ef21+").unwrap(), AlgoSpec::Ef21Plus);
+        assert_eq!(AlgoSpec::parse("gd").unwrap(), AlgoSpec::Gd);
+        assert!(AlgoSpec::parse("sgd??").is_err());
+    }
+
+    #[test]
+    fn wire_bits_include_tag() {
+        let c = Compressed {
+            sparse: crate::compress::SparseVec::new(vec![0], vec![1.0]),
+            bits: 64,
+        };
+        assert_eq!(WireMsg::Sparse(c.clone()).bits(), 64);
+        assert_eq!(WireMsg::Tagged { dcgd_branch: true, payload: c }.bits(), 65);
+    }
+}

@@ -1,0 +1,45 @@
+//! Identity "compressor" (`alpha = 1`): transmits the full dense vector.
+//! With EF21 this degenerates to exact distributed GD (the paper's `k = d`
+//! reference curves in Figures 2 and 7); the bit accounting still charges
+//! the full `d * 32` value bits (no indices — dense wire format).
+
+use super::{Compressed, Compressor, SparseVec};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> String {
+        "identity".into()
+    }
+
+    fn alpha(&self, _d: usize) -> f64 {
+        1.0
+    }
+
+    fn compress(&self, v: &[f64], _rng: &mut Rng) -> Compressed {
+        let sparse = SparseVec::from_dense_full(v);
+        // Dense wire format: values only, no index stream.
+        let bits = v.len() as u64 * super::sparse::VALUE_BITS;
+        Compressed { sparse, bits }
+    }
+
+    fn is_deterministic(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_and_dense_billed() {
+        let v = vec![1.0, 0.0, -2.0];
+        let mut rng = Rng::seed(0);
+        let out = Identity.compress(&v, &mut rng);
+        assert_eq!(out.sparse.to_dense(3), v);
+        assert_eq!(out.bits, 3 * 32);
+    }
+}

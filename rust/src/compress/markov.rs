@@ -1,0 +1,172 @@
+//! The Markov compressor `M` (§3.1, Eqs. 9–10): the recursive construction
+//! at the heart of EF21.
+//!
+//!   M(v^0)    = C(v^0)
+//!   M(v^{t+1}) = M(v^t) + C(v^{t+1} - M(v^t))
+//!
+//! The state `g = M(v^t)` is maintained on both endpoints (worker and
+//! master), so only the compressed *delta* `C(v^{t+1} - g)` crosses the
+//! wire. Lemma 1 (distortion recursion) and Corollary 1 (distortion -> 0
+//! for convergent inputs) are verified in the tests below.
+
+use super::{Compressed, Compressor};
+use crate::util::linalg;
+use crate::util::rng::Rng;
+
+/// Stateful Markov compressor wrapping any `C ∈ B(alpha)`.
+pub struct Markov<C: Compressor> {
+    c: C,
+    /// Current estimate g = M(v^t); mirrored by the receiving end.
+    g: Vec<f64>,
+    initialized: bool,
+}
+
+impl<C: Compressor> Markov<C> {
+    pub fn new(c: C, d: usize) -> Self {
+        Markov { c, g: vec![0.0; d], initialized: false }
+    }
+
+    /// Current estimate `M(v^t)`.
+    pub fn estimate(&self) -> &[f64] {
+        &self.g
+    }
+
+    /// Feed the next input vector; returns the compressed delta that a
+    /// worker would transmit. Applies Eq. (10) (Eq. (9) on first call,
+    /// which coincides with (10) when g = 0).
+    pub fn step(&mut self, v: &[f64], rng: &mut Rng) -> Compressed {
+        assert_eq!(v.len(), self.g.len());
+        let diff: Vec<f64> = v.iter().zip(&self.g).map(|(a, b)| a - b).collect();
+        let out = self.c.compress(&diff, rng);
+        out.sparse.add_into(&mut self.g);
+        self.initialized = true;
+        out
+    }
+
+    /// Squared distortion `||M(v) - v||^2` against a given input.
+    pub fn distortion_sq(&self, v: &[f64]) -> f64 {
+        linalg::dist_sq(&self.g, v)
+    }
+
+    /// Reset the state (fresh compressor).
+    pub fn reset(&mut self) {
+        self.g.iter_mut().for_each(|x| *x = 0.0);
+        self.initialized = false;
+    }
+
+    pub fn inner(&self) -> &C {
+        &self.c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::TopK;
+    use crate::theory;
+    use crate::util::testing::{for_all_seeds, random_vec};
+
+    /// Corollary 1: for a linearly convergent input sequence, the Markov
+    /// compressor's distortion converges to 0 — while the plain compressor's
+    /// does not (it stalls at (1-alpha)||v*||^2).
+    #[test]
+    fn markov_distortion_decays_on_convergent_sequence() {
+        for_all_seeds(15, |rng| {
+            let d = 5 + rng.next_below(40);
+            let k = 1 + rng.next_below(3.min(d));
+            let vstar = random_vec(rng, d, 3.0); // limit with ||v*|| > 0
+            let dir = random_vec(rng, d, 1.0);
+            let mut m = Markov::new(TopK::new(k), d);
+            let mut last = f64::INFINITY;
+            let mut v = vec![0.0; d];
+            let t_max = 400;
+            for t in 0..t_max {
+                let decay = 0.97f64.powi(t);
+                for j in 0..d {
+                    v[j] = vstar[j] + decay * dir[j];
+                }
+                m.step(&v, rng);
+                if t == t_max - 1 {
+                    last = m.distortion_sq(&v);
+                }
+            }
+            let vstar_norm = crate::util::linalg::norm2_sq(&vstar);
+            assert!(
+                last < 1e-6 * vstar_norm.max(1.0),
+                "Markov distortion should vanish, got {last} (||v*||^2 = {vstar_norm})"
+            );
+            // Plain compressor on the same final input does NOT vanish
+            // unless the vector is nearly k-sparse.
+            let c = TopK::new(k);
+            let plain = crate::compress::distortion_ratio(&c, &v, rng);
+            // For a random Gaussian v* and k << d this is bounded away
+            // from 0 with overwhelming probability.
+            if d >= 10 && k <= 2 {
+                assert!(plain > 1e-4, "plain top-k distortion unexpectedly zero: {plain}");
+            }
+        });
+    }
+
+    /// Lemma 1 one-step recursion: E D^{t+1} <= (1-theta) D^t + beta Delta^t
+    /// (deterministic C = Top-k, so it holds pointwise).
+    #[test]
+    fn lemma1_single_step_recursion() {
+        for_all_seeds(20, |rng| {
+            let d = 4 + rng.next_below(30);
+            let k = 1 + rng.next_below(d);
+            let c = TopK::new(k);
+            let alpha = crate::compress::Compressor::alpha(&c, d);
+            let (theta, beta) = theory::theta_beta(alpha);
+            let mut m = Markov::new(TopK::new(k), d);
+            let v0 = random_vec(rng, d, 2.0);
+            m.step(&v0, rng);
+            let d0 = m.distortion_sq(&v0);
+            let v1: Vec<f64> =
+                v0.iter().map(|x| x + 0.3 * rng.next_normal()).collect();
+            let delta = crate::util::linalg::dist_sq(&v1, &v0);
+            m.step(&v1, rng);
+            let d1 = m.distortion_sq(&v1);
+            crate::util::testing::assert_le_approx(
+                d1,
+                (1.0 - theta) * d0 + beta * delta,
+                1e-9,
+                "Lemma 1 recursion",
+            );
+        });
+    }
+
+    #[test]
+    fn first_step_equals_plain_compression() {
+        let mut rng = Rng::seed(0);
+        let v = random_vec(&mut rng, 16, 1.0);
+        let mut m = Markov::new(TopK::new(4), 16);
+        let delta = m.step(&v, &mut rng);
+        let plain = crate::compress::Compressor::compress(&TopK::new(4), &v, &mut rng);
+        assert_eq!(delta.sparse, plain.sparse);
+        assert_eq!(m.estimate(), plain.sparse.to_dense(16).as_slice());
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut rng = Rng::seed(1);
+        let v = random_vec(&mut rng, 8, 1.0);
+        let mut m = Markov::new(TopK::new(2), 8);
+        m.step(&v, &mut rng);
+        assert!(crate::util::linalg::norm2_sq(m.estimate()) > 0.0);
+        m.reset();
+        assert_eq!(m.estimate(), vec![0.0; 8].as_slice());
+    }
+
+    /// With alpha = 1 (identity compressor) the Markov compressor tracks the
+    /// input exactly from the first step.
+    #[test]
+    fn identity_markov_is_exact() {
+        let mut rng = Rng::seed(2);
+        let mut m = Markov::new(crate::compress::Identity, 6);
+        for _ in 0..5 {
+            let v = random_vec(&mut rng, 6, 2.0);
+            m.step(&v, &mut rng);
+            assert!(m.distortion_sq(&v) < 1e-24);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Compression operators (§2.1 of the paper) and the Markov compressor
+//! (§3.1), with exact wire-cost accounting.
+//!
+//! Two families:
+//!   * unbiased `U(omega)` — Eq. (2); see [`unbiased`], used only to
+//!     demonstrate Lemma 8 (scaling an unbiased compressor into `B`).
+//!   * biased/contractive `B(alpha)` — Eq. (3); the [`Compressor`] trait.
+//!     Canonical member: Top-k with `alpha = k/d`.
+//!
+//! Every compressor returns a [`Compressed`] carrying the output vector (as
+//! a [`SparseVec`]) plus the exact number of bits a real wire transfer
+//! would cost — the paper's x-axis (`bits/n`) is regenerated from these.
+
+pub mod identity;
+pub mod markov;
+pub mod randk;
+pub mod sign;
+pub mod sparse;
+pub mod topk;
+pub mod unbiased;
+
+pub use identity::Identity;
+pub use markov::Markov;
+pub use randk::RandK;
+pub use sign::ScaledSign;
+pub use sparse::SparseVec;
+pub use topk::TopK;
+pub use unbiased::{RandKUnbiased, Scaled};
+
+use crate::util::rng::Rng;
+
+/// Result of one compression: the vector plus its exact wire cost.
+#[derive(Clone, Debug)]
+pub struct Compressed {
+    pub sparse: SparseVec,
+    /// Exact wire bits (values + indices + any header), as accounted in the
+    /// paper's `bits/n` plots.
+    pub bits: u64,
+}
+
+/// A (possibly randomized) contractive compressor `C ∈ B(alpha)`, Eq. (3):
+/// `E ||C(x) - x||^2 <= (1 - alpha) ||x||^2`.
+pub trait Compressor: Send + Sync {
+    /// Human-readable name ("top1", "rand8", ...).
+    fn name(&self) -> String;
+
+    /// Contraction parameter for input dimension `d` (`0 < alpha <= 1`).
+    fn alpha(&self, d: usize) -> f64;
+
+    /// Compress `v`. Deterministic compressors ignore `rng`.
+    fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed;
+
+    /// Whether the operator is deterministic (Top-k yes, Rand-k no). EF21+'s
+    /// analysis (§3.5) needs a deterministic `C`.
+    fn is_deterministic(&self) -> bool;
+}
+
+impl<T: Compressor + ?Sized> Compressor for Box<T> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+    fn alpha(&self, d: usize) -> f64 {
+        (**self).alpha(d)
+    }
+    fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
+        (**self).compress(v, rng)
+    }
+    fn is_deterministic(&self) -> bool {
+        (**self).is_deterministic()
+    }
+}
+
+/// Build a compressor from a CLI/config spec string:
+/// `"top<k>"`, `"rand<k>"`, `"sign"`, `"identity"` / `"none"`.
+pub fn from_spec(spec: &str) -> anyhow::Result<Box<dyn Compressor>> {
+    let s = spec.trim().to_ascii_lowercase();
+    if s == "identity" || s == "none" {
+        return Ok(Box::new(Identity));
+    }
+    if s == "sign" {
+        return Ok(Box::new(ScaledSign));
+    }
+    if let Some(k) = s.strip_prefix("top") {
+        let k: usize = k.parse()?;
+        anyhow::ensure!(k >= 1, "top-k needs k >= 1");
+        return Ok(Box::new(TopK::new(k)));
+    }
+    if let Some(k) = s.strip_prefix("rand") {
+        let k: usize = k.parse()?;
+        anyhow::ensure!(k >= 1, "rand-k needs k >= 1");
+        return Ok(Box::new(RandK::new(k)));
+    }
+    anyhow::bail!("unknown compressor spec '{spec}' (try top1, rand8, sign, identity)")
+}
+
+/// Empirical check of the contraction property (3) for a single input:
+/// returns `||C(v) - v||^2 / ||v||^2`, which must be `<= 1 - alpha` for
+/// deterministic compressors (and in expectation for randomized ones).
+pub fn distortion_ratio(c: &dyn Compressor, v: &[f64], rng: &mut Rng) -> f64 {
+    let out = c.compress(v, rng).sparse.to_dense(v.len());
+    let num = crate::util::linalg::dist_sq(&out, v);
+    let den = crate::util::linalg::norm2_sq(v);
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{for_all_seeds, random_vec};
+
+    fn all_compressors(d: usize) -> Vec<Box<dyn Compressor>> {
+        vec![
+            Box::new(TopK::new(1)),
+            Box::new(TopK::new((d / 4).max(1))),
+            Box::new(RandK::new(1)),
+            Box::new(RandK::new((d / 4).max(1))),
+            Box::new(ScaledSign),
+            Box::new(Identity),
+        ]
+    }
+
+    /// Property: Eq. (3) holds pointwise for deterministic compressors and
+    /// in expectation (checked empirically with slack) for randomized ones.
+    #[test]
+    fn contraction_property_eq3() {
+        for_all_seeds(30, |rng| {
+            let d = 2 + rng.next_below(60);
+            let scale = 1.0 + 5.0 * rng.next_f64();
+            let v = random_vec(rng, d, scale);
+            for c in all_compressors(d) {
+                let alpha = c.alpha(d);
+                assert!(alpha > 0.0 && alpha <= 1.0, "{} alpha {alpha}", c.name());
+                if c.is_deterministic() {
+                    let r = distortion_ratio(c.as_ref(), &v, rng);
+                    assert!(
+                        r <= 1.0 - alpha + 1e-9,
+                        "{}: ratio {r} > 1 - alpha {}",
+                        c.name(),
+                        1.0 - alpha
+                    );
+                } else {
+                    // Average over repeats for the expectation bound.
+                    let reps = 300;
+                    let mean: f64 = (0..reps)
+                        .map(|_| distortion_ratio(c.as_ref(), &v, rng))
+                        .sum::<f64>()
+                        / reps as f64;
+                    assert!(
+                        mean <= (1.0 - alpha) * 1.15 + 1e-9,
+                        "{}: mean ratio {mean} vs 1-alpha {}",
+                        c.name(),
+                        1.0 - alpha
+                    );
+                }
+            }
+        });
+    }
+
+    /// Zero input must compress to (exactly) zero — this is what makes EF21
+    /// stable near stationary points (§3: vanishing inputs, vanishing
+    /// distortion).
+    #[test]
+    fn zero_maps_to_zero() {
+        let mut rng = crate::util::rng::Rng::seed(1);
+        let v = vec![0.0; 32];
+        for c in all_compressors(32) {
+            let out = c.compress(&v, &mut rng).sparse.to_dense(32);
+            assert!(out.iter().all(|&x| x == 0.0), "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn from_spec_parses_and_rejects() {
+        assert_eq!(from_spec("top5").unwrap().name(), "top5");
+        assert_eq!(from_spec("rand3").unwrap().name(), "rand3");
+        assert_eq!(from_spec("sign").unwrap().name(), "sign");
+        assert_eq!(from_spec("identity").unwrap().name(), "identity");
+        assert!(from_spec("top0").is_err());
+        assert!(from_spec("bogus").is_err());
+    }
+
+    #[test]
+    fn bits_accounting_is_positive_and_monotone_in_k() {
+        let mut rng = crate::util::rng::Rng::seed(2);
+        let v = random_vec(&mut rng, 100, 1.0);
+        let b1 = TopK::new(1).compress(&v, &mut rng).bits;
+        let b10 = TopK::new(10).compress(&v, &mut rng).bits;
+        assert!(b1 > 0 && b10 > b1);
+    }
+}

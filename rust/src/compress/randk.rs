@@ -1,0 +1,92 @@
+//! Scaled Rand-k (Example 2): keep k uniformly random coordinates,
+//! unscaled. This is the biased compressor `(1/(1+omega)) C'` obtained from
+//! the unbiased Rand-k `C'(v) = (d/k) v_S` via Lemma 8 — the `(1/(1+omega))`
+//! and `(d/k)` factors cancel, so the output is simply `v` restricted to a
+//! random k-subset. `alpha = k/d`, same as Top-k, which is exactly the
+//! paper's point: identical worst-case theory, very different practice.
+
+use super::{Compressed, Compressor, SparseVec};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RandK {
+    pub k: usize,
+}
+
+impl RandK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "rand-k needs k >= 1");
+        RandK { k }
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> String {
+        format!("rand{}", self.k)
+    }
+
+    fn alpha(&self, d: usize) -> f64 {
+        (self.k.min(d) as f64 / d as f64).min(1.0)
+    }
+
+    fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
+        let d = v.len();
+        let k = self.k.min(d);
+        let idx = if k == d {
+            (0..d as u32).collect()
+        } else {
+            rng.sample_indices(d, k)
+        };
+        let val: Vec<f64> = idx.iter().map(|&i| v[i as usize]).collect();
+        let sparse = SparseVec::new(idx, val);
+        let bits = sparse.standard_bits();
+        Compressed { sparse, bits }
+    }
+
+    fn is_deterministic(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{for_all_seeds, random_vec};
+
+    #[test]
+    fn keeps_exactly_k_unscaled_entries() {
+        for_all_seeds(20, |rng| {
+            let d = 2 + rng.next_below(100);
+            let k = 1 + rng.next_below(d);
+            let v = random_vec(rng, d, 1.0);
+            let out = RandK::new(k).compress(&v, rng);
+            assert_eq!(out.sparse.nnz(), k);
+            for (&i, &x) in out.sparse.idx.iter().zip(&out.sparse.val) {
+                assert_eq!(x, v[i as usize], "entries must be unscaled");
+            }
+        });
+    }
+
+    #[test]
+    fn expected_distortion_equals_one_minus_k_over_d() {
+        // E||C(v)-v||^2 = (1 - k/d)||v||^2 with equality (uniform subset).
+        let mut rng = Rng::seed(3);
+        let d = 50;
+        let k = 10;
+        let v = random_vec(&mut rng, d, 2.0);
+        let c = RandK::new(k);
+        let reps = 4000;
+        let mean: f64 = (0..reps)
+            .map(|_| super::super::distortion_ratio(&c, &v, &mut rng))
+            .sum::<f64>()
+            / reps as f64;
+        assert!((mean - (1.0 - k as f64 / d as f64)).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn k_geq_d_is_identity() {
+        let v = vec![1.0, 2.0];
+        let mut rng = Rng::seed(1);
+        assert_eq!(RandK::new(5).compress(&v, &mut rng).sparse.to_dense(2), v);
+    }
+}

@@ -1,0 +1,76 @@
+//! Norm-scaled sign compressor: `C(v) = (||v||_1 / d) * sign(v)`.
+//!
+//! A classical member of `B(alpha)` (Beznosikov et al. 2020, Table 1):
+//! `||C(v) - v||^2 = ||v||^2 - ||v||_1^2 / d <= (1 - 1/d) ||v||^2`,
+//! so `alpha = 1/d` in the worst case. Wire cost is d sign bits plus one
+//! f32 scale — by far the cheapest per-round message, which makes it a
+//! useful extreme point in the bits/accuracy trade-off benches.
+
+use super::{Compressed, Compressor, SparseVec};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ScaledSign;
+
+impl Compressor for ScaledSign {
+    fn name(&self) -> String {
+        "sign".into()
+    }
+
+    fn alpha(&self, d: usize) -> f64 {
+        1.0 / d as f64
+    }
+
+    fn compress(&self, v: &[f64], _rng: &mut Rng) -> Compressed {
+        let d = v.len();
+        let l1: f64 = v.iter().map(|x| x.abs()).sum();
+        let scale = l1 / d as f64;
+        let dense: Vec<f64> = v
+            .iter()
+            .map(|&x| {
+                if x > 0.0 {
+                    scale
+                } else if x < 0.0 {
+                    -scale
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let sparse = SparseVec::from_dense_full(&dense);
+        // 1 sign bit per coordinate + one f32 scale.
+        let bits = d as u64 + super::sparse::VALUE_BITS;
+        Compressed { sparse, bits }
+    }
+
+    fn is_deterministic(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{for_all_seeds, random_vec};
+
+    #[test]
+    fn identity_on_zero_and_exact_distortion_formula() {
+        for_all_seeds(20, |rng| {
+            let d = 1 + rng.next_below(64);
+            let v = random_vec(rng, d, 2.0);
+            let out = ScaledSign.compress(&v, rng).sparse.to_dense(d);
+            let l1: f64 = v.iter().map(|x| x.abs()).sum();
+            let n2: f64 = v.iter().map(|x| x * x).sum();
+            let dist: f64 = out.iter().zip(&v).map(|(a, b)| (a - b) * (a - b)).sum();
+            let expect = n2 - l1 * l1 / d as f64;
+            assert!((dist - expect).abs() < 1e-9 * n2.max(1.0), "{dist} vs {expect}");
+        });
+    }
+
+    #[test]
+    fn bits_are_d_plus_32() {
+        let v = vec![1.0; 100];
+        let mut rng = Rng::seed(0);
+        assert_eq!(ScaledSign.compress(&v, &mut rng).bits, 132);
+    }
+}

@@ -1,0 +1,148 @@
+//! Sparse vector: the in-memory and on-wire representation of compressed
+//! messages. Index/value pairs, sorted by index; the codec (transport) and
+//! the bit accounting both derive from this one type so the simulated
+//! `bits/n` axis and the real TCP byte stream can never disagree.
+
+/// Sparse vector over a dense space of dimension `d` (implicit; carried by
+/// context). Indices are `u32`, strictly increasing; values are `f64` in
+/// memory, accounted and serialized as IEEE f32 on the wire (the paper's
+/// plots count 32-bit floats).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVec {
+    pub idx: Vec<u32>,
+    pub val: Vec<f64>,
+}
+
+/// Wire bits per value (f32).
+pub const VALUE_BITS: u64 = 32;
+/// Wire bits per index (u32; the paper also counts plain 32-bit indices).
+pub const INDEX_BITS: u64 = 32;
+
+impl SparseVec {
+    pub fn new(idx: Vec<u32>, val: Vec<f64>) -> Self {
+        debug_assert_eq!(idx.len(), val.len());
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices must be sorted+unique");
+        SparseVec { idx, val }
+    }
+
+    pub fn empty() -> Self {
+        SparseVec { idx: Vec::new(), val: Vec::new() }
+    }
+
+    /// Dense vector -> sparse (drops exact zeros).
+    pub fn from_dense(v: &[f64]) -> Self {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &x) in v.iter().enumerate() {
+            if x != 0.0 {
+                idx.push(i as u32);
+                val.push(x);
+            }
+        }
+        SparseVec { idx, val }
+    }
+
+    /// Dense vector, keeping explicit entries for ALL coordinates (used by
+    /// dense-message algorithms like GD where zeros are still transmitted).
+    pub fn from_dense_full(v: &[f64]) -> Self {
+        SparseVec {
+            idx: (0..v.len() as u32).collect(),
+            val: v.to_vec(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Materialize into a dense vector of dimension `d`.
+    pub fn to_dense(&self, d: usize) -> Vec<f64> {
+        let mut out = vec![0.0; d];
+        self.add_into(&mut out);
+        out
+    }
+
+    /// out += self
+    pub fn add_into(&self, out: &mut [f64]) {
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] += v;
+        }
+    }
+
+    /// out += scale * self
+    pub fn add_scaled_into(&self, scale: f64, out: &mut [f64]) {
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] += scale * v;
+        }
+    }
+
+    /// Overwrite the touched coordinates (used by EF21+'s DCGD branch where
+    /// the message *is* the new state, not a delta).
+    pub fn assign_into(&self, out: &mut [f64]) {
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in self.val.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// Standard wire cost: nnz * (value + index) bits. Compressors with a
+    /// cheaper encoding (e.g. sign) report their own `Compressed::bits`.
+    pub fn standard_bits(&self) -> u64 {
+        self.nnz() as u64 * (VALUE_BITS + INDEX_BITS)
+    }
+
+    /// ||self||^2
+    pub fn norm2_sq(&self) -> f64 {
+        self.val.iter().map(|v| v * v).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let v = vec![0.0, 1.5, 0.0, -2.0, 0.0];
+        let s = SparseVec::from_dense(&v);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.to_dense(5), v);
+    }
+
+    #[test]
+    fn from_dense_full_keeps_zeros() {
+        let v = vec![0.0, 1.0];
+        let s = SparseVec::from_dense_full(&v);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.to_dense(2), v);
+    }
+
+    #[test]
+    fn add_scaled_and_assign() {
+        let s = SparseVec::new(vec![1, 3], vec![2.0, -1.0]);
+        let mut out = vec![1.0; 4];
+        s.add_scaled_into(0.5, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 1.0, 0.5]);
+        s.assign_into(&mut out);
+        assert_eq!(out, vec![1.0, 2.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn bits_and_norm() {
+        let s = SparseVec::new(vec![0, 2, 9], vec![3.0, 4.0, 0.0]);
+        assert_eq!(s.standard_bits(), 3 * 64);
+        assert!((s.norm2_sq() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_free() {
+        let s = SparseVec::empty();
+        assert_eq!(s.standard_bits(), 0);
+        assert_eq!(s.to_dense(3), vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,215 @@
+//! Top-k: the canonical greedy biased compressor (`B(k/d)`, Example 1).
+//! Keeps the k largest-magnitude entries, zeros the rest.
+//!
+//! Selection uses `select_nth_unstable` (expected O(d)) on a scratch index
+//! buffer rather than a full O(d log d) sort — this is the L3 hot spot when
+//! compressing the ~470k-dim transformer gradient (see EXPERIMENTS.md §Perf).
+//! Ties are broken deterministically (by index) so Top-k remains a
+//! deterministic operator, as required by EF21+'s analysis (§3.5).
+
+use super::{Compressed, Compressor, SparseVec};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TopK {
+    pub k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "top-k needs k >= 1");
+        TopK { k }
+    }
+
+    /// Indices of the k largest |v| entries (deterministic tie-break by
+    /// lower index), returned sorted ascending.
+    ///
+    /// Perf (§Perf L3, iteration log in EXPERIMENTS.md): expected-O(d)
+    /// `select_nth_unstable` instead of a full O(d log d) sort
+    /// ([`Self::select_indices_via_sort`] is kept as the measured
+    /// baseline), and the index scratch buffer is thread-local so the
+    /// 470k-dim transformer gradient compression does not allocate ~2 MB
+    /// per round.
+    pub fn select_indices(&self, v: &[f64]) -> Vec<u32> {
+        let d = v.len();
+        let k = self.k.min(d);
+        if k == d {
+            return (0..d as u32).collect();
+        }
+        SCRATCH.with(|cell| {
+            let mut order = cell.take();
+            order.clear();
+            order.extend(0..d as u32);
+            // Descending |v|, ascending index on ties.
+            let key = |i: &u32| {
+                let a = v[*i as usize].abs();
+                (std::cmp::Reverse(FloatOrd(a)), *i)
+            };
+            order.select_nth_unstable_by_key(k - 1, key);
+            let mut top = order[..k].to_vec();
+            top.sort_unstable();
+            cell.set(order);
+            top
+        })
+    }
+
+    /// Baseline selection via full sort — kept for the §Perf ablation
+    /// bench (`bench_compressors`) and as a differential-testing oracle.
+    pub fn select_indices_via_sort(&self, v: &[f64]) -> Vec<u32> {
+        let d = v.len();
+        let k = self.k.min(d);
+        let mut order: Vec<u32> = (0..d as u32).collect();
+        order.sort_unstable_by(|&a, &b| {
+            v[b as usize]
+                .abs()
+                .partial_cmp(&v[a as usize].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut top = order[..k].to_vec();
+        top.sort_unstable();
+        top
+    }
+}
+
+thread_local! {
+    /// Reused index buffer for [`TopK::select_indices`].
+    static SCRATCH: std::cell::Cell<Vec<u32>> = const { std::cell::Cell::new(Vec::new()) };
+}
+
+/// Total order on f64 magnitudes (no NaNs expected in gradients; NaN sorts
+/// last so it is never selected before finite values). PartialOrd MUST be
+/// defined through Ord — sort internals compare via `lt`, and a derived
+/// (IEEE) PartialOrd would disagree with the NaN-totalized Ord.
+#[derive(PartialEq)]
+struct FloatOrd(f64);
+
+impl Eq for FloatOrd {}
+
+impl PartialOrd for FloatOrd {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for FloatOrd {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or_else(|| {
+            // NaN handling: treat NaN as smallest magnitude.
+            match (self.0.is_nan(), other.0.is_nan()) {
+                (true, true) => std::cmp::Ordering::Equal,
+                (true, false) => std::cmp::Ordering::Less,
+                (false, true) => std::cmp::Ordering::Greater,
+                _ => unreachable!(),
+            }
+        })
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("top{}", self.k)
+    }
+
+    /// alpha = k/d (Example 1 / Beznosikov et al. 2020).
+    fn alpha(&self, d: usize) -> f64 {
+        (self.k.min(d) as f64 / d as f64).min(1.0)
+    }
+
+    fn compress(&self, v: &[f64], _rng: &mut Rng) -> Compressed {
+        let idx = self.select_indices(v);
+        let val: Vec<f64> = idx.iter().map(|&i| v[i as usize]).collect();
+        let sparse = SparseVec::new(idx, val);
+        let bits = sparse.standard_bits();
+        Compressed { sparse, bits }
+    }
+
+    fn is_deterministic(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{for_all_seeds, random_vec};
+
+    #[test]
+    fn picks_largest_magnitudes() {
+        let v = vec![0.1, -5.0, 2.0, 0.0, 3.0];
+        let mut rng = Rng::seed(0);
+        let out = TopK::new(2).compress(&v, &mut rng).sparse.to_dense(5);
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn k_geq_d_is_identity() {
+        let v = vec![1.0, -2.0, 3.0];
+        let mut rng = Rng::seed(0);
+        let out = TopK::new(10).compress(&v, &mut rng).sparse.to_dense(3);
+        assert_eq!(out, v);
+        assert!((TopK::new(10).alpha(3) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        // All equal magnitudes: lowest indices must win, repeatably.
+        let v = vec![1.0; 8];
+        let mut rng = Rng::seed(0);
+        let a = TopK::new(3).compress(&v, &mut rng).sparse;
+        let b = TopK::new(3).compress(&v, &mut rng).sparse;
+        assert_eq!(a, b);
+        assert_eq!(a.idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn contraction_is_tight_on_uniform_vector() {
+        // Worst case of Eq. (3): uniform energy. ratio == 1 - k/d exactly.
+        let d = 10;
+        let v = vec![2.0; d];
+        let mut rng = Rng::seed(0);
+        let c = TopK::new(3);
+        let r = super::super::distortion_ratio(&c, &v, &mut rng);
+        assert!((r - (1.0 - 0.3)).abs() < 1e-12, "{r}");
+    }
+
+    #[test]
+    fn matches_naive_sort_selection() {
+        for_all_seeds(25, |rng| {
+            let d = 1 + rng.next_below(200);
+            let k = 1 + rng.next_below(d);
+            let v = random_vec(rng, d, 3.0);
+            let fast = TopK::new(k).select_indices(&v);
+            // Naive: full sort by (|v| desc, idx asc).
+            let mut order: Vec<u32> = (0..d as u32).collect();
+            order.sort_by(|&a, &b| {
+                v[b as usize]
+                    .abs()
+                    .partial_cmp(&v[a as usize].abs())
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            let mut naive = order[..k].to_vec();
+            naive.sort_unstable();
+            assert_eq!(fast, naive, "d={d} k={k}");
+        });
+    }
+
+    #[test]
+    fn handles_nan_by_never_selecting_it_over_finite() {
+        let v = vec![f64::NAN, 1.0, 2.0];
+        let idx = TopK::new(2).select_indices(&v);
+        assert_eq!(idx, vec![1, 2]);
+    }
+
+    #[test]
+    fn fast_path_matches_sort_baseline() {
+        for_all_seeds(30, |rng| {
+            let d = 1 + rng.next_below(300);
+            let k = 1 + rng.next_below(d);
+            let v = random_vec(rng, d, 2.0);
+            let c = TopK::new(k);
+            assert_eq!(c.select_indices(&v), c.select_indices_via_sort(&v));
+        });
+    }
+}

@@ -1,0 +1,151 @@
+//! Unbiased compressors `U(omega)` (Eq. 2) and Lemma 8's scaling bridge
+//! into the biased class `B(1/(1+omega))`.
+//!
+//! EF21's whole point is that it needs only `B(alpha)`; these exist to
+//! (a) test Lemma 8 and (b) provide the unbiased comparators used in the
+//! discussion of §2.2.
+
+use super::{Compressed, Compressor, SparseVec};
+use crate::util::rng::Rng;
+
+/// An unbiased compressor with known variance parameter omega (Eq. 2).
+pub trait UnbiasedCompressor: Send + Sync {
+    fn name(&self) -> String;
+    fn omega(&self, d: usize) -> f64;
+    fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed;
+}
+
+/// Unbiased Rand-k: keep k random coordinates scaled by d/k.
+/// `omega = d/k - 1`.
+#[derive(Clone, Debug)]
+pub struct RandKUnbiased {
+    pub k: usize,
+}
+
+impl RandKUnbiased {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        RandKUnbiased { k }
+    }
+}
+
+impl UnbiasedCompressor for RandKUnbiased {
+    fn name(&self) -> String {
+        format!("urand{}", self.k)
+    }
+
+    fn omega(&self, d: usize) -> f64 {
+        (d as f64 / self.k.min(d) as f64) - 1.0
+    }
+
+    fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
+        let d = v.len();
+        let k = self.k.min(d);
+        let scale = d as f64 / k as f64;
+        let idx = if k == d { (0..d as u32).collect() } else { rng.sample_indices(d, k) };
+        let val: Vec<f64> = idx.iter().map(|&i| scale * v[i as usize]).collect();
+        let sparse = SparseVec::new(idx, val);
+        let bits = sparse.standard_bits();
+        Compressed { sparse, bits }
+    }
+}
+
+/// Lemma 8: if `C' ∈ U(omega)` then `(1/(1+omega)) C' ∈ B(1/(1+omega))`.
+/// Wraps any unbiased compressor into the biased interface.
+pub struct Scaled<U: UnbiasedCompressor> {
+    pub inner: U,
+}
+
+impl<U: UnbiasedCompressor> Scaled<U> {
+    pub fn new(inner: U) -> Self {
+        Scaled { inner }
+    }
+}
+
+impl<U: UnbiasedCompressor> Compressor for Scaled<U> {
+    fn name(&self) -> String {
+        format!("scaled({})", self.inner.name())
+    }
+
+    fn alpha(&self, d: usize) -> f64 {
+        1.0 / (1.0 + self.inner.omega(d))
+    }
+
+    fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
+        let mut out = self.inner.compress(v, rng);
+        let scale = 1.0 / (1.0 + self.inner.omega(v.len()));
+        out.sparse.scale(scale);
+        out
+    }
+
+    fn is_deterministic(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{for_all_seeds, random_vec};
+
+    #[test]
+    fn randk_unbiasedness() {
+        // E[C(v)] = v empirically.
+        let mut rng = Rng::seed(1);
+        let d = 20;
+        let v = random_vec(&mut rng, d, 1.0);
+        let c = RandKUnbiased::new(4);
+        let reps = 8000;
+        let mut mean = vec![0.0; d];
+        for _ in 0..reps {
+            let out = c.compress(&v, &mut rng).sparse.to_dense(d);
+            for (m, o) in mean.iter_mut().zip(&out) {
+                *m += o / reps as f64;
+            }
+        }
+        for (m, t) in mean.iter().zip(&v) {
+            assert!((m - t).abs() < 0.15, "{m} vs {t}");
+        }
+    }
+
+    #[test]
+    fn randk_variance_bound_eq2() {
+        // E||C(v)-v||^2 = (d/k - 1)||v||^2 exactly for unbiased rand-k.
+        let mut rng = Rng::seed(2);
+        let d = 30;
+        let k = 6;
+        let v = random_vec(&mut rng, d, 1.0);
+        let n2: f64 = v.iter().map(|x| x * x).sum();
+        let c = RandKUnbiased::new(k);
+        let reps = 5000;
+        let mean: f64 = (0..reps)
+            .map(|_| {
+                let out = c.compress(&v, &mut rng).sparse.to_dense(d);
+                out.iter().zip(&v).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+            })
+            .sum::<f64>()
+            / reps as f64;
+        let omega = c.omega(d);
+        assert!((mean / n2 - omega).abs() < 0.25, "{} vs {omega}", mean / n2);
+    }
+
+    #[test]
+    fn lemma8_scaled_compressor_is_contractive() {
+        // Scaled unbiased rand-k must satisfy Eq. (3) with alpha=1/(1+omega)
+        // in expectation.
+        for_all_seeds(10, |rng| {
+            let d = 4 + rng.next_below(40);
+            let k = 1 + rng.next_below(d);
+            let c = Scaled::new(RandKUnbiased::new(k));
+            let alpha = c.alpha(d);
+            assert!((alpha - k.min(d) as f64 / d as f64).abs() < 1e-12);
+            let v = random_vec(rng, d, 1.5);
+            let reps = 400;
+            let mean: f64 = (0..reps)
+                .map(|_| super::super::distortion_ratio(&c, &v, rng))
+                .sum::<f64>()
+                / reps as f64;
+            assert!(mean <= (1.0 - alpha) * 1.15 + 1e-9, "{mean} vs {}", 1.0 - alpha);
+        });
+    }
+}

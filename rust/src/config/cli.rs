@@ -1,0 +1,117 @@
+//! Minimal CLI argument parser: positionals, `--key value` / `--key=value`
+//! options, and boolean `--switch`es (a switch is any `--key` not followed
+//! by a value-looking token).
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token vector (tests) — tokens exclude argv[0].
+    pub fn from_vec(tokens: Vec<String>) -> Args {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.options.insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.switches.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Args {
+        Self::from_vec(std::env::args().skip(1).collect())
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Parse an option into any FromStr type; None if absent, Err if
+    /// present but malformed.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    /// Required positional argument.
+    pub fn pos(&self, i: usize, what: &str) -> Result<&str> {
+        self.positional
+            .get(i)
+            .map(|s| s.as_str())
+            .with_context(|| format!("missing positional argument <{what}>"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixture() {
+        let a = Args::from_vec(v(&[
+            "exp", "stepsize", "--dataset", "a9a", "--k=2", "--full", "--rounds", "100",
+        ]));
+        assert_eq!(a.positional, vec!["exp", "stepsize"]);
+        assert_eq!(a.get_str("dataset"), Some("a9a"));
+        assert_eq!(a.get_str("k"), Some("2"));
+        assert!(a.has("full"));
+        assert_eq!(a.get_parse::<usize>("rounds").unwrap(), Some(100));
+        assert_eq!(a.pos(0, "cmd").unwrap(), "exp");
+        assert!(a.pos(5, "nope").is_err());
+    }
+
+    #[test]
+    fn switch_followed_by_flag_stays_switch() {
+        let a = Args::from_vec(v(&["--verbose", "--k", "3"]));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_str("k"), Some("3"));
+    }
+
+    #[test]
+    fn parse_errors_are_reported() {
+        let a = Args::from_vec(v(&["--rounds", "NaNrounds"]));
+        assert!(a.get_parse::<usize>("rounds").is_err());
+    }
+
+    #[test]
+    fn negative_number_is_treated_as_value() {
+        // "-5" doesn't start with --, so it's a value.
+        let a = Args::from_vec(v(&["--offset", "-5"]));
+        assert_eq!(a.get_parse::<i32>("offset").unwrap(), Some(-5));
+    }
+}

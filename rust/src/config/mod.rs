@@ -1,0 +1,111 @@
+//! Configuration: a small CLI argument parser (clap is not vendored) and
+//! the experiment configuration type shared by the launcher and the
+//! experiment harness.
+
+pub mod cli;
+
+use crate::algo::AlgoSpec;
+use anyhow::Result;
+
+/// One fully-specified training run.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub algo: AlgoSpec,
+    /// Compressor spec string ("top1", "rand8", "sign", "identity").
+    pub compressor: String,
+    pub dataset: String,
+    pub n_workers: usize,
+    /// Stepsize multiplier over the Theorem-1/2 prediction.
+    pub gamma_mult: f64,
+    /// Absolute stepsize override (None = theory * gamma_mult).
+    pub gamma_abs: Option<f64>,
+    pub rounds: usize,
+    pub lam: f64,
+    pub seed: u64,
+    /// Record every k rounds.
+    pub record_every: usize,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec {
+            algo: AlgoSpec::Ef21,
+            compressor: "top1".into(),
+            dataset: "a9a".into(),
+            n_workers: 20,
+            gamma_mult: 1.0,
+            gamma_abs: None,
+            rounds: 2000,
+            lam: 0.1,
+            seed: 0,
+            record_every: 1,
+        }
+    }
+}
+
+impl RunSpec {
+    /// Populate from parsed CLI args (only recognized keys are consumed).
+    pub fn from_args(args: &cli::Args) -> Result<RunSpec> {
+        let mut s = RunSpec::default();
+        if let Some(a) = args.get_str("algo") {
+            s.algo = AlgoSpec::parse(a)?;
+        }
+        if let Some(c) = args.get_str("compressor") {
+            s.compressor = c.to_string();
+        }
+        if let Some(k) = args.get_str("k") {
+            s.compressor = format!("top{k}");
+        }
+        if let Some(d) = args.get_str("dataset") {
+            s.dataset = d.to_string();
+        }
+        s.n_workers = args.get_parse("workers")?.unwrap_or(s.n_workers);
+        s.gamma_mult = args.get_parse("gamma-mult")?.unwrap_or(s.gamma_mult);
+        s.gamma_abs = args.get_parse("gamma")?;
+        s.rounds = args.get_parse("rounds")?.unwrap_or(s.rounds);
+        s.lam = args.get_parse("lam")?.unwrap_or(s.lam);
+        s.seed = args.get_parse("seed")?.unwrap_or(s.seed);
+        s.record_every = args.get_parse("record-every")?.unwrap_or(s.record_every);
+        Ok(s)
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{} {} {}x {}",
+            self.algo.name(),
+            self.compressor,
+            self.gamma_mult,
+            self.dataset
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_args_overrides_defaults() {
+        let args = cli::Args::from_vec(vec![
+            "--algo".into(),
+            "ef".into(),
+            "--k".into(),
+            "4".into(),
+            "--rounds=50".into(),
+            "--gamma-mult".into(),
+            "8".into(),
+        ]);
+        let s = RunSpec::from_args(&args).unwrap();
+        assert_eq!(s.algo, AlgoSpec::Ef);
+        assert_eq!(s.compressor, "top4");
+        assert_eq!(s.rounds, 50);
+        assert_eq!(s.gamma_mult, 8.0);
+        assert_eq!(s.n_workers, 20); // default kept
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let args = cli::Args::from_vec(vec!["--rounds".into(), "abc".into()]);
+        assert!(RunSpec::from_args(&args).is_err());
+    }
+}

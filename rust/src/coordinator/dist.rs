@@ -1,0 +1,246 @@
+//! Distributed runner: the same round protocol as [`super::runner`], but
+//! with one OS thread per worker and all coordination flowing through a
+//! real [`crate::transport::Conn`] (in-proc channels or TCP loopback).
+//!
+//! Semantics are bit-identical to the sequential runner for deterministic
+//! algorithms (asserted in `rust/tests/integration_transport.rs`): workers
+//! are pure state machines, the master absorbs messages in worker order,
+//! and all randomness is derived from per-worker seeds.
+
+use crate::algo::{MasterNode, WireMsg, WorkerNode};
+use crate::metrics::{History, RoundRecord};
+use crate::transport::codec::{decode, encode, Frame};
+use crate::transport::{local, tcp, Conn};
+use anyhow::{Context, Result};
+
+/// Which transport carries the protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process mpsc channels.
+    Local,
+    /// Real TCP sockets on 127.0.0.1.
+    Tcp,
+}
+
+/// Outcome of a distributed run.
+pub struct DistOutcome {
+    pub history: History,
+    /// Final model on the master.
+    pub final_x: Vec<f64>,
+    /// Total uplink payload bytes actually sent over the transport.
+    pub uplink_frame_bytes: u64,
+}
+
+/// Worker event loop: first Model frame -> init, then Model -> round,
+/// until Stop.
+fn worker_loop(mut worker: Box<dyn WorkerNode>, conn: &mut dyn Conn) -> Result<()> {
+    let mut first = true;
+    loop {
+        let frame = decode(&conn.recv()?)?;
+        match frame {
+            Frame::Model(x) => {
+                let msg = if first {
+                    first = false;
+                    worker.init(&x)
+                } else {
+                    worker.round(&x)
+                };
+                let up = Frame::Up { msg, loss: worker.last_loss() };
+                conn.send(&encode(&up))?;
+            }
+            Frame::Stop => return Ok(()),
+            Frame::Up { .. } => anyhow::bail!("worker received Up frame"),
+        }
+    }
+}
+
+fn gather(conns: &mut [Box<dyn Conn>]) -> Result<(Vec<WireMsg>, Vec<f64>, u64)> {
+    let mut msgs = Vec::with_capacity(conns.len());
+    let mut losses = Vec::with_capacity(conns.len());
+    let mut bytes = 0u64;
+    for c in conns.iter_mut() {
+        let raw = c.recv()?;
+        bytes += raw.len() as u64;
+        match decode(&raw)? {
+            Frame::Up { msg, loss } => {
+                msgs.push(msg);
+                losses.push(loss);
+            }
+            _ => anyhow::bail!("master expected Up frame"),
+        }
+    }
+    Ok((msgs, losses, bytes))
+}
+
+/// Run the protocol with `make_worker(i)` constructed inside worker thread
+/// `i` (so workers never need to be `Send`-constructed on the main thread).
+pub fn run_distributed<F>(
+    mut master: Box<dyn MasterNode>,
+    n_workers: usize,
+    make_worker: F,
+    rounds: usize,
+    kind: TransportKind,
+    label: &str,
+) -> Result<DistOutcome>
+where
+    F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
+{
+    assert!(n_workers >= 1);
+    let make_worker = std::sync::Arc::new(make_worker);
+
+    // Wire up transports and spawn worker threads.
+    let mut master_conns: Vec<Box<dyn Conn>> = Vec::with_capacity(n_workers);
+    let mut handles = Vec::with_capacity(n_workers);
+    match kind {
+        TransportKind::Local => {
+            for i in 0..n_workers {
+                let (m_end, mut w_end) = local::pair();
+                master_conns.push(Box::new(m_end));
+                let mk = make_worker.clone();
+                handles.push(std::thread::spawn(move || {
+                    let worker = mk(i);
+                    worker_loop(worker, &mut w_end)
+                }));
+            }
+        }
+        TransportKind::Tcp => {
+            let (port, acceptor) = tcp::listen_local(n_workers)?;
+            for i in 0..n_workers {
+                let mk = make_worker.clone();
+                handles.push(std::thread::spawn(move || {
+                    // Stagger connects so accept order == worker order.
+                    std::thread::sleep(std::time::Duration::from_millis(5 * i as u64));
+                    let mut conn = tcp::TcpConn::connect(&format!("127.0.0.1:{port}"))?;
+                    // Identify ourselves first so the master can order us.
+                    conn.send(&(i as u32).to_le_bytes())?;
+                    let worker = mk(i);
+                    worker_loop(worker, &mut conn)
+                }));
+            }
+            // Order accepted conns by the announced worker id.
+            let conns = acceptor.join().expect("acceptor panicked")?;
+            let mut ordered: Vec<Option<tcp::TcpConn>> = (0..n_workers).map(|_| None).collect();
+            for mut c in conns {
+                let id_bytes = c.recv()?;
+                let id = u32::from_le_bytes(id_bytes[..4].try_into().unwrap()) as usize;
+                anyhow::ensure!(id < n_workers, "bad worker id {id}");
+                ordered[id] = Some(c);
+            }
+            for c in ordered {
+                master_conns.push(Box::new(c.context("missing worker connection")?));
+            }
+        }
+    }
+
+    let n = n_workers as f64;
+    let mut history = History::new(label.to_string());
+    let mut bits_cum = 0u64;
+    let mut frame_bytes = 0u64;
+
+    // Init phase.
+    let x0 = Frame::Model(master.x().to_vec());
+    let x0_bytes = encode(&x0);
+    for c in master_conns.iter_mut() {
+        c.send(&x0_bytes)?;
+    }
+    let (msgs, _losses, fb) = gather(&mut master_conns)?;
+    frame_bytes += fb;
+    bits_cum += msgs.iter().map(|m| m.bits()).sum::<u64>();
+    master.init_absorb(&msgs);
+
+    for t in 0..rounds {
+        let x = master.begin_round();
+        let bytes = encode(&Frame::Model(x));
+        for c in master_conns.iter_mut() {
+            c.send(&bytes)?;
+        }
+        let (msgs, losses, fb) = gather(&mut master_conns)?;
+        frame_bytes += fb;
+        bits_cum += msgs.iter().map(|m| m.bits()).sum::<u64>();
+        master.absorb(&msgs);
+        let loss = losses.iter().sum::<f64>() / n;
+        history.records.push(RoundRecord {
+            round: t,
+            bits_per_client: bits_cum as f64 / n,
+            loss,
+            grad_norm_sq: f64::NAN, // dense grads stay worker-local here
+            gt: f64::NAN,
+            dcgd_frac: f64::NAN,
+        });
+    }
+
+    // Shutdown.
+    let stop = encode(&Frame::Stop);
+    for c in master_conns.iter_mut() {
+        c.send(&stop)?;
+    }
+    for h in handles {
+        h.join().expect("worker thread panicked")?;
+    }
+
+    Ok(DistOutcome { history, final_x: master.x().to_vec(), uplink_frame_bytes: frame_bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::AlgoSpec;
+    use crate::compress::TopK;
+    use crate::oracle::GradOracle;
+    use std::sync::Arc;
+
+    fn quad(i: usize) -> Box<dyn GradOracle> {
+        Box::new(crate::oracle::quadratic::divergence_example().remove(i))
+    }
+
+    #[test]
+    fn local_transport_matches_sequential_runner() {
+        let gamma = 0.01;
+        let c: Arc<dyn crate::compress::Compressor> = Arc::new(TopK::new(1));
+        // Sequential reference.
+        let oracles: Vec<Box<dyn GradOracle>> = (0..3).map(quad).collect();
+        let (m, ws) = crate::algo::build(AlgoSpec::Ef21, vec![1.0; 3], oracles, c.clone(), gamma, 9);
+        let h_seq = crate::coordinator::runner::run_protocol(
+            m,
+            ws,
+            &crate::coordinator::runner::RunConfig::rounds(25),
+        );
+        // Distributed over local channels: same seeds, same construction.
+        let master = Box::new(crate::algo::ef21::Ef21Master::new(vec![1.0; 3], 3, gamma));
+        let c2 = c.clone();
+        let out = run_distributed(
+            master,
+            3,
+            move |i| {
+                let mut base = crate::util::rng::Rng::seed(9);
+                // Reproduce build()'s per-worker fork sequence.
+                let mut rng = base.fork(0);
+                for j in 1..=i {
+                    rng = base.fork(j as u64);
+                }
+                Box::new(crate::algo::ef21::Ef21Worker::new(quad(i), c2.clone(), rng))
+            },
+            25,
+            TransportKind::Local,
+            "dist",
+        )
+        .unwrap();
+        for (a, b) in h_seq.records.iter().zip(&out.history.records) {
+            // Wire precision is f32 (model broadcast + values), so the two
+            // trajectories agree to f32 rounding, not exactly.
+            assert!(
+                (a.loss - b.loss).abs() < 1e-4 * a.loss.abs().max(1.0),
+                "loss mismatch at {}: {} vs {}",
+                a.round,
+                a.loss,
+                b.loss
+            );
+            assert!(
+                (a.bits_per_client - b.bits_per_client).abs() < 1e-9,
+                "bits mismatch at {}",
+                a.round
+            );
+        }
+        assert!(out.uplink_frame_bytes > 0);
+    }
+}

@@ -1,0 +1,9 @@
+//! The coordinator: drives the master/worker round protocol, meters the
+//! uplink, records metrics, and (in [`dist`]) runs the same protocol over
+//! real transports with one thread per worker.
+
+pub mod dist;
+pub mod runner;
+
+pub use runner::{run_protocol, RunConfig};
+

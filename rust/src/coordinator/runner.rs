@@ -1,0 +1,227 @@
+//! In-process sequential runner — the fast simulation path used by the
+//! experiment sweeps. Protocol semantics are identical to the threaded
+//! transport runner ([`super::dist`]); equality of the two is an
+//! integration test.
+
+use crate::algo::{MasterNode, WireMsg, WorkerNode};
+use crate::metrics::{History, RoundRecord};
+use crate::util::linalg;
+
+/// Runner configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Number of communication rounds.
+    pub rounds: usize,
+    /// Record a metrics row every `record_every` rounds (1 = every round).
+    pub record_every: usize,
+    /// Early-stop when `||∇f||^2` drops below this (None = never).
+    pub grad_tol: Option<f64>,
+    /// Abort when the loss exceeds this (divergence guard; records the
+    /// blow-up and stops instead of looping on inf).
+    pub divergence_cap: f64,
+    /// Curve label for the history.
+    pub label: String,
+}
+
+impl RunConfig {
+    pub fn rounds(rounds: usize) -> Self {
+        RunConfig {
+            rounds,
+            record_every: 1,
+            grad_tol: None,
+            divergence_cap: 1e100,
+            label: String::new(),
+        }
+    }
+
+    pub fn with_label(mut self, label: impl Into<String>) -> Self {
+        self.label = label.into();
+        self
+    }
+
+    pub fn with_record_every(mut self, k: usize) -> Self {
+        self.record_every = k.max(1);
+        self
+    }
+
+    pub fn with_grad_tol(mut self, tol: f64) -> Self {
+        self.grad_tol = Some(tol);
+        self
+    }
+}
+
+/// Aggregate instrumentation across workers after a round.
+fn observe(workers: &[Box<dyn WorkerNode>]) -> (f64, f64, f64, f64) {
+    let n = workers.len();
+    let d = workers[0].last_grad().len();
+    let inv_n = 1.0 / n as f64;
+    let mut loss = 0.0;
+    let mut grad = vec![0.0; d];
+    let mut gt = 0.0;
+    let mut gt_any = false;
+    let mut dcgd = 0.0;
+    let mut dcgd_any = false;
+    for w in workers {
+        loss += w.last_loss() * inv_n;
+        linalg::axpy(inv_n, w.last_grad(), &mut grad);
+        if let Some(dsq) = w.distortion_sq() {
+            gt += dsq * inv_n;
+            gt_any = true;
+        }
+        if let Some(b) = w.used_dcgd_branch() {
+            dcgd += if b { inv_n } else { 0.0 };
+            dcgd_any = true;
+        }
+    }
+    (
+        loss,
+        linalg::norm2_sq(&grad),
+        if gt_any { gt } else { f64::NAN },
+        if dcgd_any { dcgd } else { f64::NAN },
+    )
+}
+
+/// Drive the full protocol: init, then `cfg.rounds` rounds, metering the
+/// uplink and recording metrics.
+pub fn run_protocol(
+    mut master: Box<dyn MasterNode>,
+    mut workers: Vec<Box<dyn WorkerNode>>,
+    cfg: &RunConfig,
+) -> History {
+    assert!(!workers.is_empty());
+    let n = workers.len() as f64;
+    let mut history = History::new(cfg.label.clone());
+    let mut bits_cum: u64 = 0;
+
+    // Init phase: g_i^0 / w_i^0 at x^0 (counted as communication).
+    let x0 = master.x().to_vec();
+    let msgs: Vec<WireMsg> = workers.iter_mut().map(|w| w.init(&x0)).collect();
+    bits_cum += msgs.iter().map(|m| m.bits()).sum::<u64>();
+    master.init_absorb(&msgs);
+
+    for t in 0..cfg.rounds {
+        let x = master.begin_round();
+        let msgs: Vec<WireMsg> = workers.iter_mut().map(|w| w.round(&x)).collect();
+        bits_cum += msgs.iter().map(|m| m.bits()).sum::<u64>();
+        master.absorb(&msgs);
+
+        let record_now = t % cfg.record_every == 0 || t + 1 == cfg.rounds;
+        if record_now || cfg.grad_tol.is_some() {
+            let (loss, grad_sq, gt, dcgd) = observe(&workers);
+            if record_now {
+                history.records.push(RoundRecord {
+                    round: t,
+                    bits_per_client: bits_cum as f64 / n,
+                    loss,
+                    grad_norm_sq: grad_sq,
+                    gt,
+                    dcgd_frac: dcgd,
+                });
+            }
+            if !loss.is_finite() || loss.abs() > cfg.divergence_cap {
+                // Record the blow-up and stop.
+                if !record_now {
+                    history.records.push(RoundRecord {
+                        round: t,
+                        bits_per_client: bits_cum as f64 / n,
+                        loss,
+                        grad_norm_sq: grad_sq,
+                        gt,
+                        dcgd_frac: dcgd,
+                    });
+                }
+                break;
+            }
+            if let Some(tol) = cfg.grad_tol {
+                if grad_sq <= tol {
+                    break;
+                }
+            }
+        }
+    }
+    history
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::AlgoSpec;
+    use crate::compress::TopK;
+    use crate::oracle::GradOracle;
+    use std::sync::Arc;
+
+    fn quads() -> Vec<Box<dyn GradOracle>> {
+        crate::oracle::quadratic::divergence_example()
+            .into_iter()
+            .map(|q| Box::new(q) as Box<dyn GradOracle>)
+            .collect()
+    }
+
+    #[test]
+    fn records_every_round_and_meters_bits() {
+        let (m, ws) = crate::algo::build(
+            AlgoSpec::Ef21,
+            vec![1.0; 3],
+            quads(),
+            Arc::new(TopK::new(1)),
+            0.01,
+            0,
+        );
+        let h = run_protocol(m, ws, &RunConfig::rounds(10));
+        assert_eq!(h.records.len(), 10);
+        // Each round: 3 workers x 1 entry x 64 bits / 3 workers = 64 bits;
+        // plus the init round's 64.
+        assert!((h.records[0].bits_per_client - 128.0).abs() < 1e-9);
+        assert!((h.records[9].bits_per_client - 64.0 * 11.0).abs() < 1e-9);
+        // G^t must be populated for EF21.
+        assert!(h.records[0].gt.is_finite());
+    }
+
+    #[test]
+    fn record_every_subsamples_but_keeps_last() {
+        let (m, ws) = crate::algo::build(
+            AlgoSpec::Ef21,
+            vec![1.0; 3],
+            quads(),
+            Arc::new(TopK::new(1)),
+            0.01,
+            0,
+        );
+        let h = run_protocol(m, ws, &RunConfig::rounds(10).with_record_every(4));
+        let rounds: Vec<usize> = h.records.iter().map(|r| r.round).collect();
+        assert_eq!(rounds, vec![0, 4, 8, 9]);
+    }
+
+    #[test]
+    fn early_stop_on_grad_tol() {
+        let gamma = crate::theory::stepsize_theorem1(16.0, 16.0, 1.0 / 3.0);
+        let (m, ws) = crate::algo::build(
+            AlgoSpec::Ef21,
+            vec![1.0; 3],
+            quads(),
+            Arc::new(TopK::new(1)),
+            gamma,
+            0,
+        );
+        let h = run_protocol(m, ws, &RunConfig::rounds(100_000).with_grad_tol(1e-10));
+        assert!(h.records.last().unwrap().round < 99_999, "tolerance never hit");
+        assert!(h.final_grad_norm_sq() <= 1e-10);
+    }
+
+    #[test]
+    fn divergence_guard_stops_blowups() {
+        // DCGD with an insane stepsize blows up; runner must stop early.
+        let (m, ws) = crate::algo::build(
+            AlgoSpec::Dcgd,
+            vec![1.0; 3],
+            quads(),
+            Arc::new(TopK::new(1)),
+            10.0,
+            0,
+        );
+        let mut cfg = RunConfig::rounds(100_000);
+        cfg.divergence_cap = 1e50;
+        let h = run_protocol(m, ws, &cfg);
+        assert!(h.records.last().unwrap().round < 99_999);
+    }
+}

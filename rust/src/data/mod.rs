@@ -1,0 +1,92 @@
+//! Dataset substrate: LibSVM parsing, Table-3 synthetic generators, and the
+//! paper's 20-way heterogeneous contiguous partitioning (§5.1).
+
+pub mod libsvm;
+pub mod partition;
+pub mod synth;
+
+/// Dense row-major binary-classification dataset (features f32, labels ±1).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// Row-major n x d feature matrix.
+    pub a: Vec<f32>,
+    /// Labels in {-1, +1} (or regression targets for least squares).
+    pub y: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, a: Vec<f32>, y: Vec<f32>, n: usize, d: usize) -> Self {
+        assert_eq!(a.len(), n * d);
+        assert_eq!(y.len(), n);
+        Dataset { name: name.into(), a, y, n, d }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.a[i * self.d..(i + 1) * self.d]
+    }
+
+    /// View of a contiguous row range as a borrowed shard.
+    pub fn slice(&self, start: usize, len: usize) -> Shard<'_> {
+        assert!(start + len <= self.n);
+        Shard {
+            a: &self.a[start * self.d..(start + len) * self.d],
+            y: &self.y[start..start + len],
+            n: len,
+            d: self.d,
+        }
+    }
+}
+
+/// Borrowed view of a contiguous block of rows — one worker's local data.
+#[derive(Clone, Copy, Debug)]
+pub struct Shard<'a> {
+    pub a: &'a [f32],
+    pub y: &'a [f32],
+    pub n: usize,
+    pub d: usize,
+}
+
+impl<'a> Shard<'a> {
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.a[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Owned copy (used to move shard data into worker threads).
+    pub fn to_owned_parts(&self) -> (Vec<f32>, Vec<f32>) {
+        (self.a.to_vec(), self.y.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            "tiny",
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            vec![1.0, -1.0, 1.0],
+            3,
+            2,
+        )
+    }
+
+    #[test]
+    fn rows_and_slices() {
+        let ds = tiny();
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        let sh = ds.slice(1, 2);
+        assert_eq!(sh.n, 2);
+        assert_eq!(sh.row(0), &[3.0, 4.0]);
+        assert_eq!(sh.y, &[-1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn slice_out_of_bounds_panics() {
+        tiny().slice(2, 2);
+    }
+}

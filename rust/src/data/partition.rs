@@ -1,0 +1,78 @@
+//! The paper's data partitioning (§5.1): contiguous split into `n` equal
+//! parts of size floor(N/n); the remainder rows are assigned to the LAST
+//! worker, making it slightly larger ("the last part, of size
+//! N - 20*floor(N/20), was assigned to the last worker").
+
+use super::{Dataset, Shard};
+
+/// Row ranges [(start, len); n_workers] of the paper's split.
+pub fn ranges(n_total: usize, n_workers: usize) -> Vec<(usize, usize)> {
+    assert!(n_workers >= 1);
+    assert!(n_total >= n_workers, "need at least one row per worker");
+    let base = n_total / n_workers;
+    let mut out = Vec::with_capacity(n_workers);
+    for w in 0..n_workers {
+        let start = w * base;
+        let len = if w + 1 == n_workers { n_total - start } else { base };
+        out.push((start, len));
+    }
+    out
+}
+
+/// Borrowing shards view of a dataset under the paper's split.
+pub fn shards<'a>(ds: &'a Dataset, n_workers: usize) -> Vec<Shard<'a>> {
+    ranges(ds.n, n_workers)
+        .into_iter()
+        .map(|(s, l)| ds.slice(s, l))
+        .collect()
+}
+
+/// The largest shard size (drives the padded AOT artifact shape).
+pub fn max_shard_rows(n_total: usize, n_workers: usize) -> usize {
+    n_total / n_workers + n_total % n_workers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn covers_all_rows_disjointly() {
+        for (n, w) in [(100usize, 20usize), (101, 20), (119, 20), (11_055, 20), (7, 3)] {
+            let r = ranges(n, w);
+            assert_eq!(r.len(), w);
+            let mut next = 0;
+            for (start, len) in &r {
+                assert_eq!(*start, next);
+                assert!(*len > 0);
+                next = start + len;
+            }
+            assert_eq!(next, n);
+        }
+    }
+
+    #[test]
+    fn remainder_goes_to_last_worker() {
+        let r = ranges(11_055, 20);
+        assert_eq!(r[0].1, 552);
+        assert_eq!(r[19].1, 552 + 15);
+        assert_eq!(max_shard_rows(11_055, 20), 567);
+    }
+
+    #[test]
+    fn shard_views_match_dataset_rows() {
+        let ds = synth::generate_custom("p", 103, 5, 0.5, 1);
+        let sh = shards(&ds, 4);
+        assert_eq!(sh.len(), 4);
+        assert_eq!(sh[3].n, 25 + 3);
+        // Row 0 of shard 2 == row 50 of the dataset.
+        assert_eq!(sh[2].row(0), ds.row(50));
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_workers_panics() {
+        ranges(3, 5);
+    }
+}

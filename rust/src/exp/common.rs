@@ -1,0 +1,184 @@
+//! Shared experiment plumbing: problem construction (dataset + shards +
+//! smoothness/PL constants) and single-trial execution with theory-derived
+//! stepsizes, exactly as §5 does ("stepsize set to a multiple of the
+//! largest stepsize predicted by our theory").
+
+use crate::algo::AlgoSpec;
+use crate::compress;
+use crate::coordinator::runner::{run_protocol, RunConfig};
+use crate::data::{partition, synth, Dataset};
+use crate::metrics::History;
+use crate::oracle::{GradOracle, LogRegOracle, LstsqOracle};
+use crate::theory::{self, Smoothness};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Which objective family (paper §5 vs §A.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Nonconvex-regularized logistic regression, Eq. (19).
+    LogReg,
+    /// Least squares (PL), §A.2.
+    Lstsq,
+}
+
+/// A fully-prepared distributed problem instance.
+pub struct Problem {
+    pub dataset: Dataset,
+    pub objective: Objective,
+    pub n_workers: usize,
+    pub lam: f64,
+    pub smoothness: Smoothness,
+    /// PL constant (least squares only).
+    pub mu: Option<f64>,
+}
+
+impl Problem {
+    /// Build a problem over a (real or synthetic) Table-3 dataset, compute
+    /// per-shard smoothness constants, and (for least squares) the PL
+    /// constant.
+    pub fn new(name: &str, objective: Objective, n_workers: usize, lam: f64, seed: u64) -> Problem {
+        let dataset = synth::load_or_generate(name, &PathBuf::from("data"), seed);
+        Self::from_dataset(dataset, objective, n_workers, lam)
+    }
+
+    pub fn from_dataset(
+        dataset: Dataset,
+        objective: Objective,
+        n_workers: usize,
+        lam: f64,
+    ) -> Problem {
+        let shards = partition::shards(&dataset, n_workers);
+        let l_i: Vec<f64> = shards
+            .iter()
+            .map(|s| match objective {
+                Objective::LogReg => theory::logreg_l(s.a, s.n, s.d, lam),
+                Objective::Lstsq => theory::lstsq_l(s.a, s.n, s.d),
+            })
+            .collect();
+        // Global L from the full matrix (tighter than mean of L_i).
+        let l_full = match objective {
+            Objective::LogReg => theory::logreg_l(&dataset.a, dataset.n, dataset.d, lam),
+            Objective::Lstsq => theory::lstsq_l(&dataset.a, dataset.n, dataset.d),
+        };
+        let smoothness = Smoothness::from_l_i(l_i, l_full);
+        let mu = match objective {
+            Objective::Lstsq => {
+                Some(theory::lstsq_pl_mu(&dataset.a, dataset.n, dataset.d))
+            }
+            Objective::LogReg => None,
+        };
+        Problem { dataset, objective, n_workers, lam, smoothness, mu }
+    }
+
+    pub fn d(&self) -> usize {
+        self.dataset.d
+    }
+
+    /// Fresh per-worker oracles (pure-Rust backend).
+    pub fn oracles(&self) -> Vec<Box<dyn GradOracle>> {
+        partition::shards(&self.dataset, self.n_workers)
+            .into_iter()
+            .map(|s| match self.objective {
+                Objective::LogReg => {
+                    Box::new(LogRegOracle::new(s, self.lam)) as Box<dyn GradOracle>
+                }
+                Objective::Lstsq => Box::new(LstsqOracle::new(s)) as Box<dyn GradOracle>,
+            })
+            .collect()
+    }
+
+    /// The largest theory-predicted stepsize for a compressor with
+    /// contraction `alpha` (Theorem 1, or Theorem 2 when PL applies).
+    pub fn theory_gamma(&self, alpha: f64) -> f64 {
+        match (self.objective, self.mu) {
+            (Objective::Lstsq, Some(mu)) if mu > 0.0 => {
+                theory::stepsize_theorem2(self.smoothness.l, self.smoothness.l_tilde, alpha, mu)
+            }
+            _ => theory::stepsize_theorem1(self.smoothness.l, self.smoothness.l_tilde, alpha),
+        }
+    }
+
+    /// Run one trial: `algo` with compressor `comp_spec`, stepsize =
+    /// `gamma_mult x` theory (or `gamma_abs` if given).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_trial(
+        &self,
+        algo: AlgoSpec,
+        comp_spec: &str,
+        gamma_mult: f64,
+        gamma_abs: Option<f64>,
+        rounds: usize,
+        record_every: usize,
+        seed: u64,
+    ) -> History {
+        let c: Arc<dyn compress::Compressor> =
+            Arc::from(compress::from_spec(comp_spec).expect("compressor spec"));
+        let alpha = c.alpha(self.d());
+        let gamma = gamma_abs.unwrap_or_else(|| gamma_mult * self.theory_gamma(alpha));
+        let x0 = vec![0.0; self.d()];
+        let (master, workers) = crate::algo::build(algo, x0, self.oracles(), c, gamma, seed);
+        let label = format!("{} {} {gamma_mult}x", algo.name(), comp_spec);
+        let mut cfg = RunConfig::rounds(rounds)
+            .with_label(label)
+            .with_record_every(record_every);
+        cfg.divergence_cap = 1e60;
+        run_protocol(master, workers, &cfg)
+    }
+}
+
+/// Results directory (override with $EF21_RESULTS).
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("EF21_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+/// Standard stepsize-multiplier ladder used across the stepsize-tolerance
+/// experiments (powers of two, as in §A.1.1).
+pub fn mult_ladder(max_pow: u32) -> Vec<f64> {
+    (0..=max_pow).map(|p| (1u64 << p) as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_problem(obj: Objective) -> Problem {
+        let ds = synth::generate_custom("tiny", 400, 12, 0.4, 3);
+        Problem::from_dataset(ds, obj, 4, 0.1)
+    }
+
+    #[test]
+    fn constants_are_positive_and_consistent() {
+        let p = tiny_problem(Objective::LogReg);
+        assert_eq!(p.smoothness.l_i.len(), 4);
+        assert!(p.smoothness.l > 0.0);
+        assert!(p.smoothness.l_tilde >= p.smoothness.l_i.iter().sum::<f64>() / 4.0 - 1e-9);
+        assert!(p.mu.is_none());
+        let pl = tiny_problem(Objective::Lstsq);
+        assert!(pl.mu.unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn theory_gamma_monotone_in_alpha() {
+        let p = tiny_problem(Objective::LogReg);
+        assert!(p.theory_gamma(0.05) < p.theory_gamma(0.5));
+        assert!(p.theory_gamma(1.0) > 0.0);
+    }
+
+    #[test]
+    fn trial_runs_and_converges_toward_stationarity() {
+        let p = tiny_problem(Objective::LogReg);
+        let h = p.run_trial(crate::algo::AlgoSpec::Ef21, "top1", 1.0, None, 400, 10, 0);
+        assert!(!h.diverged());
+        let first = h.records.first().unwrap().grad_norm_sq;
+        let last = h.records.last().unwrap().grad_norm_sq;
+        assert!(last < first, "no progress: {first} -> {last}");
+    }
+
+    #[test]
+    fn mult_ladder_is_powers_of_two() {
+        assert_eq!(mult_ladder(3), vec![1.0, 2.0, 4.0, 8.0]);
+    }
+}

@@ -1,0 +1,97 @@
+//! Figure 7 — effect of the Top-k parameter k on communication efficiency
+//! (tuned stepsize per k). Paper's finding: small k (1, 2, 4) is the most
+//! bits-efficient; k = d (GD-like) is the worst.
+
+use super::common::{results_dir, Objective, Problem};
+use crate::algo::AlgoSpec;
+use crate::metrics::FigureData;
+
+pub struct KdepCfg {
+    pub dataset: String,
+    pub rounds: usize,
+    pub ks: Vec<usize>,
+    pub mults: Vec<f64>,
+    pub n_workers: usize,
+    pub seed: u64,
+}
+
+impl Default for KdepCfg {
+    fn default() -> Self {
+        KdepCfg {
+            dataset: "a9a".into(),
+            rounds: 1500,
+            ks: vec![1, 2, 4, 8, 32],
+            mults: vec![1.0, 4.0, 16.0],
+            n_workers: 20,
+            seed: 0,
+        }
+    }
+}
+
+pub fn run(cfg: &KdepCfg) -> FigureData {
+    let problem =
+        Problem::new(&cfg.dataset, Objective::LogReg, cfg.n_workers, 0.1, cfg.seed);
+    let record_every = (cfg.rounds / 300).max(1);
+    let mut fig = FigureData::new(format!("kdep_{}", cfg.dataset));
+    let mut ks = cfg.ks.clone();
+    ks.push(problem.d()); // k = d reference
+    for k in ks {
+        let k = k.min(problem.d());
+        // Tune the multiplier by final gradient norm.
+        let mut best: Option<crate::metrics::History> = None;
+        for &m in &cfg.mults {
+            let mut h = problem.run_trial(
+                AlgoSpec::Ef21,
+                &format!("top{k}"),
+                m,
+                None,
+                cfg.rounds,
+                record_every,
+                cfg.seed,
+            );
+            h.label = format!("EF21 top{k} {m}x");
+            let better = best
+                .as_ref()
+                .map(|b| h.final_grad_norm_sq() < b.final_grad_norm_sq() && !h.diverged())
+                .unwrap_or(true);
+            if better {
+                best = Some(h);
+            }
+        }
+        fig.push(best.unwrap());
+    }
+    fig
+}
+
+pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
+    let cfg = KdepCfg {
+        dataset: args.get_str("dataset").unwrap_or("a9a").to_string(),
+        rounds: args.get_parse("rounds")?.unwrap_or(1500),
+        ..Default::default()
+    };
+    let fig = run(&cfg);
+    fig.print_summary();
+    fig.write_dir(&results_dir())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    /// Small k reaches a given tolerance with fewer bits than k = d.
+    #[test]
+    fn small_k_is_more_bit_efficient_than_full() {
+        let ds = synth::generate_custom("kd", 500, 16, 0.4, 7);
+        let p = Problem::from_dataset(ds, Objective::LogReg, 4, 0.1);
+        let tol = 1e-5;
+        let h_small = p.run_trial(AlgoSpec::Ef21, "top2", 4.0, None, 4000, 5, 0);
+        let h_full = p.run_trial(AlgoSpec::Ef21, "top16", 1.0, None, 4000, 5, 0);
+        let (bs, bf) = (h_small.bits_to_tolerance(tol), h_full.bits_to_tolerance(tol));
+        assert!(bs.is_some(), "top2 never converged");
+        if let (Some(bs), Some(bf)) = (bs, bf) {
+            assert!(bs < bf, "top2 {bs:.3e} bits !< top-d {bf:.3e} bits");
+        }
+    }
+}

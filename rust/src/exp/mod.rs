@@ -1,0 +1,14 @@
+//! Experiment harness: one module per paper figure/table (see DESIGN.md §5
+//! for the full index). Each driver regenerates the corresponding series
+//! as CSV curves under `results/` plus a console summary.
+
+pub mod common;
+pub mod dl;
+pub mod finetune;
+pub mod gdtune;
+pub mod kdep;
+pub mod lstsq;
+pub mod rates;
+pub mod stepsize;
+
+pub use common::{Objective, Problem};

@@ -1,0 +1,74 @@
+//! # ef21 — a Rust+JAX+Pallas reproduction of EF21
+//!
+//! *EF21: A New, Simpler, Theoretically Better, and Practically Faster
+//! Error Feedback* (Richtárik, Sokolov, Fatkhullin; NeurIPS 2021).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!   * **L3 (this crate)** — distributed coordinator: master/worker round
+//!     protocol, compressors with exact bit accounting, the EF21 family of
+//!     algorithms and its baselines, transports, datasets, metrics, and the
+//!     experiment harness regenerating every figure in the paper.
+//!   * **L2 (`python/compile/model.py`)** — JAX compute graphs (logistic
+//!     regression, least squares, a small transformer LM), AOT-lowered to
+//!     HLO text once at build time.
+//!   * **L1 (`python/compile/kernels/`)** — Pallas kernels for the
+//!     per-worker gradient hot spot, embedded in the L2 artifacts.
+//!
+//! Python never runs at request time: the [`runtime`] module loads the
+//! artifacts via PJRT and [`oracle::xla`] exposes them as gradient oracles.
+//!
+//! Quick start (simulated 20-node EF21 on a Table-3 dataset):
+//!
+//! ```no_run
+//! use ef21::prelude::*;
+//! use std::sync::Arc;
+//!
+//! let ds = ef21::data::synth::generate("a9a", 0);
+//! let shards = ef21::data::partition::shards(&ds, 20);
+//! let lam = 0.1;
+//! let oracles: Vec<Box<dyn GradOracle>> = shards
+//!     .iter()
+//!     .map(|s| Box::new(LogRegOracle::new(*s, lam)) as Box<dyn GradOracle>)
+//!     .collect();
+//! let l_i: Vec<f64> = shards
+//!     .iter()
+//!     .map(|s| ef21::theory::logreg_l(s.a, s.n, s.d, lam))
+//!     .collect();
+//! let sm = ef21::theory::Smoothness::from_l_i_mean(l_i);
+//! let gamma = ef21::theory::stepsize_theorem1(sm.l, sm.l_tilde, 1.0 / ds.d as f64);
+//! let (master, workers) = ef21::algo::build(
+//!     AlgoSpec::Ef21,
+//!     vec![0.0; ds.d],
+//!     oracles,
+//!     Arc::new(TopK::new(1)),
+//!     gamma,
+//!     0,
+//! );
+//! let history = run_protocol(master, workers, &RunConfig::rounds(1000));
+//! println!("final ||grad||^2 = {:.3e}", history.final_grad_norm_sq());
+//! ```
+
+pub mod algo;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod nn;
+pub mod oracle;
+pub mod runtime;
+pub mod theory;
+pub mod transport;
+pub mod util;
+
+/// Convenience re-exports for the common simulation workflow.
+pub mod prelude {
+    pub use crate::algo::{AlgoSpec, MasterNode, WireMsg, WorkerNode};
+    pub use crate::compress::{Compressor, Identity, Markov, RandK, ScaledSign, SparseVec, TopK};
+    pub use crate::coordinator::runner::{run_protocol, RunConfig};
+    pub use crate::data::Dataset;
+    pub use crate::metrics::{FigureData, History};
+    pub use crate::oracle::{GradOracle, LogRegOracle, LstsqOracle, QuadraticOracle};
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,230 @@
+//! `ef21` launcher: run single training jobs, the paper's experiment
+//! suite, or inspect datasets/artifacts.
+//!
+//! ```text
+//! ef21 run   [--algo ef21|ef21+|ef|dcgd|gd] [--k 1 | --compressor top1]
+//!            [--dataset a9a] [--workers 20] [--gamma-mult 1] [--rounds N]
+//!            [--objective logreg|lstsq] [--csv out.csv] [--transport local|tcp]
+//! ef21 exp   <stepsize|finetune|kdep|gdtune|lstsq|rates|dl> [flags...]
+//! ef21 data  info
+//! ef21 artifacts [--dir artifacts]
+//! ```
+
+use anyhow::Result;
+use ef21::config::cli::Args;
+use ef21::config::RunSpec;
+use ef21::exp;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(args),
+        Some("exp") => cmd_exp(args),
+        Some("data") => cmd_data(args),
+        Some("artifacts") => cmd_artifacts(args),
+        _ => {
+            eprintln!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+ef21 — EF21 (NeurIPS 2021) reproduction
+
+USAGE:
+  ef21 run  [--algo A] [--k K] [--dataset D] [--workers N] [--gamma-mult M]
+            [--rounds T] [--objective logreg|lstsq] [--csv FILE]
+            [--transport local|tcp]
+  ef21 exp  stepsize [--dataset D] [--k K] [--max-pow P] [--rounds T] [--all]
+  ef21 exp  finetune [--dataset D] [--rounds T] [--tol X]
+  ef21 exp  kdep     [--dataset D] [--rounds T]
+  ef21 exp  gdtune   [--dataset D] [--rounds T] [--max-pow P]
+  ef21 exp  lstsq    [--dataset D] [--k K] [--max-pow P] [--rounds T]
+  ef21 exp  rates    [--rounds T]
+  ef21 exp  dl       [--steps N] [--workers W] [--k-frac F] [--sweep-k]
+  ef21 data info
+  ef21 artifacts
+";
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let spec = RunSpec::from_args(args)?;
+    let objective = match args.get_str("objective").unwrap_or("logreg") {
+        "lstsq" => exp::Objective::Lstsq,
+        _ => exp::Objective::LogReg,
+    };
+    let problem =
+        exp::Problem::new(&spec.dataset, objective, spec.n_workers, spec.lam, spec.seed);
+    let c = ef21::compress::from_spec(&spec.compressor)?;
+    let alpha = c.alpha(problem.d());
+    let gamma = spec
+        .gamma_abs
+        .unwrap_or_else(|| spec.gamma_mult * problem.theory_gamma(alpha));
+    println!(
+        "{} on {} ({} workers, d={}): L={:.4} Ltilde={:.4} alpha={:.4} gamma={:.5e}",
+        spec.algo.name(),
+        spec.dataset,
+        spec.n_workers,
+        problem.d(),
+        problem.smoothness.l,
+        problem.smoothness.l_tilde,
+        alpha,
+        gamma
+    );
+
+    let transport = args.get_str("transport").unwrap_or("sim");
+    let history = if transport == "sim" {
+        problem.run_trial(
+            spec.algo,
+            &spec.compressor,
+            spec.gamma_mult,
+            spec.gamma_abs,
+            spec.rounds,
+            spec.record_every,
+            spec.seed,
+        )
+    } else {
+        run_over_transport(&problem, &spec, gamma, transport)?
+    };
+
+    let last = history.records.last().expect("no rounds recorded");
+    println!(
+        "rounds={} bits/client={:.3e} f={:.6e} |grad|^2={:.3e} diverged={}",
+        last.round + 1,
+        last.bits_per_client,
+        last.loss,
+        last.grad_norm_sq,
+        history.diverged()
+    );
+    if let Some(csv) = args.get_str("csv") {
+        history.write_csv(std::path::Path::new(csv))?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+/// Run over a real transport (threaded workers + local channels or TCP).
+fn run_over_transport(
+    problem: &exp::Problem,
+    spec: &RunSpec,
+    gamma: f64,
+    transport: &str,
+) -> Result<ef21::metrics::History> {
+    use ef21::coordinator::dist::{run_distributed, TransportKind};
+    let kind = match transport {
+        "tcp" => TransportKind::Tcp,
+        "local" => TransportKind::Local,
+        other => anyhow::bail!("unknown transport '{other}' (sim|local|tcp)"),
+    };
+    anyhow::ensure!(
+        spec.algo == ef21::algo::AlgoSpec::Ef21,
+        "transport mode currently drives EF21 (the paper's method)"
+    );
+    // Move owned shard data into the worker factory.
+    let shards: Vec<(Vec<f32>, Vec<f32>, usize, usize)> =
+        ef21::data::partition::shards(&problem.dataset, problem.n_workers)
+            .into_iter()
+            .map(|s| (s.a.to_vec(), s.y.to_vec(), s.n, s.d))
+            .collect();
+    let lam = problem.lam;
+    let comp = spec.compressor.clone();
+    let seed = spec.seed;
+    let objective = problem.objective;
+    let master = Box::new(ef21::algo::ef21::Ef21Master::new(
+        vec![0.0; problem.d()],
+        problem.n_workers,
+        gamma,
+    ));
+    let out = run_distributed(
+        master,
+        problem.n_workers,
+        move |i| {
+            let (a, y, n, d) = shards[i].clone();
+            let oracle: Box<dyn ef21::oracle::GradOracle> = match objective {
+                exp::Objective::LogReg => {
+                    Box::new(ef21::oracle::LogRegOracle::from_parts(a, y, n, d, lam))
+                }
+                exp::Objective::Lstsq => {
+                    Box::new(ef21::oracle::LstsqOracle::from_parts(a, y, n, d))
+                }
+            };
+            let c: std::sync::Arc<dyn ef21::compress::Compressor> =
+                std::sync::Arc::from(ef21::compress::from_spec(&comp).expect("compressor"));
+            let mut base = ef21::util::rng::Rng::seed(seed);
+            let mut rng = base.fork(0);
+            for j in 1..=i {
+                rng = base.fork(j as u64);
+            }
+            Box::new(ef21::algo::ef21::Ef21Worker::new(oracle, c, rng))
+        },
+        spec.rounds,
+        kind,
+        &spec.label(),
+    )?;
+    println!(
+        "transport={transport}: {} uplink frame bytes",
+        out.uplink_frame_bytes
+    );
+    Ok(out.history)
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    match args.pos(1, "experiment")? {
+        "stepsize" => exp::stepsize::main(args),
+        "finetune" => exp::finetune::main(args),
+        "kdep" => exp::kdep::main(args),
+        "gdtune" => exp::gdtune::main(args),
+        "lstsq" => exp::lstsq::main(args),
+        "rates" => exp::rates::main(args),
+        "dl" => exp::dl::main(args),
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+}
+
+fn cmd_data(args: &Args) -> Result<()> {
+    if args.pos(1, "subcommand")? != "info" {
+        anyhow::bail!("usage: ef21 data info");
+    }
+    println!(
+        "{:<12} {:>8} {:>6} {:>10} {:>10} {:>8}",
+        "dataset", "N", "d", "N_i", "N_last", "pos%"
+    );
+    for (name, ..) in ef21::data::synth::TABLE3 {
+        let ds = ef21::data::synth::generate(name, 0);
+        let ranges = ef21::data::partition::ranges(ds.n, 20);
+        let pos = ds.y.iter().filter(|&&v| v == 1.0).count() as f64 / ds.n as f64;
+        println!(
+            "{:<12} {:>8} {:>6} {:>10} {:>10} {:>7.1}%",
+            name,
+            ds.n,
+            ds.d,
+            ranges[0].1,
+            ranges[19].1,
+            100.0 * pos
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(_args: &Args) -> Result<()> {
+    let rt = ef21::runtime::Runtime::from_default_dir()?;
+    println!("platform: {}", rt.platform());
+    println!("{:<28} {:>8} {:>8}  file", "artifact", "inputs", "outputs");
+    for (name, e) in &rt.manifest.entries {
+        println!(
+            "{:<28} {:>8} {:>8}  {}",
+            name,
+            e.inputs.len(),
+            e.outputs.len(),
+            e.file.file_name().unwrap().to_string_lossy()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! Metrics: per-round records, run history, and CSV/JSONL sinks. Every
+//! paper figure is regenerated from these histories.
+
+use std::io::Write;
+use std::path::Path;
+
+/// One recorded round. All quantities refer to the state after the round's
+/// master step (i.e. at `x^{t+1}`), evaluated through the instrumentation
+/// path (NOT counted as communication).
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    /// Round index t (0-based).
+    pub round: usize,
+    /// Cumulative uplink bits per client (the paper's x-axis, `bits/n`).
+    pub bits_per_client: f64,
+    /// f(x) = average of worker losses.
+    pub loss: f64,
+    /// ||∇f(x)||^2 (squared norm of the averaged worker gradients).
+    pub grad_norm_sq: f64,
+    /// G^t = (1/n) Σ ||g_i - ∇f_i||^2 (EF21 family; NaN otherwise).
+    pub gt: f64,
+    /// Fraction of workers that used the DCGD branch (EF21+; NaN otherwise).
+    pub dcgd_frac: f64,
+}
+
+/// History of one run (one curve in a figure).
+#[derive(Clone, Debug)]
+pub struct History {
+    /// Label, e.g. "EF21 top1 4x".
+    pub label: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl History {
+    pub fn new(label: impl Into<String>) -> Self {
+        History { label: label.into(), records: Vec::new() }
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.records.last().map(|r| r.loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_grad_norm_sq(&self) -> f64 {
+        self.records.last().map(|r| r.grad_norm_sq).unwrap_or(f64::NAN)
+    }
+
+    /// Best (minimum) squared gradient norm along the run.
+    pub fn best_grad_norm_sq(&self) -> f64 {
+        self.records.iter().map(|r| r.grad_norm_sq).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Did the run blow up (NaN/inf loss) at any point?
+    pub fn diverged(&self) -> bool {
+        self.records.iter().any(|r| !r.loss.is_finite())
+    }
+
+    /// Bits/client needed to first reach `||∇f||^2 <= tol`; None if never.
+    pub fn bits_to_tolerance(&self, tol: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.grad_norm_sq <= tol)
+            .map(|r| r.bits_per_client)
+    }
+
+    /// Rounds needed to first reach `||∇f||^2 <= tol`; None if never.
+    pub fn rounds_to_tolerance(&self, tol: f64) -> Option<usize> {
+        self.records.iter().find(|r| r.grad_norm_sq <= tol).map(|r| r.round)
+    }
+
+    /// Write as CSV: round,bits_per_client,loss,grad_norm_sq,gt,dcgd_frac.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "round,bits_per_client,loss,grad_norm_sq,gt,dcgd_frac")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{},{},{},{},{}",
+                r.round, r.bits_per_client, r.loss, r.grad_norm_sq, r.gt, r.dcgd_frac
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// A set of histories (one figure); writes one CSV per curve plus an
+/// index file.
+pub struct FigureData {
+    pub name: String,
+    pub curves: Vec<History>,
+}
+
+impl FigureData {
+    pub fn new(name: impl Into<String>) -> Self {
+        FigureData { name: name.into(), curves: Vec::new() }
+    }
+
+    pub fn push(&mut self, h: History) {
+        self.curves.push(h);
+    }
+
+    pub fn write_dir(&self, dir: &Path) -> std::io::Result<()> {
+        let sub = dir.join(&self.name);
+        std::fs::create_dir_all(&sub)?;
+        let mut idx = std::io::BufWriter::new(std::fs::File::create(sub.join("index.txt"))?);
+        for (i, h) in self.curves.iter().enumerate() {
+            let fname = format!("curve_{i:02}.csv");
+            h.write_csv(&sub.join(&fname))?;
+            writeln!(idx, "{fname}\t{}", h.label)?;
+        }
+        Ok(())
+    }
+
+    /// Console summary: one row per curve.
+    pub fn print_summary(&self) {
+        println!("== {} ==", self.name);
+        println!(
+            "{:<34} {:>12} {:>12} {:>14} {:>10}",
+            "curve", "final f", "final |g|^2", "bits/n@1e-6", "diverged"
+        );
+        for h in &self.curves {
+            let b = h
+                .bits_to_tolerance(1e-6)
+                .map(|b| format!("{b:.3e}"))
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "{:<34} {:>12.4e} {:>12.4e} {:>14} {:>10}",
+                h.label,
+                h.final_loss(),
+                h.final_grad_norm_sq(),
+                b,
+                h.diverged()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, bits: f64, loss: f64, g2: f64) -> RoundRecord {
+        RoundRecord { round, bits_per_client: bits, loss, grad_norm_sq: g2, gt: f64::NAN, dcgd_frac: f64::NAN }
+    }
+
+    #[test]
+    fn tolerance_queries() {
+        let mut h = History::new("x");
+        h.records.push(rec(0, 64.0, 1.0, 1e-2));
+        h.records.push(rec(1, 128.0, 0.5, 1e-5));
+        h.records.push(rec(2, 192.0, 0.2, 1e-8));
+        assert_eq!(h.bits_to_tolerance(1e-5), Some(128.0));
+        assert_eq!(h.rounds_to_tolerance(1e-8), Some(2));
+        assert_eq!(h.bits_to_tolerance(1e-12), None);
+        assert!(!h.diverged());
+        assert_eq!(h.final_loss(), 0.2);
+        assert_eq!(h.best_grad_norm_sq(), 1e-8);
+    }
+
+    #[test]
+    fn divergence_detection() {
+        let mut h = History::new("x");
+        h.records.push(rec(0, 1.0, f64::NAN, 1.0));
+        assert!(h.diverged());
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join(format!("ef21_metrics_{}", std::process::id()));
+        let mut h = History::new("c");
+        h.records.push(rec(0, 64.0, 1.0, 0.1));
+        let path = dir.join("h.csv");
+        h.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("round,bits_per_client"));
+        assert_eq!(text.lines().count(), 2);
+        let mut fig = FigureData::new("fig_test");
+        fig.push(h);
+        fig.write_dir(&dir).unwrap();
+        assert!(dir.join("fig_test/curve_00.csv").exists());
+        assert!(dir.join("fig_test/index.txt").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

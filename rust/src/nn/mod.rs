@@ -1,0 +1,121 @@
+//! Neural-network support for the DL experiment (§A.3 substitute): flat
+//! parameter initialization mirroring the L2 transformer layout, and the
+//! synthetic token corpus the workers train on.
+
+pub mod tokens;
+
+use crate::runtime::ArtifactEntry;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+
+/// Parameter layout read back from the artifact manifest
+/// (`meta.param_shapes` as written by `python/compile/aot.py`).
+#[derive(Clone, Debug)]
+pub struct ParamLayout {
+    /// (name, shape) in flat-vector order.
+    pub shapes: Vec<(String, Vec<usize>)>,
+    pub n_params: usize,
+}
+
+impl ParamLayout {
+    pub fn from_entry(entry: &ArtifactEntry) -> Result<ParamLayout> {
+        let arr = entry
+            .meta
+            .get("param_shapes")
+            .and_then(|v| v.as_arr())
+            .context("artifact missing meta.param_shapes")?;
+        let mut shapes = Vec::with_capacity(arr.len());
+        let mut n_params = 0usize;
+        for item in arr {
+            let pair = item.as_arr().context("param_shapes entry must be [name, shape]")?;
+            let name = pair[0].as_str().context("param name")?.to_string();
+            let shape: Vec<usize> = pair[1]
+                .as_arr()
+                .context("param shape")?
+                .iter()
+                .map(|v| v.as_usize().context("shape dim"))
+                .collect::<Result<_>>()?;
+            n_params += shape.iter().product::<usize>();
+            shapes.push((name, shape));
+        }
+        let declared = entry.meta_usize("n_params")?;
+        anyhow::ensure!(
+            n_params == declared,
+            "param_shapes sum {n_params} != n_params {declared}"
+        );
+        Ok(ParamLayout { shapes, n_params })
+    }
+
+    /// Scaled-Gaussian init matching `model.init_flat_params`' scheme
+    /// (gains -> 1, biases -> 0, matrices -> N(0, 1/fan_in)). The exact
+    /// draw differs from Python's (different PRNG) — only the distribution
+    /// matters for training.
+    pub fn init_flat(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n_params);
+        for (name, shape) in &self.shapes {
+            let size: usize = shape.iter().product();
+            if name.ends_with("_g") {
+                out.extend(std::iter::repeat(1.0f32).take(size));
+            } else if name.ends_with("_b") || name.ends_with("b1") || name.ends_with("b2") {
+                out.extend(std::iter::repeat(0.0f32).take(size));
+            } else {
+                let fan_in = shape[0].max(1);
+                let scale = 1.0 / (fan_in as f64).sqrt();
+                out.extend((0..size).map(|_| (scale * rng.next_normal()) as f32));
+            }
+        }
+        debug_assert_eq!(out.len(), self.n_params);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::Path;
+
+    fn fake_entry() -> ArtifactEntry {
+        let manifest_json = r#"{
+          "transformer_step": {
+            "file": "t.hlo.txt",
+            "inputs": [], "outputs": [],
+            "meta": {
+              "n_params": 14,
+              "param_shapes": [
+                ["tok_emb", [2, 3]],
+                ["l0.ln1_g", [3]],
+                ["l0.ln1_b", [3]],
+                ["l0.b1", [2]]
+              ]
+            }
+          }
+        }"#;
+        let m = Manifest::parse(Path::new("."), manifest_json).unwrap();
+        m.get("transformer_step").unwrap().clone()
+    }
+
+    #[test]
+    fn layout_parses_and_inits() {
+        let layout = ParamLayout::from_entry(&fake_entry()).unwrap();
+        assert_eq!(layout.n_params, 14);
+        let mut rng = Rng::seed(0);
+        let flat = layout.init_flat(&mut rng);
+        assert_eq!(flat.len(), 14);
+        // Gains are ones, biases zeros, embedding nonzero.
+        assert_eq!(&flat[6..9], &[1.0, 1.0, 1.0]);
+        assert_eq!(&flat[9..12], &[0.0, 0.0, 0.0]);
+        assert_eq!(&flat[12..14], &[0.0, 0.0]);
+        assert!(flat[..6].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn mismatched_count_rejected() {
+        let manifest_json = r#"{
+          "x": {"file": "x", "inputs": [], "outputs": [],
+                "meta": {"n_params": 99, "param_shapes": [["a", [2]]]}}
+        }"#;
+        let m = Manifest::parse(Path::new("."), manifest_json).unwrap();
+        assert!(ParamLayout::from_entry(m.get("x").unwrap()).is_err());
+    }
+}

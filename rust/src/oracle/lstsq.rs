@@ -1,0 +1,130 @@
+//! Pure-Rust oracle for least squares (§A.2, the PL-but-not-strongly-convex
+//! objective): `f_i(x) = (1/n_i) sum (a_j^T x - b_j)^2` on one shard.
+//! Mirrors `python/compile/kernels/lstsq.py`.
+
+use super::GradOracle;
+use crate::data::Shard;
+use crate::util::linalg;
+
+pub struct LstsqOracle {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    n: usize,
+    d: usize,
+}
+
+impl LstsqOracle {
+    /// Build from a classification shard, using ±1 labels as regression
+    /// targets (exactly what §A.2 does).
+    pub fn new(shard: Shard<'_>) -> Self {
+        let (a, b) = shard.to_owned_parts();
+        LstsqOracle { a, b, n: shard.n, d: shard.d }
+    }
+
+    pub fn from_parts(a: Vec<f32>, b: Vec<f32>, n: usize, d: usize) -> Self {
+        assert_eq!(a.len(), n * d);
+        assert_eq!(b.len(), n);
+        LstsqOracle { a, b, n, d }
+    }
+
+    pub fn matrix(&self) -> &[f32] {
+        &self.a
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n
+    }
+}
+
+impl GradOracle for LstsqOracle {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        assert_eq!(x.len(), self.d);
+        let inv_n = 1.0 / self.n as f64;
+        let mut loss = 0.0;
+        let mut grad = vec![0.0; self.d];
+        for i in 0..self.n {
+            let row = &self.a[i * self.d..(i + 1) * self.d];
+            let z = linalg::dot_f32_f64(row, x) - self.b[i] as f64;
+            loss += z * z;
+            linalg::axpy_f32(2.0 * z * inv_n, row, &mut grad);
+        }
+        (loss * inv_n, grad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{for_all_seeds, random_vec};
+
+    #[test]
+    fn zero_residual_zero_grad() {
+        // b = A x* => loss(x*) = 0, grad(x*) = 0.
+        let mut rng = crate::util::rng::Rng::seed(0);
+        let (n, d) = (30, 5);
+        let a: Vec<f32> = (0..n * d).map(|_| rng.next_normal() as f32).collect();
+        let xstar = random_vec(&mut rng, d, 1.0);
+        let b: Vec<f32> = (0..n)
+            .map(|i| linalg::dot_f32_f64(&a[i * d..(i + 1) * d], &xstar) as f32)
+            .collect();
+        let mut o = LstsqOracle::from_parts(a, b, n, d);
+        let (l, g) = o.loss_grad(&xstar);
+        assert!(l < 1e-10, "{l}");
+        assert!(linalg::norm2(&g) < 1e-5);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        for_all_seeds(10, |rng| {
+            let d = 2 + rng.next_below(6);
+            let n = 20;
+            let a: Vec<f32> = (0..n * d).map(|_| rng.next_normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.next_normal() as f32).collect();
+            let mut o = LstsqOracle::from_parts(a, b, n, d);
+            let x = random_vec(rng, d, 1.0);
+            let (_, g) = o.loss_grad(&x);
+            let eps = 1e-5;
+            for j in 0..d {
+                let mut xp = x.clone();
+                let mut xm = x.clone();
+                xp[j] += eps;
+                xm[j] -= eps;
+                let fd = (o.loss(&xp) - o.loss(&xm)) / (2.0 * eps);
+                assert!((fd - g[j]).abs() < 1e-4, "fd={fd} vs {}", g[j]);
+            }
+        });
+    }
+
+    #[test]
+    fn pl_inequality_holds_empirically() {
+        // For full-rank least squares, f(x) - f* <= ||grad||^2 / (2 mu)
+        // with mu = 2 lambda_min(A^T A)/n.
+        let mut rng = crate::util::rng::Rng::seed(9);
+        let (n, d) = (60, 4);
+        let a: Vec<f32> = (0..n * d).map(|_| rng.next_normal() as f32).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.next_normal() as f32).collect();
+        let mu = crate::theory::lstsq_pl_mu(&a, n, d);
+        assert!(mu > 0.0);
+        // f* via normal equations is awkward without a solver; instead run
+        // GD to near-optimality to get f*.
+        let mut o = LstsqOracle::from_parts(a.clone(), b.clone(), n, d);
+        let l = crate::theory::lstsq_l(&a, n, d);
+        let mut x = vec![0.0; d];
+        for _ in 0..4000 {
+            let (_, g) = o.loss_grad(&x);
+            linalg::axpy(-1.0 / l, &g, &mut x);
+        }
+        let fstar = o.loss(&x);
+        for _ in 0..20 {
+            let xt = random_vec(&mut rng, d, 2.0);
+            let (f, g) = o.loss_grad(&xt);
+            let lhs = f - fstar;
+            let rhs = linalg::norm2_sq(&g) / (2.0 * mu);
+            assert!(lhs <= rhs * 1.05 + 1e-8, "PL violated: {lhs} > {rhs}");
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Gradient oracles: the per-worker `(f_i(x), ∇f_i(x))` computation.
+//!
+//! Two interchangeable backends per objective:
+//!   * pure Rust (this module) — the fast simulation path used by the
+//!     experiment sweeps;
+//!   * the AOT HLO artifact executed via PJRT ([`crate::oracle::xla`]) —
+//!     the production path proving the three-layer composition. Parity
+//!     between the two is asserted in `rust/tests/integration_runtime.rs`.
+
+pub mod logreg;
+pub mod lstsq;
+pub mod quadratic;
+pub mod stochastic;
+pub mod xla;
+
+pub use logreg::LogRegOracle;
+pub use lstsq::LstsqOracle;
+pub use quadratic::QuadraticOracle;
+pub use stochastic::StochasticOracle;
+
+/// A differentiable local objective `f_i`.
+pub trait GradOracle {
+    /// Problem dimension d.
+    fn dim(&self) -> usize;
+
+    /// Evaluate `(f_i(x), ∇f_i(x))`.
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>);
+
+    /// Evaluate only the loss (metrics path; default goes through
+    /// `loss_grad`).
+    fn loss(&mut self, x: &[f64]) -> f64 {
+        self.loss_grad(x).0
+    }
+}
+
+/// The global objective f = (1/n) sum f_i realized as one oracle over all
+/// shards — used by the convergence tracker to evaluate `f(x^t)` and
+/// `||∇f(x^t)||` outside the communication-metered path.
+pub struct AverageOracle {
+    pub parts: Vec<Box<dyn GradOracle>>,
+}
+
+impl AverageOracle {
+    pub fn new(parts: Vec<Box<dyn GradOracle>>) -> Self {
+        assert!(!parts.is_empty());
+        let d = parts[0].dim();
+        assert!(parts.iter().all(|p| p.dim() == d));
+        AverageOracle { parts }
+    }
+}
+
+impl GradOracle for AverageOracle {
+    fn dim(&self) -> usize {
+        self.parts[0].dim()
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let d = self.dim();
+        let n = self.parts.len() as f64;
+        let mut loss = 0.0;
+        let mut grad = vec![0.0; d];
+        for p in self.parts.iter_mut() {
+            let (l, g) = p.loss_grad(x);
+            loss += l / n;
+            crate::util::linalg::axpy(1.0 / n, &g, &mut grad);
+        }
+        (loss, grad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_oracle_averages() {
+        let p1 = Box::new(QuadraticOracle::diagonal(vec![1.0, 1.0], vec![0.0, 0.0]));
+        let p2 = Box::new(QuadraticOracle::diagonal(vec![3.0, 3.0], vec![0.0, 0.0]));
+        let mut avg = AverageOracle::new(vec![p1, p2]);
+        let (l, g) = avg.loss_grad(&[1.0, 2.0]);
+        // f(x) = (1/2)(0.5 x'diag(1)x + 0.5 x'diag(3)x) -> grad = 2x on avg.
+        assert!((g[0] - 2.0).abs() < 1e-12);
+        assert!((g[1] - 4.0).abs() < 1e-12);
+        assert!((l - 0.5 * (1.0 * 5.0 + 3.0 * 5.0) / 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,98 @@
+//! Quadratic oracle `f_i(x) = 0.5 (x-c)^T diag(h) (x-c)` — the analytic
+//! test problem. Three strongly convex quadratics with distinct minimizers
+//! reproduce the classic DCGD divergence example ([Beznosikov et al. 2020,
+//! Example 1] — see `integration_convergence.rs::dcgd_diverges_ef21_converges`).
+
+use super::GradOracle;
+
+#[derive(Clone, Debug)]
+pub struct QuadraticOracle {
+    /// Diagonal Hessian entries (>= 0).
+    pub h: Vec<f64>,
+    /// Minimizer.
+    pub c: Vec<f64>,
+}
+
+impl QuadraticOracle {
+    pub fn diagonal(h: Vec<f64>, c: Vec<f64>) -> Self {
+        assert_eq!(h.len(), c.len());
+        QuadraticOracle { h, c }
+    }
+
+    /// Smoothness constant L_i = max h_j.
+    pub fn l(&self) -> f64 {
+        self.h.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Strong convexity (and hence PL) constant mu = min h_j.
+    pub fn mu(&self) -> f64 {
+        self.h.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+}
+
+impl GradOracle for QuadraticOracle {
+    fn dim(&self) -> usize {
+        self.h.len()
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let mut loss = 0.0;
+        let mut grad = vec![0.0; x.len()];
+        for j in 0..x.len() {
+            let dxj = x[j] - self.c[j];
+            loss += 0.5 * self.h[j] * dxj * dxj;
+            grad[j] = self.h[j] * dxj;
+        }
+        (loss, grad)
+    }
+}
+
+/// The three-function divergence instance in R^3, adapted from Beznosikov
+/// et al. (2020), Example 1: strongly convex quadratics whose average has a
+/// minimizer where individual gradients are large and "rotated" so that
+/// Top-1 DCGD cycles/diverges while EF-family methods converge.
+pub fn divergence_example() -> Vec<QuadraticOracle> {
+    // Rotationally mismatched minimizers with skewed curvatures.
+    vec![
+        QuadraticOracle::diagonal(vec![1.0, 4.0, 16.0], vec![10.0, 0.0, 0.0]),
+        QuadraticOracle::diagonal(vec![16.0, 1.0, 4.0], vec![0.0, 10.0, 0.0]),
+        QuadraticOracle::diagonal(vec![4.0, 16.0, 1.0], vec![0.0, 0.0, 10.0]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_gradient() {
+        let mut q = QuadraticOracle::diagonal(vec![2.0, 3.0], vec![1.0, -1.0]);
+        let (l, g) = q.loss_grad(&[2.0, 1.0]);
+        assert!((l - (0.5 * 2.0 * 1.0 + 0.5 * 3.0 * 4.0)).abs() < 1e-12);
+        assert_eq!(g, vec![2.0, 6.0]);
+        assert_eq!(q.l(), 3.0);
+        assert_eq!(q.mu(), 2.0);
+    }
+
+    #[test]
+    fn divergence_example_minimizers_conflict() {
+        // The average minimizer has nonzero individual gradients (the
+        // heterogeneous regime EF21 is designed for).
+        let mut fs = divergence_example();
+        // Average minimizer solves sum h_i (x - c_i) = 0 componentwise.
+        let d = 3;
+        let mut x = vec![0.0; d];
+        for j in 0..d {
+            let num: f64 = fs.iter().map(|f| f.h[j] * f.c[j]).sum();
+            let den: f64 = fs.iter().map(|f| f.h[j]).sum();
+            x[j] = num / den;
+        }
+        let mut avg_grad = vec![0.0; d];
+        for f in fs.iter_mut() {
+            let (_, g) = f.loss_grad(&x);
+            assert!(crate::util::linalg::norm2(&g) > 1.0, "individual grads large");
+            crate::util::linalg::axpy(1.0 / 3.0, &g, &mut avg_grad);
+        }
+        assert!(crate::util::linalg::norm2(&avg_grad) < 1e-10, "x is the avg minimizer");
+    }
+}

@@ -1,0 +1,169 @@
+//! Stochastic gradient wrapper (Algorithm 5 / §3.6): turns any exact
+//! shard oracle into a minibatch estimator `ghat_i ≈ ∇f_i`.
+//!
+//! Sampling is without replacement within an epoch (the paper's DL setup),
+//! with a deterministic per-worker RNG stream so experiments replay
+//! bit-exactly. EF21 + `StochasticOracle` == Algorithm 5; EF + it == the
+//! paper's EF-SGD baseline.
+
+use super::GradOracle;
+use crate::util::rng::Rng;
+
+/// A factory view over shard rows so the wrapper can subsample.
+pub trait RowSubsampled {
+    /// Evaluate loss/grad over a subset of local row indices.
+    fn loss_grad_rows(&mut self, x: &[f64], rows: &[u32]) -> (f64, Vec<f64>);
+    fn n_local_rows(&self) -> usize;
+    fn dim(&self) -> usize;
+}
+
+impl RowSubsampled for crate::oracle::LogRegOracle {
+    fn loss_grad_rows(&mut self, x: &[f64], rows: &[u32]) -> (f64, Vec<f64>) {
+        logreg_rows(self, x, rows)
+    }
+    fn n_local_rows(&self) -> usize {
+        self.n_rows()
+    }
+    fn dim(&self) -> usize {
+        <Self as GradOracle>::dim(self)
+    }
+}
+
+fn logreg_rows(o: &crate::oracle::LogRegOracle, x: &[f64], rows: &[u32]) -> (f64, Vec<f64>) {
+    use crate::util::linalg;
+    let d = <crate::oracle::LogRegOracle as GradOracle>::dim(o);
+    let inv_n = 1.0 / rows.len() as f64;
+    let mut loss = 0.0;
+    let mut grad = vec![0.0; d];
+    let a = o.matrix();
+    for &ri in rows {
+        let i = ri as usize;
+        let row = &a[i * d..(i + 1) * d];
+        let z = linalg::dot_f32_f64(row, x);
+        let yi = o.label(i);
+        let m = -yi * z;
+        loss += m.max(0.0) + (-m.abs()).exp().ln_1p();
+        let s = if m >= 0.0 { 1.0 / (1.0 + (-m).exp()) } else { let e = m.exp(); e / (1.0 + e) };
+        linalg::axpy_f32(-yi * s * inv_n, row, &mut grad);
+    }
+    loss *= inv_n;
+    let mut reg = 0.0;
+    for (j, &xj) in x.iter().enumerate() {
+        let x2 = xj * xj;
+        reg += x2 / (1.0 + x2);
+        grad[j] += o.lam * 2.0 * xj / ((1.0 + x2) * (1.0 + x2));
+    }
+    (loss + o.lam * reg, grad)
+}
+
+/// Minibatch-without-replacement estimator over any `RowSubsampled` oracle.
+pub struct StochasticOracle<O: RowSubsampled> {
+    inner: O,
+    batch: usize,
+    rng: Rng,
+    /// Current epoch permutation and cursor.
+    perm: Vec<u32>,
+    cursor: usize,
+}
+
+impl<O: RowSubsampled> StochasticOracle<O> {
+    pub fn new(inner: O, batch: usize, rng: Rng) -> Self {
+        let n = inner.n_local_rows();
+        assert!(batch >= 1 && batch <= n, "batch {batch} vs rows {n}");
+        let perm: Vec<u32> = (0..n as u32).collect();
+        let mut s = StochasticOracle { inner, batch, rng, perm, cursor: 0 };
+        s.reshuffle();
+        s
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.perm);
+        self.cursor = 0;
+    }
+
+    fn next_batch(&mut self) -> Vec<u32> {
+        if self.cursor + self.batch > self.perm.len() {
+            self.reshuffle();
+        }
+        let b = self.perm[self.cursor..self.cursor + self.batch].to_vec();
+        self.cursor += self.batch;
+        b
+    }
+
+    pub fn inner_mut(&mut self) -> &mut O {
+        &mut self.inner
+    }
+}
+
+impl<O: RowSubsampled> GradOracle for StochasticOracle<O> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let rows = self.next_batch();
+        self.inner.loss_grad_rows(x, &rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::oracle::LogRegOracle;
+
+    fn make(n: usize, d: usize) -> LogRegOracle {
+        let ds = synth::generate_custom("s", n, d, 0.5, 3);
+        LogRegOracle::new(ds.slice(0, n), 0.1)
+    }
+
+    #[test]
+    fn full_batch_equals_exact_oracle() {
+        let mut exact = make(64, 6);
+        let mut stoch = StochasticOracle::new(make(64, 6), 64, Rng::seed(1));
+        let x = vec![0.3; 6];
+        let (le, ge) = exact.loss_grad(&x);
+        let (ls, gs) = stoch.loss_grad(&x);
+        assert!((le - ls).abs() < 1e-12);
+        for (a, b) in ge.iter().zip(&gs) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn minibatch_gradient_is_unbiased() {
+        let mut exact = make(128, 5);
+        let x = vec![0.2; 5];
+        let (_, full) = exact.loss_grad(&x);
+        let mut stoch = StochasticOracle::new(make(128, 5), 16, Rng::seed(2));
+        let reps = 800; // 100 epochs of 8 batches: mean over epochs == full
+        let mut mean = vec![0.0; 5];
+        for _ in 0..reps {
+            let (_, g) = stoch.loss_grad(&x);
+            for (m, v) in mean.iter_mut().zip(&g) {
+                *m += v / reps as f64;
+            }
+        }
+        for (m, f) in mean.iter().zip(&full) {
+            assert!((m - f).abs() < 5e-3, "{m} vs {f}");
+        }
+    }
+
+    #[test]
+    fn epoch_covers_every_row_once() {
+        let mut stoch = StochasticOracle::new(make(64, 4), 16, Rng::seed(3));
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4 {
+            for &r in &stoch.next_batch() {
+                assert!(seen.insert(r), "row {r} repeated within epoch");
+            }
+        }
+        assert_eq!(seen.len(), 64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn batch_larger_than_shard_panics() {
+        StochasticOracle::new(make(8, 3), 9, Rng::seed(0));
+    }
+}

@@ -1,0 +1,167 @@
+//! PJRT-backed oracles: `∇f_i` evaluated by the AOT HLO artifact (which
+//! embeds the L1 Pallas kernel). The production path of the three-layer
+//! architecture; parity with the pure-Rust oracles is an integration test.
+
+use super::GradOracle;
+use crate::data::Shard;
+use crate::runtime::client::{
+    lit_f32_1d, lit_f32_2d, lit_f32_scalar, out_scalar_f32, out_vec_f64,
+};
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::rc::Rc;
+use xla::Literal;
+
+/// Which padded-shard artifact family to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardKind {
+    LogReg,
+    Lstsq,
+}
+
+/// Oracle executing `logreg_grad_<ds>` / `lstsq_grad_<ds>` artifacts.
+///
+/// The shard is zero-padded to the artifact's static row count once at
+/// construction; `a`, `y/b`, `w` literals are cached so the hot path only
+/// materializes the (d,) model vector per call.
+pub struct XlaShardOracle {
+    rt: Rc<Runtime>,
+    artifact: String,
+    kind: ShardKind,
+    d: usize,
+    a_lit: Literal,
+    y_lit: Literal,
+    w_lit: Literal,
+    lam: f64,
+}
+
+impl XlaShardOracle {
+    pub fn new(
+        rt: Rc<Runtime>,
+        dataset: &str,
+        kind: ShardKind,
+        shard: Shard<'_>,
+        lam: f64,
+    ) -> Result<XlaShardOracle> {
+        let artifact = match kind {
+            ShardKind::LogReg => format!("logreg_grad_{dataset}"),
+            ShardKind::Lstsq => format!("lstsq_grad_{dataset}"),
+        };
+        let entry = rt.entry(&artifact)?;
+        let n_pad = entry.meta_usize("n_rows_padded")?;
+        let d = entry.meta_usize("d")?;
+        anyhow::ensure!(shard.d == d, "shard d={} vs artifact d={d}", shard.d);
+        anyhow::ensure!(shard.n <= n_pad, "shard rows {} exceed padded {n_pad}", shard.n);
+
+        let mut a = vec![0.0f32; n_pad * d];
+        a[..shard.n * d].copy_from_slice(shard.a);
+        let mut y = vec![0.0f32; n_pad];
+        y[..shard.n].copy_from_slice(shard.y);
+        let mut w = vec![0.0f32; n_pad];
+        w[..shard.n].fill(1.0);
+
+        Ok(XlaShardOracle {
+            rt,
+            artifact,
+            kind,
+            d,
+            a_lit: lit_f32_2d(&a, n_pad, d)?,
+            y_lit: Literal::vec1(&y),
+            w_lit: Literal::vec1(&w),
+            lam,
+        })
+    }
+
+    fn call(&self, x: &[f64]) -> Result<(f64, Vec<f64>)> {
+        let x_lit = lit_f32_1d(x);
+        let outs = match self.kind {
+            ShardKind::LogReg => {
+                let lam_lit = lit_f32_scalar(self.lam);
+                self.rt.execute(
+                    &self.artifact,
+                    &[&self.a_lit, &self.y_lit, &self.w_lit, &x_lit, &lam_lit],
+                )?
+            }
+            ShardKind::Lstsq => self.rt.execute(
+                &self.artifact,
+                &[&self.a_lit, &self.y_lit, &self.w_lit, &x_lit],
+            )?,
+        };
+        anyhow::ensure!(outs.len() == 2, "expected (loss, grad) tuple");
+        Ok((out_scalar_f32(&outs[0])?, out_vec_f64(&outs[1])?))
+    }
+}
+
+impl GradOracle for XlaShardOracle {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        self.call(x).expect("XLA oracle execution failed")
+    }
+}
+
+/// Oracle executing `transformer_step`: stochastic loss/grad of the small
+/// causal LM over this worker's token stream (the DL experiment of §A.3).
+pub struct XlaTransformerOracle {
+    rt: Rc<Runtime>,
+    pub n_params: usize,
+    batch: usize,
+    seq_len: usize,
+    sampler: Box<dyn FnMut() -> Vec<i32>>,
+}
+
+impl XlaTransformerOracle {
+    /// `sampler` must yield `batch * seq_len` i32 tokens per call.
+    pub fn new(rt: Rc<Runtime>, sampler: Box<dyn FnMut() -> Vec<i32>>) -> Result<Self> {
+        let entry = rt.entry("transformer_step")?;
+        let n_params = entry.meta_usize("n_params")?;
+        let batch = entry.meta_usize("batch")?;
+        let seq_len = entry.meta_usize("seq_len")?;
+        Ok(XlaTransformerOracle { rt, n_params, batch, seq_len, sampler })
+    }
+
+    pub fn step_f32(&mut self, flat: &[f32]) -> Result<(f64, Vec<f64>)> {
+        let tokens = (self.sampler)();
+        anyhow::ensure!(tokens.len() == self.batch * self.seq_len, "bad sampler length");
+        let flat_lit = crate::runtime::client::lit_f32_1d_exact(flat);
+        let tok_lit = crate::runtime::client::lit_i32_2d(&tokens, self.batch, self.seq_len)?;
+        let outs = self.rt.execute("transformer_step", &[flat_lit, tok_lit])?;
+        Ok((out_scalar_f32(&outs[0])?, out_vec_f64(&outs[1])?))
+    }
+
+    /// Eval loss + accuracy on a provided batch via `transformer_eval`.
+    pub fn eval(&self, flat: &[f32], tokens: &[i32]) -> Result<(f64, f64)> {
+        let flat_lit = crate::runtime::client::lit_f32_1d_exact(flat);
+        let tok_lit = crate::runtime::client::lit_i32_2d(tokens, self.batch, self.seq_len)?;
+        let outs = self.rt.execute("transformer_eval", &[flat_lit, tok_lit])?;
+        Ok((out_scalar_f32(&outs[0])?, out_scalar_f32(&outs[1])?))
+    }
+
+    pub fn batch_shape(&self) -> (usize, usize) {
+        (self.batch, self.seq_len)
+    }
+}
+
+impl GradOracle for XlaTransformerOracle {
+    fn dim(&self) -> usize {
+        self.n_params
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let flat: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let tokens = (self.sampler)();
+        let flat_lit = crate::runtime::client::lit_f32_1d_exact(&flat);
+        let tok_lit = crate::runtime::client::lit_i32_2d(&tokens, self.batch, self.seq_len)
+            .expect("token literal");
+        let outs = self
+            .rt
+            .execute("transformer_step", &[flat_lit, tok_lit])
+            .expect("transformer_step execution failed");
+        (
+            out_scalar_f32(&outs[0]).expect("loss scalar"),
+            out_vec_f64(&outs[1]).expect("grad vector"),
+        )
+    }
+}

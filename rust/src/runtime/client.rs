@@ -1,0 +1,161 @@
+//! PJRT client wrapper: compile-once / execute-many over HLO-text
+//! artifacts, with literal conversion helpers. Pattern follows
+//! /opt/xla-example/load_hlo (text interchange, `to_tuple*` unwrapping).
+
+use super::manifest::{ArtifactEntry, Manifest};
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Compile-cached PJRT runtime over one artifacts directory.
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client + manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default location (`$EF21_ARTIFACTS` or `./artifacts`).
+    pub fn from_default_dir() -> Result<Runtime> {
+        Self::new(&super::manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.file.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.manifest.get(name)
+    }
+
+    /// Execute an artifact; all our artifacts return a tuple, which is
+    /// decomposed into its elements. Accepts owned or borrowed literals
+    /// (`&[Literal]` or `&[&Literal]`) so cached inputs are not copied.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<Literal>> {
+        let exe = self.executable(name)?;
+        let entry = self.manifest.get(name)?;
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "artifact {name}: expected {} inputs, got {}",
+            entry.inputs.len(),
+            inputs.len()
+        );
+        let result = exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing artifact {name}"))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute and convert every output to an f32 vector.
+    pub fn execute_f32<L: std::borrow::Borrow<Literal>>(
+        &self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.execute(name, inputs)?
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// 1-D f32 literal from an f64 slice (wire precision is f32 everywhere).
+pub fn lit_f32_1d(v: &[f64]) -> Literal {
+    let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    Literal::vec1(&v32)
+}
+
+/// 1-D f32 literal from f32 data.
+pub fn lit_f32_1d_exact(v: &[f32]) -> Literal {
+    Literal::vec1(v)
+}
+
+/// Row-major (rows, cols) f32 literal.
+pub fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<Literal> {
+    anyhow::ensure!(v.len() == rows * cols, "shape mismatch");
+    Ok(Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Row-major (rows, cols) i32 literal.
+pub fn lit_i32_2d(v: &[i32], rows: usize, cols: usize) -> Result<Literal> {
+    anyhow::ensure!(v.len() == rows * cols, "shape mismatch");
+    Ok(Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_f32_scalar(x: f64) -> Literal {
+    Literal::scalar(x as f32)
+}
+
+/// Extract a scalar f32 from an output literal.
+pub fn out_scalar_f32(l: &Literal) -> Result<f64> {
+    Ok(l.get_first_element::<f32>()? as f64)
+}
+
+/// Extract an f32 vector as f64.
+pub fn out_vec_f64(l: &Literal) -> Result<Vec<f64>> {
+    Ok(l.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Literal helpers are testable without artifacts; the full runtime path
+    // (compile + execute vs the Rust oracle) lives in
+    // rust/tests/integration_runtime.rs which requires `make artifacts`.
+
+    #[test]
+    fn literal_roundtrips() {
+        let l = lit_f32_1d(&[1.0, -2.5, 3.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.0]);
+        let s = lit_f32_scalar(4.25);
+        assert_eq!(out_scalar_f32(&s).unwrap(), 4.25);
+        let m = lit_f32_2d(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3).unwrap();
+        assert_eq!(m.element_count(), 6);
+        let i = lit_i32_2d(&[1, 2, 3, 4], 2, 2).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(lit_f32_2d(&[1.0], 2, 3).is_err());
+        let v = out_vec_f64(&lit_f32_1d(&[0.5, 1.5])).unwrap();
+        assert_eq!(v, vec![0.5, 1.5]);
+    }
+}

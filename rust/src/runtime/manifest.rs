@@ -1,0 +1,164 @@
+//! `artifacts/manifest.json` loader: names, files, I/O shapes and metadata
+//! for every AOT-compiled computation.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One input or output tensor description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .context("io spec missing name")?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .context("io spec missing shape")?
+                .iter()
+                .map(|v| v.as_usize().context("bad shape entry"))
+                .collect::<Result<Vec<_>>>()?,
+            dtype: j
+                .get("dtype")
+                .and_then(|v| v.as_str())
+                .context("io spec missing dtype")?
+                .to_string(),
+        })
+    }
+}
+
+/// One artifact: an HLO module plus its interface.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactEntry {
+    /// usize metadata field accessor (e.g. "d", "n_rows_padded").
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .with_context(|| format!("artifact {}: missing meta.{key}", self.name))
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest JSON: {e}"))?;
+        let obj = j.as_obj().context("manifest must be an object")?;
+        let mut entries = BTreeMap::new();
+        for (name, v) in obj {
+            let file = dir.join(
+                v.get("file")
+                    .and_then(|f| f.as_str())
+                    .with_context(|| format!("artifact {name}: missing file"))?,
+            );
+            let inputs = v
+                .get("inputs")
+                .and_then(|x| x.as_arr())
+                .with_context(|| format!("artifact {name}: missing inputs"))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = v
+                .get("outputs")
+                .and_then(|x| x.as_arr())
+                .with_context(|| format!("artifact {name}: missing outputs"))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let meta = v.get("meta").cloned().unwrap_or(Json::Null);
+            entries.insert(
+                name.clone(),
+                ArtifactEntry { name: name.clone(), file, inputs, outputs, meta },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest (run `make artifacts`)"))
+    }
+}
+
+/// Default artifacts directory: $EF21_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("EF21_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "logreg_grad_a9a": {
+        "file": "logreg_grad_a9a.hlo.txt",
+        "inputs": [
+          {"name": "a", "shape": [1792, 123], "dtype": "f32"},
+          {"name": "x", "shape": [123], "dtype": "f32"},
+          {"name": "lam", "shape": [], "dtype": "f32"}
+        ],
+        "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+        "meta": {"d": 123, "n_rows_padded": 1792, "kind": "logreg"}
+      }
+    }"#;
+
+    #[test]
+    fn parses_entries_and_meta() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        let e = m.get("logreg_grad_a9a").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].shape, vec![1792, 123]);
+        assert_eq!(e.inputs[0].element_count(), 1792 * 123);
+        assert_eq!(e.inputs[2].element_count(), 1); // scalar
+        assert_eq!(e.meta_usize("d").unwrap(), 123);
+        assert!(e.meta_usize("missing").is_err());
+        assert!(m.get("nope").is_err());
+        assert_eq!(e.file, Path::new("/tmp/x/logreg_grad_a9a.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("."), "[]").is_err());
+        assert!(Manifest::parse(Path::new("."), r#"{"a": {}}"#).is_err());
+        assert!(Manifest::parse(Path::new("."), "{nope").is_err());
+    }
+}

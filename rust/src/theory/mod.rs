@@ -1,0 +1,186 @@
+//! Theory-side quantities: Lemma 3 constants, Theorem 1/2 stepsizes, and
+//! smoothness/PL constants estimated from data. Every experiment's "1x
+//! stepsize" is `stepsize_theorem1/2` evaluated on the actual shards, just
+//! as in §5 ("multiple of the largest stepsize predicted by our theory").
+
+use crate::util::linalg;
+
+/// Optimal Lemma-3 constants for a given contraction parameter alpha:
+/// theta = 1 - sqrt(1-alpha), beta = (1-alpha) / (1 - sqrt(1-alpha)).
+/// For alpha = 1 (identity): theta = 1, beta = 0.
+pub fn theta_beta(alpha: f64) -> (f64, f64) {
+    assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0,1], got {alpha}");
+    let root = (1.0 - alpha).max(0.0).sqrt();
+    let theta = 1.0 - root;
+    let beta = if alpha >= 1.0 { 0.0 } else { (1.0 - alpha) / theta };
+    (theta, beta)
+}
+
+/// sqrt(beta/theta) in closed form (Eq. 26): 1/sqrt(1-alpha) - 1 inverted —
+/// precisely sqrt(beta(s*)/theta(s*)) = sqrt(1-alpha) / (1 - sqrt(1-alpha)).
+pub fn sqrt_beta_over_theta(alpha: f64) -> f64 {
+    let (theta, beta) = theta_beta(alpha);
+    if beta == 0.0 {
+        0.0
+    } else {
+        (beta / theta).sqrt()
+    }
+}
+
+/// Theorem 1 stepsize: gamma <= 1 / (L + Ltilde * sqrt(beta/theta)).
+pub fn stepsize_theorem1(l: f64, l_tilde: f64, alpha: f64) -> f64 {
+    1.0 / (l + l_tilde * sqrt_beta_over_theta(alpha))
+}
+
+/// Theorem 2 stepsize: gamma <= min{ 1/(L + Ltilde sqrt(2 beta/theta)),
+/// theta/(2 mu) }.
+pub fn stepsize_theorem2(l: f64, l_tilde: f64, alpha: f64, mu: f64) -> f64 {
+    let (theta, beta) = theta_beta(alpha);
+    let a = if beta == 0.0 { 0.0 } else { (2.0 * beta / theta).sqrt() };
+    let lhs = 1.0 / (l + l_tilde * a);
+    let rhs = theta / (2.0 * mu);
+    lhs.min(rhs)
+}
+
+/// Smoothness constants for the distributed objective.
+#[derive(Clone, Debug)]
+pub struct Smoothness {
+    /// Per-node Lipschitz constants L_i.
+    pub l_i: Vec<f64>,
+    /// L of the average f (estimated; <= mean of L_i).
+    pub l: f64,
+    /// Ltilde = sqrt(mean of L_i^2) >= mean of L_i.
+    pub l_tilde: f64,
+}
+
+impl Smoothness {
+    pub fn from_l_i(l_i: Vec<f64>, l: f64) -> Self {
+        let l_tilde = (l_i.iter().map(|x| x * x).sum::<f64>() / l_i.len() as f64).sqrt();
+        Smoothness { l_i, l, l_tilde }
+    }
+
+    /// Conservative fallback when only L_i are known: L <= mean(L_i).
+    pub fn from_l_i_mean(l_i: Vec<f64>) -> Self {
+        let l = l_i.iter().sum::<f64>() / l_i.len() as f64;
+        Self::from_l_i(l_i, l)
+    }
+}
+
+/// L_i for the nonconvex logistic regression of Eq. (19) on a shard:
+/// data term has Hessian bounded by lambda_max(A^T A) / (4 n_i); the
+/// regularizer r(x) = sum x_j^2/(1+x_j^2) has |r''| <= 2, contributing
+/// 2 * lam.
+pub fn logreg_l(a: &[f32], n: usize, d: usize, lam: f64) -> f64 {
+    if n == 0 {
+        return 2.0 * lam;
+    }
+    let lmax = linalg::spectral_norm_sq_ata(a, n, d, 100, 0xD0E5);
+    lmax / (4.0 * n as f64) + 2.0 * lam
+}
+
+/// L_i for least squares f(x) = (1/n) sum (a_i^T x - b_i)^2:
+/// Hessian = (2/n) A^T A.
+pub fn lstsq_l(a: &[f32], n: usize, d: usize) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    2.0 * linalg::spectral_norm_sq_ata(a, n, d, 100, 0xD0E5) / n as f64
+}
+
+/// PL constant for least squares: mu = 2 lambda_min(A^T A) / n (valid when
+/// A has full column rank; otherwise PL holds on the row space and this
+/// returns the smallest eigenvalue estimate, possibly ~0).
+pub fn lstsq_pl_mu(a: &[f32], n: usize, d: usize) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    2.0 * linalg::lambda_min_ata(a, n, d, 400, 0xD0E6) / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lemma3_closed_forms() {
+        // alpha = 3/4: sqrt(1-alpha) = 1/2, theta = 1/2, beta = (1/4)/(1/2) = 1/2.
+        let (theta, beta) = theta_beta(0.75);
+        assert!((theta - 0.5).abs() < 1e-12);
+        assert!((beta - 0.5).abs() < 1e-12);
+        assert!((sqrt_beta_over_theta(0.75) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sqrt_ratio_matches_example1_topk_formula() {
+        // Example 1: sqrt(beta/theta) = sqrt(1-k/d)/(1-sqrt(1-k/d)).
+        for (k, d) in [(1usize, 10usize), (2, 68), (4, 123), (32, 300)] {
+            let alpha = k as f64 / d as f64;
+            let expect = (1.0 - alpha).sqrt() / (1.0 - (1.0 - alpha).sqrt());
+            assert!(
+                (sqrt_beta_over_theta(alpha) - expect).abs() < 1e-10,
+                "k={k} d={d}"
+            );
+        }
+    }
+
+    #[test]
+    fn sqrt_ratio_upper_bound_two_over_alpha_minus_one() {
+        // Eq. (26): sqrt(beta/theta) <= 2/alpha - 1.
+        for alpha in [0.001, 0.01, 0.1, 0.5, 0.9, 1.0] {
+            assert!(sqrt_beta_over_theta(alpha) <= 2.0 / alpha - 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn identity_alpha_gives_gd_stepsize() {
+        // alpha = 1: sqrt(beta/theta) = 0 so gamma = 1/L (classic GD).
+        let g = stepsize_theorem1(4.0, 5.0, 1.0);
+        assert!((g - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stepsize_decreases_with_more_aggressive_compression() {
+        let (l, lt) = (1.0, 1.2);
+        let g_small_alpha = stepsize_theorem1(l, lt, 0.01);
+        let g_big_alpha = stepsize_theorem1(l, lt, 0.5);
+        assert!(g_small_alpha < g_big_alpha);
+    }
+
+    #[test]
+    fn theorem2_takes_the_min() {
+        // Huge mu forces the theta/(2mu) branch.
+        let g = stepsize_theorem2(1.0, 1.0, 0.75, 1e9);
+        assert!((g - 0.5 / (2.0 * 1e9)).abs() < 1e-18);
+        // Tiny mu leaves the smoothness branch; compare against formula.
+        let g2 = stepsize_theorem2(1.0, 1.0, 0.75, 1e-12);
+        let expect = 1.0 / (1.0 + (2.0f64 * 0.5 / 0.5).sqrt());
+        assert!((g2 - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn l_tilde_dominates_mean_l() {
+        let s = Smoothness::from_l_i_mean(vec![1.0, 2.0, 3.0]);
+        assert!(s.l_tilde >= s.l - 1e-12);
+        assert!((s.l - 2.0).abs() < 1e-12);
+        assert!((s.l_tilde - (14.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logreg_l_on_identity_rows() {
+        // A = I (2x2), n=2, lam=0: lambda_max(A^T A)=1, L = 1/(4*2) = 0.125.
+        let a = [1.0f32, 0.0, 0.0, 1.0];
+        let l = logreg_l(&a, 2, 2, 0.0);
+        assert!((l - 0.125).abs() < 1e-9, "{l}");
+        // lam adds 2*lam.
+        let l2 = logreg_l(&a, 2, 2, 0.1);
+        assert!((l2 - 0.325).abs() < 1e-9, "{l2}");
+    }
+
+    #[test]
+    fn lstsq_constants_on_identity_rows() {
+        let a = [1.0f32, 0.0, 0.0, 1.0];
+        assert!((lstsq_l(&a, 2, 2) - 1.0).abs() < 1e-9);
+        let mu = lstsq_pl_mu(&a, 2, 2);
+        assert!((mu - 1.0).abs() < 1e-3, "{mu}");
+    }
+}

@@ -1,0 +1,237 @@
+//! Wire format for protocol frames (explicit little-endian, no serde).
+//!
+//! Frames:
+//!   0x01 Model     : u32 d | d * f32          (master -> worker broadcast)
+//!   0x02 Up        : u8 kind | f64 loss | u64 bits | u32 nnz
+//!                    | nnz * u32 idx | nnz * f32 val
+//!                    kind: 0 = Sparse, 1 = Markov delta, 2 = DCGD assign
+//!   0x03 Stop      : empty                    (master -> worker shutdown)
+//!
+//! Values travel as f32 — the same precision the bit accounting charges —
+//! so the simulated `bits/n` axis and the real byte stream agree (the `Up`
+//! frame's payload portion is exactly `bits/8` bytes plus the fixed header;
+//! `loss` is instrumentation and excluded from the metered bits).
+
+use crate::algo::WireMsg;
+use crate::compress::{Compressed, SparseVec};
+use anyhow::{bail, Result};
+
+pub const TAG_MODEL: u8 = 0x01;
+pub const TAG_UP: u8 = 0x02;
+pub const TAG_STOP: u8 = 0x03;
+
+/// A decoded protocol frame.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    /// Broadcast model (f32 on the wire).
+    Model(Vec<f64>),
+    /// Worker uplink: message plus piggybacked instrumentation loss.
+    Up { msg: WireMsg, loss: f64 },
+    Stop,
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("frame truncated at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> bool {
+        self.i == self.b.len()
+    }
+}
+
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::new();
+    match frame {
+        Frame::Model(x) => {
+            out.push(TAG_MODEL);
+            put_u32(&mut out, x.len() as u32);
+            for &v in x {
+                put_f32(&mut out, v as f32);
+            }
+        }
+        Frame::Up { msg, loss } => {
+            out.push(TAG_UP);
+            let (kind, payload) = match msg {
+                WireMsg::Sparse(c) => (0u8, c),
+                WireMsg::Tagged { dcgd_branch: false, payload } => (1u8, payload),
+                WireMsg::Tagged { dcgd_branch: true, payload } => (2u8, payload),
+            };
+            out.push(kind);
+            put_f64(&mut out, *loss);
+            put_u64(&mut out, payload.bits);
+            put_u32(&mut out, payload.sparse.nnz() as u32);
+            for &i in &payload.sparse.idx {
+                put_u32(&mut out, i);
+            }
+            for &v in &payload.sparse.val {
+                put_f32(&mut out, v as f32);
+            }
+        }
+        Frame::Stop => out.push(TAG_STOP),
+    }
+    out
+}
+
+pub fn decode(bytes: &[u8]) -> Result<Frame> {
+    let mut r = Reader { b: bytes, i: 0 };
+    let frame = match r.u8()? {
+        TAG_MODEL => {
+            let d = r.u32()? as usize;
+            let mut x = Vec::with_capacity(d);
+            for _ in 0..d {
+                x.push(r.f32()? as f64);
+            }
+            Frame::Model(x)
+        }
+        TAG_UP => {
+            let kind = r.u8()?;
+            let loss = r.f64()?;
+            let bits = r.u64()?;
+            let nnz = r.u32()? as usize;
+            let mut idx = Vec::with_capacity(nnz);
+            for _ in 0..nnz {
+                idx.push(r.u32()?);
+            }
+            let mut val = Vec::with_capacity(nnz);
+            for _ in 0..nnz {
+                val.push(r.f32()? as f64);
+            }
+            let payload = Compressed { sparse: SparseVec::new(idx, val), bits };
+            let msg = match kind {
+                0 => WireMsg::Sparse(payload),
+                1 => WireMsg::Tagged { dcgd_branch: false, payload },
+                2 => WireMsg::Tagged { dcgd_branch: true, payload },
+                k => bail!("bad Up kind {k}"),
+            };
+            Frame::Up { msg, loss }
+        }
+        TAG_STOP => Frame::Stop,
+        t => bail!("unknown frame tag {t:#x}"),
+    };
+    if !r.done() {
+        bail!("trailing bytes in frame");
+    }
+    Ok(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_msg() -> WireMsg {
+        WireMsg::Tagged {
+            dcgd_branch: true,
+            payload: Compressed {
+                sparse: SparseVec::new(vec![1, 5, 9], vec![0.5, -1.25, 3.0]),
+                bits: 3 * 64 + 1,
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_model() {
+        let f = Frame::Model(vec![1.0, -2.5, 0.125]);
+        match decode(&encode(&f)).unwrap() {
+            Frame::Model(x) => assert_eq!(x, vec![1.0, -2.5, 0.125]),
+            _ => panic!("wrong frame"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_up() {
+        let f = Frame::Up { msg: sample_msg(), loss: 0.75 };
+        match decode(&encode(&f)).unwrap() {
+            Frame::Up { msg, loss } => {
+                assert_eq!(loss, 0.75);
+                match msg {
+                    WireMsg::Tagged { dcgd_branch, payload } => {
+                        assert!(dcgd_branch);
+                        assert_eq!(payload.bits, 193);
+                        assert_eq!(payload.sparse.idx, vec![1, 5, 9]);
+                        assert_eq!(payload.sparse.val, vec![0.5, -1.25, 3.0]);
+                    }
+                    _ => panic!("wrong msg kind"),
+                }
+            }
+            _ => panic!("wrong frame"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_stop_and_rejects_garbage() {
+        assert!(matches!(decode(&encode(&Frame::Stop)).unwrap(), Frame::Stop));
+        assert!(decode(&[0xFF]).is_err());
+        assert!(decode(&[]).is_err());
+        // Truncated Up frame.
+        let mut bytes = encode(&Frame::Up { msg: sample_msg(), loss: 0.0 });
+        bytes.truncate(bytes.len() - 1);
+        assert!(decode(&bytes).is_err());
+        // Trailing junk.
+        let mut bytes = encode(&Frame::Stop);
+        bytes.push(0);
+        assert!(decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn payload_bytes_match_accounted_bits() {
+        // Up frame payload (idx+val) must be exactly bits/8 rounded up
+        // minus the tag bit for sparse messages.
+        let sparse = SparseVec::new(vec![0, 1], vec![1.0, 2.0]);
+        let bits = sparse.standard_bits();
+        let f = Frame::Up {
+            msg: WireMsg::Sparse(Compressed { sparse, bits }),
+            loss: 0.0,
+        };
+        let bytes = encode(&f);
+        // header: tag(1) + kind(1) + loss(8) + bits(8) + nnz(4) = 22 bytes.
+        let payload_bytes = bytes.len() - 22;
+        assert_eq!(payload_bytes as u64 * 8, bits);
+    }
+}

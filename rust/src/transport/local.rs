@@ -1,0 +1,60 @@
+//! In-process channel transport: a pair of mpsc queues per worker.
+
+use super::Conn;
+use anyhow::{Context, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+pub struct LocalConn {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl Conn for LocalConn {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.tx.send(frame.to_vec()).context("local conn closed (send)")
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.rx.recv().context("local conn closed (recv)")
+    }
+}
+
+/// Create a connected (master_end, worker_end) pair.
+pub fn pair() -> (LocalConn, LocalConn) {
+    let (tx_a, rx_b) = channel();
+    let (tx_b, rx_a) = channel();
+    (LocalConn { tx: tx_a, rx: rx_a }, LocalConn { tx: tx_b, rx: rx_b })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duplex_roundtrip() {
+        let (mut m, mut w) = pair();
+        m.send(b"hello").unwrap();
+        assert_eq!(w.recv().unwrap(), b"hello");
+        w.send(b"world").unwrap();
+        assert_eq!(m.recv().unwrap(), b"world");
+    }
+
+    #[test]
+    fn works_across_threads() {
+        let (mut m, mut w) = pair();
+        let h = std::thread::spawn(move || {
+            let got = w.recv().unwrap();
+            w.send(&got).unwrap();
+        });
+        m.send(b"ping").unwrap();
+        assert_eq!(m.recv().unwrap(), b"ping");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn closed_peer_errors() {
+        let (mut m, w) = pair();
+        drop(w);
+        assert!(m.send(b"x").is_err() || m.recv().is_err());
+    }
+}

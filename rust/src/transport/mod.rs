@@ -1,0 +1,18 @@
+//! Transports: the byte-level substrate under the distributed runner.
+//!
+//! * [`codec`] — explicit little-endian wire format for protocol frames;
+//!   the frame sizes are consistent with the simulated bit accounting.
+//! * [`local`] — in-process mpsc channel transport.
+//! * [`tcp`]   — length-prefixed frames over real TCP sockets (std::net).
+
+pub mod codec;
+pub mod local;
+pub mod tcp;
+
+use anyhow::Result;
+
+/// A bidirectional, blocking, framed connection endpoint.
+pub trait Conn: Send {
+    fn send(&mut self, frame: &[u8]) -> Result<()>;
+    fn recv(&mut self) -> Result<Vec<u8>>;
+}

@@ -1,0 +1,96 @@
+//! TCP transport: u32-length-prefixed frames over std::net sockets.
+//! Exercised by the distributed runner's TCP mode and the transport
+//! integration test (real sockets on 127.0.0.1).
+
+use super::Conn;
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+pub struct TcpConn {
+    stream: TcpStream,
+}
+
+impl TcpConn {
+    pub fn new(stream: TcpStream) -> Result<Self> {
+        stream.set_nodelay(true).context("set_nodelay")?;
+        Ok(TcpConn { stream })
+    }
+
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Self::new(stream)
+    }
+}
+
+impl Conn for TcpConn {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        let len = frame.len() as u32;
+        self.stream.write_all(&len.to_le_bytes()).context("tcp write len")?;
+        self.stream.write_all(frame).context("tcp write frame")?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut len_bytes = [0u8; 4];
+        self.stream.read_exact(&mut len_bytes).context("tcp read len")?;
+        let len = u32::from_le_bytes(len_bytes) as usize;
+        anyhow::ensure!(len <= 1 << 30, "frame too large: {len}");
+        let mut buf = vec![0u8; len];
+        self.stream.read_exact(&mut buf).context("tcp read frame")?;
+        Ok(buf)
+    }
+}
+
+/// Accept `n` connections on an ephemeral local port; returns the port and
+/// a handle producing the accepted master-side conns in arrival order.
+pub fn listen_local(n: usize) -> Result<(u16, std::thread::JoinHandle<Result<Vec<TcpConn>>>)> {
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
+    let port = listener.local_addr()?.port();
+    let handle = std::thread::spawn(move || {
+        let mut conns = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (stream, _) = listener.accept().context("accept")?;
+            conns.push(TcpConn::new(stream)?);
+        }
+        Ok(conns)
+    });
+    Ok((port, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_over_loopback() {
+        let (port, acceptor) = listen_local(1).unwrap();
+        let client = std::thread::spawn(move || {
+            let mut c = TcpConn::connect(&format!("127.0.0.1:{port}")).unwrap();
+            c.send(b"abc").unwrap();
+            let echo = c.recv().unwrap();
+            assert_eq!(echo, b"abc--reply");
+        });
+        let mut server_conns = acceptor.join().unwrap().unwrap();
+        let got = server_conns[0].recv().unwrap();
+        assert_eq!(got, b"abc");
+        let mut reply = got.clone();
+        reply.extend_from_slice(b"--reply");
+        server_conns[0].send(&reply).unwrap();
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn large_frame() {
+        let (port, acceptor) = listen_local(1).unwrap();
+        let payload: Vec<u8> = (0..1_000_000u32).map(|i| (i % 251) as u8).collect();
+        let p2 = payload.clone();
+        let client = std::thread::spawn(move || {
+            let mut c = TcpConn::connect(&format!("127.0.0.1:{port}")).unwrap();
+            c.send(&p2).unwrap();
+        });
+        let mut conns = acceptor.join().unwrap().unwrap();
+        assert_eq!(conns[0].recv().unwrap(), payload);
+        client.join().unwrap();
+    }
+}

@@ -1,0 +1,247 @@
+//! Small dense linear-algebra helpers on slices. The coordinator's hot path
+//! (aggregation, compressor input prep, oracle matvecs) runs through these;
+//! they are written so LLVM auto-vectorizes them (chunked accumulators, no
+//! bounds checks in the inner loop).
+
+/// Dot product with 4-way unrolled accumulators (f64).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Dot product of an f32 row against an f64 vector (oracle inner loop:
+/// data stays f32, model/state stays f64).
+#[inline]
+pub fn dot_f32_f64(row: &[f32], x: &[f64]) -> f64 {
+    debug_assert_eq!(row.len(), x.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = row.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += row[j] as f64 * x[j];
+        acc[1] += row[j + 1] as f64 * x[j + 1];
+        acc[2] += row[j + 2] as f64 * x[j + 2];
+        acc[3] += row[j + 3] as f64 * x[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..row.len() {
+        s += row[j] as f64 * x[j];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y += alpha * row (f32 row into f64 accumulator).
+#[inline]
+pub fn axpy_f32(alpha: f64, row: &[f32], y: &mut [f64]) {
+    debug_assert_eq!(row.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(row) {
+        *yi += alpha * *xi as f64;
+    }
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm2_sq(v: &[f64]) -> f64 {
+    dot(v, v)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(v: &[f64]) -> f64 {
+    norm2_sq(v).sqrt()
+}
+
+/// Squared distance ||a - b||^2.
+#[inline]
+pub fn dist_sq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// v *= alpha
+#[inline]
+pub fn scale(v: &mut [f64], alpha: f64) {
+    for x in v.iter_mut() {
+        *x *= alpha;
+    }
+}
+
+/// Mean of a set of equal-length vectors.
+pub fn mean_vec(vs: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!vs.is_empty());
+    let d = vs[0].len();
+    let mut out = vec![0.0; d];
+    for v in vs {
+        axpy(1.0, v, &mut out);
+    }
+    scale(&mut out, 1.0 / vs.len() as f64);
+    out
+}
+
+/// Largest eigenvalue of the PSD matrix `M = A^T A / rows_scale` given the
+/// row-major f32 matrix A (n x d), via power iteration. Used for smoothness
+/// constants (L_i for logreg/lstsq).
+pub fn spectral_norm_sq_ata(a: &[f32], n: usize, d: usize, iters: usize, seed: u64) -> f64 {
+    assert_eq!(a.len(), n * d);
+    if n == 0 || d == 0 {
+        return 0.0;
+    }
+    let mut rng = crate::util::rng::Rng::seed(seed);
+    let mut v: Vec<f64> = (0..d).map(|_| rng.next_normal()).collect();
+    let nv = norm2(&v).max(1e-300);
+    scale(&mut v, 1.0 / nv);
+    let mut lambda = 0.0;
+    let mut av = vec![0.0f64; n];
+    let mut w = vec![0.0f64; d];
+    for _ in 0..iters {
+        // av = A v ; w = A^T av
+        for (i, avi) in av.iter_mut().enumerate() {
+            *avi = dot_f32_f64(&a[i * d..(i + 1) * d], &v);
+        }
+        w.iter_mut().for_each(|x| *x = 0.0);
+        for (i, avi) in av.iter().enumerate() {
+            axpy_f32(*avi, &a[i * d..(i + 1) * d], &mut w);
+        }
+        lambda = norm2(&w);
+        if lambda <= 1e-300 {
+            return 0.0;
+        }
+        for (vi, wi) in v.iter_mut().zip(&w) {
+            *vi = wi / lambda;
+        }
+    }
+    lambda // = lambda_max(A^T A)
+}
+
+/// Smallest eigenvalue of A^T A (d x d, PSD) via power iteration on
+/// (c I - A^T A) with c = lambda_max. Used for the least-squares PL constant.
+pub fn lambda_min_ata(a: &[f32], n: usize, d: usize, iters: usize, seed: u64) -> f64 {
+    let lmax = spectral_norm_sq_ata(a, n, d, iters, seed);
+    if lmax == 0.0 {
+        return 0.0;
+    }
+    let c = lmax * 1.0001;
+    let mut rng = crate::util::rng::Rng::seed(seed ^ 0xABCD);
+    let mut v: Vec<f64> = (0..d).map(|_| rng.next_normal()).collect();
+    let nv = norm2(&v);
+    scale(&mut v, 1.0 / nv);
+    let mut av = vec![0.0f64; n];
+    let mut w = vec![0.0f64; d];
+    let mut mu = 0.0;
+    for _ in 0..iters {
+        for (i, avi) in av.iter_mut().enumerate() {
+            *avi = dot_f32_f64(&a[i * d..(i + 1) * d], &v);
+        }
+        w.iter_mut().for_each(|x| *x = 0.0);
+        for (i, avi) in av.iter().enumerate() {
+            axpy_f32(*avi, &a[i * d..(i + 1) * d], &mut w);
+        }
+        // u = c v - A^T A v
+        for j in 0..d {
+            w[j] = c * v[j] - w[j];
+        }
+        mu = norm2(&w);
+        if mu <= 1e-300 {
+            break;
+        }
+        for (vi, wi) in v.iter_mut().zip(&w) {
+            *vi = wi / mu;
+        }
+    }
+    (c - mu).max(0.0) // lambda_min(A^T A)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..13).map(|i| i as f64 * 0.5).collect();
+        let b: Vec<f64> = (0..13).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axpy_and_norm() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dist_and_scale() {
+        let a = vec![1.0, 2.0];
+        let b = vec![4.0, 6.0];
+        assert!((dist_sq(&a, &b) - 25.0).abs() < 1e-12);
+        let mut v = vec![2.0, -4.0];
+        scale(&mut v, 0.5);
+        assert_eq!(v, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn mean_vec_averages() {
+        let m = mean_vec(&[vec![1.0, 2.0], vec![3.0, 6.0]]);
+        assert_eq!(m, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        // A = diag(3, 1) as 2x2 f32 row-major; A^T A = diag(9, 1).
+        let a = [3.0f32, 0.0, 0.0, 1.0];
+        let l = spectral_norm_sq_ata(&a, 2, 2, 200, 1);
+        assert!((l - 9.0).abs() < 1e-6, "{l}");
+        let lmin = lambda_min_ata(&a, 2, 2, 400, 1);
+        assert!((lmin - 1.0).abs() < 1e-3, "{lmin}");
+    }
+
+    #[test]
+    fn spectral_norm_random_vs_gram_trace_bound() {
+        let mut rng = crate::util::rng::Rng::seed(5);
+        let (n, d) = (40, 7);
+        let a: Vec<f32> = (0..n * d).map(|_| rng.next_normal() as f32).collect();
+        let l = spectral_norm_sq_ata(&a, n, d, 300, 2);
+        // trace(A^T A) >= lambda_max >= trace / d
+        let trace: f64 = a.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        assert!(l <= trace + 1e-6);
+        assert!(l >= trace / d as f64 - 1e-6);
+    }
+
+    #[test]
+    fn dot_f32_f64_matches() {
+        let row = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let x = [0.5f64, 0.5, 0.5, 0.5, 0.5];
+        assert!((dot_f32_f64(&row, &x) - 7.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! Offline substrates: PRNG, JSON, dense linear algebra, property-testing.
+//!
+//! These exist because the build environment has no network: serde, rand,
+//! and proptest are unavailable, so the library carries minimal, fully
+//! tested replacements.
+
+pub mod json;
+pub mod linalg;
+pub mod rng;
+pub mod testing;

@@ -1,0 +1,74 @@
+//! Mini property-testing harness (proptest is not vendored offline).
+//!
+//! `for_all_seeds(n, |rng| ...)` runs a property across `n` independent
+//! seeded RNG streams and reports the failing seed so the case can be
+//! replayed deterministically with `replay(seed, f)`.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` for `cases` deterministic seeds; panic with the seed on the
+/// first failure (the closure should panic/assert on violation).
+pub fn for_all_seeds<F: FnMut(&mut Rng)>(cases: u64, mut prop: F) {
+    for seed in 0..cases {
+        let mut rng = Rng::seed(0x5EED_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed for seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Replay one specific seed (debugging helper).
+pub fn replay<F: FnMut(&mut Rng)>(seed: u64, mut prop: F) {
+    let mut rng = Rng::seed(0x5EED_0000 + seed);
+    prop(&mut rng);
+}
+
+/// Random dense vector with entries ~ N(0, scale^2).
+pub fn random_vec(rng: &mut Rng, d: usize, scale: f64) -> Vec<f64> {
+    (0..d).map(|_| scale * rng.next_normal()).collect()
+}
+
+/// Assert a <= b with a small relative slack (floating-point-safe).
+#[track_caller]
+pub fn assert_le_approx(a: f64, b: f64, rel: f64, what: &str) {
+    let slack = rel * b.abs().max(1.0);
+    assert!(a <= b + slack, "{what}: {a} > {b} (+{slack})");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_seeds_passes_trivial_property() {
+        for_all_seeds(10, |rng| {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed for seed")]
+    fn for_all_seeds_reports_failing_seed() {
+        for_all_seeds(5, |rng| {
+            assert!(rng.next_f64() < 0.5, "too big");
+        });
+    }
+
+    #[test]
+    fn random_vec_has_expected_len_and_scale() {
+        let mut rng = Rng::seed(1);
+        let v = random_vec(&mut rng, 1000, 2.0);
+        assert_eq!(v.len(), 1000);
+        let var: f64 = v.iter().map(|x| x * x).sum::<f64>() / 1000.0;
+        assert!((var - 4.0).abs() < 0.8, "var {var}");
+    }
+}

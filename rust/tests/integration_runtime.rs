@@ -1,0 +1,203 @@
+//! Three-layer composition tests: the AOT HLO artifacts (L2+L1, built by
+//! `make artifacts`) executed through PJRT must agree with the pure-Rust
+//! oracles, and the PJRT-backed EF21 run must track the simulated one.
+//!
+//! These tests are skipped (with a notice) if `artifacts/manifest.json` is
+//! absent — run `make artifacts` first.
+
+use ef21::data::{partition, synth};
+use ef21::oracle::xla::{ShardKind, XlaShardOracle, XlaTransformerOracle};
+use ef21::oracle::{GradOracle, LogRegOracle, LstsqOracle};
+use ef21::runtime::Runtime;
+use std::rc::Rc;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    match Runtime::from_default_dir() {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn xla_logreg_oracle_matches_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    let ds = synth::generate("phishing", 0);
+    let shards = partition::shards(&ds, 20);
+    let lam = 0.1;
+    // Check the first, middle, and last (larger) shard.
+    for &i in &[0usize, 10, 19] {
+        let mut xla =
+            XlaShardOracle::new(rt.clone(), "phishing", ShardKind::LogReg, shards[i], lam)
+                .expect("xla oracle");
+        let mut rust = LogRegOracle::new(shards[i], lam);
+        let mut rng = ef21::util::rng::Rng::seed(7 + i as u64);
+        for _ in 0..3 {
+            let x: Vec<f64> = (0..ds.d).map(|_| 0.5 * rng.next_normal()).collect();
+            let (lx, gx) = xla.loss_grad(&x);
+            let (lr, gr) = rust.loss_grad(&x);
+            assert!(
+                (lx - lr).abs() < 1e-4 * lr.abs().max(1.0),
+                "shard {i}: loss {lx} vs {lr}"
+            );
+            let num: f64 = gx.iter().zip(&gr).map(|(a, b)| (a - b) * (a - b)).sum();
+            let den: f64 = gr.iter().map(|v| v * v).sum::<f64>().max(1e-12);
+            assert!(
+                (num / den).sqrt() < 1e-3,
+                "shard {i}: grad rel err {}",
+                (num / den).sqrt()
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_lstsq_oracle_matches_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    let ds = synth::generate("mushrooms", 0);
+    let shards = partition::shards(&ds, 20);
+    let mut xla = XlaShardOracle::new(rt.clone(), "mushrooms", ShardKind::Lstsq, shards[3], 0.0)
+        .expect("xla oracle");
+    let mut rust = LstsqOracle::new(shards[3]);
+    let mut rng = ef21::util::rng::Rng::seed(3);
+    let x: Vec<f64> = (0..ds.d).map(|_| 0.3 * rng.next_normal()).collect();
+    let (lx, gx) = xla.loss_grad(&x);
+    let (lr, gr) = rust.loss_grad(&x);
+    assert!((lx - lr).abs() < 1e-3 * lr.abs().max(1.0), "{lx} vs {lr}");
+    for (a, b) in gx.iter().zip(&gr) {
+        assert!((a - b).abs() < 1e-3 * b.abs().max(1e-3), "{a} vs {b}");
+    }
+}
+
+/// End-to-end: EF21 with XLA-backed oracles takes the same trajectory as
+/// EF21 with pure-Rust oracles (to f32 wire/compute precision).
+#[test]
+fn ef21_over_xla_oracles_tracks_simulation() {
+    let Some(rt) = runtime() else { return };
+    let ds = synth::generate("phishing", 0);
+    let n_workers = 4; // 4 shards through the padded artifact
+    let shards = partition::shards(&ds, n_workers);
+    let lam = 0.1;
+    // Note: the phishing artifact pads to the 20-way max shard size, which
+    // is smaller than a 4-way shard — so re-split 20-way and take 4 shards.
+    let shards20 = partition::shards(&ds, 20);
+    let _ = shards;
+    let picks = [0usize, 5, 10, 19];
+
+    let make = |use_xla: bool| -> Vec<Box<dyn GradOracle>> {
+        picks
+            .iter()
+            .map(|&i| {
+                if use_xla {
+                    Box::new(
+                        XlaShardOracle::new(
+                            rt.clone(),
+                            "phishing",
+                            ShardKind::LogReg,
+                            shards20[i],
+                            lam,
+                        )
+                        .unwrap(),
+                    ) as Box<dyn GradOracle>
+                } else {
+                    Box::new(LogRegOracle::new(shards20[i], lam)) as Box<dyn GradOracle>
+                }
+            })
+            .collect()
+    };
+
+    use ef21::algo::AlgoSpec;
+    use ef21::coordinator::runner::{run_protocol, RunConfig};
+    use std::sync::Arc;
+    let gamma = 0.05;
+    let run = |oracles| {
+        let (m, w) = ef21::algo::build(
+            AlgoSpec::Ef21,
+            vec![0.0; ds.d],
+            oracles,
+            Arc::new(ef21::compress::TopK::new(2)),
+            gamma,
+            0,
+        );
+        run_protocol(m, w, &RunConfig::rounds(8))
+    };
+    let h_xla = run(make(true));
+    let h_rust = run(make(false));
+    for (a, b) in h_xla.records.iter().zip(&h_rust.records) {
+        assert!(
+            (a.loss - b.loss).abs() < 2e-3 * b.loss.abs().max(1.0),
+            "round {}: {} vs {}",
+            a.round,
+            a.loss,
+            b.loss
+        );
+    }
+}
+
+#[test]
+fn transformer_step_artifact_trains() {
+    let Some(rt) = runtime() else { return };
+    let entry = rt.entry("transformer_step").expect("entry").clone();
+    let layout = ef21::nn::ParamLayout::from_entry(&entry).expect("layout");
+    let mut rng = ef21::util::rng::Rng::seed(0);
+    let flat = layout.init_flat(&mut rng);
+
+    let vocab = entry.meta_usize("vocab").unwrap();
+    let batch = entry.meta_usize("batch").unwrap();
+    let seq = entry.meta_usize("seq_len").unwrap();
+    let mut sampler = ef21::nn::tokens::TokenSampler::new(vocab, 0.1, 1, 2);
+    let mut oracle = XlaTransformerOracle::new(
+        rt.clone(),
+        Box::new(move || sampler.batch(batch, seq)),
+    )
+    .expect("oracle");
+
+    // Initial loss ≈ ln(vocab) for a fresh model.
+    let (l0, g0) = oracle.step_f32(&flat).expect("step");
+    assert!(
+        (l0 - (vocab as f64).ln()).abs() < 1.0,
+        "initial loss {l0} vs ln(V)={}",
+        (vocab as f64).ln()
+    );
+    assert_eq!(g0.len(), layout.n_params);
+
+    // A few SGD steps must reduce the loss.
+    let mut x: Vec<f64> = flat.iter().map(|&v| v as f64).collect();
+    let mut last = l0;
+    for _ in 0..5 {
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let (l, g) = oracle.step_f32(&xf).expect("step");
+        for (xi, gi) in x.iter_mut().zip(&g) {
+            *xi -= 0.5 * gi;
+        }
+        last = l;
+    }
+    assert!(last < l0, "loss did not decrease: {l0} -> {last}");
+
+    // Eval artifact returns accuracy in [0, 1].
+    let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+    let mut eval_sampler = ef21::nn::tokens::TokenSampler::new(vocab, 0.1, 1, 99);
+    let tokens = eval_sampler.batch(batch, seq);
+    let (el, ea) = oracle.eval(&xf, &tokens).expect("eval");
+    assert!(el.is_finite() && (0.0..=1.0).contains(&ea));
+}
+
+#[test]
+fn compress_mask_artifact_matches_rust_topk_threshold() {
+    let Some(rt) = runtime() else { return };
+    let entry = rt.entry("compress_mask").expect("entry").clone();
+    let n = entry.meta_usize("n").unwrap();
+    let mut rng = ef21::util::rng::Rng::seed(5);
+    let v: Vec<f32> = (0..n).map(|_| rng.next_normal() as f32).collect();
+    let thresh = 1.5f32;
+    let v_lit = ef21::runtime::client::lit_f32_1d_exact(&v);
+    let t_lit = ef21::runtime::client::lit_f32_1d_exact(&[thresh]);
+    let outs = rt.execute("compress_mask", &[v_lit, t_lit]).expect("exec");
+    let masked = outs[0].to_vec::<f32>().expect("vec");
+    for (o, &x) in masked.iter().zip(&v) {
+        let want = if x.abs() >= thresh { x } else { 0.0 };
+        assert_eq!(*o, want);
+    }
+}

@@ -1,0 +1,44 @@
+//! Table-2 rate verification as enforced tests (the `exp rates` driver
+//! prints the same quantities): Theorem 1's O(1/T) bound and Theorem 2's
+//! linear rate, checked along instrumented EF21 runs.
+
+use ef21::exp::rates::{check_theorem1, check_theorem2};
+
+#[test]
+fn theorem1_o_one_over_t_bound_holds() {
+    for seed in [0u64, 1, 2] {
+        let r = check_theorem1(600, seed);
+        assert!(
+            r.holds,
+            "seed {seed}: measured {:.4e} > predicted {:.4e}",
+            r.measured, r.predicted
+        );
+    }
+}
+
+#[test]
+fn theorem2_linear_rate_holds() {
+    for seed in [0u64, 1, 2] {
+        let r = check_theorem2(800, seed);
+        assert!(
+            r.holds,
+            "seed {seed}: measured {:.4e} > predicted {:.4e}",
+            r.measured, r.predicted
+        );
+    }
+}
+
+/// The O(1/T) character: doubling T roughly halves the running-mean squared
+/// gradient norm bound's RHS, and the measured quantity keeps up (ratio
+/// test on the measured values at T and 2T — sublinear decay at least).
+#[test]
+fn measured_mean_grad_decays_with_t() {
+    let r1 = check_theorem1(300, 7);
+    let r2 = check_theorem1(1200, 7);
+    assert!(
+        r2.measured < r1.measured * 0.6,
+        "mean |grad|^2 did not decay with T: {:.3e} -> {:.3e}",
+        r1.measured,
+        r2.measured
+    );
+}
