@@ -9,6 +9,7 @@ use ef21::data::{partition, synth};
 use ef21::oracle::{GradOracle, LogRegOracle, LstsqOracle};
 use ef21::util::rng::Rng;
 use harness::{bench, black_box, header};
+#[cfg(feature = "xla-runtime")]
 use std::rc::Rc;
 
 fn main() {
@@ -28,6 +29,11 @@ fn main() {
         });
     }
 
+    xla_section(&mut rng);
+}
+
+#[cfg(feature = "xla-runtime")]
+fn xla_section(rng: &mut Rng) {
     match ef21::runtime::Runtime::from_default_dir() {
         Err(e) => eprintln!("(skipping XLA oracle bench: {e:#})"),
         Ok(rt) => {
@@ -51,4 +57,9 @@ fn main() {
             }
         }
     }
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+fn xla_section(_rng: &mut Rng) {
+    eprintln!("(xla-runtime feature disabled; skipping XLA oracle bench)");
 }

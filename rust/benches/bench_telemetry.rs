@@ -1,0 +1,51 @@
+//! §Perf telemetry instrument: hot-path cost of the metrics facade — the
+//! disabled (noop) fast path that every ordinary run pays, versus the
+//! enabled path with per-record registry lookup, versus a cached handle.
+//! The noop rows are the ones that must stay ~1ns so `bench_round` is
+//! unaffected by instrumentation (< 2% acceptance budget).
+
+#[path = "harness.rs"]
+mod harness;
+
+use ef21::telemetry::{self, keys};
+use harness::{bench, black_box, header};
+
+fn main() {
+    header("telemetry disabled (noop fast path)");
+    assert!(!telemetry::is_enabled());
+    bench("counter lookup+incr       (noop)", || {
+        telemetry::counter(keys::TX_BYTES).incr(1);
+    });
+    bench("histogram span via maybe_now (noop)", || {
+        let t0 = telemetry::maybe_now();
+        telemetry::record_elapsed_ns("bench.ns", t0);
+    });
+    let cached = telemetry::counter(keys::TX_BYTES);
+    bench("counter incr, cached handle (noop)", || {
+        cached.incr(1);
+    });
+
+    telemetry::enable();
+    header("telemetry enabled");
+    bench("counter lookup+incr       (live)", || {
+        telemetry::counter(keys::TX_BYTES).incr(1);
+    });
+    let cached = telemetry::counter(keys::TX_BYTES);
+    bench("counter incr, cached handle (live)", || {
+        cached.incr(1);
+    });
+    bench("histogram span via maybe_now (live)", || {
+        let t0 = telemetry::maybe_now();
+        telemetry::record_elapsed_ns("bench.ns", t0);
+    });
+    let hist = telemetry::histogram("bench.cached.ns");
+    let mut v = 1u64;
+    bench("histogram record, cached handle (live)", || {
+        v = v.wrapping_mul(6364136223846793005).wrapping_add(1);
+        hist.record(v >> 40);
+    });
+    bench("snapshot render (prometheus)", || {
+        black_box(telemetry::snapshot().render_prometheus());
+    });
+    telemetry::disable();
+}

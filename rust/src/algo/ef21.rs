@@ -236,7 +236,8 @@ mod tests {
             .into_iter()
             .enumerate()
             .map(|(i, o)| {
-                Ef21Worker::new(o, Arc::new(TopK::new(1)) as Arc<dyn Compressor>, Rng::seed(i as u64))
+                let c = Arc::new(TopK::new(1)) as Arc<dyn Compressor>;
+                Ef21Worker::new(o, c, Rng::seed(i as u64))
             })
             .collect();
         let msgs: Vec<_> = ws.iter_mut().map(|w| w.init(&[0.5; 3])).collect();

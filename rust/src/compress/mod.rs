@@ -70,25 +70,83 @@ impl<T: Compressor + ?Sized> Compressor for Box<T> {
     }
 }
 
+/// Telemetry wrapper: meters each apply under
+/// `compress.<name>.ns` (latency histogram) and `compress.<name>.sparsity`
+/// (gauge, achieved `nnz/d` of the last output). Costs one atomic load per
+/// apply when telemetry is disabled; when enabled, the handles are
+/// resolved once and cached so registry lookups stay off the per-round
+/// hot path.
+pub struct Instrumented {
+    inner: Box<dyn Compressor>,
+    ns_key: String,
+    sparsity_key: String,
+    ns: std::sync::OnceLock<crate::telemetry::Histogram>,
+    sparsity: std::sync::OnceLock<crate::telemetry::Gauge>,
+}
+
+impl Instrumented {
+    pub fn wrap(inner: Box<dyn Compressor>) -> Box<dyn Compressor> {
+        let name = inner.name();
+        Box::new(Instrumented {
+            ns_key: format!("compress.{name}.ns"),
+            sparsity_key: format!("compress.{name}.sparsity"),
+            inner,
+            ns: std::sync::OnceLock::new(),
+            sparsity: std::sync::OnceLock::new(),
+        })
+    }
+}
+
+impl Compressor for Instrumented {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn alpha(&self, d: usize) -> f64 {
+        self.inner.alpha(d)
+    }
+
+    fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
+        let t0 = crate::telemetry::maybe_now();
+        let out = self.inner.compress(v, rng);
+        // t0 is Some only when telemetry was enabled at apply time, so the
+        // cached handles are only ever initialized live, never as noops.
+        if let Some(t0) = t0 {
+            self.ns
+                .get_or_init(|| crate::telemetry::histogram(&self.ns_key))
+                .record(t0.elapsed().as_nanos() as u64);
+            self.sparsity
+                .get_or_init(|| crate::telemetry::gauge(&self.sparsity_key))
+                .set(out.sparse.nnz() as f64 / v.len().max(1) as f64);
+        }
+        out
+    }
+
+    fn is_deterministic(&self) -> bool {
+        self.inner.is_deterministic()
+    }
+}
+
 /// Build a compressor from a CLI/config spec string:
 /// `"top<k>"`, `"rand<k>"`, `"sign"`, `"identity"` / `"none"`.
+/// The result is telemetry-[`Instrumented`].
 pub fn from_spec(spec: &str) -> anyhow::Result<Box<dyn Compressor>> {
     let s = spec.trim().to_ascii_lowercase();
     if s == "identity" || s == "none" {
-        return Ok(Box::new(Identity));
+        return Ok(Instrumented::wrap(Box::new(Identity)));
     }
     if s == "sign" {
-        return Ok(Box::new(ScaledSign));
+        return Ok(Instrumented::wrap(Box::new(ScaledSign)));
     }
     if let Some(k) = s.strip_prefix("top") {
         let k: usize = k.parse()?;
         anyhow::ensure!(k >= 1, "top-k needs k >= 1");
-        return Ok(Box::new(TopK::new(k)));
+        return Ok(Instrumented::wrap(Box::new(TopK::new(k))));
     }
     if let Some(k) = s.strip_prefix("rand") {
         let k: usize = k.parse()?;
         anyhow::ensure!(k >= 1, "rand-k needs k >= 1");
-        return Ok(Box::new(RandK::new(k)));
+        return Ok(Instrumented::wrap(Box::new(RandK::new(k))));
     }
     anyhow::bail!("unknown compressor spec '{spec}' (try top1, rand8, sign, identity)")
 }

@@ -24,6 +24,12 @@ pub struct RunSpec {
     pub seed: u64,
     /// Record every k rounds.
     pub record_every: usize,
+    /// Telemetry sink spec: `off`, `jsonl:<path>`, `tcp:<port>`, or a
+    /// comma-separated combination. Carried for library consumers, who
+    /// pass it to [`crate::telemetry::init_from_spec`]; the CLI reads
+    /// the same `--telemetry` flag directly in `main::dispatch` (before
+    /// any subcommand parses a RunSpec).
+    pub telemetry: String,
 }
 
 impl Default for RunSpec {
@@ -39,6 +45,7 @@ impl Default for RunSpec {
             lam: 0.1,
             seed: 0,
             record_every: 1,
+            telemetry: "off".into(),
         }
     }
 }
@@ -66,6 +73,9 @@ impl RunSpec {
         s.lam = args.get_parse("lam")?.unwrap_or(s.lam);
         s.seed = args.get_parse("seed")?.unwrap_or(s.seed);
         s.record_every = args.get_parse("record-every")?.unwrap_or(s.record_every);
+        if let Some(t) = args.get_str("telemetry") {
+            s.telemetry = t.to_string();
+        }
         Ok(s)
     }
 
@@ -101,6 +111,17 @@ mod tests {
         assert_eq!(s.rounds, 50);
         assert_eq!(s.gamma_mult, 8.0);
         assert_eq!(s.n_workers, 20); // default kept
+        assert_eq!(s.telemetry, "off"); // default kept
+    }
+
+    #[test]
+    fn telemetry_spec_is_carried() {
+        let args = cli::Args::from_vec(vec![
+            "--telemetry".into(),
+            "jsonl:/tmp/m.jsonl,tcp:9100".into(),
+        ]);
+        let s = RunSpec::from_args(&args).unwrap();
+        assert_eq!(s.telemetry, "jsonl:/tmp/m.jsonl,tcp:9100");
     }
 
     #[test]

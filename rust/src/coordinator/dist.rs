@@ -9,6 +9,7 @@
 
 use crate::algo::{MasterNode, WireMsg, WorkerNode};
 use crate::metrics::{History, RoundRecord};
+use crate::telemetry::{self, keys};
 use crate::transport::codec::{decode, encode, Frame};
 use crate::transport::{local, tcp, Conn};
 use anyhow::{Context, Result};
@@ -110,7 +111,11 @@ where
                 handles.push(std::thread::spawn(move || {
                     // Stagger connects so accept order == worker order.
                     std::thread::sleep(std::time::Duration::from_millis(5 * i as u64));
-                    let mut conn = tcp::TcpConn::connect(&format!("127.0.0.1:{port}"))?;
+                    let mut conn = tcp::TcpConn::connect_with_retry(
+                        &format!("127.0.0.1:{port}"),
+                        5,
+                        std::time::Duration::from_millis(50),
+                    )?;
                     // Identify ourselves first so the master can order us.
                     conn.send(&(i as u32).to_le_bytes())?;
                     let worker = mk(i);
@@ -145,10 +150,14 @@ where
     }
     let (msgs, _losses, fb) = gather(&mut master_conns)?;
     frame_bytes += fb;
-    bits_cum += msgs.iter().map(|m| m.bits()).sum::<u64>();
+    let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
+    bits_cum += init_bits;
+    telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
+    telemetry::counter(keys::UPLINK_FRAME_BYTES).incr(fb);
     master.init_absorb(&msgs);
 
     for t in 0..rounds {
+        let t_round = telemetry::maybe_now();
         let x = master.begin_round();
         let bytes = encode(&Frame::Model(x));
         for c in master_conns.iter_mut() {
@@ -156,8 +165,13 @@ where
         }
         let (msgs, losses, fb) = gather(&mut master_conns)?;
         frame_bytes += fb;
-        bits_cum += msgs.iter().map(|m| m.bits()).sum::<u64>();
+        let round_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
+        bits_cum += round_bits;
+        telemetry::counter(keys::UPLINK_BITS).incr(round_bits);
+        telemetry::counter(keys::UPLINK_FRAME_BYTES).incr(fb);
         master.absorb(&msgs);
+        telemetry::counter(keys::ROUNDS).incr(1);
+        telemetry::record_elapsed_ns(keys::ROUND_NS, t_round);
         let loss = losses.iter().sum::<f64>() / n;
         history.records.push(RoundRecord {
             round: t,
@@ -199,7 +213,8 @@ mod tests {
         let c: Arc<dyn crate::compress::Compressor> = Arc::new(TopK::new(1));
         // Sequential reference.
         let oracles: Vec<Box<dyn GradOracle>> = (0..3).map(quad).collect();
-        let (m, ws) = crate::algo::build(AlgoSpec::Ef21, vec![1.0; 3], oracles, c.clone(), gamma, 9);
+        let (m, ws) =
+            crate::algo::build(AlgoSpec::Ef21, vec![1.0; 3], oracles, c.clone(), gamma, 9);
         let h_seq = crate::coordinator::runner::run_protocol(
             m,
             ws,

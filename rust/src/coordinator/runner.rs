@@ -5,6 +5,7 @@
 
 use crate::algo::{MasterNode, WireMsg, WorkerNode};
 use crate::metrics::{History, RoundRecord};
+use crate::telemetry::{self, keys};
 use crate::util::linalg;
 
 /// Runner configuration.
@@ -83,6 +84,19 @@ fn observe(workers: &[Box<dyn WorkerNode>]) -> (f64, f64, f64, f64) {
 
 /// Drive the full protocol: init, then `cfg.rounds` rounds, metering the
 /// uplink and recording metrics.
+///
+/// The divergence guard runs **every** round on the workers' cached
+/// losses (an O(n) scan — the cached values are exactly what
+/// [`observe`]'s loss average uses), so a blow-up stops the run at the
+/// round it happens even when `record_every > 1` and no gradient
+/// tolerance is set; only the full O(n·d) gradient aggregation stays
+/// gated on recording rounds.
+///
+/// Telemetry (when enabled): `transport.uplink.bits` is incremented with
+/// exactly the accounted bits — over one run its delta equals
+/// `bits_per_client * n` exactly (the counter itself is process-wide and
+/// sums across runs) — plus `coordinator.rounds` /
+/// `coordinator.round.ns` / `coordinator.divergence.aborts`.
 pub fn run_protocol(
     mut master: Box<dyn MasterNode>,
     mut workers: Vec<Box<dyn WorkerNode>>,
@@ -96,19 +110,29 @@ pub fn run_protocol(
     // Init phase: g_i^0 / w_i^0 at x^0 (counted as communication).
     let x0 = master.x().to_vec();
     let msgs: Vec<WireMsg> = workers.iter_mut().map(|w| w.init(&x0)).collect();
-    bits_cum += msgs.iter().map(|m| m.bits()).sum::<u64>();
+    let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
+    bits_cum += init_bits;
+    telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
     master.init_absorb(&msgs);
 
     for t in 0..cfg.rounds {
+        let t_round = telemetry::maybe_now();
         let x = master.begin_round();
         let msgs: Vec<WireMsg> = workers.iter_mut().map(|w| w.round(&x)).collect();
-        bits_cum += msgs.iter().map(|m| m.bits()).sum::<u64>();
+        let round_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
+        bits_cum += round_bits;
+        telemetry::counter(keys::UPLINK_BITS).incr(round_bits);
         master.absorb(&msgs);
+        telemetry::counter(keys::ROUNDS).incr(1);
+        telemetry::record_elapsed_ns(keys::ROUND_NS, t_round);
 
         let record_now = t % cfg.record_every == 0 || t + 1 == cfg.rounds;
-        if record_now || cfg.grad_tol.is_some() {
+        // Cheap every-round divergence check on the cached worker losses.
+        let mean_loss = workers.iter().map(|w| w.last_loss()).sum::<f64>() / n;
+        let diverged = !mean_loss.is_finite() || mean_loss.abs() > cfg.divergence_cap;
+        if record_now || diverged || cfg.grad_tol.is_some() {
             let (loss, grad_sq, gt, dcgd) = observe(&workers);
-            if record_now {
+            if record_now || diverged {
                 history.records.push(RoundRecord {
                     round: t,
                     bits_per_client: bits_cum as f64 / n,
@@ -118,18 +142,8 @@ pub fn run_protocol(
                     dcgd_frac: dcgd,
                 });
             }
-            if !loss.is_finite() || loss.abs() > cfg.divergence_cap {
-                // Record the blow-up and stop.
-                if !record_now {
-                    history.records.push(RoundRecord {
-                        round: t,
-                        bits_per_client: bits_cum as f64 / n,
-                        loss,
-                        grad_norm_sq: grad_sq,
-                        gt,
-                        dcgd_frac: dcgd,
-                    });
-                }
+            if diverged {
+                telemetry::counter(keys::DIVERGENCE_ABORTS).incr(1);
                 break;
             }
             if let Some(tol) = cfg.grad_tol {
@@ -206,6 +220,35 @@ mod tests {
         let h = run_protocol(m, ws, &RunConfig::rounds(100_000).with_grad_tol(1e-10));
         assert!(h.records.last().unwrap().round < 99_999, "tolerance never hit");
         assert!(h.final_grad_norm_sq() <= 1e-10);
+    }
+
+    #[test]
+    fn divergence_guard_fires_between_record_points() {
+        // The guard runs every round: with a sparse record schedule it
+        // must stop at the same round as with record_every = 1 (it used
+        // to idle on inf until the next recording round).
+        let build = || {
+            crate::algo::build(
+                AlgoSpec::Dcgd,
+                vec![1.0; 3],
+                quads(),
+                Arc::new(TopK::new(1)),
+                10.0,
+                0,
+            )
+        };
+        let mut cfg1 = RunConfig::rounds(100_000);
+        cfg1.divergence_cap = 1e50;
+        let (m, ws) = build();
+        let stop_round = run_protocol(m, ws, &cfg1).records.last().unwrap().round;
+
+        let mut cfg2 = RunConfig::rounds(100_000).with_record_every(5_000);
+        cfg2.divergence_cap = 1e50;
+        let (m, ws) = build();
+        let h = run_protocol(m, ws, &cfg2);
+        let last = h.records.last().unwrap().clone();
+        assert_eq!(last.round, stop_round, "guard was delayed by record_every");
+        assert!(!last.loss.is_finite() || last.loss.abs() > 1e50);
     }
 
     #[test]

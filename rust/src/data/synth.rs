@@ -92,7 +92,9 @@ pub fn load_or_generate(name: &str, data_dir: &std::path::Path, seed: u64) -> Da
         let d_hint = table3(name).map(|(_, d, _)| d);
         match super::libsvm::load(name, &path, d_hint) {
             Ok(ds) => return ds,
-            Err(e) => eprintln!("warning: failed to parse {}: {e:#}; using synthetic", path.display()),
+            Err(e) => {
+                eprintln!("warning: failed to parse {}: {e:#}; using synthetic", path.display())
+            }
         }
     }
     generate(name, seed)

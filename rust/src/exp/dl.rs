@@ -138,7 +138,10 @@ pub fn run_methods(rt: &Rc<Runtime>, cfg: &DlCfg) -> anyhow::Result<FigureData> 
         (AlgoSpec::Gd, "identity", "SGD"),
     ] {
         let (h, el, ea) = run_one(rt, cfg, algo, cspec, label)?;
-        println!("{label:10} final train loss {:.4}  eval loss {el:.4}  eval acc {ea:.4}", h.final_loss());
+        println!(
+            "{label:10} final train loss {:.4}  eval loss {el:.4}  eval acc {ea:.4}",
+            h.final_loss()
+        );
         fig.push(h);
     }
     Ok(fig)
@@ -153,7 +156,10 @@ pub fn run_k_sweep(rt: &Rc<Runtime>, cfg: &DlCfg, fracs: &[f64]) -> anyhow::Resu
         let k = ((n_params as f64 * f) as usize).max(1);
         let label = format!("EF21-SGD k={:.3}D", f);
         let (h, el, ea) = run_one(rt, cfg, AlgoSpec::Ef21, &format!("top{k}"), &label)?;
-        println!("{label:18} final train loss {:.4}  eval loss {el:.4}  eval acc {ea:.4}", h.final_loss());
+        println!(
+            "{label:18} final train loss {:.4}  eval loss {el:.4}  eval acc {ea:.4}",
+            h.final_loss()
+        );
         fig.push(h);
     }
     Ok(fig)

@@ -3,6 +3,7 @@
 //! as CSV curves under `results/` plus a console summary.
 
 pub mod common;
+#[cfg(feature = "xla-runtime")]
 pub mod dl;
 pub mod finetune;
 pub mod gdtune;

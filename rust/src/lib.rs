@@ -15,7 +15,14 @@
 //!     per-worker gradient hot spot, embedded in the L2 artifacts.
 //!
 //! Python never runs at request time: the [`runtime`] module loads the
-//! artifacts via PJRT and [`oracle::xla`] exposes them as gradient oracles.
+//! artifacts via PJRT and `oracle::xla` exposes them as gradient oracles
+//! (both behind the `xla-runtime` feature, which needs the vendored `xla`
+//! PJRT bindings).
+//!
+//! Live observability comes from the [`telemetry`] facade: lock-free
+//! counters/gauges/histograms instrumenting every layer, a JSONL file
+//! sink, and a Prometheus-style TCP exposition endpoint
+//! (`--telemetry jsonl:<path>|tcp:<port>|off` on the CLI).
 //!
 //! Quick start (simulated 20-node EF21 on a Table-3 dataset):
 //!
@@ -58,6 +65,7 @@ pub mod metrics;
 pub mod nn;
 pub mod oracle;
 pub mod runtime;
+pub mod telemetry;
 pub mod theory;
 pub mod transport;
 pub mod util;

@@ -24,7 +24,17 @@ fn main() {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
-    match args.positional.first().map(|s| s.as_str()) {
+    // Global telemetry sinks (shared by every subcommand).
+    let telemetry_spec = args.get_str("telemetry").unwrap_or("off").to_string();
+    let guard = ef21::telemetry::init_from_spec(&telemetry_spec)?;
+    if let Some(port) = guard.prom_port() {
+        eprintln!("telemetry: serving prometheus text on 127.0.0.1:{port}");
+    }
+    if let Some(path) = guard.jsonl_path() {
+        eprintln!("telemetry: writing jsonl snapshots to {}", path.display());
+    }
+
+    let result = match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(args),
         Some("exp") => cmd_exp(args),
         Some("data") => cmd_data(args),
@@ -33,7 +43,10 @@ fn dispatch(args: &Args) -> Result<()> {
             eprintln!("{}", HELP);
             Ok(())
         }
-    }
+    };
+    // Final flush even on command error; surface whichever failed first.
+    let shutdown = guard.shutdown();
+    result.and(shutdown)
 }
 
 const HELP: &str = "\
@@ -43,6 +56,7 @@ USAGE:
   ef21 run  [--algo A] [--k K] [--dataset D] [--workers N] [--gamma-mult M]
             [--rounds T] [--objective logreg|lstsq] [--csv FILE]
             [--transport local|tcp]
+  (all commands) [--telemetry off|jsonl:<path>|tcp:<port>[,...]]
   ef21 exp  stepsize [--dataset D] [--k K] [--max-pow P] [--rounds T] [--all]
   ef21 exp  finetune [--dataset D] [--rounds T] [--tol X]
   ef21 exp  kdep     [--dataset D] [--rounds T]
@@ -183,9 +197,19 @@ fn cmd_exp(args: &Args) -> Result<()> {
         "gdtune" => exp::gdtune::main(args),
         "lstsq" => exp::lstsq::main(args),
         "rates" => exp::rates::main(args),
-        "dl" => exp::dl::main(args),
+        "dl" => cmd_exp_dl(args),
         other => anyhow::bail!("unknown experiment '{other}'"),
     }
+}
+
+#[cfg(feature = "xla-runtime")]
+fn cmd_exp_dl(args: &Args) -> Result<()> {
+    exp::dl::main(args)
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+fn cmd_exp_dl(_args: &Args) -> Result<()> {
+    anyhow::bail!("the dl experiment needs the `xla-runtime` feature (PJRT bindings)")
 }
 
 fn cmd_data(args: &Args) -> Result<()> {
@@ -213,11 +237,9 @@ fn cmd_data(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_artifacts(_args: &Args) -> Result<()> {
-    let rt = ef21::runtime::Runtime::from_default_dir()?;
-    println!("platform: {}", rt.platform());
+fn print_manifest(manifest: &ef21::runtime::Manifest) {
     println!("{:<28} {:>8} {:>8}  file", "artifact", "inputs", "outputs");
-    for (name, e) in &rt.manifest.entries {
+    for (name, e) in &manifest.entries {
         println!(
             "{:<28} {:>8} {:>8}  {}",
             name,
@@ -226,5 +248,22 @@ fn cmd_artifacts(_args: &Args) -> Result<()> {
             e.file.file_name().unwrap().to_string_lossy()
         );
     }
+}
+
+#[cfg(feature = "xla-runtime")]
+fn cmd_artifacts(_args: &Args) -> Result<()> {
+    let rt = ef21::runtime::Runtime::from_default_dir()?;
+    println!("platform: {}", rt.platform());
+    print_manifest(&rt.manifest);
+    Ok(())
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+fn cmd_artifacts(_args: &Args) -> Result<()> {
+    // Without the PJRT client we can still list the manifest.
+    let dir = ef21::runtime::manifest::default_dir();
+    let manifest = ef21::runtime::Manifest::load(&dir)?;
+    println!("platform: (xla-runtime feature disabled; manifest only)");
+    print_manifest(&manifest);
     Ok(())
 }

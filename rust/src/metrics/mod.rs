@@ -142,7 +142,14 @@ mod tests {
     use super::*;
 
     fn rec(round: usize, bits: f64, loss: f64, g2: f64) -> RoundRecord {
-        RoundRecord { round, bits_per_client: bits, loss, grad_norm_sq: g2, gt: f64::NAN, dcgd_frac: f64::NAN }
+        RoundRecord {
+            round,
+            bits_per_client: bits,
+            loss,
+            grad_norm_sq: g2,
+            gt: f64::NAN,
+            dcgd_frac: f64::NAN,
+        }
     }
 
     #[test]

@@ -68,6 +68,7 @@ impl GradOracle for LogRegOracle {
 
     fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
         assert_eq!(x.len(), self.d);
+        let t0 = crate::telemetry::maybe_now();
         let inv_n = 1.0 / self.n as f64;
         let mut loss = 0.0f64;
         let mut grad = vec![0.0f64; self.d];
@@ -88,6 +89,7 @@ impl GradOracle for LogRegOracle {
             reg += x2 / (1.0 + x2);
             grad[j] += self.lam * 2.0 * xj / ((1.0 + x2) * (1.0 + x2));
         }
+        crate::telemetry::record_grad_eval(t0);
         (loss + self.lam * reg, grad)
     }
 

@@ -43,6 +43,7 @@ impl GradOracle for LstsqOracle {
 
     fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
         assert_eq!(x.len(), self.d);
+        let t0 = crate::telemetry::maybe_now();
         let inv_n = 1.0 / self.n as f64;
         let mut loss = 0.0;
         let mut grad = vec![0.0; self.d];
@@ -52,6 +53,7 @@ impl GradOracle for LstsqOracle {
             loss += z * z;
             linalg::axpy_f32(2.0 * z * inv_n, row, &mut grad);
         }
+        crate::telemetry::record_grad_eval(t0);
         (loss * inv_n, grad)
     }
 }

@@ -11,6 +11,7 @@ pub mod logreg;
 pub mod lstsq;
 pub mod quadratic;
 pub mod stochastic;
+#[cfg(feature = "xla-runtime")]
 pub mod xla;
 
 pub use logreg::LogRegOracle;

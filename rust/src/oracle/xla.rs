@@ -74,6 +74,10 @@ impl XlaShardOracle {
 
     fn call(&self, x: &[f64]) -> Result<(f64, Vec<f64>)> {
         let x_lit = lit_f32_1d(x);
+        // Span scoped to the PJRT execution only (host-side literal prep
+        // and output conversion are excluded) — matches the transformer
+        // oracle so `oracle.xla.call.ns` is comparable across backends.
+        let t_exec = crate::telemetry::maybe_now();
         let outs = match self.kind {
             ShardKind::LogReg => {
                 let lam_lit = lit_f32_scalar(self.lam);
@@ -87,6 +91,8 @@ impl XlaShardOracle {
                 &[&self.a_lit, &self.y_lit, &self.w_lit, &x_lit],
             )?,
         };
+        crate::telemetry::counter(crate::telemetry::keys::ORACLE_XLA_CALLS).incr(1);
+        crate::telemetry::record_elapsed_ns(crate::telemetry::keys::ORACLE_XLA_NS, t_exec);
         anyhow::ensure!(outs.len() == 2, "expected (loss, grad) tuple");
         Ok((out_scalar_f32(&outs[0])?, out_vec_f64(&outs[1])?))
     }
@@ -98,7 +104,10 @@ impl GradOracle for XlaShardOracle {
     }
 
     fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
-        self.call(x).expect("XLA oracle execution failed")
+        let t0 = crate::telemetry::maybe_now();
+        let out = self.call(x).expect("XLA oracle execution failed");
+        crate::telemetry::record_grad_eval(t0);
+        out
     }
 }
 
@@ -150,18 +159,26 @@ impl GradOracle for XlaTransformerOracle {
     }
 
     fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let t0 = crate::telemetry::maybe_now();
         let flat: Vec<f32> = x.iter().map(|&v| v as f32).collect();
         let tokens = (self.sampler)();
         let flat_lit = crate::runtime::client::lit_f32_1d_exact(&flat);
         let tok_lit = crate::runtime::client::lit_i32_2d(&tokens, self.batch, self.seq_len)
             .expect("token literal");
+        // Scope the xla span to the execution only, like XlaShardOracle;
+        // t0 (whole eval, sampling included) feeds oracle.grad.ns.
+        let t_exec = crate::telemetry::maybe_now();
         let outs = self
             .rt
             .execute("transformer_step", &[flat_lit, tok_lit])
             .expect("transformer_step execution failed");
-        (
+        crate::telemetry::counter(crate::telemetry::keys::ORACLE_XLA_CALLS).incr(1);
+        crate::telemetry::record_elapsed_ns(crate::telemetry::keys::ORACLE_XLA_NS, t_exec);
+        let out = (
             out_scalar_f32(&outs[0]).expect("loss scalar"),
             out_vec_f64(&outs[1]).expect("grad vector"),
-        )
+        );
+        crate::telemetry::record_grad_eval(t0);
+        out
     }
 }

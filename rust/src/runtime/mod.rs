@@ -3,8 +3,10 @@
 //! This is the only place Rust touches XLA; Python never runs at request
 //! time.
 
+#[cfg(feature = "xla-runtime")]
 pub mod client;
 pub mod manifest;
 
+#[cfg(feature = "xla-runtime")]
 pub use client::Runtime;
 pub use manifest::{ArtifactEntry, IoSpec, Manifest};

@@ -1,0 +1,275 @@
+//! Metric handles and their lock-free atomic storage cells.
+//!
+//! A handle is a cheap, cloneable view onto a storage cell owned by a
+//! [`crate::telemetry::Registry`]. The noop variant (`Counter::noop()` etc.)
+//! carries no cell at all, so recording through it is a single branch on a
+//! `None` — this is what makes disabled instrumentation cost ~1ns.
+//!
+//! Storage is plain atomics (no locks anywhere on the record path):
+//!   * counters — `AtomicU64`, relaxed `fetch_add`;
+//!   * gauges   — `AtomicU64` holding `f64::to_bits`, relaxed `store`;
+//!   * histograms — 64 fixed power-of-two buckets (`bucket i` covers
+//!     `[2^i, 2^(i+1))`, bucket 0 also absorbs 0), plus sum and count.
+//!     Values are `u64` — by convention nanoseconds for `*.ns` keys.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Number of fixed log2 histogram buckets (covers the full u64 range).
+pub const HISTOGRAM_BUCKETS: usize = 64;
+
+/// Bucket index for a recorded value: `floor(log2(v))`, with 0 mapping to
+/// bucket 0. Bucket `i` therefore covers `[2^i, 2^(i+1) - 1]` (bucket 0
+/// covers `{0, 1}`).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        63 - v.leading_zeros() as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (`u64::MAX` for the last bucket).
+pub fn bucket_upper(i: usize) -> u64 {
+    if i >= 63 {
+        u64::MAX
+    } else {
+        (2u64 << i) - 1
+    }
+}
+
+/// Inclusive lower bound of bucket `i`.
+pub fn bucket_lower(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << i
+    }
+}
+
+/// Storage cell for a monotone counter.
+#[derive(Debug, Default)]
+pub struct CounterCell(AtomicU64);
+
+impl CounterCell {
+    #[inline]
+    pub fn incr(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Storage cell for a last-value-wins gauge (f64 stored as bits).
+#[derive(Debug, Default)]
+pub struct GaugeCell(AtomicU64);
+
+impl GaugeCell {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Storage cell for a fixed-bucket log-scale histogram.
+#[derive(Debug)]
+pub struct HistogramCell {
+    counts: [AtomicU64; HISTOGRAM_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl HistogramCell {
+    pub fn new() -> Self {
+        HistogramCell {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
+
+impl Default for HistogramCell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Handle to a counter (None = noop).
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Option<Arc<CounterCell>>);
+
+impl Counter {
+    pub fn noop() -> Counter {
+        Counter(None)
+    }
+
+    pub(crate) fn from_cell(cell: Arc<CounterCell>) -> Counter {
+        Counter(Some(cell))
+    }
+
+    #[inline]
+    pub fn incr(&self, n: u64) {
+        if let Some(c) = &self.0 {
+            c.incr(n);
+        }
+    }
+
+    /// Current value (0 for a noop handle).
+    pub fn get(&self) -> u64 {
+        self.0.as_ref().map(|c| c.get()).unwrap_or(0)
+    }
+
+    pub fn is_noop(&self) -> bool {
+        self.0.is_none()
+    }
+}
+
+/// Handle to a gauge (None = noop).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Option<Arc<GaugeCell>>);
+
+impl Gauge {
+    pub fn noop() -> Gauge {
+        Gauge(None)
+    }
+
+    pub(crate) fn from_cell(cell: Arc<GaugeCell>) -> Gauge {
+        Gauge(Some(cell))
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if let Some(g) = &self.0 {
+            g.set(v);
+        }
+    }
+
+    /// Current value (0.0 for a noop handle).
+    pub fn get(&self) -> f64 {
+        self.0.as_ref().map(|g| g.get()).unwrap_or(0.0)
+    }
+
+    pub fn is_noop(&self) -> bool {
+        self.0.is_none()
+    }
+}
+
+/// Handle to a histogram (None = noop).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram(Option<Arc<HistogramCell>>);
+
+impl Histogram {
+    pub fn noop() -> Histogram {
+        Histogram(None)
+    }
+
+    pub(crate) fn from_cell(cell: Arc<HistogramCell>) -> Histogram {
+        Histogram(Some(cell))
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if let Some(h) = &self.0 {
+            h.record(v);
+        }
+    }
+
+    /// Number of recorded samples (0 for a noop handle).
+    pub fn count(&self) -> u64 {
+        self.0.as_ref().map(|h| h.count()).unwrap_or(0)
+    }
+
+    pub fn is_noop(&self) -> bool {
+        self.0.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(1023), 9);
+        assert_eq!(bucket_index(1024), 10);
+        assert_eq!(bucket_index(u64::MAX), 63);
+    }
+
+    #[test]
+    fn bucket_bounds_tile_the_range() {
+        for i in 0..HISTOGRAM_BUCKETS {
+            let lo = bucket_lower(i);
+            let hi = bucket_upper(i);
+            assert!(lo <= hi);
+            assert_eq!(bucket_index(lo), i);
+            assert_eq!(bucket_index(hi), i);
+            if i + 1 < HISTOGRAM_BUCKETS {
+                assert_eq!(hi + 1, bucket_lower(i + 1));
+            }
+        }
+    }
+
+    #[test]
+    fn noop_handles_record_nothing() {
+        let c = Counter::noop();
+        c.incr(10);
+        assert_eq!(c.get(), 0);
+        assert!(c.is_noop());
+        let g = Gauge::noop();
+        g.set(3.5);
+        assert_eq!(g.get(), 0.0);
+        let h = Histogram::noop();
+        h.record(7);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn live_handles_share_the_cell() {
+        let c = Counter::from_cell(Arc::new(CounterCell::default()));
+        let c2 = c.clone();
+        c.incr(2);
+        c2.incr(3);
+        assert_eq!(c.get(), 5);
+
+        let g = Gauge::from_cell(Arc::new(GaugeCell::default()));
+        g.set(-1.25);
+        assert_eq!(g.get(), -1.25);
+
+        let h = Histogram::from_cell(Arc::new(HistogramCell::new()));
+        h.record(0);
+        h.record(5);
+        assert_eq!(h.count(), 2);
+    }
+}

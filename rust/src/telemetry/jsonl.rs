@@ -1,0 +1,113 @@
+//! JSONL file exporter: a background thread that appends one snapshot
+//! object per flush period, plus a final flush on shutdown. Lines are the
+//! [`Snapshot::to_json`] object extended with a `ts_ms` wall-clock stamp,
+//! so the last line of the file is always the run's cumulative totals.
+
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Running exporter; dropping it without [`JsonlExporter::stop`] detaches
+/// the flusher thread (it exits on the next tick after the channel closes).
+pub struct JsonlExporter {
+    stop_tx: mpsc::Sender<()>,
+    handle: std::thread::JoinHandle<Result<()>>,
+    path: PathBuf,
+}
+
+impl JsonlExporter {
+    /// Spawn the flusher writing to `path` every `period`. Truncates any
+    /// existing file; parent directories are created.
+    pub fn spawn(path: impl Into<PathBuf>, period: Duration) -> Result<JsonlExporter> {
+        let path = path.into();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let file = std::fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let (stop_tx, stop_rx) = mpsc::channel::<()>();
+        let handle = std::thread::Builder::new()
+            .name("ef21-telemetry-jsonl".into())
+            .spawn(move || flusher(file, period, stop_rx))
+            .context("spawning jsonl flusher")?;
+        Ok(JsonlExporter { stop_tx, handle, path })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    /// Signal shutdown, wait for the final flush, and surface any I/O
+    /// error from the flusher thread.
+    pub fn stop(self) -> Result<()> {
+        let _ = self.stop_tx.send(());
+        match self.handle.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("jsonl flusher thread panicked"),
+        }
+    }
+}
+
+fn flusher(
+    mut file: std::fs::File,
+    period: Duration,
+    stop_rx: mpsc::Receiver<()>,
+) -> Result<()> {
+    loop {
+        let stopping = match stop_rx.recv_timeout(period) {
+            Err(mpsc::RecvTimeoutError::Timeout) => false,
+            // Explicit stop or the exporter handle was dropped.
+            Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => true,
+        };
+        write_line(&mut file)?;
+        if stopping {
+            file.flush().context("final jsonl flush")?;
+            return Ok(());
+        }
+    }
+}
+
+fn write_line(file: &mut std::fs::File) -> Result<()> {
+    let snap = super::snapshot();
+    let mut j = match snap.to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!("snapshot json is always an object"),
+    };
+    let ts_ms = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as f64)
+        .unwrap_or(0.0);
+    j.insert("ts_ms".to_string(), Json::Num(ts_ms));
+    writeln!(file, "{}", Json::Obj(j).to_string()).context("writing jsonl line")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_parsable_lines_and_final_flush() {
+        let path = std::env::temp_dir()
+            .join(format!("ef21_jsonl_test_{}.jsonl", std::process::id()));
+        let exp = JsonlExporter::spawn(&path, Duration::from_millis(20)).unwrap();
+        std::thread::sleep(Duration::from_millis(70));
+        exp.stop().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(!lines.is_empty());
+        for line in &lines {
+            let j = Json::parse(line).expect("valid json line");
+            assert!(j.get("ts_ms").is_some());
+            assert!(j.get("counters").is_some());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

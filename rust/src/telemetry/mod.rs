@@ -1,0 +1,247 @@
+//! Runtime telemetry: a lock-free metrics facade with per-layer
+//! instrumentation and pluggable exporters.
+//!
+//! Modeled on the metrics-rs recorder/exporter split, sized for this
+//! crate (no external deps):
+//!
+//!   * [`Recorder`] issues [`Counter`]/[`Gauge`]/[`Histogram`] handles;
+//!     storage is plain atomics ([`handles`]), owned by a [`Registry`].
+//!   * The process defaults to a [`NoopRecorder`]: until [`enable`] is
+//!     called, every instrumentation site costs one relaxed atomic load
+//!     plus a `None` branch (~1ns), so the hot paths of the coordinator,
+//!     codec, compressors, and oracles pay nothing in ordinary runs
+//!     (`bench_telemetry` tracks this).
+//!   * [`snapshot`] renders a sorted key→value view; exporters are a
+//!     periodic JSONL file sink ([`jsonl::JsonlExporter`]) and a
+//!     Prometheus-style plaintext TCP endpoint ([`prom::PromServer`]).
+//!
+//! Instrumented layers and their keys (see [`keys`]):
+//! transport (`transport.tx/rx.*`, `transport.uplink.bits` — defined to
+//! agree exactly with the simulated `bits_per_client * n` accounting),
+//! codec (`codec.encode/decode.ns`), compressors
+//! (`compress.<name>.ns/.sparsity`), oracles (`oracle.grad.*`,
+//! `oracle.xla.*`), and the coordinator (`coordinator.rounds`,
+//! `coordinator.round.ns`).
+//!
+//! CLI wiring: `--telemetry jsonl:<path>|tcp:<port>|off` (comma-separable)
+//! through [`init_from_spec`].
+
+pub mod handles;
+pub mod jsonl;
+pub mod prom;
+pub mod recorder;
+pub mod registry;
+pub mod snapshot;
+
+pub use handles::{Counter, Gauge, Histogram};
+pub use recorder::{NoopRecorder, Recorder, RegistryRecorder};
+pub use registry::Registry;
+pub use snapshot::{HistogramSnapshot, Snapshot};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+/// Canonical metric keys shared by instrumentation sites and tests.
+pub mod keys {
+    /// Cumulative uplink payload bits, incremented by both runners with
+    /// exactly the bits the compressors account. The counter is
+    /// process-wide (it sums over every run in the process); within one
+    /// run its delta equals `History::bits_per_client * n_workers`
+    /// exactly.
+    pub const UPLINK_BITS: &str = "transport.uplink.bits";
+    /// Uplink frame bytes actually moved by the distributed runner.
+    pub const UPLINK_FRAME_BYTES: &str = "transport.uplink.frame.bytes";
+    pub const TX_FRAMES: &str = "transport.tx.frames";
+    pub const TX_BYTES: &str = "transport.tx.bytes";
+    pub const RX_FRAMES: &str = "transport.rx.frames";
+    pub const RX_BYTES: &str = "transport.rx.bytes";
+    pub const CODEC_ENCODE_NS: &str = "codec.encode.ns";
+    pub const CODEC_DECODE_NS: &str = "codec.decode.ns";
+    pub const ORACLE_GRAD_EVALS: &str = "oracle.grad.evals";
+    pub const ORACLE_GRAD_NS: &str = "oracle.grad.ns";
+    pub const ORACLE_XLA_CALLS: &str = "oracle.xla.calls";
+    pub const ORACLE_XLA_NS: &str = "oracle.xla.call.ns";
+    pub const ROUNDS: &str = "coordinator.rounds";
+    pub const ROUND_NS: &str = "coordinator.round.ns";
+    pub const DIVERGENCE_ABORTS: &str = "coordinator.divergence.aborts";
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn global_registry() -> &'static Arc<Registry> {
+    static REGISTRY: OnceLock<Arc<Registry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Arc::new(Registry::new()))
+}
+
+/// Route instrumentation to the global registry (idempotent).
+pub fn enable() {
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Back to the noop default. Already-issued live handles keep recording
+/// into the registry; only new lookups become noop.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The process-global recorder: the registry-backed one when enabled,
+/// the noop one otherwise.
+pub fn recorder() -> &'static dyn Recorder {
+    static NOOP: NoopRecorder = NoopRecorder;
+    static LIVE: OnceLock<RegistryRecorder> = OnceLock::new();
+    if is_enabled() {
+        LIVE.get_or_init(|| RegistryRecorder::new(global_registry().clone()))
+    } else {
+        &NOOP
+    }
+}
+
+/// Counter handle for `key` (noop when telemetry is disabled).
+#[inline]
+pub fn counter(key: &str) -> Counter {
+    recorder().counter(key)
+}
+
+/// Gauge handle for `key` (noop when telemetry is disabled).
+#[inline]
+pub fn gauge(key: &str) -> Gauge {
+    recorder().gauge(key)
+}
+
+/// Histogram handle for `key` (noop when telemetry is disabled).
+#[inline]
+pub fn histogram(key: &str) -> Histogram {
+    recorder().histogram(key)
+}
+
+/// Start a timing span: `Some(Instant)` only when telemetry is enabled,
+/// so disabled call sites never touch the clock.
+#[inline]
+pub fn maybe_now() -> Option<Instant> {
+    if is_enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Close a [`maybe_now`] span into histogram `key` (no-op for `None`).
+#[inline]
+pub fn record_elapsed_ns(key: &str, started: Option<Instant>) {
+    if let Some(t0) = started {
+        histogram(key).record(t0.elapsed().as_nanos() as u64);
+    }
+}
+
+/// One gradient-oracle evaluation: bumps [`keys::ORACLE_GRAD_EVALS`] and
+/// closes the timing span into [`keys::ORACLE_GRAD_NS`].
+#[inline]
+pub fn record_grad_eval(started: Option<Instant>) {
+    counter(keys::ORACLE_GRAD_EVALS).incr(1);
+    record_elapsed_ns(keys::ORACLE_GRAD_NS, started);
+}
+
+/// Sorted view over everything recorded so far (registry contents are
+/// retained across [`disable`]/[`enable`] cycles).
+pub fn snapshot() -> Snapshot {
+    global_registry().snapshot()
+}
+
+/// Exporters started from a `--telemetry` spec; shut down via
+/// [`TelemetryGuard::shutdown`] to get the final flush.
+#[derive(Default)]
+pub struct TelemetryGuard {
+    jsonl: Option<jsonl::JsonlExporter>,
+    prom: Option<prom::PromServer>,
+}
+
+impl TelemetryGuard {
+    pub fn is_active(&self) -> bool {
+        self.jsonl.is_some() || self.prom.is_some()
+    }
+
+    /// Bound exposition port, when a TCP exporter is running.
+    pub fn prom_port(&self) -> Option<u16> {
+        self.prom.as_ref().map(|p| p.port())
+    }
+
+    pub fn jsonl_path(&self) -> Option<&std::path::Path> {
+        self.jsonl.as_ref().map(|j| j.path())
+    }
+
+    /// Stop all exporters (final JSONL flush included).
+    pub fn shutdown(self) -> Result<()> {
+        if let Some(p) = self.prom {
+            p.stop();
+        }
+        if let Some(j) = self.jsonl {
+            j.stop()?;
+        }
+        Ok(())
+    }
+}
+
+/// Default flush period for the JSONL sink.
+pub const JSONL_FLUSH_PERIOD: Duration = Duration::from_millis(500);
+
+/// Parse a `--telemetry` spec and start the requested exporters, enabling
+/// global recording if any sink is configured.
+///
+/// Grammar: comma-separated list of `off`, `jsonl:<path>`, `tcp:<port>`
+/// (`prom:<port>` is an alias). Examples: `jsonl:results/run.jsonl`,
+/// `tcp:9100`, `jsonl:/tmp/m.jsonl,tcp:0`.
+pub fn init_from_spec(spec: &str) -> Result<TelemetryGuard> {
+    let mut guard = TelemetryGuard::default();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        if part == "off" {
+            continue;
+        }
+        if let Some(path) = part.strip_prefix("jsonl:") {
+            anyhow::ensure!(!path.is_empty(), "--telemetry jsonl: needs a path");
+            anyhow::ensure!(guard.jsonl.is_none(), "--telemetry lists jsonl: twice");
+            // Spawn first, enable after: a failed exporter must not leave
+            // the process recording with nothing draining it.
+            guard.jsonl = Some(jsonl::JsonlExporter::spawn(path, JSONL_FLUSH_PERIOD)?);
+            enable();
+        } else if let Some(port) =
+            part.strip_prefix("tcp:").or_else(|| part.strip_prefix("prom:"))
+        {
+            let port: u16 = port
+                .parse()
+                .with_context(|| format!("--telemetry tcp: bad port '{port}'"))?;
+            anyhow::ensure!(guard.prom.is_none(), "--telemetry lists tcp: twice");
+            guard.prom = Some(prom::PromServer::bind(port)?);
+            enable();
+        } else {
+            anyhow::bail!(
+                "bad --telemetry spec '{part}' (expected off, jsonl:<path>, or tcp:<port>)"
+            );
+        }
+    }
+    Ok(guard)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(init_from_spec("bogus").is_err());
+        assert!(init_from_spec("jsonl:").is_err());
+        assert!(init_from_spec("tcp:notaport").is_err());
+        // "off" (and empty) never starts anything or flips the flag.
+        let g = init_from_spec("off").unwrap();
+        assert!(!g.is_active());
+        let g = init_from_spec("").unwrap();
+        assert!(!g.is_active());
+    }
+}

@@ -1,0 +1,109 @@
+//! Prometheus-style plaintext exposition over TCP.
+//!
+//! Rides the same `std::net` stack as [`crate::transport::tcp`]: a
+//! non-blocking accept loop on a background thread answers every
+//! connection with one HTTP/1.0 response whose body is
+//! [`crate::telemetry::Snapshot::render_prometheus`], then closes. This
+//! satisfies both `curl http://host:port/metrics` and a raw
+//! read-until-EOF TCP client.
+
+use std::io::{Read as _, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Running exposition server. [`PromServer::stop`] joins the accept loop;
+/// dropping without stop leaves the thread serving until process exit.
+pub struct PromServer {
+    port: u16,
+    shutdown: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl PromServer {
+    /// Bind `127.0.0.1:port` (`port` 0 picks an ephemeral port; see
+    /// [`PromServer::port`]) and start serving.
+    pub fn bind(port: u16) -> Result<PromServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding telemetry port {port}"))?;
+        let port = listener.local_addr().context("telemetry local_addr")?.port();
+        listener
+            .set_nonblocking(true)
+            .context("telemetry listener nonblocking")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = shutdown.clone();
+        let handle = std::thread::Builder::new()
+            .name("ef21-telemetry-prom".into())
+            .spawn(move || accept_loop(listener, stop))
+            .context("spawning prom server")?;
+        Ok(PromServer { port, shutdown, handle })
+    }
+
+    /// The bound port (useful when constructed with port 0).
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    pub fn stop(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = self.handle.join();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shutdown: Arc<AtomicBool>) {
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Serve inline; exposition is tiny and scrapes are rare.
+                let _ = serve(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn serve(mut stream: TcpStream) -> std::io::Result<()> {
+    // Drain whatever request line/headers the client sends (best-effort;
+    // a raw TCP reader sends nothing and just waits for our bytes).
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut req = [0u8; 1024];
+    let _ = stream.read(&mut req);
+
+    let body = super::snapshot().render_prometheus();
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    write!(
+        stream,
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_exposition_and_stops() {
+        let server = PromServer::bind(0).unwrap();
+        let port = server.port();
+        let mut conn = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut text = String::new();
+        conn.read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.0 200 OK"), "got: {text}");
+        assert!(text.contains("text/plain"));
+        // stop() must join promptly (bounded by the accept poll interval).
+        server.stop();
+    }
+}

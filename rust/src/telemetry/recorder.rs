@@ -1,0 +1,103 @@
+//! The recorder facade: the object instrumented code talks to.
+//!
+//! Mirrors the metrics-rs split between the facade (handle issuance) and
+//! storage: a [`Recorder`] hands out [`Counter`]/[`Gauge`]/[`Histogram`]
+//! handles for string keys. Two implementations:
+//!   * [`NoopRecorder`] — the process-global default; every handle is a
+//!     noop, so instrumentation on disabled processes costs ~1ns.
+//!   * [`RegistryRecorder`] — issues live handles backed by a
+//!     [`Registry`]'s atomic cells.
+
+use super::handles::{Counter, Gauge, Histogram};
+use super::registry::Registry;
+use super::snapshot::Snapshot;
+use std::sync::Arc;
+
+/// Issues metric handles; the seam between instrumentation and storage.
+pub trait Recorder: Send + Sync {
+    fn counter(&self, key: &str) -> Counter;
+    fn gauge(&self, key: &str) -> Gauge;
+    fn histogram(&self, key: &str) -> Histogram;
+
+    /// Observer side: sorted key→value view (empty for noop).
+    fn snapshot(&self) -> Snapshot {
+        Snapshot::default()
+    }
+}
+
+/// Default recorder: hands out noop handles only.
+pub struct NoopRecorder;
+
+impl Recorder for NoopRecorder {
+    fn counter(&self, _key: &str) -> Counter {
+        Counter::noop()
+    }
+
+    fn gauge(&self, _key: &str) -> Gauge {
+        Gauge::noop()
+    }
+
+    fn histogram(&self, _key: &str) -> Histogram {
+        Histogram::noop()
+    }
+}
+
+/// Recorder backed by a shared [`Registry`].
+pub struct RegistryRecorder {
+    registry: Arc<Registry>,
+}
+
+impl RegistryRecorder {
+    pub fn new(registry: Arc<Registry>) -> RegistryRecorder {
+        RegistryRecorder { registry }
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+}
+
+impl Recorder for RegistryRecorder {
+    fn counter(&self, key: &str) -> Counter {
+        self.registry.counter(key)
+    }
+
+    fn gauge(&self, key: &str) -> Gauge {
+        self.registry.gauge(key)
+    }
+
+    fn histogram(&self, key: &str) -> Histogram {
+        self.registry.histogram(key)
+    }
+
+    fn snapshot(&self) -> Snapshot {
+        self.registry.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_recorder_is_inert() {
+        let r = NoopRecorder;
+        r.counter("x").incr(1);
+        r.gauge("y").set(1.0);
+        r.histogram("z").record(1);
+        assert!(r.counter("x").is_noop());
+        assert!(r.snapshot().is_empty());
+    }
+
+    #[test]
+    fn registry_recorder_round_trips() {
+        let r = RegistryRecorder::new(Arc::new(Registry::new()));
+        r.counter("c").incr(7);
+        r.gauge("g").set(0.5);
+        r.histogram("h").record(3);
+        let s = r.snapshot();
+        assert_eq!(s.counter("c"), Some(7));
+        assert_eq!(s.gauge("g"), Some(0.5));
+        assert_eq!(s.histogram("h").unwrap().count, 1);
+    }
+}

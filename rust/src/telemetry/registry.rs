@@ -1,0 +1,151 @@
+//! Metric registry: the owner of all storage cells.
+//!
+//! Keys are dotted strings (`"transport.uplink.bits"`). Lookup takes a
+//! short read lock on a `BTreeMap` and clones an `Arc`; the record path
+//! through the returned handle is entirely lock-free. Call sites on hot
+//! loops should cache the handle; cold sites can look up per record
+//! (~100ns when telemetry is enabled, ~1ns when disabled because the
+//! facade short-circuits to noop handles before ever reaching here).
+
+use super::handles::{
+    Counter, CounterCell, Gauge, GaugeCell, Histogram, HistogramCell,
+};
+use super::snapshot::{HistogramSnapshot, Snapshot};
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+/// Process-wide (or test-local) metric store.
+#[derive(Default)]
+pub struct Registry {
+    counters: RwLock<BTreeMap<String, Arc<CounterCell>>>,
+    gauges: RwLock<BTreeMap<String, Arc<GaugeCell>>>,
+    histograms: RwLock<BTreeMap<String, Arc<HistogramCell>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Handle to the counter `key`, registering it on first use.
+    pub fn counter(&self, key: &str) -> Counter {
+        if let Some(c) = self.counters.read().unwrap().get(key) {
+            return Counter::from_cell(c.clone());
+        }
+        let mut map = self.counters.write().unwrap();
+        let cell = map
+            .entry(key.to_string())
+            .or_insert_with(|| Arc::new(CounterCell::default()))
+            .clone();
+        Counter::from_cell(cell)
+    }
+
+    /// Handle to the gauge `key`, registering it on first use.
+    pub fn gauge(&self, key: &str) -> Gauge {
+        if let Some(g) = self.gauges.read().unwrap().get(key) {
+            return Gauge::from_cell(g.clone());
+        }
+        let mut map = self.gauges.write().unwrap();
+        let cell = map
+            .entry(key.to_string())
+            .or_insert_with(|| Arc::new(GaugeCell::default()))
+            .clone();
+        Gauge::from_cell(cell)
+    }
+
+    /// Handle to the histogram `key`, registering it on first use.
+    pub fn histogram(&self, key: &str) -> Histogram {
+        if let Some(h) = self.histograms.read().unwrap().get(key) {
+            return Histogram::from_cell(h.clone());
+        }
+        let mut map = self.histograms.write().unwrap();
+        let cell = map
+            .entry(key.to_string())
+            .or_insert_with(|| Arc::new(HistogramCell::new()))
+            .clone();
+        Histogram::from_cell(cell)
+    }
+
+    /// Consistent-enough point-in-time view, sorted by key (BTreeMap
+    /// iteration order). Individual values are read with relaxed atomics,
+    /// so concurrent writers may land between reads — fine for export.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = self
+            .counters
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, c)| (k.clone(), c.get()))
+            .collect();
+        let gauges = self
+            .gauges
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, g)| (k.clone(), g.get()))
+            .collect();
+        let histograms = self
+            .histograms
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| {
+                // Derive count from the bucket reads so a concurrent
+                // record() can never make the +Inf bucket smaller than a
+                // cumulative bucket (record bumps buckets before count).
+                let buckets = h.bucket_counts();
+                let count = buckets.iter().sum();
+                (k.clone(), HistogramSnapshot { count, sum: h.sum(), buckets })
+            })
+            .collect();
+        Snapshot { counters, gauges, histograms }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_key_same_cell() {
+        let r = Registry::new();
+        r.counter("a.b").incr(1);
+        r.counter("a.b").incr(2);
+        assert_eq!(r.counter("a.b").get(), 3);
+        r.gauge("g").set(2.0);
+        assert_eq!(r.gauge("g").get(), 2.0);
+        r.histogram("h").record(9);
+        assert_eq!(r.histogram("h").count(), 1);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_by_key() {
+        let r = Registry::new();
+        r.counter("z.last").incr(1);
+        r.counter("a.first").incr(1);
+        r.counter("m.mid").incr(1);
+        let keys: Vec<&str> =
+            r.snapshot().counters.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["a.first", "m.mid", "z.last"]);
+    }
+
+    #[test]
+    fn concurrent_increments_sum_exactly() {
+        let r = Arc::new(Registry::new());
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    let c = r.counter("concurrent");
+                    for _ in 0..10_000 {
+                        c.incr(1);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(r.counter("concurrent").get(), 80_000);
+    }
+}

@@ -1,0 +1,234 @@
+//! Point-in-time metric views and their two renderings: compact JSON
+//! (for the JSONL file sink, via [`crate::util::json`]) and Prometheus
+//! text exposition format (for the TCP endpoint).
+
+use super::handles::{bucket_lower, bucket_upper, HISTOGRAM_BUCKETS};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Frozen view of one histogram.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    /// Per-bucket sample counts, length [`HISTOGRAM_BUCKETS`].
+    pub buckets: Vec<u64>,
+}
+
+impl HistogramSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile (`0.0 <= q <= 1.0`): the arithmetic midpoint of
+    /// the bucket containing the q-th sample. Error is bounded by the 2x
+    /// bucket width.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let lo = bucket_lower(i);
+                let hi = bucket_upper(i);
+                return lo + (hi - lo) / 2;
+            }
+        }
+        bucket_upper(HISTOGRAM_BUCKETS - 1)
+    }
+
+    /// Index of the highest non-empty bucket, if any sample was recorded.
+    fn last_nonempty_bucket(&self) -> Option<usize> {
+        self.buckets.iter().rposition(|&c| c > 0)
+    }
+}
+
+/// Sorted key→value view over all registered metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+impl Snapshot {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Value of a counter by key, if registered.
+    pub fn counter(&self, key: &str) -> Option<u64> {
+        self.counters.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    /// Value of a gauge by key, if registered.
+    pub fn gauge(&self, key: &str) -> Option<f64> {
+        self.gauges.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    /// Histogram view by key, if registered.
+    pub fn histogram(&self, key: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Compact JSON object:
+    /// `{"counters":{..},"gauges":{..},"histograms":{name:{count,sum,mean,p50,p99}}}`.
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, v) in &self.counters {
+            counters.insert(k.clone(), Json::Num(*v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, v) in &self.gauges {
+            gauges.insert(k.clone(), Json::Num(*v));
+        }
+        let mut histograms = BTreeMap::new();
+        for (k, h) in &self.histograms {
+            let mut o = BTreeMap::new();
+            o.insert("count".to_string(), Json::Num(h.count as f64));
+            o.insert("sum".to_string(), Json::Num(h.sum as f64));
+            o.insert("mean".to_string(), Json::Num(h.mean()));
+            o.insert("p50".to_string(), Json::Num(h.quantile(0.5) as f64));
+            o.insert("p99".to_string(), Json::Num(h.quantile(0.99) as f64));
+            histograms.insert(k.clone(), Json::Obj(o));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("counters".to_string(), Json::Obj(counters));
+        root.insert("gauges".to_string(), Json::Obj(gauges));
+        root.insert("histograms".to_string(), Json::Obj(histograms));
+        Json::Obj(root)
+    }
+
+    /// Prometheus text exposition (v0.0.4): `ef21_`-prefixed metric names
+    /// with dots mangled to underscores; histograms as cumulative `le`
+    /// buckets plus `_sum`/`_count`.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            let name = prom_name(k);
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (k, v) in &self.gauges {
+            let name = prom_name(k);
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (k, h) in &self.histograms {
+            let name = prom_name(k);
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            let last = h.last_nonempty_bucket().unwrap_or(0);
+            let mut cum = 0u64;
+            for i in 0..=last.min(HISTOGRAM_BUCKETS - 1) {
+                cum += h.buckets[i];
+                let _ = writeln!(
+                    out,
+                    "{name}_bucket{{le=\"{}\"}} {cum}",
+                    bucket_upper(i)
+                );
+            }
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+            let _ = writeln!(out, "{name}_sum {}", h.sum);
+            let _ = writeln!(out, "{name}_count {}", h.count);
+        }
+        out
+    }
+}
+
+/// Mangle a dotted metric key into a Prometheus metric name.
+fn prom_name(key: &str) -> String {
+    let mut name = String::with_capacity(key.len() + 5);
+    name.push_str("ef21_");
+    for c in key.chars() {
+        if c.is_ascii_alphanumeric() {
+            name.push(c);
+        } else {
+            name.push('_');
+        }
+    }
+    name
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Registry;
+
+    fn sample() -> Snapshot {
+        let r = Registry::new();
+        r.counter("transport.uplink.bits").incr(1280);
+        r.gauge("compress.top1.sparsity").set(0.01);
+        let h = r.histogram("codec.encode.ns");
+        for v in [1u64, 2, 2, 900, 1100] {
+            h.record(v);
+        }
+        r.snapshot()
+    }
+
+    #[test]
+    fn lookup_by_key() {
+        let s = sample();
+        assert_eq!(s.counter("transport.uplink.bits"), Some(1280));
+        assert_eq!(s.counter("nope"), None);
+        assert_eq!(s.gauge("compress.top1.sparsity"), Some(0.01));
+        assert_eq!(s.histogram("codec.encode.ns").unwrap().count, 5);
+        assert!(!s.is_empty());
+        assert!(Snapshot::default().is_empty());
+    }
+
+    #[test]
+    fn quantiles_are_order_of_magnitude_right() {
+        let s = sample();
+        let h = s.histogram("codec.encode.ns").unwrap();
+        assert_eq!(h.sum, 1 + 2 + 2 + 900 + 1100);
+        // p50 falls in bucket [2,3]; p99 in the bucket holding 1100.
+        let p50 = h.quantile(0.5);
+        assert!((2..=3).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((1024..=2047).contains(&p99), "p99={p99}");
+        // Degenerate cases.
+        assert_eq!(HistogramSnapshot { count: 0, sum: 0, buckets: vec![0; 64] }.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn json_rendering_parses_back() {
+        let s = sample();
+        let text = s.to_json().to_string();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(
+            j.get("counters").unwrap().get("transport.uplink.bits").unwrap().as_f64(),
+            Some(1280.0)
+        );
+        let hist = j.get("histograms").unwrap().get("codec.encode.ns").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn prometheus_rendering_shape() {
+        let s = sample();
+        let text = s.render_prometheus();
+        assert!(text.contains("# TYPE ef21_transport_uplink_bits counter"));
+        assert!(text.contains("ef21_transport_uplink_bits 1280"));
+        assert!(text.contains("# TYPE ef21_compress_top1_sparsity gauge"));
+        assert!(text.contains("ef21_codec_encode_ns_count 5"));
+        assert!(text.contains("ef21_codec_encode_ns_bucket{le=\"+Inf\"} 5"));
+        // Cumulative buckets never decrease.
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("ef21_codec_encode_ns_bucket{le=\"")) {
+            if line.contains("+Inf") {
+                continue;
+            }
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+}

@@ -87,6 +87,35 @@ impl<'a> Reader<'a> {
 }
 
 pub fn encode(frame: &Frame) -> Vec<u8> {
+    // Handle cached in a static: initialized on the first *enabled* call
+    // (t0 is Some only then), so the hot path never repeats the registry
+    // lookup and the disabled path is a single atomic load.
+    static ENCODE_NS: std::sync::OnceLock<crate::telemetry::Histogram> =
+        std::sync::OnceLock::new();
+    let t0 = crate::telemetry::maybe_now();
+    let out = encode_impl(frame);
+    if let Some(t0) = t0 {
+        ENCODE_NS
+            .get_or_init(|| crate::telemetry::histogram(crate::telemetry::keys::CODEC_ENCODE_NS))
+            .record(t0.elapsed().as_nanos() as u64);
+    }
+    out
+}
+
+pub fn decode(bytes: &[u8]) -> Result<Frame> {
+    static DECODE_NS: std::sync::OnceLock<crate::telemetry::Histogram> =
+        std::sync::OnceLock::new();
+    let t0 = crate::telemetry::maybe_now();
+    let frame = decode_impl(bytes);
+    if let Some(t0) = t0 {
+        DECODE_NS
+            .get_or_init(|| crate::telemetry::histogram(crate::telemetry::keys::CODEC_DECODE_NS))
+            .record(t0.elapsed().as_nanos() as u64);
+    }
+    frame
+}
+
+fn encode_impl(frame: &Frame) -> Vec<u8> {
     let mut out = Vec::new();
     match frame {
         Frame::Model(x) => {
@@ -119,7 +148,7 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
     out
 }
 
-pub fn decode(bytes: &[u8]) -> Result<Frame> {
+fn decode_impl(bytes: &[u8]) -> Result<Frame> {
     let mut r = Reader { b: bytes, i: 0 };
     let frame = match r.u8()? {
         TAG_MODEL => {

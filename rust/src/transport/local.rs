@@ -1,6 +1,9 @@
 //! In-process channel transport: a pair of mpsc queues per worker.
+//! Frames/bytes moved are metered under the same `transport.tx/rx.*`
+//! telemetry keys as the TCP transport.
 
 use super::Conn;
+use crate::telemetry::{self, keys};
 use anyhow::{Context, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 
@@ -11,11 +14,17 @@ pub struct LocalConn {
 
 impl Conn for LocalConn {
     fn send(&mut self, frame: &[u8]) -> Result<()> {
-        self.tx.send(frame.to_vec()).context("local conn closed (send)")
+        self.tx.send(frame.to_vec()).context("local conn closed (send)")?;
+        telemetry::counter(keys::TX_FRAMES).incr(1);
+        telemetry::counter(keys::TX_BYTES).incr(frame.len() as u64);
+        Ok(())
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        self.rx.recv().context("local conn closed (recv)")
+        let frame = self.rx.recv().context("local conn closed (recv)")?;
+        telemetry::counter(keys::RX_FRAMES).incr(1);
+        telemetry::counter(keys::RX_BYTES).incr(frame.len() as u64);
+        Ok(frame)
     }
 }
 

@@ -1,11 +1,53 @@
 //! TCP transport: u32-length-prefixed frames over std::net sockets.
 //! Exercised by the distributed runner's TCP mode and the transport
 //! integration test (real sockets on 127.0.0.1).
+//!
+//! Hardening: every [`TcpConn`] carries read/write timeouts
+//! ([`DEFAULT_IO_TIMEOUT`]) so a dead peer surfaces as an error instead
+//! of a hang, and [`TcpConn::connect_with_retry`] rides out the race
+//! where workers dial before the master's listener is up.
+//!
+//! Telemetry: frames and bytes moved are counted process-wide under
+//! `transport.tx.*` / `transport.rx.*` (see [`crate::telemetry::keys`]).
 
 use super::Conn;
+use crate::telemetry::{self, keys};
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Default read/write timeout applied to every connection. It must
+/// exceed the slowest full protocol round (workers sit in recv while
+/// stragglers compute), so it is deliberately generous — its job is to
+/// turn a dead peer into a bounded-time error, not to police round
+/// latency. Override with `$EF21_TCP_TIMEOUT_SECS` (0 = no timeout,
+/// block forever) or per-conn via [`TcpConn::set_io_timeout`].
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// The effective default timeout: `$EF21_TCP_TIMEOUT_SECS` if set
+/// (0 disables), else [`DEFAULT_IO_TIMEOUT`]. An unparseable override is
+/// reported once to stderr and ignored.
+pub fn io_timeout() -> Option<Duration> {
+    match std::env::var("EF21_TCP_TIMEOUT_SECS") {
+        Ok(v) => match v.trim().parse::<u64>() {
+            Ok(0) => None,
+            Ok(secs) => Some(Duration::from_secs(secs)),
+            Err(_) => {
+                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                WARN_ONCE.call_once(|| {
+                    eprintln!(
+                        "warning: EF21_TCP_TIMEOUT_SECS='{v}' is not a whole number of \
+                         seconds; using the {}s default",
+                        DEFAULT_IO_TIMEOUT.as_secs()
+                    );
+                });
+                Some(DEFAULT_IO_TIMEOUT)
+            }
+        },
+        Err(_) => Some(DEFAULT_IO_TIMEOUT),
+    }
+}
 
 pub struct TcpConn {
     stream: TcpStream,
@@ -14,12 +56,42 @@ pub struct TcpConn {
 impl TcpConn {
     pub fn new(stream: TcpStream) -> Result<Self> {
         stream.set_nodelay(true).context("set_nodelay")?;
+        let timeout = io_timeout();
+        stream.set_read_timeout(timeout).context("set_read_timeout")?;
+        stream.set_write_timeout(timeout).context("set_write_timeout")?;
         Ok(TcpConn { stream })
+    }
+
+    /// Override the default I/O timeouts (`None` = block forever).
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout).context("set_read_timeout")?;
+        self.stream.set_write_timeout(timeout).context("set_write_timeout")
     }
 
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
         Self::new(stream)
+    }
+
+    /// Connect with up to `attempts` tries and doubling `backoff` between
+    /// them — lets workers dial a master that is still binding its
+    /// listener, while a genuinely dead address fails in bounded time.
+    pub fn connect_with_retry(addr: &str, attempts: u32, backoff: Duration) -> Result<Self> {
+        let attempts = attempts.max(1);
+        let mut delay = backoff;
+        let mut last_err = None;
+        for attempt in 0..attempts {
+            match TcpStream::connect(addr) {
+                Ok(stream) => return Self::new(stream),
+                Err(e) => last_err = Some(e),
+            }
+            if attempt + 1 < attempts {
+                std::thread::sleep(delay);
+                delay = delay.saturating_mul(2);
+            }
+        }
+        Err(last_err.unwrap())
+            .with_context(|| format!("connect {addr} ({attempts} attempts)"))
     }
 }
 
@@ -28,6 +100,8 @@ impl Conn for TcpConn {
         let len = frame.len() as u32;
         self.stream.write_all(&len.to_le_bytes()).context("tcp write len")?;
         self.stream.write_all(frame).context("tcp write frame")?;
+        telemetry::counter(keys::TX_FRAMES).incr(1);
+        telemetry::counter(keys::TX_BYTES).incr(frame.len() as u64 + 4);
         Ok(())
     }
 
@@ -38,6 +112,8 @@ impl Conn for TcpConn {
         anyhow::ensure!(len <= 1 << 30, "frame too large: {len}");
         let mut buf = vec![0u8; len];
         self.stream.read_exact(&mut buf).context("tcp read frame")?;
+        telemetry::counter(keys::RX_FRAMES).incr(1);
+        telemetry::counter(keys::RX_BYTES).incr(len as u64 + 4);
         Ok(buf)
     }
 }
@@ -91,6 +167,54 @@ mod tests {
         });
         let mut conns = acceptor.join().unwrap().unwrap();
         assert_eq!(conns[0].recv().unwrap(), payload);
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn connect_with_retry_succeeds_after_listener_appears() {
+        // Reserve a port, drop the listener, then bind it again shortly
+        // after the client starts retrying.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = probe.local_addr().unwrap().port();
+        drop(probe);
+        let addr = format!("127.0.0.1:{port}");
+        let server = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(60));
+            let listener = TcpListener::bind(("127.0.0.1", port)).unwrap();
+            let _ = listener.accept().unwrap();
+        });
+        let conn =
+            TcpConn::connect_with_retry(&addr, 8, Duration::from_millis(25));
+        assert!(conn.is_ok(), "{:?}", conn.err());
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn connect_with_retry_fails_in_bounded_time() {
+        // Nothing listens here; all attempts must fail quickly.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = probe.local_addr().unwrap().port();
+        drop(probe);
+        let t0 = std::time::Instant::now();
+        let r = TcpConn::connect_with_retry(
+            &format!("127.0.0.1:{port}"),
+            3,
+            Duration::from_millis(5),
+        );
+        assert!(r.is_err());
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn read_timeout_fires_instead_of_hanging() {
+        let (port, acceptor) = listen_local(1).unwrap();
+        let client = std::thread::spawn(move || {
+            let mut c = TcpConn::connect(&format!("127.0.0.1:{port}")).unwrap();
+            c.set_io_timeout(Some(Duration::from_millis(50))).unwrap();
+            // Peer never sends: recv must error out, not block forever.
+            assert!(c.recv().is_err());
+        });
+        let _server_conn = acceptor.join().unwrap().unwrap();
         client.join().unwrap();
     }
 }

@@ -3,7 +3,10 @@
 //! oracles, and the PJRT-backed EF21 run must track the simulated one.
 //!
 //! These tests are skipped (with a notice) if `artifacts/manifest.json` is
-//! absent — run `make artifacts` first.
+//! absent — run `make artifacts` first. The whole file is compiled only
+//! with the `xla-runtime` feature (PJRT bindings).
+
+#![cfg(feature = "xla-runtime")]
 
 use ef21::data::{partition, synth};
 use ef21::oracle::xla::{ShardKind, XlaShardOracle, XlaTransformerOracle};

@@ -1,0 +1,146 @@
+//! Telemetry integration: the global facade's disabled fast path, the
+//! exact agreement between the `transport.uplink.bits` counter and the
+//! simulated `bits_per_client` accounting, and both exporters serving
+//! the same numbers.
+//!
+//! Global enable/disable lives in ONE test function: the remaining tests
+//! use private `Registry` instances so this binary's parallel test
+//! threads never race on the process-wide flag.
+
+use ef21::algo::AlgoSpec;
+use ef21::exp::{Objective, Problem};
+use ef21::telemetry::{self, keys, Registry};
+use ef21::util::json::Json;
+use std::io::{Read as _, Write as _};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn global_lifecycle_uplink_exactness_and_exporters() {
+    // --- Disabled (default): handles are noop, registry untouched. ---
+    let before_enable = telemetry::counter("itest.pre_enable");
+    assert!(before_enable.is_noop());
+    before_enable.incr(7);
+    assert!(!telemetry::is_enabled());
+
+    telemetry::enable();
+    assert!(telemetry::is_enabled());
+    assert_eq!(
+        telemetry::snapshot().counter("itest.pre_enable"),
+        None,
+        "disabled-era increments must never reach the registry"
+    );
+
+    // --- 20-worker simulated EF21 run, 10 rounds: the telemetry uplink
+    // counter must equal History::bits_per_client * n EXACTLY. ---
+    let evals_before = telemetry::snapshot().counter(keys::ORACLE_GRAD_EVALS).unwrap_or(0);
+    let bits_before = telemetry::snapshot().counter(keys::UPLINK_BITS).unwrap_or(0);
+    let ds = ef21::data::synth::generate_custom("tele", 800, 16, 0.4, 7);
+    let p = Problem::from_dataset(ds, Objective::LogReg, 20, 0.1);
+    let h = p.run_trial(AlgoSpec::Ef21, "top2", 1.0, None, 10, 1, 3);
+    assert!(!h.diverged());
+    let bits_after = telemetry::snapshot().counter(keys::UPLINK_BITS).unwrap();
+    let bits_per_client = h.records.last().unwrap().bits_per_client;
+    assert_eq!(
+        bits_after - bits_before,
+        (bits_per_client * 20.0).round() as u64,
+        "uplink bits counter disagrees with the simulated accounting"
+    );
+
+    // Per-layer instrumentation fired: 20 workers x (init + 10 rounds)
+    // gradient evaluations, compressor sparsity gauge, round latency.
+    let evals_after = telemetry::snapshot().counter(keys::ORACLE_GRAD_EVALS).unwrap();
+    assert_eq!(evals_after - evals_before, 20 * 11);
+    let snap = telemetry::snapshot();
+    let sparsity = snap.gauge("compress.top2.sparsity").expect("sparsity gauge");
+    assert!((sparsity - 2.0 / 16.0).abs() < 1e-12, "top2 over d=16: {sparsity}");
+    assert!(snap.histogram(keys::ROUND_NS).expect("round ns").count >= 10);
+
+    // --- JSONL exporter: last line carries the same cumulative counter. ---
+    let path = std::env::temp_dir()
+        .join(format!("ef21_itest_telemetry_{}.jsonl", std::process::id()));
+    let exporter =
+        telemetry::jsonl::JsonlExporter::spawn(&path, Duration::from_millis(50)).unwrap();
+    std::thread::sleep(Duration::from_millis(80));
+    exporter.stop().unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let last = text.lines().last().expect("at least one jsonl line");
+    let j = Json::parse(last).expect("valid json");
+    assert_eq!(
+        j.get("counters").unwrap().get(keys::UPLINK_BITS).unwrap().as_f64(),
+        Some(bits_after as f64)
+    );
+    std::fs::remove_file(&path).ok();
+
+    // --- Prometheus TCP exposition serves the same counter. ---
+    let server = telemetry::prom::PromServer::bind(0).unwrap();
+    let mut conn =
+        std::net::TcpStream::connect(("127.0.0.1", server.port())).unwrap();
+    conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut response = String::new();
+    conn.read_to_string(&mut response).unwrap();
+    server.stop();
+    assert!(response.starts_with("HTTP/1.0 200 OK"));
+    assert!(
+        response.contains(&format!("ef21_transport_uplink_bits {bits_after}")),
+        "exposition missing the uplink counter:\n{response}"
+    );
+    assert!(response.contains("# TYPE ef21_coordinator_round_ns histogram"));
+
+    // --- Back to noop. ---
+    telemetry::disable();
+    assert!(telemetry::counter("itest.post_disable").is_noop());
+}
+
+#[test]
+fn concurrent_counter_increments_sum_exactly() {
+    let reg = Arc::new(Registry::new());
+    let threads: Vec<_> = (0..8)
+        .map(|_| {
+            let reg = reg.clone();
+            std::thread::spawn(move || {
+                let c = reg.counter("itest.concurrent");
+                for _ in 0..10_000 {
+                    c.incr(3);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(reg.counter("itest.concurrent").get(), 8 * 10_000 * 3);
+}
+
+#[test]
+fn histogram_bucket_boundaries_are_powers_of_two() {
+    let reg = Registry::new();
+    let h = reg.histogram("itest.hist");
+    for v in [0u64, 1, 2, 3, 4, 1023, 1024] {
+        h.record(v);
+    }
+    let snap = reg.snapshot();
+    let hs = snap.histogram("itest.hist").unwrap();
+    assert_eq!(hs.count, 7);
+    assert_eq!(hs.sum, 0 + 1 + 2 + 3 + 4 + 1023 + 1024);
+    assert_eq!(hs.buckets[0], 2, "bucket 0 holds {{0, 1}}");
+    assert_eq!(hs.buckets[1], 2, "bucket 1 holds {{2, 3}}");
+    assert_eq!(hs.buckets[2], 1, "bucket 2 holds [4, 7]");
+    assert_eq!(hs.buckets[9], 1, "bucket 9 holds [512, 1023]");
+    assert_eq!(hs.buckets[10], 1, "bucket 10 holds [1024, 2047]");
+    assert_eq!(hs.buckets.iter().sum::<u64>(), 7);
+}
+
+#[test]
+fn noop_handles_have_a_zero_cost_shape() {
+    // The disabled fast path hands out cell-free handles; recording
+    // through them is a branch on None (nothing to observe afterwards).
+    let reg = Registry::new();
+    let live = reg.counter("itest.live");
+    let noop = ef21::telemetry::Counter::noop();
+    live.incr(1);
+    noop.incr(1);
+    assert_eq!(live.get(), 1);
+    assert_eq!(noop.get(), 0);
+    assert!(noop.is_noop() && !live.is_noop());
+}

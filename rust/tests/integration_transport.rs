@@ -31,7 +31,11 @@ fn sequential_reference(rounds: usize, gamma: f64) -> ef21::metrics::History {
     run_protocol(m, w, &RunConfig::rounds(rounds))
 }
 
-fn distributed(rounds: usize, gamma: f64, kind: TransportKind) -> ef21::coordinator::dist::DistOutcome {
+fn distributed(
+    rounds: usize,
+    gamma: f64,
+    kind: TransportKind,
+) -> ef21::coordinator::dist::DistOutcome {
     let (ds, lam) = problem_data();
     let d = ds.d;
     let shards: Vec<(Vec<f32>, Vec<f32>, usize, usize)> = partition::shards(&ds, 4)
