@@ -10,7 +10,7 @@ use ef21::oracle::{GradOracle, LogRegOracle, LstsqOracle};
 use ef21::util::rng::Rng;
 use harness::{bench, black_box, header};
 #[cfg(feature = "xla-runtime")]
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
     header("oracles (pure rust)");
@@ -37,7 +37,7 @@ fn xla_section(rng: &mut Rng) {
     match ef21::runtime::Runtime::from_default_dir() {
         Err(e) => eprintln!("(skipping XLA oracle bench: {e:#})"),
         Ok(rt) => {
-            let rt = Rc::new(rt);
+            let rt = Arc::new(rt);
             header("oracles (PJRT artifact: L1 pallas + L2 jax)");
             for name in ["phishing", "a9a"] {
                 let ds = synth::generate(name, 0);

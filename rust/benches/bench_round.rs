@@ -2,14 +2,20 @@
 //! coordinator cost (oracles + compression + aggregation + step) for one
 //! communication round of the a9a logistic problem, 20 workers. One bench
 //! per paper method == one row per Figure-1/2 curve family.
+//!
+//! Second section: sequential vs pooled protocol ([`coordinator::par`])
+//! over a full multi-round run, reporting the measured speedup — the
+//! acceptance instrument for the deterministic parallel engine.
 
 #[path = "harness.rs"]
 mod harness;
 
 use ef21::algo::{AlgoSpec, MasterNode, WorkerNode};
+use ef21::coordinator::{self, RunConfig};
 use ef21::exp::{Objective, Problem};
 use harness::{bench, header};
 use std::sync::Arc;
+use std::time::Instant;
 
 fn setup(algo: AlgoSpec, comp: &str) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
     let p = Problem::new("a9a", Objective::LogReg, 20, 0.1, 0);
@@ -23,6 +29,22 @@ fn setup(algo: AlgoSpec, comp: &str) -> (Box<dyn MasterNode>, Vec<Box<dyn Worker
     let msgs: Vec<_> = w.iter_mut().map(|wk| wk.init(&x)).collect();
     m.init_absorb(&msgs);
     (m, w)
+}
+
+/// Wall-clock of one full EF21 protocol run (fresh nodes per call) on
+/// the given pool width; `threads == 1` is the sequential runner.
+fn protocol_secs(problem: &Problem, rounds: usize, threads: usize) -> f64 {
+    let c: Arc<dyn ef21::compress::Compressor> =
+        Arc::from(ef21::compress::from_spec("top8").unwrap());
+    let gamma = problem.theory_gamma(c.alpha(problem.d()));
+    let (m, w) =
+        ef21::algo::build(AlgoSpec::Ef21, vec![0.0; problem.d()], problem.oracles(), c, gamma, 0);
+    let cfg = RunConfig::rounds(rounds).with_record_every(50);
+    let t0 = Instant::now();
+    let h = coordinator::run_protocol_par(m, w, &cfg, threads);
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(h.records.last().unwrap().round, rounds - 1);
+    dt
 }
 
 fn main() {
@@ -43,5 +65,30 @@ fn main() {
             let msgs: Vec<_> = w.iter_mut().map(|wk| wk.round(&x)).collect();
             m.absorb(&msgs);
         });
+    }
+
+    // Sequential vs pooled protocol: same trajectory (bit-identical),
+    // different wall-clock. Widths: 1 (baseline), 2, 4, and auto.
+    println!("\n== sequential vs parallel protocol (EF21 top8, a9a, 20 workers, 120 rounds) ==");
+    println!("{:<44} {:>12} {:>9}", "engine", "wall", "speedup");
+    let problem = Problem::new("a9a", Objective::LogReg, 20, 0.1, 0);
+    let rounds = 120;
+    // Warm the dataset cache / allocator before timing.
+    let _ = protocol_secs(&problem, 10, 1);
+    let t_seq = protocol_secs(&problem, rounds, 1);
+    println!("{:<44} {:>9.3} s {:>8.2}x", "sequential (threads=1)", t_seq, 1.0);
+    let mut widths = vec![2usize, 4];
+    let auto = ef21::coordinator::auto_threads();
+    if !widths.contains(&auto) {
+        widths.push(auto);
+    }
+    for threads in widths {
+        let t = protocol_secs(&problem, rounds, threads);
+        println!(
+            "{:<44} {:>9.3} s {:>8.2}x",
+            format!("pooled (threads={threads})"),
+            t,
+            t_seq / t
+        );
     }
 }

@@ -5,7 +5,8 @@
 //! Top-k compression in Rust (L3). Proves all three layers compose.
 //!
 //!   make artifacts
-//!   cargo run --release --example train_transformer -- [steps] [workers]
+//!   cargo run --release --features xla-runtime \
+//!       --example train_transformer -- [steps] [workers]
 //!
 //! Logs the training-loss curve and a held-out eval (loss + next-token
 //! accuracy vs the corpus' Bayes accuracy); the recorded run lives in
@@ -18,7 +19,6 @@ use ef21::oracle::xla::XlaTransformerOracle;
 use ef21::oracle::GradOracle;
 use ef21::prelude::*;
 use ef21::runtime::Runtime;
-use std::rc::Rc;
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
     let n_workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
 
-    let rt = Rc::new(Runtime::from_default_dir()?);
+    let rt = Arc::new(Runtime::from_default_dir()?);
     let entry = rt.entry("transformer_step")?.clone();
     let layout = ParamLayout::from_entry(&entry)?;
     let vocab = entry.meta_usize("vocab")?;

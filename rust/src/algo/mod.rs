@@ -55,7 +55,12 @@ impl WireMsg {
 }
 
 /// Worker-side state machine.
-pub trait WorkerNode {
+///
+/// `Send` because both threaded runners ([`crate::coordinator::par`],
+/// [`crate::coordinator::dist`]) move worker boxes onto pool/worker
+/// threads; worker state is never shared, only owned, so `Sync` is not
+/// required.
+pub trait WorkerNode: Send {
     /// Produce the initialization message at `x^0` (runs the oracle).
     fn init(&mut self, x0: &[f64]) -> WireMsg;
 
@@ -82,7 +87,10 @@ pub trait WorkerNode {
 }
 
 /// Master-side state machine.
-pub trait MasterNode {
+///
+/// `Send` so whole trials (master included) can be fanned across the
+/// experiment scheduler's threads ([`crate::exp::parallel_trials`]).
+pub trait MasterNode: Send {
     /// Current model.
     fn x(&self) -> &[f64];
 

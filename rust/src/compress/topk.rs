@@ -73,7 +73,12 @@ impl TopK {
 }
 
 thread_local! {
-    /// Reused index buffer for [`TopK::select_indices`].
+    /// Reused index buffer for [`TopK::select_indices`]. Thread-local,
+    /// so the shared `Arc<TopK>` stays `Sync` and each pool thread of
+    /// [`crate::coordinator::par`] amortizes its own buffer; the buffer
+    /// is cleared and refilled on every use, so selection output never
+    /// depends on which thread (or which prior call) last used it —
+    /// required for the parallel runner's bit-identity guarantee.
     static SCRATCH: std::cell::Cell<Vec<u32>> = const { std::cell::Cell::new(Vec::new()) };
 }
 

@@ -7,6 +7,55 @@ pub mod cli;
 use crate::algo::AlgoSpec;
 use anyhow::Result;
 
+/// `--threads` spec: how wide the in-process pools run — both the
+/// per-round worker pool ([`crate::coordinator::par`]) and the sweep
+/// trial scheduler ([`crate::exp::parallel_trials`]).
+///
+/// `auto` (the default) uses every available core; an explicit `1` is
+/// the exact legacy sequential path. Results are bit-identical either
+/// way for deterministic algorithms — the knob trades wall-clock only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Threads {
+    Auto,
+    Fixed(usize),
+}
+
+impl Default for Threads {
+    fn default() -> Self {
+        Threads::Auto
+    }
+}
+
+impl Threads {
+    pub fn parse(s: &str) -> Result<Threads> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "auto" {
+            return Ok(Threads::Auto);
+        }
+        let n: usize = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads {s}: expected 'auto' or a positive count"))?;
+        anyhow::ensure!(n >= 1, "--threads 0: need at least one thread (1 = sequential)");
+        Ok(Threads::Fixed(n))
+    }
+
+    /// Read `--threads` from parsed args (absent = `auto`).
+    pub fn from_args(args: &cli::Args) -> Result<Threads> {
+        match args.get_str("threads") {
+            Some(s) => Threads::parse(s),
+            None => Ok(Threads::Auto),
+        }
+    }
+
+    /// Concrete pool width.
+    pub fn resolve(self) -> usize {
+        match self {
+            Threads::Auto => crate::coordinator::auto_threads(),
+            Threads::Fixed(n) => n.max(1),
+        }
+    }
+}
+
 /// One fully-specified training run.
 #[derive(Clone, Debug)]
 pub struct RunSpec {
@@ -30,6 +79,9 @@ pub struct RunSpec {
     /// the same `--telemetry` flag directly in `main::dispatch` (before
     /// any subcommand parses a RunSpec).
     pub telemetry: String,
+    /// Pool width for the parallel runner / trial scheduler
+    /// (`--threads n|auto`; `Fixed(1)` = exact legacy sequential path).
+    pub threads: Threads,
 }
 
 impl Default for RunSpec {
@@ -46,6 +98,7 @@ impl Default for RunSpec {
             seed: 0,
             record_every: 1,
             telemetry: "off".into(),
+            threads: Threads::Auto,
         }
     }
 }
@@ -76,6 +129,7 @@ impl RunSpec {
         if let Some(t) = args.get_str("telemetry") {
             s.telemetry = t.to_string();
         }
+        s.threads = Threads::from_args(args)?;
         Ok(s)
     }
 
@@ -112,6 +166,20 @@ mod tests {
         assert_eq!(s.gamma_mult, 8.0);
         assert_eq!(s.n_workers, 20); // default kept
         assert_eq!(s.telemetry, "off"); // default kept
+        assert_eq!(s.threads, Threads::Auto); // default kept
+    }
+
+    #[test]
+    fn threads_spec_parses_and_rejects() {
+        assert_eq!(Threads::parse("auto").unwrap(), Threads::Auto);
+        assert_eq!(Threads::parse("4").unwrap(), Threads::Fixed(4));
+        assert_eq!(Threads::Fixed(3).resolve(), 3);
+        assert!(Threads::Auto.resolve() >= 1);
+        assert!(Threads::parse("0").is_err());
+        assert!(Threads::parse("many").is_err());
+        let args = cli::Args::from_vec(vec!["--threads".into(), "2".into()]);
+        let s = RunSpec::from_args(&args).unwrap();
+        assert_eq!(s.threads, Threads::Fixed(2));
     }
 
     #[test]

@@ -227,12 +227,8 @@ mod tests {
             master,
             3,
             move |i| {
-                let mut base = crate::util::rng::Rng::seed(9);
-                // Reproduce build()'s per-worker fork sequence.
-                let mut rng = base.fork(0);
-                for j in 1..=i {
-                    rng = base.fork(j as u64);
-                }
+                // build()'s per-worker fork sequence, via the shared helper.
+                let rng = crate::util::rng::worker_rng(9, i);
                 Box::new(crate::algo::ef21::Ef21Worker::new(quad(i), c2.clone(), rng))
             },
             25,

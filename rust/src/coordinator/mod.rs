@@ -1,9 +1,14 @@
 //! The coordinator: drives the master/worker round protocol, meters the
-//! uplink, records metrics, and (in [`dist`]) runs the same protocol over
-//! real transports with one thread per worker.
+//! uplink, records metrics, and runs it on three engines sharing one
+//! protocol loop: [`runner`] (sequential, in-process), [`par`]
+//! (persistent worker-thread pool, bit-identical to sequential for
+//! deterministic algorithms), and [`dist`] (real transports with one
+//! thread per worker).
 
 pub mod dist;
+pub mod par;
 pub mod runner;
 
+pub use par::{auto_threads, run_protocol_par};
 pub use runner::{run_protocol, RunConfig};
 

@@ -1,0 +1,295 @@
+//! Deterministic parallel in-process runner: a persistent scoped
+//! worker-thread pool that evaluates `WorkerNode::round` calls
+//! concurrently each round but hands every message and observation back
+//! to the coordinator **in worker-index order**.
+//!
+//! # Determinism argument
+//!
+//! For deterministic algorithms (EF21, EF21+, EF, DCGD/GD, and anything
+//! driving a seeded randomized compressor) the trajectory is
+//! **bit-identical** to [`super::runner::run_protocol`]:
+//!
+//! 1. Each worker is an isolated state machine — its own oracle, its own
+//!    forked RNG stream, its own Markov/error state. Which OS thread
+//!    executes it cannot change what it computes; only the broadcast `x`
+//!    sequence can, and that is produced solely by the master.
+//! 2. Workers are partitioned into **contiguous** chunks, one pool
+//!    thread per chunk, pinned for the whole run. Replies are collected
+//!    chunk 0 first, then chunk 1, ... so the concatenated message
+//!    vector is in worker order 0..n no matter which chunk finished
+//!    first.
+//! 3. Every floating-point reduction — `master.absorb`, the loss-mean
+//!    divergence guard, and the recorded observation — therefore sums in
+//!    exactly the sequential runner's order ([`runner::reduce_obs`] is
+//!    literally the same code), and fixed-order f64 addition is
+//!    reproducible. The wire-bit meter is integer arithmetic.
+//!
+//! Equality of `History` (records, bits_per_client, stop round) across
+//! the two runners is asserted in `rust/tests/integration_parallel.rs`.
+//!
+//! # Scheduling
+//!
+//! The pool is *persistent*: threads are spawned once per run
+//! ([`std::thread::scope`], so worker boxes only need `Send`, not
+//! `'static` coordination) and receive one command per phase over mpsc
+//! channels. Per round that is 2 messages per thread — negligible
+//! against the O(shard · d) oracle work that dominates a round. Dense
+//! gradients are only copied out of pool threads on observation rounds
+//! — but note that `grad_tol` forces an observation **every** round
+//! (the averaged-gradient norm has cross-worker terms, so no scalar
+//! partials can stand in for the vectors without changing the f64
+//! reduction order). Tolerance-driven runs on tiny `d` therefore pay an
+//! O(n·d) copy per round here that the sequential engine avoids;
+//! `threads = 1` remains the right choice for those, while recording
+//! runs (the sweep workload) keep copies gated on `record_every`.
+
+use super::runner::{self, RunConfig, WorkerPool};
+use crate::algo::{MasterNode, WireMsg, WorkerNode};
+use crate::metrics::History;
+use crate::telemetry::{self, keys};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Pool size for `--threads auto`: every available core.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// One command from the coordinator to a pool thread.
+enum Cmd {
+    /// Run `WorkerNode::init` on every worker of the chunk.
+    Init(Arc<Vec<f64>>),
+    /// Run one round at the broadcast model.
+    Round(Arc<Vec<f64>>),
+    /// Snapshot per-worker instrumentation (recording rounds only).
+    Observe,
+}
+
+/// Per-worker observation snapshot, copied out of the owning thread.
+struct Obs {
+    loss: f64,
+    grad: Vec<f64>,
+    distortion_sq: Option<f64>,
+    dcgd_branch: Option<bool>,
+}
+
+/// One reply from a pool thread, covering its whole chunk in worker
+/// order.
+enum Reply {
+    /// Messages plus cached losses (init replies carry losses too; the
+    /// coordinator ignores them there).
+    Msgs { msgs: Vec<WireMsg>, losses: Vec<f64> },
+    Observed(Vec<Obs>),
+}
+
+/// Chunk event loop: owns its workers for the lifetime of the run.
+fn pool_loop(mut workers: Vec<Box<dyn WorkerNode>>, rx: Receiver<Cmd>, tx: Sender<Reply>) {
+    while let Ok(cmd) = rx.recv() {
+        let reply = match cmd {
+            Cmd::Init(x0) => {
+                let msgs = workers.iter_mut().map(|w| w.init(&x0[..])).collect();
+                let losses = workers.iter().map(|w| w.last_loss()).collect();
+                Reply::Msgs { msgs, losses }
+            }
+            Cmd::Round(x) => {
+                // Per-thread round latency; ROUND_NS stays coordinator-side.
+                let t0 = telemetry::maybe_now();
+                let msgs = workers.iter_mut().map(|w| w.round(&x[..])).collect();
+                let losses = workers.iter().map(|w| w.last_loss()).collect();
+                telemetry::record_elapsed_ns(keys::POOL_CHUNK_NS, t0);
+                Reply::Msgs { msgs, losses }
+            }
+            Cmd::Observe => Reply::Observed(
+                workers
+                    .iter()
+                    .map(|w| Obs {
+                        loss: w.last_loss(),
+                        grad: w.last_grad().to_vec(),
+                        distortion_sq: w.distortion_sq(),
+                        dcgd_branch: w.used_dcgd_branch(),
+                    })
+                    .collect(),
+            ),
+        };
+        // The coordinator hanging up (drive returned) ends the loop.
+        if tx.send(reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// The pooled [`WorkerPool`]: chunk channels in worker order. Dropping
+/// it closes the command channels, which terminates the pool threads;
+/// the surrounding scope joins them.
+struct ParPool {
+    n: usize,
+    chans: Vec<(Sender<Cmd>, Receiver<Reply>)>,
+}
+
+impl ParPool {
+    /// Broadcast a command builder to all chunks, then gather replies in
+    /// chunk (== worker) order.
+    fn exchange(&mut self, cmd: impl Fn() -> Cmd) -> Vec<Reply> {
+        for (tx, _) in &self.chans {
+            tx.send(cmd()).expect("pool thread terminated early");
+        }
+        self.chans
+            .iter()
+            .map(|(_, rx)| rx.recv().expect("pool thread terminated early"))
+            .collect()
+    }
+
+    /// Concatenate message replies preserving worker order; losses are
+    /// summed left-to-right across the same order.
+    fn gather_msgs(&mut self, cmd: impl Fn() -> Cmd) -> (Vec<WireMsg>, f64) {
+        let mut all_msgs = Vec::with_capacity(self.n);
+        let mut loss_sum = 0.0;
+        for reply in self.exchange(cmd) {
+            match reply {
+                Reply::Msgs { msgs, losses } => {
+                    all_msgs.extend(msgs);
+                    for l in losses {
+                        loss_sum += l;
+                    }
+                }
+                Reply::Observed(_) => unreachable!("observe reply to a round command"),
+            }
+        }
+        (all_msgs, loss_sum)
+    }
+}
+
+impl WorkerPool for ParPool {
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn init(&mut self, x0: &Arc<Vec<f64>>) -> Vec<WireMsg> {
+        self.gather_msgs(|| Cmd::Init(x0.clone())).0
+    }
+
+    fn round(&mut self, x: &Arc<Vec<f64>>) -> (Vec<WireMsg>, f64) {
+        self.gather_msgs(|| Cmd::Round(x.clone()))
+    }
+
+    fn observe(&mut self) -> (f64, f64, f64, f64) {
+        let mut obs = Vec::with_capacity(self.n);
+        for reply in self.exchange(|| Cmd::Observe) {
+            match reply {
+                Reply::Observed(chunk) => obs.extend(chunk),
+                Reply::Msgs { .. } => unreachable!("round reply to an observe command"),
+            }
+        }
+        runner::reduce_obs(
+            self.n,
+            obs.iter().map(|o| (o.loss, &o.grad[..], o.distortion_sq, o.dcgd_branch)),
+        )
+    }
+}
+
+/// Drive the protocol with worker rounds fanned across `threads` pool
+/// threads. `threads <= 1` (or a single worker) takes the exact legacy
+/// sequential path; larger pools are clamped to the worker count.
+///
+/// Bit-identical to [`runner::run_protocol`] for deterministic
+/// algorithms — see the module docs for the argument and
+/// `integration_parallel.rs` for the proof-by-test.
+pub fn run_protocol_par(
+    master: Box<dyn MasterNode>,
+    workers: Vec<Box<dyn WorkerNode>>,
+    cfg: &RunConfig,
+    threads: usize,
+) -> History {
+    assert!(!workers.is_empty());
+    let threads = threads.max(1).min(workers.len());
+    if threads == 1 {
+        return runner::run_protocol(master, workers, cfg);
+    }
+    telemetry::gauge(keys::POOL_THREADS).set(threads as f64);
+
+    let n = workers.len();
+    std::thread::scope(|scope| {
+        let mut rest = workers;
+        let mut chans = Vec::with_capacity(threads);
+        let base = n / threads;
+        let rem = n % threads;
+        for i in 0..threads {
+            // Contiguous balanced split: the first `rem` chunks take one
+            // extra worker, preserving global worker order across chunks.
+            let take = base + usize::from(i < rem);
+            let chunk: Vec<Box<dyn WorkerNode>> = rest.drain(..take).collect();
+            let (cmd_tx, cmd_rx) = channel();
+            let (rep_tx, rep_rx) = channel();
+            scope.spawn(move || pool_loop(chunk, cmd_rx, rep_tx));
+            chans.push((cmd_tx, rep_rx));
+        }
+        debug_assert!(rest.is_empty());
+        runner::drive(master, ParPool { n, chans }, cfg)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::AlgoSpec;
+    use crate::compress::TopK;
+    use crate::oracle::GradOracle;
+
+    fn quads() -> Vec<Box<dyn GradOracle>> {
+        crate::oracle::quadratic::divergence_example()
+            .into_iter()
+            .map(|q| Box::new(q) as Box<dyn GradOracle>)
+            .collect()
+    }
+
+    fn build(gamma: f64) -> (Box<dyn crate::algo::MasterNode>, Vec<Box<dyn WorkerNode>>) {
+        crate::algo::build(
+            AlgoSpec::Ef21,
+            vec![1.0; 3],
+            quads(),
+            Arc::new(TopK::new(1)),
+            gamma,
+            11,
+        )
+    }
+
+    #[test]
+    fn matches_sequential_bit_for_bit() {
+        let (m, ws) = build(0.01);
+        let h_seq = runner::run_protocol(m, ws, &RunConfig::rounds(40));
+        let (m, ws) = build(0.01);
+        let h_par = run_protocol_par(m, ws, &RunConfig::rounds(40), 2);
+        assert_eq!(h_seq.records.len(), h_par.records.len());
+        for (a, b) in h_seq.records.iter().zip(&h_par.records) {
+            assert_eq!(a.round, b.round);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "round {}", a.round);
+            assert_eq!(a.grad_norm_sq.to_bits(), b.grad_norm_sq.to_bits());
+            assert_eq!(a.bits_per_client.to_bits(), b.bits_per_client.to_bits());
+            assert_eq!(a.gt.to_bits(), b.gt.to_bits());
+        }
+    }
+
+    #[test]
+    fn threads_one_is_the_legacy_path() {
+        let (m, ws) = build(0.01);
+        let h_seq = runner::run_protocol(m, ws, &RunConfig::rounds(10));
+        let (m, ws) = build(0.01);
+        let h_one = run_protocol_par(m, ws, &RunConfig::rounds(10), 1);
+        for (a, b) in h_seq.records.iter().zip(&h_one.records) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn oversized_pool_is_clamped_to_worker_count() {
+        // 3 workers, 16 requested threads: must still run (3 chunks).
+        let (m, ws) = build(0.01);
+        let h = run_protocol_par(m, ws, &RunConfig::rounds(5), 16);
+        assert_eq!(h.records.len(), 5);
+    }
+
+    #[test]
+    fn auto_threads_is_positive() {
+        assert!(auto_threads() >= 1);
+    }
+}

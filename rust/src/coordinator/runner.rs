@@ -1,12 +1,19 @@
 //! In-process sequential runner — the fast simulation path used by the
 //! experiment sweeps. Protocol semantics are identical to the threaded
-//! transport runner ([`super::dist`]); equality of the two is an
-//! integration test.
+//! transport runner ([`super::dist`]) and to the parallel in-process
+//! runner ([`super::par`]); equality of the three is an integration test.
+//!
+//! The protocol loop itself lives in [`drive`], generic over a
+//! [`WorkerPool`]: the sequential pool here and the thread pool in
+//! [`super::par`] share every piece of metering, recording, and
+//! stopping logic, so the two runners can only differ in *where* worker
+//! state machines execute — never in what the coordinator computes.
 
 use crate::algo::{MasterNode, WireMsg, WorkerNode};
 use crate::metrics::{History, RoundRecord};
 use crate::telemetry::{self, keys};
 use crate::util::linalg;
+use std::sync::Arc;
 
 /// Runner configuration.
 #[derive(Clone, Debug)]
@@ -51,25 +58,53 @@ impl RunConfig {
     }
 }
 
-/// Aggregate instrumentation across workers after a round.
-fn observe(workers: &[Box<dyn WorkerNode>]) -> (f64, f64, f64, f64) {
-    let n = workers.len();
-    let d = workers[0].last_grad().len();
+/// Where the worker state machines execute. The coordinator only ever
+/// sees messages and observations **in worker-index order**, so every
+/// floating-point reduction the protocol performs is a fixed-order sum
+/// regardless of the pool's internal scheduling — the determinism
+/// argument behind the parallel runner (DESIGN.md §4).
+pub(crate) trait WorkerPool {
+    fn n_workers(&self) -> usize;
+
+    /// Run `init(x0)` on every worker; messages in worker order.
+    fn init(&mut self, x0: &Arc<Vec<f64>>) -> Vec<WireMsg>;
+
+    /// Run one round at `x` on every worker; returns the messages in
+    /// worker order plus the left-to-right sum of the workers' cached
+    /// losses (the divergence guard's input).
+    fn round(&mut self, x: &Arc<Vec<f64>>) -> (Vec<WireMsg>, f64);
+
+    /// Reduced post-round observation `(loss, ||grad||^2, G^t,
+    /// dcgd_frac)`; implementations MUST reduce via [`reduce_obs`] so
+    /// both runners perform identical f64 arithmetic.
+    fn observe(&mut self) -> (f64, f64, f64, f64);
+}
+
+/// Aggregate per-worker instrumentation in worker-index order. Shared by
+/// the sequential and parallel pools: one reduction code path means one
+/// f64 rounding behavior.
+pub(crate) fn reduce_obs<'a>(
+    n: usize,
+    items: impl Iterator<Item = (f64, &'a [f64], Option<f64>, Option<bool>)>,
+) -> (f64, f64, f64, f64) {
     let inv_n = 1.0 / n as f64;
     let mut loss = 0.0;
-    let mut grad = vec![0.0; d];
+    let mut grad: Vec<f64> = Vec::new();
     let mut gt = 0.0;
     let mut gt_any = false;
     let mut dcgd = 0.0;
     let mut dcgd_any = false;
-    for w in workers {
-        loss += w.last_loss() * inv_n;
-        linalg::axpy(inv_n, w.last_grad(), &mut grad);
-        if let Some(dsq) = w.distortion_sq() {
+    for (w_loss, w_grad, w_dist, w_branch) in items {
+        if grad.is_empty() {
+            grad = vec![0.0; w_grad.len()];
+        }
+        loss += w_loss * inv_n;
+        linalg::axpy(inv_n, w_grad, &mut grad);
+        if let Some(dsq) = w_dist {
             gt += dsq * inv_n;
             gt_any = true;
         }
-        if let Some(b) = w.used_dcgd_branch() {
+        if let Some(b) = w_branch {
             dcgd += if b { inv_n } else { 0.0 };
             dcgd_any = true;
         }
@@ -82,34 +117,65 @@ fn observe(workers: &[Box<dyn WorkerNode>]) -> (f64, f64, f64, f64) {
     )
 }
 
-/// Drive the full protocol: init, then `cfg.rounds` rounds, metering the
-/// uplink and recording metrics.
+/// The sequential pool: workers run inline on the coordinator thread.
+pub(crate) struct SeqPool {
+    pub(crate) workers: Vec<Box<dyn WorkerNode>>,
+}
+
+impl WorkerPool for SeqPool {
+    fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn init(&mut self, x0: &Arc<Vec<f64>>) -> Vec<WireMsg> {
+        self.workers.iter_mut().map(|w| w.init(&x0[..])).collect()
+    }
+
+    fn round(&mut self, x: &Arc<Vec<f64>>) -> (Vec<WireMsg>, f64) {
+        let msgs = self.workers.iter_mut().map(|w| w.round(&x[..])).collect();
+        let loss_sum = self.workers.iter().map(|w| w.last_loss()).sum();
+        (msgs, loss_sum)
+    }
+
+    fn observe(&mut self) -> (f64, f64, f64, f64) {
+        reduce_obs(
+            self.workers.len(),
+            self.workers
+                .iter()
+                .map(|w| (w.last_loss(), w.last_grad(), w.distortion_sq(), w.used_dcgd_branch())),
+        )
+    }
+}
+
+/// Drive the full protocol over any [`WorkerPool`]: init, then
+/// `cfg.rounds` rounds, metering the uplink and recording metrics.
 ///
 /// The divergence guard runs **every** round on the workers' cached
 /// losses (an O(n) scan — the cached values are exactly what
-/// [`observe`]'s loss average uses), so a blow-up stops the run at the
-/// round it happens even when `record_every > 1` and no gradient
-/// tolerance is set; only the full O(n·d) gradient aggregation stays
-/// gated on recording rounds.
+/// [`WorkerPool::observe`]'s loss average uses), so a blow-up stops the
+/// run at the round it happens even when `record_every > 1` and no
+/// gradient tolerance is set; only the full O(n·d) gradient aggregation
+/// stays gated on recording rounds.
 ///
 /// Telemetry (when enabled): `transport.uplink.bits` is incremented with
 /// exactly the accounted bits — over one run its delta equals
 /// `bits_per_client * n` exactly (the counter itself is process-wide and
 /// sums across runs) — plus `coordinator.rounds` /
-/// `coordinator.round.ns` / `coordinator.divergence.aborts`.
-pub fn run_protocol(
+/// `coordinator.round.ns` / `coordinator.divergence.aborts`. These
+/// increments all happen on the coordinator thread, so the deltas are
+/// identical whichever pool executes the workers.
+pub(crate) fn drive<P: WorkerPool>(
     mut master: Box<dyn MasterNode>,
-    mut workers: Vec<Box<dyn WorkerNode>>,
+    mut pool: P,
     cfg: &RunConfig,
 ) -> History {
-    assert!(!workers.is_empty());
-    let n = workers.len() as f64;
+    let n = pool.n_workers() as f64;
     let mut history = History::new(cfg.label.clone());
     let mut bits_cum: u64 = 0;
 
     // Init phase: g_i^0 / w_i^0 at x^0 (counted as communication).
-    let x0 = master.x().to_vec();
-    let msgs: Vec<WireMsg> = workers.iter_mut().map(|w| w.init(&x0)).collect();
+    let x0 = Arc::new(master.x().to_vec());
+    let msgs = pool.init(&x0);
     let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
     bits_cum += init_bits;
     telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
@@ -117,8 +183,8 @@ pub fn run_protocol(
 
     for t in 0..cfg.rounds {
         let t_round = telemetry::maybe_now();
-        let x = master.begin_round();
-        let msgs: Vec<WireMsg> = workers.iter_mut().map(|w| w.round(&x)).collect();
+        let x = Arc::new(master.begin_round());
+        let (msgs, loss_sum) = pool.round(&x);
         let round_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
         bits_cum += round_bits;
         telemetry::counter(keys::UPLINK_BITS).incr(round_bits);
@@ -128,10 +194,10 @@ pub fn run_protocol(
 
         let record_now = t % cfg.record_every == 0 || t + 1 == cfg.rounds;
         // Cheap every-round divergence check on the cached worker losses.
-        let mean_loss = workers.iter().map(|w| w.last_loss()).sum::<f64>() / n;
+        let mean_loss = loss_sum / n;
         let diverged = !mean_loss.is_finite() || mean_loss.abs() > cfg.divergence_cap;
         if record_now || diverged || cfg.grad_tol.is_some() {
-            let (loss, grad_sq, gt, dcgd) = observe(&workers);
+            let (loss, grad_sq, gt, dcgd) = pool.observe();
             if record_now || diverged {
                 history.records.push(RoundRecord {
                     round: t,
@@ -154,6 +220,18 @@ pub fn run_protocol(
         }
     }
     history
+}
+
+/// Drive the protocol sequentially on the calling thread (the legacy
+/// single-core path; [`super::par::run_protocol_par`] is the pooled
+/// equivalent and is bit-identical for deterministic algorithms).
+pub fn run_protocol(
+    master: Box<dyn MasterNode>,
+    workers: Vec<Box<dyn WorkerNode>>,
+    cfg: &RunConfig,
+) -> History {
+    assert!(!workers.is_empty());
+    drive(master, SeqPool { workers }, cfg)
 }
 
 #[cfg(test)]

@@ -5,7 +5,8 @@
 
 use crate::algo::AlgoSpec;
 use crate::compress;
-use crate::coordinator::runner::{run_protocol, RunConfig};
+use crate::coordinator::par::run_protocol_par;
+use crate::coordinator::runner::RunConfig;
 use crate::data::{partition, synth, Dataset};
 use crate::metrics::History;
 use crate::oracle::{GradOracle, LogRegOracle, LstsqOracle};
@@ -100,7 +101,8 @@ impl Problem {
     }
 
     /// Run one trial: `algo` with compressor `comp_spec`, stepsize =
-    /// `gamma_mult x` theory (or `gamma_abs` if given).
+    /// `gamma_mult x` theory (or `gamma_abs` if given). Sequential
+    /// legacy path; see [`Self::run_trial_threads`].
     #[allow(clippy::too_many_arguments)]
     pub fn run_trial(
         &self,
@@ -111,6 +113,25 @@ impl Problem {
         rounds: usize,
         record_every: usize,
         seed: u64,
+    ) -> History {
+        self.run_trial_threads(algo, comp_spec, gamma_mult, gamma_abs, rounds, record_every, seed, 1)
+    }
+
+    /// [`Self::run_trial`] with the per-round worker pool fanned across
+    /// `threads` pool threads ([`crate::coordinator::par`]); `1` is the
+    /// exact sequential path and the result is bit-identical either way
+    /// for deterministic algorithms.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_trial_threads(
+        &self,
+        algo: AlgoSpec,
+        comp_spec: &str,
+        gamma_mult: f64,
+        gamma_abs: Option<f64>,
+        rounds: usize,
+        record_every: usize,
+        seed: u64,
+        threads: usize,
     ) -> History {
         let c: Arc<dyn compress::Compressor> =
             Arc::from(compress::from_spec(comp_spec).expect("compressor spec"));
@@ -123,8 +144,54 @@ impl Problem {
             .with_label(label)
             .with_record_every(record_every);
         cfg.divergence_cap = 1e60;
-        run_protocol(master, workers, &cfg)
+        run_protocol_par(master, workers, &cfg, threads)
     }
+}
+
+/// Fan independent sweep trials across a bounded thread pool, returning
+/// results **in input order** (so figure curve files, tuned-config
+/// selection folds, and console summaries are invariant to scheduling).
+///
+/// `threads <= 1` runs inline on the caller — the exact legacy path.
+/// Trials must be independent (each builds its own oracles/nodes, as
+/// [`Problem::run_trial`] does), which is what makes order-preserved
+/// fan-out result-identical to the sequential sweep. A panicking trial
+/// propagates out of the scope, like it would sequentially.
+pub fn parallel_trials<J, O, F>(jobs: Vec<J>, threads: usize, run: F) -> Vec<O>
+where
+    J: Send,
+    O: Send,
+    F: Fn(J) -> O + Sync,
+{
+    if threads <= 1 || jobs.len() <= 1 {
+        return jobs.into_iter().map(run).collect();
+    }
+    let n_jobs = jobs.len();
+    let queue: std::sync::Mutex<std::collections::VecDeque<(usize, J)>> =
+        std::sync::Mutex::new(jobs.into_iter().enumerate().collect());
+    let results: std::sync::Mutex<Vec<Option<O>>> =
+        std::sync::Mutex::new((0..n_jobs).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(n_jobs) {
+            scope.spawn(|| loop {
+                // Pop under the lock, run outside it.
+                let job = queue.lock().unwrap().pop_front();
+                match job {
+                    Some((i, j)) => {
+                        let out = run(j);
+                        results.lock().unwrap()[i] = Some(out);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("every queued trial completes"))
+        .collect()
 }
 
 /// Results directory (override with $EF21_RESULTS).
@@ -180,5 +247,27 @@ mod tests {
     #[test]
     fn mult_ladder_is_powers_of_two() {
         assert_eq!(mult_ladder(3), vec![1.0, 2.0, 4.0, 8.0]);
+    }
+
+    #[test]
+    fn parallel_trials_preserves_input_order() {
+        let jobs: Vec<usize> = (0..23).collect();
+        let seq = parallel_trials(jobs.clone(), 1, |j| j * j);
+        let par = parallel_trials(jobs, 4, |j| j * j);
+        assert_eq!(seq, par);
+        assert_eq!(par[7], 49);
+    }
+
+    #[test]
+    fn pooled_trial_is_bit_identical_to_sequential() {
+        let p = tiny_problem(Objective::LogReg);
+        let h1 = p.run_trial(crate::algo::AlgoSpec::Ef21, "top1", 1.0, None, 60, 5, 0);
+        let h4 =
+            p.run_trial_threads(crate::algo::AlgoSpec::Ef21, "top1", 1.0, None, 60, 5, 0, 4);
+        assert_eq!(h1.records.len(), h4.records.len());
+        for (a, b) in h1.records.iter().zip(&h4.records) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.grad_norm_sq.to_bits(), b.grad_norm_sq.to_bits());
+        }
     }
 }

@@ -15,7 +15,6 @@ use crate::oracle::xla::XlaTransformerOracle;
 use crate::oracle::GradOracle;
 use crate::runtime::Runtime;
 use crate::util::rng::Rng;
-use std::rc::Rc;
 use std::sync::Arc;
 
 pub struct DlCfg {
@@ -34,7 +33,7 @@ impl Default for DlCfg {
     }
 }
 
-fn worker_oracles(rt: &Rc<Runtime>, cfg: &DlCfg) -> anyhow::Result<Vec<Box<dyn GradOracle>>> {
+fn worker_oracles(rt: &Arc<Runtime>, cfg: &DlCfg) -> anyhow::Result<Vec<Box<dyn GradOracle>>> {
     let mut oracles: Vec<Box<dyn GradOracle>> = Vec::new();
     let entry = rt.entry("transformer_step")?;
     let vocab = entry.meta_usize("vocab")?;
@@ -56,7 +55,7 @@ fn worker_oracles(rt: &Rc<Runtime>, cfg: &DlCfg) -> anyhow::Result<Vec<Box<dyn G
 
 /// One training run; `eval` reports final held-out loss/accuracy.
 pub fn run_one(
-    rt: &Rc<Runtime>,
+    rt: &Arc<Runtime>,
     cfg: &DlCfg,
     algo: AlgoSpec,
     comp_spec: &str,
@@ -116,7 +115,7 @@ pub fn run_one(
     let mut eval_sampler = TokenSampler::new(vocab, cfg.noise, cfg.seed, 0xEEEE);
     let mut sampler_box = {
         let mut s = TokenSampler::new(vocab, cfg.noise, cfg.seed, 0xEEEF);
-        Box::new(move || s.batch(batch, seq)) as Box<dyn FnMut() -> Vec<i32>>
+        Box::new(move || s.batch(batch, seq)) as Box<dyn FnMut() -> Vec<i32> + Send>
     };
     let _ = &mut sampler_box;
     let oracle = XlaTransformerOracle::new(rt.clone(), sampler_box)?;
@@ -126,7 +125,7 @@ pub fn run_one(
 }
 
 /// Figures 13–14 analogue: EF21 vs EF vs SGD at the same k and stepsize.
-pub fn run_methods(rt: &Rc<Runtime>, cfg: &DlCfg) -> anyhow::Result<FigureData> {
+pub fn run_methods(rt: &Arc<Runtime>, cfg: &DlCfg) -> anyhow::Result<FigureData> {
     let entry = rt.entry("transformer_step")?;
     let n_params = entry.meta_usize("n_params")?;
     let k = ((n_params as f64 * cfg.k_frac) as usize).max(1);
@@ -148,7 +147,7 @@ pub fn run_methods(rt: &Rc<Runtime>, cfg: &DlCfg) -> anyhow::Result<FigureData> 
 }
 
 /// Figure 15 analogue: EF21 dependence on k.
-pub fn run_k_sweep(rt: &Rc<Runtime>, cfg: &DlCfg, fracs: &[f64]) -> anyhow::Result<FigureData> {
+pub fn run_k_sweep(rt: &Arc<Runtime>, cfg: &DlCfg, fracs: &[f64]) -> anyhow::Result<FigureData> {
     let entry = rt.entry("transformer_step")?;
     let n_params = entry.meta_usize("n_params")?;
     let mut fig = FigureData::new("dl_ksweep");
@@ -166,7 +165,7 @@ pub fn run_k_sweep(rt: &Rc<Runtime>, cfg: &DlCfg, fracs: &[f64]) -> anyhow::Resu
 }
 
 pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
-    let rt = Rc::new(Runtime::from_default_dir()?);
+    let rt = Arc::new(Runtime::from_default_dir()?);
     let cfg = DlCfg {
         n_workers: args.get_parse("workers")?.unwrap_or(4),
         steps: args.get_parse("steps")?.unwrap_or(60),

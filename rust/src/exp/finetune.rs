@@ -5,7 +5,7 @@
 //! The paper's finding: EF21/EF21+ beat EF in bits-to-accuracy, and GD is
 //! worst.
 
-use super::common::{results_dir, Objective, Problem};
+use super::common::{parallel_trials, results_dir, Objective, Problem};
 use crate::algo::AlgoSpec;
 use crate::metrics::{FigureData, History};
 
@@ -17,6 +17,8 @@ pub struct FinetuneCfg {
     pub tol: f64,
     pub n_workers: usize,
     pub seed: u64,
+    /// Trial-scheduler pool width (1 = legacy sequential sweep).
+    pub threads: usize,
 }
 
 impl Default for FinetuneCfg {
@@ -29,6 +31,7 @@ impl Default for FinetuneCfg {
             tol: 1e-6,
             n_workers: 20,
             seed: 0,
+            threads: 1,
         }
     }
 }
@@ -42,58 +45,13 @@ fn score(h: &History, tol: f64) -> (bool, f64) {
     }
 }
 
-pub fn run(cfg: &FinetuneCfg) -> FigureData {
-    let problem =
-        Problem::new(&cfg.dataset, Objective::LogReg, cfg.n_workers, 0.1, cfg.seed);
-    let record_every = (cfg.rounds / 400).max(1);
-    let mut fig = FigureData::new(format!("finetune_{}", cfg.dataset));
-
-    for algo in [AlgoSpec::Ef, AlgoSpec::Ef21, AlgoSpec::Ef21Plus] {
-        let mut best: Option<(History, (bool, f64))> = None;
-        for &k in &cfg.ks {
-            for &m in &cfg.mults {
-                let mut h = problem.run_trial(
-                    algo,
-                    &format!("top{k}"),
-                    m,
-                    None,
-                    cfg.rounds,
-                    record_every,
-                    cfg.seed,
-                );
-                h.label = format!("{} top{k} {m}x (tuned)", algo.name());
-                let s = score(&h, cfg.tol);
-                let better = match &best {
-                    None => true,
-                    Some((_, bs)) => match (s.0, bs.0) {
-                        (true, false) => true,
-                        (false, true) => false,
-                        _ => s.1 < bs.1,
-                    },
-                };
-                if better {
-                    best = Some((h, s));
-                }
-            }
-        }
-        fig.push(best.expect("at least one config ran").0);
-    }
-
-    // GD reference: tuned multiplier, k = d (identity).
-    let mut best_gd: Option<(History, (bool, f64))> = None;
-    for &m in &cfg.mults {
-        let mut h = problem.run_trial(
-            AlgoSpec::Gd,
-            "identity",
-            m,
-            None,
-            cfg.rounds,
-            record_every,
-            cfg.seed,
-        );
-        h.label = format!("GD {m}x (tuned)");
-        let s = score(&h, cfg.tol);
-        let better = match &best_gd {
+/// Strictly-better fold matching the legacy sequential selection: a
+/// converged config beats any non-converged one; ties broken by score,
+/// first-seen wins.
+fn pick_best(candidates: Vec<(History, (bool, f64))>) -> History {
+    let mut best: Option<(History, (bool, f64))> = None;
+    for (h, s) in candidates {
+        let better = match &best {
             None => true,
             Some((_, bs)) => match (s.0, bs.0) {
                 (true, false) => true,
@@ -102,10 +60,57 @@ pub fn run(cfg: &FinetuneCfg) -> FigureData {
             },
         };
         if better {
-            best_gd = Some((h, s));
+            best = Some((h, s));
         }
     }
-    fig.push(best_gd.unwrap().0);
+    best.expect("at least one config ran").0
+}
+
+pub fn run(cfg: &FinetuneCfg) -> FigureData {
+    let problem =
+        Problem::new(&cfg.dataset, Objective::LogReg, cfg.n_workers, 0.1, cfg.seed);
+    let record_every = (cfg.rounds / 400).max(1);
+    let mut fig = FigureData::new(format!("finetune_{}", cfg.dataset));
+
+    // Full grid — every (algo, k, m) cell plus the GD multipliers — as
+    // one flat job list; each trial is independent, so the scheduler can
+    // fan them all out while the per-algo selection fold below still
+    // sees candidates in the legacy (k outer, m inner) order.
+    let algos = [AlgoSpec::Ef, AlgoSpec::Ef21, AlgoSpec::Ef21Plus];
+    let mut jobs: Vec<(AlgoSpec, Option<usize>, f64)> = Vec::new();
+    for algo in algos {
+        for &k in &cfg.ks {
+            for &m in &cfg.mults {
+                jobs.push((algo, Some(k), m));
+            }
+        }
+    }
+    for &m in &cfg.mults {
+        jobs.push((AlgoSpec::Gd, None, m));
+    }
+
+    let results = parallel_trials(jobs, cfg.threads, |(algo, k, m)| {
+        let comp = match k {
+            Some(k) => format!("top{k}"),
+            None => "identity".to_string(),
+        };
+        let mut h =
+            problem.run_trial(algo, &comp, m, None, cfg.rounds, record_every, cfg.seed);
+        h.label = match k {
+            Some(k) => format!("{} top{k} {m}x (tuned)", algo.name()),
+            None => format!("GD {m}x (tuned)"),
+        };
+        let s = score(&h, cfg.tol);
+        (h, s)
+    });
+
+    let per_algo = cfg.ks.len() * cfg.mults.len();
+    let mut results = results.into_iter();
+    for _algo in algos {
+        fig.push(pick_best(results.by_ref().take(per_algo).collect()));
+    }
+    // GD reference: tuned multiplier, k = d (identity).
+    fig.push(pick_best(results.collect()));
     fig
 }
 
@@ -118,11 +123,13 @@ pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
             .map(|s| s.to_string())
             .collect(),
     };
+    let threads = crate::config::Threads::from_args(args)?.resolve();
     for ds in datasets {
         let cfg = FinetuneCfg {
             dataset: ds,
             rounds: args.get_parse("rounds")?.unwrap_or(1200),
             tol: args.get_parse("tol")?.unwrap_or(1e-6),
+            threads,
             ..Default::default()
         };
         let fig = run(&cfg);

@@ -1,18 +1,21 @@
 //! Figure 8 — GD stepsize tuning: distributed GD at multiples of 1/L,
 //! the reference curves behind Figures 2/7's "GD (tuned)" line.
 
-use super::common::{mult_ladder, results_dir, Objective, Problem};
+use super::common::{mult_ladder, parallel_trials, results_dir, Objective, Problem};
 use crate::algo::AlgoSpec;
 use crate::metrics::FigureData;
 
-pub fn run(dataset: &str, rounds: usize, max_pow: u32, seed: u64) -> FigureData {
+pub fn run(dataset: &str, rounds: usize, max_pow: u32, seed: u64, threads: usize) -> FigureData {
     let problem = Problem::new(dataset, Objective::LogReg, 20, 0.1, seed);
     let record_every = (rounds / 300).max(1);
     let mut fig = FigureData::new(format!("gdtune_{dataset}"));
-    for &m in &mult_ladder(max_pow) {
+    let curves = parallel_trials(mult_ladder(max_pow), threads, |m| {
         let mut h =
             problem.run_trial(AlgoSpec::Gd, "identity", m, None, rounds, record_every, seed);
         h.label = format!("GD {m}x");
+        h
+    });
+    for h in curves {
         fig.push(h);
     }
     fig
@@ -24,6 +27,7 @@ pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
         args.get_parse("rounds")?.unwrap_or(1000),
         args.get_parse("max-pow")?.unwrap_or(4),
         args.get_parse("seed")?.unwrap_or(0),
+        crate::config::Threads::from_args(args)?.resolve(),
     );
     fig.print_summary();
     fig.write_dir(&results_dir())?;

@@ -2,7 +2,7 @@
 //! (tuned stepsize per k). Paper's finding: small k (1, 2, 4) is the most
 //! bits-efficient; k = d (GD-like) is the worst.
 
-use super::common::{results_dir, Objective, Problem};
+use super::common::{parallel_trials, results_dir, Objective, Problem};
 use crate::algo::AlgoSpec;
 use crate::metrics::FigureData;
 
@@ -13,6 +13,8 @@ pub struct KdepCfg {
     pub mults: Vec<f64>,
     pub n_workers: usize,
     pub seed: u64,
+    /// Trial-scheduler pool width (1 = legacy sequential sweep).
+    pub threads: usize,
 }
 
 impl Default for KdepCfg {
@@ -24,6 +26,7 @@ impl Default for KdepCfg {
             mults: vec![1.0, 4.0, 16.0],
             n_workers: 20,
             seed: 0,
+            threads: 1,
         }
     }
 }
@@ -33,23 +36,32 @@ pub fn run(cfg: &KdepCfg) -> FigureData {
         Problem::new(&cfg.dataset, Objective::LogReg, cfg.n_workers, 0.1, cfg.seed);
     let record_every = (cfg.rounds / 300).max(1);
     let mut fig = FigureData::new(format!("kdep_{}", cfg.dataset));
+    let d = problem.d();
     let mut ks = cfg.ks.clone();
-    ks.push(problem.d()); // k = d reference
-    for k in ks {
-        let k = k.min(problem.d());
-        // Tune the multiplier by final gradient norm.
+    ks.push(d); // k = d reference
+    let jobs: Vec<(usize, f64)> = ks
+        .iter()
+        .flat_map(|&k| cfg.mults.iter().map(move |&m| (k.min(d), m)))
+        .collect();
+    let results = parallel_trials(jobs, cfg.threads, |(k, m)| {
+        let mut h = problem.run_trial(
+            AlgoSpec::Ef21,
+            &format!("top{k}"),
+            m,
+            None,
+            cfg.rounds,
+            record_every,
+            cfg.seed,
+        );
+        h.label = format!("EF21 top{k} {m}x");
+        h
+    });
+    // Tune the multiplier by final gradient norm, folding candidates in
+    // the legacy (k outer, m inner) order.
+    let mut results = results.into_iter();
+    for _k in &ks {
         let mut best: Option<crate::metrics::History> = None;
-        for &m in &cfg.mults {
-            let mut h = problem.run_trial(
-                AlgoSpec::Ef21,
-                &format!("top{k}"),
-                m,
-                None,
-                cfg.rounds,
-                record_every,
-                cfg.seed,
-            );
-            h.label = format!("EF21 top{k} {m}x");
+        for h in results.by_ref().take(cfg.mults.len()) {
             let better = best
                 .as_ref()
                 .map(|b| h.final_grad_norm_sq() < b.final_grad_norm_sq() && !h.diverged())
@@ -67,6 +79,7 @@ pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
     let cfg = KdepCfg {
         dataset: args.get_str("dataset").unwrap_or("a9a").to_string(),
         rounds: args.get_parse("rounds")?.unwrap_or(1500),
+        threads: crate::config::Threads::from_args(args)?.resolve(),
         ..Default::default()
     };
     let fig = run(&cfg);

@@ -3,7 +3,7 @@
 //! Theorem-2 stepsize. Paper's finding: EF21/EF21+ tolerate far larger
 //! multiples (the paper pushes to 512x–4096x before EF-like oscillation).
 
-use super::common::{mult_ladder, results_dir, Objective, Problem};
+use super::common::{mult_ladder, parallel_trials, results_dir, Objective, Problem};
 use crate::algo::AlgoSpec;
 use crate::metrics::FigureData;
 
@@ -14,11 +14,21 @@ pub struct LstsqCfg {
     pub max_pow: u32,
     pub n_workers: usize,
     pub seed: u64,
+    /// Trial-scheduler pool width (1 = legacy sequential sweep).
+    pub threads: usize,
 }
 
 impl Default for LstsqCfg {
     fn default() -> Self {
-        LstsqCfg { dataset: "a9a".into(), k: 1, rounds: 1500, max_pow: 6, n_workers: 20, seed: 0 }
+        LstsqCfg {
+            dataset: "a9a".into(),
+            k: 1,
+            rounds: 1500,
+            max_pow: 6,
+            n_workers: 20,
+            seed: 0,
+            threads: 1,
+        }
     }
 }
 
@@ -27,13 +37,20 @@ pub fn run(cfg: &LstsqCfg) -> FigureData {
     let comp = format!("top{}", cfg.k);
     let record_every = (cfg.rounds / 200).max(1);
     let mut fig = FigureData::new(format!("lstsq_{}_k{}", cfg.dataset, cfg.k));
+    let mut jobs: Vec<(AlgoSpec, f64)> = Vec::new();
     for algo in [AlgoSpec::Ef, AlgoSpec::Ef21, AlgoSpec::Ef21Plus] {
         for &m in &mult_ladder(cfg.max_pow) {
-            let mut h =
-                problem.run_trial(algo, &comp, m, None, cfg.rounds, record_every, cfg.seed);
-            h.label = format!("{} {comp} {m}x {} (PL)", algo.name(), cfg.dataset);
-            fig.push(h);
+            jobs.push((algo, m));
         }
+    }
+    let curves = parallel_trials(jobs, cfg.threads, |(algo, m)| {
+        let mut h =
+            problem.run_trial(algo, &comp, m, None, cfg.rounds, record_every, cfg.seed);
+        h.label = format!("{} {comp} {m}x {} (PL)", algo.name(), cfg.dataset);
+        h
+    });
+    for h in curves {
+        fig.push(h);
     }
     fig
 }
@@ -44,12 +61,14 @@ pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
         Some(d) => vec![d.to_string()],
         None => vec!["phishing".into(), "mushrooms".into(), "a9a".into(), "w8a".into()],
     };
+    let threads = crate::config::Threads::from_args(args)?.resolve();
     for ds in datasets {
         let cfg = LstsqCfg {
             dataset: ds,
             k: args.get_parse("k")?.unwrap_or(1),
             rounds: args.get_parse("rounds")?.unwrap_or(1000),
             max_pow: args.get_parse("max-pow")?.unwrap_or(6),
+            threads,
             ..Default::default()
         };
         let fig = run(&cfg);

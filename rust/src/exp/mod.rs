@@ -12,4 +12,4 @@ pub mod lstsq;
 pub mod rates;
 pub mod stepsize;
 
-pub use common::{Objective, Problem};
+pub use common::{parallel_trials, Objective, Problem};

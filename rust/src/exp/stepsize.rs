@@ -5,7 +5,7 @@
 //! reproduce: EF stalls/oscillates at large multiples while EF21 and EF21+
 //! keep converging, i.e. they tolerate (much) larger stepsizes.
 
-use super::common::{mult_ladder, results_dir, Objective, Problem};
+use super::common::{mult_ladder, parallel_trials, results_dir, Objective, Problem};
 use crate::algo::AlgoSpec;
 use crate::metrics::FigureData;
 
@@ -16,6 +16,8 @@ pub struct StepsizeCfg {
     pub max_pow: u32,
     pub n_workers: usize,
     pub seed: u64,
+    /// Trial-scheduler pool width (1 = legacy sequential sweep).
+    pub threads: usize,
 }
 
 impl Default for StepsizeCfg {
@@ -27,31 +29,42 @@ impl Default for StepsizeCfg {
             max_pow: 6,
             n_workers: 20,
             seed: 0,
+            threads: 1,
         }
     }
 }
 
-/// Run the sweep for one (dataset, k); returns the figure data.
+/// Run the sweep for one (dataset, k); returns the figure data. The
+/// algo × multiplier grid of independent trials fans across
+/// `cfg.threads` scheduler threads; curve order (and every curve's
+/// contents) is identical to the sequential sweep.
 pub fn run(cfg: &StepsizeCfg) -> FigureData {
     let problem =
         Problem::new(&cfg.dataset, Objective::LogReg, cfg.n_workers, 0.1, cfg.seed);
     let comp = format!("top{}", cfg.k);
     let mut fig = FigureData::new(format!("stepsize_{}_k{}", cfg.dataset, cfg.k));
     let record_every = (cfg.rounds / 200).max(1);
+    let mut jobs: Vec<(AlgoSpec, f64)> = Vec::new();
     for algo in [AlgoSpec::Ef, AlgoSpec::Ef21, AlgoSpec::Ef21Plus] {
         for &mult in &mult_ladder(cfg.max_pow) {
-            let mut h = problem.run_trial(
-                algo,
-                &comp,
-                mult,
-                None,
-                cfg.rounds,
-                record_every,
-                cfg.seed,
-            );
-            h.label = format!("{} {comp} {mult}x {}", algo.name(), cfg.dataset);
-            fig.push(h);
+            jobs.push((algo, mult));
         }
+    }
+    let curves = parallel_trials(jobs, cfg.threads, |(algo, mult)| {
+        let mut h = problem.run_trial(
+            algo,
+            &comp,
+            mult,
+            None,
+            cfg.rounds,
+            record_every,
+            cfg.seed,
+        );
+        h.label = format!("{} {comp} {mult}x {}", algo.name(), cfg.dataset);
+        h
+    });
+    for h in curves {
+        fig.push(h);
     }
     fig
 }
@@ -59,6 +72,7 @@ pub fn run(cfg: &StepsizeCfg) -> FigureData {
 /// CLI entry: single (dataset, k) or the full §A.1.1 grid with `--all`.
 pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
     let out = results_dir();
+    let threads = crate::config::Threads::from_args(args)?.resolve();
     if args.has("all") {
         // Figures 3-6 grid (trimmed k-list per dataset as in the paper).
         for ds in ["phishing", "mushrooms", "a9a", "w8a"] {
@@ -68,6 +82,7 @@ pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
                     k,
                     rounds: args.get_parse("rounds")?.unwrap_or(800),
                     max_pow: args.get_parse("max-pow")?.unwrap_or(5),
+                    threads,
                     ..Default::default()
                 };
                 let fig = run(&cfg);
@@ -84,6 +99,7 @@ pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
         max_pow: args.get_parse("max-pow")?.unwrap_or(6),
         n_workers: args.get_parse("workers")?.unwrap_or(20),
         seed: args.get_parse("seed")?.unwrap_or(0),
+        threads,
     };
     let fig = run(&cfg);
     fig.print_summary();
@@ -113,6 +129,32 @@ mod tests {
             e21 < ef || h_ef.diverged(),
             "EF21 ({e21:.3e}) should beat EF ({ef:.3e}) at {mult}x"
         );
+    }
+
+    /// The fanned-out sweep reproduces the sequential sweep exactly:
+    /// same curve order, same records bit-for-bit.
+    #[test]
+    fn pooled_sweep_matches_sequential_sweep() {
+        let mk = |threads| StepsizeCfg {
+            dataset: "phishing".into(),
+            k: 1,
+            rounds: 25,
+            max_pow: 1,
+            n_workers: 4,
+            seed: 0,
+            threads,
+        };
+        let seq = run(&mk(1));
+        let par = run(&mk(3));
+        assert_eq!(seq.curves.len(), par.curves.len());
+        for (a, b) in seq.curves.iter().zip(&par.curves) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.records.len(), b.records.len());
+            for (ra, rb) in a.records.iter().zip(&b.records) {
+                assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+                assert_eq!(ra.grad_norm_sq.to_bits(), rb.grad_norm_sq.to_bits());
+            }
+        }
     }
 
     /// At the 1x theory stepsize all three methods make progress.

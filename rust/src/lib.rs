@@ -74,6 +74,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::algo::{AlgoSpec, MasterNode, WireMsg, WorkerNode};
     pub use crate::compress::{Compressor, Identity, Markov, RandK, ScaledSign, SparseVec, TopK};
+    pub use crate::coordinator::par::{auto_threads, run_protocol_par};
     pub use crate::coordinator::runner::{run_protocol, RunConfig};
     pub use crate::data::Dataset;
     pub use crate::metrics::{FigureData, History};

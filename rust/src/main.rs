@@ -5,6 +5,7 @@
 //! ef21 run   [--algo ef21|ef21+|ef|dcgd|gd] [--k 1 | --compressor top1]
 //!            [--dataset a9a] [--workers 20] [--gamma-mult 1] [--rounds N]
 //!            [--objective logreg|lstsq] [--csv out.csv] [--transport local|tcp]
+//!            [--threads n|auto]
 //! ef21 exp   <stepsize|finetune|kdep|gdtune|lstsq|rates|dl> [flags...]
 //! ef21 data  info
 //! ef21 artifacts [--dir artifacts]
@@ -57,6 +58,11 @@ USAGE:
             [--rounds T] [--objective logreg|lstsq] [--csv FILE]
             [--transport local|tcp]
   (all commands) [--telemetry off|jsonl:<path>|tcp:<port>[,...]]
+  (sim run + sweep exps)
+                 [--threads n|auto]   (auto = all cores; 1 = sequential;
+                                       results are bit-identical either way;
+                                       transport runs are already threaded,
+                                       rates/dl run single trials)
   ef21 exp  stepsize [--dataset D] [--k K] [--max-pow P] [--rounds T] [--all]
   ef21 exp  finetune [--dataset D] [--rounds T] [--tol X]
   ef21 exp  kdep     [--dataset D] [--rounds T]
@@ -95,7 +101,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     let transport = args.get_str("transport").unwrap_or("sim");
     let history = if transport == "sim" {
-        problem.run_trial(
+        problem.run_trial_threads(
             spec.algo,
             &spec.compressor,
             spec.gamma_mult,
@@ -103,6 +109,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             spec.rounds,
             spec.record_every,
             spec.seed,
+            spec.threads.resolve(),
         )
     } else {
         run_over_transport(&problem, &spec, gamma, transport)?
@@ -171,11 +178,7 @@ fn run_over_transport(
             };
             let c: std::sync::Arc<dyn ef21::compress::Compressor> =
                 std::sync::Arc::from(ef21::compress::from_spec(&comp).expect("compressor"));
-            let mut base = ef21::util::rng::Rng::seed(seed);
-            let mut rng = base.fork(0);
-            for j in 1..=i {
-                rng = base.fork(j as u64);
-            }
+            let rng = ef21::util::rng::worker_rng(seed, i);
             Box::new(ef21::algo::ef21::Ef21Worker::new(oracle, c, rng))
         },
         spec.rounds,

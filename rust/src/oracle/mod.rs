@@ -20,7 +20,11 @@ pub use quadratic::QuadraticOracle;
 pub use stochastic::StochasticOracle;
 
 /// A differentiable local objective `f_i`.
-pub trait GradOracle {
+///
+/// `Send` because workers (which own their oracle) execute on pool
+/// threads in the parallel runners; oracles own their shard data, so
+/// this costs implementations nothing.
+pub trait GradOracle: Send {
     /// Problem dimension d.
     fn dim(&self) -> usize;
 

@@ -95,7 +95,7 @@ impl<O: RowSubsampled> StochasticOracle<O> {
     }
 }
 
-impl<O: RowSubsampled> GradOracle for StochasticOracle<O> {
+impl<O: RowSubsampled + Send> GradOracle for StochasticOracle<O> {
     fn dim(&self) -> usize {
         self.inner.dim()
     }

@@ -9,7 +9,7 @@ use crate::runtime::client::{
 };
 use crate::runtime::Runtime;
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::Arc;
 use xla::Literal;
 
 /// Which padded-shard artifact family to use.
@@ -25,7 +25,7 @@ pub enum ShardKind {
 /// construction; `a`, `y/b`, `w` literals are cached so the hot path only
 /// materializes the (d,) model vector per call.
 pub struct XlaShardOracle {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     artifact: String,
     kind: ShardKind,
     d: usize,
@@ -35,9 +35,15 @@ pub struct XlaShardOracle {
     lam: f64,
 }
 
+// SAFETY: required by `GradOracle: Send`. `Runtime` is Send + Sync (see
+// its impls); the cached `Literal`s are owned host buffers the binding
+// leaves !Send only because it wraps raw pointers, and this oracle is
+// owned (never shared) by exactly one worker at a time.
+unsafe impl Send for XlaShardOracle {}
+
 impl XlaShardOracle {
     pub fn new(
-        rt: Rc<Runtime>,
+        rt: Arc<Runtime>,
         dataset: &str,
         kind: ShardKind,
         shard: Shard<'_>,
@@ -114,16 +120,19 @@ impl GradOracle for XlaShardOracle {
 /// Oracle executing `transformer_step`: stochastic loss/grad of the small
 /// causal LM over this worker's token stream (the DL experiment of §A.3).
 pub struct XlaTransformerOracle {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     pub n_params: usize,
     batch: usize,
     seq_len: usize,
-    sampler: Box<dyn FnMut() -> Vec<i32>>,
+    sampler: Box<dyn FnMut() -> Vec<i32> + Send>,
 }
 
 impl XlaTransformerOracle {
     /// `sampler` must yield `batch * seq_len` i32 tokens per call.
-    pub fn new(rt: Rc<Runtime>, sampler: Box<dyn FnMut() -> Vec<i32>>) -> Result<Self> {
+    pub fn new(
+        rt: Arc<Runtime>,
+        sampler: Box<dyn FnMut() -> Vec<i32> + Send>,
+    ) -> Result<Self> {
         let entry = rt.entry("transformer_step")?;
         let n_params = entry.meta_usize("n_params")?;
         let batch = entry.meta_usize("batch")?;

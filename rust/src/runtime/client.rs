@@ -4,25 +4,36 @@
 
 use super::manifest::{ArtifactEntry, Manifest};
 use anyhow::{Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 
 /// Compile-cached PJRT runtime over one artifacts directory.
+///
+/// Shared as `Arc<Runtime>` so XLA-backed oracles satisfy the
+/// `GradOracle: Send` bound the parallel runners need; the compile
+/// cache is behind a `Mutex` accordingly (touched once per artifact,
+/// never on the execute hot path once warm).
 pub struct Runtime {
     client: PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    cache: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
 }
+
+// SAFETY: the PJRT C API requires clients and loaded executables to be
+// usable from multiple threads (XLA serializes internally); the Rust
+// binding only lacks the auto-impls because it wraps raw pointers. All
+// interior mutability on our side is the `Mutex`ed compile cache.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
 
 impl Runtime {
     /// CPU PJRT client + manifest from `dir`.
     pub fn new(dir: &Path) -> Result<Runtime> {
         let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
         let manifest = Manifest::load(dir)?;
-        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
     }
 
     /// Default location (`$EF21_ARTIFACTS` or `./artifacts`).
@@ -35,8 +46,8 @@ impl Runtime {
     }
 
     /// Load + compile an artifact (cached).
-    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(name) {
+    pub fn executable(&self, name: &str) -> Result<Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
             return Ok(exe.clone());
         }
         let entry = self.manifest.get(name)?;
@@ -49,8 +60,8 @@ impl Runtime {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling artifact {name}"))?;
-        let exe = Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        let exe = Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 

@@ -67,6 +67,13 @@ pub mod keys {
     pub const ROUNDS: &str = "coordinator.rounds";
     pub const ROUND_NS: &str = "coordinator.round.ns";
     pub const DIVERGENCE_ABORTS: &str = "coordinator.divergence.aborts";
+    /// Per-pool-thread latency of one round's chunk of workers
+    /// ([`crate::coordinator::par`]); `coordinator.round.ns` stays the
+    /// coordinator-side wall time of the whole round, so counters and
+    /// uplink bits sum identically whichever engine ran the round.
+    pub const POOL_CHUNK_NS: &str = "coordinator.pool.chunk.ns";
+    /// Pool width of the most recent parallel run (gauge).
+    pub const POOL_THREADS: &str = "coordinator.pool.threads";
 }
 
 static ENABLED: AtomicBool = AtomicBool::new(false);

@@ -124,8 +124,8 @@ mod tests {
         r.counter("z.last").incr(1);
         r.counter("a.first").incr(1);
         r.counter("m.mid").incr(1);
-        let keys: Vec<&str> =
-            r.snapshot().counters.iter().map(|(k, _)| k.as_str()).collect();
+        let snap = r.snapshot();
+        let keys: Vec<&str> = snap.counters.iter().map(|(k, _)| k.as_str()).collect();
         assert_eq!(keys, vec!["a.first", "m.mid", "z.last"]);
     }
 

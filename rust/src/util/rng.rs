@@ -113,9 +113,37 @@ impl Rng {
     }
 }
 
+/// The RNG stream of worker `i` under the builders' fork scheme
+/// (`crate::algo::build*`): a base RNG seeded with the experiment seed,
+/// forked once per worker in index order. Reconstructing a single
+/// worker's stream out-of-band (transport factories, differential
+/// tests) MUST go through this helper so it can never desynchronize
+/// from the builders.
+pub fn worker_rng(seed: u64, worker: usize) -> Rng {
+    let mut base = Rng::seed(seed);
+    let mut rng = base.fork(0);
+    for j in 1..=worker {
+        rng = base.fork(j as u64);
+    }
+    rng
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn worker_rng_matches_builder_fork_sequence() {
+        // The builders do: base = seed(s); worker i gets the i-th fork.
+        let mut base = Rng::seed(99);
+        let expected: Vec<Rng> = (0..5).map(|i| base.fork(i as u64)).collect();
+        for (i, mut want) in expected.into_iter().enumerate() {
+            let mut got = worker_rng(99, i);
+            for _ in 0..20 {
+                assert_eq!(got.next_u64(), want.next_u64(), "worker {i} stream");
+            }
+        }
+    }
 
     #[test]
     fn deterministic_for_same_seed() {

@@ -1,0 +1,184 @@
+//! Property suite for the contraction inequality Eq. (3),
+//! `E ||C(x) - x||^2 <= (1 - alpha) ||x||^2`:
+//!
+//!   * deterministic compressors satisfy it **pointwise** — asserted
+//!     with a 1e-12 absolute slack across many seeds and dimensions;
+//!   * randomized compressors satisfy it in expectation — asserted
+//!     empirically over repeated draws;
+//!   * Top-k edge cases at `d = k` and `d = 1`, NaN inputs, and the
+//!     deterministic tie-break (load-bearing for the parallel runner:
+//!     a tie broken differently per thread would break bit-identity).
+
+use ef21::compress::{
+    distortion_ratio, Compressor, Identity, RandK, ScaledSign, SparseVec, TopK,
+};
+use ef21::util::rng::Rng;
+use ef21::util::testing::{for_all_seeds, random_vec};
+
+fn deterministic_compressors(d: usize) -> Vec<Box<dyn Compressor>> {
+    vec![
+        Box::new(TopK::new(1)),
+        Box::new(TopK::new((d / 4).max(1))),
+        Box::new(TopK::new(d)), // k = d: identity-like
+        Box::new(ScaledSign),
+        Box::new(Identity),
+    ]
+}
+
+/// Eq. (3) pointwise for every deterministic compressor, many seeds and
+/// dims (including d = 1), tight 1e-12 slack.
+#[test]
+fn contraction_eq3_pointwise_for_deterministic() {
+    for_all_seeds(40, |rng| {
+        let d = 1 + rng.next_below(80);
+        let scale = 0.1 + 10.0 * rng.next_f64();
+        let v = random_vec(rng, d, scale);
+        for c in deterministic_compressors(d) {
+            assert!(c.is_deterministic(), "{}", c.name());
+            let alpha = c.alpha(d);
+            assert!(alpha > 0.0 && alpha <= 1.0, "{} alpha {alpha}", c.name());
+            let r = distortion_ratio(c.as_ref(), &v, rng);
+            assert!(
+                r <= 1.0 - alpha + 1e-12,
+                "{} d={d}: ratio {r} > 1 - alpha = {}",
+                c.name(),
+                1.0 - alpha
+            );
+        }
+    });
+}
+
+/// Eq. (3) in expectation for Rand-k: the mean ratio over many draws
+/// must approach `1 - k/d` (pointwise it can exceed it, which is why
+/// Rand-k alone cannot drive EF21+).
+#[test]
+fn contraction_eq3_in_expectation_for_randk() {
+    for_all_seeds(10, |rng| {
+        let d = 2 + rng.next_below(40);
+        let k = 1 + rng.next_below(d);
+        let v = random_vec(rng, d, 2.0);
+        let c = RandK::new(k);
+        assert!(!c.is_deterministic());
+        let alpha = c.alpha(d);
+        let reps = 400;
+        let mean: f64 = (0..reps)
+            .map(|_| distortion_ratio(&c, &v, rng))
+            .sum::<f64>()
+            / reps as f64;
+        assert!(
+            mean <= (1.0 - alpha) * 1.15 + 1e-9,
+            "rand{k} d={d}: mean ratio {mean} vs 1 - alpha = {}",
+            1.0 - alpha
+        );
+    });
+}
+
+/// d = k: Top-k must be exactly the identity (zero distortion, alpha 1).
+#[test]
+fn topk_edge_d_equals_k() {
+    for_all_seeds(20, |rng| {
+        let d = 1 + rng.next_below(32);
+        let v = random_vec(rng, d, 3.0);
+        let c = TopK::new(d);
+        assert_eq!(c.alpha(d), 1.0);
+        let out = c.compress(&v, rng).sparse.to_dense(d);
+        assert_eq!(out, v, "top-{d} over d={d} must be lossless");
+        let r = distortion_ratio(&c, &v, rng);
+        assert_eq!(r, 0.0);
+    });
+}
+
+/// d = 1: any k keeps the single entry; alpha is clamped to 1.
+#[test]
+fn topk_edge_d_one() {
+    let mut rng = Rng::seed(5);
+    for k in [1usize, 2, 7] {
+        let c = TopK::new(k);
+        assert_eq!(c.alpha(1), 1.0, "top{k} alpha at d=1");
+        for v in [[3.5], [-0.0], [f64::MIN_POSITIVE]] {
+            let out = c.compress(&v, &mut rng).sparse.to_dense(1);
+            assert_eq!(out, v, "top{k} at d=1 must be identity");
+        }
+    }
+}
+
+/// NaN entries sort as smallest magnitude: never selected while a
+/// finite candidate remains, and an all-NaN input still yields a valid
+/// deterministic selection (k = d path).
+#[test]
+fn topk_nan_edge_cases() {
+    let c = TopK::new(2);
+    assert_eq!(c.select_indices(&[f64::NAN, 1.0, 2.0]), vec![1, 2]);
+    assert_eq!(c.select_indices(&[1.0, f64::NAN, f64::NAN, -3.0]), vec![0, 3]);
+    // More NaNs than finite entries: lowest-index NaN fills the slot.
+    assert_eq!(c.select_indices(&[f64::NAN, f64::NAN, 5.0]), vec![0, 2]);
+    // d = k with NaN: full passthrough.
+    assert_eq!(TopK::new(1).select_indices(&[f64::NAN]), vec![0]);
+}
+
+/// Ties break toward the lower index, identically on every call and on
+/// every thread — the property the parallel runner's bit-identity
+/// leans on (per-thread scratch buffers must not leak into selection).
+#[test]
+fn topk_tie_break_is_deterministic_across_threads() {
+    let v = vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0];
+    let reference = TopK::new(3).select_indices(&v);
+    assert_eq!(reference, vec![0, 1, 2]);
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let v = v.clone();
+            let want = reference.clone();
+            std::thread::spawn(move || {
+                let c = TopK::new(3);
+                // Dirty this thread's scratch with a different-size
+                // selection first, then verify the tie-break.
+                let _ = c.select_indices(&v[..5]);
+                for _ in 0..50 {
+                    assert_eq!(c.select_indices(&v), want);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// The selection fast path must agree with the sort baseline on
+/// adversarial inputs too (duplicates, zeros, signed zeros).
+#[test]
+fn select_matches_sort_baseline_on_degenerate_inputs() {
+    let cases: Vec<Vec<f64>> = vec![
+        vec![0.0; 6],
+        vec![-0.0, 0.0, -0.0, 0.0],
+        vec![2.0, -2.0, 2.0, -2.0, 2.0],
+        vec![1e-300, -1e-300, 1e300, -1e300],
+    ];
+    for v in cases {
+        for k in 1..=v.len() {
+            let c = TopK::new(k);
+            assert_eq!(
+                c.select_indices(&v),
+                c.select_indices_via_sort(&v),
+                "k={k} v={v:?}"
+            );
+        }
+    }
+}
+
+/// Compressed vectors round-trip their sparse representation: the
+/// payload the pool threads ship to the coordinator is exactly what a
+/// dense reconstruction sees.
+#[test]
+fn compressed_payload_roundtrips_dense() {
+    for_all_seeds(15, |rng| {
+        let d = 1 + rng.next_below(50);
+        let v = random_vec(rng, d, 1.5);
+        let k = 1 + rng.next_below(d);
+        let comp = TopK::new(k).compress(&v, rng);
+        let dense = comp.sparse.to_dense(d);
+        let again = SparseVec::from_dense_full(&dense);
+        assert_eq!(again.to_dense(d), dense);
+        assert!(comp.bits > 0);
+    });
+}

@@ -1,0 +1,221 @@
+//! Differential suite for the deterministic parallel execution engine
+//! (`coordinator::par`): for every algorithm × compressor family, the
+//! pooled runner's `History` must equal the sequential runner's
+//! **bit-for-bit** — same records, same `bits_per_client`, same stop
+//! round — across seeds and pool widths; and `coordinator::dist` must
+//! still match both (to f32 wire precision, its documented contract).
+
+use ef21::algo::{AlgoSpec, MasterNode, WorkerNode};
+use ef21::compress::{Compressor, Identity, RandK, ScaledSign, TopK};
+use ef21::coordinator::runner::{run_protocol, RunConfig};
+use ef21::coordinator::run_protocol_par;
+use ef21::exp::{Objective, Problem};
+use ef21::metrics::History;
+use ef21::oracle::GradOracle;
+use ef21::util::testing::for_all_seeds;
+use std::sync::Arc;
+
+/// The compressor grid of the differential sweep. EF21+ requires a
+/// deterministic compressor (its constructor asserts), so Rand-k is
+/// skipped for it — randomized compressors are still deterministic
+/// *runs* here (seeded per-worker streams), which is exactly what the
+/// bit-identity claim covers.
+fn compressors() -> Vec<(&'static str, Arc<dyn Compressor>)> {
+    vec![
+        ("top2", Arc::new(TopK::new(2))),
+        ("rand2", Arc::new(RandK::new(2))),
+        ("sign", Arc::new(ScaledSign)),
+        ("identity", Arc::new(Identity)),
+    ]
+}
+
+fn small_problem(seed: u64) -> Problem {
+    let ds = ef21::data::synth::generate_custom("par-diff", 240, 10, 0.4, seed);
+    Problem::from_dataset(ds, Objective::LogReg, 5, 0.1)
+}
+
+fn build_nodes(
+    p: &Problem,
+    algo: AlgoSpec,
+    c: Arc<dyn Compressor>,
+    gamma: f64,
+    seed: u64,
+) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
+    let oracles: Vec<Box<dyn GradOracle>> = p.oracles();
+    ef21::algo::build(algo, vec![0.0; p.d()], oracles, c, gamma, seed)
+}
+
+#[track_caller]
+fn assert_bit_identical(a: &History, b: &History, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.round, rb.round, "{what}: stop/record round");
+        // to_bits: exact f64 equality that also treats NaN == NaN (both
+        // runners produce the literal f64::NAN for absent fields).
+        assert_eq!(
+            ra.bits_per_client.to_bits(),
+            rb.bits_per_client.to_bits(),
+            "{what}: bits at round {}",
+            ra.round
+        );
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "{what}: loss at {}", ra.round);
+        assert_eq!(
+            ra.grad_norm_sq.to_bits(),
+            rb.grad_norm_sq.to_bits(),
+            "{what}: |grad|^2 at {}",
+            ra.round
+        );
+        assert_eq!(ra.gt.to_bits(), rb.gt.to_bits(), "{what}: G^t at {}", ra.round);
+        assert_eq!(
+            ra.dcgd_frac.to_bits(),
+            rb.dcgd_frac.to_bits(),
+            "{what}: dcgd at {}",
+            ra.round
+        );
+    }
+}
+
+/// The core differential sweep: every algorithm × compressor × seed,
+/// sequential vs pool widths 2 and 4 (5 workers ⇒ both uneven and
+/// near-1:1 chunking).
+#[test]
+fn parallel_runner_is_bit_identical_across_algos_and_compressors() {
+    for_all_seeds(3, |rng| {
+        let seed = rng.next_u64() % 1000;
+        let p = small_problem(seed);
+        for algo in AlgoSpec::ALL {
+            for (cname, c) in compressors() {
+                if algo == AlgoSpec::Ef21Plus && !c.is_deterministic() {
+                    continue;
+                }
+                let gamma = p.theory_gamma(c.alpha(p.d()));
+                let cfg = RunConfig::rounds(40).with_record_every(3);
+                let (m, w) = build_nodes(&p, algo, c.clone(), gamma, seed);
+                let h_seq = run_protocol(m, w, &cfg);
+                for threads in [2usize, 4] {
+                    let (m, w) = build_nodes(&p, algo, c.clone(), gamma, seed);
+                    let h_par = run_protocol_par(m, w, &cfg, threads);
+                    assert_bit_identical(
+                        &h_seq,
+                        &h_par,
+                        &format!("{:?} {cname} seed {seed} threads {threads}", algo),
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Early stopping must agree: the gradient-tolerance exit fires at the
+/// same round on both engines.
+#[test]
+fn grad_tol_stop_round_matches() {
+    let quads = || -> Vec<Box<dyn GradOracle>> {
+        ef21::oracle::quadratic::divergence_example()
+            .into_iter()
+            .map(|q| Box::new(q) as Box<dyn GradOracle>)
+            .collect()
+    };
+    let gamma = ef21::theory::stepsize_theorem1(16.0, 16.0, 1.0 / 3.0);
+    let build = || {
+        ef21::algo::build(
+            AlgoSpec::Ef21,
+            vec![1.0; 3],
+            quads(),
+            Arc::new(TopK::new(1)),
+            gamma,
+            0,
+        )
+    };
+    let cfg = RunConfig::rounds(100_000).with_grad_tol(1e-10).with_record_every(37);
+    let (m, w) = build();
+    let h_seq = run_protocol(m, w, &cfg);
+    let (m, w) = build();
+    let h_par = run_protocol_par(m, w, &cfg, 3);
+    assert!(h_seq.final_grad_norm_sq() <= 1e-10, "reference never converged");
+    assert!(h_seq.records.last().unwrap().round < 99_999, "tolerance never hit");
+    assert_bit_identical(&h_seq, &h_par, "grad-tol stop");
+}
+
+/// The divergence guard must abort at the same round with the same
+/// recorded blow-up, whichever engine runs the round.
+#[test]
+fn divergence_round_matches() {
+    let quads = || -> Vec<Box<dyn GradOracle>> {
+        ef21::oracle::quadratic::divergence_example()
+            .into_iter()
+            .map(|q| Box::new(q) as Box<dyn GradOracle>)
+            .collect()
+    };
+    let build = || {
+        ef21::algo::build(
+            AlgoSpec::Dcgd,
+            vec![1.0; 3],
+            quads(),
+            Arc::new(TopK::new(1)),
+            10.0,
+            0,
+        )
+    };
+    let mut cfg = RunConfig::rounds(100_000).with_record_every(500);
+    cfg.divergence_cap = 1e50;
+    let (m, w) = build();
+    let h_seq = run_protocol(m, w, &cfg);
+    let (m, w) = build();
+    let h_par = run_protocol_par(m, w, &cfg, 2);
+    assert!(h_seq.records.last().unwrap().round < 99_999, "guard never fired");
+    assert_bit_identical(&h_seq, &h_par, "divergence abort");
+}
+
+/// `coordinator::dist` (real transport, one thread per worker) still
+/// matches both in-process engines to its documented f32 wire
+/// precision, and exactly in bit accounting.
+#[test]
+fn dist_runner_still_matches_both() {
+    use ef21::coordinator::dist::{run_distributed, TransportKind};
+    let gamma = 0.01;
+    let c: Arc<dyn Compressor> = Arc::new(TopK::new(1));
+    let quad = |i: usize| -> Box<dyn GradOracle> {
+        Box::new(ef21::oracle::quadratic::divergence_example().remove(i))
+    };
+    let build = || {
+        let oracles: Vec<Box<dyn GradOracle>> = (0..3).map(quad).collect();
+        ef21::algo::build(AlgoSpec::Ef21, vec![1.0; 3], oracles, c.clone(), gamma, 9)
+    };
+    let cfg = RunConfig::rounds(25);
+    let (m, w) = build();
+    let h_seq = run_protocol(m, w, &cfg);
+    let (m, w) = build();
+    let h_par = run_protocol_par(m, w, &cfg, 2);
+    assert_bit_identical(&h_seq, &h_par, "seq vs par before dist");
+
+    let master = Box::new(ef21::algo::ef21::Ef21Master::new(vec![1.0; 3], 3, gamma));
+    let c2 = c.clone();
+    let out = run_distributed(
+        master,
+        3,
+        move |i| {
+            // build()'s per-worker fork sequence, via the shared helper.
+            let rng = ef21::util::rng::worker_rng(9, i);
+            Box::new(ef21::algo::ef21::Ef21Worker::new(quad(i), c2.clone(), rng))
+        },
+        25,
+        TransportKind::Local,
+        "dist",
+    )
+    .unwrap();
+    for (a, b) in h_par.records.iter().zip(&out.history.records) {
+        assert!(
+            (a.loss - b.loss).abs() < 1e-4 * a.loss.abs().max(1.0),
+            "dist loss mismatch at {}: {} vs {}",
+            a.round,
+            a.loss,
+            b.loss
+        );
+        assert!(
+            (a.bits_per_client - b.bits_per_client).abs() < 1e-9,
+            "dist bits mismatch at {}",
+            a.round
+        );
+    }
+}

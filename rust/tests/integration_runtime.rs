@@ -12,11 +12,11 @@ use ef21::data::{partition, synth};
 use ef21::oracle::xla::{ShardKind, XlaShardOracle, XlaTransformerOracle};
 use ef21::oracle::{GradOracle, LogRegOracle, LstsqOracle};
 use ef21::runtime::Runtime;
-use std::rc::Rc;
+use std::sync::Arc;
 
-fn runtime() -> Option<Rc<Runtime>> {
+fn runtime() -> Option<Arc<Runtime>> {
     match Runtime::from_default_dir() {
-        Ok(rt) => Some(Rc::new(rt)),
+        Ok(rt) => Some(Arc::new(rt)),
         Err(e) => {
             eprintln!("SKIP (no artifacts): {e:#}");
             None

@@ -51,6 +51,35 @@ fn global_lifecycle_uplink_exactness_and_exporters() {
     // gradient evaluations, compressor sparsity gauge, round latency.
     let evals_after = telemetry::snapshot().counter(keys::ORACLE_GRAD_EVALS).unwrap();
     assert_eq!(evals_after - evals_before, 20 * 11);
+
+    // --- Same trial on the pooled runner (threads = 4): rounds execute
+    // on pool threads, yet every per-run telemetry delta must be
+    // IDENTICAL to the sequential run's — uplink bits (incremented
+    // coordinator-side with the ordered per-round totals), gradient
+    // evals (atomic, summed across threads), and the history itself. ---
+    let h_pool = p.run_trial_threads(AlgoSpec::Ef21, "top2", 1.0, None, 10, 1, 3, 4);
+    let bits_after_pool = telemetry::snapshot().counter(keys::UPLINK_BITS).unwrap();
+    assert_eq!(
+        bits_after_pool - bits_after,
+        bits_after - bits_before,
+        "threads=4 uplink delta != threads=1 delta"
+    );
+    assert_eq!(
+        bits_after_pool - bits_after,
+        (h_pool.records.last().unwrap().bits_per_client * 20.0).round() as u64,
+        "pooled uplink bits counter disagrees with the simulated accounting"
+    );
+    for (a, b) in h.records.iter().zip(&h_pool.records) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "pooled history drifted");
+        assert_eq!(a.bits_per_client.to_bits(), b.bits_per_client.to_bits());
+    }
+    let evals_after_pool = telemetry::snapshot().counter(keys::ORACLE_GRAD_EVALS).unwrap();
+    assert_eq!(evals_after_pool - evals_after, 20 * 11, "pooled eval count drifted");
+    // Per-thread chunk latency fired on pool threads: 4 chunks x 10
+    // rounds (init is not chunk-timed).
+    let snap_pool = telemetry::snapshot();
+    let chunk = snap_pool.histogram(keys::POOL_CHUNK_NS).expect("chunk ns");
+    assert_eq!(chunk.count, 4 * 10);
     let snap = telemetry::snapshot();
     let sparsity = snap.gauge("compress.top2.sparsity").expect("sparsity gauge");
     assert!((sparsity - 2.0 / 16.0).abs() < 1e-12, "top2 over d=16: {sparsity}");
@@ -68,7 +97,7 @@ fn global_lifecycle_uplink_exactness_and_exporters() {
     let j = Json::parse(last).expect("valid json");
     assert_eq!(
         j.get("counters").unwrap().get(keys::UPLINK_BITS).unwrap().as_f64(),
-        Some(bits_after as f64)
+        Some(bits_after_pool as f64)
     );
     std::fs::remove_file(&path).ok();
 
@@ -82,7 +111,7 @@ fn global_lifecycle_uplink_exactness_and_exporters() {
     server.stop();
     assert!(response.starts_with("HTTP/1.0 200 OK"));
     assert!(
-        response.contains(&format!("ef21_transport_uplink_bits {bits_after}")),
+        response.contains(&format!("ef21_transport_uplink_bits {bits_after_pool}")),
         "exposition missing the uplink counter:\n{response}"
     );
     assert!(response.contains("# TYPE ef21_coordinator_round_ns histogram"));
