@@ -6,11 +6,18 @@
 //! Second section: sequential vs pooled protocol ([`coordinator::par`])
 //! over a full multi-round run, reporting the measured speedup — the
 //! acceptance instrument for the deterministic parallel engine.
+//!
+//! Third section: flat vs blocked — per-round latency of the flat
+//! whole-vector pipeline against the block-partitioned one on the same
+//! problem (the flat case is the no-regression guard for the block
+//! refactor), a large-d layer-wise compression latency comparison, and
+//! the downlink delta-broadcast savings over a real EF21 run.
 
 #[path = "harness.rs"]
 mod harness;
 
 use ef21::algo::{AlgoSpec, MasterNode, WorkerNode};
+use ef21::blocks::BlockLayout;
 use ef21::coordinator::{self, RunConfig};
 use ef21::exp::{Objective, Problem};
 use harness::{bench, header};
@@ -89,6 +96,86 @@ fn main() {
             format!("pooled (threads={threads})"),
             t,
             t_seq / t
+        );
+    }
+
+    // Flat vs blocked: same problem, same budget. The flat row is the
+    // no-regression guard (run_trial_blocked with a flat layout must
+    // cost what the legacy path did); the blocked rows show the
+    // layer-wise pipeline's overhead/benefit per round.
+    header("flat vs blocked rounds (EF21 top8, a9a, 20 workers)");
+    let p = Problem::new("a9a", Objective::LogReg, 20, 0.1, 0);
+    for n_blocks in [1usize, 4, 16] {
+        let layout = Arc::new(BlockLayout::equal(n_blocks, p.d()).unwrap());
+        bench(&format!("blocks={n_blocks} (30 rounds)"), || {
+            let h = p.run_trial_blocked(
+                AlgoSpec::Ef21,
+                "top8",
+                1.0,
+                None,
+                30,
+                30,
+                0,
+                1,
+                layout.clone(),
+            );
+            harness::black_box(h.records.len());
+        });
+    }
+
+    // Layer-wise compression latency at DL-like scale: one 2^18-dim
+    // gradient, Top-k at ~5% density, flat vs 32 blocks (inline and
+    // block-parallel fan-out).
+    header("compression: flat vs layer-wise (d=262144, top 5%)");
+    let d = 1 << 18;
+    let k = d / 20;
+    let mut rng = ef21::util::rng::Rng::seed(1);
+    let v: Vec<f64> = (0..d).map(|_| rng.next_normal()).collect();
+    let flat_c = ef21::compress::TopK::new(k);
+    bench("flat top-k", || {
+        harness::black_box(ef21::compress::Compressor::compress(&flat_c, &v, &mut rng).bits);
+    });
+    let layout32 = Arc::new(BlockLayout::equal(32, d).unwrap());
+    for threads in [1usize, 4] {
+        let c = ef21::compress::BlockCompressor::from_spec(
+            &format!("top{k}"),
+            layout32.clone(),
+            threads,
+        )
+        .unwrap();
+        bench(&format!("blocked top-k (32 blocks, fanout={threads})"), || {
+            harness::black_box(ef21::compress::Compressor::compress(&c, &v, &mut rng).bits);
+        });
+    }
+
+    // Downlink savings: metered delta broadcast vs dense baseline over a
+    // converging EF21 run (least squares is PL, so late-run model
+    // updates drop below the f32-quantization floor block by block and
+    // stop being re-broadcast — the regime the delta frames target).
+    let rounds = 1500u64;
+    println!(
+        "\n== downlink: delta broadcast vs dense (EF21 top8, a9a lstsq, 20 workers, {rounds} rounds) =="
+    );
+    let pl = Problem::new("a9a", Objective::Lstsq, 20, 0.1, 0);
+    for n_blocks in [8usize, 32] {
+        let layout = Arc::new(BlockLayout::equal(n_blocks, pl.d()).unwrap());
+        let h = pl.run_trial_blocked(
+            AlgoSpec::Ef21,
+            "top8",
+            1.0,
+            None,
+            rounds as usize,
+            rounds as usize,
+            0,
+            1,
+            layout,
+        );
+        let dense = (rounds + 1) * 32 * pl.d() as u64; // init + per-round dense
+        println!(
+            "blocks={n_blocks:<3} downlink {:>12} bits vs dense {:>12} bits  ({:.1}% saved)",
+            h.downlink_bits,
+            dense,
+            100.0 * (1.0 - h.downlink_bits as f64 / dense as f64)
         );
     }
 }

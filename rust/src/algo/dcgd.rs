@@ -5,8 +5,9 @@
 //! `integration_convergence.rs`). With the identity compressor this is
 //! exact distributed GD (the paper's GD baseline).
 
-use super::{MasterNode, WireMsg, WorkerNode};
-use crate::compress::Compressor;
+use super::{BuildOpts, MasterNode, WireMsg, WorkerNode};
+use crate::blocks::{scatter_add_blocked, BlockLayout, ParamBlocks};
+use crate::compress::{Compressor, SparseVec};
 use crate::oracle::GradOracle;
 use crate::util::linalg;
 use crate::util::rng::Rng;
@@ -17,6 +18,8 @@ pub struct DcgdWorker {
     c: Arc<dyn Compressor>,
     rng: Rng,
     last_loss: f64,
+    /// Gradient buffer, written in place every round (DCGD is stateless
+    /// otherwise — the compressor sees the raw gradient).
     last_grad: Vec<f64>,
 }
 
@@ -33,10 +36,8 @@ impl WorkerNode for DcgdWorker {
     }
 
     fn round(&mut self, x: &[f64]) -> WireMsg {
-        let (loss, grad) = self.oracle.loss_grad(x);
-        let comp = self.c.compress(&grad, &mut self.rng);
-        self.last_loss = loss;
-        self.last_grad = grad;
+        self.last_loss = self.oracle.loss_grad_into(x, &mut self.last_grad);
+        let comp = self.c.compress(&self.last_grad, &mut self.rng);
         WireMsg::Sparse(comp)
     }
 
@@ -52,15 +53,27 @@ impl WorkerNode for DcgdWorker {
 pub struct DcgdMaster {
     x: Vec<f64>,
     /// u = (1/n) Σ C(∇f_i) from the previous absorb.
-    u: Vec<f64>,
+    u: ParamBlocks,
     gamma: f64,
     n: usize,
+    threads: usize,
 }
 
 impl DcgdMaster {
     pub fn new(x0: Vec<f64>, n: usize, gamma: f64) -> Self {
-        let d = x0.len();
-        DcgdMaster { x: x0, u: vec![0.0; d], gamma, n }
+        let layout = Arc::new(BlockLayout::flat(x0.len()));
+        Self::with_layout(x0, n, gamma, layout, 1)
+    }
+
+    pub fn with_layout(
+        x0: Vec<f64>,
+        n: usize,
+        gamma: f64,
+        layout: Arc<BlockLayout>,
+        threads: usize,
+    ) -> Self {
+        assert_eq!(layout.d(), x0.len(), "layout dimension mismatch");
+        DcgdMaster { x: x0, u: ParamBlocks::zeros(layout), gamma, n, threads: threads.max(1) }
     }
 }
 
@@ -74,17 +87,23 @@ impl MasterNode for DcgdMaster {
     }
 
     fn begin_round(&mut self) -> Vec<f64> {
-        linalg::axpy(-self.gamma, &self.u, &mut self.x);
+        linalg::axpy(-self.gamma, self.u.as_slice(), &mut self.x);
         self.x.clone()
     }
 
     fn absorb(&mut self, msgs: &[WireMsg]) {
         debug_assert_eq!(msgs.len(), self.n);
-        self.u.iter_mut().for_each(|v| *v = 0.0);
+        self.u.as_mut_slice().iter_mut().for_each(|v| *v = 0.0);
         let inv_n = 1.0 / self.n as f64;
-        for m in msgs {
-            m.payload().sparse.add_scaled_into(inv_n, &mut self.u);
+        if self.u.layout().is_flat() {
+            for m in msgs {
+                m.payload().sparse.add_scaled_into(inv_n, self.u.as_mut_slice());
+            }
+            return;
         }
+        let payloads: Vec<&SparseVec> = msgs.iter().map(|m| &m.payload().sparse).collect();
+        let layout = self.u.layout().clone();
+        scatter_add_blocked(self.u.as_mut_slice(), &layout, &payloads, inv_n, self.threads);
     }
 }
 
@@ -95,7 +114,20 @@ pub fn build(
     gamma: f64,
     seed: u64,
 ) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
+    build_with(x0, oracles, c, gamma, seed, &BuildOpts::default())
+}
+
+/// [`build`] with structural options (block layout, absorb fan-out).
+pub fn build_with(
+    x0: Vec<f64>,
+    oracles: Vec<Box<dyn GradOracle>>,
+    c: Arc<dyn Compressor>,
+    gamma: f64,
+    seed: u64,
+    opts: &BuildOpts,
+) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
     let n = oracles.len();
+    let layout = opts.layout_for(x0.len());
     let mut base = Rng::seed(seed);
     let workers: Vec<Box<dyn WorkerNode>> = oracles
         .into_iter()
@@ -104,7 +136,7 @@ pub fn build(
             Box::new(DcgdWorker::new(o, c.clone(), base.fork(i as u64))) as Box<dyn WorkerNode>
         })
         .collect();
-    let master = Box::new(DcgdMaster::new(x0, n, gamma));
+    let master = Box::new(DcgdMaster::with_layout(x0, n, gamma, layout, opts.threads));
     (master, workers)
 }
 

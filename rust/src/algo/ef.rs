@@ -7,8 +7,9 @@
 //! `x^{t+1} = x^t - (1/n) Σ w_i^t` (the stepsize is folded into the
 //! messages).
 
-use super::{MasterNode, WireMsg, WorkerNode};
-use crate::compress::Compressor;
+use super::{BuildOpts, MasterNode, WireMsg, WorkerNode};
+use crate::blocks::{scatter_add_blocked, BlockLayout, ParamBlocks};
+use crate::compress::{Compressor, SparseVec};
 use crate::oracle::GradOracle;
 use crate::util::linalg;
 use crate::util::rng::Rng;
@@ -19,23 +20,36 @@ pub struct EfWorker {
     c: Arc<dyn Compressor>,
     rng: Rng,
     gamma: f64,
-    /// Error accumulator e_i.
-    e: Vec<f64>,
+    /// Error accumulator e_i, kept per block.
+    e: ParamBlocks,
     last_loss: f64,
+    /// Gradient buffer, written in place every round.
     last_grad: Vec<f64>,
-    /// Scratch: v = e + gamma * grad.
+    /// Scratch: v = e + gamma * grad (reused across rounds).
     v: Vec<f64>,
 }
 
 impl EfWorker {
     pub fn new(oracle: Box<dyn GradOracle>, c: Arc<dyn Compressor>, gamma: f64, rng: Rng) -> Self {
+        let layout = Arc::new(BlockLayout::flat(oracle.dim()));
+        Self::with_layout(oracle, c, gamma, rng, layout)
+    }
+
+    pub fn with_layout(
+        oracle: Box<dyn GradOracle>,
+        c: Arc<dyn Compressor>,
+        gamma: f64,
+        rng: Rng,
+        layout: Arc<BlockLayout>,
+    ) -> Self {
         let d = oracle.dim();
+        assert_eq!(layout.d(), d, "layout dimension mismatch");
         EfWorker {
             oracle,
             c,
             rng,
             gamma,
-            e: vec![0.0; d],
+            e: ParamBlocks::zeros(layout),
             last_loss: 0.0,
             last_grad: vec![0.0; d],
             v: vec![0.0; d],
@@ -43,7 +57,7 @@ impl EfWorker {
     }
 
     pub fn error(&self) -> &[f64] {
-        &self.e
+        self.e.as_slice()
     }
 }
 
@@ -54,16 +68,14 @@ impl WorkerNode for EfWorker {
     }
 
     fn round(&mut self, x: &[f64]) -> WireMsg {
-        let (loss, grad) = self.oracle.loss_grad(x);
-        for j in 0..grad.len() {
-            self.v[j] = self.e[j] + self.gamma * grad[j];
-        }
+        self.last_loss = self.oracle.loss_grad_into(x, &mut self.last_grad);
+        // v = e + γ grad, per block (shared kernel; bit-identical to
+        // the legacy flat loop — see ParamBlocks::affine_into).
+        self.e.affine_into(self.gamma, &self.last_grad, &mut self.v);
         let comp = self.c.compress(&self.v, &mut self.rng);
         // e <- v - w
-        self.e.copy_from_slice(&self.v);
-        comp.sparse.add_scaled_into(-1.0, &mut self.e);
-        self.last_loss = loss;
-        self.last_grad = grad;
+        self.e.as_mut_slice().copy_from_slice(&self.v);
+        comp.sparse.add_scaled_into(-1.0, self.e.as_mut_slice());
         WireMsg::Sparse(comp)
     }
 
@@ -79,14 +91,25 @@ impl WorkerNode for EfWorker {
 pub struct EfMaster {
     x: Vec<f64>,
     /// u = (1/n) Σ w_i from the previous absorb (already γ-scaled).
-    u: Vec<f64>,
+    u: ParamBlocks,
     n: usize,
+    threads: usize,
 }
 
 impl EfMaster {
     pub fn new(x0: Vec<f64>, n: usize) -> Self {
-        let d = x0.len();
-        EfMaster { x: x0, u: vec![0.0; d], n }
+        let layout = Arc::new(BlockLayout::flat(x0.len()));
+        Self::with_layout(x0, n, layout, 1)
+    }
+
+    pub fn with_layout(
+        x0: Vec<f64>,
+        n: usize,
+        layout: Arc<BlockLayout>,
+        threads: usize,
+    ) -> Self {
+        assert_eq!(layout.d(), x0.len(), "layout dimension mismatch");
+        EfMaster { x: x0, u: ParamBlocks::zeros(layout), n, threads: threads.max(1) }
     }
 }
 
@@ -100,17 +123,23 @@ impl MasterNode for EfMaster {
     }
 
     fn begin_round(&mut self) -> Vec<f64> {
-        linalg::axpy(-1.0, &self.u, &mut self.x);
+        linalg::axpy(-1.0, self.u.as_slice(), &mut self.x);
         self.x.clone()
     }
 
     fn absorb(&mut self, msgs: &[WireMsg]) {
         debug_assert_eq!(msgs.len(), self.n);
-        self.u.iter_mut().for_each(|v| *v = 0.0);
+        self.u.as_mut_slice().iter_mut().for_each(|v| *v = 0.0);
         let inv_n = 1.0 / self.n as f64;
-        for m in msgs {
-            m.payload().sparse.add_scaled_into(inv_n, &mut self.u);
+        if self.u.layout().is_flat() {
+            for m in msgs {
+                m.payload().sparse.add_scaled_into(inv_n, self.u.as_mut_slice());
+            }
+            return;
         }
+        let payloads: Vec<&SparseVec> = msgs.iter().map(|m| &m.payload().sparse).collect();
+        let layout = self.u.layout().clone();
+        scatter_add_blocked(self.u.as_mut_slice(), &layout, &payloads, inv_n, self.threads);
     }
 }
 
@@ -121,17 +150,35 @@ pub fn build(
     gamma: f64,
     seed: u64,
 ) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
+    build_with(x0, oracles, c, gamma, seed, &BuildOpts::default())
+}
+
+/// [`build`] with structural options (block layout, absorb fan-out).
+pub fn build_with(
+    x0: Vec<f64>,
+    oracles: Vec<Box<dyn GradOracle>>,
+    c: Arc<dyn Compressor>,
+    gamma: f64,
+    seed: u64,
+    opts: &BuildOpts,
+) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
     let n = oracles.len();
+    let layout = opts.layout_for(x0.len());
     let mut base = Rng::seed(seed);
     let workers: Vec<Box<dyn WorkerNode>> = oracles
         .into_iter()
         .enumerate()
         .map(|(i, o)| {
-            Box::new(EfWorker::new(o, c.clone(), gamma, base.fork(i as u64)))
-                as Box<dyn WorkerNode>
+            Box::new(EfWorker::with_layout(
+                o,
+                c.clone(),
+                gamma,
+                base.fork(i as u64),
+                layout.clone(),
+            )) as Box<dyn WorkerNode>
         })
         .collect();
-    let master = Box::new(EfMaster::new(x0, n));
+    let master = Box::new(EfMaster::with_layout(x0, n, layout, opts.threads));
     (master, workers)
 }
 

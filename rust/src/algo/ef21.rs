@@ -6,8 +6,9 @@
 //! incrementally (`g^{t+1} = g^t + avg_i c_i^t`) and steps
 //! `x^{t+1} = x^t - γ g^t`.
 
-use super::{MasterNode, WireMsg, WorkerNode};
-use crate::compress::Compressor;
+use super::{BuildOpts, MasterNode, WireMsg, WorkerNode};
+use crate::blocks::{scatter_add_blocked, BlockLayout, ParamBlocks};
+use crate::compress::{Compressor, SparseVec};
 use crate::oracle::GradOracle;
 use crate::util::linalg;
 use crate::util::rng::Rng;
@@ -17,11 +18,15 @@ pub struct Ef21Worker {
     oracle: Box<dyn GradOracle>,
     c: Arc<dyn Compressor>,
     rng: Rng,
-    /// Local Markov state g_i (mirrored by the master in aggregate).
-    g: Vec<f64>,
+    /// Local Markov state g_i, kept per block (mirrored by the master in
+    /// aggregate). A flat (single-block) layout is the exact legacy
+    /// state.
+    g: ParamBlocks,
     last_loss: f64,
+    /// Gradient buffer, written in place by `loss_grad_into` every round
+    /// (no per-round allocation).
     last_grad: Vec<f64>,
-    /// Scratch buffer for grad - g (avoids per-round allocation).
+    /// Scratch buffer for grad - g (reused across rounds).
     diff: Vec<f64>,
     /// Initialize with the FULL gradient (`g_i^0 = ∇f_i(x^0)`, one dense
     /// init message) instead of `C(∇f_i(x^0))`. Sanctioned by the paper
@@ -34,12 +39,25 @@ pub struct Ef21Worker {
 
 impl Ef21Worker {
     pub fn new(oracle: Box<dyn GradOracle>, c: Arc<dyn Compressor>, rng: Rng) -> Self {
+        let layout = Arc::new(BlockLayout::flat(oracle.dim()));
+        Self::with_layout(oracle, c, rng, layout)
+    }
+
+    /// Like [`Ef21Worker::new`], with Markov state partitioned by
+    /// `layout` (the compressor is expected to share the partition).
+    pub fn with_layout(
+        oracle: Box<dyn GradOracle>,
+        c: Arc<dyn Compressor>,
+        rng: Rng,
+        layout: Arc<BlockLayout>,
+    ) -> Self {
         let d = oracle.dim();
+        assert_eq!(layout.d(), d, "layout dimension mismatch");
         Ef21Worker {
             oracle,
             c,
             rng,
-            g: vec![0.0; d],
+            g: ParamBlocks::zeros(layout),
             last_loss: 0.0,
             last_grad: vec![0.0; d],
             diff: vec![0.0; d],
@@ -49,7 +67,7 @@ impl Ef21Worker {
 
     /// Current Markov state (tests / tracker).
     pub fn state_g(&self) -> &[f64] {
-        &self.g
+        self.g.as_slice()
     }
 }
 
@@ -57,12 +75,10 @@ impl WorkerNode for Ef21Worker {
     fn init(&mut self, x0: &[f64]) -> WireMsg {
         if self.full_init {
             // g_i^0 = ∇f_i(x^0): one dense init message (d * 32 bits).
-            let (loss, grad) = self.oracle.loss_grad(x0);
-            self.g.copy_from_slice(&grad);
-            self.last_loss = loss;
-            let sparse = crate::compress::SparseVec::from_dense_full(&grad);
-            self.last_grad = grad;
-            let bits = self.g.len() as u64 * 32;
+            self.last_loss = self.oracle.loss_grad_into(x0, &mut self.last_grad);
+            self.g.as_mut_slice().copy_from_slice(&self.last_grad);
+            let sparse = SparseVec::from_dense_full(&self.last_grad);
+            let bits = self.last_grad.len() as u64 * 32;
             return WireMsg::Sparse(crate::compress::Compressed { sparse, bits });
         }
         // g_i^0 = C(∇f_i(x^0)); with g=0 this is exactly one round() step.
@@ -70,14 +86,12 @@ impl WorkerNode for Ef21Worker {
     }
 
     fn round(&mut self, x: &[f64]) -> WireMsg {
-        let (loss, grad) = self.oracle.loss_grad(x);
-        for j in 0..grad.len() {
-            self.diff[j] = grad[j] - self.g[j];
-        }
+        self.last_loss = self.oracle.loss_grad_into(x, &mut self.last_grad);
+        // diff = grad - g, per block (shared kernel; bit-identical to
+        // the legacy flat loop — see ParamBlocks::sub_from_into).
+        self.g.sub_from_into(&self.last_grad, &mut self.diff);
         let comp = self.c.compress(&self.diff, &mut self.rng);
-        comp.sparse.add_into(&mut self.g);
-        self.last_loss = loss;
-        self.last_grad = grad;
+        comp.sparse.add_into(self.g.as_mut_slice());
         WireMsg::Sparse(comp)
     }
 
@@ -90,26 +104,41 @@ impl WorkerNode for Ef21Worker {
     }
 
     fn distortion_sq(&self) -> Option<f64> {
-        Some(linalg::dist_sq(&self.g, &self.last_grad))
+        Some(linalg::dist_sq(self.g.as_slice(), &self.last_grad))
     }
 }
 
 pub struct Ef21Master {
     x: Vec<f64>,
-    /// g^t = avg_i g_i^t, maintained incrementally from the deltas.
-    g: Vec<f64>,
+    /// g^t = avg_i g_i^t, maintained incrementally from the deltas,
+    /// partitioned like the workers' state.
+    g: ParamBlocks,
     gamma: f64,
     n: usize,
+    /// Fan-out width of the block-parallel absorb tile (1 = inline;
+    /// bit-identical either way).
+    threads: usize,
 }
 
 impl Ef21Master {
     pub fn new(x0: Vec<f64>, n: usize, gamma: f64) -> Self {
-        let d = x0.len();
-        Ef21Master { x: x0, g: vec![0.0; d], gamma, n }
+        let layout = Arc::new(BlockLayout::flat(x0.len()));
+        Self::with_layout(x0, n, gamma, layout, 1)
+    }
+
+    pub fn with_layout(
+        x0: Vec<f64>,
+        n: usize,
+        gamma: f64,
+        layout: Arc<BlockLayout>,
+        threads: usize,
+    ) -> Self {
+        assert_eq!(layout.d(), x0.len(), "layout dimension mismatch");
+        Ef21Master { x: x0, g: ParamBlocks::zeros(layout), gamma, n, threads: threads.max(1) }
     }
 
     pub fn aggregate_g(&self) -> &[f64] {
-        &self.g
+        self.g.as_slice()
     }
 }
 
@@ -124,16 +153,26 @@ impl MasterNode for Ef21Master {
     }
 
     fn begin_round(&mut self) -> Vec<f64> {
-        linalg::axpy(-self.gamma, &self.g, &mut self.x);
+        linalg::axpy(-self.gamma, self.g.as_slice(), &mut self.x);
         self.x.clone()
     }
 
     fn absorb(&mut self, msgs: &[WireMsg]) {
         debug_assert_eq!(msgs.len(), self.n);
         let inv_n = 1.0 / self.n as f64;
-        for m in msgs {
-            m.payload().sparse.add_scaled_into(inv_n, &mut self.g);
+        if self.g.layout().is_flat() {
+            // Exact legacy loop.
+            for m in msgs {
+                m.payload().sparse.add_scaled_into(inv_n, self.g.as_mut_slice());
+            }
+            return;
         }
+        // Worker × block aggregation tile: per coordinate, messages are
+        // still applied in worker order, so this is bit-identical to the
+        // loop above at any thread count.
+        let payloads: Vec<&SparseVec> = msgs.iter().map(|m| &m.payload().sparse).collect();
+        let layout = self.g.layout().clone();
+        scatter_add_blocked(self.g.as_mut_slice(), &layout, &payloads, inv_n, self.threads);
     }
 }
 
@@ -144,7 +183,7 @@ pub fn build(
     gamma: f64,
     seed: u64,
 ) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
-    build_opts(x0, oracles, c, gamma, seed, false)
+    build_with(x0, oracles, c, gamma, seed, &BuildOpts::default())
 }
 
 /// Like [`build`], optionally with the dense-gradient initialization
@@ -157,18 +196,33 @@ pub fn build_opts(
     seed: u64,
     full_init: bool,
 ) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
+    let opts = BuildOpts { full_init, ..BuildOpts::default() };
+    build_with(x0, oracles, c, gamma, seed, &opts)
+}
+
+/// [`build`] with full structural options (block layout, absorb fan-out,
+/// dense init).
+pub fn build_with(
+    x0: Vec<f64>,
+    oracles: Vec<Box<dyn GradOracle>>,
+    c: Arc<dyn Compressor>,
+    gamma: f64,
+    seed: u64,
+    opts: &BuildOpts,
+) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
     let n = oracles.len();
+    let layout = opts.layout_for(x0.len());
     let mut base = Rng::seed(seed);
     let workers: Vec<Box<dyn WorkerNode>> = oracles
         .into_iter()
         .enumerate()
         .map(|(i, o)| {
-            let mut w = Ef21Worker::new(o, c.clone(), base.fork(i as u64));
-            w.full_init = full_init;
+            let mut w = Ef21Worker::with_layout(o, c.clone(), base.fork(i as u64), layout.clone());
+            w.full_init = opts.full_init;
             Box::new(w) as Box<dyn WorkerNode>
         })
         .collect();
-    let master = Box::new(Ef21Master::new(x0, n, gamma));
+    let master = Box::new(Ef21Master::with_layout(x0, n, gamma, layout, opts.threads));
     (master, workers)
 }
 

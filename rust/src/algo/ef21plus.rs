@@ -10,7 +10,8 @@
 //! Markov branch's message is a delta (`g_i += c`). The master keeps the
 //! per-worker mirrors and the running average.
 
-use super::{MasterNode, WireMsg, WorkerNode};
+use super::{BuildOpts, MasterNode, WireMsg, WorkerNode};
+use crate::blocks::{BlockLayout, ParamBlocks, Workspace};
 use crate::compress::Compressor;
 use crate::oracle::GradOracle;
 use crate::util::linalg;
@@ -21,34 +22,51 @@ pub struct Ef21PlusWorker {
     oracle: Box<dyn GradOracle>,
     c: Arc<dyn Compressor>,
     rng: Rng,
-    g: Vec<f64>,
+    /// Local state g_i, kept per block.
+    g: ParamBlocks,
     last_loss: f64,
+    /// Gradient buffer, written in place every round.
     last_grad: Vec<f64>,
     last_branch_dcgd: bool,
     diff: Vec<f64>,
+    /// Pooled scratch for the two per-round dense branch candidates
+    /// (previously two fresh allocations per round per worker).
+    ws: Workspace,
 }
 
 impl Ef21PlusWorker {
     pub fn new(oracle: Box<dyn GradOracle>, c: Arc<dyn Compressor>, rng: Rng) -> Self {
+        let layout = Arc::new(BlockLayout::flat(oracle.dim()));
+        Self::with_layout(oracle, c, rng, layout)
+    }
+
+    pub fn with_layout(
+        oracle: Box<dyn GradOracle>,
+        c: Arc<dyn Compressor>,
+        rng: Rng,
+        layout: Arc<BlockLayout>,
+    ) -> Self {
         assert!(
             c.is_deterministic(),
             "EF21+ analysis (§3.5) requires a deterministic compressor"
         );
         let d = oracle.dim();
+        assert_eq!(layout.d(), d, "layout dimension mismatch");
         Ef21PlusWorker {
             oracle,
             c,
             rng,
-            g: vec![0.0; d],
+            g: ParamBlocks::zeros(layout),
             last_loss: 0.0,
             last_grad: vec![0.0; d],
             last_branch_dcgd: false,
             diff: vec![0.0; d],
+            ws: Workspace::new(),
         }
     }
 
     pub fn state_g(&self) -> &[f64] {
-        &self.g
+        self.g.as_slice()
     }
 }
 
@@ -59,37 +77,40 @@ impl WorkerNode for Ef21PlusWorker {
     }
 
     fn round(&mut self, x: &[f64]) -> WireMsg {
-        let d = self.g.len();
-        let (loss, grad) = self.oracle.loss_grad(x);
+        let d = self.g.layout().d();
+        self.last_loss = self.oracle.loss_grad_into(x, &mut self.last_grad);
 
         // Branch 1 (DCGD): b = C(grad).
-        let b = self.c.compress(&grad, &mut self.rng);
-        // Branch 2 (Markov): m = g + C(grad - g).
-        for j in 0..d {
-            self.diff[j] = grad[j] - self.g[j];
-        }
+        let b = self.c.compress(&self.last_grad, &mut self.rng);
+        // Branch 2 (Markov): m = g + C(grad - g); diff per block
+        // (shared kernel, bit-identical to the legacy flat loop).
+        self.g.sub_from_into(&self.last_grad, &mut self.diff);
         let m_delta = self.c.compress(&self.diff, &mut self.rng);
 
         // Distortions at ∇f_i(x^{t+1}).
         // B = ||b - grad||^2; M = ||(g + delta) - grad||^2.
-        let b_dense = b.sparse.to_dense(d);
-        let b_dist = linalg::dist_sq(&b_dense, &grad);
-        let mut m_dense = self.g.clone();
+        // Both candidates come from the pooled workspace (no per-round
+        // allocation; contents are re-initialized on take).
+        let mut b_dense = self.ws.take_zeroed(d);
+        b.sparse.add_into(&mut b_dense);
+        let b_dist = linalg::dist_sq(&b_dense, &self.last_grad);
+        let mut m_dense = self.ws.take_copy(self.g.as_slice());
         m_delta.sparse.add_into(&mut m_dense);
-        let m_dist = linalg::dist_sq(&m_dense, &grad);
+        let m_dist = linalg::dist_sq(&m_dense, &self.last_grad);
 
-        let msg = if m_dist <= b_dist {
-            self.g = m_dense;
+        if m_dist <= b_dist {
+            self.g.swap_flat(&mut m_dense);
             self.last_branch_dcgd = false;
+            self.ws.put(m_dense);
+            self.ws.put(b_dense);
             WireMsg::Tagged { dcgd_branch: false, payload: m_delta }
         } else {
-            self.g = b_dense;
+            self.g.swap_flat(&mut b_dense);
             self.last_branch_dcgd = true;
+            self.ws.put(b_dense);
+            self.ws.put(m_dense);
             WireMsg::Tagged { dcgd_branch: true, payload: b }
-        };
-        self.last_loss = loss;
-        self.last_grad = grad;
-        msg
+        }
     }
 
     fn last_loss(&self) -> f64 {
@@ -101,7 +122,7 @@ impl WorkerNode for Ef21PlusWorker {
     }
 
     fn distortion_sq(&self) -> Option<f64> {
-        Some(linalg::dist_sq(&self.g, &self.last_grad))
+        Some(linalg::dist_sq(self.g.as_slice(), &self.last_grad))
     }
 
     fn used_dcgd_branch(&self) -> Option<bool> {
@@ -178,14 +199,35 @@ pub fn build(
     gamma: f64,
     seed: u64,
 ) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
+    build_with(x0, oracles, c, gamma, seed, &BuildOpts::default())
+}
+
+/// [`build`] with structural options. Workers keep per-block state; the
+/// master's absorb stays sequential — its assignment branch rewrites a
+/// whole per-worker mirror (`g_sum -= old g_i; g_i = dense(b); g_sum +=
+/// g_i`), a read-modify-write across the full vector that the disjoint
+/// block-tile argument does not cover.
+pub fn build_with(
+    x0: Vec<f64>,
+    oracles: Vec<Box<dyn GradOracle>>,
+    c: Arc<dyn Compressor>,
+    gamma: f64,
+    seed: u64,
+    opts: &BuildOpts,
+) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
     let n = oracles.len();
+    let layout = opts.layout_for(x0.len());
     let mut base = Rng::seed(seed);
     let workers: Vec<Box<dyn WorkerNode>> = oracles
         .into_iter()
         .enumerate()
         .map(|(i, o)| {
-            Box::new(Ef21PlusWorker::new(o, c.clone(), base.fork(i as u64)))
-                as Box<dyn WorkerNode>
+            Box::new(Ef21PlusWorker::with_layout(
+                o,
+                c.clone(),
+                base.fork(i as u64),
+                layout.clone(),
+            )) as Box<dyn WorkerNode>
         })
         .collect();
     let master = Box::new(Ef21PlusMaster::new(x0, n, gamma));

@@ -23,9 +23,46 @@ pub mod ef;
 pub mod ef21;
 pub mod ef21plus;
 
+use crate::blocks::BlockLayout;
 use crate::compress::{Compressed, Compressor};
 use crate::oracle::GradOracle;
 use std::sync::Arc;
+
+/// Structural options shared by every algorithm builder.
+#[derive(Clone, Debug)]
+pub struct BuildOpts {
+    /// Block partition of the parameter space (`None` = the exact legacy
+    /// flat path). Workers keep their Markov/error state per block and
+    /// the masters aggregate block-by-block; a single-block layout is
+    /// bit-identical to `None`.
+    pub layout: Option<Arc<BlockLayout>>,
+    /// Fan-out width for the masters' block-parallel absorb tiles
+    /// (ignored for flat layouts; bit-identical at any width — see
+    /// [`crate::blocks::scatter_add_blocked`]).
+    pub threads: usize,
+    /// EF21 only: initialize with the full gradient (`g_i^0 = ∇f_i(x^0)`,
+    /// one dense init message) instead of `C(∇f_i(x^0))`.
+    pub full_init: bool,
+}
+
+impl Default for BuildOpts {
+    fn default() -> Self {
+        BuildOpts { layout: None, threads: 1, full_init: false }
+    }
+}
+
+impl BuildOpts {
+    /// Resolve the effective layout for dimension `d` (flat when unset).
+    pub fn layout_for(&self, d: usize) -> Arc<BlockLayout> {
+        match &self.layout {
+            Some(l) => {
+                assert_eq!(l.d(), d, "block layout dimension mismatch");
+                l.clone()
+            }
+            None => Arc::new(BlockLayout::flat(d)),
+        }
+    }
+}
 
 /// One uplink message (worker -> master), with exact wire-bit accounting.
 #[derive(Clone, Debug)]
@@ -152,17 +189,33 @@ pub fn build(
     gamma: f64,
     seed: u64,
 ) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
+    build_with(spec, x0, oracles, c, gamma, seed, &BuildOpts::default())
+}
+
+/// [`build`] with explicit structural options (block layout, absorb
+/// fan-out, EF21 dense init). `BuildOpts::default()` is the exact legacy
+/// path.
+pub fn build_with(
+    spec: AlgoSpec,
+    x0: Vec<f64>,
+    oracles: Vec<Box<dyn GradOracle>>,
+    c: Arc<dyn Compressor>,
+    gamma: f64,
+    seed: u64,
+    opts: &BuildOpts,
+) -> (Box<dyn MasterNode>, Vec<Box<dyn WorkerNode>>) {
     match spec {
-        AlgoSpec::Ef21 => ef21::build(x0, oracles, c, gamma, seed),
-        AlgoSpec::Ef21Plus => ef21plus::build(x0, oracles, c, gamma, seed),
-        AlgoSpec::Ef => ef::build(x0, oracles, c, gamma, seed),
-        AlgoSpec::Dcgd => dcgd::build(x0, oracles, c, gamma, seed),
-        AlgoSpec::Gd => dcgd::build(
+        AlgoSpec::Ef21 => ef21::build_with(x0, oracles, c, gamma, seed, opts),
+        AlgoSpec::Ef21Plus => ef21plus::build_with(x0, oracles, c, gamma, seed, opts),
+        AlgoSpec::Ef => ef::build_with(x0, oracles, c, gamma, seed, opts),
+        AlgoSpec::Dcgd => dcgd::build_with(x0, oracles, c, gamma, seed, opts),
+        AlgoSpec::Gd => dcgd::build_with(
             x0,
             oracles,
             Arc::new(crate::compress::Identity),
             gamma,
             seed,
+            opts,
         ),
     }
 }

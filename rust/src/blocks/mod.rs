@@ -1,0 +1,551 @@
+//! Block-partitioned parameter layout (the DL experiments of §5 / Fig. 5
+//! compress layer-by-layer; this module gives the whole pipeline that
+//! structure).
+//!
+//! A [`BlockLayout`] partitions the flat parameter space `0..d` into
+//! contiguous named blocks (`BlockSpec { name, offset, len }`). A
+//! [`ParamBlocks`] is a flat `Vec<f64>` backing buffer viewed through such
+//! a layout — `blocks = 1` degenerates to today's flat vector, and every
+//! consumer (compressors, algorithm state, the broadcast codec) treats
+//! that case as the exact legacy path, so flat runs stay bit-identical.
+//!
+//! Two more pieces live here because every layer shares them:
+//!
+//! * [`Workspace`] — a pooled-buffer allocator for per-round scratch
+//!   vectors (gradient buffers, EF21+ branch candidates), replacing
+//!   per-round `vec![0.0; d]` allocations on the hot path.
+//! * [`scatter_add_blocked`] — the master-side worker×block aggregation
+//!   tile: disjoint block ranges of the target are updated on separate
+//!   threads while, **within each coordinate**, messages are applied in
+//!   worker-index order — exactly the sequential order, so the result is
+//!   bit-identical to the legacy per-message loop (DESIGN.md §6).
+
+pub mod workspace;
+
+pub use workspace::Workspace;
+
+use crate::compress::SparseVec;
+use anyhow::{bail, ensure, Result};
+use std::sync::Arc;
+
+/// One contiguous block of the flat parameter vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockSpec {
+    /// Human-readable name ("all", "b3", "l0.w_qkv", ...) — used in
+    /// telemetry keys (`compress.<spec>.<name>.*`).
+    pub name: String,
+    /// First coordinate of the block.
+    pub offset: usize,
+    /// Number of coordinates (>= 1).
+    pub len: usize,
+}
+
+impl BlockSpec {
+    /// Coordinate range `[offset, offset + len)`.
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.len
+    }
+}
+
+/// A contiguous, gap-free partition of `0..d` into named blocks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockLayout {
+    specs: Vec<BlockSpec>,
+    d: usize,
+}
+
+impl BlockLayout {
+    /// Build from explicit specs; validates the partition (ascending
+    /// contiguous offsets starting at 0, every block non-empty).
+    pub fn new(specs: Vec<BlockSpec>) -> Result<BlockLayout> {
+        ensure!(!specs.is_empty(), "block layout needs at least one block");
+        let mut next = 0usize;
+        for (i, s) in specs.iter().enumerate() {
+            ensure!(s.len >= 1, "block {i} ('{}') is empty", s.name);
+            ensure!(
+                s.offset == next,
+                "block {i} ('{}') starts at {} but previous block ends at {next}",
+                s.name,
+                s.offset
+            );
+            next += s.len;
+        }
+        Ok(BlockLayout { specs, d: next })
+    }
+
+    /// The degenerate single-block layout — today's flat vector.
+    pub fn flat(d: usize) -> BlockLayout {
+        assert!(d >= 1, "flat layout needs d >= 1");
+        BlockLayout {
+            specs: vec![BlockSpec { name: "all".into(), offset: 0, len: d }],
+            d,
+        }
+    }
+
+    /// Balanced contiguous split into `n_blocks` blocks named `b0..`,
+    /// mirroring the worker-chunking rule of `coordinator::par` (the
+    /// first `d % n_blocks` blocks take one extra coordinate).
+    pub fn equal(n_blocks: usize, d: usize) -> Result<BlockLayout> {
+        ensure!(n_blocks >= 1, "need at least one block");
+        ensure!(
+            n_blocks <= d,
+            "cannot split d={d} coordinates into {n_blocks} non-empty blocks"
+        );
+        let base = d / n_blocks;
+        let rem = d % n_blocks;
+        let mut specs = Vec::with_capacity(n_blocks);
+        let mut offset = 0;
+        for b in 0..n_blocks {
+            let len = base + usize::from(b < rem);
+            specs.push(BlockSpec { name: format!("b{b}"), offset, len });
+            offset += len;
+        }
+        BlockLayout::new(specs)
+    }
+
+    /// Build from `(name, len)` pairs in order (e.g. a transformer's
+    /// per-parameter shapes flattened to lengths).
+    pub fn from_named(parts: &[(String, usize)]) -> Result<BlockLayout> {
+        let mut specs = Vec::with_capacity(parts.len());
+        let mut offset = 0;
+        for (name, len) in parts {
+            specs.push(BlockSpec { name: name.clone(), offset, len: *len });
+            offset += len;
+        }
+        BlockLayout::new(specs)
+    }
+
+    /// Parse a `--blocks` layout spec against dimension `d`:
+    /// `"flat"` / `"1"` → single block; `"<n>"` → [`BlockLayout::equal`];
+    /// `"name:len,name:len,..."` → [`BlockLayout::from_named`] (lengths
+    /// must sum to `d`). `"auto"` is resolved by the caller (it needs the
+    /// oracle's natural layout) — see `config::BlocksSpec`.
+    pub fn parse(spec: &str, d: usize) -> Result<BlockLayout> {
+        let s = spec.trim();
+        if s.is_empty() || s.eq_ignore_ascii_case("flat") {
+            return Ok(BlockLayout::flat(d));
+        }
+        if let Ok(n) = s.parse::<usize>() {
+            // "0" is an error here too, so this grammar and the CLI's
+            // `config::BlocksSpec` can never drift on it.
+            ensure!(n >= 1, "--blocks 0: need at least one block");
+            return if n == 1 { Ok(BlockLayout::flat(d)) } else { BlockLayout::equal(n, d) };
+        }
+        if s.contains(':') {
+            let mut parts = Vec::new();
+            for item in s.split(',') {
+                let Some((name, len)) = item.split_once(':') else {
+                    bail!("bad --blocks item '{item}' (expected name:len)");
+                };
+                let len: usize = len
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad block length in '{item}'"))?;
+                parts.push((name.trim().to_string(), len));
+            }
+            let layout = BlockLayout::from_named(&parts)?;
+            ensure!(
+                layout.d() == d,
+                "--blocks lengths sum to {} but the problem has d={d}",
+                layout.d()
+            );
+            return Ok(layout);
+        }
+        bail!("bad --blocks spec '{spec}' (flat | auto | <n> | name:len,...)")
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// `true` for the single-block layout — the exact legacy flat path.
+    pub fn is_flat(&self) -> bool {
+        self.specs.len() == 1
+    }
+
+    pub fn specs(&self) -> &[BlockSpec] {
+        &self.specs
+    }
+
+    pub fn spec(&self, b: usize) -> &BlockSpec {
+        &self.specs[b]
+    }
+
+    /// Slice `v` (length `d`) down to block `b`.
+    pub fn slice<'a>(&self, b: usize, v: &'a [f64]) -> &'a [f64] {
+        &v[self.specs[b].range()]
+    }
+
+    /// Split a full-length mutable slice into per-block mutable slices
+    /// (in block order) — the aliasing-free basis of the block-parallel
+    /// aggregation tile.
+    pub fn split_mut<'a>(&self, v: &'a mut [f64]) -> Vec<&'a mut [f64]> {
+        assert_eq!(v.len(), self.d);
+        let mut out = Vec::with_capacity(self.specs.len());
+        let mut rest: &'a mut [f64] = v;
+        for s in &self.specs {
+            // mem::take moves the remainder out so the split borrows
+            // carry the full 'a lifetime (plain re-slicing would only
+            // reborrow).
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(s.len);
+            out.push(head);
+            rest = tail;
+        }
+        out
+    }
+}
+
+/// A flat `f64` backing buffer viewed through a [`BlockLayout`]. The
+/// algorithms keep their Markov/error state in this type so per-block
+/// passes (compression, distortion accounting, aggregation) never copy.
+#[derive(Clone, Debug)]
+pub struct ParamBlocks {
+    data: Vec<f64>,
+    layout: Arc<BlockLayout>,
+}
+
+impl ParamBlocks {
+    /// Zero-initialized state over `layout`.
+    pub fn zeros(layout: Arc<BlockLayout>) -> ParamBlocks {
+        let d = layout.d();
+        ParamBlocks { data: vec![0.0; d], layout }
+    }
+
+    /// Adopt an existing flat vector (length must match the layout).
+    pub fn from_flat(data: Vec<f64>, layout: Arc<BlockLayout>) -> ParamBlocks {
+        assert_eq!(data.len(), layout.d());
+        ParamBlocks { data, layout }
+    }
+
+    pub fn layout(&self) -> &Arc<BlockLayout> {
+        &self.layout
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// The flat backing buffer, by value (consumes self).
+    pub fn into_flat(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Swap the backing buffer with another full-length vector — the
+    /// allocation-free way to adopt a workspace buffer as the new state
+    /// (EF21+'s winning branch) while recycling the old one.
+    pub fn swap_flat(&mut self, other: &mut Vec<f64>) {
+        assert_eq!(other.len(), self.layout.d());
+        std::mem::swap(&mut self.data, other);
+    }
+
+    /// `out = other - self`, computed block by block — the EF21-family
+    /// Markov-difference kernel (`∇f_i - g_i`). Blocks are contiguous
+    /// and ascending, so the element order — and hence every f64 —
+    /// matches the flat loop exactly; one shared kernel keeps the
+    /// bit-identity argument in one place instead of per algorithm.
+    pub fn sub_from_into(&self, other: &[f64], out: &mut [f64]) {
+        assert_eq!(other.len(), self.data.len());
+        assert_eq!(out.len(), self.data.len());
+        for spec in self.layout.specs() {
+            let r = spec.range();
+            let s = &self.data[r.clone()];
+            let o = &other[r.clone()];
+            let dst = &mut out[r];
+            for j in 0..s.len() {
+                dst[j] = o[j] - s[j];
+            }
+        }
+    }
+
+    /// `out = self + scale * other`, block by block — EF's
+    /// error-compensated message kernel (`e_i + γ ∇f_i`). Same
+    /// element-order guarantee as [`Self::sub_from_into`].
+    pub fn affine_into(&self, scale: f64, other: &[f64], out: &mut [f64]) {
+        assert_eq!(other.len(), self.data.len());
+        assert_eq!(out.len(), self.data.len());
+        for spec in self.layout.specs() {
+            let r = spec.range();
+            let s = &self.data[r.clone()];
+            let o = &other[r.clone()];
+            let dst = &mut out[r];
+            for j in 0..s.len() {
+                dst[j] = s[j] + scale * o[j];
+            }
+        }
+    }
+
+    pub fn block(&self, b: usize) -> &[f64] {
+        &self.data[self.layout.spec(b).range()]
+    }
+
+    pub fn block_mut(&mut self, b: usize) -> &mut [f64] {
+        let r = self.layout.spec(b).range();
+        &mut self.data[r]
+    }
+}
+
+/// Dimension floor below which the block-parallel tile paths run inline
+/// — under it, the scoped-thread fan-out costs more than the work. One
+/// constant for both halves of the worker×block tile (aggregation here,
+/// compression in [`crate::compress::BlockCompressor`]), so they engage
+/// threading at the same scale.
+pub const PAR_MIN_DIM: usize = 1 << 14;
+
+/// Execute `f(item)` over every item, fanned across at most `threads`
+/// scoped threads in contiguous chunks (`threads <= 1` runs inline).
+/// Items must be independent (each is processed exactly once and
+/// carries its own output target), so chunk scheduling cannot change
+/// any result — the one chunked-scope harness behind both halves of
+/// the worker×block tile.
+pub fn run_chunked<T: Send>(items: Vec<T>, threads: usize, f: impl Fn(T) + Send + Sync) {
+    let threads = threads.max(1).min(items.len());
+    if threads <= 1 {
+        for it in items {
+            f(it);
+        }
+        return;
+    }
+    // ceil(len / threads) without div_ceil (MSRV 1.70).
+    let per = (items.len() + threads - 1) / threads;
+    let mut rest = items;
+    std::thread::scope(|scope| {
+        let f = &f;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let chunk: Vec<T> = rest.drain(..take).collect();
+            scope.spawn(move || {
+                for it in chunk {
+                    f(it);
+                }
+            });
+        }
+    });
+}
+
+/// `target += scale * msg` for every message, tiled across blocks.
+///
+/// Per coordinate, contributions are applied in message (= worker-index)
+/// order exactly as the legacy sequential loop does; blocks touch
+/// disjoint coordinates, so distributing blocks across threads cannot
+/// change any individual f64 sum — the result is **bit-identical** to
+/// the sequential absorb at any thread count. `threads <= 1` (or a flat
+/// layout, or `d` below [`PAR_MIN_DIM`]) runs the same per-block loops
+/// inline.
+pub fn scatter_add_blocked(
+    target: &mut [f64],
+    layout: &BlockLayout,
+    msgs: &[&SparseVec],
+    scale: f64,
+    threads: usize,
+) {
+    fn apply(spec: &BlockSpec, out: &mut [f64], msgs: &[&SparseVec], scale: f64) {
+        let lo = spec.offset as u32;
+        let hi = (spec.offset + spec.len) as u32;
+        for s in msgs {
+            for e in s.entry_range(lo, hi) {
+                out[s.idx[e] as usize - spec.offset] += scale * s.val[e];
+            }
+        }
+    }
+
+    let width = if layout.is_flat() || layout.d() < PAR_MIN_DIM { 1 } else { threads };
+    let tiles: Vec<(&BlockSpec, &mut [f64])> =
+        layout.specs().iter().zip(layout.split_mut(target)).collect();
+    run_chunked(tiles, width, |(spec, out)| apply(spec, out, msgs, scale));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_layout_is_single_full_block() {
+        let l = BlockLayout::flat(7);
+        assert!(l.is_flat());
+        assert_eq!(l.n_blocks(), 1);
+        assert_eq!(l.d(), 7);
+        assert_eq!(l.spec(0).range(), 0..7);
+        assert_eq!(l.spec(0).name, "all");
+    }
+
+    #[test]
+    fn equal_split_is_balanced_and_contiguous() {
+        let l = BlockLayout::equal(3, 10).unwrap();
+        let lens: Vec<usize> = l.specs().iter().map(|s| s.len).collect();
+        assert_eq!(lens, vec![4, 3, 3]);
+        assert_eq!(l.spec(1).offset, 4);
+        assert_eq!(l.spec(2).offset, 7);
+        assert!(BlockLayout::equal(11, 10).is_err());
+        assert!(BlockLayout::equal(0, 10).is_err());
+    }
+
+    #[test]
+    fn named_layout_and_validation() {
+        let l = BlockLayout::from_named(&[
+            ("emb".into(), 6),
+            ("head".into(), 2),
+        ])
+        .unwrap();
+        assert_eq!(l.d(), 8);
+        assert_eq!(l.spec(1).name, "head");
+        // Gap / overlap / empty are rejected.
+        assert!(BlockLayout::new(vec![
+            BlockSpec { name: "a".into(), offset: 1, len: 2 },
+        ])
+        .is_err());
+        assert!(BlockLayout::new(vec![
+            BlockSpec { name: "a".into(), offset: 0, len: 0 },
+        ])
+        .is_err());
+        assert!(BlockLayout::new(vec![
+            BlockSpec { name: "a".into(), offset: 0, len: 2 },
+            BlockSpec { name: "b".into(), offset: 3, len: 1 },
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert!(BlockLayout::parse("flat", 9).unwrap().is_flat());
+        assert!(BlockLayout::parse("1", 9).unwrap().is_flat());
+        assert_eq!(BlockLayout::parse("3", 9).unwrap().n_blocks(), 3);
+        let l = BlockLayout::parse("a:4,b:5", 9).unwrap();
+        assert_eq!(l.n_blocks(), 2);
+        assert_eq!(l.spec(1).offset, 4);
+        assert!(BlockLayout::parse("a:4,b:4", 9).is_err()); // sums to 8
+        assert!(BlockLayout::parse("wat", 9).is_err());
+        assert!(BlockLayout::parse("99", 9).is_err()); // more blocks than d
+        assert!(BlockLayout::parse("0", 9).is_err());
+    }
+
+    #[test]
+    fn param_blocks_views() {
+        let layout = Arc::new(BlockLayout::equal(2, 5).unwrap());
+        let mut p = ParamBlocks::zeros(layout.clone());
+        p.block_mut(1)[0] = 2.5;
+        assert_eq!(p.as_slice(), &[0.0, 0.0, 0.0, 2.5, 0.0]);
+        assert_eq!(p.block(0), &[0.0, 0.0, 0.0]);
+        assert_eq!(p.block(1), &[2.5, 0.0]);
+        let back = ParamBlocks::from_flat(p.into_flat(), layout);
+        assert_eq!(back.block(1), &[2.5, 0.0]);
+    }
+
+    #[test]
+    fn split_mut_covers_everything_once() {
+        let layout = BlockLayout::equal(3, 7).unwrap();
+        let mut v = vec![0.0; 7];
+        {
+            let mut parts = layout.split_mut(&mut v);
+            for (b, p) in parts.iter_mut().enumerate() {
+                for x in p.iter_mut() {
+                    *x = b as f64;
+                }
+            }
+        }
+        assert_eq!(v, vec![0.0, 0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn scatter_add_matches_sequential_any_width() {
+        let d = 50;
+        let layout = BlockLayout::equal(7, d).unwrap();
+        let m1 = SparseVec::new(vec![0, 3, 20, 49], vec![1.0, -2.0, 0.5, 4.0]);
+        let m2 = SparseVec::new(vec![3, 21, 22], vec![10.0, 1.0, -1.0]);
+        // Legacy order: per message, add_scaled_into over the whole vector.
+        let mut want = vec![0.1; d];
+        m1.add_scaled_into(0.25, &mut want);
+        m2.add_scaled_into(0.25, &mut want);
+        for threads in [1, 3, 8] {
+            let mut got = vec![0.1; d];
+            scatter_add_blocked(&mut got, &layout, &[&m1, &m2], 0.25, threads);
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+        // Flat layout takes the same code path result-wise.
+        let flat = BlockLayout::flat(d);
+        let mut got = vec![0.1; d];
+        scatter_add_blocked(&mut got, &flat, &[&m1, &m2], 0.25, 4);
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// The per-block kernels compute the same f64s in the same order as
+    /// the plain flat loops — the bit-identity contract every algorithm
+    /// leans on.
+    #[test]
+    fn block_kernels_match_flat_loops_bitwise() {
+        let d = 23;
+        let layout = Arc::new(BlockLayout::equal(5, d).unwrap());
+        let mut rng = crate::util::rng::Rng::seed(8);
+        let base: Vec<f64> = (0..d).map(|_| rng.next_normal()).collect();
+        let other: Vec<f64> = (0..d).map(|_| rng.next_normal()).collect();
+        let p = ParamBlocks::from_flat(base.clone(), layout);
+
+        let mut got = vec![0.0; d];
+        p.sub_from_into(&other, &mut got);
+        for j in 0..d {
+            assert_eq!(got[j].to_bits(), (other[j] - base[j]).to_bits());
+        }
+        p.affine_into(0.37, &other, &mut got);
+        for j in 0..d {
+            assert_eq!(got[j].to_bits(), (base[j] + 0.37 * other[j]).to_bits());
+        }
+    }
+
+    /// run_chunked processes every item exactly once at any width.
+    #[test]
+    fn run_chunked_covers_all_items_once() {
+        for threads in [1usize, 2, 3, 7, 16] {
+            let hits: Vec<std::sync::atomic::AtomicU32> =
+                (0..11).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+            let items: Vec<usize> = (0..11).collect();
+            run_chunked(items, threads, |i| {
+                hits[i].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(
+                    h.load(std::sync::atomic::Ordering::Relaxed),
+                    1,
+                    "item {i} at width {threads}"
+                );
+            }
+        }
+    }
+
+    /// Exercise the genuinely threaded tile path (d above PAR_MIN_DIM):
+    /// result must still match the sequential per-message loop bit for
+    /// bit.
+    #[test]
+    fn scatter_add_threaded_path_matches_sequential() {
+        let d = 1 << 15;
+        let layout = BlockLayout::equal(16, d).unwrap();
+        let mut rng = crate::util::rng::Rng::seed(3);
+        let msgs: Vec<SparseVec> = (0..5)
+            .map(|_| {
+                let idx = rng.sample_indices(d, 400);
+                let val: Vec<f64> = idx.iter().map(|_| rng.next_normal()).collect();
+                SparseVec::new(idx, val)
+            })
+            .collect();
+        let refs: Vec<&SparseVec> = msgs.iter().collect();
+        let mut want = vec![0.5; d];
+        for m in &msgs {
+            m.add_scaled_into(0.2, &mut want);
+        }
+        let mut got = vec![0.5; d];
+        scatter_add_blocked(&mut got, &layout, &refs, 0.2, 4);
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

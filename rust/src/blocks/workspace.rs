@@ -1,0 +1,84 @@
+//! Pooled scratch buffers for the per-round hot path.
+//!
+//! The algorithm state machines need short-lived dense vectors every
+//! round (gradient targets, EF21+'s two branch candidates). Before the
+//! block refactor each of those was a fresh `vec![0.0; d]` per round per
+//! worker; a [`Workspace`] keeps returned buffers and hands them back,
+//! so steady-state rounds perform zero heap allocation. Buffers are
+//! plain `Vec<f64>` — taking one always re-initializes its contents
+//! (zeroed or copied), so reuse can never change a computed value.
+
+/// A small LIFO pool of `Vec<f64>` scratch buffers. Not thread-safe by
+/// design: each worker owns its workspace, exactly like the rest of its
+/// state (the parallel engines move whole workers across threads, never
+/// share them).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f64>>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace { pool: Vec::new() }
+    }
+
+    fn pop(&mut self) -> Vec<f64> {
+        self.pool.pop().unwrap_or_default()
+    }
+
+    /// A buffer of length `d`, all zeros.
+    pub fn take_zeroed(&mut self, d: usize) -> Vec<f64> {
+        let mut b = self.pop();
+        b.clear();
+        b.resize(d, 0.0);
+        b
+    }
+
+    /// A buffer holding a copy of `src`.
+    pub fn take_copy(&mut self, src: &[f64]) -> Vec<f64> {
+        let mut b = self.pop();
+        b.clear();
+        b.extend_from_slice(src);
+        b
+    }
+
+    /// Return a buffer to the pool (contents are irrelevant; the next
+    /// take re-initializes).
+    pub fn put(&mut self, buf: Vec<f64>) {
+        self.pool.push(buf);
+    }
+
+    /// Buffers currently pooled (tests / introspection).
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_recycled_not_reallocated() {
+        let mut ws = Workspace::new();
+        let b = ws.take_zeroed(8);
+        let ptr = b.as_ptr();
+        ws.put(b);
+        assert_eq!(ws.pooled(), 1);
+        let b2 = ws.take_zeroed(8);
+        assert_eq!(b2.as_ptr(), ptr, "same allocation must come back");
+        assert!(b2.iter().all(|&x| x == 0.0));
+        assert_eq!(ws.pooled(), 0);
+    }
+
+    #[test]
+    fn take_reinitializes_contents() {
+        let mut ws = Workspace::new();
+        let mut b = ws.take_zeroed(4);
+        b.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        ws.put(b);
+        assert_eq!(ws.take_copy(&[9.0, 8.0]), vec![9.0, 8.0]);
+        ws.put(vec![5.0; 3]);
+        assert_eq!(ws.take_zeroed(5), vec![0.0; 5]);
+    }
+}

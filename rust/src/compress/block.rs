@@ -1,0 +1,382 @@
+//! Layer-wise (block-partitioned) compression: apply an inner
+//! contractive compressor independently per block of a [`BlockLayout`].
+//!
+//! This is how the paper's DL experiments actually compress (§5,
+//! Fig. 5: Top-k per layer), and the structural prerequisite for the
+//! per-layer/per-block EF21 variants of "EF21 with Bells & Whistles"
+//! (Fatkhullin et al., 2021).
+//!
+//! Theory: if block `b` is compressed with `C_b ∈ B(alpha_b)` then the
+//! composite operator is in `B(min_b alpha_b)` — blocks are orthogonal
+//! coordinate subspaces, so
+//! `||C(x) - x||^2 = Σ_b ||C_b(x_b) - x_b||^2 <= Σ_b (1 - alpha_b)
+//! ||x_b||^2 <= (1 - min_b alpha_b) ||x||^2` — Eq. (3) still holds and
+//! every EF21 stepsize rule applies unchanged with
+//! `alpha = min_b alpha_b` ([`Compressor::alpha`] reports exactly that).
+//!
+//! Bit accounting is exact: the composite cost is the **sum** of the
+//! per-block inner costs (asserted in `tests/integration_blocks.rs`).
+//! Top-k / Rand-k budgets are split across blocks proportionally to
+//! block length (largest-remainder, deterministic; every block keeps at
+//! least one slot — the layer-wise floor of the paper's DL setup).
+
+use super::{Compressed, Compressor, SparseVec};
+use crate::blocks::BlockLayout;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Applies one inner compressor per block, concatenating the per-block
+/// sparse outputs (block order == ascending offsets, so the composite
+/// index stream stays sorted).
+pub struct BlockCompressor {
+    layout: Arc<BlockLayout>,
+    /// One compressor per block, in block order.
+    inner: Vec<Box<dyn Compressor>>,
+    /// Block-parallel fan-out width for the hot path (1 = inline). Only
+    /// deterministic inners are ever fanned out — randomized ones must
+    /// consume the worker RNG stream in block order.
+    threads: usize,
+    /// Base spec name ("top64", ...) used for telemetry keys.
+    base: String,
+    /// Per-block telemetry handles (`compress.<base>.<block>.ns` /
+    /// `.sparsity`), resolved once on the first *enabled* apply.
+    meters: Vec<std::sync::OnceLock<(crate::telemetry::Histogram, crate::telemetry::Gauge)>>,
+}
+
+/// Split a total Top-k/Rand-k budget across blocks proportionally to
+/// block length: largest-remainder apportionment with a floor of one
+/// slot per block, clamped to each block's dimension. Deterministic
+/// (ties broken by block index) and exact:
+/// `sum(budgets) == k_total.clamp(n_blocks, d)`.
+pub fn split_budget(k_total: usize, layout: &BlockLayout) -> Vec<usize> {
+    let d = layout.d();
+    let n = layout.n_blocks();
+    let k_total = k_total.clamp(n, d);
+    // Start from the floor of the proportional share, but at least 1.
+    let mut budgets: Vec<usize> = layout
+        .specs()
+        .iter()
+        .map(|s| ((k_total * s.len) / d).clamp(1, s.len))
+        .collect();
+    let mut assigned: usize = budgets.iter().sum();
+    // Distribute the remainder by largest fractional share, then index.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&b| {
+        let s = layout.spec(b);
+        // fractional part of k_total * len / d, scaled to an integer key;
+        // negative for descending order.
+        let rem = (k_total * s.len) % d;
+        (std::cmp::Reverse(rem), b)
+    });
+    let mut i = 0;
+    while assigned < k_total {
+        let b = order[i % n];
+        if budgets[b] < layout.spec(b).len {
+            budgets[b] += 1;
+            assigned += 1;
+        }
+        i += 1;
+    }
+    // Floors can also overshoot (many tiny blocks): trim from the
+    // largest budgets, largest block last to keep proportionality.
+    let mut j = n;
+    while assigned > k_total {
+        j -= 1;
+        let b = order[j % n];
+        if budgets[b] > 1 {
+            budgets[b] -= 1;
+            assigned -= 1;
+        }
+        if j == 0 {
+            j = n;
+        }
+    }
+    debug_assert_eq!(budgets.iter().sum::<usize>(), k_total);
+    budgets
+}
+
+impl BlockCompressor {
+    /// One inner compressor per block from a base spec string. `top<k>` /
+    /// `rand<k>` budgets are [`split_budget`] across blocks; `sign` /
+    /// `identity` apply per block as-is. `threads` bounds the
+    /// block-parallel fan-out of [`Compressor::compress`] (deterministic
+    /// inners only).
+    pub fn from_spec(
+        spec: &str,
+        layout: Arc<BlockLayout>,
+        threads: usize,
+    ) -> anyhow::Result<BlockCompressor> {
+        let s = spec.trim().to_ascii_lowercase();
+        let n = layout.n_blocks();
+        let make_k = |k: usize| -> Vec<usize> { split_budget(k, &layout) };
+        let inner: Vec<Box<dyn Compressor>> = if let Some(k) = s.strip_prefix("top") {
+            let k: usize = k.parse()?;
+            anyhow::ensure!(k >= 1, "top-k needs k >= 1");
+            make_k(k)
+                .into_iter()
+                .map(|kb| Box::new(super::TopK::new(kb)) as Box<dyn Compressor>)
+                .collect()
+        } else if let Some(k) = s.strip_prefix("rand") {
+            let k: usize = k.parse()?;
+            anyhow::ensure!(k >= 1, "rand-k needs k >= 1");
+            make_k(k)
+                .into_iter()
+                .map(|kb| Box::new(super::RandK::new(kb)) as Box<dyn Compressor>)
+                .collect()
+        } else if s == "sign" {
+            (0..n).map(|_| Box::new(super::ScaledSign) as Box<dyn Compressor>).collect()
+        } else if s == "identity" || s == "none" {
+            (0..n).map(|_| Box::new(super::Identity) as Box<dyn Compressor>).collect()
+        } else {
+            anyhow::bail!("unknown blocked compressor spec '{spec}' (top<k>|rand<k>|sign|identity)")
+        };
+        Ok(BlockCompressor::new(s, layout, inner, threads))
+    }
+
+    /// Assemble from explicit per-block compressors (one per block).
+    pub fn new(
+        base: impl Into<String>,
+        layout: Arc<BlockLayout>,
+        inner: Vec<Box<dyn Compressor>>,
+        threads: usize,
+    ) -> BlockCompressor {
+        assert_eq!(inner.len(), layout.n_blocks(), "one inner compressor per block");
+        let meters = (0..layout.n_blocks()).map(|_| std::sync::OnceLock::new()).collect();
+        BlockCompressor { layout, inner, threads: threads.max(1), base: base.into(), meters }
+    }
+
+    pub fn layout(&self) -> &Arc<BlockLayout> {
+        &self.layout
+    }
+
+    /// The per-block contraction parameters `alpha_b`.
+    pub fn block_alphas(&self) -> Vec<f64> {
+        self.layout
+            .specs()
+            .iter()
+            .zip(&self.inner)
+            .map(|(s, c)| c.alpha(s.len))
+            .collect()
+    }
+
+    /// Compress one block (no telemetry), returning the *globally*
+    /// indexed sparse output.
+    fn compress_block(&self, b: usize, v: &[f64], rng: &mut Rng) -> Compressed {
+        let spec = self.layout.spec(b);
+        let mut out = self.inner[b].compress(self.layout.slice(b, v), rng);
+        for i in out.sparse.idx.iter_mut() {
+            *i += spec.offset as u32;
+        }
+        out
+    }
+
+    fn record_block(&self, b: usize, t0: Option<std::time::Instant>, out: &Compressed) {
+        if let Some(t0) = t0 {
+            let (ns, sparsity) = self.meters[b].get_or_init(|| {
+                let name = &self.layout.spec(b).name;
+                (
+                    crate::telemetry::histogram(&format!("compress.{}.{name}.ns", self.base)),
+                    crate::telemetry::gauge(&format!("compress.{}.{name}.sparsity", self.base)),
+                )
+            });
+            ns.record(t0.elapsed().as_nanos() as u64);
+            sparsity.set(out.sparse.nnz() as f64 / self.layout.spec(b).len.max(1) as f64);
+        }
+    }
+
+    /// Concatenate per-block outputs (already globally indexed, in block
+    /// order) into one message with summed bits.
+    fn concat(parts: Vec<Compressed>) -> Compressed {
+        let nnz: usize = parts.iter().map(|p| p.sparse.nnz()).sum();
+        let mut idx = Vec::with_capacity(nnz);
+        let mut val = Vec::with_capacity(nnz);
+        let mut bits = 0u64;
+        for p in parts {
+            idx.extend(p.sparse.idx);
+            val.extend(p.sparse.val);
+            bits += p.bits;
+        }
+        Compressed { sparse: SparseVec::new(idx, val), bits }
+    }
+}
+
+impl Compressor for BlockCompressor {
+    fn name(&self) -> String {
+        format!("{}/b{}", self.base, self.layout.n_blocks())
+    }
+
+    /// `alpha = min_b alpha_b` — the contraction Eq. (3) certifies for
+    /// the composite operator (see module docs).
+    fn alpha(&self, _d: usize) -> f64 {
+        self.block_alphas().into_iter().fold(1.0, f64::min)
+    }
+
+    fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
+        assert_eq!(v.len(), self.layout.d(), "input does not match block layout");
+        let n = self.layout.n_blocks();
+        let fan_out = self.threads.min(n);
+        if fan_out > 1
+            && self.is_deterministic()
+            && self.layout.d() >= crate::blocks::PAR_MIN_DIM
+        {
+            // Worker × block tiling, compression half: blocks are
+            // independent for deterministic inners (rng unused), and
+            // results land in per-block slots, so the reassembled output
+            // is identical to the inline path at any width. Shares the
+            // chunked-scope harness (and threshold) with the
+            // aggregation half.
+            let mut parts: Vec<Option<Compressed>> = (0..n).map(|_| None).collect();
+            let items: Vec<(usize, &mut Option<Compressed>)> =
+                parts.iter_mut().enumerate().collect();
+            crate::blocks::run_chunked(items, fan_out, |(b, slot)| {
+                let mut rng = Rng::seed(0); // unused: deterministic inners
+                let t0 = crate::telemetry::maybe_now();
+                let out = self.compress_block(b, v, &mut rng);
+                self.record_block(b, t0, &out);
+                *slot = Some(out);
+            });
+            return Self::concat(parts.into_iter().map(|p| p.expect("block compressed")).collect());
+        }
+        // Inline path: block order, sharing the caller's RNG stream (the
+        // order randomized inners consume it is part of the trajectory).
+        let parts: Vec<Compressed> = (0..n)
+            .map(|b| {
+                let t0 = crate::telemetry::maybe_now();
+                let out = self.compress_block(b, v, rng);
+                self.record_block(b, t0, &out);
+                out
+            })
+            .collect();
+        Self::concat(parts)
+    }
+
+    fn is_deterministic(&self) -> bool {
+        self.inner.iter().all(|c| c.is_deterministic())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{for_all_seeds, random_vec};
+
+    fn layout(n: usize, d: usize) -> Arc<BlockLayout> {
+        Arc::new(BlockLayout::equal(n, d).unwrap())
+    }
+
+    #[test]
+    fn budget_split_is_exact_and_proportional() {
+        let l = BlockLayout::from_named(&[
+            ("a".into(), 60),
+            ("b".into(), 30),
+            ("c".into(), 10),
+        ])
+        .unwrap();
+        let b = split_budget(10, &l);
+        assert_eq!(b.iter().sum::<usize>(), 10);
+        assert_eq!(b, vec![6, 3, 1]);
+        // Floor of one slot per block even when k < n_blocks.
+        let tiny = split_budget(1, &l);
+        assert_eq!(tiny, vec![1, 1, 1]);
+        // Clamped to d when k > d.
+        let full = split_budget(1000, &l);
+        assert_eq!(full, vec![60, 30, 10]);
+    }
+
+    #[test]
+    fn budget_split_never_exceeds_block_len() {
+        for_all_seeds(20, |rng| {
+            let n = 1 + rng.next_below(6);
+            let d = n + rng.next_below(80);
+            let l = BlockLayout::equal(n, d).unwrap();
+            let k = 1 + rng.next_below(d + 4);
+            let b = split_budget(k, &l);
+            assert_eq!(b.iter().sum::<usize>(), k.clamp(n, d));
+            for (bi, s) in b.iter().zip(l.specs()) {
+                assert!(*bi >= 1 && *bi <= s.len);
+            }
+        });
+    }
+
+    #[test]
+    fn flat_block_topk_is_bit_identical_to_plain_topk() {
+        for_all_seeds(15, |rng| {
+            let d = 2 + rng.next_below(60);
+            let k = 1 + rng.next_below(d);
+            let v = random_vec(rng, d, 2.0);
+            let plain = super::super::TopK::new(k).compress(&v, rng);
+            let blocked = BlockCompressor::from_spec(
+                &format!("top{k}"),
+                Arc::new(BlockLayout::flat(d)),
+                1,
+            )
+            .unwrap()
+            .compress(&v, rng);
+            assert_eq!(plain.sparse, blocked.sparse);
+            assert_eq!(plain.bits, blocked.bits);
+        });
+    }
+
+    #[test]
+    fn bits_are_sum_of_per_block_costs() {
+        let d = 24;
+        let l = layout(3, d);
+        let c = BlockCompressor::from_spec("top6", l.clone(), 1).unwrap();
+        let mut rng = Rng::seed(4);
+        let v = random_vec(&mut rng, d, 1.0);
+        let out = c.compress(&v, &mut rng);
+        let mut want_bits = 0;
+        for b in 0..3 {
+            want_bits += c.inner[b].compress(l.slice(b, &v), &mut rng).bits;
+        }
+        assert_eq!(out.bits, want_bits);
+        assert_eq!(out.sparse.nnz(), 6);
+    }
+
+    #[test]
+    fn alpha_is_min_over_blocks() {
+        // 3 blocks of 8, top6 -> 2 per block -> alpha_b = 2/8 each.
+        let c = BlockCompressor::from_spec("top6", layout(3, 24), 1).unwrap();
+        assert_eq!(c.block_alphas(), vec![0.25, 0.25, 0.25]);
+        assert!((c.alpha(24) - 0.25).abs() < 1e-15);
+        // Uneven budgets: top4 over 3 blocks of 8 -> [2, 1, 1].
+        let c = BlockCompressor::from_spec("top4", layout(3, 24), 1).unwrap();
+        assert_eq!(split_budget(4, &BlockLayout::equal(3, 24).unwrap()), vec![2, 1, 1]);
+        assert!((c.alpha(24) - 0.125).abs() < 1e-15);
+    }
+
+    #[test]
+    fn parallel_fanout_matches_inline() {
+        let d = 1 << 16;
+        let l = layout(8, d);
+        let mut rng = Rng::seed(7);
+        let v = random_vec(&mut rng, d, 3.0);
+        let seq = BlockCompressor::from_spec("top128", l.clone(), 1).unwrap();
+        let par = BlockCompressor::from_spec("top128", l, 4).unwrap();
+        let a = seq.compress(&v, &mut rng);
+        let b = par.compress(&v, &mut rng);
+        assert_eq!(a.sparse, b.sparse);
+        assert_eq!(a.bits, b.bits);
+    }
+
+    #[test]
+    fn randomized_inner_stays_inline_and_seed_stable() {
+        let d = 40;
+        let c = BlockCompressor::from_spec("rand8", layout(4, d), 8).unwrap();
+        assert!(!c.is_deterministic());
+        let mut rng1 = Rng::seed(9);
+        let mut rng2 = Rng::seed(9);
+        let v = random_vec(&mut Rng::seed(1), d, 1.0);
+        let a = c.compress(&v, &mut rng1);
+        let b = c.compress(&v, &mut rng2);
+        assert_eq!(a.sparse, b.sparse, "same seed must give the same subset");
+        assert_eq!(a.sparse.nnz(), 8);
+    }
+
+    #[test]
+    fn rejects_unknown_spec_and_reports_name() {
+        assert!(BlockCompressor::from_spec("bogus", layout(2, 8), 1).is_err());
+        let c = BlockCompressor::from_spec("top4", layout(2, 8), 1).unwrap();
+        assert_eq!(c.name(), "top4/b2");
+    }
+}

@@ -11,6 +11,7 @@
 //! a [`SparseVec`]) plus the exact number of bits a real wire transfer
 //! would cost — the paper's x-axis (`bits/n`) is regenerated from these.
 
+pub mod block;
 pub mod identity;
 pub mod markov;
 pub mod randk;
@@ -19,6 +20,7 @@ pub mod sparse;
 pub mod topk;
 pub mod unbiased;
 
+pub use block::{split_budget, BlockCompressor};
 pub use identity::Identity;
 pub use markov::Markov;
 pub use randk::RandK;
@@ -149,6 +151,24 @@ pub fn from_spec(spec: &str) -> anyhow::Result<Box<dyn Compressor>> {
         return Ok(Instrumented::wrap(Box::new(RandK::new(k))));
     }
     anyhow::bail!("unknown compressor spec '{spec}' (try top1, rand8, sign, identity)")
+}
+
+/// [`from_spec`] against a block layout: a flat (single-block) layout
+/// takes the exact legacy path — same operator object, same telemetry
+/// keys, bit-identical output — while a real partition builds a
+/// telemetry-instrumented [`BlockCompressor`] (layer-wise budgets,
+/// `alpha = min_b alpha_b`, per-block `compress.<spec>.<block>.*` keys).
+/// `threads` bounds the block-parallel fan-out of the hot path.
+pub fn from_spec_blocked(
+    spec: &str,
+    layout: &std::sync::Arc<crate::blocks::BlockLayout>,
+    threads: usize,
+) -> anyhow::Result<Box<dyn Compressor>> {
+    if layout.is_flat() {
+        return from_spec(spec);
+    }
+    let c = BlockCompressor::from_spec(spec, layout.clone(), threads)?;
+    Ok(Instrumented::wrap(Box::new(c)))
 }
 
 /// Empirical check of the contraction property (3) for a single input:

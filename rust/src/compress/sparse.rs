@@ -96,6 +96,16 @@ impl SparseVec {
         self.nnz() as u64 * (VALUE_BITS + INDEX_BITS)
     }
 
+    /// Entry range (into `idx`/`val`) whose coordinates fall in
+    /// `[lo, hi)` — binary search over the sorted index stream. The one
+    /// block-windowing primitive shared by the blocked aggregation tile
+    /// and the per-block uplink splitter.
+    pub fn entry_range(&self, lo: u32, hi: u32) -> std::ops::Range<usize> {
+        let a = self.idx.partition_point(|&i| i < lo);
+        let b = self.idx.partition_point(|&i| i < hi);
+        a..b
+    }
+
     /// ||self||^2
     pub fn norm2_sq(&self) -> f64 {
         self.val.iter().map(|v| v * v).sum()
@@ -137,6 +147,16 @@ mod tests {
         let s = SparseVec::new(vec![0, 2, 9], vec![3.0, 4.0, 0.0]);
         assert_eq!(s.standard_bits(), 3 * 64);
         assert!((s.norm2_sq() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entry_range_windows_sorted_indices() {
+        let s = SparseVec::new(vec![2, 5, 9, 17], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.entry_range(0, 6), 0..2);
+        assert_eq!(s.entry_range(5, 10), 1..3);
+        assert_eq!(s.entry_range(10, 17), 3..3); // empty window
+        assert_eq!(s.entry_range(0, 100), 0..4);
+        assert_eq!(SparseVec::empty().entry_range(0, 5), 0..0);
     }
 
     #[test]

@@ -56,6 +56,85 @@ impl Threads {
     }
 }
 
+/// `--blocks` spec: how the parameter space is partitioned for
+/// layer-wise compression, per-block algorithm state, and delta
+/// broadcast (see `blocks::BlockLayout`).
+///
+/// `flat` (the default) is the exact legacy single-block path. `auto`
+/// resolves to the oracle's natural layout — flat for logreg/lstsq, the
+/// real per-layer shapes for the DL transformer. `<n>` splits into `n`
+/// balanced contiguous blocks; `name:len,...` gives an explicit named
+/// partition.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BlocksSpec {
+    Flat,
+    Auto,
+    Count(usize),
+    Named(String),
+}
+
+impl Default for BlocksSpec {
+    fn default() -> Self {
+        BlocksSpec::Flat
+    }
+}
+
+impl BlocksSpec {
+    pub fn parse(s: &str) -> Result<BlocksSpec> {
+        let t = s.trim();
+        // Keywords compare case-insensitively; named partitions keep the
+        // user's spelling (block names flow into telemetry keys).
+        if t.is_empty() || t.eq_ignore_ascii_case("flat") || t == "1" {
+            return Ok(BlocksSpec::Flat);
+        }
+        if t.eq_ignore_ascii_case("auto") {
+            return Ok(BlocksSpec::Auto);
+        }
+        if let Ok(n) = t.parse::<usize>() {
+            anyhow::ensure!(n >= 1, "--blocks 0: need at least one block");
+            return Ok(BlocksSpec::Count(n));
+        }
+        anyhow::ensure!(
+            t.contains(':'),
+            "--blocks {s}: expected flat, auto, a block count, or name:len,..."
+        );
+        Ok(BlocksSpec::Named(t.to_string()))
+    }
+
+    /// Read `--blocks` from parsed args (absent = `flat`).
+    pub fn from_args(args: &cli::Args) -> Result<BlocksSpec> {
+        match args.get_str("blocks") {
+            Some(s) => BlocksSpec::parse(s),
+            None => Ok(BlocksSpec::Flat),
+        }
+    }
+
+    /// Resolve to a concrete layout for dimension `d`; `auto` takes the
+    /// oracle-provided `natural` layout (flat when the problem has no
+    /// structure).
+    pub fn resolve(
+        &self,
+        d: usize,
+        natural: Option<&crate::blocks::BlockLayout>,
+    ) -> Result<std::sync::Arc<crate::blocks::BlockLayout>> {
+        use crate::blocks::BlockLayout;
+        let layout = match self {
+            BlocksSpec::Flat => BlockLayout::flat(d),
+            BlocksSpec::Auto => match natural {
+                Some(l) => {
+                    anyhow::ensure!(l.d() == d, "natural layout d={} vs problem d={d}", l.d());
+                    l.clone()
+                }
+                None => BlockLayout::flat(d),
+            },
+            BlocksSpec::Count(1) => BlockLayout::flat(d),
+            BlocksSpec::Count(n) => BlockLayout::equal(*n, d)?,
+            BlocksSpec::Named(s) => BlockLayout::parse(s, d)?,
+        };
+        Ok(std::sync::Arc::new(layout))
+    }
+}
+
 /// One fully-specified training run.
 #[derive(Clone, Debug)]
 pub struct RunSpec {
@@ -82,6 +161,9 @@ pub struct RunSpec {
     /// Pool width for the parallel runner / trial scheduler
     /// (`--threads n|auto`; `Fixed(1)` = exact legacy sequential path).
     pub threads: Threads,
+    /// Parameter-space partition (`--blocks flat|auto|<n>|name:len,...`;
+    /// `Flat` = exact legacy single-block path).
+    pub blocks: BlocksSpec,
 }
 
 impl Default for RunSpec {
@@ -99,6 +181,7 @@ impl Default for RunSpec {
             record_every: 1,
             telemetry: "off".into(),
             threads: Threads::Auto,
+            blocks: BlocksSpec::Flat,
         }
     }
 }
@@ -130,6 +213,7 @@ impl RunSpec {
             s.telemetry = t.to_string();
         }
         s.threads = Threads::from_args(args)?;
+        s.blocks = BlocksSpec::from_args(args)?;
         Ok(s)
     }
 
@@ -180,6 +264,39 @@ mod tests {
         let args = cli::Args::from_vec(vec!["--threads".into(), "2".into()]);
         let s = RunSpec::from_args(&args).unwrap();
         assert_eq!(s.threads, Threads::Fixed(2));
+    }
+
+    #[test]
+    fn blocks_spec_parses_and_resolves() {
+        assert_eq!(BlocksSpec::parse("flat").unwrap(), BlocksSpec::Flat);
+        assert_eq!(BlocksSpec::parse("1").unwrap(), BlocksSpec::Flat);
+        assert_eq!(BlocksSpec::parse("auto").unwrap(), BlocksSpec::Auto);
+        assert_eq!(BlocksSpec::parse("8").unwrap(), BlocksSpec::Count(8));
+        assert!(matches!(BlocksSpec::parse("a:3,b:5").unwrap(), BlocksSpec::Named(_)));
+        // User-facing block names keep their spelling (telemetry keys).
+        assert_eq!(
+            BlocksSpec::parse("Emb:6,Head:2").unwrap(),
+            BlocksSpec::Named("Emb:6,Head:2".into())
+        );
+        assert!(BlocksSpec::parse("0").is_err());
+        assert!(BlocksSpec::parse("wat").is_err());
+
+        assert!(BlocksSpec::Flat.resolve(10, None).unwrap().is_flat());
+        // Auto without a natural layout degenerates to flat.
+        assert!(BlocksSpec::Auto.resolve(10, None).unwrap().is_flat());
+        let natural = crate::blocks::BlockLayout::equal(5, 10).unwrap();
+        assert_eq!(BlocksSpec::Auto.resolve(10, Some(&natural)).unwrap().n_blocks(), 5);
+        assert_eq!(BlocksSpec::Count(2).resolve(10, None).unwrap().n_blocks(), 2);
+        assert_eq!(
+            BlocksSpec::Named("a:3,b:7".into()).resolve(10, None).unwrap().n_blocks(),
+            2
+        );
+        assert!(BlocksSpec::Named("a:3,b:5".into()).resolve(10, None).is_err());
+        assert!(BlocksSpec::Count(11).resolve(10, None).is_err());
+
+        let args = cli::Args::from_vec(vec!["--blocks".into(), "4".into()]);
+        let s = RunSpec::from_args(&args).unwrap();
+        assert_eq!(s.blocks, BlocksSpec::Count(4));
     }
 
     #[test]

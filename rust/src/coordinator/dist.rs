@@ -6,13 +6,29 @@
 //! algorithms (asserted in `rust/tests/integration_transport.rs`): workers
 //! are pure state machines, the master absorbs messages in worker order,
 //! and all randomness is derived from per-worker seeds.
+//!
+//! With a blocked layout ([`Broadcast::Delta`]) the master broadcasts
+//! [`Frame::ModelDelta`] frames carrying only the blocks whose f32 image
+//! moved since the last send (falling back to a dense [`Frame::Model`]
+//! when that would be cheaper), and workers patch a cached model copy.
+//! An unchanged block's f32 image equals the cached one by definition,
+//! so the round inputs — and therefore the trajectory — are identical
+//! to dense broadcast; only the wire cost changes, and it is finally
+//! metered (`transport.downlink.bits` / `.frame.bytes`) next to the
+//! uplink. Uplinks are split into block-tagged [`Frame::UpBlock`] frames
+//! (one per block, reassembled in block order by the master) whenever
+//! the payload uses the standard sparse encoding.
 
 use crate::algo::{MasterNode, WireMsg, WorkerNode};
+use crate::blocks::BlockLayout;
+use crate::compress::{Compressed, SparseVec};
 use crate::metrics::{History, RoundRecord};
 use crate::telemetry::{self, keys};
-use crate::transport::codec::{decode, encode, Frame};
+use crate::transport::codec::{decode, encode, BlockPatch, Frame};
+use crate::transport::downlink::DownlinkMeter;
 use crate::transport::{local, tcp, Conn};
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
+use std::sync::Arc;
 
 /// Which transport carries the protocol.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -23,6 +39,16 @@ pub enum TransportKind {
     Tcp,
 }
 
+/// How the master ships the model each round.
+#[derive(Clone, Debug)]
+pub enum Broadcast {
+    /// Dense `Model` frame every round (the legacy path).
+    Dense,
+    /// Block-delta frames over this layout: only blocks past the
+    /// f32-quantization floor travel; uplinks are block-tagged.
+    Delta(Arc<BlockLayout>),
+}
+
 /// Outcome of a distributed run.
 pub struct DistOutcome {
     pub history: History,
@@ -30,53 +56,183 @@ pub struct DistOutcome {
     pub final_x: Vec<f64>,
     /// Total uplink payload bytes actually sent over the transport.
     pub uplink_frame_bytes: u64,
+    /// Total downlink payload bytes actually sent over the transport
+    /// (sum over per-worker copies; the *logical* broadcast cost is
+    /// `history.downlink_bits`).
+    pub downlink_frame_bytes: u64,
 }
 
-/// Worker event loop: first Model frame -> init, then Model -> round,
-/// until Stop.
-fn worker_loop(mut worker: Box<dyn WorkerNode>, conn: &mut dyn Conn) -> Result<()> {
+/// Split a standard-encoded sparse message into per-block frames
+/// (global indices kept; per-block bits are exact because the standard
+/// cost is additive over entries).
+fn split_msg_by_blocks(c: &Compressed, layout: &BlockLayout, loss: f64) -> Vec<Frame> {
+    let n_blocks = layout.n_blocks() as u32;
+    layout
+        .specs()
+        .iter()
+        .enumerate()
+        .map(|(b, spec)| {
+            let r = c.sparse.entry_range(spec.offset as u32, (spec.offset + spec.len) as u32);
+            let sub =
+                SparseVec::new(c.sparse.idx[r.clone()].to_vec(), c.sparse.val[r].to_vec());
+            let bits = sub.standard_bits();
+            Frame::UpBlock {
+                block: b as u32,
+                n_blocks,
+                msg: WireMsg::Sparse(Compressed { sparse: sub, bits }),
+                loss,
+            }
+        })
+        .collect()
+}
+
+/// Worker event loop: first broadcast -> init, later broadcasts ->
+/// round, until Stop. `Model` frames replace the cached model;
+/// `ModelDelta` frames patch it in place. With `up_blocks` set, sparse
+/// standard-encoded uplinks are split into per-block `UpBlock` frames.
+fn worker_loop(
+    mut worker: Box<dyn WorkerNode>,
+    conn: &mut dyn Conn,
+    up_blocks: Option<Arc<BlockLayout>>,
+) -> Result<()> {
     let mut first = true;
+    let mut cached: Option<Vec<f64>> = None;
     loop {
-        let frame = decode(&conn.recv()?)?;
-        match frame {
-            Frame::Model(x) => {
-                let msg = if first {
-                    first = false;
-                    worker.init(&x)
-                } else {
-                    worker.round(&x)
-                };
-                let up = Frame::Up { msg, loss: worker.last_loss() };
-                conn.send(&encode(&up))?;
+        match decode(&conn.recv()?)? {
+            Frame::Model(x) => cached = Some(x),
+            Frame::ModelDelta(patches) => {
+                let x = cached
+                    .as_mut()
+                    .context("worker got ModelDelta before any full Model frame")?;
+                for p in patches {
+                    let off = p.offset as usize;
+                    ensure!(
+                        off + p.vals.len() <= x.len(),
+                        "ModelDelta patch [{off}, {}) exceeds model dim {}",
+                        off + p.vals.len(),
+                        x.len()
+                    );
+                    x[off..off + p.vals.len()].copy_from_slice(&p.vals);
+                }
             }
             Frame::Stop => return Ok(()),
-            Frame::Up { .. } => anyhow::bail!("worker received Up frame"),
+            Frame::Up { .. } | Frame::UpBlock { .. } => bail!("worker received an uplink frame"),
+        }
+        let x = cached.as_ref().expect("model cached after broadcast");
+        let msg = if first {
+            first = false;
+            worker.init(x)
+        } else {
+            worker.round(x)
+        };
+        let loss = worker.last_loss();
+        let splittable = match (&up_blocks, &msg) {
+            // Only the standard sparse encoding has a per-entry-additive
+            // cost; anything else (sign, dense-init, tagged EF21+) goes
+            // up whole.
+            (Some(_), WireMsg::Sparse(c)) => c.bits == c.sparse.standard_bits(),
+            _ => false,
+        };
+        if splittable {
+            let layout = up_blocks.as_ref().expect("splittable implies layout");
+            let WireMsg::Sparse(c) = &msg else { unreachable!() };
+            for frame in split_msg_by_blocks(c, layout, loss) {
+                conn.send(&encode(&frame))?;
+            }
+        } else {
+            conn.send(&encode(&Frame::Up { msg, loss }))?;
         }
     }
 }
 
-fn gather(conns: &mut [Box<dyn Conn>]) -> Result<(Vec<WireMsg>, Vec<f64>, u64)> {
+/// Reassemble one worker's uplink: either a single `Up` frame or a run
+/// of `UpBlock` frames (block order), concatenated back into one
+/// message with summed bits.
+fn recv_worker_msg(c: &mut dyn Conn) -> Result<(WireMsg, f64, u64)> {
+    let raw = c.recv()?;
+    let mut bytes = raw.len() as u64;
+    match decode(&raw)? {
+        Frame::Up { msg, loss } => Ok((msg, loss, bytes)),
+        Frame::UpBlock { block, n_blocks, msg, loss } => {
+            ensure!(block == 0, "blocked uplink must start at block 0, got {block}");
+            let mut idx: Vec<u32> = Vec::new();
+            let mut val = Vec::new();
+            let mut bits = 0u64;
+            let mut absorb = |m: WireMsg| -> Result<()> {
+                match m {
+                    WireMsg::Sparse(c) => {
+                        // Each frame's indices are strictly increasing
+                        // (decode enforces it); require the blocks to be
+                        // globally increasing too, so a malformed peer
+                        // can never smuggle an unsorted/overlapping
+                        // concatenation past the codec checks into the
+                        // master's absorb.
+                        if let (Some(&prev), Some(&first)) = (idx.last(), c.sparse.idx.first()) {
+                            ensure!(
+                                first > prev,
+                                "UpBlock indices regress across blocks ({first} after {prev})"
+                            );
+                        }
+                        idx.extend(c.sparse.idx);
+                        val.extend(c.sparse.val);
+                        bits += c.bits;
+                        Ok(())
+                    }
+                    WireMsg::Tagged { .. } => bail!("tagged message inside UpBlock"),
+                }
+            };
+            absorb(msg)?;
+            for want in 1..n_blocks {
+                let raw = c.recv()?;
+                bytes += raw.len() as u64;
+                match decode(&raw)? {
+                    Frame::UpBlock { block, n_blocks: nb, msg, .. } => {
+                        ensure!(
+                            block == want && nb == n_blocks,
+                            "uplink block {block}/{nb}, expected {want}/{n_blocks}"
+                        );
+                        absorb(msg)?;
+                    }
+                    _ => bail!("expected UpBlock {want}/{n_blocks}"),
+                }
+            }
+            // Blocks are contiguous ascending ranges, so the block-order
+            // concatenation is globally sorted — the reassembled message
+            // equals the worker's original one, bits included.
+            let sparse = SparseVec::new(idx, val);
+            Ok((WireMsg::Sparse(Compressed { sparse, bits }), loss, bytes))
+        }
+        _ => bail!("master expected an uplink frame"),
+    }
+}
+
+fn gather(conns: &mut [Box<dyn Conn>], d: usize) -> Result<(Vec<WireMsg>, Vec<f64>, u64)> {
     let mut msgs = Vec::with_capacity(conns.len());
     let mut losses = Vec::with_capacity(conns.len());
     let mut bytes = 0u64;
     for c in conns.iter_mut() {
-        let raw = c.recv()?;
-        bytes += raw.len() as u64;
-        match decode(&raw)? {
-            Frame::Up { msg, loss } => {
-                msgs.push(msg);
-                losses.push(loss);
-            }
-            _ => anyhow::bail!("master expected Up frame"),
+        let (msg, loss, b) = recv_worker_msg(c.as_mut())?;
+        // Indices are sorted (decode + reassembly enforce it), so one
+        // upper-bound check keeps a malformed peer from panicking the
+        // master's absorb with an out-of-range coordinate.
+        if let Some(&last) = msg.payload().sparse.idx.last() {
+            ensure!(
+                (last as usize) < d,
+                "uplink index {last} out of range for model dim {d}"
+            );
         }
+        msgs.push(msg);
+        losses.push(loss);
+        bytes += b;
     }
     Ok((msgs, losses, bytes))
 }
 
 /// Run the protocol with `make_worker(i)` constructed inside worker thread
 /// `i` (so workers never need to be `Send`-constructed on the main thread).
+/// Dense broadcast — see [`run_distributed_opts`] for block-delta mode.
 pub fn run_distributed<F>(
-    mut master: Box<dyn MasterNode>,
+    master: Box<dyn MasterNode>,
     n_workers: usize,
     make_worker: F,
     rounds: usize,
@@ -86,8 +242,37 @@ pub fn run_distributed<F>(
 where
     F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
 {
+    run_distributed_opts(master, n_workers, make_worker, rounds, kind, label, Broadcast::Dense)
+}
+
+/// [`run_distributed`] with an explicit broadcast mode.
+pub fn run_distributed_opts<F>(
+    mut master: Box<dyn MasterNode>,
+    n_workers: usize,
+    make_worker: F,
+    rounds: usize,
+    kind: TransportKind,
+    label: &str,
+    broadcast: Broadcast,
+) -> Result<DistOutcome>
+where
+    F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
+{
     assert!(n_workers >= 1);
     let make_worker = std::sync::Arc::new(make_worker);
+    let (mut downlink, up_blocks) = match &broadcast {
+        Broadcast::Dense => (DownlinkMeter::dense(master.x().len()), None),
+        Broadcast::Delta(layout) => {
+            ensure!(
+                layout.d() == master.x().len(),
+                "broadcast layout d={} vs model d={}",
+                layout.d(),
+                master.x().len()
+            );
+            (DownlinkMeter::delta(layout.clone()), Some(layout.clone()))
+        }
+    };
+    telemetry::gauge(keys::BLOCKS).set(downlink.layout().n_blocks() as f64);
 
     // Wire up transports and spawn worker threads.
     let mut master_conns: Vec<Box<dyn Conn>> = Vec::with_capacity(n_workers);
@@ -98,9 +283,10 @@ where
                 let (m_end, mut w_end) = local::pair();
                 master_conns.push(Box::new(m_end));
                 let mk = make_worker.clone();
+                let blocks = up_blocks.clone();
                 handles.push(std::thread::spawn(move || {
                     let worker = mk(i);
-                    worker_loop(worker, &mut w_end)
+                    worker_loop(worker, &mut w_end, blocks)
                 }));
             }
         }
@@ -108,6 +294,7 @@ where
             let (port, acceptor) = tcp::listen_local(n_workers)?;
             for i in 0..n_workers {
                 let mk = make_worker.clone();
+                let blocks = up_blocks.clone();
                 handles.push(std::thread::spawn(move || {
                     // Stagger connects so accept order == worker order.
                     std::thread::sleep(std::time::Duration::from_millis(5 * i as u64));
@@ -119,7 +306,7 @@ where
                     // Identify ourselves first so the master can order us.
                     conn.send(&(i as u32).to_le_bytes())?;
                     let worker = mk(i);
-                    worker_loop(worker, &mut conn)
+                    worker_loop(worker, &mut conn, blocks)
                 }));
             }
             // Order accepted conns by the announced worker id.
@@ -127,8 +314,18 @@ where
             let mut ordered: Vec<Option<tcp::TcpConn>> = (0..n_workers).map(|_| None).collect();
             for mut c in conns {
                 let id_bytes = c.recv()?;
-                let id = u32::from_le_bytes(id_bytes[..4].try_into().unwrap()) as usize;
-                anyhow::ensure!(id < n_workers, "bad worker id {id}");
+                // Length-checked decode: a malformed hello must surface
+                // as an error, not an out-of-bounds slice panic.
+                ensure!(
+                    id_bytes.len() == 4,
+                    "bad worker-id handshake frame: {} bytes (expected 4)",
+                    id_bytes.len()
+                );
+                let id =
+                    u32::from_le_bytes(id_bytes[..].try_into().expect("length checked above"))
+                        as usize;
+                ensure!(id < n_workers, "bad worker id {id}");
+                ensure!(ordered[id].is_none(), "duplicate worker id {id}");
                 ordered[id] = Some(c);
             }
             for c in ordered {
@@ -141,14 +338,47 @@ where
     let mut history = History::new(label.to_string());
     let mut bits_cum = 0u64;
     let mut frame_bytes = 0u64;
+    let mut down_bytes = 0u64;
+
+    // One broadcast: plan against the meter, encode dense or delta, and
+    // ship the same bytes to every worker.
+    let send_model = |master_conns: &mut Vec<Box<dyn Conn>>,
+                          downlink: &mut DownlinkMeter,
+                          x: &[f64]|
+     -> Result<u64> {
+        let plan = downlink.plan(x);
+        let frame = if plan.full {
+            Frame::Model(x.to_vec())
+        } else {
+            let layout = downlink.layout();
+            Frame::ModelDelta(
+                plan.changed
+                    .iter()
+                    .map(|&b| {
+                        let spec = layout.spec(b);
+                        BlockPatch {
+                            offset: spec.offset as u32,
+                            vals: x[spec.range()].to_vec(),
+                        }
+                    })
+                    .collect(),
+            )
+        };
+        let bytes = encode(&frame);
+        for c in master_conns.iter_mut() {
+            c.send(&bytes)?;
+        }
+        telemetry::counter(keys::DOWNLINK_BITS).incr(plan.bits);
+        let sent = bytes.len() as u64 * n_workers as u64;
+        telemetry::counter(keys::DOWNLINK_FRAME_BYTES).incr(sent);
+        Ok(sent)
+    };
 
     // Init phase.
-    let x0 = Frame::Model(master.x().to_vec());
-    let x0_bytes = encode(&x0);
-    for c in master_conns.iter_mut() {
-        c.send(&x0_bytes)?;
-    }
-    let (msgs, _losses, fb) = gather(&mut master_conns)?;
+    let x0 = master.x().to_vec();
+    let dim = x0.len();
+    down_bytes += send_model(&mut master_conns, &mut downlink, &x0)?;
+    let (msgs, _losses, fb) = gather(&mut master_conns, dim)?;
     frame_bytes += fb;
     let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
     bits_cum += init_bits;
@@ -159,11 +389,8 @@ where
     for t in 0..rounds {
         let t_round = telemetry::maybe_now();
         let x = master.begin_round();
-        let bytes = encode(&Frame::Model(x));
-        for c in master_conns.iter_mut() {
-            c.send(&bytes)?;
-        }
-        let (msgs, losses, fb) = gather(&mut master_conns)?;
+        down_bytes += send_model(&mut master_conns, &mut downlink, &x)?;
+        let (msgs, losses, fb) = gather(&mut master_conns, dim)?;
         frame_bytes += fb;
         let round_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
         bits_cum += round_bits;
@@ -182,6 +409,7 @@ where
             dcgd_frac: f64::NAN,
         });
     }
+    history.downlink_bits = downlink.bits();
 
     // Shutdown.
     let stop = encode(&Frame::Stop);
@@ -192,7 +420,12 @@ where
         h.join().expect("worker thread panicked")?;
     }
 
-    Ok(DistOutcome { history, final_x: master.x().to_vec(), uplink_frame_bytes: frame_bytes })
+    Ok(DistOutcome {
+        history,
+        final_x: master.x().to_vec(),
+        uplink_frame_bytes: frame_bytes,
+        downlink_frame_bytes: down_bytes,
+    })
 }
 
 #[cfg(test)]
@@ -253,5 +486,40 @@ mod tests {
             );
         }
         assert!(out.uplink_frame_bytes > 0);
+        assert!(out.downlink_frame_bytes > 0);
+        // Dense mode: logical downlink = (init + rounds) * 32d bits.
+        assert_eq!(out.history.downlink_bits, 26 * 3 * 32);
+    }
+
+    #[test]
+    fn delta_broadcast_reproduces_dense_trajectory() {
+        let gamma = 0.01;
+        let layout = Arc::new(BlockLayout::flat(3));
+        let run = |broadcast: Broadcast| {
+            let c: Arc<dyn crate::compress::Compressor> = Arc::new(TopK::new(1));
+            let master = Box::new(crate::algo::ef21::Ef21Master::new(vec![1.0; 3], 3, gamma));
+            run_distributed_opts(
+                master,
+                3,
+                move |i| {
+                    let rng = crate::util::rng::worker_rng(9, i);
+                    Box::new(crate::algo::ef21::Ef21Worker::new(quad(i), c.clone(), rng))
+                },
+                20,
+                TransportKind::Local,
+                "dist",
+                broadcast,
+            )
+            .unwrap()
+        };
+        let dense = run(Broadcast::Dense);
+        let delta = run(Broadcast::Delta(layout));
+        for (a, b) in dense.history.records.iter().zip(&delta.history.records) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "round {}", a.round);
+            assert_eq!(a.bits_per_client.to_bits(), b.bits_per_client.to_bits());
+        }
+        for (a, b) in dense.final_x.iter().zip(&delta.final_x) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

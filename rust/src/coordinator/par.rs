@@ -43,6 +43,18 @@
 //! `threads = 1` remains the right choice for those, while recording
 //! runs (the sweep workload) keep copies gated on `record_every`.
 
+//! # Worker × block tiling
+//!
+//! With a blocked parameter layout the per-round work factors along a
+//! second axis: this pool parallelizes across *workers* (rows), while
+//! within one worker the blocked compressor fans its per-block
+//! compressions across blocks ([`crate::compress::BlockCompressor`],
+//! columns) and the master's absorb scatters disjoint block ranges
+//! across threads ([`crate::blocks::scatter_add_blocked`]). All three
+//! collect results in fixed (worker-, block-) index order, so the tiled
+//! execution stays bit-identical to the sequential runner — the same
+//! argument as above, applied per tile.
+
 use super::runner::{self, RunConfig, WorkerPool};
 use crate::algo::{MasterNode, WireMsg, WorkerNode};
 use crate::metrics::History;

@@ -10,8 +10,10 @@
 //! state machines execute — never in what the coordinator computes.
 
 use crate::algo::{MasterNode, WireMsg, WorkerNode};
+use crate::blocks::BlockLayout;
 use crate::metrics::{History, RoundRecord};
 use crate::telemetry::{self, keys};
+use crate::transport::downlink::DownlinkMeter;
 use crate::util::linalg;
 use std::sync::Arc;
 
@@ -29,6 +31,11 @@ pub struct RunConfig {
     pub divergence_cap: f64,
     /// Curve label for the history.
     pub label: String,
+    /// Block layout of the parameter space — selects the downlink
+    /// accounting mode (`None`/flat = dense `32·d` per broadcast,
+    /// blocked = f32-floor delta accounting; see `transport::downlink`).
+    /// Accounting only: the simulated trajectory is unaffected.
+    pub layout: Option<Arc<BlockLayout>>,
 }
 
 impl RunConfig {
@@ -39,6 +46,7 @@ impl RunConfig {
             grad_tol: None,
             divergence_cap: 1e100,
             label: String::new(),
+            layout: None,
         }
     }
 
@@ -54,6 +62,11 @@ impl RunConfig {
 
     pub fn with_grad_tol(mut self, tol: f64) -> Self {
         self.grad_tol = Some(tol);
+        self
+    }
+
+    pub fn with_layout(mut self, layout: Arc<BlockLayout>) -> Self {
+        self.layout = Some(layout);
         self
     }
 }
@@ -160,10 +173,13 @@ impl WorkerPool for SeqPool {
 /// Telemetry (when enabled): `transport.uplink.bits` is incremented with
 /// exactly the accounted bits — over one run its delta equals
 /// `bits_per_client * n` exactly (the counter itself is process-wide and
-/// sums across runs) — plus `coordinator.rounds` /
-/// `coordinator.round.ns` / `coordinator.divergence.aborts`. These
-/// increments all happen on the coordinator thread, so the deltas are
-/// identical whichever pool executes the workers.
+/// sums across runs) — plus `transport.downlink.bits` (dense `32·d` per
+/// broadcast for flat layouts, the f32-floor block-delta cost for
+/// blocked ones; also summed into `History::downlink_bits`),
+/// `coordinator.rounds` / `coordinator.round.ns` /
+/// `coordinator.divergence.aborts`. These increments all happen on the
+/// coordinator thread, so the deltas are identical whichever pool
+/// executes the workers.
 pub(crate) fn drive<P: WorkerPool>(
     mut master: Box<dyn MasterNode>,
     mut pool: P,
@@ -173,8 +189,20 @@ pub(crate) fn drive<P: WorkerPool>(
     let mut history = History::new(cfg.label.clone());
     let mut bits_cum: u64 = 0;
 
+    // Downlink meter: dense accounting for flat layouts, f32-floor
+    // block-delta accounting for blocked ones. Metering only — the
+    // broadcast the workers actually see is unchanged.
+    let d = master.x().len();
+    let mut downlink = match &cfg.layout {
+        Some(l) => DownlinkMeter::for_layout(l.clone()),
+        None => DownlinkMeter::dense(d),
+    };
+    telemetry::gauge(keys::BLOCKS).set(downlink.layout().n_blocks() as f64);
+
     // Init phase: g_i^0 / w_i^0 at x^0 (counted as communication).
     let x0 = Arc::new(master.x().to_vec());
+    let init_down = downlink.plan(&x0).bits;
+    telemetry::counter(keys::DOWNLINK_BITS).incr(init_down);
     let msgs = pool.init(&x0);
     let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
     bits_cum += init_bits;
@@ -184,6 +212,8 @@ pub(crate) fn drive<P: WorkerPool>(
     for t in 0..cfg.rounds {
         let t_round = telemetry::maybe_now();
         let x = Arc::new(master.begin_round());
+        let down = downlink.plan(&x).bits;
+        telemetry::counter(keys::DOWNLINK_BITS).incr(down);
         let (msgs, loss_sum) = pool.round(&x);
         let round_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
         bits_cum += round_bits;
@@ -219,6 +249,7 @@ pub(crate) fn drive<P: WorkerPool>(
             }
         }
     }
+    history.downlink_bits = downlink.bits();
     history
 }
 
@@ -267,6 +298,9 @@ mod tests {
         assert!((h.records[9].bits_per_client - 64.0 * 11.0).abs() < 1e-9);
         // G^t must be populated for EF21.
         assert!(h.records[0].gt.is_finite());
+        // Flat downlink accounting: 11 dense broadcasts (init + 10
+        // rounds) of d=3 f32 values.
+        assert_eq!(h.downlink_bits, 11 * 3 * 32);
     }
 
     #[test]

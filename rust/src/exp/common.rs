@@ -3,7 +3,8 @@
 //! stepsizes, exactly as §5 does ("stepsize set to a multiple of the
 //! largest stepsize predicted by our theory").
 
-use crate::algo::AlgoSpec;
+use crate::algo::{AlgoSpec, BuildOpts};
+use crate::blocks::BlockLayout;
 use crate::compress;
 use crate::coordinator::par::run_protocol_par;
 use crate::coordinator::runner::RunConfig;
@@ -133,16 +134,83 @@ impl Problem {
         seed: u64,
         threads: usize,
     ) -> History {
-        let c: Arc<dyn compress::Compressor> =
-            Arc::from(compress::from_spec(comp_spec).expect("compressor spec"));
+        let layout = Arc::new(BlockLayout::flat(self.d()));
+        self.run_trial_blocked(
+            algo,
+            comp_spec,
+            gamma_mult,
+            gamma_abs,
+            rounds,
+            record_every,
+            seed,
+            threads,
+            layout,
+        )
+    }
+
+    /// The oracles' natural block partition, straight from the oracle
+    /// hook ([`crate::oracle::GradOracle::block_layout`]) so there is
+    /// one source of truth: the Table-3 objectives report a flat layout
+    /// (`--blocks auto` on these problems = legacy path), while
+    /// structured oracles (the DL transformer) report real per-layer
+    /// shapes. Only the first shard's oracle is materialized — the
+    /// layout is a per-objective property, not per worker.
+    pub fn block_layout(&self) -> BlockLayout {
+        let mut shards = partition::shards(&self.dataset, self.n_workers);
+        if shards.is_empty() {
+            return BlockLayout::flat(self.d());
+        }
+        let s = shards.remove(0);
+        match self.objective {
+            Objective::LogReg => LogRegOracle::new(s, self.lam).block_layout(),
+            Objective::Lstsq => LstsqOracle::new(s).block_layout(),
+        }
+    }
+
+    /// [`Self::run_trial_threads`] over an explicit block layout: the
+    /// compressor becomes layer-wise ([`compress::from_spec_blocked`],
+    /// per-block budgets, `alpha = min_b alpha_b`), algorithm state and
+    /// master aggregation go per block, and the downlink meter switches
+    /// to f32-floor delta accounting. A flat layout is the exact legacy
+    /// path, bit for bit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_trial_blocked(
+        &self,
+        algo: AlgoSpec,
+        comp_spec: &str,
+        gamma_mult: f64,
+        gamma_abs: Option<f64>,
+        rounds: usize,
+        record_every: usize,
+        seed: u64,
+        threads: usize,
+        layout: Arc<BlockLayout>,
+    ) -> History {
+        // The worker pool owns the `threads` budget: with several workers
+        // per round already fanned across pool threads, a per-compress
+        // block fan-out on top would oversubscribe to ~threads^2 scoped
+        // threads (block-parallel compression is a library-level knob for
+        // single-compressor workloads — see bench_round's comparison).
+        let c: Arc<dyn compress::Compressor> = Arc::from(
+            compress::from_spec_blocked(comp_spec, &layout, 1).expect("compressor spec"),
+        );
         let alpha = c.alpha(self.d());
         let gamma = gamma_abs.unwrap_or_else(|| gamma_mult * self.theory_gamma(alpha));
         let x0 = vec![0.0; self.d()];
-        let (master, workers) = crate::algo::build(algo, x0, self.oracles(), c, gamma, seed);
+        let opts = BuildOpts {
+            layout: if layout.is_flat() { None } else { Some(layout.clone()) },
+            threads,
+            full_init: false,
+        };
+        let (master, workers) =
+            crate::algo::build_with(algo, x0, self.oracles(), c, gamma, seed, &opts);
         let label = format!("{} {} {gamma_mult}x", algo.name(), comp_spec);
         let mut cfg = RunConfig::rounds(rounds)
             .with_label(label)
             .with_record_every(record_every);
+        if !layout.is_flat() {
+            cfg = cfg.with_layout(layout);
+        }
         cfg.divergence_cap = 1e60;
         run_protocol_par(master, workers, &cfg, threads)
     }

@@ -5,8 +5,9 @@
 //! and plain SGD, plus a k-sweep (Figure 15).
 
 use super::common::results_dir;
-use crate::algo::AlgoSpec;
+use crate::algo::{AlgoSpec, BuildOpts};
 use crate::compress;
+use crate::config::BlocksSpec;
 use crate::coordinator::runner::RunConfig;
 use crate::metrics::{FigureData, History};
 use crate::nn::tokens::TokenSampler;
@@ -14,6 +15,7 @@ use crate::nn::ParamLayout;
 use crate::oracle::xla::XlaTransformerOracle;
 use crate::oracle::GradOracle;
 use crate::runtime::Runtime;
+use crate::transport::downlink::DownlinkMeter;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -25,11 +27,23 @@ pub struct DlCfg {
     pub gamma: f64,
     pub noise: f64,
     pub seed: u64,
+    /// Parameter partition: `auto` = the transformer's real per-layer
+    /// shapes (layer-wise Top-k + delta broadcast, §5 / Fig. 5);
+    /// `flat` = the legacy whole-vector path.
+    pub blocks: BlocksSpec,
 }
 
 impl Default for DlCfg {
     fn default() -> Self {
-        DlCfg { n_workers: 4, steps: 60, k_frac: 0.05, gamma: 0.5, noise: 0.1, seed: 0 }
+        DlCfg {
+            n_workers: 4,
+            steps: 60,
+            k_frac: 0.05,
+            gamma: 0.5,
+            noise: 0.1,
+            seed: 0,
+            blocks: BlocksSpec::Flat,
+        }
     }
 }
 
@@ -67,15 +81,21 @@ pub fn run_one(
     let flat0 = layout.init_flat(&mut rng);
     let x0: Vec<f64> = flat0.iter().map(|&v| v as f64).collect();
 
+    // `--blocks auto` resolves to the transformer's real per-layer
+    // shapes; `flat` is the legacy whole-vector path.
+    let blocks = cfg.blocks.resolve(x0.len(), Some(&layout.block_layout()))?;
     let oracles = worker_oracles(rt, cfg)?;
-    let c: Arc<dyn compress::Compressor> = Arc::from(compress::from_spec(comp_spec)?);
+    let c: Arc<dyn compress::Compressor> =
+        Arc::from(compress::from_spec_blocked(comp_spec, &blocks, 1)?);
     // EF21 uses the paper-sanctioned dense init g_i^0 = ∇f_i(x^0)
     // (E[G^0] = 0) — one dense message, vital at k ≈ 0.05 D.
-    let (master, workers) = if algo == AlgoSpec::Ef21 {
-        crate::algo::ef21::build_opts(x0, oracles, c, cfg.gamma, cfg.seed, true)
-    } else {
-        crate::algo::build(algo, x0, oracles, c, cfg.gamma, cfg.seed)
+    let opts = BuildOpts {
+        layout: if blocks.is_flat() { None } else { Some(blocks.clone()) },
+        threads: 1,
+        full_init: algo == AlgoSpec::Ef21,
     };
+    let (master, workers) =
+        crate::algo::build_with(algo, x0, oracles, c, cfg.gamma, cfg.seed, &opts);
     let run_cfg = RunConfig::rounds(cfg.steps).with_label(label.to_string());
     // Capture final x through the master after the run: run_protocol owns
     // the master, so re-derive the final model from a fresh protocol run is
@@ -84,12 +104,22 @@ pub fn run_one(
     let mut master = master;
     let mut workers = workers;
     let mut history = History::new(label.to_string());
+    // Downlink: dense accounting for flat, f32-floor delta for blocked —
+    // the per-layer savings Fig. 5's broadcast direction leaves on the
+    // table. Mirrors runner::drive's metering (same counter/gauge keys)
+    // since this loop is hand-rolled.
+    let mut downlink = DownlinkMeter::for_layout(blocks.clone());
+    crate::telemetry::gauge(crate::telemetry::keys::BLOCKS).set(blocks.n_blocks() as f64);
     let x_first = master.x().to_vec();
+    let b0 = downlink.plan(&x_first).bits;
+    crate::telemetry::counter(crate::telemetry::keys::DOWNLINK_BITS).incr(b0);
     let msgs: Vec<_> = workers.iter_mut().map(|w| w.init(&x_first)).collect();
     let mut bits: u64 = msgs.iter().map(|m| m.bits()).sum();
     master.init_absorb(&msgs);
     for t in 0..cfg.steps {
         let x = master.begin_round();
+        let bt = downlink.plan(&x).bits;
+        crate::telemetry::counter(crate::telemetry::keys::DOWNLINK_BITS).incr(bt);
         let msgs: Vec<_> = workers.iter_mut().map(|w| w.round(&x)).collect();
         bits += msgs.iter().map(|m| m.bits()).sum::<u64>();
         master.absorb(&msgs);
@@ -104,6 +134,17 @@ pub fn run_one(
             dcgd_frac: f64::NAN,
         });
         let _ = run_cfg;
+    }
+    history.downlink_bits = downlink.bits();
+    if !blocks.is_flat() {
+        let dense = downlink.dense_baseline_bits();
+        println!(
+            "{label}: downlink {} bits vs dense {} bits ({:.1}% saved, {} blocks)",
+            downlink.bits(),
+            dense,
+            100.0 * (1.0 - downlink.bits() as f64 / dense.max(1) as f64),
+            blocks.n_blocks()
+        );
     }
 
     // Final eval on a held-out stream.
@@ -173,6 +214,7 @@ pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
         gamma: args.get_parse("gamma")?.unwrap_or(0.5),
         noise: args.get_parse("noise")?.unwrap_or(0.1),
         seed: args.get_parse("seed")?.unwrap_or(0),
+        blocks: BlocksSpec::from_args(args)?,
     };
     let out = results_dir();
     if args.has("sweep-k") {

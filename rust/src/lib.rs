@@ -56,6 +56,7 @@
 //! ```
 
 pub mod algo;
+pub mod blocks;
 pub mod compress;
 pub mod config;
 pub mod coordinator;
@@ -73,7 +74,10 @@ pub mod util;
 /// Convenience re-exports for the common simulation workflow.
 pub mod prelude {
     pub use crate::algo::{AlgoSpec, MasterNode, WireMsg, WorkerNode};
-    pub use crate::compress::{Compressor, Identity, Markov, RandK, ScaledSign, SparseVec, TopK};
+    pub use crate::blocks::{BlockLayout, BlockSpec, ParamBlocks};
+    pub use crate::compress::{
+        BlockCompressor, Compressor, Identity, Markov, RandK, ScaledSign, SparseVec, TopK,
+    };
     pub use crate::coordinator::par::{auto_threads, run_protocol_par};
     pub use crate::coordinator::runner::{run_protocol, RunConfig};
     pub use crate::data::Dataset;

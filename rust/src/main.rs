@@ -5,7 +5,7 @@
 //! ef21 run   [--algo ef21|ef21+|ef|dcgd|gd] [--k 1 | --compressor top1]
 //!            [--dataset a9a] [--workers 20] [--gamma-mult 1] [--rounds N]
 //!            [--objective logreg|lstsq] [--csv out.csv] [--transport local|tcp]
-//!            [--threads n|auto]
+//!            [--threads n|auto] [--blocks flat|auto|<n>|name:len,...]
 //! ef21 exp   <stepsize|finetune|kdep|gdtune|lstsq|rates|dl> [flags...]
 //! ef21 data  info
 //! ef21 artifacts [--dir artifacts]
@@ -63,6 +63,13 @@ USAGE:
                                        results are bit-identical either way;
                                        transport runs are already threaded,
                                        rates/dl run single trials)
+  (run + exp dl)
+                 [--blocks flat|auto|<n>|name:len,...]
+                                      (parameter partition: layer-wise
+                                       compression + per-block state +
+                                       delta broadcast; flat = legacy path,
+                                       auto = oracle's natural layout —
+                                       per-layer for dl, flat for logreg)
   ef21 exp  stepsize [--dataset D] [--k K] [--max-pow P] [--rounds T] [--all]
   ef21 exp  finetune [--dataset D] [--rounds T] [--tol X]
   ef21 exp  kdep     [--dataset D] [--rounds T]
@@ -82,17 +89,28 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
     let problem =
         exp::Problem::new(&spec.dataset, objective, spec.n_workers, spec.lam, spec.seed);
-    let c = ef21::compress::from_spec(&spec.compressor)?;
+    // The natural layout is only materialized when `auto` actually
+    // needs it (Problem::block_layout builds a shard oracle to ask).
+    let layout = if spec.blocks == ef21::config::BlocksSpec::Auto {
+        spec.blocks.resolve(problem.d(), Some(&problem.block_layout()))?
+    } else {
+        spec.blocks.resolve(problem.d(), None)?
+    };
+    let threads = spec.threads.resolve();
+    // Fan-out 1: this instance only reports alpha; the runners build
+    // their own (and the worker pool owns the thread budget).
+    let c = ef21::compress::from_spec_blocked(&spec.compressor, &layout, 1)?;
     let alpha = c.alpha(problem.d());
     let gamma = spec
         .gamma_abs
         .unwrap_or_else(|| spec.gamma_mult * problem.theory_gamma(alpha));
     println!(
-        "{} on {} ({} workers, d={}): L={:.4} Ltilde={:.4} alpha={:.4} gamma={:.5e}",
+        "{} on {} ({} workers, d={}, blocks={}): L={:.4} Ltilde={:.4} alpha={:.4} gamma={:.5e}",
         spec.algo.name(),
         spec.dataset,
         spec.n_workers,
         problem.d(),
+        layout.n_blocks(),
         problem.smoothness.l,
         problem.smoothness.l_tilde,
         alpha,
@@ -101,7 +119,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     let transport = args.get_str("transport").unwrap_or("sim");
     let history = if transport == "sim" {
-        problem.run_trial_threads(
+        problem.run_trial_blocked(
             spec.algo,
             &spec.compressor,
             spec.gamma_mult,
@@ -109,17 +127,19 @@ fn cmd_run(args: &Args) -> Result<()> {
             spec.rounds,
             spec.record_every,
             spec.seed,
-            spec.threads.resolve(),
+            threads,
+            layout.clone(),
         )
     } else {
-        run_over_transport(&problem, &spec, gamma, transport)?
+        run_over_transport(&problem, &spec, gamma, transport, layout.clone())?
     };
 
     let last = history.records.last().expect("no rounds recorded");
     println!(
-        "rounds={} bits/client={:.3e} f={:.6e} |grad|^2={:.3e} diverged={}",
+        "rounds={} bits/client={:.3e} downlink_bits={:.3e} f={:.6e} |grad|^2={:.3e} diverged={}",
         last.round + 1,
         last.bits_per_client,
+        history.downlink_bits as f64,
         last.loss,
         last.grad_norm_sq,
         history.diverged()
@@ -132,13 +152,16 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 /// Run over a real transport (threaded workers + local channels or TCP).
+/// Blocked layouts ship the model as block-delta frames and the uplinks
+/// block-tagged; flat layouts take the legacy dense broadcast.
 fn run_over_transport(
     problem: &exp::Problem,
     spec: &RunSpec,
     gamma: f64,
     transport: &str,
+    layout: std::sync::Arc<ef21::blocks::BlockLayout>,
 ) -> Result<ef21::metrics::History> {
-    use ef21::coordinator::dist::{run_distributed, TransportKind};
+    use ef21::coordinator::dist::{run_distributed_opts, Broadcast, TransportKind};
     let kind = match transport {
         "tcp" => TransportKind::Tcp,
         "local" => TransportKind::Local,
@@ -158,12 +181,20 @@ fn run_over_transport(
     let comp = spec.compressor.clone();
     let seed = spec.seed;
     let objective = problem.objective;
-    let master = Box::new(ef21::algo::ef21::Ef21Master::new(
+    let master = Box::new(ef21::algo::ef21::Ef21Master::with_layout(
         vec![0.0; problem.d()],
         problem.n_workers,
         gamma,
+        layout.clone(),
+        1, // absorb stays inline: dist's master thread is already one-per-run
     ));
-    let out = run_distributed(
+    let broadcast = if layout.is_flat() {
+        Broadcast::Dense
+    } else {
+        Broadcast::Delta(layout.clone())
+    };
+    let worker_layout = layout.clone();
+    let out = run_distributed_opts(
         master,
         problem.n_workers,
         move |i| {
@@ -176,18 +207,28 @@ fn run_over_transport(
                     Box::new(ef21::oracle::LstsqOracle::from_parts(a, y, n, d))
                 }
             };
-            let c: std::sync::Arc<dyn ef21::compress::Compressor> =
-                std::sync::Arc::from(ef21::compress::from_spec(&comp).expect("compressor"));
+            // Fan-out 1: dist already runs one OS thread per worker, so
+            // per-compress block fan-out would oversubscribe the host.
+            let c: std::sync::Arc<dyn ef21::compress::Compressor> = std::sync::Arc::from(
+                ef21::compress::from_spec_blocked(&comp, &worker_layout, 1)
+                    .expect("compressor"),
+            );
             let rng = ef21::util::rng::worker_rng(seed, i);
-            Box::new(ef21::algo::ef21::Ef21Worker::new(oracle, c, rng))
+            Box::new(ef21::algo::ef21::Ef21Worker::with_layout(
+                oracle,
+                c,
+                rng,
+                worker_layout.clone(),
+            ))
         },
         spec.rounds,
         kind,
         &spec.label(),
+        broadcast,
     )?;
     println!(
-        "transport={transport}: {} uplink frame bytes",
-        out.uplink_frame_bytes
+        "transport={transport}: {} uplink frame bytes, {} downlink frame bytes",
+        out.uplink_frame_bytes, out.downlink_frame_bytes
     );
     Ok(out.history)
 }

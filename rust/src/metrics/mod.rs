@@ -29,11 +29,17 @@ pub struct History {
     /// Label, e.g. "EF21 top1 4x".
     pub label: String,
     pub records: Vec<RoundRecord>,
+    /// Total metered downlink (broadcast) payload bits over the run —
+    /// dense `32·d` per round for flat layouts, the block-delta cost for
+    /// blocked ones. Kept off [`RoundRecord`] so per-round fixtures and
+    /// CSVs are unchanged; 0 for runs predating the meter (or manual
+    /// record assembly).
+    pub downlink_bits: u64,
 }
 
 impl History {
     pub fn new(label: impl Into<String>) -> Self {
-        History { label: label.into(), records: Vec::new() }
+        History { label: label.into(), records: Vec::new(), downlink_bits: 0 }
     }
 
     pub fn final_loss(&self) -> f64 {

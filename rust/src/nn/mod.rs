@@ -46,6 +46,20 @@ impl ParamLayout {
         Ok(ParamLayout { shapes, n_params })
     }
 
+    /// The real per-layer block partition of the flat parameter vector:
+    /// one [`crate::blocks::BlockSpec`] per named parameter, in flat
+    /// order — what `--blocks auto` resolves to for the DL experiment
+    /// (the paper compresses layer-by-layer, §5 / Fig. 5).
+    pub fn block_layout(&self) -> crate::blocks::BlockLayout {
+        let parts: Vec<(String, usize)> = self
+            .shapes
+            .iter()
+            .map(|(name, shape)| (name.clone(), shape.iter().product()))
+            .collect();
+        crate::blocks::BlockLayout::from_named(&parts)
+            .expect("param_shapes form a valid partition by construction")
+    }
+
     /// Scaled-Gaussian init matching `model.init_flat_params`' scheme
     /// (gains -> 1, biases -> 0, matrices -> N(0, 1/fan_in)). The exact
     /// draw differs from Python's (different PRNG) — only the distribution
@@ -93,6 +107,18 @@ mod tests {
         }"#;
         let m = Manifest::parse(Path::new("."), manifest_json).unwrap();
         m.get("transformer_step").unwrap().clone()
+    }
+
+    #[test]
+    fn block_layout_mirrors_param_shapes() {
+        let layout = ParamLayout::from_entry(&fake_entry()).unwrap();
+        let blocks = layout.block_layout();
+        assert_eq!(blocks.n_blocks(), 4);
+        assert_eq!(blocks.d(), 14);
+        assert_eq!(blocks.spec(0).name, "tok_emb");
+        assert_eq!(blocks.spec(0).len, 6);
+        assert_eq!(blocks.spec(3).offset, 12);
+        assert_eq!(blocks.spec(3).len, 2);
     }
 
     #[test]

@@ -67,11 +67,21 @@ impl GradOracle for LogRegOracle {
     }
 
     fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let mut grad = Vec::new();
+        let loss = self.loss_grad_into(x, &mut grad);
+        (loss, grad)
+    }
+
+    /// The allocation-free hot path (the workers' pooled buffers land
+    /// here); `loss_grad` is a thin wrapper so both entry points share
+    /// this arithmetic exactly.
+    fn loss_grad_into(&mut self, x: &[f64], grad: &mut Vec<f64>) -> f64 {
         assert_eq!(x.len(), self.d);
         let t0 = crate::telemetry::maybe_now();
         let inv_n = 1.0 / self.n as f64;
         let mut loss = 0.0f64;
-        let mut grad = vec![0.0f64; self.d];
+        grad.clear();
+        grad.resize(self.d, 0.0);
         for i in 0..self.n {
             let row = &self.a[i * self.d..(i + 1) * self.d];
             let z = linalg::dot_f32_f64(row, x);
@@ -79,7 +89,7 @@ impl GradOracle for LogRegOracle {
             let m = -yi * z;
             loss += Self::softplus(m);
             let r = -yi * Self::sigmoid(m); // d loss_i / d z
-            linalg::axpy_f32(r * inv_n, row, &mut grad);
+            linalg::axpy_f32(r * inv_n, row, grad);
         }
         loss *= inv_n;
         // Nonconvex regularizer.
@@ -90,7 +100,7 @@ impl GradOracle for LogRegOracle {
             grad[j] += self.lam * 2.0 * xj / ((1.0 + x2) * (1.0 + x2));
         }
         crate::telemetry::record_grad_eval(t0);
-        (loss + self.lam * reg, grad)
+        loss + self.lam * reg
     }
 
     fn loss(&mut self, x: &[f64]) -> f64 {

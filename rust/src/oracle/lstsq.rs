@@ -42,19 +42,28 @@ impl GradOracle for LstsqOracle {
     }
 
     fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let mut grad = Vec::new();
+        let loss = self.loss_grad_into(x, &mut grad);
+        (loss, grad)
+    }
+
+    /// Allocation-free hot path; `loss_grad` wraps it (one arithmetic
+    /// code path for both entry points).
+    fn loss_grad_into(&mut self, x: &[f64], grad: &mut Vec<f64>) -> f64 {
         assert_eq!(x.len(), self.d);
         let t0 = crate::telemetry::maybe_now();
         let inv_n = 1.0 / self.n as f64;
         let mut loss = 0.0;
-        let mut grad = vec![0.0; self.d];
+        grad.clear();
+        grad.resize(self.d, 0.0);
         for i in 0..self.n {
             let row = &self.a[i * self.d..(i + 1) * self.d];
             let z = linalg::dot_f32_f64(row, x) - self.b[i] as f64;
             loss += z * z;
-            linalg::axpy_f32(2.0 * z * inv_n, row, &mut grad);
+            linalg::axpy_f32(2.0 * z * inv_n, row, grad);
         }
         crate::telemetry::record_grad_eval(t0);
-        (loss * inv_n, grad)
+        loss * inv_n
     }
 }
 

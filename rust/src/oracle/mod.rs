@@ -31,10 +31,34 @@ pub trait GradOracle: Send {
     /// Evaluate `(f_i(x), ∇f_i(x))`.
     fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>);
 
+    /// Evaluate `∇f_i(x)` into a caller-owned buffer (resized to `d`),
+    /// returning `f_i(x)` — the pooled-workspace hot path used by the
+    /// algorithm state machines. The default delegates to [`loss_grad`]
+    /// (one allocation) for backends that cannot write in place (XLA);
+    /// the pure-Rust oracles override it with the genuinely
+    /// allocation-free evaluation and implement `loss_grad` on top of
+    /// it, so both entry points share one arithmetic code path.
+    ///
+    /// [`loss_grad`]: GradOracle::loss_grad
+    fn loss_grad_into(&mut self, x: &[f64], grad: &mut Vec<f64>) -> f64 {
+        let (loss, g) = self.loss_grad(x);
+        grad.clear();
+        grad.extend_from_slice(&g);
+        loss
+    }
+
     /// Evaluate only the loss (metrics path; default goes through
     /// `loss_grad`).
     fn loss(&mut self, x: &[f64]) -> f64 {
         self.loss_grad(x).0
+    }
+
+    /// The natural block partition of this objective's parameter space:
+    /// flat (one block) for unstructured problems like logreg/lstsq, the
+    /// real per-layer shapes for the transformer oracle. `--blocks auto`
+    /// resolves to this.
+    fn block_layout(&self) -> crate::blocks::BlockLayout {
+        crate::blocks::BlockLayout::flat(self.dim())
     }
 }
 

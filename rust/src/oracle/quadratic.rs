@@ -36,14 +36,21 @@ impl GradOracle for QuadraticOracle {
     }
 
     fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let mut grad = Vec::new();
+        let loss = self.loss_grad_into(x, &mut grad);
+        (loss, grad)
+    }
+
+    fn loss_grad_into(&mut self, x: &[f64], grad: &mut Vec<f64>) -> f64 {
         let mut loss = 0.0;
-        let mut grad = vec![0.0; x.len()];
+        grad.clear();
+        grad.resize(x.len(), 0.0);
         for j in 0..x.len() {
             let dxj = x[j] - self.c[j];
             loss += 0.5 * self.h[j] * dxj * dxj;
             grad[j] = self.h[j] * dxj;
         }
-        (loss, grad)
+        loss
     }
 }
 

@@ -124,6 +124,9 @@ pub struct XlaTransformerOracle {
     pub n_params: usize,
     batch: usize,
     seq_len: usize,
+    /// Per-layer parameter layout from the artifact manifest — exposed
+    /// as the oracle's natural block partition (`--blocks auto`).
+    layout: crate::nn::ParamLayout,
     sampler: Box<dyn FnMut() -> Vec<i32> + Send>,
 }
 
@@ -137,7 +140,8 @@ impl XlaTransformerOracle {
         let n_params = entry.meta_usize("n_params")?;
         let batch = entry.meta_usize("batch")?;
         let seq_len = entry.meta_usize("seq_len")?;
-        Ok(XlaTransformerOracle { rt, n_params, batch, seq_len, sampler })
+        let layout = crate::nn::ParamLayout::from_entry(entry)?;
+        Ok(XlaTransformerOracle { rt, n_params, batch, seq_len, layout, sampler })
     }
 
     pub fn step_f32(&mut self, flat: &[f32]) -> Result<(f64, Vec<f64>)> {
@@ -189,5 +193,11 @@ impl GradOracle for XlaTransformerOracle {
         );
         crate::telemetry::record_grad_eval(t0);
         out
+    }
+
+    /// The transformer's real per-layer shapes (one block per named
+    /// parameter) — §5's layer-wise compression structure.
+    fn block_layout(&self) -> crate::blocks::BlockLayout {
+        self.layout.block_layout()
     }
 }

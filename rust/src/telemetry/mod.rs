@@ -54,6 +54,15 @@ pub mod keys {
     pub const UPLINK_BITS: &str = "transport.uplink.bits";
     /// Uplink frame bytes actually moved by the distributed runner.
     pub const UPLINK_FRAME_BYTES: &str = "transport.uplink.frame.bytes";
+    /// Cumulative downlink (broadcast) payload bits — dense `32·d` per
+    /// round for flat layouts, the block-delta cost for blocked ones
+    /// (see `transport::downlink`). Metered by both the in-process
+    /// runners and the distributed runner, next to the uplink meter.
+    pub const DOWNLINK_BITS: &str = "transport.downlink.bits";
+    /// Downlink frame bytes actually moved by the distributed runner.
+    pub const DOWNLINK_FRAME_BYTES: &str = "transport.downlink.frame.bytes";
+    /// Block count of the active parameter layout (gauge; 1 = flat).
+    pub const BLOCKS: &str = "coordinator.blocks";
     pub const TX_FRAMES: &str = "transport.tx.frames";
     pub const TX_BYTES: &str = "transport.tx.bytes";
     pub const RX_FRAMES: &str = "transport.rx.frames";

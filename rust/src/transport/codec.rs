@@ -6,6 +6,15 @@
 //!                    | nnz * u32 idx | nnz * f32 val
 //!                    kind: 0 = Sparse, 1 = Markov delta, 2 = DCGD assign
 //!   0x03 Stop      : empty                    (master -> worker shutdown)
+//!   0x04 ModelDelta: u32 n_patches | per patch: u32 offset | u32 len
+//!                    | len * f32              (blocks past the f32 floor;
+//!                    the worker patches its cached model — empty = round
+//!                    heartbeat, model unchanged at f32 precision)
+//!   0x05 UpBlock   : u8 kind | u32 block | u32 n_blocks | f64 loss
+//!                    | u64 bits | u32 nnz | nnz * u32 idx | nnz * f32 val
+//!                    (block-tagged uplink: one frame per block, global
+//!                    indices; the master reassembles blocks 0..n_blocks
+//!                    of one worker into a single message)
 //!
 //! Values travel as f32 — the same precision the bit accounting charges —
 //! so the simulated `bits/n` axis and the real byte stream agree (the `Up`
@@ -14,11 +23,22 @@
 
 use crate::algo::WireMsg;
 use crate::compress::{Compressed, SparseVec};
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 pub const TAG_MODEL: u8 = 0x01;
 pub const TAG_UP: u8 = 0x02;
 pub const TAG_STOP: u8 = 0x03;
+pub const TAG_MODEL_DELTA: u8 = 0x04;
+pub const TAG_UP_BLOCK: u8 = 0x05;
+
+/// One contiguous patch of a [`Frame::ModelDelta`] broadcast.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockPatch {
+    /// First coordinate the patch overwrites.
+    pub offset: u32,
+    /// New values (f32 on the wire).
+    pub vals: Vec<f64>,
+}
 
 /// A decoded protocol frame.
 #[derive(Clone, Debug)]
@@ -28,6 +48,13 @@ pub enum Frame {
     /// Worker uplink: message plus piggybacked instrumentation loss.
     Up { msg: WireMsg, loss: f64 },
     Stop,
+    /// Broadcast delta: only the blocks whose f32 image moved since the
+    /// last broadcast. An empty patch list is a heartbeat (the round
+    /// still runs on the cached model).
+    ModelDelta(Vec<BlockPatch>),
+    /// Block-tagged uplink: block `block` of `n_blocks` for this round,
+    /// with globally-indexed entries and this block's exact bit cost.
+    UpBlock { block: u32, n_blocks: u32, msg: WireMsg, loss: f64 },
 }
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -84,6 +111,13 @@ impl<'a> Reader<'a> {
     fn done(&self) -> bool {
         self.i == self.b.len()
     }
+
+    /// Bytes left — used to clamp `Vec::with_capacity` against declared
+    /// counts from untrusted frames (a lying header can force an error
+    /// but never an oversized allocation).
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
 }
 
 pub fn encode(frame: &Frame) -> Vec<u8> {
@@ -115,6 +149,27 @@ pub fn decode(bytes: &[u8]) -> Result<Frame> {
     frame
 }
 
+/// Shared tail of `Up` / `UpBlock`: kind is emitted by the caller.
+fn put_msg_body(out: &mut Vec<u8>, payload: &Compressed, loss: f64) {
+    put_f64(out, loss);
+    put_u64(out, payload.bits);
+    put_u32(out, payload.sparse.nnz() as u32);
+    for &i in &payload.sparse.idx {
+        put_u32(out, i);
+    }
+    for &v in &payload.sparse.val {
+        put_f32(out, v as f32);
+    }
+}
+
+fn msg_kind(msg: &WireMsg) -> (u8, &Compressed) {
+    match msg {
+        WireMsg::Sparse(c) => (0u8, c),
+        WireMsg::Tagged { dcgd_branch: false, payload } => (1u8, payload),
+        WireMsg::Tagged { dcgd_branch: true, payload } => (2u8, payload),
+    }
+}
+
 fn encode_impl(frame: &Frame) -> Vec<u8> {
     let mut out = Vec::new();
     match frame {
@@ -127,25 +182,60 @@ fn encode_impl(frame: &Frame) -> Vec<u8> {
         }
         Frame::Up { msg, loss } => {
             out.push(TAG_UP);
-            let (kind, payload) = match msg {
-                WireMsg::Sparse(c) => (0u8, c),
-                WireMsg::Tagged { dcgd_branch: false, payload } => (1u8, payload),
-                WireMsg::Tagged { dcgd_branch: true, payload } => (2u8, payload),
-            };
+            let (kind, payload) = msg_kind(msg);
             out.push(kind);
-            put_f64(&mut out, *loss);
-            put_u64(&mut out, payload.bits);
-            put_u32(&mut out, payload.sparse.nnz() as u32);
-            for &i in &payload.sparse.idx {
-                put_u32(&mut out, i);
-            }
-            for &v in &payload.sparse.val {
-                put_f32(&mut out, v as f32);
-            }
+            put_msg_body(&mut out, payload, *loss);
         }
         Frame::Stop => out.push(TAG_STOP),
+        Frame::ModelDelta(patches) => {
+            out.push(TAG_MODEL_DELTA);
+            put_u32(&mut out, patches.len() as u32);
+            for p in patches {
+                put_u32(&mut out, p.offset);
+                put_u32(&mut out, p.vals.len() as u32);
+                for &v in &p.vals {
+                    put_f32(&mut out, v as f32);
+                }
+            }
+        }
+        Frame::UpBlock { block, n_blocks, msg, loss } => {
+            out.push(TAG_UP_BLOCK);
+            let (kind, payload) = msg_kind(msg);
+            out.push(kind);
+            put_u32(&mut out, *block);
+            put_u32(&mut out, *n_blocks);
+            put_msg_body(&mut out, payload, *loss);
+        }
     }
     out
+}
+
+/// Shared tail of `Up` / `UpBlock` decoding (after the kind byte and any
+/// block tags): loss, bits, and the sparse payload.
+fn take_msg_body(r: &mut Reader<'_>, kind: u8) -> Result<(WireMsg, f64)> {
+    let loss = r.f64()?;
+    let bits = r.u64()?;
+    let nnz = r.u32()? as usize;
+    let mut idx = Vec::with_capacity(nnz.min(r.remaining() / 4));
+    for _ in 0..nnz {
+        idx.push(r.u32()?);
+    }
+    let mut val = Vec::with_capacity(nnz.min(r.remaining() / 4));
+    for _ in 0..nnz {
+        val.push(r.f32()? as f64);
+    }
+    ensure!(
+        idx.windows(2).all(|w| w[0] < w[1]),
+        "uplink indices not strictly increasing"
+    );
+    let payload = Compressed { sparse: SparseVec::new(idx, val), bits };
+    let msg = match kind {
+        0 => WireMsg::Sparse(payload),
+        1 => WireMsg::Tagged { dcgd_branch: false, payload },
+        2 => WireMsg::Tagged { dcgd_branch: true, payload },
+        k => bail!("bad Up kind {k}"),
+    };
+    Ok((msg, loss))
 }
 
 fn decode_impl(bytes: &[u8]) -> Result<Frame> {
@@ -153,7 +243,7 @@ fn decode_impl(bytes: &[u8]) -> Result<Frame> {
     let frame = match r.u8()? {
         TAG_MODEL => {
             let d = r.u32()? as usize;
-            let mut x = Vec::with_capacity(d);
+            let mut x = Vec::with_capacity(d.min(r.remaining() / 4));
             for _ in 0..d {
                 x.push(r.f32()? as f64);
             }
@@ -161,27 +251,39 @@ fn decode_impl(bytes: &[u8]) -> Result<Frame> {
         }
         TAG_UP => {
             let kind = r.u8()?;
-            let loss = r.f64()?;
-            let bits = r.u64()?;
-            let nnz = r.u32()? as usize;
-            let mut idx = Vec::with_capacity(nnz);
-            for _ in 0..nnz {
-                idx.push(r.u32()?);
-            }
-            let mut val = Vec::with_capacity(nnz);
-            for _ in 0..nnz {
-                val.push(r.f32()? as f64);
-            }
-            let payload = Compressed { sparse: SparseVec::new(idx, val), bits };
-            let msg = match kind {
-                0 => WireMsg::Sparse(payload),
-                1 => WireMsg::Tagged { dcgd_branch: false, payload },
-                2 => WireMsg::Tagged { dcgd_branch: true, payload },
-                k => bail!("bad Up kind {k}"),
-            };
+            let (msg, loss) = take_msg_body(&mut r, kind)?;
             Frame::Up { msg, loss }
         }
         TAG_STOP => Frame::Stop,
+        TAG_MODEL_DELTA => {
+            let n = r.u32()? as usize;
+            let mut patches = Vec::with_capacity(n.min(r.remaining() / 8));
+            let mut next_free = 0u64;
+            for _ in 0..n {
+                let offset = r.u32()?;
+                let len = r.u32()? as usize;
+                ensure!(len >= 1, "empty ModelDelta patch");
+                ensure!(
+                    offset as u64 >= next_free,
+                    "ModelDelta patches overlap or are out of order"
+                );
+                next_free = offset as u64 + len as u64;
+                let mut vals = Vec::with_capacity(len.min(r.remaining() / 4));
+                for _ in 0..len {
+                    vals.push(r.f32()? as f64);
+                }
+                patches.push(BlockPatch { offset, vals });
+            }
+            Frame::ModelDelta(patches)
+        }
+        TAG_UP_BLOCK => {
+            let kind = r.u8()?;
+            let block = r.u32()?;
+            let n_blocks = r.u32()?;
+            ensure!(block < n_blocks, "UpBlock tag {block} out of range (n={n_blocks})");
+            let (msg, loss) = take_msg_body(&mut r, kind)?;
+            Frame::UpBlock { block, n_blocks, msg, loss }
+        }
         t => bail!("unknown frame tag {t:#x}"),
     };
     if !r.done() {
@@ -246,6 +348,54 @@ mod tests {
         let mut bytes = encode(&Frame::Stop);
         bytes.push(0);
         assert!(decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn roundtrip_model_delta() {
+        let f = Frame::ModelDelta(vec![
+            BlockPatch { offset: 0, vals: vec![1.0, -2.5] },
+            BlockPatch { offset: 7, vals: vec![0.125] },
+        ]);
+        match decode(&encode(&f)).unwrap() {
+            Frame::ModelDelta(patches) => {
+                assert_eq!(patches.len(), 2);
+                assert_eq!(patches[0].offset, 0);
+                assert_eq!(patches[0].vals, vec![1.0, -2.5]);
+                assert_eq!(patches[1].offset, 7);
+                assert_eq!(patches[1].vals, vec![0.125]);
+            }
+            _ => panic!("wrong frame"),
+        }
+        // Heartbeat (no patches) is legal.
+        assert!(matches!(
+            decode(&encode(&Frame::ModelDelta(Vec::new()))).unwrap(),
+            Frame::ModelDelta(p) if p.is_empty()
+        ));
+    }
+
+    #[test]
+    fn roundtrip_up_block() {
+        let f = Frame::UpBlock { block: 2, n_blocks: 5, msg: sample_msg(), loss: -1.5 };
+        match decode(&encode(&f)).unwrap() {
+            Frame::UpBlock { block, n_blocks, msg, loss } => {
+                assert_eq!((block, n_blocks), (2, 5));
+                assert_eq!(loss, -1.5);
+                assert_eq!(msg.bits(), 3 * 64 + 1 + 1);
+            }
+            _ => panic!("wrong frame"),
+        }
+        // Out-of-range block tag is rejected.
+        let bad = Frame::UpBlock { block: 5, n_blocks: 5, msg: sample_msg(), loss: 0.0 };
+        assert!(decode(&encode(&bad)).is_err());
+    }
+
+    #[test]
+    fn model_delta_rejects_overlapping_patches() {
+        let f = Frame::ModelDelta(vec![
+            BlockPatch { offset: 4, vals: vec![1.0, 2.0] },
+            BlockPatch { offset: 5, vals: vec![3.0] },
+        ]);
+        assert!(decode(&encode(&f)).is_err());
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Downlink (master → worker broadcast) accounting and delta planning.
+//!
+//! Until the block refactor the master re-broadcast all `d` coordinates
+//! as dense f32 every round and nobody metered it; uplink bits were
+//! tracked to the single bit while the downlink was invisible. A
+//! [`DownlinkMeter`] closes that gap:
+//!
+//! * **dense mode** (flat layouts) — charges the legacy `32·d` payload
+//!   bits per broadcast, so `transport.downlink.bits` finally sits next
+//!   to `transport.uplink.bits` in the telemetry snapshot;
+//! * **delta mode** (blocked layouts) — per round, re-quantizes the
+//!   model to f32 (the wire precision) and marks a block *changed* only
+//!   if some coordinate's f32 image differs from the last broadcast —
+//!   i.e. the update cleared the f32-quantization floor. Only changed
+//!   blocks are charged (and, in the distributed runner, sent as a
+//!   `ModelDelta` frame); when the delta encoding would not beat the
+//!   dense frame the plan falls back to dense, so delta bits are never
+//!   worse than dense bits.
+//!
+//! Because an unchanged block's f32 image is, by definition, exactly
+//! what the worker already holds, a delta-applied model equals the dense
+//! broadcast's f32 image bit for bit — delta broadcast changes wire
+//! cost, never the trajectory.
+
+use crate::blocks::BlockLayout;
+use std::sync::Arc;
+
+/// Payload bits of one dense f32 model broadcast.
+pub fn dense_bits(d: usize) -> u64 {
+    d as u64 * 32
+}
+
+/// Per-patch header: u32 offset + u32 len.
+pub const PATCH_HEADER_BITS: u64 = 64;
+/// Per-frame header: u32 patch count.
+pub const DELTA_FRAME_BITS: u64 = 32;
+
+/// One round's broadcast plan.
+#[derive(Clone, Debug)]
+pub struct BroadcastPlan {
+    /// Send a full dense model frame (first broadcast, dense mode, or
+    /// delta-would-not-be-cheaper fallback).
+    pub full: bool,
+    /// Blocks whose f32 image changed (delta frames carry exactly
+    /// these; empty + `!full` = heartbeat frame, workers reuse their
+    /// cached model).
+    pub changed: Vec<usize>,
+    /// Metered payload bits of the chosen encoding.
+    pub bits: u64,
+}
+
+/// Stateful per-run downlink meter / delta planner.
+pub struct DownlinkMeter {
+    layout: Arc<BlockLayout>,
+    delta: bool,
+    /// f32 image of the last broadcast (None until the first one).
+    last: Option<Vec<f32>>,
+    bits_cum: u64,
+    dense_bits_cum: u64,
+}
+
+impl DownlinkMeter {
+    /// Legacy dense accounting (flat layouts): `32·d` bits per round.
+    pub fn dense(d: usize) -> DownlinkMeter {
+        Self::with_mode(Arc::new(BlockLayout::flat(d)), false)
+    }
+
+    /// Delta accounting/planning over a block layout. A flat layout
+    /// degenerates to dense-or-nothing (one block), which still skips
+    /// re-broadcasts of a converged model.
+    pub fn delta(layout: Arc<BlockLayout>) -> DownlinkMeter {
+        Self::with_mode(layout, true)
+    }
+
+    /// Dense for flat layouts, delta for real partitions — what the
+    /// runners use.
+    pub fn for_layout(layout: Arc<BlockLayout>) -> DownlinkMeter {
+        let delta = !layout.is_flat();
+        Self::with_mode(layout, delta)
+    }
+
+    fn with_mode(layout: Arc<BlockLayout>, delta: bool) -> DownlinkMeter {
+        DownlinkMeter { layout, delta, last: None, bits_cum: 0, dense_bits_cum: 0 }
+    }
+
+    pub fn layout(&self) -> &Arc<BlockLayout> {
+        &self.layout
+    }
+
+    /// Cumulative metered downlink payload bits.
+    pub fn bits(&self) -> u64 {
+        self.bits_cum
+    }
+
+    /// What the same broadcasts would have cost densely (savings =
+    /// `dense_baseline_bits - bits`).
+    pub fn dense_baseline_bits(&self) -> u64 {
+        self.dense_bits_cum
+    }
+
+    /// Plan (and account) one broadcast of model `x`.
+    pub fn plan(&mut self, x: &[f64]) -> BroadcastPlan {
+        let d = self.layout.d();
+        assert_eq!(x.len(), d, "broadcast does not match layout dimension");
+        self.dense_bits_cum += dense_bits(d);
+
+        // Dense mode is stateless: the legacy hot path pays only this
+        // constant-time accounting, no per-round f32 image.
+        if !self.delta {
+            self.bits_cum += dense_bits(d);
+            return BroadcastPlan { full: true, changed: Vec::new(), bits: dense_bits(d) };
+        }
+
+        let plan = match &mut self.last {
+            // Nothing broadcast yet: full frame.
+            None => BroadcastPlan { full: true, changed: Vec::new(), bits: dense_bits(d) },
+            Some(last) => {
+                let mut changed = Vec::new();
+                let mut delta_bits = DELTA_FRAME_BITS;
+                for (b, spec) in self.layout.specs().iter().enumerate() {
+                    let moved = spec
+                        .range()
+                        .any(|j| (x[j] as f32).to_bits() != last[j].to_bits());
+                    if moved {
+                        changed.push(b);
+                        delta_bits += PATCH_HEADER_BITS + 32 * spec.len as u64;
+                    }
+                }
+                if delta_bits >= dense_bits(d) {
+                    BroadcastPlan { full: true, changed: Vec::new(), bits: dense_bits(d) }
+                } else {
+                    BroadcastPlan { full: false, changed, bits: delta_bits }
+                }
+            }
+        };
+
+        // The post-broadcast worker image is f32(x) whichever encoding
+        // won (an unchanged block's image already equals it).
+        match &mut self.last {
+            Some(last) => {
+                for (li, &xi) in last.iter_mut().zip(x) {
+                    *li = xi as f32;
+                }
+            }
+            None => self.last = Some(x.iter().map(|&v| v as f32).collect()),
+        }
+        self.bits_cum += plan.bits;
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_mode_charges_32d_every_round() {
+        let mut m = DownlinkMeter::dense(10);
+        for _ in 0..3 {
+            let p = m.plan(&[1.0; 10]);
+            assert!(p.full);
+            assert_eq!(p.bits, 320);
+        }
+        assert_eq!(m.bits(), 960);
+        assert_eq!(m.dense_baseline_bits(), 960);
+    }
+
+    #[test]
+    fn delta_mode_charges_only_changed_blocks() {
+        let layout = Arc::new(BlockLayout::equal(5, 100).unwrap());
+        let mut m = DownlinkMeter::delta(layout);
+        let mut x = vec![1.0f64; 100];
+        // First broadcast is always full.
+        assert!(m.plan(&x).full);
+        // Touch one coordinate in block 2 (coords 40..60).
+        x[45] += 1.0;
+        let p = m.plan(&x);
+        assert!(!p.full);
+        assert_eq!(p.changed, vec![2]);
+        assert_eq!(p.bits, DELTA_FRAME_BITS + PATCH_HEADER_BITS + 32 * 20);
+        // No change at all -> heartbeat frame, near-zero bits.
+        let p = m.plan(&x);
+        assert!(!p.full);
+        assert!(p.changed.is_empty());
+        assert_eq!(p.bits, DELTA_FRAME_BITS);
+        assert!(m.bits() < m.dense_baseline_bits());
+    }
+
+    #[test]
+    fn sub_f32_floor_updates_are_free() {
+        let layout = Arc::new(BlockLayout::equal(2, 8).unwrap());
+        let mut m = DownlinkMeter::delta(layout);
+        let x = vec![1.0f64; 8];
+        m.plan(&x);
+        // A perturbation below f32 resolution does not clear the floor.
+        let y: Vec<f64> = x.iter().map(|v| v + 1e-12).collect();
+        let p = m.plan(&y);
+        assert!(p.changed.is_empty(), "sub-ULP update must not count as changed");
+    }
+
+    #[test]
+    fn delta_never_beats_itself_with_headers() {
+        // All blocks changed: the planner must fall back to dense, so
+        // delta accounting is never worse than dense accounting.
+        let layout = Arc::new(BlockLayout::equal(4, 16).unwrap());
+        let mut m = DownlinkMeter::delta(layout);
+        let mut x: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        m.plan(&x);
+        for v in x.iter_mut() {
+            *v += 1.0;
+        }
+        let p = m.plan(&x);
+        assert!(p.full, "all-changed must fall back to a dense frame");
+        assert_eq!(p.bits, dense_bits(16));
+        assert!(m.bits() <= m.dense_baseline_bits());
+    }
+}

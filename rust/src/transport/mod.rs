@@ -1,11 +1,15 @@
 //! Transports: the byte-level substrate under the distributed runner.
 //!
-//! * [`codec`] — explicit little-endian wire format for protocol frames;
+//! * [`codec`] — explicit little-endian wire format for protocol frames
+//!   (dense model, block-delta model, plain and block-tagged uplinks);
 //!   the frame sizes are consistent with the simulated bit accounting.
+//! * [`downlink`] — broadcast accounting and block-delta planning (which
+//!   blocks cleared the f32-quantization floor since the last send).
 //! * [`local`] — in-process mpsc channel transport.
 //! * [`tcp`]   — length-prefixed frames over real TCP sockets (std::net).
 
 pub mod codec;
+pub mod downlink;
 pub mod local;
 pub mod tcp;
 

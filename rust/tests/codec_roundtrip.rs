@@ -1,0 +1,200 @@
+//! Codec robustness suite: randomized roundtrip properties for every
+//! `Frame` kind (including the block-delta and block-tagged uplink
+//! frames) plus adversarial truncation/garbage inputs asserting the
+//! `Reader::take` error paths always surface as `Err` — never a panic,
+//! never an abort-sized allocation.
+
+use ef21::algo::WireMsg;
+use ef21::compress::{Compressed, SparseVec};
+use ef21::transport::codec::{decode, encode, BlockPatch, Frame};
+use ef21::util::rng::Rng;
+use ef21::util::testing::for_all_seeds;
+
+/// Random sorted-unique index set of size `k` over `0..d`.
+fn random_idx(rng: &mut Rng, d: usize, k: usize) -> Vec<u32> {
+    rng.sample_indices(d, k.min(d))
+}
+
+fn random_sparse(rng: &mut Rng, d: usize) -> SparseVec {
+    let k = rng.next_below(d.max(1)) + 1;
+    let idx = random_idx(rng, d, k);
+    let val: Vec<f64> = idx.iter().map(|_| rng.next_normal()).collect();
+    SparseVec::new(idx, val)
+}
+
+fn random_msg(rng: &mut Rng, d: usize) -> WireMsg {
+    let sparse = random_sparse(rng, d);
+    let bits = sparse.standard_bits();
+    let payload = Compressed { sparse, bits };
+    match rng.next_below(3) {
+        0 => WireMsg::Sparse(payload),
+        1 => WireMsg::Tagged { dcgd_branch: false, payload },
+        _ => WireMsg::Tagged { dcgd_branch: true, payload },
+    }
+}
+
+/// f32-clean random value (encode quantizes values to f32; using values
+/// that round-trip exactly keeps the equality assertions strict).
+fn f32_clean(rng: &mut Rng) -> f64 {
+    (rng.next_normal() as f32) as f64
+}
+
+fn assert_msg_eq(a: &WireMsg, b: &WireMsg) {
+    match (a, b) {
+        (WireMsg::Sparse(x), WireMsg::Sparse(y)) => {
+            assert_eq!(x.bits, y.bits);
+            assert_eq!(x.sparse.idx, y.sparse.idx);
+        }
+        (
+            WireMsg::Tagged { dcgd_branch: ba, payload: x },
+            WireMsg::Tagged { dcgd_branch: bb, payload: y },
+        ) => {
+            assert_eq!(ba, bb);
+            assert_eq!(x.bits, y.bits);
+            assert_eq!(x.sparse.idx, y.sparse.idx);
+        }
+        _ => panic!("message kind changed in roundtrip"),
+    }
+}
+
+#[test]
+fn roundtrip_property_all_frame_kinds() {
+    for_all_seeds(60, |rng| {
+        let d = 2 + rng.next_below(200);
+
+        // Model
+        let x: Vec<f64> = (0..d).map(|_| f32_clean(rng)).collect();
+        match decode(&encode(&Frame::Model(x.clone()))).unwrap() {
+            Frame::Model(y) => assert_eq!(x, y),
+            _ => panic!("Model roundtrip changed kind"),
+        }
+
+        // Up
+        let msg = random_msg(rng, d);
+        let loss = rng.next_normal();
+        match decode(&encode(&Frame::Up { msg: msg.clone(), loss })).unwrap() {
+            Frame::Up { msg: m2, loss: l2 } => {
+                assert_eq!(loss.to_bits(), l2.to_bits());
+                assert_msg_eq(&msg, &m2);
+            }
+            _ => panic!("Up roundtrip changed kind"),
+        }
+
+        // UpBlock
+        let n_blocks = 1 + rng.next_below(6) as u32;
+        let block = rng.next_below(n_blocks as usize) as u32;
+        let msg = random_msg(rng, d);
+        let f = Frame::UpBlock { block, n_blocks, msg: msg.clone(), loss };
+        match decode(&encode(&f)).unwrap() {
+            Frame::UpBlock { block: b2, n_blocks: n2, msg: m2, .. } => {
+                assert_eq!((block, n_blocks), (b2, n2));
+                assert_msg_eq(&msg, &m2);
+            }
+            _ => panic!("UpBlock roundtrip changed kind"),
+        }
+
+        // ModelDelta: non-overlapping ascending patches.
+        let mut patches = Vec::new();
+        let mut offset = 0usize;
+        while offset + 1 < d && patches.len() < 5 {
+            let len = 1 + rng.next_below((d - offset).min(20));
+            patches.push(BlockPatch {
+                offset: offset as u32,
+                vals: (0..len).map(|_| f32_clean(rng)).collect(),
+            });
+            offset += len + rng.next_below(10);
+        }
+        match decode(&encode(&Frame::ModelDelta(patches.clone()))).unwrap() {
+            Frame::ModelDelta(p2) => assert_eq!(patches, p2),
+            _ => panic!("ModelDelta roundtrip changed kind"),
+        }
+
+        // Stop
+        assert!(matches!(decode(&encode(&Frame::Stop)).unwrap(), Frame::Stop));
+    });
+}
+
+/// Every strict prefix of a valid frame must decode to a clean error
+/// (frames carry explicit lengths, so truncation always under-runs some
+/// `Reader::take`, or trips the trailing-bytes check).
+#[test]
+fn truncation_never_panics() {
+    for_all_seeds(20, |rng| {
+        let d = 2 + rng.next_below(60);
+        let frames = vec![
+            Frame::Model((0..d).map(|_| rng.next_normal()).collect()),
+            Frame::Up { msg: random_msg(rng, d), loss: 0.5 },
+            Frame::UpBlock { block: 0, n_blocks: 3, msg: random_msg(rng, d), loss: 0.0 },
+            Frame::ModelDelta(vec![BlockPatch {
+                offset: 1,
+                vals: vec![1.0, 2.0, 3.0],
+            }]),
+            Frame::Stop,
+        ];
+        for f in &frames {
+            let bytes = encode(f);
+            for l in 0..bytes.len() {
+                assert!(
+                    decode(&bytes[..l]).is_err(),
+                    "prefix of length {l}/{} decoded successfully",
+                    bytes.len()
+                );
+            }
+            // Appending junk must also fail (trailing-bytes check).
+            let mut longer = bytes.clone();
+            longer.push(0xAB);
+            assert!(decode(&longer).is_err());
+        }
+    });
+}
+
+/// Random garbage must produce `Err` or a valid frame — never a panic.
+#[test]
+fn garbage_bytes_never_panic() {
+    for_all_seeds(40, |rng| {
+        let len = rng.next_below(300);
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let _ = decode(&bytes); // must return, not panic
+    });
+}
+
+/// Headers that promise enormous element counts must error out without
+/// allocating anywhere near the promised size.
+#[test]
+fn lying_length_headers_error_cleanly() {
+    // Model claiming u32::MAX coordinates, 1 actual byte of payload.
+    let mut bytes = vec![0x01];
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+    bytes.push(0);
+    assert!(decode(&bytes).is_err());
+
+    // Up frame claiming 2^31 entries.
+    let mut bytes = vec![0x02, 0x00];
+    bytes.extend_from_slice(&0.0f64.to_le_bytes());
+    bytes.extend_from_slice(&64u64.to_le_bytes());
+    bytes.extend_from_slice(&(1u32 << 31).to_le_bytes());
+    assert!(decode(&bytes).is_err());
+
+    // ModelDelta claiming a huge patch.
+    let mut bytes = vec![0x04];
+    bytes.extend_from_slice(&1u32.to_le_bytes());
+    bytes.extend_from_slice(&0u32.to_le_bytes()); // offset
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // len
+    assert!(decode(&bytes).is_err());
+}
+
+/// Malformed uplink payloads (unsorted / duplicate indices) are rejected
+/// at decode time rather than corrupting master state later.
+#[test]
+fn unsorted_uplink_indices_rejected() {
+    // Hand-assemble an Up frame with decreasing indices.
+    let mut bytes = vec![0x02, 0x00]; // tag, kind = Sparse
+    bytes.extend_from_slice(&0.0f64.to_le_bytes()); // loss
+    bytes.extend_from_slice(&128u64.to_le_bytes()); // bits
+    bytes.extend_from_slice(&2u32.to_le_bytes()); // nnz
+    bytes.extend_from_slice(&7u32.to_le_bytes()); // idx 7
+    bytes.extend_from_slice(&3u32.to_le_bytes()); // idx 3 (out of order)
+    bytes.extend_from_slice(&1.0f32.to_le_bytes());
+    bytes.extend_from_slice(&2.0f32.to_le_bytes());
+    assert!(decode(&bytes).is_err());
+}

@@ -9,20 +9,34 @@
 //!     deterministic tie-break (load-bearing for the parallel runner:
 //!     a tie broken differently per thread would break bit-identity).
 
+use ef21::blocks::BlockLayout;
 use ef21::compress::{
-    distortion_ratio, Compressor, Identity, RandK, ScaledSign, SparseVec, TopK,
+    distortion_ratio, BlockCompressor, Compressor, Identity, RandK, ScaledSign, SparseVec, TopK,
 };
 use ef21::util::rng::Rng;
 use ef21::util::testing::{for_all_seeds, random_vec};
+use std::sync::Arc;
 
 fn deterministic_compressors(d: usize) -> Vec<Box<dyn Compressor>> {
-    vec![
+    let mut all: Vec<Box<dyn Compressor>> = vec![
         Box::new(TopK::new(1)),
         Box::new(TopK::new((d / 4).max(1))),
         Box::new(TopK::new(d)), // k = d: identity-like
         Box::new(ScaledSign),
         Box::new(Identity),
-    ]
+    ];
+    // Layer-wise variants: the composite operator must satisfy Eq. (3)
+    // with alpha = min_b alpha_b, through the same pointwise harness.
+    for n_blocks in [1usize, 2, 3] {
+        if n_blocks <= d {
+            let layout = Arc::new(BlockLayout::equal(n_blocks, d).unwrap());
+            all.push(Box::new(
+                BlockCompressor::from_spec(&format!("top{}", (d / 3).max(1)), layout, 1)
+                    .unwrap(),
+            ));
+        }
+    }
+    all
 }
 
 /// Eq. (3) pointwise for every deterministic compressor, many seeds and

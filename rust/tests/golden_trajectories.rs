@@ -191,3 +191,86 @@ fn golden_trajectory_is_engine_independent() {
         assert_eq!(a.gt.to_bits(), b.gt.to_bits());
     }
 }
+
+/// `--blocks 1` is not a new trajectory: the single-block layout must
+/// reproduce the canonical flat run bit for bit, so the existing golden
+/// fixtures also lock the blocked pipeline's degenerate case. The flat
+/// reference is assembled by hand (`from_spec` + `algo::build` +
+/// `run_protocol`, no block API anywhere) so the comparison cannot
+/// collapse into one code path testing itself.
+#[test]
+fn golden_blocks1_matches_canonical_flat_run() {
+    use ef21::compress::Compressor;
+    use std::sync::Arc;
+    let ds = ef21::data::synth::generate_custom("golden", 300, 10, 0.4, 42);
+    let p = Problem::from_dataset(ds, Objective::LogReg, 4, 0.1);
+    // The canonical run's exact parameters, without blocked plumbing.
+    let c: Arc<dyn Compressor> = Arc::from(ef21::compress::from_spec("top2").unwrap());
+    let gamma = p.theory_gamma(c.alpha(p.d()));
+    let (m, w) = ef21::algo::build(AlgoSpec::Ef21, vec![0.0; p.d()], p.oracles(), c, gamma, 7);
+    let mut cfg = ef21::coordinator::runner::RunConfig::rounds(GOLDEN_ROUNDS);
+    cfg.divergence_cap = 1e60;
+    let flat = ef21::coordinator::runner::run_protocol(m, w, &cfg);
+
+    let layout = Arc::new(ef21::blocks::BlockLayout::flat(p.d()));
+    let blocked =
+        p.run_trial_blocked(AlgoSpec::Ef21, "top2", 1.0, None, GOLDEN_ROUNDS, 1, 7, 1, layout);
+    assert_eq!(flat.records.len(), blocked.records.len());
+    for (a, b) in flat.records.iter().zip(&blocked.records) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        assert_eq!(a.grad_norm_sq.to_bits(), b.grad_norm_sq.to_bits());
+        assert_eq!(a.bits_per_client.to_bits(), b.bits_per_client.to_bits());
+        assert_eq!(a.gt.to_bits(), b.gt.to_bits());
+    }
+}
+
+/// The blocked configuration gets its own pinned fixture (same
+/// lifecycle: bootstrap on first run, strict under EF21_GOLDEN_STRICT=1,
+/// regen via EF21_UPDATE_GOLDEN=1): the canonical problem under a
+/// 5-block equal partition with layer-wise Top-k — per-block budgets,
+/// per-block state, blocked absorb, and delta downlink accounting all
+/// sit under this trajectory.
+#[test]
+fn golden_ef21_blocked() {
+    use std::sync::Arc;
+    let ds = ef21::data::synth::generate_custom("golden", 300, 10, 0.4, 42);
+    let p = Problem::from_dataset(ds, Objective::LogReg, 4, 0.1);
+    let layout = Arc::new(ef21::blocks::BlockLayout::equal(5, p.d()).unwrap());
+    let h = p.run_trial_blocked(
+        AlgoSpec::Ef21,
+        "top2",
+        1.0,
+        None,
+        GOLDEN_ROUNDS,
+        1,
+        7,
+        1,
+        layout,
+    );
+    assert!(!h.records.is_empty(), "EF21-blocked: canonical run recorded nothing");
+    assert!(h.downlink_bits > 0, "blocked run must meter the downlink");
+    let path = golden_dir().join("trajectory_ef21_blocked5.json");
+    let regen = std::env::var("EF21_UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false);
+    if regen || !path.exists() {
+        let strict = std::env::var("EF21_GOLDEN_STRICT").map(|v| v == "1").unwrap_or(false);
+        if strict && !regen {
+            panic!(
+                "EF21-blocked: golden fixture {} missing under EF21_GOLDEN_STRICT=1 — \
+                 generate it (cargo test) and COMMIT it",
+                path.display()
+            );
+        }
+        std::fs::create_dir_all(golden_dir()).unwrap();
+        std::fs::write(&path, history_to_json(&h).to_string()).unwrap();
+        eprintln!(
+            "golden: {} blocked-EF21 fixture at {} — COMMIT this file",
+            if regen { "regenerated" } else { "bootstrapped" },
+            path.display()
+        );
+        return;
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    let fixture = Json::parse(&text)
+        .unwrap_or_else(|e| panic!("EF21-blocked: unparsable golden fixture: {e}"));
+    compare("EF21-blocked", &fixture, &h);
+}

@@ -1,0 +1,326 @@
+//! Block-partitioned pipeline integration: Eq. (3) contraction per block
+//! and for the composite operator, exact bit accounting, `blocks = 1`
+//! bit-identity with the legacy flat path, worker×block tile
+//! determinism, and downlink delta-broadcast accounting (simulated and
+//! over a real transport).
+
+use ef21::algo::{AlgoSpec, BuildOpts};
+use ef21::blocks::BlockLayout;
+use ef21::compress::{BlockCompressor, Compressor, TopK};
+use ef21::coordinator::dist::{run_distributed_opts, Broadcast, TransportKind};
+use ef21::coordinator::runner::{run_protocol, RunConfig};
+use ef21::exp::{Objective, Problem};
+use ef21::metrics::History;
+use ef21::oracle::{GradOracle, QuadraticOracle};
+use ef21::util::rng::Rng;
+use ef21::util::testing::{for_all_seeds, random_vec};
+use std::sync::Arc;
+
+fn tiny_problem() -> Problem {
+    let ds = ef21::data::synth::generate_custom("blk", 400, 12, 0.4, 5);
+    Problem::from_dataset(ds, Objective::LogReg, 4, 0.1)
+}
+
+fn assert_histories_bit_identical(a: &History, b: &History) {
+    assert_eq!(a.records.len(), b.records.len());
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "loss @ round {}", x.round);
+        assert_eq!(x.grad_norm_sq.to_bits(), y.grad_norm_sq.to_bits());
+        assert_eq!(x.bits_per_client.to_bits(), y.bits_per_client.to_bits());
+        assert_eq!(x.gt.to_bits(), y.gt.to_bits());
+    }
+}
+
+/// Eq. (3) holds per block with each block's own alpha_b, and for the
+/// composite operator with alpha = min_b alpha_b.
+#[test]
+fn contraction_per_block_and_composite() {
+    for_all_seeds(25, |rng| {
+        let n_blocks = 2 + rng.next_below(4);
+        let d = n_blocks * (2 + rng.next_below(10));
+        let k = 1 + rng.next_below(d);
+        let layout = Arc::new(BlockLayout::equal(n_blocks, d).unwrap());
+        let c = BlockCompressor::from_spec(&format!("top{k}"), layout.clone(), 1).unwrap();
+        let v = random_vec(rng, d, 3.0);
+        let out = c.compress(&v, rng).sparse.to_dense(d);
+        let alphas = c.block_alphas();
+        let mut total_dist = 0.0;
+        let mut total_norm = 0.0;
+        for (b, spec) in layout.specs().iter().enumerate() {
+            let vb = &v[spec.range()];
+            let ob = &out[spec.range()];
+            let dist: f64 = ob.iter().zip(vb).map(|(a, x)| (a - x) * (a - x)).sum();
+            let norm: f64 = vb.iter().map(|x| x * x).sum();
+            assert!(
+                dist <= (1.0 - alphas[b]) * norm + 1e-9,
+                "block {b}: dist {dist} > (1 - {}) * {norm}",
+                alphas[b]
+            );
+            total_dist += dist;
+            total_norm += norm;
+        }
+        let alpha = c.alpha(d);
+        assert!(
+            total_dist <= (1.0 - alpha) * total_norm + 1e-9,
+            "composite Eq.(3) violated: {total_dist} vs (1 - {alpha}) * {total_norm}"
+        );
+    });
+}
+
+/// Composite wire cost is exactly the sum of the per-block inner costs.
+#[test]
+fn bit_accounting_is_sum_of_per_block_costs() {
+    for_all_seeds(20, |rng| {
+        let n_blocks = 1 + rng.next_below(5);
+        let d = n_blocks * (1 + rng.next_below(12));
+        let k = 1 + rng.next_below(d);
+        let layout = Arc::new(BlockLayout::equal(n_blocks, d).unwrap());
+        let blocked = BlockCompressor::from_spec(&format!("top{k}"), layout.clone(), 1).unwrap();
+        let budgets = ef21::compress::split_budget(k, &layout);
+        let v = random_vec(rng, d, 1.0);
+        let out = blocked.compress(&v, rng);
+        let mut want = 0u64;
+        for (b, spec) in layout.specs().iter().enumerate() {
+            want += TopK::new(budgets[b]).compress(&v[spec.range()], rng).bits;
+        }
+        assert_eq!(out.bits, want);
+    });
+}
+
+/// `blocks = 1` is the exact legacy path. The reference side is built by
+/// hand — `compress::from_spec` + `algo::build` + `run_protocol`, no
+/// blocked plumbing anywhere — so this cannot degenerate into comparing
+/// `run_trial_blocked(flat)` against itself.
+#[test]
+fn blocks1_run_is_bit_identical_to_flat_run() {
+    let p = tiny_problem();
+    for algo in [AlgoSpec::Ef21, AlgoSpec::Ef21Plus, AlgoSpec::Ef, AlgoSpec::Dcgd] {
+        // Legacy reference, assembled without touching any block API.
+        let c: Arc<dyn Compressor> = Arc::from(ef21::compress::from_spec("top3").unwrap());
+        let gamma = p.theory_gamma(c.alpha(p.d()));
+        let (m, w) = ef21::algo::build(algo, vec![0.0; p.d()], p.oracles(), c, gamma, 3);
+        let mut cfg = RunConfig::rounds(50).with_record_every(5);
+        cfg.divergence_cap = 1e60;
+        let legacy = run_protocol(m, w, &cfg);
+
+        let flat_layout = Arc::new(BlockLayout::flat(p.d()));
+        let blocked = p.run_trial_blocked(algo, "top3", 1.0, None, 50, 5, 3, 1, flat_layout);
+        assert_histories_bit_identical(&legacy, &blocked);
+    }
+}
+
+/// An explicitly single-block `BlockCompressor` (not the flat shortcut)
+/// also reproduces the legacy trajectory bit for bit — the degenerate
+/// case really is the same operator, not just the same plumbing.
+#[test]
+fn explicit_single_block_compressor_matches_plain_topk() {
+    let p = tiny_problem();
+    let gamma = p.theory_gamma(3.0 / p.d() as f64);
+    let build_with_comp = |c: Arc<dyn Compressor>| {
+        ef21::algo::build(AlgoSpec::Ef21, vec![0.0; p.d()], p.oracles(), c, gamma, 7)
+    };
+    let (m1, w1) = build_with_comp(Arc::new(TopK::new(3)));
+    let h1 = run_protocol(m1, w1, &RunConfig::rounds(40));
+    let layout = Arc::new(BlockLayout::flat(p.d()));
+    let blocked = BlockCompressor::from_spec("top3", layout, 1).unwrap();
+    let (m2, w2) = build_with_comp(Arc::new(blocked));
+    let h2 = run_protocol(m2, w2, &RunConfig::rounds(40));
+    assert_histories_bit_identical(&h1, &h2);
+}
+
+/// Worker × block tiles are deterministic: a blocked run is bit-identical
+/// at every absorb/compress fan-out width.
+#[test]
+fn blocked_run_is_bit_identical_at_any_thread_width() {
+    let p = tiny_problem();
+    let layout = Arc::new(BlockLayout::equal(6, p.d()).unwrap());
+    let base = p.run_trial_blocked(
+        AlgoSpec::Ef21,
+        "top6",
+        1.0,
+        None,
+        60,
+        4,
+        1,
+        1,
+        layout.clone(),
+    );
+    assert!(base.downlink_bits > 0);
+    for threads in [2usize, 4, 8] {
+        let h = p.run_trial_blocked(
+            AlgoSpec::Ef21,
+            "top6",
+            1.0,
+            None,
+            60,
+            4,
+            1,
+            threads,
+            layout.clone(),
+        );
+        assert_histories_bit_identical(&base, &h);
+        assert_eq!(base.downlink_bits, h.downlink_bits);
+    }
+}
+
+/// Blocked uplink accounting: with per-block Top-k budgets the per-round
+/// uplink is exactly `sum_b k_b` standard entries per worker.
+#[test]
+fn blocked_uplink_bits_match_budget_sum() {
+    let p = tiny_problem();
+    let layout = Arc::new(BlockLayout::equal(4, p.d()).unwrap());
+    let budgets = ef21::compress::split_budget(6, &layout);
+    let k_eff: usize = budgets.iter().sum();
+    let h = p.run_trial_blocked(AlgoSpec::Ef21, "top6", 1.0, None, 10, 1, 0, 1, layout);
+    // init + round 0 => 2 messages of k_eff entries (idx+val = 64 bits).
+    let per_round = (k_eff * 64) as f64;
+    assert!((h.records[0].bits_per_client - 2.0 * per_round).abs() < 1e-9);
+    let last = h.records.last().unwrap();
+    assert!((last.bits_per_client - 11.0 * per_round).abs() < 1e-9);
+}
+
+/// Three quadratic workers whose objectives are constant on the second
+/// half of the coordinates: that block's gradient is identically zero,
+/// so after the initial full broadcast its model never moves and delta
+/// broadcast must come in strictly under dense — the simulated meter and
+/// the real transport agree on that.
+const FROZEN_D: usize = 16;
+
+fn frozen_block_setup() -> (Vec<f64>, Arc<BlockLayout>, f64) {
+    let layout = Arc::new(BlockLayout::equal(2, FROZEN_D).unwrap());
+    (vec![0.5; FROZEN_D], layout, 0.1)
+}
+
+fn frozen_block_oracle(i: usize) -> Box<dyn GradOracle> {
+    // Curvature only inside block 1 (coords 0..8); block 2 (coords
+    // 8..16) is flat, so its gradient is identically zero.
+    let mut h = vec![0.0; FROZEN_D];
+    let mut c = vec![0.0; FROZEN_D];
+    h[i % 8] = 4.0;
+    h[(i + 1) % 8] = 2.0;
+    c[i % 8] = (i + 1) as f64;
+    Box::new(QuadraticOracle::diagonal(h, c))
+}
+
+#[test]
+fn delta_downlink_is_strictly_cheaper_when_a_block_freezes() {
+    let (x0, layout, gamma) = frozen_block_setup();
+    let oracles: Vec<Box<dyn GradOracle>> = (0..3).map(frozen_block_oracle).collect();
+    let c: Arc<dyn Compressor> =
+        Arc::from(ef21::compress::from_spec_blocked("top2", &layout, 1).unwrap());
+    let opts = BuildOpts { layout: Some(layout.clone()), threads: 1, full_init: false };
+    let (m, w) = ef21::algo::build_with(AlgoSpec::Ef21, x0, oracles, c, gamma, 0, &opts);
+    let rounds = 200u64;
+    let cfg = RunConfig::rounds(rounds as usize).with_layout(layout.clone());
+    let h = run_protocol(m, w, &cfg);
+    let dense_bits = (rounds + 1) * 32 * FROZEN_D as u64;
+    assert!(
+        h.downlink_bits < dense_bits,
+        "delta downlink {} not below dense {dense_bits}",
+        h.downlink_bits
+    );
+    // The frozen block is never re-broadcast: every post-init round costs
+    // at most one 8-coordinate patch (frame header + patch header + f32s),
+    // which is strictly below the 16-coordinate dense frame.
+    let per_round_max = 32 + 64 + 8 * 32;
+    assert!(h.downlink_bits <= (FROZEN_D as u64 * 32) + rounds * per_round_max);
+    // And the run still makes progress on the live block.
+    let first = h.records.first().unwrap().grad_norm_sq;
+    let last = h.records.last().unwrap().grad_norm_sq;
+    assert!(last < first * 0.5, "no progress: {first} -> {last}");
+    assert!(last.is_finite() && first.is_finite());
+}
+
+#[test]
+fn dist_delta_broadcast_matches_dense_and_is_cheaper() {
+    let (x0, layout, gamma) = frozen_block_setup();
+    let run = |broadcast: Broadcast| {
+        let layout = layout.clone();
+        let x0 = x0.clone();
+        let master = Box::new(ef21::algo::ef21::Ef21Master::with_layout(
+            x0,
+            3,
+            gamma,
+            layout.clone(),
+            1,
+        ));
+        run_distributed_opts(
+            master,
+            3,
+            move |i| {
+                let c: Arc<dyn Compressor> =
+                    Arc::from(ef21::compress::from_spec_blocked("top2", &layout, 1).unwrap());
+                let rng = ef21::util::rng::worker_rng(0, i);
+                Box::new(ef21::algo::ef21::Ef21Worker::with_layout(
+                    frozen_block_oracle(i),
+                    c,
+                    rng,
+                    layout.clone(),
+                ))
+            },
+            30,
+            TransportKind::Local,
+            "dist-blocks",
+            broadcast,
+        )
+        .unwrap()
+    };
+    let dense = run(Broadcast::Dense);
+    let delta = run(Broadcast::Delta(layout.clone()));
+    // Same trajectory (delta-applied models equal dense f32 broadcasts
+    // bit for bit), same uplink accounting.
+    for (a, b) in dense.history.records.iter().zip(&delta.history.records) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "round {}", a.round);
+        assert_eq!(a.bits_per_client.to_bits(), b.bits_per_client.to_bits());
+    }
+    for (a, b) in dense.final_x.iter().zip(&delta.final_x) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // Strictly fewer downlink bits and bytes on the wire.
+    assert!(delta.history.downlink_bits < dense.history.downlink_bits);
+    assert!(delta.downlink_frame_bytes < dense.downlink_frame_bytes);
+}
+
+/// The blocked compressor's per-block telemetry keys appear under
+/// `compress.<spec>.<block>.*` when telemetry is enabled.
+#[test]
+fn per_block_telemetry_keys_are_emitted() {
+    let layout = Arc::new(BlockLayout::equal(2, 8).unwrap());
+    let c = ef21::compress::from_spec_blocked("top2", &layout, 1).unwrap();
+    ef21::telemetry::enable();
+    let mut rng = Rng::seed(0);
+    let v: Vec<f64> = (0..8).map(|j| j as f64 + 1.0).collect();
+    let _ = c.compress(&v, &mut rng);
+    ef21::telemetry::disable();
+    let snap = ef21::telemetry::snapshot();
+    let keys: Vec<String> = snap.histograms.iter().map(|(k, _)| k.clone()).collect();
+    assert!(
+        keys.iter().any(|k| k == "compress.top2.b0.ns"),
+        "missing per-block latency key; histogram keys: {keys:?}"
+    );
+    assert!(keys.iter().any(|k| k == "compress.top2.b1.ns"));
+}
+
+/// EF21 with a blocked layout still converges on the divergence example
+/// (alpha = min_b alpha_b keeps the Theorem-1 stepsize valid).
+#[test]
+fn blocked_ef21_converges_on_divergence_example() {
+    let oracles: Vec<Box<dyn GradOracle>> = ef21::oracle::quadratic::divergence_example()
+        .into_iter()
+        .map(|q| Box::new(q) as Box<dyn GradOracle>)
+        .collect();
+    let layout = Arc::new(BlockLayout::equal(3, 3).unwrap());
+    let c: Arc<dyn Compressor> =
+        Arc::from(ef21::compress::from_spec_blocked("top1", &layout, 1).unwrap());
+    let alpha = c.alpha(3);
+    let gamma = ef21::theory::stepsize_theorem1(16.0, 16.0, alpha);
+    let opts = BuildOpts { layout: Some(layout.clone()), threads: 1, full_init: false };
+    let (m, w) = ef21::algo::build_with(AlgoSpec::Ef21, vec![1.0; 3], oracles, c, gamma, 2, &opts);
+    let h = run_protocol(m, w, &RunConfig::rounds(4000).with_layout(layout));
+    assert!(
+        h.records.last().unwrap().grad_norm_sq < 1e-10,
+        "blocked EF21 failed to converge: {}",
+        h.records.last().unwrap().grad_norm_sq
+    );
+}

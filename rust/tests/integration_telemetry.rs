@@ -35,11 +35,17 @@ fn global_lifecycle_uplink_exactness_and_exporters() {
     // counter must equal History::bits_per_client * n EXACTLY. ---
     let evals_before = telemetry::snapshot().counter(keys::ORACLE_GRAD_EVALS).unwrap_or(0);
     let bits_before = telemetry::snapshot().counter(keys::UPLINK_BITS).unwrap_or(0);
+    let down_before = telemetry::snapshot().counter(keys::DOWNLINK_BITS).unwrap_or(0);
     let ds = ef21::data::synth::generate_custom("tele", 800, 16, 0.4, 7);
     let p = Problem::from_dataset(ds, Objective::LogReg, 20, 0.1);
     let h = p.run_trial(AlgoSpec::Ef21, "top2", 1.0, None, 10, 1, 3);
     assert!(!h.diverged());
     let bits_after = telemetry::snapshot().counter(keys::UPLINK_BITS).unwrap();
+    // Downlink finally metered next to the uplink: flat layout = dense
+    // accounting, (init + 10 rounds) x 32 bits x d = 16.
+    let down_after = telemetry::snapshot().counter(keys::DOWNLINK_BITS).unwrap();
+    assert_eq!(down_after - down_before, 11 * 32 * 16);
+    assert_eq!(h.downlink_bits, 11 * 32 * 16);
     let bits_per_client = h.records.last().unwrap().bits_per_client;
     assert_eq!(
         bits_after - bits_before,
