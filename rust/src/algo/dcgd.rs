@@ -48,6 +48,15 @@ impl WorkerNode for DcgdWorker {
     fn last_grad(&self) -> &[f64] {
         &self.last_grad
     }
+
+    // DCGD workers are stateless: crash and resync are both no-ops.
+    fn supports_resync(&self) -> bool {
+        true
+    }
+
+    fn crash(&mut self) {}
+
+    fn resync(&mut self, _state: &[f64]) {}
 }
 
 pub struct DcgdMaster {

@@ -106,6 +106,21 @@ impl WorkerNode for Ef21Worker {
     fn distortion_sq(&self) -> Option<f64> {
         Some(linalg::dist_sq(self.g.as_slice(), &self.last_grad))
     }
+
+    // Crash model: g_i is exactly what the master's StateTracker mirrors
+    // (every uplink is a delta against it), so resync is lossless.
+    fn supports_resync(&self) -> bool {
+        true
+    }
+
+    fn crash(&mut self) {
+        self.g.as_mut_slice().iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    fn resync(&mut self, state: &[f64]) {
+        assert_eq!(state.len(), self.g.as_slice().len(), "StateSync dimension mismatch");
+        self.g.as_mut_slice().copy_from_slice(state);
+    }
 }
 
 pub struct Ef21Master {

@@ -128,6 +128,35 @@ impl WorkerNode for Ef21PlusWorker {
     fn used_dcgd_branch(&self) -> Option<bool> {
         Some(self.last_branch_dcgd)
     }
+
+    /// Absent EF21+ workers still speak the tagged wire protocol: a
+    /// Markov-branch no-op delta (the master holds `g_i` and `g_sum`).
+    /// Accounted at 0 bits — nothing actually travels.
+    fn absent_msg(&self) -> WireMsg {
+        WireMsg::Tagged {
+            dcgd_branch: false,
+            payload: crate::compress::Compressed {
+                sparse: crate::compress::SparseVec::empty(),
+                bits: 0,
+            },
+        }
+    }
+
+    // g_i is message-determined (delta or whole-state assignment), so
+    // the master's tracker can rebuild it exactly.
+    fn supports_resync(&self) -> bool {
+        true
+    }
+
+    fn crash(&mut self) {
+        self.g.as_mut_slice().iter_mut().for_each(|v| *v = 0.0);
+        self.last_branch_dcgd = false;
+    }
+
+    fn resync(&mut self, state: &[f64]) {
+        assert_eq!(state.len(), self.g.as_slice().len(), "StateSync dimension mismatch");
+        self.g.as_mut_slice().copy_from_slice(state);
+    }
 }
 
 pub struct Ef21PlusMaster {

@@ -121,6 +121,42 @@ pub trait WorkerNode: Send {
     fn used_dcgd_branch(&self) -> Option<bool> {
         None
     }
+
+    // -- scheduler hooks (partial participation & fault model) --
+
+    /// The message an absent worker implicitly contributes under a
+    /// participation schedule: a no-op for this algorithm's master (a
+    /// zero Markov delta for the EF21 family), costing 0 accounted bits.
+    /// EF21-PP semantics fall out of this: absorbing the no-op holds the
+    /// worker's mirrored state `g_i^t` on the master.
+    fn absent_msg(&self) -> WireMsg {
+        WireMsg::Sparse(Compressed { sparse: crate::compress::SparseVec::empty(), bits: 0 })
+    }
+
+    /// Whether crash→resync is supported: the worker is stateless, or
+    /// its uplink messages fully determine its state so the master's
+    /// [`crate::sched::StateTracker`] can reconstruct it. Workers whose
+    /// state is not message-derivable (classic EF's error accumulator
+    /// depends on unsent gradients) must leave this `false`; schedulers
+    /// with crash events are rejected for them up front.
+    fn supports_resync(&self) -> bool {
+        false
+    }
+
+    /// Model a crash: drop all local algorithm state, as a restarted
+    /// process would. Cached instrumentation (last loss/gradient) and
+    /// the RNG stream survive — they belong to the harness, not to the
+    /// crashed process. Only called when [`Self::supports_resync`].
+    fn crash(&mut self) {
+        unreachable!("crash scheduled for a worker without resync support");
+    }
+
+    /// Restore state from the master's StateSync reconstruction (f64,
+    /// exact). Only called when [`Self::supports_resync`].
+    fn resync(&mut self, state: &[f64]) {
+        let _ = state;
+        unreachable!("resync scheduled for a worker without resync support");
+    }
 }
 
 /// Master-side state machine.

@@ -18,7 +18,7 @@
 //!   tile: disjoint block ranges of the target are updated on separate
 //!   threads while, **within each coordinate**, messages are applied in
 //!   worker-index order — exactly the sequential order, so the result is
-//!   bit-identical to the legacy per-message loop (DESIGN.md §6).
+//!   bit-identical to the legacy per-message loop (DESIGN.md §5).
 
 pub mod workspace;
 

@@ -135,6 +135,107 @@ impl BlocksSpec {
     }
 }
 
+/// `--participation`/`--faults`/`--deadline-ms` spec: the round
+/// scheduling configuration (see `crate::sched`). The default —
+/// full participation, no faults, no deadline — is the exact legacy
+/// protocol and resolves to no scheduler at all.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SchedSpec {
+    pub participation: crate::sched::Participation,
+    pub faults: crate::sched::FaultPlan,
+    /// Straggler cutoff per round (ms). When unset but straggles are
+    /// scheduled, the transport I/O timeout (`--net-timeout-ms` chain)
+    /// is used as the deadline floor, so a straggler can never outlast
+    /// the connection itself.
+    pub deadline_ms: Option<u64>,
+}
+
+impl SchedSpec {
+    /// Read `--participation`, `--faults`, and `--deadline-ms` from
+    /// parsed args (all absent = legacy).
+    pub fn from_args(args: &cli::Args) -> Result<SchedSpec> {
+        let participation = match args.get_str("participation") {
+            Some(s) => crate::sched::Participation::parse(s)?,
+            None => crate::sched::Participation::Full,
+        };
+        let faults = match args.get_str("faults") {
+            Some(s) => crate::sched::FaultPlan::parse(s)?,
+            None => crate::sched::FaultPlan::none(),
+        };
+        let deadline_ms = args.get_parse::<u64>("deadline-ms")?;
+        Ok(SchedSpec { participation, faults, deadline_ms })
+    }
+
+    /// True when this spec cannot change the legacy protocol.
+    pub fn is_legacy(&self) -> bool {
+        self.participation == crate::sched::Participation::Full
+            && self.faults.is_empty()
+            && self.deadline_ms.is_none()
+    }
+
+    /// Resolve to a concrete scheduler for `n_workers` workers, seeded
+    /// by the run seed; `None` = take the exact legacy code path.
+    ///
+    /// The deadline is exactly `deadline_ms` — in particular, simulated
+    /// trajectories depend only on `(spec, seed)`, never on the
+    /// network-timeout knob (use [`Self::build_for_transport`] when a
+    /// real transport is in play).
+    pub fn build(
+        &self,
+        n_workers: usize,
+        seed: u64,
+    ) -> Result<Option<std::sync::Arc<crate::sched::Scheduler>>> {
+        self.build_with_deadline(n_workers, seed, self.deadline_ms)
+    }
+
+    /// [`Self::build`] for runs over a real transport: when straggles
+    /// are scheduled and no `--deadline-ms` was given, the transport I/O
+    /// timeout becomes the deadline floor, so a straggler's real sleep
+    /// can never outlast the connection itself.
+    pub fn build_for_transport(
+        &self,
+        n_workers: usize,
+        seed: u64,
+    ) -> Result<Option<std::sync::Arc<crate::sched::Scheduler>>> {
+        let deadline = self.deadline_ms.or_else(|| {
+            if self.faults.has_straggles() {
+                crate::transport::tcp::io_timeout().map(|d| d.as_millis() as u64)
+            } else {
+                None
+            }
+        });
+        self.build_with_deadline(n_workers, seed, deadline)
+    }
+
+    fn build_with_deadline(
+        &self,
+        n_workers: usize,
+        seed: u64,
+        deadline_ms: Option<u64>,
+    ) -> Result<Option<std::sync::Arc<crate::sched::Scheduler>>> {
+        if self.is_legacy() {
+            return Ok(None);
+        }
+        let sched = crate::sched::Scheduler::new(
+            self.participation,
+            self.faults.clone(),
+            deadline_ms,
+            n_workers,
+            seed,
+        )?;
+        Ok(Some(std::sync::Arc::new(sched)))
+    }
+}
+
+/// Read `--net-timeout-ms` (0 = disable I/O timeouts). The caller
+/// installs it process-wide via
+/// [`crate::transport::tcp::set_default_io_timeout_ms`]; when absent the
+/// env chain (`EF21_NET_TIMEOUT_MS`, then the legacy
+/// `EF21_TCP_TIMEOUT_SECS`) applies.
+pub fn net_timeout_ms_from_args(args: &cli::Args) -> Result<Option<u64>> {
+    args.get_parse::<u64>("net-timeout-ms")
+}
+
 /// One fully-specified training run.
 #[derive(Clone, Debug)]
 pub struct RunSpec {
@@ -164,6 +265,9 @@ pub struct RunSpec {
     /// Parameter-space partition (`--blocks flat|auto|<n>|name:len,...`;
     /// `Flat` = exact legacy single-block path).
     pub blocks: BlocksSpec,
+    /// Round participation/fault schedule (`--participation`, `--faults`,
+    /// `--deadline-ms`; the default is the exact legacy protocol).
+    pub sched: SchedSpec,
 }
 
 impl Default for RunSpec {
@@ -182,6 +286,7 @@ impl Default for RunSpec {
             telemetry: "off".into(),
             threads: Threads::Auto,
             blocks: BlocksSpec::Flat,
+            sched: SchedSpec::default(),
         }
     }
 }
@@ -214,6 +319,7 @@ impl RunSpec {
         }
         s.threads = Threads::from_args(args)?;
         s.blocks = BlocksSpec::from_args(args)?;
+        s.sched = SchedSpec::from_args(args)?;
         Ok(s)
     }
 
@@ -297,6 +403,92 @@ mod tests {
         let args = cli::Args::from_vec(vec!["--blocks".into(), "4".into()]);
         let s = RunSpec::from_args(&args).unwrap();
         assert_eq!(s.blocks, BlocksSpec::Count(4));
+    }
+
+    #[test]
+    fn sched_spec_parses_and_resolves() {
+        // Absent flags = legacy = no scheduler built.
+        let s = SchedSpec::from_args(&cli::Args::from_vec(vec![])).unwrap();
+        assert!(s.is_legacy());
+        assert!(s.build(8, 0).unwrap().is_none());
+        // `--participation full` alone is still the legacy path (golden
+        // trajectories must not move).
+        let s = SchedSpec::from_args(&cli::Args::from_vec(vec![
+            "--participation".into(),
+            "full".into(),
+        ]))
+        .unwrap();
+        assert!(s.is_legacy());
+        assert!(s.build(8, 0).unwrap().is_none());
+        // A real spec builds a scheduler sized to the run.
+        let s = SchedSpec::from_args(&cli::Args::from_vec(vec![
+            "--participation".into(),
+            "p:0.5".into(),
+            "--faults".into(),
+            "crash@3,rejoin@6".into(),
+            "--deadline-ms".into(),
+            "250".into(),
+        ]))
+        .unwrap();
+        assert!(!s.is_legacy());
+        let sched = s.build(8, 7).unwrap().unwrap();
+        assert_eq!(sched.n_workers(), 8);
+        assert_eq!(sched.deadline_ms(), Some(250));
+        assert!(sched.needs_resync());
+        // Fault plans referencing out-of-range workers fail at build.
+        let bad = SchedSpec {
+            faults: crate::sched::FaultPlan::parse("w9:crash@1").unwrap(),
+            ..SchedSpec::default()
+        };
+        assert!(bad.build(4, 0).is_err());
+        // Malformed flags error at parse.
+        assert!(SchedSpec::from_args(&cli::Args::from_vec(vec![
+            "--participation".into(),
+            "p:2.0".into(),
+        ]))
+        .is_err());
+        assert!(SchedSpec::from_args(&cli::Args::from_vec(vec![
+            "--faults".into(),
+            "rejoin@2".into(),
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn deadline_floor_applies_to_transport_builds_only() {
+        let s = SchedSpec {
+            faults: crate::sched::FaultPlan::parse("straggle(0,1..2,10ms)").unwrap(),
+            ..SchedSpec::default()
+        };
+        // Sim builds never consult the network-timeout knob: the
+        // trajectory must depend only on (spec, seed).
+        assert_eq!(s.build(2, 0).unwrap().unwrap().deadline_ms(), None);
+        // Transport builds floor to the resolved I/O timeout (or stay
+        // unset when timeouts are disabled).
+        let io_ms = crate::transport::tcp::io_timeout().map(|d| d.as_millis() as u64);
+        assert_eq!(s.build_for_transport(2, 0).unwrap().unwrap().deadline_ms(), io_ms);
+        // An explicit deadline wins everywhere.
+        let s2 = SchedSpec { deadline_ms: Some(77), ..s };
+        assert_eq!(s2.build(2, 0).unwrap().unwrap().deadline_ms(), Some(77));
+        assert_eq!(s2.build_for_transport(2, 0).unwrap().unwrap().deadline_ms(), Some(77));
+    }
+
+    #[test]
+    fn net_timeout_flag_parses() {
+        assert_eq!(
+            net_timeout_ms_from_args(&cli::Args::from_vec(vec![
+                "--net-timeout-ms".into(),
+                "750".into()
+            ]))
+            .unwrap(),
+            Some(750)
+        );
+        assert_eq!(net_timeout_ms_from_args(&cli::Args::from_vec(vec![])).unwrap(), None);
+        assert!(net_timeout_ms_from_args(&cli::Args::from_vec(vec![
+            "--net-timeout-ms".into(),
+            "soon".into()
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -23,9 +23,11 @@ use crate::algo::{MasterNode, WireMsg, WorkerNode};
 use crate::blocks::BlockLayout;
 use crate::compress::{Compressed, SparseVec};
 use crate::metrics::{History, RoundRecord};
+use crate::sched::{Scheduler, StateTracker};
 use crate::telemetry::{self, keys};
 use crate::transport::codec::{decode, encode, BlockPatch, Frame};
 use crate::transport::downlink::DownlinkMeter;
+use crate::transport::fault::FaultConn;
 use crate::transport::{local, tcp, Conn};
 use anyhow::{bail, ensure, Context, Result};
 use std::sync::Arc;
@@ -228,6 +230,116 @@ fn gather(conns: &mut [Box<dyn Conn>], d: usize) -> Result<(Vec<WireMsg>, Vec<f6
     Ok((msgs, losses, bytes))
 }
 
+/// Worker-thread entry point: `(worker index, connection) -> exit result`.
+type RunWorker = Arc<dyn Fn(usize, Box<dyn Conn>) -> Result<()> + Send + Sync>;
+
+/// Master-side conns (worker order) plus the worker thread handles.
+type WiredTransport = (Vec<Box<dyn Conn>>, Vec<std::thread::JoinHandle<Result<()>>>);
+
+/// Wire one [`Conn`] per worker and spawn the worker threads, each
+/// running `run_worker(i, conn)`; master-side conns come back in worker
+/// order. Shared by the legacy and the scheduler-aware runners, so both
+/// speak the identical handshake (TCP workers announce their id first;
+/// the master orders accepted conns by it).
+/// `unbounded_worker_reads` disables the read timeout on WORKER-side TCP
+/// conns: under a participation schedule a worker legitimately blocks in
+/// one `recv` across every round it sits out, a wait bounded by protocol
+/// progress rather than by any single scheduled delay, so the dead-peer
+/// timeout must not police it. Master-side conns keep their timeouts —
+/// the master's waits are bounded by one round's delay + compute.
+fn wire_transport(
+    kind: TransportKind,
+    n_workers: usize,
+    run_worker: RunWorker,
+    unbounded_worker_reads: bool,
+) -> Result<WiredTransport> {
+    let mut master_conns: Vec<Box<dyn Conn>> = Vec::with_capacity(n_workers);
+    let mut handles = Vec::with_capacity(n_workers);
+    match kind {
+        TransportKind::Local => {
+            for i in 0..n_workers {
+                let (m_end, w_end) = local::pair();
+                master_conns.push(Box::new(m_end));
+                let rw = run_worker.clone();
+                handles.push(std::thread::spawn(move || rw(i, Box::new(w_end))));
+            }
+        }
+        TransportKind::Tcp => {
+            let (port, acceptor) = tcp::listen_local(n_workers)?;
+            for i in 0..n_workers {
+                let rw = run_worker.clone();
+                handles.push(std::thread::spawn(move || {
+                    // Stagger connects so accept order == worker order.
+                    std::thread::sleep(std::time::Duration::from_millis(5 * i as u64));
+                    let (attempts, backoff) = tcp::connect_retry_schedule();
+                    let mut conn = tcp::TcpConn::connect_with_retry(
+                        &format!("127.0.0.1:{port}"),
+                        attempts,
+                        backoff,
+                    )?;
+                    if unbounded_worker_reads {
+                        conn.set_io_timeout(None)?;
+                    }
+                    // Identify ourselves first so the master can order us.
+                    conn.send(&(i as u32).to_le_bytes())?;
+                    rw(i, Box::new(conn))
+                }));
+            }
+            // Order accepted conns by the announced worker id.
+            let conns = acceptor.join().expect("acceptor panicked")?;
+            let mut ordered: Vec<Option<tcp::TcpConn>> = (0..n_workers).map(|_| None).collect();
+            for mut c in conns {
+                let id_bytes = c.recv()?;
+                // Length-checked decode: a malformed hello must surface
+                // as an error, not an out-of-bounds slice panic.
+                ensure!(
+                    id_bytes.len() == 4,
+                    "bad worker-id handshake frame: {} bytes (expected 4)",
+                    id_bytes.len()
+                );
+                let id =
+                    u32::from_le_bytes(id_bytes[..].try_into().expect("length checked above"))
+                        as usize;
+                ensure!(id < n_workers, "bad worker id {id}");
+                ensure!(ordered[id].is_none(), "duplicate worker id {id}");
+                ordered[id] = Some(c);
+            }
+            for c in ordered {
+                master_conns.push(Box::new(c.context("missing worker connection")?));
+            }
+        }
+    }
+    Ok((master_conns, handles))
+}
+
+/// Shared run tail: stamp the final model, stop every worker, join the
+/// threads, and package the outcome — one copy for both master loops so
+/// shutdown semantics cannot drift between the dense and the scheduled
+/// paths.
+fn finish_run(
+    master: Box<dyn MasterNode>,
+    mut master_conns: Vec<Box<dyn Conn>>,
+    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    mut history: History,
+    uplink_frame_bytes: u64,
+    downlink_frame_bytes: u64,
+) -> Result<DistOutcome> {
+    history.final_x = master.x().to_vec();
+    let stop = encode(&Frame::Stop);
+    for c in master_conns.iter_mut() {
+        c.send(&stop)?;
+    }
+    for h in handles {
+        h.join().expect("worker thread panicked")?;
+    }
+    Ok(DistOutcome {
+        history,
+        final_x: master.x().to_vec(),
+        uplink_frame_bytes,
+        downlink_frame_bytes,
+    })
+}
+
 /// Run the protocol with `make_worker(i)` constructed inside worker thread
 /// `i` (so workers never need to be `Send`-constructed on the main thread).
 /// Dense broadcast — see [`run_distributed_opts`] for block-delta mode.
@@ -275,64 +387,11 @@ where
     telemetry::gauge(keys::BLOCKS).set(downlink.layout().n_blocks() as f64);
 
     // Wire up transports and spawn worker threads.
-    let mut master_conns: Vec<Box<dyn Conn>> = Vec::with_capacity(n_workers);
-    let mut handles = Vec::with_capacity(n_workers);
-    match kind {
-        TransportKind::Local => {
-            for i in 0..n_workers {
-                let (m_end, mut w_end) = local::pair();
-                master_conns.push(Box::new(m_end));
-                let mk = make_worker.clone();
-                let blocks = up_blocks.clone();
-                handles.push(std::thread::spawn(move || {
-                    let worker = mk(i);
-                    worker_loop(worker, &mut w_end, blocks)
-                }));
-            }
-        }
-        TransportKind::Tcp => {
-            let (port, acceptor) = tcp::listen_local(n_workers)?;
-            for i in 0..n_workers {
-                let mk = make_worker.clone();
-                let blocks = up_blocks.clone();
-                handles.push(std::thread::spawn(move || {
-                    // Stagger connects so accept order == worker order.
-                    std::thread::sleep(std::time::Duration::from_millis(5 * i as u64));
-                    let mut conn = tcp::TcpConn::connect_with_retry(
-                        &format!("127.0.0.1:{port}"),
-                        5,
-                        std::time::Duration::from_millis(50),
-                    )?;
-                    // Identify ourselves first so the master can order us.
-                    conn.send(&(i as u32).to_le_bytes())?;
-                    let worker = mk(i);
-                    worker_loop(worker, &mut conn, blocks)
-                }));
-            }
-            // Order accepted conns by the announced worker id.
-            let conns = acceptor.join().expect("acceptor panicked")?;
-            let mut ordered: Vec<Option<tcp::TcpConn>> = (0..n_workers).map(|_| None).collect();
-            for mut c in conns {
-                let id_bytes = c.recv()?;
-                // Length-checked decode: a malformed hello must surface
-                // as an error, not an out-of-bounds slice panic.
-                ensure!(
-                    id_bytes.len() == 4,
-                    "bad worker-id handshake frame: {} bytes (expected 4)",
-                    id_bytes.len()
-                );
-                let id =
-                    u32::from_le_bytes(id_bytes[..].try_into().expect("length checked above"))
-                        as usize;
-                ensure!(id < n_workers, "bad worker id {id}");
-                ensure!(ordered[id].is_none(), "duplicate worker id {id}");
-                ordered[id] = Some(c);
-            }
-            for c in ordered {
-                master_conns.push(Box::new(c.context("missing worker connection")?));
-            }
-        }
-    }
+    let blocks = up_blocks.clone();
+    let mk = make_worker.clone();
+    let run_worker: RunWorker =
+        Arc::new(move |i, mut conn| worker_loop(mk(i), &mut *conn, blocks.clone()));
+    let (mut master_conns, handles) = wire_transport(kind, n_workers, run_worker, false)?;
 
     let n = n_workers as f64;
     let mut history = History::new(label.to_string());
@@ -410,22 +469,252 @@ where
         });
     }
     history.downlink_bits = downlink.bits();
+    finish_run(master, master_conns, handles, history, frame_bytes, down_bytes)
+}
 
-    // Shutdown.
-    let stop = encode(&Frame::Stop);
+/// Scheduled worker event loop: the worker derives the same per-round
+/// plan as the master, so the two sides always agree — without any
+/// negotiation — on which rounds carry a broadcast, an uplink, a
+/// StateSync, or nothing at all for this worker. Wire faults (straggle
+/// sleep, frame duplication) are realized by arming the [`FaultConn`]
+/// before each uplink.
+fn worker_loop_sched(
+    mut worker: Box<dyn WorkerNode>,
+    conn: Box<dyn Conn>,
+    sched: &Scheduler,
+    w: usize,
+    rounds: usize,
+) -> Result<()> {
+    let mut conn = FaultConn::new(conn);
+    // Init runs on every worker — participation sampling starts at round 0.
+    let x = match decode(&conn.recv()?)? {
+        Frame::Model(x) => x,
+        _ => bail!("worker {w}: expected the init Model broadcast"),
+    };
+    let msg = worker.init(&x);
+    let loss = worker.last_loss();
+    conn.send(&encode(&Frame::Up { msg, loss }))?;
+    for t in 0..rounds {
+        let plan = sched.round_plan(t);
+        if plan.crash.contains(&w) {
+            worker.crash();
+        }
+        if plan.resync.contains(&w) {
+            match decode(&conn.recv()?)? {
+                Frame::StateSync(g) => worker.resync(&g),
+                _ => bail!("worker {w}: expected StateSync at rejoin round {t}"),
+            }
+        }
+        if plan.active[w] {
+            let x = match decode(&conn.recv()?)? {
+                Frame::Model(x) => x,
+                _ => bail!("worker {w}: expected Model broadcast in round {t}"),
+            };
+            let msg = worker.round(&x);
+            let loss = worker.last_loss();
+            conn.arm(plan.delay_ms[w], plan.dup[w]);
+            conn.send(&encode(&Frame::Up { msg, loss }))?;
+        }
+    }
+    match decode(&conn.recv()?)? {
+        Frame::Stop => Ok(()),
+        _ => bail!("worker {w}: expected Stop"),
+    }
+}
+
+/// [`run_distributed`] under a participation/fault [`Scheduler`]: each
+/// round only the planned subset of workers receives the (dense)
+/// broadcast and uplinks; scheduled crashes lose worker state, rejoins
+/// are resynced with f64 [`Frame::StateSync`] pushes rebuilt from the
+/// master's [`StateTracker`], in-deadline stragglers really sleep on the
+/// wire, and `dup` frames really travel twice (received and verified).
+///
+/// Scheduling uses dense broadcast (an absent worker's cached model
+/// would go stale under block-delta frames). Currently drives
+/// EF21-family workers whose absent message is the empty sparse no-op.
+pub fn run_distributed_sched<F>(
+    mut master: Box<dyn MasterNode>,
+    n_workers: usize,
+    make_worker: F,
+    rounds: usize,
+    kind: TransportKind,
+    label: &str,
+    sched: Arc<Scheduler>,
+) -> Result<DistOutcome>
+where
+    F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
+{
+    assert!(n_workers >= 1);
+    ensure!(
+        sched.n_workers() == n_workers,
+        "scheduler was built for {} workers but the run has {n_workers}",
+        sched.n_workers()
+    );
+    // Wall-clock feasibility on real sockets: an in-deadline straggler
+    // sleeps before sending, so the peer's read timeout must outlast it.
+    let realized_max = {
+        let m = sched.faults().max_delay_ms();
+        sched.deadline_ms().map_or(m, |dl| m.min(dl))
+    };
+    if kind == TransportKind::Tcp {
+        if let Some(io) = tcp::io_timeout() {
+            // 2x headroom: the master's read waits out the sleep PLUS the
+            // worker's compute, which no static check can bound — so a
+            // plan is only accepted when the sleep leaves at least as
+            // much again for compute.
+            ensure!(
+                u128::from(realized_max) * 2 < io.as_millis(),
+                "scheduled straggle delay of {realized_max}ms needs a TCP I/O timeout \
+                 above {}ms (2x headroom for compute), got {}ms; raise --net-timeout-ms \
+                 or tighten the deadline",
+                2 * realized_max,
+                io.as_millis()
+            );
+        }
+    }
+    let make_worker = Arc::new(make_worker);
+    // Probe one worker before spawning (the real ones are constructed
+    // inside their threads): crash support — required for ANY crash,
+    // rejoin or not — and the algorithm's absent-message shape, used for
+    // every non-participant slot the master synthesizes below.
+    let absent_template = {
+        let probe = make_worker(0);
+        if sched.has_crashes() {
+            ensure!(
+                probe.supports_resync(),
+                "fault plan schedules crashes but the workers do not support state-loss \
+                 resync"
+            );
+        }
+        probe.absent_msg()
+    };
+
+    let d = master.x().len();
+    let mut downlink = DownlinkMeter::dense(d);
+    telemetry::gauge(keys::BLOCKS).set(1.0);
+
+    let sched_w = sched.clone();
+    let mk = make_worker.clone();
+    let run_worker: RunWorker =
+        Arc::new(move |i, conn| worker_loop_sched(mk(i), conn, &sched_w, i, rounds));
+    let (mut master_conns, handles) =
+        wire_transport(kind, n_workers, run_worker, kind == TransportKind::Tcp)?;
+
+    let n = n_workers as f64;
+    let mut history = History::new(label.to_string());
+    let mut bits_cum = 0u64;
+    let mut frame_bytes = 0u64;
+    let mut down_bytes = 0u64;
+    let mut tracker =
+        if sched.needs_resync() { Some(StateTracker::new(n_workers, d)) } else { None };
+    // Last-known loss per worker — the dist-side analogue of the sim
+    // runners' cached-loss reduction (absent workers keep their stale
+    // value, in the same worker-order sum).
+    let mut last_loss = vec![0.0f64; n_workers];
+
+    // Init phase: full participation, dense broadcast to everyone.
+    let x0 = master.x().to_vec();
+    let bytes = encode(&Frame::Model(x0.clone()));
     for c in master_conns.iter_mut() {
-        c.send(&stop)?;
+        c.send(&bytes)?;
     }
-    for h in handles {
-        h.join().expect("worker thread panicked")?;
+    telemetry::counter(keys::DOWNLINK_BITS).incr(downlink.plan(&x0).bits);
+    let sent0 = bytes.len() as u64 * n_workers as u64;
+    telemetry::counter(keys::DOWNLINK_FRAME_BYTES).incr(sent0);
+    down_bytes += sent0;
+    let (msgs, losses, fb) = gather(&mut master_conns, d)?;
+    last_loss.copy_from_slice(&losses);
+    frame_bytes += fb;
+    let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
+    bits_cum += init_bits;
+    telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
+    telemetry::counter(keys::UPLINK_FRAME_BYTES).incr(fb);
+    if let Some(tr) = tracker.as_mut() {
+        tr.absorb_round(&msgs);
     }
+    master.init_absorb(&msgs);
 
-    Ok(DistOutcome {
-        history,
-        final_x: master.x().to_vec(),
-        uplink_frame_bytes: frame_bytes,
-        downlink_frame_bytes: down_bytes,
-    })
+    for t in 0..rounds {
+        let t_round = telemetry::maybe_now();
+        let x = master.begin_round();
+        let plan = sched.round_plan(t);
+
+        // StateSync pushes precede this round's broadcast.
+        for &w in &plan.resync {
+            let tr = tracker.as_ref().expect("rejoin scheduled without a tracker");
+            let frame = encode(&Frame::StateSync(tr.mirror(w).to_vec()));
+            master_conns[w].send(&frame)?;
+            down_bytes += frame.len() as u64;
+            crate::sched::record_resync_bits(d);
+        }
+
+        // Dense model to this round's participants only.
+        telemetry::counter(keys::DOWNLINK_BITS).incr(downlink.plan(&x).bits);
+        let bytes = encode(&Frame::Model(x));
+        let mut sent = 0u64;
+        for (w, c) in master_conns.iter_mut().enumerate() {
+            if plan.active[w] {
+                c.send(&bytes)?;
+                sent += bytes.len() as u64;
+            }
+        }
+        telemetry::counter(keys::DOWNLINK_FRAME_BYTES).incr(sent);
+        down_bytes += sent;
+
+        // Gather participants in worker order; `dup`ed frames arrive
+        // twice and must match byte for byte.
+        let mut msgs: Vec<WireMsg> = Vec::with_capacity(n_workers);
+        let mut round_bits = 0u64;
+        let mut fb = 0u64;
+        for (w, conn) in master_conns.iter_mut().enumerate() {
+            if !plan.active[w] {
+                msgs.push(absent_template.clone());
+                continue;
+            }
+            let raw = conn.recv()?;
+            fb += raw.len() as u64;
+            let (msg, loss) = match decode(&raw)? {
+                Frame::Up { msg, loss } => (msg, loss),
+                _ => bail!("master expected an Up frame from worker {w}"),
+            };
+            if plan.dup[w] {
+                let raw2 = conn.recv()?;
+                fb += raw2.len() as u64;
+                ensure!(raw2 == raw, "duplicated uplink frame mismatch from worker {w}");
+            }
+            if let Some(&last) = msg.payload().sparse.idx.last() {
+                ensure!(
+                    (last as usize) < d,
+                    "uplink index {last} out of range for model dim {d}"
+                );
+            }
+            last_loss[w] = loss;
+            round_bits += msg.bits();
+            msgs.push(msg);
+        }
+        bits_cum += round_bits;
+        frame_bytes += fb;
+        telemetry::counter(keys::UPLINK_BITS).incr(round_bits);
+        telemetry::counter(keys::UPLINK_FRAME_BYTES).incr(fb);
+        plan.record_telemetry();
+        if let Some(tr) = tracker.as_mut() {
+            tr.absorb_round(&msgs);
+        }
+        master.absorb(&msgs);
+        telemetry::counter(keys::ROUNDS).incr(1);
+        telemetry::record_elapsed_ns(keys::ROUND_NS, t_round);
+        let loss = last_loss.iter().sum::<f64>() / n;
+        history.records.push(RoundRecord {
+            round: t,
+            bits_per_client: bits_cum as f64 / n,
+            loss,
+            grad_norm_sq: f64::NAN, // dense grads stay worker-local here
+            gt: f64::NAN,
+            dcgd_frac: f64::NAN,
+        });
+    }
+    history.downlink_bits = downlink.bits();
+    finish_run(master, master_conns, handles, history, frame_bytes, down_bytes)
 }
 
 #[cfg(test)]

@@ -73,8 +73,14 @@ enum Cmd {
     Init(Arc<Vec<f64>>),
     /// Run one round at the broadcast model.
     Round(Arc<Vec<f64>>),
+    /// Run one round on the chunk's slice of the global participation
+    /// mask; absent workers are untouched and reply with `absent_msg`.
+    RoundSubset(Arc<Vec<f64>>, Arc<Vec<bool>>),
     /// Snapshot per-worker instrumentation (recording rounds only).
     Observe,
+    /// Scheduler fault hooks, addressed by chunk-local worker index.
+    Crash(usize),
+    Resync(usize, Arc<Vec<f64>>),
 }
 
 /// Per-worker observation snapshot, copied out of the owning thread.
@@ -92,10 +98,20 @@ enum Reply {
     /// coordinator ignores them there).
     Msgs { msgs: Vec<WireMsg>, losses: Vec<f64> },
     Observed(Vec<Obs>),
+    /// Crash/resync acknowledged (keeps the hooks synchronous, so a
+    /// resync is visible before the round command that follows it).
+    Ack,
 }
 
 /// Chunk event loop: owns its workers for the lifetime of the run.
-fn pool_loop(mut workers: Vec<Box<dyn WorkerNode>>, rx: Receiver<Cmd>, tx: Sender<Reply>) {
+/// `start` is the chunk's first global worker index (used to slice the
+/// global participation mask).
+fn pool_loop(
+    mut workers: Vec<Box<dyn WorkerNode>>,
+    start: usize,
+    rx: Receiver<Cmd>,
+    tx: Sender<Reply>,
+) {
     while let Ok(cmd) = rx.recv() {
         let reply = match cmd {
             Cmd::Init(x0) => {
@@ -111,6 +127,18 @@ fn pool_loop(mut workers: Vec<Box<dyn WorkerNode>>, rx: Receiver<Cmd>, tx: Sende
                 telemetry::record_elapsed_ns(keys::POOL_CHUNK_NS, t0);
                 Reply::Msgs { msgs, losses }
             }
+            Cmd::RoundSubset(x, active) => {
+                let t0 = telemetry::maybe_now();
+                let mask = &active[start..start + workers.len()];
+                let msgs = workers
+                    .iter_mut()
+                    .zip(mask)
+                    .map(|(w, &a)| if a { w.round(&x[..]) } else { w.absent_msg() })
+                    .collect();
+                let losses = workers.iter().map(|w| w.last_loss()).collect();
+                telemetry::record_elapsed_ns(keys::POOL_CHUNK_NS, t0);
+                Reply::Msgs { msgs, losses }
+            }
             Cmd::Observe => Reply::Observed(
                 workers
                     .iter()
@@ -122,6 +150,14 @@ fn pool_loop(mut workers: Vec<Box<dyn WorkerNode>>, rx: Receiver<Cmd>, tx: Sende
                     })
                     .collect(),
             ),
+            Cmd::Crash(local) => {
+                workers[local].crash();
+                Reply::Ack
+            }
+            Cmd::Resync(local, state) => {
+                workers[local].resync(&state);
+                Reply::Ack
+            }
         };
         // The coordinator hanging up (drive returned) ends the loop.
         if tx.send(reply).is_err() {
@@ -136,6 +172,12 @@ fn pool_loop(mut workers: Vec<Box<dyn WorkerNode>>, rx: Receiver<Cmd>, tx: Sende
 struct ParPool {
     n: usize,
     chans: Vec<(Sender<Cmd>, Receiver<Reply>)>,
+    /// First global worker index of each chunk (for routing per-worker
+    /// fault hooks to the owning thread).
+    starts: Vec<usize>,
+    /// Whether every worker supports crash→resync (queried before the
+    /// boxes moved onto the pool threads).
+    resync_ok: bool,
 }
 
 impl ParPool {
@@ -151,6 +193,22 @@ impl ParPool {
             .collect()
     }
 
+    /// Route a per-worker fault hook to the chunk thread owning global
+    /// worker `w`, synchronously (waits for the Ack).
+    fn hook(&mut self, w: usize, cmd: impl Fn(usize) -> Cmd) {
+        let chunk = match self.starts.binary_search(&w) {
+            Ok(c) => c,
+            Err(c) => c - 1,
+        };
+        let local = w - self.starts[chunk];
+        let (tx, rx) = &self.chans[chunk];
+        tx.send(cmd(local)).expect("pool thread terminated early");
+        match rx.recv().expect("pool thread terminated early") {
+            Reply::Ack => {}
+            _ => unreachable!("non-ack reply to a fault hook"),
+        }
+    }
+
     /// Concatenate message replies preserving worker order; losses are
     /// summed left-to-right across the same order.
     fn gather_msgs(&mut self, cmd: impl Fn() -> Cmd) -> (Vec<WireMsg>, f64) {
@@ -164,7 +222,9 @@ impl ParPool {
                         loss_sum += l;
                     }
                 }
-                Reply::Observed(_) => unreachable!("observe reply to a round command"),
+                Reply::Observed(_) | Reply::Ack => {
+                    unreachable!("mismatched reply to a round command")
+                }
             }
         }
         (all_msgs, loss_sum)
@@ -184,12 +244,33 @@ impl WorkerPool for ParPool {
         self.gather_msgs(|| Cmd::Round(x.clone()))
     }
 
+    fn round_subset(&mut self, x: &Arc<Vec<f64>>, active: &[bool]) -> (Vec<WireMsg>, f64) {
+        debug_assert_eq!(active.len(), self.n);
+        let mask = Arc::new(active.to_vec());
+        self.gather_msgs(|| Cmd::RoundSubset(x.clone(), mask.clone()))
+    }
+
+    fn supports_resync(&mut self) -> bool {
+        self.resync_ok
+    }
+
+    fn crash(&mut self, w: usize) {
+        self.hook(w, Cmd::Crash);
+    }
+
+    fn resync(&mut self, w: usize, state: &[f64]) {
+        let state = Arc::new(state.to_vec());
+        self.hook(w, |local| Cmd::Resync(local, state.clone()));
+    }
+
     fn observe(&mut self) -> (f64, f64, f64, f64) {
         let mut obs = Vec::with_capacity(self.n);
         for reply in self.exchange(|| Cmd::Observe) {
             match reply {
                 Reply::Observed(chunk) => obs.extend(chunk),
-                Reply::Msgs { .. } => unreachable!("round reply to an observe command"),
+                Reply::Msgs { .. } | Reply::Ack => {
+                    unreachable!("mismatched reply to an observe command")
+                }
             }
         }
         runner::reduce_obs(
@@ -220,11 +301,16 @@ pub fn run_protocol_par(
     telemetry::gauge(keys::POOL_THREADS).set(threads as f64);
 
     let n = workers.len();
+    // Queried here, before the boxes move onto pool threads (the
+    // scheduler's crash validation needs it without a round trip).
+    let resync_ok = workers.iter().all(|w| w.supports_resync());
     std::thread::scope(|scope| {
         let mut rest = workers;
         let mut chans = Vec::with_capacity(threads);
+        let mut starts = Vec::with_capacity(threads);
         let base = n / threads;
         let rem = n % threads;
+        let mut start = 0usize;
         for i in 0..threads {
             // Contiguous balanced split: the first `rem` chunks take one
             // extra worker, preserving global worker order across chunks.
@@ -232,11 +318,13 @@ pub fn run_protocol_par(
             let chunk: Vec<Box<dyn WorkerNode>> = rest.drain(..take).collect();
             let (cmd_tx, cmd_rx) = channel();
             let (rep_tx, rep_rx) = channel();
-            scope.spawn(move || pool_loop(chunk, cmd_rx, rep_tx));
+            scope.spawn(move || pool_loop(chunk, start, cmd_rx, rep_tx));
             chans.push((cmd_tx, rep_rx));
+            starts.push(start);
+            start += take;
         }
         debug_assert!(rest.is_empty());
-        runner::drive(master, ParPool { n, chans }, cfg)
+        runner::drive(master, ParPool { n, chans, starts, resync_ok }, cfg)
     })
 }
 

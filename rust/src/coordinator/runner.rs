@@ -12,6 +12,7 @@
 use crate::algo::{MasterNode, WireMsg, WorkerNode};
 use crate::blocks::BlockLayout;
 use crate::metrics::{History, RoundRecord};
+use crate::sched::{Scheduler, StateTracker};
 use crate::telemetry::{self, keys};
 use crate::transport::downlink::DownlinkMeter;
 use crate::util::linalg;
@@ -36,6 +37,13 @@ pub struct RunConfig {
     /// blocked = f32-floor delta accounting; see `transport::downlink`).
     /// Accounting only: the simulated trajectory is unaffected.
     pub layout: Option<Arc<BlockLayout>>,
+    /// Participation/fault schedule (`None` = the exact legacy
+    /// full-participation protocol, byte for byte). With a scheduler,
+    /// each round only the planned subset of workers computes and
+    /// uplinks; absent workers hold their state (EF21-PP semantics),
+    /// scheduled crashes drop worker state, and rejoins are resynced
+    /// from the master's [`StateTracker`] mirror.
+    pub sched: Option<Arc<Scheduler>>,
 }
 
 impl RunConfig {
@@ -47,6 +55,7 @@ impl RunConfig {
             divergence_cap: 1e100,
             label: String::new(),
             layout: None,
+            sched: None,
         }
     }
 
@@ -67,6 +76,11 @@ impl RunConfig {
 
     pub fn with_layout(mut self, layout: Arc<BlockLayout>) -> Self {
         self.layout = Some(layout);
+        self
+    }
+
+    pub fn with_sched(mut self, sched: Arc<Scheduler>) -> Self {
+        self.sched = Some(sched);
         self
     }
 }
@@ -91,6 +105,25 @@ pub(crate) trait WorkerPool {
     /// dcgd_frac)`; implementations MUST reduce via [`reduce_obs`] so
     /// both runners perform identical f64 arithmetic.
     fn observe(&mut self) -> (f64, f64, f64, f64);
+
+    // -- scheduler operations (partial participation & fault model) --
+
+    /// Run one round on the workers marked `active` only; absent workers
+    /// are untouched (no oracle eval, no state update, no RNG advance)
+    /// and contribute their [`WorkerNode::absent_msg`]. Messages come
+    /// back in worker order; the loss sum still spans ALL workers'
+    /// cached losses left-to-right, exactly like [`WorkerPool::round`]
+    /// (an all-true mask is bit-identical to `round`).
+    fn round_subset(&mut self, x: &Arc<Vec<f64>>, active: &[bool]) -> (Vec<WireMsg>, f64);
+
+    /// Do all workers support crash→resync ([`WorkerNode::supports_resync`])?
+    fn supports_resync(&mut self) -> bool;
+
+    /// Forward a scheduled crash to worker `w`.
+    fn crash(&mut self, w: usize);
+
+    /// Forward a StateSync restore to worker `w`.
+    fn resync(&mut self, w: usize, state: &[f64]);
 }
 
 /// Aggregate per-worker instrumentation in worker-index order. Shared by
@@ -158,6 +191,30 @@ impl WorkerPool for SeqPool {
                 .map(|w| (w.last_loss(), w.last_grad(), w.distortion_sq(), w.used_dcgd_branch())),
         )
     }
+
+    fn round_subset(&mut self, x: &Arc<Vec<f64>>, active: &[bool]) -> (Vec<WireMsg>, f64) {
+        debug_assert_eq!(active.len(), self.workers.len());
+        let msgs = self
+            .workers
+            .iter_mut()
+            .zip(active)
+            .map(|(w, &a)| if a { w.round(&x[..]) } else { w.absent_msg() })
+            .collect();
+        let loss_sum = self.workers.iter().map(|w| w.last_loss()).sum();
+        (msgs, loss_sum)
+    }
+
+    fn supports_resync(&mut self) -> bool {
+        self.workers.iter().all(|w| w.supports_resync())
+    }
+
+    fn crash(&mut self, w: usize) {
+        self.workers[w].crash();
+    }
+
+    fn resync(&mut self, w: usize, state: &[f64]) {
+        self.workers[w].resync(state);
+    }
 }
 
 /// Drive the full protocol over any [`WorkerPool`]: init, then
@@ -199,7 +256,38 @@ pub(crate) fn drive<P: WorkerPool>(
     };
     telemetry::gauge(keys::BLOCKS).set(downlink.layout().n_blocks() as f64);
 
+    // Participation/fault schedule. `None` leaves the loop below on the
+    // exact legacy code path; the master-side state mirror is only kept
+    // when some rejoin actually needs it.
+    let sched = cfg.sched.as_deref();
+    if let Some(s) = sched {
+        assert_eq!(
+            s.n_workers(),
+            pool.n_workers(),
+            "scheduler was built for {} workers but the pool has {}",
+            s.n_workers(),
+            pool.n_workers()
+        );
+    }
+    // Any crash — with or without rejoin — needs workers that support
+    // modeled state loss; the per-worker state mirror is only kept when
+    // some rejoin will actually consume it.
+    if sched.is_some_and(|s| s.has_crashes()) {
+        assert!(
+            pool.supports_resync(),
+            "fault plan schedules crashes but a worker does not support state-loss \
+             resync (classic EF's error accumulator is not message-reconstructible; \
+             use EF21/EF21+/DCGD or drop the crash events)"
+        );
+    }
+    let mut tracker = match sched {
+        Some(s) if s.needs_resync() => Some(StateTracker::new(pool.n_workers(), d)),
+        _ => None,
+    };
+
     // Init phase: g_i^0 / w_i^0 at x^0 (counted as communication).
+    // Initialization always runs on every worker — participation
+    // sampling starts at round 0.
     let x0 = Arc::new(master.x().to_vec());
     let init_down = downlink.plan(&x0).bits;
     telemetry::counter(keys::DOWNLINK_BITS).incr(init_down);
@@ -207,6 +295,9 @@ pub(crate) fn drive<P: WorkerPool>(
     let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
     bits_cum += init_bits;
     telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
+    if let Some(tr) = tracker.as_mut() {
+        tr.absorb_round(&msgs);
+    }
     master.init_absorb(&msgs);
 
     for t in 0..cfg.rounds {
@@ -214,8 +305,41 @@ pub(crate) fn drive<P: WorkerPool>(
         let x = Arc::new(master.begin_round());
         let down = downlink.plan(&x).bits;
         telemetry::counter(keys::DOWNLINK_BITS).incr(down);
-        let (msgs, loss_sum) = pool.round(&x);
-        let round_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
+        let (msgs, loss_sum, round_bits) = match sched {
+            None => {
+                let (msgs, loss_sum) = pool.round(&x);
+                let bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
+                (msgs, loss_sum, bits)
+            }
+            Some(s) => {
+                let plan = s.round_plan(t);
+                // Crash instants first (a crashed worker is inactive this
+                // round), then resyncs (a rejoining worker may be active
+                // immediately).
+                for &w in &plan.crash {
+                    pool.crash(w);
+                }
+                for &w in &plan.resync {
+                    let tr = tracker.as_ref().expect("rejoin scheduled without a tracker");
+                    pool.resync(w, tr.mirror(w));
+                    crate::sched::record_resync_bits(d);
+                }
+                let (msgs, loss_sum) = pool.round_subset(&x, &plan.active);
+                // Only participants' messages travel; the synthesized
+                // absent no-ops cost nothing (their tag bits included).
+                let bits = msgs
+                    .iter()
+                    .zip(&plan.active)
+                    .filter(|(_, &a)| a)
+                    .map(|(m, _)| m.bits())
+                    .sum::<u64>();
+                plan.record_telemetry();
+                if let Some(tr) = tracker.as_mut() {
+                    tr.absorb_round(&msgs);
+                }
+                (msgs, loss_sum, bits)
+            }
+        };
         bits_cum += round_bits;
         telemetry::counter(keys::UPLINK_BITS).incr(round_bits);
         master.absorb(&msgs);
@@ -250,6 +374,7 @@ pub(crate) fn drive<P: WorkerPool>(
         }
     }
     history.downlink_bits = downlink.bits();
+    history.final_x = master.x().to_vec();
     history
 }
 

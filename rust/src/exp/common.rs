@@ -33,6 +33,11 @@ pub struct Problem {
     pub smoothness: Smoothness,
     /// PL constant (least squares only).
     pub mu: Option<f64>,
+    /// Round participation/fault schedule applied to every trial run on
+    /// this problem (default = legacy full participation). The concrete
+    /// scheduler is built per trial from `(n_workers, trial seed)`, so
+    /// sweeps stay reproducible run-to-run.
+    pub sched: crate::config::SchedSpec,
 }
 
 impl Problem {
@@ -70,7 +75,15 @@ impl Problem {
             }
             Objective::LogReg => None,
         };
-        Problem { dataset, objective, n_workers, lam, smoothness, mu }
+        Problem {
+            dataset,
+            objective,
+            n_workers,
+            lam,
+            smoothness,
+            mu,
+            sched: crate::config::SchedSpec::default(),
+        }
     }
 
     pub fn d(&self) -> usize {
@@ -211,8 +224,31 @@ impl Problem {
         if !layout.is_flat() {
             cfg = cfg.with_layout(layout);
         }
+        if let Some(sched) = self
+            .sched
+            .build(self.n_workers, seed)
+            .expect("invalid --participation/--faults schedule for this problem")
+        {
+            cfg = cfg.with_sched(sched);
+        }
         cfg.divergence_cap = 1e60;
         run_protocol_par(master, workers, &cfg, threads)
+    }
+
+    /// Evaluate the exact global loss and squared gradient norm at `x`
+    /// with fresh oracles — the PP sweeps report this instead of the
+    /// in-run observation, whose per-worker gradients go stale for
+    /// workers that sat out the final rounds.
+    pub fn eval_at(&self, x: &[f64]) -> (f64, f64) {
+        let mut loss = 0.0;
+        let mut grad = vec![0.0; self.d()];
+        let inv_n = 1.0 / self.n_workers as f64;
+        for mut o in self.oracles() {
+            let (l, g) = o.loss_grad(x);
+            loss += l * inv_n;
+            crate::util::linalg::axpy(inv_n, &g, &mut grad);
+        }
+        (loss, crate::util::linalg::norm2_sq(&grad))
     }
 }
 

@@ -19,6 +19,8 @@ pub struct FinetuneCfg {
     pub seed: u64,
     /// Trial-scheduler pool width (1 = legacy sequential sweep).
     pub threads: usize,
+    /// Participation/fault schedule applied to every trial.
+    pub sched: crate::config::SchedSpec,
 }
 
 impl Default for FinetuneCfg {
@@ -32,6 +34,7 @@ impl Default for FinetuneCfg {
             n_workers: 20,
             seed: 0,
             threads: 1,
+            sched: crate::config::SchedSpec::default(),
         }
     }
 }
@@ -67,8 +70,9 @@ fn pick_best(candidates: Vec<(History, (bool, f64))>) -> History {
 }
 
 pub fn run(cfg: &FinetuneCfg) -> FigureData {
-    let problem =
+    let mut problem =
         Problem::new(&cfg.dataset, Objective::LogReg, cfg.n_workers, 0.1, cfg.seed);
+    problem.sched = cfg.sched.clone();
     let record_every = (cfg.rounds / 400).max(1);
     let mut fig = FigureData::new(format!("finetune_{}", cfg.dataset));
 
@@ -124,12 +128,14 @@ pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
             .collect(),
     };
     let threads = crate::config::Threads::from_args(args)?.resolve();
+    let sched = crate::config::SchedSpec::from_args(args)?;
     for ds in datasets {
         let cfg = FinetuneCfg {
             dataset: ds,
             rounds: args.get_parse("rounds")?.unwrap_or(1200),
             tol: args.get_parse("tol")?.unwrap_or(1e-6),
             threads,
+            sched: sched.clone(),
             ..Default::default()
         };
         let fig = run(&cfg);

@@ -6,7 +6,20 @@ use crate::algo::AlgoSpec;
 use crate::metrics::FigureData;
 
 pub fn run(dataset: &str, rounds: usize, max_pow: u32, seed: u64, threads: usize) -> FigureData {
-    let problem = Problem::new(dataset, Objective::LogReg, 20, 0.1, seed);
+    run_sched(dataset, rounds, max_pow, seed, threads, crate::config::SchedSpec::default())
+}
+
+/// [`run`] under a participation/fault schedule.
+pub fn run_sched(
+    dataset: &str,
+    rounds: usize,
+    max_pow: u32,
+    seed: u64,
+    threads: usize,
+    sched: crate::config::SchedSpec,
+) -> FigureData {
+    let mut problem = Problem::new(dataset, Objective::LogReg, 20, 0.1, seed);
+    problem.sched = sched;
     let record_every = (rounds / 300).max(1);
     let mut fig = FigureData::new(format!("gdtune_{dataset}"));
     let curves = parallel_trials(mult_ladder(max_pow), threads, |m| {
@@ -22,12 +35,13 @@ pub fn run(dataset: &str, rounds: usize, max_pow: u32, seed: u64, threads: usize
 }
 
 pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
-    let fig = run(
+    let fig = run_sched(
         args.get_str("dataset").unwrap_or("a9a"),
         args.get_parse("rounds")?.unwrap_or(1000),
         args.get_parse("max-pow")?.unwrap_or(4),
         args.get_parse("seed")?.unwrap_or(0),
         crate::config::Threads::from_args(args)?.resolve(),
+        crate::config::SchedSpec::from_args(args)?,
     );
     fig.print_summary();
     fig.write_dir(&results_dir())?;

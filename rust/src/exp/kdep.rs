@@ -15,6 +15,8 @@ pub struct KdepCfg {
     pub seed: u64,
     /// Trial-scheduler pool width (1 = legacy sequential sweep).
     pub threads: usize,
+    /// Participation/fault schedule applied to every trial.
+    pub sched: crate::config::SchedSpec,
 }
 
 impl Default for KdepCfg {
@@ -27,13 +29,15 @@ impl Default for KdepCfg {
             n_workers: 20,
             seed: 0,
             threads: 1,
+            sched: crate::config::SchedSpec::default(),
         }
     }
 }
 
 pub fn run(cfg: &KdepCfg) -> FigureData {
-    let problem =
+    let mut problem =
         Problem::new(&cfg.dataset, Objective::LogReg, cfg.n_workers, 0.1, cfg.seed);
+    problem.sched = cfg.sched.clone();
     let record_every = (cfg.rounds / 300).max(1);
     let mut fig = FigureData::new(format!("kdep_{}", cfg.dataset));
     let d = problem.d();
@@ -80,6 +84,7 @@ pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
         dataset: args.get_str("dataset").unwrap_or("a9a").to_string(),
         rounds: args.get_parse("rounds")?.unwrap_or(1500),
         threads: crate::config::Threads::from_args(args)?.resolve(),
+        sched: crate::config::SchedSpec::from_args(args)?,
         ..Default::default()
     };
     let fig = run(&cfg);

@@ -16,6 +16,8 @@ pub struct LstsqCfg {
     pub seed: u64,
     /// Trial-scheduler pool width (1 = legacy sequential sweep).
     pub threads: usize,
+    /// Participation/fault schedule applied to every trial.
+    pub sched: crate::config::SchedSpec,
 }
 
 impl Default for LstsqCfg {
@@ -28,12 +30,15 @@ impl Default for LstsqCfg {
             n_workers: 20,
             seed: 0,
             threads: 1,
+            sched: crate::config::SchedSpec::default(),
         }
     }
 }
 
 pub fn run(cfg: &LstsqCfg) -> FigureData {
-    let problem = Problem::new(&cfg.dataset, Objective::Lstsq, cfg.n_workers, 0.0, cfg.seed);
+    let mut problem =
+        Problem::new(&cfg.dataset, Objective::Lstsq, cfg.n_workers, 0.0, cfg.seed);
+    problem.sched = cfg.sched.clone();
     let comp = format!("top{}", cfg.k);
     let record_every = (cfg.rounds / 200).max(1);
     let mut fig = FigureData::new(format!("lstsq_{}_k{}", cfg.dataset, cfg.k));
@@ -62,6 +67,7 @@ pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
         None => vec!["phishing".into(), "mushrooms".into(), "a9a".into(), "w8a".into()],
     };
     let threads = crate::config::Threads::from_args(args)?.resolve();
+    let sched = crate::config::SchedSpec::from_args(args)?;
     for ds in datasets {
         let cfg = LstsqCfg {
             dataset: ds,
@@ -69,6 +75,7 @@ pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
             rounds: args.get_parse("rounds")?.unwrap_or(1000),
             max_pow: args.get_parse("max-pow")?.unwrap_or(6),
             threads,
+            sched: sched.clone(),
             ..Default::default()
         };
         let fig = run(&cfg);

@@ -1,4 +1,4 @@
-//! Experiment harness: one module per paper figure/table (see DESIGN.md §5
+//! Experiment harness: one module per paper figure/table (see DESIGN.md §7
 //! for the full index). Each driver regenerates the corresponding series
 //! as CSV curves under `results/` plus a console summary.
 
@@ -9,6 +9,7 @@ pub mod finetune;
 pub mod gdtune;
 pub mod kdep;
 pub mod lstsq;
+pub mod pp;
 pub mod rates;
 pub mod stepsize;
 

@@ -18,6 +18,9 @@ pub struct StepsizeCfg {
     pub seed: u64,
     /// Trial-scheduler pool width (1 = legacy sequential sweep).
     pub threads: usize,
+    /// Participation/fault schedule applied to every trial
+    /// (`--participation`/`--faults`; default = legacy full rounds).
+    pub sched: crate::config::SchedSpec,
 }
 
 impl Default for StepsizeCfg {
@@ -30,6 +33,7 @@ impl Default for StepsizeCfg {
             n_workers: 20,
             seed: 0,
             threads: 1,
+            sched: crate::config::SchedSpec::default(),
         }
     }
 }
@@ -39,8 +43,9 @@ impl Default for StepsizeCfg {
 /// `cfg.threads` scheduler threads; curve order (and every curve's
 /// contents) is identical to the sequential sweep.
 pub fn run(cfg: &StepsizeCfg) -> FigureData {
-    let problem =
+    let mut problem =
         Problem::new(&cfg.dataset, Objective::LogReg, cfg.n_workers, 0.1, cfg.seed);
+    problem.sched = cfg.sched.clone();
     let comp = format!("top{}", cfg.k);
     let mut fig = FigureData::new(format!("stepsize_{}_k{}", cfg.dataset, cfg.k));
     let record_every = (cfg.rounds / 200).max(1);
@@ -73,6 +78,7 @@ pub fn run(cfg: &StepsizeCfg) -> FigureData {
 pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
     let out = results_dir();
     let threads = crate::config::Threads::from_args(args)?.resolve();
+    let sched = crate::config::SchedSpec::from_args(args)?;
     if args.has("all") {
         // Figures 3-6 grid (trimmed k-list per dataset as in the paper).
         for ds in ["phishing", "mushrooms", "a9a", "w8a"] {
@@ -83,6 +89,7 @@ pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
                     rounds: args.get_parse("rounds")?.unwrap_or(800),
                     max_pow: args.get_parse("max-pow")?.unwrap_or(5),
                     threads,
+                    sched: sched.clone(),
                     ..Default::default()
                 };
                 let fig = run(&cfg);
@@ -100,6 +107,7 @@ pub fn main(args: &crate::config::cli::Args) -> anyhow::Result<()> {
         n_workers: args.get_parse("workers")?.unwrap_or(20),
         seed: args.get_parse("seed")?.unwrap_or(0),
         threads,
+        sched,
     };
     let fig = run(&cfg);
     fig.print_summary();

@@ -66,6 +66,7 @@ pub mod metrics;
 pub mod nn;
 pub mod oracle;
 pub mod runtime;
+pub mod sched;
 pub mod telemetry;
 pub mod theory;
 pub mod transport;
@@ -83,5 +84,6 @@ pub mod prelude {
     pub use crate::data::Dataset;
     pub use crate::metrics::{FigureData, History};
     pub use crate::oracle::{GradOracle, LogRegOracle, LstsqOracle, QuadraticOracle};
+    pub use crate::sched::{FaultPlan, Participation, Scheduler};
     pub use crate::util::rng::Rng;
 }

@@ -25,6 +25,11 @@ fn main() {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    // Global transport timeout knob (read/write + connect retry; the
+    // scheduler's straggler-deadline floor reuses the same value).
+    if let Some(ms) = ef21::config::net_timeout_ms_from_args(args)? {
+        ef21::transport::tcp::set_default_io_timeout_ms(Some(ms));
+    }
     // Global telemetry sinks (shared by every subcommand).
     let telemetry_spec = args.get_str("telemetry").unwrap_or("off").to_string();
     let guard = ef21::telemetry::init_from_spec(&telemetry_spec)?;
@@ -70,12 +75,32 @@ USAGE:
                                        delta broadcast; flat = legacy path,
                                        auto = oracle's natural layout —
                                        per-layer for dl, flat for logreg)
+  (run + sweep exps)
+                 [--participation full|p:<f>|m:<k>|rr:<c>]
+                                      (round participation: Bernoulli-p,
+                                       fixed-m, or round-robin cohorts;
+                                       absent workers hold their state —
+                                       EF21-PP semantics. full = legacy)
+                 [--faults <spec>]    (deterministic fault schedule:
+                                       crash@R,rejoin@R,
+                                       straggle(w,r0..r1,MSms),
+                                       drop(w@r), dup(w@r))
+                 [--deadline-ms D]    (straggler cutoff per round; unset =
+                                       barrier waits; with straggles it
+                                       floors to the net timeout)
+  (transports)   [--net-timeout-ms T] (TCP read/write + connect-retry
+                                       budget; 0 = no timeout; env
+                                       fallback EF21_NET_TIMEOUT_MS)
   ef21 exp  stepsize [--dataset D] [--k K] [--max-pow P] [--rounds T] [--all]
   ef21 exp  finetune [--dataset D] [--rounds T] [--tol X]
   ef21 exp  kdep     [--dataset D] [--rounds T]
   ef21 exp  gdtune   [--dataset D] [--rounds T] [--max-pow P]
   ef21 exp  lstsq    [--dataset D] [--k K] [--max-pow P] [--rounds T]
-  ef21 exp  rates    [--rounds T]
+  ef21 exp  pp       [--dataset D] [--rounds T] [--workers N]
+                     [--p 1.0,0.5,0.1] [--compressors top1,top8,rand8]
+                     (EF21-PP sweep: participation x compressor x
+                      iid/het shards at the PP theory stepsize)
+  ef21 exp  rates    [--rounds T]    (theory checks; always full rounds)
   ef21 exp  dl       [--steps N] [--workers W] [--k-frac F] [--sweep-k]
   ef21 data info
   ef21 artifacts
@@ -87,8 +112,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         "lstsq" => exp::Objective::Lstsq,
         _ => exp::Objective::LogReg,
     };
-    let problem =
+    // Validate the schedule against the run shape up front (a bad
+    // --faults worker index should be a CLI error, not a mid-run panic).
+    spec.sched.build(spec.n_workers, spec.seed)?;
+    let mut problem =
         exp::Problem::new(&spec.dataset, objective, spec.n_workers, spec.lam, spec.seed);
+    problem.sched = spec.sched.clone();
     // The natural layout is only materialized when `auto` actually
     // needs it (Problem::block_layout builds a shard oracle to ask).
     let layout = if spec.blocks == ef21::config::BlocksSpec::Auto {
@@ -171,6 +200,12 @@ fn run_over_transport(
         spec.algo == ef21::algo::AlgoSpec::Ef21,
         "transport mode currently drives EF21 (the paper's method)"
     );
+    let sched = spec.sched.build_for_transport(spec.n_workers, spec.seed)?;
+    anyhow::ensure!(
+        sched.is_none() || layout.is_flat(),
+        "--participation/--faults need a flat layout over transports \
+         (absent workers would miss block-delta frames)"
+    );
     // Move owned shard data into the worker factory.
     let shards: Vec<(Vec<f32>, Vec<f32>, usize, usize)> =
         ef21::data::partition::shards(&problem.dataset, problem.n_workers)
@@ -194,38 +229,43 @@ fn run_over_transport(
         Broadcast::Delta(layout.clone())
     };
     let worker_layout = layout.clone();
-    let out = run_distributed_opts(
-        master,
-        problem.n_workers,
-        move |i| {
-            let (a, y, n, d) = shards[i].clone();
-            let oracle: Box<dyn ef21::oracle::GradOracle> = match objective {
-                exp::Objective::LogReg => {
-                    Box::new(ef21::oracle::LogRegOracle::from_parts(a, y, n, d, lam))
-                }
-                exp::Objective::Lstsq => {
-                    Box::new(ef21::oracle::LstsqOracle::from_parts(a, y, n, d))
-                }
-            };
-            // Fan-out 1: dist already runs one OS thread per worker, so
-            // per-compress block fan-out would oversubscribe the host.
-            let c: std::sync::Arc<dyn ef21::compress::Compressor> = std::sync::Arc::from(
-                ef21::compress::from_spec_blocked(&comp, &worker_layout, 1)
-                    .expect("compressor"),
-            );
-            let rng = ef21::util::rng::worker_rng(seed, i);
-            Box::new(ef21::algo::ef21::Ef21Worker::with_layout(
-                oracle,
-                c,
-                rng,
-                worker_layout.clone(),
-            ))
-        },
-        spec.rounds,
-        kind,
-        &spec.label(),
-        broadcast,
-    )?;
+    let make_worker = move |i: usize| {
+        let (a, y, n, d) = shards[i].clone();
+        let oracle: Box<dyn ef21::oracle::GradOracle> = match objective {
+            exp::Objective::LogReg => {
+                Box::new(ef21::oracle::LogRegOracle::from_parts(a, y, n, d, lam))
+            }
+            exp::Objective::Lstsq => Box::new(ef21::oracle::LstsqOracle::from_parts(a, y, n, d)),
+        };
+        // Fan-out 1: dist already runs one OS thread per worker, so
+        // per-compress block fan-out would oversubscribe the host.
+        let c: std::sync::Arc<dyn ef21::compress::Compressor> = std::sync::Arc::from(
+            ef21::compress::from_spec_blocked(&comp, &worker_layout, 1).expect("compressor"),
+        );
+        let rng = ef21::util::rng::worker_rng(seed, i);
+        Box::new(ef21::algo::ef21::Ef21Worker::with_layout(oracle, c, rng, worker_layout.clone()))
+            as Box<dyn ef21::algo::WorkerNode>
+    };
+    let out = match sched {
+        Some(sched) => ef21::coordinator::dist::run_distributed_sched(
+            master,
+            problem.n_workers,
+            make_worker,
+            spec.rounds,
+            kind,
+            &spec.label(),
+            sched,
+        )?,
+        None => run_distributed_opts(
+            master,
+            problem.n_workers,
+            make_worker,
+            spec.rounds,
+            kind,
+            &spec.label(),
+            broadcast,
+        )?,
+    };
     println!(
         "transport={transport}: {} uplink frame bytes, {} downlink frame bytes",
         out.uplink_frame_bytes, out.downlink_frame_bytes
@@ -240,6 +280,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         "kdep" => exp::kdep::main(args),
         "gdtune" => exp::gdtune::main(args),
         "lstsq" => exp::lstsq::main(args),
+        "pp" => exp::pp::main(args),
         "rates" => exp::rates::main(args),
         "dl" => cmd_exp_dl(args),
         other => anyhow::bail!("unknown experiment '{other}'"),

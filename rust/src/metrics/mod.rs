@@ -35,11 +35,21 @@ pub struct History {
     /// CSVs are unchanged; 0 for runs predating the meter (or manual
     /// record assembly).
     pub downlink_bits: u64,
+    /// Final model on the master (empty for manually-assembled
+    /// histories). Kept off [`RoundRecord`] like `downlink_bits`; used
+    /// by the PP sweeps to evaluate exact end-of-run loss/gradient with
+    /// fresh oracles.
+    pub final_x: Vec<f64>,
 }
 
 impl History {
     pub fn new(label: impl Into<String>) -> Self {
-        History { label: label.into(), records: Vec::new(), downlink_bits: 0 }
+        History {
+            label: label.into(),
+            records: Vec::new(),
+            downlink_bits: 0,
+            final_x: Vec::new(),
+        }
     }
 
     pub fn final_loss(&self) -> f64 {

@@ -1,0 +1,402 @@
+//! Deterministic fault plans: a tiny DSL scripting worker crashes,
+//! rejoins, stragglers, and uplink frame faults against round indices.
+//!
+//! Grammar (clauses comma-separated; whitespace ignored; `w<i>:`
+//! defaults to worker 0 where omitted):
+//!
+//! ```text
+//!   [w<i>:]crash@<r>                 worker loses its state at round r and
+//!                                    stops participating
+//!   [w<i>:]rejoin@<r>                the most recent crash of that worker
+//!                                    ends at round r (master resyncs it
+//!                                    with a StateSync frame first)
+//!   straggle(<w>,<r0>..<r1>,<ms>ms)  worker w delays its uplink by <ms>
+//!                                    in rounds r0..=r1 (virtual delay in
+//!                                    the sim runners, a real sleep on the
+//!                                    transports); past the round deadline
+//!                                    it is cut to non-participation
+//!   drop(<w>@<r>)                    worker w's round-r uplink is lost:
+//!                                    scheduled one-round absence (the
+//!                                    worker skips the round entirely, so
+//!                                    master and worker state stay in sync
+//!                                    — the deterministic stand-in for
+//!                                    "frame lost, detected, not applied")
+//!   dup(<w>@<r>)                     worker w's round-r uplink frame is
+//!                                    sent twice; the receiver reads and
+//!                                    verifies both copies (trajectory
+//!                                    unchanged, wire bytes doubled)
+//! ```
+//!
+//! Example: `crash@3,rejoin@6,straggle(2,5..8,80ms),dup(1@4)`.
+//!
+//! Plans are static and known to every node (they ride in on the shared
+//! config), so faults need no runtime negotiation: the master never
+//! waits on a worker the plan says is absent, and a worker never sends a
+//! frame the plan says is lost. That is the property that makes the
+//! chaos harness deterministic and its trajectories assertable.
+
+use anyhow::{bail, ensure, Result};
+
+/// One crash window: state lost at `crash`, restored (via StateSync) at
+/// `rejoin`; `None` = never rejoins.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashWindow {
+    pub worker: usize,
+    pub crash: usize,
+    pub rejoin: Option<usize>,
+}
+
+/// One straggle window: uplink delayed by `delay_ms` in rounds
+/// `from..=to`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Straggle {
+    pub worker: usize,
+    pub from: usize,
+    pub to: usize,
+    pub delay_ms: u64,
+}
+
+/// A parsed, validated fault schedule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    crashes: Vec<CrashWindow>,
+    straggles: Vec<Straggle>,
+    drops: Vec<(usize, usize)>,
+    dups: Vec<(usize, usize)>,
+}
+
+/// Split on top-level commas only (commas inside `(...)` belong to the
+/// clause).
+fn split_clauses(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+/// Parse `[w<i>:]<kind>@<round>` into (worker, round).
+fn parse_at(clause: &str, kind: &str) -> Result<Option<(usize, usize)>> {
+    let (worker, rest) = match clause.strip_prefix('w') {
+        Some(r) => match r.split_once(':') {
+            Some((idx, rest)) => {
+                let w: usize = idx
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad worker index in fault clause '{clause}'"))?;
+                (w, rest)
+            }
+            None => (0, clause),
+        },
+        None => (0, clause),
+    };
+    match rest.strip_prefix(kind).and_then(|r| r.strip_prefix('@')) {
+        Some(round) => {
+            let r: usize = round
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad round in fault clause '{clause}'"))?;
+            Ok(Some((worker, r)))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Parse `<name>(<args>)` returning the args string.
+fn parse_call<'a>(clause: &'a str, name: &str) -> Option<&'a str> {
+    clause
+        .strip_prefix(name)
+        .and_then(|r| r.strip_prefix('('))
+        .and_then(|r| r.strip_suffix(')'))
+}
+
+/// Parse `<w>@<r>` (drop/dup argument).
+fn parse_worker_round(args: &str, clause: &str) -> Result<(usize, usize)> {
+    let (w, r) = args
+        .split_once('@')
+        .ok_or_else(|| anyhow::anyhow!("expected <worker>@<round> in '{clause}'"))?;
+    Ok((
+        w.trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad worker in '{clause}'"))?,
+        r.trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad round in '{clause}'"))?,
+    ))
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        let cleaned: String = spec.chars().filter(|c| !c.is_whitespace()).collect();
+        if cleaned.is_empty() || cleaned == "none" {
+            return Ok(plan);
+        }
+        for clause in split_clauses(&cleaned) {
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some((w, r)) = parse_at(clause, "crash")? {
+                // Reject a second crash while an earlier window is open.
+                if let Some(prev) = plan.crashes.iter().rfind(|c| c.worker == w) {
+                    ensure!(
+                        prev.rejoin.is_some_and(|rj| rj <= r),
+                        "fault plan: worker {w} crashes at round {r} while already crashed"
+                    );
+                }
+                plan.crashes.push(CrashWindow { worker: w, crash: r, rejoin: None });
+                continue;
+            }
+            if let Some((w, r)) = parse_at(clause, "rejoin")? {
+                let open =
+                    plan.crashes.iter_mut().rfind(|c| c.worker == w && c.rejoin.is_none());
+                match open {
+                    Some(c) => {
+                        ensure!(
+                            r > c.crash,
+                            "fault plan: worker {w} rejoin@{r} must come after crash@{}",
+                            c.crash
+                        );
+                        c.rejoin = Some(r);
+                    }
+                    None => bail!("fault plan: rejoin@{r} for worker {w} without a crash"),
+                }
+                continue;
+            }
+            if let Some(args) = parse_call(clause, "straggle") {
+                let parts: Vec<&str> = args.split(',').collect();
+                ensure!(
+                    parts.len() == 3,
+                    "straggle needs (worker, r0..r1, delay_ms): '{clause}'"
+                );
+                let worker: usize = parts[0]
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad worker in '{clause}'"))?;
+                let (from, to) = parts[1]
+                    .split_once("..")
+                    .ok_or_else(|| anyhow::anyhow!("bad round range in '{clause}'"))?;
+                let from: usize =
+                    from.parse().map_err(|_| anyhow::anyhow!("bad range start in '{clause}'"))?;
+                let to: usize =
+                    to.parse().map_err(|_| anyhow::anyhow!("bad range end in '{clause}'"))?;
+                ensure!(from <= to, "straggle range {from}..{to} is empty in '{clause}'");
+                let ms = parts[2].strip_suffix("ms").unwrap_or(parts[2]);
+                let delay_ms: u64 =
+                    ms.parse().map_err(|_| anyhow::anyhow!("bad delay in '{clause}'"))?;
+                ensure!(delay_ms > 0, "straggle delay must be positive in '{clause}'");
+                plan.straggles.push(Straggle { worker, from, to, delay_ms });
+                continue;
+            }
+            if let Some(args) = parse_call(clause, "drop") {
+                plan.drops.push(parse_worker_round(args, clause)?);
+                continue;
+            }
+            if let Some(args) = parse_call(clause, "dup") {
+                plan.dups.push(parse_worker_round(args, clause)?);
+                continue;
+            }
+            bail!(
+                "unknown fault clause '{clause}' \
+                 (expected [w<i>:]crash@<r>, [w<i>:]rejoin@<r>, \
+                 straggle(<w>,<r0>..<r1>,<ms>ms), drop(<w>@<r>), dup(<w>@<r>))"
+            );
+        }
+        Ok(plan)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty()
+            && self.straggles.is_empty()
+            && self.drops.is_empty()
+            && self.dups.is_empty()
+    }
+
+    /// Largest worker index the plan references (for validation against n).
+    pub fn max_worker(&self) -> Option<usize> {
+        self.crashes
+            .iter()
+            .map(|c| c.worker)
+            .chain(self.straggles.iter().map(|s| s.worker))
+            .chain(self.drops.iter().map(|&(w, _)| w))
+            .chain(self.dups.iter().map(|&(w, _)| w))
+            .max()
+    }
+
+    /// Does the plan contain any straggle window?
+    pub fn has_straggles(&self) -> bool {
+        !self.straggles.is_empty()
+    }
+
+    /// Exact maximum single-round scheduled delay across all workers
+    /// (used to validate the plan against the transport's I/O timeout).
+    /// Per-round delays are piecewise constant with change points only
+    /// at window starts, so maximizing `delay_ms(w, start)` over every
+    /// window start is exact — non-overlapping windows of one worker do
+    /// NOT sum.
+    pub fn max_delay_ms(&self) -> u64 {
+        self.straggles
+            .iter()
+            .map(|s| self.delay_ms(s.worker, s.from))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Does the plan schedule any crash at all (with or without rejoin)?
+    /// Crash events require workers that support state loss
+    /// ([`crate::algo::WorkerNode::supports_resync`]), even when the
+    /// worker never comes back.
+    pub fn has_crashes(&self) -> bool {
+        !self.crashes.is_empty()
+    }
+
+    /// Any rejoin scheduled (→ the master must mirror worker state).
+    pub fn needs_resync(&self) -> bool {
+        self.crashes.iter().any(|c| c.rejoin.is_some())
+    }
+
+    /// Is worker `w` down (crashed, not yet rejoined) in round `t`?
+    pub fn crashed_during(&self, w: usize, t: usize) -> bool {
+        self.crashes
+            .iter()
+            .any(|c| c.worker == w && c.crash <= t && c.rejoin.map_or(true, |r| t < r))
+    }
+
+    /// Does worker `w` lose its state exactly at round `t`?
+    pub fn crash_at(&self, w: usize, t: usize) -> bool {
+        self.crashes.iter().any(|c| c.worker == w && c.crash == t)
+    }
+
+    /// Does worker `w` rejoin (and need a StateSync) at round `t`?
+    pub fn rejoin_at(&self, w: usize, t: usize) -> bool {
+        self.crashes.iter().any(|c| c.worker == w && c.rejoin == Some(t))
+    }
+
+    /// Scheduled uplink delay for worker `w` in round `t` (0 = none;
+    /// overlapping windows sum).
+    pub fn delay_ms(&self, w: usize, t: usize) -> u64 {
+        self.straggles
+            .iter()
+            .filter(|s| s.worker == w && s.from <= t && t <= s.to)
+            .map(|s| s.delay_ms)
+            .sum()
+    }
+
+    pub fn dropped(&self, w: usize, t: usize) -> bool {
+        self.drops.contains(&(w, t))
+    }
+
+    pub fn duplicated(&self, w: usize, t: usize) -> bool {
+        self.dups.contains(&(w, t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_smoke_spec() {
+        let p = FaultPlan::parse("crash@3,rejoin@6").unwrap();
+        assert!(!p.is_empty());
+        assert!(p.needs_resync());
+        assert!(p.crash_at(0, 3));
+        assert!(p.crashed_during(0, 3));
+        assert!(p.crashed_during(0, 5));
+        assert!(!p.crashed_during(0, 6));
+        assert!(p.rejoin_at(0, 6));
+        assert!(!p.crashed_during(1, 4));
+        assert_eq!(p.max_worker(), Some(0));
+    }
+
+    #[test]
+    fn parses_full_grammar() {
+        let p = FaultPlan::parse(
+            "w2:crash@10, w2:rejoin@14, straggle(1, 5..8, 80ms), drop(3@2), dup(0@4)",
+        )
+        .unwrap();
+        assert!(p.crashed_during(2, 12));
+        assert_eq!(p.delay_ms(1, 5), 80);
+        assert_eq!(p.delay_ms(1, 8), 80);
+        assert_eq!(p.delay_ms(1, 9), 0);
+        assert!(p.dropped(3, 2));
+        assert!(!p.dropped(3, 3));
+        assert!(p.duplicated(0, 4));
+        assert_eq!(p.max_worker(), Some(3));
+        assert!(p.has_straggles());
+    }
+
+    #[test]
+    fn empty_and_none_specs() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("none").unwrap().is_empty());
+        assert!(FaultPlan::none().is_empty());
+        assert_eq!(FaultPlan::none().max_worker(), None);
+    }
+
+    #[test]
+    fn crash_without_rejoin_is_permanent() {
+        let p = FaultPlan::parse("w1:crash@5").unwrap();
+        assert!(p.crashed_during(1, 5));
+        assert!(p.crashed_during(1, 1_000_000));
+        assert!(!p.needs_resync());
+    }
+
+    #[test]
+    fn two_crash_windows_for_one_worker() {
+        let p = FaultPlan::parse("crash@2,rejoin@4,crash@8,rejoin@9").unwrap();
+        assert!(p.crashed_during(0, 3));
+        assert!(!p.crashed_during(0, 5));
+        assert!(p.crashed_during(0, 8));
+        assert!(!p.crashed_during(0, 9));
+        assert!(p.rejoin_at(0, 4));
+        assert!(p.rejoin_at(0, 9));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("rejoin@6").is_err(), "rejoin without crash");
+        assert!(FaultPlan::parse("crash@6,rejoin@6").is_err(), "rejoin not after crash");
+        assert!(FaultPlan::parse("crash@2,crash@5").is_err(), "crash while crashed");
+        assert!(FaultPlan::parse("straggle(1,8..5,10ms)").is_err(), "empty range");
+        assert!(FaultPlan::parse("straggle(1,2..5,0ms)").is_err(), "zero delay");
+        assert!(FaultPlan::parse("straggle(1,2..5)").is_err(), "missing delay");
+        assert!(FaultPlan::parse("drop(1)").is_err(), "missing round");
+        assert!(FaultPlan::parse("explode@3").is_err(), "unknown clause");
+        assert!(FaultPlan::parse("wx:crash@3").is_err(), "bad worker index");
+    }
+
+    #[test]
+    fn overlapping_straggles_sum() {
+        let p = FaultPlan::parse("straggle(0,1..5,10ms),straggle(0,3..4,5ms)").unwrap();
+        assert_eq!(p.delay_ms(0, 2), 10);
+        assert_eq!(p.delay_ms(0, 3), 15);
+        assert_eq!(p.max_delay_ms(), 15);
+        // Disjoint windows of one worker do NOT sum: the per-round max
+        // is what bounds a single blocking read.
+        let q = FaultPlan::parse("straggle(0,0..0,300ms),straggle(0,5..5,300ms)").unwrap();
+        assert_eq!(q.max_delay_ms(), 300);
+        assert_eq!(FaultPlan::none().max_delay_ms(), 0);
+    }
+
+    #[test]
+    fn has_crashes_with_and_without_rejoin() {
+        assert!(FaultPlan::parse("crash@5").unwrap().has_crashes());
+        assert!(!FaultPlan::parse("crash@5").unwrap().needs_resync());
+        assert!(FaultPlan::parse("crash@2,rejoin@4").unwrap().has_crashes());
+        assert!(!FaultPlan::parse("drop(0@1)").unwrap().has_crashes());
+    }
+}

@@ -1,0 +1,330 @@
+//! Round participation scheduling and the deterministic fault model —
+//! the subsystem that lets the distributed path exercise the scenarios a
+//! production deployment actually meets: intermittently-available
+//! clients (EF21-PP partial participation), stragglers cut by a round
+//! deadline, and worker crash → state-resync rejoin.
+//!
+//! # Design: the schedule is a pure function
+//!
+//! A [`Scheduler`] combines a [`Participation`] mode, a [`FaultPlan`],
+//! and an optional round deadline. [`Scheduler::round_plan`] maps a
+//! round index `t` to a [`RoundPlan`] — who computes, who rejoins, who
+//! straggles by how much — **purely** from `(spec, seed, t, n)`. Every
+//! runner (sequential sim, worker-thread pool, local channels, TCP)
+//! derives the identical plan independently, so no runtime negotiation,
+//! acks, or failure detectors are needed, and a chaotic run is exactly
+//! reproducible. The transports *realize* the plan physically (real
+//! sleeps, duplicated frames, StateSync bytes on the wire); the sim
+//! runners realize it virtually; the trajectories agree.
+//!
+//! # EF21-PP semantics
+//!
+//! An absent worker holds its Markov state `g_i^t` and contributes a
+//! zero-cost no-op message; since the EF21 master maintains
+//! `g^t = avg_i g_i^t` incrementally from deltas, absorbing a no-op IS
+//! "hold `g_i^t`" — the EF21-PP aggregation rule (Fatkhullin et al.
+//! 2021, "EF21 with Bells & Whistles"). The matching stepsize bound is
+//! [`crate::theory::stepsize_pp`].
+//!
+//! # Crash model
+//!
+//! `crash@r` drops the worker's algorithm state (as a restarted process
+//! would); the worker stays down until `rejoin@r'`, when the master
+//! pushes an f64 [`StateSync`](crate::transport::codec::Frame) frame
+//! rebuilt by the [`StateTracker`] from every message it ever absorbed.
+//! Resync is exact: after rejoin, the worker's uplink deltas are
+//! bit-identical to a run where it had merely been absent.
+
+pub mod faults;
+pub mod participation;
+pub mod tracker;
+
+pub use faults::{CrashWindow, FaultPlan, Straggle};
+pub use participation::Participation;
+pub use tracker::StateTracker;
+
+use crate::telemetry::{self, keys};
+use anyhow::{ensure, Result};
+
+/// A fully-specified schedule over `n` workers.
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    participation: Participation,
+    faults: FaultPlan,
+    /// Straggler cutoff per round, in milliseconds: an active worker
+    /// whose scheduled delay exceeds this is treated as non-participating
+    /// for the round instead of holding the barrier. `None` = no
+    /// deadline (the barrier waits out every scheduled delay).
+    deadline_ms: Option<u64>,
+    seed: u64,
+    n: usize,
+}
+
+/// What round `t` looks like, per worker.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoundPlan {
+    /// Worker computes and uplinks this round.
+    pub active: Vec<bool>,
+    /// Workers whose state is lost this round (crash instant).
+    pub crash: Vec<usize>,
+    /// Workers the master must StateSync before this round (rejoin).
+    pub resync: Vec<usize>,
+    /// Scheduled uplink delay per worker in ms (0 = on time; only
+    /// meaningful where `active`). Realized as a real sleep on the
+    /// transports, virtual in the sim runners.
+    pub delay_ms: Vec<u64>,
+    /// Workers whose uplink frame is sent twice this round.
+    pub dup: Vec<bool>,
+    /// Stragglers cut by the deadline this round (telemetry).
+    pub cut_stragglers: usize,
+    /// Scheduled uplink drops this round (telemetry).
+    pub drops: usize,
+}
+
+impl RoundPlan {
+    pub fn participants(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Emit this round's scheduler telemetry — one copy of the
+    /// accounting shared by every runner (sim, pooled, distributed), so
+    /// the counters can never desynchronize between them.
+    pub fn record_telemetry(&self) {
+        telemetry::counter(keys::SCHED_PARTICIPANTS).incr(self.participants() as u64);
+        if self.cut_stragglers > 0 {
+            telemetry::counter(keys::SCHED_STRAGGLERS).incr(self.cut_stragglers as u64);
+        }
+        if self.drops > 0 {
+            telemetry::counter(keys::SCHED_DROPS).incr(self.drops as u64);
+        }
+    }
+}
+
+/// Meter one StateSync push (f64 payload: `64·d` bits) — shared by the
+/// sim and distributed runners.
+pub fn record_resync_bits(d: usize) {
+    telemetry::counter(keys::SCHED_RESYNC_BITS).incr(64 * d as u64);
+}
+
+impl Scheduler {
+    pub fn new(
+        participation: Participation,
+        faults: FaultPlan,
+        deadline_ms: Option<u64>,
+        n: usize,
+        seed: u64,
+    ) -> Result<Scheduler> {
+        ensure!(n >= 1, "scheduler needs at least one worker");
+        if let Some(w) = faults.max_worker() {
+            ensure!(
+                w < n,
+                "fault plan references worker {w} but the run has only {n} workers"
+            );
+        }
+        if let Some(dl) = deadline_ms {
+            ensure!(dl > 0, "--deadline-ms 0: use no deadline instead");
+        }
+        if let Participation::RoundRobin(c) = participation {
+            ensure!(
+                c <= n,
+                "--participation rr:{c}: only {n} workers — cohorts beyond the worker \
+                 count would make {} of every {c} rounds run with no participants",
+                c - n
+            );
+        }
+        Ok(Scheduler { participation, faults, deadline_ms, seed, n })
+    }
+
+    /// A scheduler that changes nothing: full participation, no faults,
+    /// no deadline. Runs identically to the legacy unscheduled path
+    /// (asserted bit-for-bit in `integration_sched.rs`).
+    pub fn noop(n: usize) -> Scheduler {
+        Scheduler::new(Participation::Full, FaultPlan::none(), None, n, 0)
+            .expect("noop scheduler is always valid")
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    pub fn participation(&self) -> Participation {
+        self.participation
+    }
+
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    pub fn deadline_ms(&self) -> Option<u64> {
+        self.deadline_ms
+    }
+
+    /// Whether the plan schedules any rejoin (→ runners must keep a
+    /// [`StateTracker`] and workers must support resync).
+    pub fn needs_resync(&self) -> bool {
+        self.faults.needs_resync()
+    }
+
+    /// Whether the plan schedules any crash at all — with or without a
+    /// rejoin, the workers must support modeled state loss.
+    pub fn has_crashes(&self) -> bool {
+        self.faults.has_crashes()
+    }
+
+    /// True when the schedule cannot alter the legacy protocol at all.
+    pub fn is_noop(&self) -> bool {
+        self.participation == Participation::Full && self.faults.is_empty()
+    }
+
+    /// The plan for round `t` — pure in `(self, t)`; see module docs.
+    pub fn round_plan(&self, t: usize) -> RoundPlan {
+        let n = self.n;
+        let mut active = self.participation.sample(self.seed, t, n);
+        let mut delay_ms = vec![0u64; n];
+        let mut dup = vec![false; n];
+        let mut cut = 0usize;
+        let mut drops = 0usize;
+        for w in 0..n {
+            if self.faults.crashed_during(w, t) {
+                active[w] = false;
+                continue;
+            }
+            if !active[w] {
+                continue;
+            }
+            if self.faults.dropped(w, t) {
+                active[w] = false;
+                drops += 1;
+                continue;
+            }
+            let d = self.faults.delay_ms(w, t);
+            if d > 0 {
+                match self.deadline_ms {
+                    Some(dl) if d > dl => {
+                        // Past the cutoff: non-participant this round, no
+                        // state update — the barrier does not wait.
+                        active[w] = false;
+                        cut += 1;
+                        continue;
+                    }
+                    _ => delay_ms[w] = d,
+                }
+            }
+            dup[w] = self.faults.duplicated(w, t);
+        }
+        let crash: Vec<usize> = (0..n).filter(|&w| self.faults.crash_at(w, t)).collect();
+        let resync: Vec<usize> = (0..n).filter(|&w| self.faults.rejoin_at(w, t)).collect();
+        RoundPlan { active, crash, resync, delay_ms, dup, cut_stragglers: cut, drops }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(part: &str, faults: &str, deadline_ms: Option<u64>, n: usize) -> Scheduler {
+        Scheduler::new(
+            Participation::parse(part).unwrap(),
+            FaultPlan::parse(faults).unwrap(),
+            deadline_ms,
+            n,
+            42,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn noop_scheduler_activates_everyone() {
+        let s = Scheduler::noop(4);
+        assert!(s.is_noop());
+        for t in 0..10 {
+            let p = s.round_plan(t);
+            assert_eq!(p.active, vec![true; 4]);
+            assert!(p.crash.is_empty() && p.resync.is_empty());
+            assert_eq!(p.participants(), 4);
+        }
+    }
+
+    #[test]
+    fn plans_are_reproducible() {
+        let a = sched("p:0.5", "straggle(1,2..4,50ms)", Some(100), 8);
+        let b = sched("p:0.5", "straggle(1,2..4,50ms)", Some(100), 8);
+        for t in 0..200 {
+            assert_eq!(a.round_plan(t), b.round_plan(t), "round {t}");
+        }
+    }
+
+    #[test]
+    fn crash_window_suppresses_participation_and_schedules_resync() {
+        let s = sched("full", "crash@3,rejoin@6", None, 3);
+        assert!(s.needs_resync());
+        assert!(!s.is_noop());
+        assert_eq!(s.round_plan(2).active, vec![true; 3]);
+        let p3 = s.round_plan(3);
+        assert_eq!(p3.active, vec![false, true, true]);
+        assert_eq!(p3.crash, vec![0]);
+        assert!(s.round_plan(4).crash.is_empty());
+        assert!(!s.round_plan(5).active[0]);
+        let p6 = s.round_plan(6);
+        assert_eq!(p6.resync, vec![0]);
+        assert!(p6.active[0], "worker participates again from the rejoin round");
+    }
+
+    #[test]
+    fn deadline_cuts_long_stragglers_only() {
+        let s = sched("full", "straggle(1,2..3,80ms),straggle(2,2..2,200ms)", Some(100), 4);
+        let p = s.round_plan(2);
+        assert!(p.active[1], "80ms is within the 100ms deadline");
+        assert_eq!(p.delay_ms[1], 80);
+        assert!(!p.active[2], "200ms is past the deadline");
+        assert_eq!(p.cut_stragglers, 1);
+        // Without a deadline the barrier waits for everyone.
+        let s2 = sched("full", "straggle(2,2..2,200ms)", None, 4);
+        let p2 = s2.round_plan(2);
+        assert!(p2.active[2]);
+        assert_eq!(p2.delay_ms[2], 200);
+        assert_eq!(p2.cut_stragglers, 0);
+    }
+
+    #[test]
+    fn drop_is_one_round_absence() {
+        let s = sched("full", "drop(2@5)", None, 4);
+        assert!(s.round_plan(4).active[2]);
+        let p = s.round_plan(5);
+        assert!(!p.active[2]);
+        assert_eq!(p.drops, 1);
+        assert!(s.round_plan(6).active[2]);
+    }
+
+    #[test]
+    fn dup_marks_the_frame_without_changing_activity() {
+        let s = sched("full", "dup(1@3)", None, 4);
+        let p = s.round_plan(3);
+        assert!(p.active[1] && p.dup[1]);
+        assert!(!s.round_plan(2).dup[1]);
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range_workers_and_zero_deadline() {
+        assert!(Scheduler::new(
+            Participation::Full,
+            FaultPlan::parse("w7:crash@1").unwrap(),
+            None,
+            4,
+            0
+        )
+        .is_err());
+        assert!(Scheduler::new(Participation::Full, FaultPlan::none(), Some(0), 4, 0).is_err());
+        // More cohorts than workers would schedule empty rounds.
+        assert!(Scheduler::new(
+            Participation::RoundRobin(30),
+            FaultPlan::none(),
+            None,
+            8,
+            0
+        )
+        .is_err());
+        assert!(Scheduler::new(Participation::RoundRobin(8), FaultPlan::none(), None, 8, 0)
+            .is_ok());
+    }
+}

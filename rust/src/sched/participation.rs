@@ -1,0 +1,194 @@
+//! Round participation plans: which subset of the `n` workers computes
+//! and uplinks in round `t`.
+//!
+//! Sampling is **stateless per round** — the mask for round `t` is a pure
+//! function of `(spec, seed, t, n)`, derived from a fresh RNG stream
+//! seeded by mixing the scheduler seed with the round index. That is
+//! what lets every runner (sequential sim, thread pool, local channels,
+//! TCP) realize the *identical* schedule without sharing any mutable
+//! state, and what makes fault schedules replayable run-to-run.
+
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Participation mode (CLI: `--participation full|p:<f>|m:<k>|rr:<c>`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum Participation {
+    /// Every worker, every round (the legacy protocol).
+    #[default]
+    Full,
+    /// Independent Bernoulli(`p`) coin per worker per round (EF21-PP's
+    /// sampling model).
+    Bernoulli(f64),
+    /// Exactly `m` distinct workers per round, uniformly (clamped to n).
+    FixedM(usize),
+    /// `c` round-robin cohorts: worker `i` participates in round `t`
+    /// iff `i % c == t % c` (deterministic, seed-independent).
+    RoundRobin(usize),
+}
+
+impl Participation {
+    pub fn parse(s: &str) -> Result<Participation> {
+        let t = s.trim().to_ascii_lowercase();
+        if t.is_empty() || t == "full" {
+            return Ok(Participation::Full);
+        }
+        if let Some(p) = t.strip_prefix("p:") {
+            let p: f64 = p
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--participation p:{p}: not a number"))?;
+            anyhow::ensure!(
+                p > 0.0 && p <= 1.0,
+                "--participation p:{p}: need 0 < p <= 1"
+            );
+            return Ok(Participation::Bernoulli(p));
+        }
+        if let Some(m) = t.strip_prefix("m:") {
+            let m: usize = m
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--participation m:{m}: not a count"))?;
+            anyhow::ensure!(m >= 1, "--participation m:0: need at least one worker");
+            return Ok(Participation::FixedM(m));
+        }
+        if let Some(c) = t.strip_prefix("rr:") {
+            let c: usize = c
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--participation rr:{c}: not a cohort count"))?;
+            anyhow::ensure!(c >= 1, "--participation rr:0: need at least one cohort");
+            return Ok(Participation::RoundRobin(c));
+        }
+        anyhow::bail!("--participation {s}: expected full, p:<f>, m:<k>, or rr:<c>")
+    }
+
+    /// Expected participating fraction (used by `exp pp` for labels and
+    /// by the PP stepsize bound; RoundRobin cohorts participate 1/c of
+    /// the time).
+    pub fn expected_fraction(&self, n: usize) -> f64 {
+        match *self {
+            Participation::Full => 1.0,
+            Participation::Bernoulli(p) => p,
+            Participation::FixedM(m) => m.min(n) as f64 / n.max(1) as f64,
+            Participation::RoundRobin(c) => 1.0 / c as f64,
+        }
+    }
+
+    /// Human-readable spec string (round-trips through [`parse`]).
+    pub fn spec(&self) -> String {
+        match *self {
+            Participation::Full => "full".into(),
+            Participation::Bernoulli(p) => format!("p:{p}"),
+            Participation::FixedM(m) => format!("m:{m}"),
+            Participation::RoundRobin(c) => format!("rr:{c}"),
+        }
+    }
+
+    /// The participation mask for round `t` over `n` workers. Pure in
+    /// `(self, seed, t, n)`; see the module docs.
+    pub fn sample(&self, seed: u64, t: usize, n: usize) -> Vec<bool> {
+        match *self {
+            Participation::Full => vec![true; n],
+            Participation::Bernoulli(p) => {
+                let mut rng = round_rng(seed, t);
+                (0..n).map(|_| rng.next_f64() < p).collect()
+            }
+            Participation::FixedM(m) => {
+                let mut rng = round_rng(seed, t);
+                let idx = rng.sample_indices(n, m.min(n));
+                let mut mask = vec![false; n];
+                for i in idx {
+                    mask[i as usize] = true;
+                }
+                mask
+            }
+            Participation::RoundRobin(c) => {
+                let cohort = t % c;
+                (0..n).map(|i| i % c == cohort).collect()
+            }
+        }
+    }
+}
+
+/// Fresh RNG stream for round `t`: splitmix-style mixing so adjacent
+/// rounds land on unrelated xoshiro states.
+fn round_rng(seed: u64, t: usize) -> Rng {
+    Rng::seed(seed ^ (t as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_all_modes_and_rejects_garbage() {
+        assert_eq!(Participation::parse("full").unwrap(), Participation::Full);
+        assert_eq!(Participation::parse("p:0.5").unwrap(), Participation::Bernoulli(0.5));
+        assert_eq!(Participation::parse("m:4").unwrap(), Participation::FixedM(4));
+        assert_eq!(Participation::parse("rr:3").unwrap(), Participation::RoundRobin(3));
+        assert!(Participation::parse("p:0").is_err());
+        assert!(Participation::parse("p:1.5").is_err());
+        assert!(Participation::parse("m:0").is_err());
+        assert!(Participation::parse("rr:0").is_err());
+        assert!(Participation::parse("sometimes").is_err());
+        // Spec strings round-trip.
+        for s in ["full", "p:0.25", "m:7", "rr:2"] {
+            let p = Participation::parse(s).unwrap();
+            assert_eq!(Participation::parse(&p.spec()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn sampling_is_reproducible_and_seed_sensitive() {
+        let p = Participation::Bernoulli(0.5);
+        for t in 0..50 {
+            assert_eq!(p.sample(9, t, 16), p.sample(9, t, 16));
+        }
+        let differs = (0..50).any(|t| p.sample(9, t, 16) != p.sample(10, t, 16));
+        assert!(differs, "seed must matter");
+        let across_rounds = (1..50).any(|t| p.sample(9, t, 16) != p.sample(9, 0, 16));
+        assert!(across_rounds, "round index must matter");
+    }
+
+    #[test]
+    fn bernoulli_rate_approaches_p() {
+        let p = Participation::Bernoulli(0.3);
+        let n = 20;
+        let rounds = 2000;
+        let total: usize = (0..rounds)
+            .map(|t| p.sample(7, t, n).iter().filter(|&&b| b).count())
+            .sum();
+        let rate = total as f64 / (rounds * n) as f64;
+        assert!((rate - 0.3).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn fixed_m_is_exact_and_clamped() {
+        let p = Participation::FixedM(3);
+        for t in 0..100 {
+            assert_eq!(p.sample(1, t, 10).iter().filter(|&&b| b).count(), 3);
+        }
+        // m > n clamps to full participation.
+        assert_eq!(Participation::FixedM(99).sample(1, 0, 4), vec![true; 4]);
+    }
+
+    #[test]
+    fn round_robin_cohorts_partition_the_workers() {
+        let p = Participation::RoundRobin(3);
+        let n = 8;
+        // Over c consecutive rounds every worker participates exactly once.
+        let mut count = vec![0usize; n];
+        for t in 0..3 {
+            for (i, &b) in p.sample(0, t, n).iter().enumerate() {
+                count[i] += usize::from(b);
+            }
+        }
+        assert_eq!(count, vec![1; n]);
+    }
+
+    #[test]
+    fn expected_fraction_matches_modes() {
+        assert_eq!(Participation::Full.expected_fraction(10), 1.0);
+        assert_eq!(Participation::Bernoulli(0.25).expected_fraction(10), 0.25);
+        assert_eq!(Participation::FixedM(5).expected_fraction(10), 0.5);
+        assert_eq!(Participation::RoundRobin(4).expected_fraction(10), 0.25);
+    }
+}

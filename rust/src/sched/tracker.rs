@@ -1,0 +1,91 @@
+//! Master-side per-worker state mirrors, the ingredient that makes
+//! crash→rejoin resync possible: for algorithms whose uplink messages
+//! fully determine the worker's Markov state (EF21: `g_i += c_i`;
+//! EF21+: delta or whole-state assignment; DCGD: stateless), the master
+//! can replay every message it absorbed into an exact copy of `g_i` and
+//! push it back to a rejoining worker in one `StateSync` frame.
+//!
+//! The mirror is f64 end to end (StateSync serializes f64, unlike the
+//! f32 data-plane frames), so a resynced worker is **bit-identical** to
+//! one that had merely been absent — asserted in
+//! `rust/tests/integration_sched.rs`.
+
+use crate::algo::WireMsg;
+
+/// Per-worker mirrors of the reconstructible worker state.
+pub struct StateTracker {
+    g: Vec<Vec<f64>>,
+}
+
+impl StateTracker {
+    pub fn new(n_workers: usize, d: usize) -> StateTracker {
+        StateTracker { g: vec![vec![0.0; d]; n_workers] }
+    }
+
+    /// Fold one worker's uplink message into its mirror. Sparse and
+    /// Markov-tagged messages are state deltas; the DCGD-tagged branch
+    /// (EF21+) assigns the whole state.
+    pub fn absorb_msg(&mut self, w: usize, msg: &WireMsg) {
+        match msg {
+            WireMsg::Sparse(c) | WireMsg::Tagged { dcgd_branch: false, payload: c } => {
+                c.sparse.add_into(&mut self.g[w]);
+            }
+            WireMsg::Tagged { dcgd_branch: true, payload } => {
+                self.g[w].iter_mut().for_each(|v| *v = 0.0);
+                payload.sparse.add_into(&mut self.g[w]);
+            }
+        }
+    }
+
+    /// Fold a whole round of messages (absent workers contribute empty
+    /// no-op messages, so absorbing everything is safe).
+    pub fn absorb_round(&mut self, msgs: &[WireMsg]) {
+        debug_assert_eq!(msgs.len(), self.g.len());
+        for (w, m) in msgs.iter().enumerate() {
+            self.absorb_msg(w, m);
+        }
+    }
+
+    /// The reconstructed state of worker `w`.
+    pub fn mirror(&self, w: usize) -> &[f64] {
+        &self.g[w]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressed, SparseVec};
+
+    fn sparse(idx: Vec<u32>, val: Vec<f64>) -> WireMsg {
+        let bits = 64 * idx.len() as u64;
+        WireMsg::Sparse(Compressed { sparse: SparseVec::new(idx, val), bits })
+    }
+
+    #[test]
+    fn deltas_accumulate_per_worker() {
+        let mut t = StateTracker::new(2, 3);
+        t.absorb_round(&[sparse(vec![0], vec![1.0]), sparse(vec![2], vec![-2.0])]);
+        t.absorb_round(&[sparse(vec![0, 1], vec![0.5, 3.0]), sparse(vec![], vec![])]);
+        assert_eq!(t.mirror(0), &[1.5, 3.0, 0.0]);
+        assert_eq!(t.mirror(1), &[0.0, 0.0, -2.0]);
+    }
+
+    #[test]
+    fn dcgd_tag_assigns_whole_state() {
+        let mut t = StateTracker::new(1, 3);
+        t.absorb_msg(0, &sparse(vec![0, 1, 2], vec![1.0, 1.0, 1.0]));
+        let assign = WireMsg::Tagged {
+            dcgd_branch: true,
+            payload: Compressed { sparse: SparseVec::new(vec![1], vec![7.0]), bits: 64 },
+        };
+        t.absorb_msg(0, &assign);
+        assert_eq!(t.mirror(0), &[0.0, 7.0, 0.0]);
+        let delta = WireMsg::Tagged {
+            dcgd_branch: false,
+            payload: Compressed { sparse: SparseVec::new(vec![0], vec![2.0]), bits: 64 },
+        };
+        t.absorb_msg(0, &delta);
+        assert_eq!(t.mirror(0), &[2.0, 7.0, 0.0]);
+    }
+}

@@ -83,6 +83,22 @@ pub mod keys {
     pub const POOL_CHUNK_NS: &str = "coordinator.pool.chunk.ns";
     /// Pool width of the most recent parallel run (gauge).
     pub const POOL_THREADS: &str = "coordinator.pool.threads";
+    /// Cumulative participant-rounds under a participation schedule
+    /// (each scheduled round adds its participant count; with full
+    /// participation over R rounds the delta is `R * n`).
+    pub const SCHED_PARTICIPANTS: &str = "sched.participants";
+    /// Stragglers cut by the round deadline (treated as absent for the
+    /// round instead of holding the barrier).
+    pub const SCHED_STRAGGLERS: &str = "sched.stragglers";
+    /// Bits spent resyncing rejoining workers (f64 StateSync frames:
+    /// `64 * d` per resync).
+    pub const SCHED_RESYNC_BITS: &str = "sched.resync.bits";
+    /// Scheduled uplink drops (one-round absences injected by the fault
+    /// plan's `drop(w@r)` clauses).
+    pub const SCHED_DROPS: &str = "sched.drops";
+    /// Extra uplink frames injected by `dup(w@r)` clauses (dist runner;
+    /// the duplicate bytes also land in `transport.uplink.frame.bytes`).
+    pub const SCHED_DUP_FRAMES: &str = "sched.dup.frames";
 }
 
 static ENABLED: AtomicBool = AtomicBool::new(false);

@@ -42,6 +42,34 @@ pub fn stepsize_theorem2(l: f64, l_tilde: f64, alpha: f64, mu: f64) -> f64 {
     lhs.min(rhs)
 }
 
+/// EF21-PP stepsize bound (partial participation; Fatkhullin et al.
+/// 2021, "EF21 with Bells & Whistles"): each worker participates
+/// independently with probability `p` per round and holds `g_i` when
+/// absent. The Lyapunov recursion mixes the participating contraction
+/// `(1-θ)` with the absent branch's `(1+s)` growth (Young), giving for
+/// `s = θp / (2(1-p))`:
+///
+/// ```text
+///   θ_p = pθ/2,   β_p = pβ + (1-p)(1 + 1/s),
+///   γ  <= 1 / (L + L̃ sqrt(β_p / θ_p)).
+/// ```
+///
+/// Conservative by design: at `p = 1` the Young term vanishes but the
+/// halved θ remains, landing a factor √2 below Theorem 1 — so `p = 1`
+/// short-circuits to [`stepsize_theorem1`] and the bound is continuous
+/// from below elsewhere. Monotone increasing in `p`.
+pub fn stepsize_pp(l: f64, l_tilde: f64, alpha: f64, p: f64) -> f64 {
+    assert!(p > 0.0 && p <= 1.0, "participation probability must be in (0,1], got {p}");
+    if p >= 1.0 {
+        return stepsize_theorem1(l, l_tilde, alpha);
+    }
+    let (theta, beta) = theta_beta(alpha);
+    let s = theta * p / (2.0 * (1.0 - p));
+    let theta_p = p * theta / 2.0;
+    let beta_p = p * beta + (1.0 - p) * (1.0 + 1.0 / s);
+    1.0 / (l + l_tilde * (beta_p / theta_p).sqrt())
+}
+
 /// Smoothness constants for the distributed objective.
 #[derive(Clone, Debug)]
 pub struct Smoothness {
@@ -155,6 +183,25 @@ mod tests {
         let g2 = stepsize_theorem2(1.0, 1.0, 0.75, 1e-12);
         let expect = 1.0 / (1.0 + (2.0f64 * 0.5 / 0.5).sqrt());
         assert!((g2 - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pp_stepsize_monotone_and_bounded_by_theorem1() {
+        let (l, lt, alpha) = (1.0, 1.3, 0.25);
+        let full = stepsize_theorem1(l, lt, alpha);
+        assert_eq!(stepsize_pp(l, lt, alpha, 1.0), full);
+        let mut prev = 0.0;
+        for p in [0.05, 0.1, 0.25, 0.5, 0.75, 0.99] {
+            let g = stepsize_pp(l, lt, alpha, p);
+            assert!(g > 0.0, "p={p}: gamma must stay positive");
+            assert!(g < full, "p={p}: PP bound must be below the full bound");
+            assert!(g > prev, "p={p}: monotone in p");
+            prev = g;
+        }
+        // Identity compressor (alpha = 1): absence still costs — the
+        // bound stays finite and positive.
+        let g = stepsize_pp(1.0, 1.0, 1.0, 0.5);
+        assert!(g > 0.0 && g < stepsize_theorem1(1.0, 1.0, 1.0));
     }
 
     #[test]

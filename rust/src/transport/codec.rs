@@ -15,6 +15,11 @@
 //!                    (block-tagged uplink: one frame per block, global
 //!                    indices; the master reassembles blocks 0..n_blocks
 //!                    of one worker into a single message)
+//!   0x06 StateSync : u32 d | d * f64           (master -> rejoining worker:
+//!                    the tracker-reconstructed Markov state g_i. Full f64,
+//!                    unlike the f32 data plane, so a resynced worker is
+//!                    bit-identical to one that was merely absent; metered
+//!                    as 64*d bits under `sched.resync.bits`)
 //!
 //! Values travel as f32 — the same precision the bit accounting charges —
 //! so the simulated `bits/n` axis and the real byte stream agree (the `Up`
@@ -30,6 +35,7 @@ pub const TAG_UP: u8 = 0x02;
 pub const TAG_STOP: u8 = 0x03;
 pub const TAG_MODEL_DELTA: u8 = 0x04;
 pub const TAG_UP_BLOCK: u8 = 0x05;
+pub const TAG_STATE_SYNC: u8 = 0x06;
 
 /// One contiguous patch of a [`Frame::ModelDelta`] broadcast.
 #[derive(Clone, Debug, PartialEq)]
@@ -55,6 +61,9 @@ pub enum Frame {
     /// Block-tagged uplink: block `block` of `n_blocks` for this round,
     /// with globally-indexed entries and this block's exact bit cost.
     UpBlock { block: u32, n_blocks: u32, msg: WireMsg, loss: f64 },
+    /// Crash-recovery state push (master -> rejoining worker): the
+    /// reconstructed worker state, full f64 precision.
+    StateSync(Vec<f64>),
 }
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -206,6 +215,13 @@ fn encode_impl(frame: &Frame) -> Vec<u8> {
             put_u32(&mut out, *n_blocks);
             put_msg_body(&mut out, payload, *loss);
         }
+        Frame::StateSync(g) => {
+            out.push(TAG_STATE_SYNC);
+            put_u32(&mut out, g.len() as u32);
+            for &v in g {
+                put_f64(&mut out, v);
+            }
+        }
     }
     out
 }
@@ -283,6 +299,14 @@ fn decode_impl(bytes: &[u8]) -> Result<Frame> {
             ensure!(block < n_blocks, "UpBlock tag {block} out of range (n={n_blocks})");
             let (msg, loss) = take_msg_body(&mut r, kind)?;
             Frame::UpBlock { block, n_blocks, msg, loss }
+        }
+        TAG_STATE_SYNC => {
+            let d = r.u32()? as usize;
+            let mut g = Vec::with_capacity(d.min(r.remaining() / 8));
+            for _ in 0..d {
+                g.push(r.f64()?);
+            }
+            Frame::StateSync(g)
         }
         t => bail!("unknown frame tag {t:#x}"),
     };
@@ -396,6 +420,30 @@ mod tests {
             BlockPatch { offset: 5, vals: vec![3.0] },
         ]);
         assert!(decode(&encode(&f)).is_err());
+    }
+
+    #[test]
+    fn roundtrip_state_sync_is_f64_exact() {
+        // StateSync must NOT go through the f32 wire precision of the
+        // data plane: resync exactness depends on it.
+        let g = vec![1.0, -2.5e-300, std::f64::consts::PI, 0.0, f64::MIN_POSITIVE];
+        match decode(&encode(&Frame::StateSync(g.clone()))).unwrap() {
+            Frame::StateSync(out) => {
+                assert_eq!(out.len(), g.len());
+                for (a, b) in out.iter().zip(&g) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            _ => panic!("wrong frame"),
+        }
+        // Empty state and truncation behave like the other frames.
+        assert!(matches!(
+            decode(&encode(&Frame::StateSync(Vec::new()))).unwrap(),
+            Frame::StateSync(g) if g.is_empty()
+        ));
+        let mut bytes = encode(&Frame::StateSync(vec![1.0, 2.0]));
+        bytes.truncate(bytes.len() - 3);
+        assert!(decode(&bytes).is_err());
     }
 
     #[test]

@@ -1,0 +1,100 @@
+//! Fault-injecting [`Conn`] wrapper: realizes the scheduler's wire-level
+//! faults — straggler delay and frame duplication — on any underlying
+//! transport (in-process channels or TCP alike).
+//!
+//! The wrapper is armed *per uplink* by the worker loop from the same
+//! deterministic [`crate::sched::Scheduler`] plan the master derives, so
+//! the receiving side always knows exactly how many frames to expect;
+//! nothing here needs acks or timers. Faults are one-shot: a send
+//! consumes the armed fault and the wrapper reverts to transparent.
+
+use super::Conn;
+use crate::telemetry::{self, keys};
+use anyhow::Result;
+use std::time::Duration;
+
+pub struct FaultConn<C: Conn> {
+    inner: C,
+    delay: Duration,
+    dup: bool,
+}
+
+impl<C: Conn> FaultConn<C> {
+    pub fn new(inner: C) -> Self {
+        FaultConn { inner, delay: Duration::ZERO, dup: false }
+    }
+
+    /// Arm the faults for the next send: sleep `delay_ms` first (the
+    /// straggler model — real wall-clock on a real transport), then send
+    /// the frame `1 + dup` times.
+    pub fn arm(&mut self, delay_ms: u64, dup: bool) {
+        self.delay = Duration::from_millis(delay_ms);
+        self.dup = dup;
+    }
+}
+
+impl<C: Conn> Conn for FaultConn<C> {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+            self.delay = Duration::ZERO;
+        }
+        self.inner.send(frame)?;
+        if self.dup {
+            self.dup = false;
+            self.inner.send(frame)?;
+            telemetry::counter(keys::SCHED_DUP_FRAMES).incr(1);
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.inner.recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::local;
+
+    #[test]
+    fn transparent_by_default() {
+        let (m, w) = local::pair();
+        let mut f = FaultConn::new(w);
+        let mut m = m;
+        m.send(b"down").unwrap();
+        assert_eq!(f.recv().unwrap(), b"down");
+        f.send(b"up").unwrap();
+        assert_eq!(m.recv().unwrap(), b"up");
+    }
+
+    #[test]
+    fn dup_sends_the_frame_twice_then_disarms() {
+        let (mut m, w) = local::pair();
+        let mut f = FaultConn::new(w);
+        f.arm(0, true);
+        f.send(b"x").unwrap();
+        assert_eq!(m.recv().unwrap(), b"x");
+        assert_eq!(m.recv().unwrap(), b"x");
+        // One-shot: the next send is single.
+        f.send(b"y").unwrap();
+        assert_eq!(m.recv().unwrap(), b"y");
+        m.send(b"done").unwrap();
+        assert_eq!(f.recv().unwrap(), b"done");
+    }
+
+    #[test]
+    fn delay_is_one_shot_wall_clock() {
+        let (mut m, w) = local::pair();
+        let mut f = FaultConn::new(w);
+        f.arm(30, false);
+        let t0 = std::time::Instant::now();
+        f.send(b"slow").unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        assert_eq!(m.recv().unwrap(), b"slow");
+        let t1 = std::time::Instant::now();
+        f.send(b"fast").unwrap();
+        assert!(t1.elapsed() < Duration::from_millis(25));
+    }
+}

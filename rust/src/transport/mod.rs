@@ -7,9 +7,12 @@
 //!   blocks cleared the f32-quantization floor since the last send).
 //! * [`local`] — in-process mpsc channel transport.
 //! * [`tcp`]   — length-prefixed frames over real TCP sockets (std::net).
+//! * [`fault`] — scheduler-armed fault injection (straggler delay, frame
+//!   duplication) over any of the above.
 
 pub mod codec;
 pub mod downlink;
+pub mod fault;
 pub mod local;
 pub mod tcp;
 
@@ -19,4 +22,14 @@ use anyhow::Result;
 pub trait Conn: Send {
     fn send(&mut self, frame: &[u8]) -> Result<()>;
     fn recv(&mut self) -> Result<Vec<u8>>;
+}
+
+impl<T: Conn + ?Sized> Conn for Box<T> {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        (**self).send(frame)
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        (**self).recv()
+    }
 }

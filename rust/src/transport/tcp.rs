@@ -7,6 +7,15 @@
 //! of a hang, and [`TcpConn::connect_with_retry`] rides out the race
 //! where workers dial before the master's listener is up.
 //!
+//! The timeout is configurable end to end: `--net-timeout-ms` (wired via
+//! [`set_default_io_timeout_ms`]) > `$EF21_NET_TIMEOUT_MS` >
+//! `$EF21_TCP_TIMEOUT_SECS` (legacy) > [`DEFAULT_IO_TIMEOUT`], with `0`
+//! meaning "no timeout, block forever" at every layer. The same knob is
+//! the wall-clock floor for the scheduler's straggler deadline: a
+//! scheduled in-deadline straggle sleeps on the wire, so the peer's read
+//! timeout must exceed the longest scheduled delay (the scheduler-aware
+//! dist runner validates this).
+//!
 //! Telemetry: frames and bytes moved are counted process-wide under
 //! `transport.tx.*` / `transport.rx.*` (see [`crate::telemetry::keys`]).
 
@@ -25,28 +34,81 @@ use std::time::Duration;
 /// block forever) or per-conn via [`TcpConn::set_io_timeout`].
 pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(300);
 
-/// The effective default timeout: `$EF21_TCP_TIMEOUT_SECS` if set
-/// (0 disables), else [`DEFAULT_IO_TIMEOUT`]. An unparseable override is
-/// reported once to stderr and ignored.
+/// Process-level `--net-timeout-ms` override: `u64::MAX` = unset,
+/// `0` = no timeout, anything else = milliseconds.
+static IO_TIMEOUT_MS_OVERRIDE: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(u64::MAX);
+
+/// Install the CLI's `--net-timeout-ms` value as the process default for
+/// every subsequently-created connection (`Some(0)` disables timeouts;
+/// `None` clears the override back to the env/default chain).
+pub fn set_default_io_timeout_ms(ms: Option<u64>) {
+    IO_TIMEOUT_MS_OVERRIDE.store(ms.unwrap_or(u64::MAX), std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Pure resolution of the effective I/O timeout from the three layers —
+/// the unit-testable parse path behind [`io_timeout`]. `cli_ms` is the
+/// `--net-timeout-ms` override, `env_ms`/`env_secs` the raw values of
+/// `$EF21_NET_TIMEOUT_MS` / `$EF21_TCP_TIMEOUT_SECS`. `0` at any layer
+/// means "no timeout"; an unparseable env value falls through to the
+/// next layer.
+pub fn resolve_io_timeout(
+    cli_ms: Option<u64>,
+    env_ms: Option<&str>,
+    env_secs: Option<&str>,
+) -> Option<Duration> {
+    if let Some(ms) = cli_ms {
+        return (ms > 0).then(|| Duration::from_millis(ms));
+    }
+    if let Some(ms) = env_ms.and_then(|v| v.trim().parse::<u64>().ok()) {
+        return (ms > 0).then(|| Duration::from_millis(ms));
+    }
+    if let Some(secs) = env_secs.and_then(|v| v.trim().parse::<u64>().ok()) {
+        return (secs > 0).then(|| Duration::from_secs(secs));
+    }
+    Some(DEFAULT_IO_TIMEOUT)
+}
+
+/// The effective default timeout for new connections: the
+/// `--net-timeout-ms` override if installed, else `$EF21_NET_TIMEOUT_MS`
+/// (milliseconds), else `$EF21_TCP_TIMEOUT_SECS` (legacy, seconds), else
+/// [`DEFAULT_IO_TIMEOUT`]; `0` disables at every layer.
 pub fn io_timeout() -> Option<Duration> {
-    match std::env::var("EF21_TCP_TIMEOUT_SECS") {
-        Ok(v) => match v.trim().parse::<u64>() {
-            Ok(0) => None,
-            Ok(secs) => Some(Duration::from_secs(secs)),
-            Err(_) => {
+    let cli = match IO_TIMEOUT_MS_OVERRIDE.load(std::sync::atomic::Ordering::SeqCst) {
+        u64::MAX => None,
+        ms => Some(ms),
+    };
+    let env_ms = std::env::var("EF21_NET_TIMEOUT_MS").ok();
+    let env_secs = std::env::var("EF21_TCP_TIMEOUT_SECS").ok();
+    // A set-but-unparseable env value falls through to the next layer;
+    // say so once instead of silently handing the user the default.
+    for (var, val) in [("EF21_NET_TIMEOUT_MS", &env_ms), ("EF21_TCP_TIMEOUT_SECS", &env_secs)] {
+        if let Some(v) = val {
+            if v.trim().parse::<u64>().is_err() {
                 static WARN_ONCE: std::sync::Once = std::sync::Once::new();
                 WARN_ONCE.call_once(|| {
                     eprintln!(
-                        "warning: EF21_TCP_TIMEOUT_SECS='{v}' is not a whole number of \
-                         seconds; using the {}s default",
-                        DEFAULT_IO_TIMEOUT.as_secs()
+                        "warning: {var}='{v}' is not a whole number; ignoring it and \
+                         falling back to the next timeout layer"
                     );
                 });
-                Some(DEFAULT_IO_TIMEOUT)
             }
-        },
-        Err(_) => Some(DEFAULT_IO_TIMEOUT),
+        }
     }
+    resolve_io_timeout(cli, env_ms.as_deref(), env_secs.as_deref())
+}
+
+/// Connect-retry schedule derived from the same knob: 5 attempts with a
+/// doubling backoff whose base is 1/32 of the I/O timeout, clamped to
+/// [10ms, 200ms] (50ms when timeouts are disabled) — so shrinking
+/// `--net-timeout-ms` tightens the whole connection path, not just
+/// established-stream reads.
+pub fn connect_retry_schedule() -> (u32, Duration) {
+    let base = match io_timeout() {
+        Some(t) => Duration::from_millis((t.as_millis() as u64 / 32).clamp(10, 200)),
+        None => Duration::from_millis(50),
+    };
+    (5, base)
 }
 
 pub struct TcpConn {
@@ -203,6 +265,46 @@ mod tests {
         );
         assert!(r.is_err());
         assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn resolve_io_timeout_layers_and_parses() {
+        // CLI override wins, 0 disables.
+        assert_eq!(
+            resolve_io_timeout(Some(1500), Some("9"), Some("9")),
+            Some(Duration::from_millis(1500))
+        );
+        assert_eq!(resolve_io_timeout(Some(0), Some("9"), None), None);
+        // Env ms next (0 disables), legacy secs after that.
+        assert_eq!(
+            resolve_io_timeout(None, Some("250"), Some("9")),
+            Some(Duration::from_millis(250))
+        );
+        assert_eq!(resolve_io_timeout(None, Some("0"), Some("9")), None);
+        assert_eq!(resolve_io_timeout(None, None, Some("7")), Some(Duration::from_secs(7)));
+        assert_eq!(resolve_io_timeout(None, None, Some("0")), None);
+        // Unparseable env values fall through to the next layer.
+        assert_eq!(
+            resolve_io_timeout(None, Some("fast"), Some("3")),
+            Some(Duration::from_secs(3))
+        );
+        assert_eq!(resolve_io_timeout(None, Some("?"), Some("?")), Some(DEFAULT_IO_TIMEOUT));
+        assert_eq!(resolve_io_timeout(None, None, None), Some(DEFAULT_IO_TIMEOUT));
+        // Whitespace tolerated.
+        assert_eq!(
+            resolve_io_timeout(None, Some(" 40 "), None),
+            Some(Duration::from_millis(40))
+        );
+    }
+
+    #[test]
+    fn connect_retry_schedule_tracks_the_knob() {
+        // The schedule is derived from io_timeout(); whatever that
+        // resolves to in this process, the invariants hold.
+        let (attempts, backoff) = connect_retry_schedule();
+        assert_eq!(attempts, 5);
+        assert!(backoff >= Duration::from_millis(10));
+        assert!(backoff <= Duration::from_millis(200));
     }
 
     #[test]

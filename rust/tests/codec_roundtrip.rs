@@ -109,6 +109,19 @@ fn roundtrip_property_all_frame_kinds() {
             _ => panic!("ModelDelta roundtrip changed kind"),
         }
 
+        // StateSync: f64-exact on the wire (no f32 quantization — raw
+        // normals must round-trip bit for bit).
+        let g: Vec<f64> = (0..d).map(|_| rng.next_normal()).collect();
+        match decode(&encode(&Frame::StateSync(g.clone()))).unwrap() {
+            Frame::StateSync(g2) => {
+                assert_eq!(g.len(), g2.len());
+                for (a, b) in g.iter().zip(&g2) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            _ => panic!("StateSync roundtrip changed kind"),
+        }
+
         // Stop
         assert!(matches!(decode(&encode(&Frame::Stop)).unwrap(), Frame::Stop));
     });
@@ -129,6 +142,7 @@ fn truncation_never_panics() {
                 offset: 1,
                 vals: vec![1.0, 2.0, 3.0],
             }]),
+            Frame::StateSync((0..d).map(|_| rng.next_normal()).collect()),
             Frame::Stop,
         ];
         for f in &frames {
@@ -180,6 +194,11 @@ fn lying_length_headers_error_cleanly() {
     bytes.extend_from_slice(&1u32.to_le_bytes());
     bytes.extend_from_slice(&0u32.to_le_bytes()); // offset
     bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // len
+    assert!(decode(&bytes).is_err());
+
+    // StateSync claiming u32::MAX f64s with an empty payload.
+    let mut bytes = vec![0x06];
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes());
     assert!(decode(&bytes).is_err());
 }
 

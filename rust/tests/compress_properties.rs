@@ -11,8 +11,10 @@
 
 use ef21::blocks::BlockLayout;
 use ef21::compress::{
-    distortion_ratio, BlockCompressor, Compressor, Identity, RandK, ScaledSign, SparseVec, TopK,
+    distortion_ratio, BlockCompressor, Compressor, Identity, RandK, RandKUnbiased, Scaled,
+    ScaledSign, SparseVec, TopK,
 };
+use ef21::compress::unbiased::UnbiasedCompressor;
 use ef21::util::rng::Rng;
 use ef21::util::testing::{for_all_seeds, random_vec};
 use std::sync::Arc;
@@ -177,6 +179,161 @@ fn select_matches_sort_baseline_on_degenerate_inputs() {
                 "k={k} v={v:?}"
             );
         }
+    }
+}
+
+/// ScaledSign's distortion has a closed form: `||C(v) - v||^2 =
+/// ||v||^2 - ||v||_1^2 / d`, which simultaneously proves Eq. (3) with
+/// `alpha = 1/d` pointwise AND pins the exact achieved ratio (a drifted
+/// scale factor would move it).
+#[test]
+fn sign_distortion_matches_closed_form_exactly() {
+    for_all_seeds(25, |rng| {
+        let d = 1 + rng.next_below(70);
+        let v = random_vec(rng, d, 3.0);
+        let n2: f64 = v.iter().map(|x| x * x).sum();
+        let l1: f64 = v.iter().map(|x| x.abs()).sum();
+        let out = ScaledSign.compress(&v, rng);
+        let dense = out.sparse.to_dense(d);
+        let dist: f64 = dense.iter().zip(&v).map(|(a, b)| (a - b) * (a - b)).sum();
+        let expect = n2 - l1 * l1 / d as f64;
+        assert!(
+            (dist - expect).abs() <= 1e-9 * n2.max(1.0),
+            "d={d}: {dist} vs closed form {expect}"
+        );
+        // Pointwise Eq. (3) with alpha = 1/d follows.
+        let alpha = ScaledSign.alpha(d);
+        assert!(dist <= (1.0 - alpha) * n2 + 1e-9 * n2.max(1.0));
+        // Wire cost is exactly d sign bits + one f32 scale.
+        assert_eq!(out.bits, d as u64 + 32);
+    });
+}
+
+/// Sign edge cases: the zero vector maps to exactly zero (stationarity
+/// safety), and a NaN coordinate poisons the shared `||v||_1` scale — a
+/// documented propagation, not a crash.
+#[test]
+fn sign_zero_and_nan_edges() {
+    let mut rng = Rng::seed(3);
+    let zeros = vec![0.0; 17];
+    let out = ScaledSign.compress(&zeros, &mut rng).sparse.to_dense(17);
+    assert!(out.iter().all(|&x| x == 0.0));
+    // Zero coordinates stay *identically* zero (no signed-zero noise).
+    let v = vec![1.0, 0.0, -2.0, -0.0];
+    let out = ScaledSign.compress(&v, &mut rng).sparse.to_dense(4);
+    assert_eq!(out[1], 0.0);
+    assert_eq!(out[3], 0.0);
+    assert!(out[0] > 0.0 && out[2] < 0.0);
+    // NaN input: the l1 scale is NaN, so every signed output is NaN —
+    // and never silently masked back to a finite value.
+    let v = vec![1.0, f64::NAN, -3.0];
+    let out = ScaledSign.compress(&v, &mut rng).sparse.to_dense(3);
+    assert!(out[0].is_nan() && out[2].is_nan(), "NaN must propagate, got {out:?}");
+}
+
+/// Unbiasedness of Rand-k (Eq. 2's first moment): the empirical mean
+/// over many draws approaches the input coordinate-wise.
+#[test]
+fn unbiased_randk_first_moment() {
+    for_all_seeds(6, |rng| {
+        let d = 4 + rng.next_below(20);
+        let k = 1 + rng.next_below(d);
+        let v = random_vec(rng, d, 1.0);
+        let c = RandKUnbiased::new(k);
+        let reps = 4000;
+        let mut mean = vec![0.0; d];
+        for _ in 0..reps {
+            let out = c.compress(&v, rng).sparse.to_dense(d);
+            for (m, o) in mean.iter_mut().zip(&out) {
+                *m += o / reps as f64;
+            }
+        }
+        for (i, (m, t)) in mean.iter().zip(&v).enumerate() {
+            assert!(
+                (m - t).abs() < 0.25 * (1.0 + t.abs()),
+                "coordinate {i}: mean {m} vs true {t} (d={d}, k={k})"
+            );
+        }
+    });
+}
+
+/// Eq. (2)'s second moment for unbiased Rand-k is exact:
+/// `E||C(v)-v||^2 = (d/k - 1)||v||^2`; checked empirically with slack.
+#[test]
+fn unbiased_randk_variance_bound() {
+    for_all_seeds(6, |rng| {
+        let d = 4 + rng.next_below(24);
+        let k = 1 + rng.next_below(d);
+        let v = random_vec(rng, d, 1.5);
+        let n2: f64 = v.iter().map(|x| x * x).sum();
+        let c = RandKUnbiased::new(k);
+        let omega = c.omega(d);
+        let reps = 3000;
+        let mean: f64 = (0..reps)
+            .map(|_| {
+                let out = c.compress(&v, rng).sparse.to_dense(d);
+                out.iter().zip(&v).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+            })
+            .sum::<f64>()
+            / reps as f64;
+        assert!(
+            (mean / n2 - omega).abs() < 0.3 * (1.0 + omega),
+            "d={d} k={k}: measured omega {} vs {omega}",
+            mean / n2
+        );
+    });
+}
+
+/// Lemma 8: `(1/(1+omega)) C'` of an unbiased `C'` lands in
+/// `B(1/(1+omega))` — the scaled operator satisfies Eq. (3) in
+/// expectation with `alpha = k/d`.
+#[test]
+fn lemma8_scaled_unbiased_is_contractive() {
+    for_all_seeds(8, |rng| {
+        let d = 3 + rng.next_below(30);
+        let k = 1 + rng.next_below(d);
+        let c = Scaled::new(RandKUnbiased::new(k));
+        let alpha = Compressor::alpha(&c, d);
+        assert!((alpha - k.min(d) as f64 / d as f64).abs() < 1e-12);
+        let v = random_vec(rng, d, 2.0);
+        let reps = 500;
+        let mean: f64 =
+            (0..reps).map(|_| distortion_ratio(&c, &v, rng)).sum::<f64>() / reps as f64;
+        assert!(
+            mean <= (1.0 - alpha) * 1.2 + 1e-9,
+            "d={d} k={k}: mean ratio {mean} vs 1-alpha {}",
+            1.0 - alpha
+        );
+    });
+}
+
+/// Unbiased Rand-k edge cases: the zero vector compresses to exactly
+/// zero bits of signal (all-zero output), a NaN coordinate only
+/// propagates when sampled, and k >= d degenerates to the identity
+/// (omega = 0).
+#[test]
+fn unbiased_randk_zero_nan_and_full_k_edges() {
+    let mut rng = Rng::seed(11);
+    let c = RandKUnbiased::new(3);
+    let zeros = vec![0.0; 12];
+    let out = c.compress(&zeros, &mut rng).sparse.to_dense(12);
+    assert!(out.iter().all(|&x| x == 0.0));
+    // k >= d: identity scaling (d/k = 1), omega = 0, output == input.
+    let v = vec![1.0, -2.0, 0.5];
+    let cfull = RandKUnbiased::new(7);
+    assert_eq!(cfull.omega(3), 0.0);
+    assert_eq!(cfull.compress(&v, &mut rng).sparse.to_dense(3), v);
+    // NaN propagates exactly when its coordinate is kept.
+    let v = vec![f64::NAN, 1.0];
+    let c1 = RandKUnbiased::new(1);
+    for _ in 0..40 {
+        let out = c1.compress(&v, &mut rng).sparse.to_dense(2);
+        let kept_nan = out[0].is_nan();
+        let kept_other = out[1] != 0.0;
+        assert!(
+            kept_nan ^ kept_other,
+            "exactly one coordinate must be kept: {out:?}"
+        );
     }
 }
 

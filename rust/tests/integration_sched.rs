@@ -1,0 +1,504 @@
+//! Scheduler acceptance suite (ISSUE 4): partial participation and the
+//! deterministic fault model across every runner.
+//!
+//!   * a noop scheduler (full participation, no faults) forced through
+//!     the scheduled code path is bit-identical to the legacy protocol,
+//!     for every algorithm and any pool width;
+//!   * seeded PP/fault schedules are reproducible run-to-run and
+//!     pool-width-invariant;
+//!   * crash→rejoin resync restores EXACT worker state: a crash window
+//!     is bitwise indistinguishable from the same rounds of plain
+//!     absence (so post-rejoin uplink deltas match an uninterrupted
+//!     worker's exactly), including under randomized compressors;
+//!   * the same fault plan produces the same trajectory on the sim
+//!     runner and over real transports (f32 wire tolerance vs sim;
+//!     bitwise between local and TCP), with `dup` frames verified and
+//!     deadline-cut stragglers never stalling the barrier;
+//!   * EF21-PP at p = 0.5 converges on a heterogeneous least-squares
+//!     problem at the `theory::stepsize_pp` stepsize.
+
+use ef21::algo::{AlgoSpec, WorkerNode};
+use ef21::compress::{Compressor, RandK, TopK};
+use ef21::coordinator::dist::{run_distributed_sched, TransportKind};
+use ef21::coordinator::runner::{run_protocol, RunConfig};
+use ef21::coordinator::run_protocol_par;
+use ef21::config::SchedSpec;
+use ef21::exp::{Objective, Problem};
+use ef21::metrics::History;
+use ef21::oracle::GradOracle;
+use ef21::sched::{FaultPlan, Participation, Scheduler};
+use ef21::theory;
+use std::sync::Arc;
+
+fn quads() -> Vec<Box<dyn GradOracle>> {
+    ef21::oracle::quadratic::divergence_example()
+        .into_iter()
+        .map(|q| Box::new(q) as Box<dyn GradOracle>)
+        .collect()
+}
+
+fn quad(i: usize) -> Box<dyn GradOracle> {
+    Box::new(ef21::oracle::quadratic::divergence_example().remove(i))
+}
+
+fn sched(part: Participation, faults: &str, deadline_ms: Option<u64>, n: usize) -> Arc<Scheduler> {
+    Arc::new(
+        Scheduler::new(part, FaultPlan::parse(faults).unwrap(), deadline_ms, n, 99).unwrap(),
+    )
+}
+
+fn assert_histories_bitwise(a: &History, b: &History, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.round, y.round, "{what}");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: loss at round {}", x.round);
+        assert_eq!(
+            x.grad_norm_sq.to_bits(),
+            y.grad_norm_sq.to_bits(),
+            "{what}: grad at round {}",
+            x.round
+        );
+        assert_eq!(
+            x.bits_per_client.to_bits(),
+            y.bits_per_client.to_bits(),
+            "{what}: bits at round {}",
+            x.round
+        );
+        assert_eq!(x.gt.to_bits(), y.gt.to_bits(), "{what}: gt at round {}", x.round);
+    }
+    assert_eq!(a.final_x.len(), b.final_x.len(), "{what}: final_x dim");
+    for (x, y) in a.final_x.iter().zip(&b.final_x) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: final_x");
+    }
+}
+
+/// `--participation full` with no faults is not allowed to move a single
+/// bit — even when forced through the scheduled code path (round_subset,
+/// plan derivation, absent-message plumbing) — for every algorithm and
+/// pool width.
+#[test]
+fn noop_scheduler_is_bit_identical_for_all_algos_and_widths() {
+    for algo in AlgoSpec::ALL {
+        for threads in [1usize, 3] {
+            let build = || {
+                ef21::algo::build(algo, vec![1.0; 3], quads(), Arc::new(TopK::new(1)), 0.01, 5)
+            };
+            let (m, w) = build();
+            let legacy = run_protocol_par(m, w, &RunConfig::rounds(30), threads);
+            let (m, w) = build();
+            let cfg = RunConfig::rounds(30).with_sched(Arc::new(Scheduler::noop(3)));
+            let scheduled = run_protocol_par(m, w, &cfg, threads);
+            assert_histories_bitwise(
+                &legacy,
+                &scheduled,
+                &format!("{} threads={threads}", algo.name()),
+            );
+        }
+    }
+}
+
+/// Seeded schedules are exactly reproducible run-to-run, and the
+/// parallel pool reproduces the sequential scheduled trajectory at any
+/// width (the subset path keeps worker-order reductions).
+#[test]
+fn seeded_pp_runs_are_reproducible_and_width_invariant() {
+    let run = |threads: usize| {
+        let (m, w) = ef21::algo::build(
+            AlgoSpec::Ef21,
+            vec![1.0; 3],
+            quads(),
+            Arc::new(TopK::new(1)),
+            0.01,
+            5,
+        );
+        let cfg = RunConfig::rounds(60)
+            .with_sched(sched(Participation::Bernoulli(0.5), "", None, 3));
+        run_protocol_par(m, w, &cfg, threads)
+    };
+    let a = run(1);
+    let b = run(1);
+    assert_histories_bitwise(&a, &b, "rerun");
+    let c = run(3);
+    assert_histories_bitwise(&a, &c, "width");
+    // A different scheduler seed yields a different trajectory.
+    let (m, w) = ef21::algo::build(
+        AlgoSpec::Ef21,
+        vec![1.0; 3],
+        quads(),
+        Arc::new(TopK::new(1)),
+        0.01,
+        5,
+    );
+    let other = Arc::new(
+        Scheduler::new(Participation::Bernoulli(0.5), FaultPlan::none(), None, 3, 100).unwrap(),
+    );
+    let d = run_protocol_par(m, w, &RunConfig::rounds(60).with_sched(other), 1);
+    let differs = a
+        .records
+        .iter()
+        .zip(&d.records)
+        .any(|(x, y)| x.loss.to_bits() != y.loss.to_bits());
+    assert!(differs, "scheduler seed must matter");
+}
+
+/// Fixed-m sampling sends exactly m compressed messages per round: the
+/// uplink accounting proves absent workers really go silent.
+#[test]
+fn fixed_m_uplink_bits_are_exact() {
+    let (m, w) =
+        ef21::algo::build(AlgoSpec::Ef21, vec![1.0; 3], quads(), Arc::new(TopK::new(1)), 0.01, 5);
+    let cfg = RunConfig::rounds(10).with_sched(sched(Participation::FixedM(2), "", None, 3));
+    let h = run_protocol_par(m, w, &cfg, 1);
+    // Init: all 3 workers send one 64-bit entry; rounds: exactly 2.
+    for (t, r) in h.records.iter().enumerate() {
+        let expect = (3.0 * 64.0 + (t as f64 + 1.0) * 2.0 * 64.0) / 3.0;
+        assert!(
+            (r.bits_per_client - expect).abs() < 1e-9,
+            "round {t}: {} vs {expect}",
+            r.bits_per_client
+        );
+    }
+}
+
+/// Round-robin cohorts cycle deterministically (no seed sensitivity).
+#[test]
+fn round_robin_is_seed_independent() {
+    let run = |sched_seed: u64| {
+        let (m, w) = ef21::algo::build(
+            AlgoSpec::Ef21,
+            vec![1.0; 3],
+            quads(),
+            Arc::new(TopK::new(1)),
+            0.01,
+            5,
+        );
+        let s = Arc::new(
+            Scheduler::new(
+                Participation::RoundRobin(3),
+                FaultPlan::none(),
+                None,
+                3,
+                sched_seed,
+            )
+            .unwrap(),
+        );
+        run_protocol_par(m, w, &RunConfig::rounds(30).with_sched(s), 1)
+    };
+    assert_histories_bitwise(&run(1), &run(999), "rr seeds");
+}
+
+/// THE resync-exactness property: a crash window with rejoin is bitwise
+/// indistinguishable from the same rounds of plain absence — the
+/// StateSync reconstruction restores the exact f64 worker state, so
+/// every post-rejoin uplink delta matches the uninterrupted worker's.
+/// Covered for the deterministic Top-k AND the randomized Rand-k (whose
+/// RNG stream must not advance while down).
+#[test]
+fn crash_rejoin_is_bitwise_equal_to_plain_absence() {
+    let compressors: Vec<(&str, Arc<dyn Compressor>)> = vec![
+        ("top1", Arc::new(TopK::new(1))),
+        ("rand2", Arc::new(RandK::new(2))),
+    ];
+    for (name, c) in compressors {
+        for algo in [AlgoSpec::Ef21, AlgoSpec::Ef21Plus] {
+            if algo == AlgoSpec::Ef21Plus && name == "rand2" {
+                continue; // EF21+ requires a deterministic compressor
+            }
+            let build = || {
+                ef21::algo::build(algo, vec![1.0; 3], quads(), c.clone(), 0.01, 5)
+            };
+            let (m, w) = build();
+            let crash = RunConfig::rounds(30)
+                .with_sched(sched(Participation::Full, "crash@3,rejoin@6", None, 3));
+            let h_crash = run_protocol(m, w, &crash);
+            let (m, w) = build();
+            let absent = RunConfig::rounds(30).with_sched(sched(
+                Participation::Full,
+                "drop(0@3),drop(0@4),drop(0@5)",
+                None,
+                3,
+            ));
+            let h_absent = run_protocol(m, w, &absent);
+            // Loss/grad/bits and the final model must agree on EVERY
+            // round; the G^t instrumentation legitimately differs inside
+            // the crash window itself (the crashed worker's state reads
+            // zero instead of held) — but must snap back bitwise from
+            // the rejoin round on, which is exactly the resync claim.
+            let what = format!("{} {name}", algo.name());
+            assert_eq!(h_crash.records.len(), h_absent.records.len(), "{what}");
+            for (x, y) in h_crash.records.iter().zip(&h_absent.records) {
+                assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: loss r{}", x.round);
+                assert_eq!(
+                    x.grad_norm_sq.to_bits(),
+                    y.grad_norm_sq.to_bits(),
+                    "{what}: grad r{}",
+                    x.round
+                );
+                assert_eq!(
+                    x.bits_per_client.to_bits(),
+                    y.bits_per_client.to_bits(),
+                    "{what}: bits r{}",
+                    x.round
+                );
+                if !(3..6).contains(&x.round) {
+                    assert_eq!(x.gt.to_bits(), y.gt.to_bits(), "{what}: gt r{}", x.round);
+                }
+            }
+            for (x, y) in h_crash.final_x.iter().zip(&h_absent.final_x) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: final_x");
+            }
+            // The pooled runner routes crash/resync commands to the
+            // owning chunk threads — same trajectory at any width.
+            let (m, w) = build();
+            let crash2 = RunConfig::rounds(30)
+                .with_sched(sched(Participation::Full, "crash@3,rejoin@6", None, 3));
+            let h_crash_par = run_protocol_par(m, w, &crash2, 2);
+            assert_histories_bitwise(&h_crash, &h_crash_par, &format!("{what} pooled"));
+        }
+    }
+}
+
+/// Classic EF cannot model crashes (its error state is not
+/// message-reconstructible); scheduling one for it must fail loudly up
+/// front — even a crash WITHOUT a rejoin, which exercises no resync.
+#[test]
+#[should_panic(expected = "resync")]
+fn crash_plan_on_ef_workers_is_rejected() {
+    let (m, w) =
+        ef21::algo::build(AlgoSpec::Ef, vec![1.0; 3], quads(), Arc::new(TopK::new(1)), 0.01, 5);
+    let cfg =
+        RunConfig::rounds(10).with_sched(sched(Participation::Full, "crash@2", None, 3));
+    let _ = run_protocol(m, w, &cfg);
+}
+
+/// A permanent crash (no rejoin) on a supporting worker is a valid
+/// plan: the worker goes down at the crash round and stays down, and
+/// that equals dropping it from every later round.
+#[test]
+fn permanent_crash_equals_permanent_absence() {
+    let build = || {
+        ef21::algo::build(AlgoSpec::Ef21, vec![1.0; 3], quads(), Arc::new(TopK::new(1)), 0.01, 5)
+    };
+    let (m, w) = build();
+    let crash = RunConfig::rounds(12)
+        .with_sched(sched(Participation::Full, "w1:crash@4", None, 3));
+    let h_crash = run_protocol(m, w, &crash);
+    let (m, w) = build();
+    let drops: String =
+        (4..12).map(|r| format!("drop(1@{r})")).collect::<Vec<_>>().join(",");
+    let absent_cfg =
+        RunConfig::rounds(12).with_sched(sched(Participation::Full, &drops, None, 3));
+    let h_absent = run_protocol(m, w, &absent_cfg);
+    // Same loss/grad/bits trajectory; gt differs after the crash (state
+    // zeroed vs held) exactly like the windowed case.
+    for (x, y) in h_crash.records.iter().zip(&h_absent.records) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "round {}", x.round);
+        assert_eq!(x.bits_per_client.to_bits(), y.bits_per_client.to_bits());
+    }
+    for (x, y) in h_crash.final_x.iter().zip(&h_absent.final_x) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+/// A straggler past the deadline is cut to non-participation — exactly
+/// equivalent to scheduled drops — and an in-deadline straggle is a
+/// wall-clock matter only (the sim trajectory is untouched by it).
+#[test]
+fn deadline_cuts_equal_drops_and_slack_straggles_are_free() {
+    let build = || {
+        ef21::algo::build(AlgoSpec::Ef21, vec![1.0; 3], quads(), Arc::new(TopK::new(1)), 0.01, 5)
+    };
+    let (m, w) = build();
+    let cut = RunConfig::rounds(20).with_sched(sched(
+        Participation::Full,
+        "straggle(1,2..4,200ms)",
+        Some(100),
+        3,
+    ));
+    let h_cut = run_protocol(m, w, &cut);
+    let (m, w) = build();
+    let dropped = RunConfig::rounds(20).with_sched(sched(
+        Participation::Full,
+        "drop(1@2),drop(1@3),drop(1@4)",
+        None,
+        3,
+    ));
+    let h_dropped = run_protocol(m, w, &dropped);
+    assert_histories_bitwise(&h_cut, &h_dropped, "deadline cut vs drops");
+
+    // Within the deadline, the (virtual) delay changes nothing in sim.
+    let (m, w) = build();
+    let slack = RunConfig::rounds(20).with_sched(sched(
+        Participation::Full,
+        "straggle(1,2..4,50ms)",
+        Some(100),
+        3,
+    ));
+    let h_slack = run_protocol(m, w, &slack);
+    let (m, w) = build();
+    let clean = RunConfig::rounds(20).with_sched(sched(Participation::Full, "", Some(100), 3));
+    let h_clean = run_protocol(m, w, &clean);
+    assert_histories_bitwise(&h_slack, &h_clean, "in-deadline straggle");
+}
+
+fn dist_run(kind: TransportKind, faults: &str, deadline: Option<u64>, rounds: usize) -> History {
+    let gamma = 0.01;
+    let c: Arc<dyn Compressor> = Arc::new(TopK::new(1));
+    let master = Box::new(ef21::algo::ef21::Ef21Master::new(vec![1.0; 3], 3, gamma));
+    let s = sched(Participation::Bernoulli(0.7), faults, deadline, 3);
+    let out = run_distributed_sched(
+        master,
+        3,
+        move |i| {
+            let rng = ef21::util::rng::worker_rng(9, i);
+            Box::new(ef21::algo::ef21::Ef21Worker::new(quad(i), c.clone(), rng))
+                as Box<dyn WorkerNode>
+        },
+        rounds,
+        kind,
+        "dist-sched",
+        s,
+    )
+    .unwrap();
+    out.history
+}
+
+/// The same seeded PP + fault plan yields the same trajectory on the sim
+/// runner and over the local transport (to f32 wire rounding; uplink
+/// bit accounting matches exactly).
+#[test]
+fn sim_and_local_transport_agree_under_faults() {
+    let faults = "crash@2,rejoin@5,dup(1@3)";
+    // Sim reference (same construction as dist_run, f64 end to end).
+    let c: Arc<dyn Compressor> = Arc::new(TopK::new(1));
+    let (m, w) =
+        ef21::algo::build(AlgoSpec::Ef21, vec![1.0; 3], quads(), c, 0.01, 9);
+    let cfg = RunConfig::rounds(25)
+        .with_sched(sched(Participation::Bernoulli(0.7), faults, None, 3));
+    let h_sim = run_protocol(m, w, &cfg);
+    let h_local = dist_run(TransportKind::Local, faults, None, 25);
+    assert_eq!(h_sim.records.len(), h_local.records.len());
+    for (a, b) in h_sim.records.iter().zip(&h_local.records) {
+        assert!(
+            (a.loss - b.loss).abs() < 1e-4 * a.loss.abs().max(1.0),
+            "loss mismatch at {}: {} vs {}",
+            a.round,
+            a.loss,
+            b.loss
+        );
+        assert!(
+            (a.bits_per_client - b.bits_per_client).abs() < 1e-9,
+            "bits mismatch at {}: {} vs {}",
+            a.round,
+            a.bits_per_client,
+            b.bits_per_client
+        );
+    }
+}
+
+/// Local channels and real TCP sockets realize the identical scheduled
+/// protocol — bitwise, since both quantize through the same codec.
+#[test]
+fn local_and_tcp_transports_agree_bitwise_under_faults() {
+    let faults = "crash@2,rejoin@5,dup(0@3),straggle(1,3..4,30ms)";
+    let h_local = dist_run(TransportKind::Local, faults, Some(500), 15);
+    let h_tcp = dist_run(TransportKind::Tcp, faults, Some(500), 15);
+    assert_eq!(h_local.records.len(), h_tcp.records.len());
+    for (a, b) in h_local.records.iter().zip(&h_tcp.records) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "round {}", a.round);
+        assert_eq!(a.bits_per_client.to_bits(), b.bits_per_client.to_bits());
+    }
+    for (a, b) in h_local.final_x.iter().zip(&h_tcp.final_x) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+/// Duplicated uplink frames change the wire bytes but not the
+/// trajectory (the master reads and verifies both copies).
+#[test]
+fn dup_frames_cost_bytes_but_not_trajectory() {
+    let run = |faults: &str| {
+        let gamma = 0.01;
+        let c: Arc<dyn Compressor> = Arc::new(TopK::new(1));
+        let master = Box::new(ef21::algo::ef21::Ef21Master::new(vec![1.0; 3], 3, gamma));
+        let s = sched(Participation::Full, faults, None, 3);
+        run_distributed_sched(
+            master,
+            3,
+            move |i| {
+                let rng = ef21::util::rng::worker_rng(9, i);
+                Box::new(ef21::algo::ef21::Ef21Worker::new(quad(i), c.clone(), rng))
+                    as Box<dyn WorkerNode>
+            },
+            10,
+            TransportKind::Local,
+            "dup",
+            s,
+        )
+        .unwrap()
+    };
+    let clean = run("");
+    let duped = run("dup(0@2),dup(2@5)");
+    assert_histories_bitwise(&clean.history, &duped.history, "dup");
+    assert!(
+        duped.uplink_frame_bytes > clean.uplink_frame_bytes,
+        "duplicates must cost wire bytes ({} vs {})",
+        duped.uplink_frame_bytes,
+        clean.uplink_frame_bytes
+    );
+}
+
+/// A deadline-cut straggler must not stall the barrier: the scheduled
+/// 300ms-per-round straggler is excluded, so the whole run finishes far
+/// faster than the delays it would otherwise have imposed.
+#[test]
+fn deadline_keeps_the_barrier_moving() {
+    let t0 = std::time::Instant::now();
+    let h = dist_run(TransportKind::Local, "straggle(1,0..9,300ms)", Some(50), 10);
+    let elapsed = t0.elapsed();
+    assert_eq!(h.records.len(), 10);
+    assert!(
+        elapsed < std::time::Duration::from_millis(1500),
+        "barrier stalled on a cut straggler: {elapsed:?} (10 rounds x 300ms were scheduled)"
+    );
+}
+
+/// EF21-PP at p = 0.5 converges on a pathologically heterogeneous
+/// least-squares problem (shards sorted by target) within the EF21-PP
+/// theory stepsize.
+#[test]
+fn ef21_pp_converges_on_heterogeneous_lstsq_at_theory_stepsize() {
+    let base = ef21::data::synth::generate_custom("pphet", 240, 8, 0.6, 3);
+    let het = ef21::exp::pp::heterogenize(&base);
+    let mut p = Problem::from_dataset(het, Objective::Lstsq, 4, 0.0);
+    // Shards really are heterogeneous: per-shard mean targets differ.
+    let shards = ef21::data::partition::shards(&p.dataset, 4);
+    let means: Vec<f64> = shards
+        .iter()
+        .map(|s| s.y.iter().map(|&v| v as f64).sum::<f64>() / s.n as f64)
+        .collect();
+    assert!(
+        means.windows(2).all(|w| w[0] <= w[1]) && means[3] > means[0],
+        "heterogenize must skew the shards: {means:?}"
+    );
+    let pp = 0.5;
+    let alpha = TopK::new(2).alpha(p.d());
+    let gamma = theory::stepsize_pp(p.smoothness.l, p.smoothness.l_tilde, alpha, pp);
+    assert!(gamma > 0.0);
+    p.sched = SchedSpec {
+        participation: Participation::Bernoulli(pp),
+        ..SchedSpec::default()
+    };
+    let rounds = 20_000;
+    let h = p.run_trial(AlgoSpec::Ef21, "top2", 1.0, Some(gamma), rounds, 500, 7);
+    assert!(!h.diverged(), "EF21-PP diverged within the theory stepsize");
+    let x_init = vec![0.0; p.d()];
+    let (loss0, grad0_sq) = p.eval_at(&x_init);
+    let (loss, grad_sq) = p.eval_at(&h.final_x);
+    assert!(loss.is_finite() && loss < loss0, "no loss progress: {loss} vs {loss0}");
+    assert!(
+        grad_sq < grad0_sq * 1e-3,
+        "EF21-PP failed to converge at the PP stepsize: exact |grad|^2 went \
+         {grad0_sq:.3e} -> {grad_sq:.3e} over {rounds} rounds"
+    );
+}
