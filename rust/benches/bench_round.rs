@@ -18,6 +18,11 @@
 //! and a straggler-deadline scenario over the local transport showing
 //! the barrier no longer stalls on a scheduled 200ms straggler once the
 //! deadline cuts it.
+//!
+//! Machine-readable twin: `ef21 bench` (`src/bench.rs`) runs the same
+//! scenario families and emits `BENCH_round.json` — the perf trajectory
+//! CI archives and diffs (DESIGN.md §8.3). This file stays the
+//! human-readable console instrument.
 
 #[path = "harness.rs"]
 mod harness;

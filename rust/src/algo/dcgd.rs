@@ -36,9 +36,14 @@ impl WorkerNode for DcgdWorker {
     }
 
     fn round(&mut self, x: &[f64]) -> WireMsg {
+        let mut out = WireMsg::empty();
+        self.round_into(x, &mut out);
+        out
+    }
+
+    fn round_into(&mut self, x: &[f64], out: &mut WireMsg) {
         self.last_loss = self.oracle.loss_grad_into(x, &mut self.last_grad);
-        let comp = self.c.compress(&self.last_grad, &mut self.rng);
-        WireMsg::Sparse(comp)
+        self.c.compress_into(&self.last_grad, &mut self.rng, out.reset_sparse());
     }
 
     fn last_loss(&self) -> f64 {
@@ -96,8 +101,17 @@ impl MasterNode for DcgdMaster {
     }
 
     fn begin_round(&mut self) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.begin_round_into(&mut out);
+        out
+    }
+
+    // The one copy of the step (begin_round wraps this, so the two
+    // entry points cannot drift).
+    fn begin_round_into(&mut self, out: &mut Vec<f64>) {
         linalg::axpy(-self.gamma, self.u.as_slice(), &mut self.x);
-        self.x.clone()
+        out.clear();
+        out.extend_from_slice(&self.x);
     }
 
     fn absorb(&mut self, msgs: &[WireMsg]) {

@@ -68,15 +68,21 @@ impl WorkerNode for EfWorker {
     }
 
     fn round(&mut self, x: &[f64]) -> WireMsg {
+        let mut out = WireMsg::empty();
+        self.round_into(x, &mut out);
+        out
+    }
+
+    fn round_into(&mut self, x: &[f64], out: &mut WireMsg) {
         self.last_loss = self.oracle.loss_grad_into(x, &mut self.last_grad);
         // v = e + γ grad, per block (shared kernel; bit-identical to
         // the legacy flat loop — see ParamBlocks::affine_into).
         self.e.affine_into(self.gamma, &self.last_grad, &mut self.v);
-        let comp = self.c.compress(&self.v, &mut self.rng);
+        let comp = out.reset_sparse();
+        self.c.compress_into(&self.v, &mut self.rng, comp);
         // e <- v - w
         self.e.as_mut_slice().copy_from_slice(&self.v);
         comp.sparse.add_scaled_into(-1.0, self.e.as_mut_slice());
-        WireMsg::Sparse(comp)
     }
 
     fn last_loss(&self) -> f64 {
@@ -123,8 +129,17 @@ impl MasterNode for EfMaster {
     }
 
     fn begin_round(&mut self) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.begin_round_into(&mut out);
+        out
+    }
+
+    // The one copy of the step (begin_round wraps this, so the two
+    // entry points cannot drift).
+    fn begin_round_into(&mut self, out: &mut Vec<f64>) {
         linalg::axpy(-1.0, self.u.as_slice(), &mut self.x);
-        self.x.clone()
+        out.clear();
+        out.extend_from_slice(&self.x);
     }
 
     fn absorb(&mut self, msgs: &[WireMsg]) {

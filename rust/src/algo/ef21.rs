@@ -86,13 +86,19 @@ impl WorkerNode for Ef21Worker {
     }
 
     fn round(&mut self, x: &[f64]) -> WireMsg {
+        let mut out = WireMsg::empty();
+        self.round_into(x, &mut out);
+        out
+    }
+
+    fn round_into(&mut self, x: &[f64], out: &mut WireMsg) {
         self.last_loss = self.oracle.loss_grad_into(x, &mut self.last_grad);
         // diff = grad - g, per block (shared kernel; bit-identical to
         // the legacy flat loop — see ParamBlocks::sub_from_into).
         self.g.sub_from_into(&self.last_grad, &mut self.diff);
-        let comp = self.c.compress(&self.diff, &mut self.rng);
+        let comp = out.reset_sparse();
+        self.c.compress_into(&self.diff, &mut self.rng, comp);
         comp.sparse.add_into(self.g.as_mut_slice());
-        WireMsg::Sparse(comp)
     }
 
     fn last_loss(&self) -> f64 {
@@ -168,8 +174,17 @@ impl MasterNode for Ef21Master {
     }
 
     fn begin_round(&mut self) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.begin_round_into(&mut out);
+        out
+    }
+
+    // The one copy of the step (begin_round wraps this, so the two
+    // entry points cannot drift).
+    fn begin_round_into(&mut self, out: &mut Vec<f64>) {
         linalg::axpy(-self.gamma, self.g.as_slice(), &mut self.x);
-        self.x.clone()
+        out.clear();
+        out.extend_from_slice(&self.x);
     }
 
     fn absorb(&mut self, msgs: &[WireMsg]) {

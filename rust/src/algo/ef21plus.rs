@@ -32,6 +32,11 @@ pub struct Ef21PlusWorker {
     /// Pooled scratch for the two per-round dense branch candidates
     /// (previously two fresh allocations per round per worker).
     ws: Workspace,
+    /// Reused compression buffers for the DCGD / Markov branch
+    /// candidates (the winner is swapped into the outgoing message slot,
+    /// whose previous buffers become next round's scratch).
+    cand_b: crate::compress::Compressed,
+    cand_m: crate::compress::Compressed,
 }
 
 impl Ef21PlusWorker {
@@ -62,6 +67,8 @@ impl Ef21PlusWorker {
             last_branch_dcgd: false,
             diff: vec![0.0; d],
             ws: Workspace::new(),
+            cand_b: crate::compress::Compressed::empty(),
+            cand_m: crate::compress::Compressed::empty(),
         }
     }
 
@@ -77,40 +84,51 @@ impl WorkerNode for Ef21PlusWorker {
     }
 
     fn round(&mut self, x: &[f64]) -> WireMsg {
+        let mut out = WireMsg::empty();
+        self.round_into(x, &mut out);
+        out
+    }
+
+    fn round_into(&mut self, x: &[f64], out: &mut WireMsg) {
         let d = self.g.layout().d();
         self.last_loss = self.oracle.loss_grad_into(x, &mut self.last_grad);
 
-        // Branch 1 (DCGD): b = C(grad).
-        let b = self.c.compress(&self.last_grad, &mut self.rng);
+        // Branch 1 (DCGD): b = C(grad). Both candidate compressions land
+        // in worker-owned reused buffers.
+        self.c.compress_into(&self.last_grad, &mut self.rng, &mut self.cand_b);
         // Branch 2 (Markov): m = g + C(grad - g); diff per block
         // (shared kernel, bit-identical to the legacy flat loop).
         self.g.sub_from_into(&self.last_grad, &mut self.diff);
-        let m_delta = self.c.compress(&self.diff, &mut self.rng);
+        self.c.compress_into(&self.diff, &mut self.rng, &mut self.cand_m);
 
         // Distortions at ∇f_i(x^{t+1}).
         // B = ||b - grad||^2; M = ||(g + delta) - grad||^2.
-        // Both candidates come from the pooled workspace (no per-round
-        // allocation; contents are re-initialized on take).
+        // Both dense candidates come from the pooled workspace (no
+        // per-round allocation; contents are re-initialized on take).
         let mut b_dense = self.ws.take_zeroed(d);
-        b.sparse.add_into(&mut b_dense);
+        self.cand_b.sparse.add_into(&mut b_dense);
         let b_dist = linalg::dist_sq(&b_dense, &self.last_grad);
         let mut m_dense = self.ws.take_copy(self.g.as_slice());
-        m_delta.sparse.add_into(&mut m_dense);
+        self.cand_m.sparse.add_into(&mut m_dense);
         let m_dist = linalg::dist_sq(&m_dense, &self.last_grad);
 
-        if m_dist <= b_dist {
+        let winner = if m_dist <= b_dist {
             self.g.swap_flat(&mut m_dense);
             self.last_branch_dcgd = false;
             self.ws.put(m_dense);
             self.ws.put(b_dense);
-            WireMsg::Tagged { dcgd_branch: false, payload: m_delta }
+            &mut self.cand_m
         } else {
             self.g.swap_flat(&mut b_dense);
             self.last_branch_dcgd = true;
             self.ws.put(b_dense);
             self.ws.put(m_dense);
-            WireMsg::Tagged { dcgd_branch: true, payload: b }
-        }
+            &mut self.cand_b
+        };
+        // The winning candidate's buffers move into the message slot;
+        // the slot's previous buffers become next round's candidate
+        // scratch (pure swap, no allocation).
+        std::mem::swap(out.reset_tagged(self.last_branch_dcgd), winner);
     }
 
     fn last_loss(&self) -> f64 {
@@ -190,9 +208,18 @@ impl MasterNode for Ef21PlusMaster {
     }
 
     fn begin_round(&mut self) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.begin_round_into(&mut out);
+        out
+    }
+
+    // The one copy of the step (begin_round wraps this, so the two
+    // entry points cannot drift).
+    fn begin_round_into(&mut self, out: &mut Vec<f64>) {
         let scale = -self.gamma / self.g_i.len() as f64;
         linalg::axpy(scale, &self.g_sum, &mut self.x);
-        self.x.clone()
+        out.clear();
+        out.extend_from_slice(&self.x);
     }
 
     fn absorb(&mut self, msgs: &[WireMsg]) {

@@ -76,6 +76,12 @@ pub enum WireMsg {
 }
 
 impl WireMsg {
+    /// An empty Sparse message — the placeholder seed of every reusable
+    /// message slot (empty `Vec`s do not allocate).
+    pub fn empty() -> WireMsg {
+        WireMsg::Sparse(Compressed::empty())
+    }
+
     pub fn bits(&self) -> u64 {
         match self {
             WireMsg::Sparse(c) => c.bits,
@@ -89,6 +95,39 @@ impl WireMsg {
             WireMsg::Tagged { payload, .. } => payload,
         }
     }
+
+    /// Reshape `self` into a `Sparse` message, keeping whatever payload
+    /// buffers it already owns (a `Tagged` slot's payload migrates), and
+    /// return the inner [`Compressed`] for in-place overwrite — the
+    /// allocation-free [`WorkerNode::round_into`] target.
+    pub fn reset_sparse(&mut self) -> &mut Compressed {
+        if matches!(self, WireMsg::Tagged { .. }) {
+            let prev = std::mem::replace(self, WireMsg::empty());
+            let WireMsg::Tagged { payload, .. } = prev else { unreachable!() };
+            *self = WireMsg::Sparse(payload);
+        }
+        let WireMsg::Sparse(c) = self else { unreachable!() };
+        c
+    }
+
+    /// Like [`WireMsg::reset_sparse`], but shaping a `Tagged` message
+    /// with the given branch bit (EF21+'s wire format).
+    pub fn reset_tagged(&mut self, dcgd_branch: bool) -> &mut Compressed {
+        if matches!(self, WireMsg::Sparse(_)) {
+            let prev = std::mem::replace(self, WireMsg::empty());
+            let WireMsg::Sparse(payload) = prev else { unreachable!() };
+            *self = WireMsg::Tagged { dcgd_branch, payload };
+        }
+        let WireMsg::Tagged { dcgd_branch: tag, payload } = self else { unreachable!() };
+        *tag = dcgd_branch;
+        payload
+    }
+}
+
+/// Grow/shrink a reusable message buffer to exactly `n` slots (new slots
+/// are empty placeholders; existing slots keep their allocations).
+pub fn ensure_msg_slots(msgs: &mut Vec<WireMsg>, n: usize) {
+    msgs.resize_with(n, WireMsg::empty);
 }
 
 /// Worker-side state machine.
@@ -103,6 +142,15 @@ pub trait WorkerNode: Send {
 
     /// One communication round at the broadcast model `x`.
     fn round(&mut self, x: &[f64]) -> WireMsg;
+
+    /// [`WorkerNode::round`] into a caller-owned message slot, reusing
+    /// its buffers — the zero-allocation round path. Must write exactly
+    /// what `round` would return (the in-tree algorithms implement
+    /// `round` as a thin wrapper over this, so the two cannot drift);
+    /// this default exists for exotic workers and simply forwards.
+    fn round_into(&mut self, x: &[f64], out: &mut WireMsg) {
+        *out = self.round(x);
+    }
 
     // -- instrumentation (free: not counted as communication) --
 
@@ -172,6 +220,16 @@ pub trait MasterNode: Send {
 
     /// Take the step producing the model to broadcast this round.
     fn begin_round(&mut self) -> Vec<f64>;
+
+    /// [`MasterNode::begin_round`] into a caller-owned buffer (cleared
+    /// and refilled; its allocation is reused) — the zero-allocation
+    /// broadcast path. Must leave `out` equal to what `begin_round`
+    /// would have returned.
+    fn begin_round_into(&mut self, out: &mut Vec<f64>) {
+        let x = self.begin_round();
+        out.clear();
+        out.extend_from_slice(&x);
+    }
 
     /// Absorb this round's uplink messages.
     fn absorb(&mut self, msgs: &[WireMsg]);

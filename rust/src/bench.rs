@@ -1,0 +1,356 @@
+//! `ef21 bench` — the machine-readable perf instrument behind
+//! `BENCH_round.json`, the repo's performance trajectory (DESIGN.md §8).
+//!
+//! Mirrors the scenario families of `benches/bench_round.rs` (which
+//! remains the human-readable console instrument) but emits structured
+//! JSON so CI can archive every run and diff key metrics against the
+//! committed baseline:
+//!
+//!   * `round.seq.*` / `round.par.*` — full EF21 round-loop throughput on
+//!     synthetic diagonal quadratics at d ∈ {10^4, 10^6} (top-k at 1%
+//!     density), sequential and pooled;
+//!   * `round.seq.d1e6.*.allocpath` — the same loop with a wrapper
+//!     compressor that routes through the legacy owned-`Compressed`
+//!     path, quantifying what the zero-allocation engine buys;
+//!   * `compress.*` — the compressor zoo (top-k / rand-k / sign /
+//!     identity) and the 32-block layer-wise layout at DL scale;
+//!   * `pp.*` — the participation sweep (p ∈ {1.0, 0.5, 0.1}) on the a9a
+//!     logistic problem, wall + uplink bits.
+//!
+//! Schema (`ef21.bench.round/v1`): a top-level object with `schema`,
+//! `isa` (dispatched SIMD path), `threads_auto`, `alloc_counting`,
+//! `quick`, and `cases` — one object per case with `name`, `rounds`,
+//! `wall_ns`, `rounds_per_sec`, `uplink_bits`, `downlink_bits`, `d`,
+//! `workers`, and `allocs_per_round` (`null` unless built with
+//! `--features count-allocs`; `allocs_per_round` is a steady-state
+//! measurement — the delta between a long and a short run divided by the
+//! extra rounds, so setup/teardown allocations cancel).
+
+use crate::algo::AlgoSpec;
+use crate::compress::{self, Compressed, Compressor};
+use crate::config::cli::Args;
+use crate::coordinator::{auto_threads, run_protocol_par, RunConfig};
+use crate::exp::{Objective, Problem};
+use crate::metrics::History;
+use crate::oracle::{GradOracle, QuadraticOracle};
+use crate::util::alloc::measured_allocation_count;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::simd;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One emitted bench case.
+struct Case {
+    name: String,
+    rounds: u64,
+    wall_ns: u64,
+    uplink_bits: u64,
+    downlink_bits: u64,
+    d: usize,
+    workers: usize,
+    allocs_per_round: Option<f64>,
+}
+
+impl Case {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert("wall_ns".into(), Json::Num(self.wall_ns as f64));
+        let rps = if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.rounds as f64 / (self.wall_ns as f64 / 1e9)
+        };
+        m.insert("rounds_per_sec".into(), Json::Num(rps));
+        m.insert("uplink_bits".into(), Json::Num(self.uplink_bits as f64));
+        m.insert("downlink_bits".into(), Json::Num(self.downlink_bits as f64));
+        m.insert("d".into(), Json::Num(self.d as f64));
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert(
+            "allocs_per_round".into(),
+            match self.allocs_per_round {
+                Some(a) => Json::Num(a),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Wrapper forcing the legacy allocating compression path: only
+/// `compress` is implemented, so `compress_into` falls back to the trait
+/// default (`*out = compress(..)`) and every round pays fresh
+/// index/value allocations — the pre-zero-allocation behavior, kept as
+/// the bench comparator.
+struct AllocPath<C: Compressor>(C);
+
+impl<C: Compressor> Compressor for AllocPath<C> {
+    fn name(&self) -> String {
+        format!("{}+allocpath", self.0.name())
+    }
+
+    fn alpha(&self, d: usize) -> f64 {
+        self.0.alpha(d)
+    }
+
+    fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
+        self.0.compress(v, rng)
+    }
+
+    fn is_deterministic(&self) -> bool {
+        self.0.is_deterministic()
+    }
+}
+
+/// n synthetic strongly-convex diagonal quadratics of dimension d with
+/// heterogeneous minimizers (O(d) per gradient, so the round loop — not
+/// the oracle — dominates at large d).
+fn quad_oracles(n: usize, d: usize, seed: u64) -> Vec<Box<dyn GradOracle>> {
+    let mut rng = Rng::seed(seed);
+    (0..n)
+        .map(|_| {
+            let h: Vec<f64> = (0..d).map(|_| 0.5 + rng.next_f64()).collect();
+            let c: Vec<f64> = (0..d).map(|_| rng.next_normal()).collect();
+            Box::new(QuadraticOracle::diagonal(h, c)) as Box<dyn GradOracle>
+        })
+        .collect()
+}
+
+/// One full EF21 protocol run (fresh nodes) on the quadratic problem;
+/// returns wall seconds and the history (bits).
+fn ef21_quad_run(
+    n: usize,
+    d: usize,
+    c: Arc<dyn Compressor>,
+    rounds: usize,
+    threads: usize,
+) -> (f64, History) {
+    let (m, w) = crate::algo::build(AlgoSpec::Ef21, vec![0.0; d], quad_oracles(n, d, 7), c, 0.1, 0);
+    let cfg = RunConfig::rounds(rounds).with_record_every(rounds.max(1));
+    let t0 = Instant::now();
+    let h = run_protocol_par(m, w, &cfg, threads);
+    (t0.elapsed().as_secs_f64(), h)
+}
+
+/// Steady-state allocations per round: re-run the scenario at two round
+/// counts and divide the allocation-count delta by the extra rounds
+/// (setup, warmup, and final-record allocations cancel). `None` without
+/// the `count-allocs` feature.
+fn allocs_per_round(mut run: impl FnMut(usize), short: usize, long: usize) -> Option<f64> {
+    measured_allocation_count()?;
+    run(short); // warm thread-locals so the two measured runs match
+    let a0 = measured_allocation_count()?;
+    run(short);
+    let a1 = measured_allocation_count()?;
+    run(long);
+    let a2 = measured_allocation_count()?;
+    let short_allocs = a1 - a0;
+    let long_allocs = a2 - a1;
+    Some(long_allocs.saturating_sub(short_allocs) as f64 / (long - short) as f64)
+}
+
+/// Round-loop case on the quadratic problem.
+#[allow(clippy::too_many_arguments)]
+fn round_case(
+    name: &str,
+    n: usize,
+    d: usize,
+    make_c: impl Fn() -> Arc<dyn Compressor>,
+    rounds: usize,
+    threads: usize,
+) -> Case {
+    // Warmup run (allocator, page cache), then the timed run.
+    let _ = ef21_quad_run(n, d, make_c(), rounds.min(4), threads);
+    let (secs, h) = ef21_quad_run(n, d, make_c(), rounds, threads);
+    let uplink = (h.records.last().map(|r| r.bits_per_client).unwrap_or(0.0) * n as f64) as u64;
+    // Fixed short/long pair (independent of the timing round count):
+    // only the delta per extra round matters.
+    let apr = allocs_per_round(
+        |r| {
+            let _ = ef21_quad_run(n, d, make_c(), r, threads);
+        },
+        3,
+        9,
+    );
+    Case {
+        name: name.to_string(),
+        rounds: rounds as u64,
+        wall_ns: (secs * 1e9) as u64,
+        uplink_bits: uplink,
+        downlink_bits: h.downlink_bits,
+        d,
+        workers: n,
+        allocs_per_round: apr,
+    }
+}
+
+/// Latency of repeated single compressions (zoo / blocked cases): runs
+/// `compress_into` on a fixed input until ~0.2 s elapse and reports the
+/// per-call mean as `wall_ns` with `rounds` = calls.
+fn compress_case(name: &str, c: &dyn Compressor, d: usize) -> Case {
+    let mut rng = Rng::seed(3);
+    let v: Vec<f64> = (0..d).map(|_| rng.next_normal()).collect();
+    let mut out = Compressed::empty();
+    c.compress_into(&v, &mut rng, &mut out); // warmup
+    let mut calls = 0u64;
+    let mut bits = 0u64;
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < 0.2 {
+        c.compress_into(&v, &mut rng, &mut out);
+        bits = out.bits;
+        calls += 1;
+    }
+    let wall = t0.elapsed().as_nanos() as u64;
+    Case {
+        name: name.to_string(),
+        rounds: calls,
+        wall_ns: wall,
+        uplink_bits: bits,
+        downlink_bits: 0,
+        d,
+        workers: 1,
+        allocs_per_round: None,
+    }
+}
+
+/// EF21-PP participation sweep case on a9a logreg. Problem, oracles,
+/// and nodes are built before the clock starts, so `wall_ns` measures
+/// the round loop with the same semantics as the `round.*` cases.
+fn pp_case(name: &str, participation: Option<f64>, rounds: usize) -> Case {
+    let mut problem = Problem::new("a9a", Objective::LogReg, 20, 0.1, 0);
+    if let Some(frac) = participation {
+        problem.sched = crate::config::SchedSpec {
+            participation: crate::sched::Participation::Bernoulli(frac),
+            ..crate::config::SchedSpec::default()
+        };
+    }
+    let d = problem.d();
+    // Mirror Problem::run_trial's construction (theory stepsize, seed 0)
+    // outside the timed region.
+    let c: Arc<dyn Compressor> = Arc::from(compress::from_spec("top8").expect("spec"));
+    let gamma = problem.theory_gamma(c.alpha(d));
+    let (m, w) = crate::algo::build(AlgoSpec::Ef21, vec![0.0; d], problem.oracles(), c, gamma, 0);
+    let mut cfg = RunConfig::rounds(rounds).with_record_every(rounds);
+    if let Some(sched) = problem.sched.build(20, 0).expect("schedule") {
+        cfg = cfg.with_sched(sched);
+    }
+    cfg.divergence_cap = 1e60;
+    let t0 = Instant::now();
+    let h = run_protocol_par(m, w, &cfg, 1);
+    let wall = t0.elapsed().as_nanos() as u64;
+    let uplink = (h.records.last().map(|r| r.bits_per_client).unwrap_or(0.0) * 20.0) as u64;
+    Case {
+        name: name.to_string(),
+        rounds: rounds as u64,
+        wall_ns: wall,
+        uplink_bits: uplink,
+        downlink_bits: h.downlink_bits,
+        d,
+        workers: 20,
+        allocs_per_round: None,
+    }
+}
+
+/// Entry point for `ef21 bench [--json PATH] [--quick]`.
+pub fn main(args: &Args) -> Result<()> {
+    let quick = args.has("quick");
+    let json_path = args.get_str("json").unwrap_or("BENCH_round.json").to_string();
+    let auto = auto_threads();
+    let mut cases: Vec<Case> = Vec::new();
+
+    // Round loops on synthetic quadratics: top-k at 1% density.
+    let (r4, r6) = if quick { (60, 6) } else { (300, 24) };
+    let topk = |k: usize| move || Arc::new(compress::TopK::new(k)) as Arc<dyn Compressor>;
+    eprintln!("bench: round loops (seq/par, d=1e4 and 1e6)...");
+    cases.push(round_case("round.seq.d1e4.top1pct", 8, 10_000, topk(100), r4, 1));
+    cases.push(round_case("round.seq.d1e6.top1pct", 8, 1_000_000, topk(10_000), r6, 1));
+    // Static case name: the machine's thread count lives in the
+    // top-level `threads_auto` field, so baseline diffs match the case
+    // across machines with different core counts.
+    cases.push(round_case("round.par.d1e6.top1pct.auto", 8, 1_000_000, topk(10_000), r6, auto));
+    cases.push(round_case(
+        "round.seq.d1e6.top1pct.allocpath",
+        8,
+        1_000_000,
+        || Arc::new(AllocPath(compress::TopK::new(10_000))) as Arc<dyn Compressor>,
+        r6,
+        1,
+    ));
+    cases.push(round_case(
+        "round.seq.d1e4.sign",
+        8,
+        10_000,
+        || Arc::new(compress::ScaledSign) as Arc<dyn Compressor>,
+        r4,
+        1,
+    ));
+
+    // Compressor zoo at DL scale (2^18 coordinates, ~5% density).
+    eprintln!("bench: compressor zoo...");
+    let dz = 1 << 18;
+    let kz = dz / 20;
+    cases.push(compress_case("compress.topk.d262144", &compress::TopK::new(kz), dz));
+    cases.push(compress_case("compress.randk.d262144", &compress::RandK::new(kz), dz));
+    cases.push(compress_case("compress.sign.d262144", &compress::ScaledSign, dz));
+    cases.push(compress_case("compress.identity.d262144", &compress::Identity, dz));
+    let layout32 = Arc::new(crate::blocks::BlockLayout::equal(32, dz).expect("layout"));
+    for threads in [1usize, 4] {
+        let c = compress::BlockCompressor::from_spec(&format!("top{kz}"), layout32.clone(), threads)
+            .expect("blocked spec");
+        cases.push(compress_case(
+            &format!("compress.topk.b32.fan{threads}.d262144"),
+            &c,
+            dz,
+        ));
+    }
+
+    // Participation sweep (a9a logreg, 20 workers).
+    eprintln!("bench: participation sweep...");
+    let rpp = if quick { 30 } else { 120 };
+    cases.push(pp_case("pp.full", None, rpp));
+    for p in [1.0, 0.5, 0.1] {
+        cases.push(pp_case(&format!("pp.p{p}"), Some(p), rpp));
+    }
+
+    // Assemble and write the report.
+    let mut top = BTreeMap::new();
+    top.insert("schema".into(), Json::Str("ef21.bench.round/v1".into()));
+    top.insert("isa".into(), Json::Str(simd::isa().name().into()));
+    top.insert("threads_auto".into(), Json::Num(auto as f64));
+    top.insert(
+        "alloc_counting".into(),
+        Json::Bool(measured_allocation_count().is_some()),
+    );
+    top.insert("quick".into(), Json::Bool(quick));
+    top.insert(
+        "cases".into(),
+        Json::Arr(cases.iter().map(Case::to_json).collect()),
+    );
+    let body = Json::Obj(top).to_string();
+    std::fs::write(&json_path, body.as_bytes())
+        .with_context(|| format!("writing {json_path}"))?;
+
+    // Console summary (the JSON is the artifact; this is for humans).
+    println!("{:<38} {:>10} {:>14} {:>14} {:>9}", "case", "rounds", "wall", "rounds/s", "allocs/r");
+    for c in &cases {
+        let rps = if c.wall_ns == 0 { 0.0 } else { c.rounds as f64 / (c.wall_ns as f64 / 1e9) };
+        let apr = match c.allocs_per_round {
+            Some(a) => format!("{a:.1}"),
+            None => "-".to_string(),
+        };
+        println!(
+            "{:<38} {:>10} {:>11.2} ms {:>14.1} {:>10}",
+            c.name,
+            c.rounds,
+            c.wall_ns as f64 / 1e6,
+            rps,
+            apr
+        );
+    }
+    println!("wrote {json_path} (isa={}, threads_auto={auto})", simd::isa().name());
+    Ok(())
+}

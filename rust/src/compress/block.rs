@@ -162,12 +162,27 @@ impl BlockCompressor {
     /// Compress one block (no telemetry), returning the *globally*
     /// indexed sparse output.
     fn compress_block(&self, b: usize, v: &[f64], rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_block_into(b, v, rng, &mut out);
+        out
+    }
+
+    /// [`Self::compress_block`] into a reused buffer.
+    fn compress_block_into(&self, b: usize, v: &[f64], rng: &mut Rng, out: &mut Compressed) {
         let spec = self.layout.spec(b);
-        let mut out = self.inner[b].compress(self.layout.slice(b, v), rng);
+        self.inner[b].compress_into(self.layout.slice(b, v), rng, out);
         for i in out.sparse.idx.iter_mut() {
             *i += spec.offset as u32;
         }
-        out
+    }
+
+    /// Whether [`Compressor::compress`] takes the block-parallel fan-out
+    /// path (deterministic inners only; the threshold is shared with the
+    /// aggregation tile).
+    fn fan_out_active(&self) -> bool {
+        self.threads.min(self.layout.n_blocks()) > 1
+            && self.is_deterministic()
+            && self.layout.d() >= crate::blocks::PAR_MIN_DIM
     }
 
     fn record_block(&self, b: usize, t0: Option<std::time::Instant>, out: &Compressed) {
@@ -200,6 +215,15 @@ impl BlockCompressor {
     }
 }
 
+thread_local! {
+    /// Reused per-block output buffer for the inline
+    /// [`Compressor::compress_into`] path of [`BlockCompressor`].
+    /// Thread-local so the shared `Arc<BlockCompressor>` stays `Sync`;
+    /// the buffer is fully overwritten by every block compression, so
+    /// output never depends on which thread (or prior call) used it.
+    static BLOCK_SCRATCH: std::cell::Cell<Compressed> = std::cell::Cell::new(Compressed::empty());
+}
+
 impl Compressor for BlockCompressor {
     fn name(&self) -> String {
         format!("{}/b{}", self.base, self.layout.n_blocks())
@@ -214,17 +238,14 @@ impl Compressor for BlockCompressor {
     fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
         assert_eq!(v.len(), self.layout.d(), "input does not match block layout");
         let n = self.layout.n_blocks();
-        let fan_out = self.threads.min(n);
-        if fan_out > 1
-            && self.is_deterministic()
-            && self.layout.d() >= crate::blocks::PAR_MIN_DIM
-        {
+        if self.fan_out_active() {
             // Worker × block tiling, compression half: blocks are
             // independent for deterministic inners (rng unused), and
             // results land in per-block slots, so the reassembled output
             // is identical to the inline path at any width. Shares the
             // chunked-scope harness (and threshold) with the
             // aggregation half.
+            let fan_out = self.threads.min(n);
             let mut parts: Vec<Option<Compressed>> = (0..n).map(|_| None).collect();
             let items: Vec<(usize, &mut Option<Compressed>)> =
                 parts.iter_mut().enumerate().collect();
@@ -237,17 +258,39 @@ impl Compressor for BlockCompressor {
             });
             return Self::concat(parts.into_iter().map(|p| p.expect("block compressed")).collect());
         }
+        let mut out = Compressed::empty();
+        self.compress_into(v, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, v: &[f64], rng: &mut Rng, out: &mut Compressed) {
+        assert_eq!(v.len(), self.layout.d(), "input does not match block layout");
+        if self.fan_out_active() {
+            // The threaded tile collects per-block outputs on scoped
+            // threads; buffer reuse would need per-thread pooling for no
+            // gain (this path targets huge d, where compute dominates).
+            *out = self.compress(v, rng);
+            return;
+        }
         // Inline path: block order, sharing the caller's RNG stream (the
         // order randomized inners consume it is part of the trajectory).
-        let parts: Vec<Compressed> = (0..n)
-            .map(|b| {
+        // Per-block output goes through a thread-local scratch and is
+        // appended to `out`, so steady-state calls allocate nothing.
+        out.sparse.idx.clear();
+        out.sparse.val.clear();
+        out.bits = 0;
+        BLOCK_SCRATCH.with(|cell| {
+            let mut part = cell.take();
+            for b in 0..self.layout.n_blocks() {
                 let t0 = crate::telemetry::maybe_now();
-                let out = self.compress_block(b, v, rng);
-                self.record_block(b, t0, &out);
-                out
-            })
-            .collect();
-        Self::concat(parts)
+                self.compress_block_into(b, v, rng, &mut part);
+                self.record_block(b, t0, &part);
+                out.sparse.idx.extend_from_slice(&part.sparse.idx);
+                out.sparse.val.extend_from_slice(&part.sparse.val);
+                out.bits += part.bits;
+            }
+            cell.set(part);
+        });
     }
 
     fn is_deterministic(&self) -> bool {

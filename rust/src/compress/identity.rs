@@ -3,7 +3,7 @@
 //! reference curves in Figures 2 and 7); the bit accounting still charges
 //! the full `d * 32` value bits (no indices — dense wire format).
 
-use super::{Compressed, Compressor, SparseVec};
+use super::{Compressed, Compressor};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -18,11 +18,22 @@ impl Compressor for Identity {
         1.0
     }
 
-    fn compress(&self, v: &[f64], _rng: &mut Rng) -> Compressed {
-        let sparse = SparseVec::from_dense_full(v);
+    fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(v, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, v: &[f64], _rng: &mut Rng, out: &mut Compressed) {
+        // Same entries as `SparseVec::from_dense_full(v)`, into reused
+        // buffers.
+        let sp = &mut out.sparse;
+        sp.idx.clear();
+        sp.idx.extend(0..v.len() as u32);
+        sp.val.clear();
+        sp.val.extend_from_slice(v);
         // Dense wire format: values only, no index stream.
-        let bits = v.len() as u64 * super::sparse::VALUE_BITS;
-        Compressed { sparse, bits }
+        out.bits = v.len() as u64 * super::sparse::VALUE_BITS;
     }
 
     fn is_deterministic(&self) -> bool {

@@ -32,12 +32,21 @@ pub use unbiased::{RandKUnbiased, Scaled};
 use crate::util::rng::Rng;
 
 /// Result of one compression: the vector plus its exact wire cost.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Compressed {
     pub sparse: SparseVec,
     /// Exact wire bits (values + indices + any header), as accounted in the
     /// paper's `bits/n` plots.
     pub bits: u64,
+}
+
+impl Compressed {
+    /// An empty message (no entries, 0 bits). `Vec::new` does not
+    /// allocate, so this is also the zero-cost [`Compressor::compress_into`]
+    /// target seed.
+    pub fn empty() -> Compressed {
+        Compressed { sparse: SparseVec::empty(), bits: 0 }
+    }
 }
 
 /// A (possibly randomized) contractive compressor `C ∈ B(alpha)`, Eq. (3):
@@ -51,6 +60,15 @@ pub trait Compressor: Send + Sync {
 
     /// Compress `v`. Deterministic compressors ignore `rng`.
     fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed;
+
+    /// Compress `v` into a caller-owned message, overwriting `out` while
+    /// reusing its index/value allocations — the zero-allocation round
+    /// path. Output is identical to [`Compressor::compress`] (the two
+    /// share one arithmetic path in every in-tree impl; this default
+    /// exists for exotic implementations and simply forwards).
+    fn compress_into(&self, v: &[f64], rng: &mut Rng, out: &mut Compressed) {
+        *out = self.compress(v, rng);
+    }
 
     /// Whether the operator is deterministic (Top-k yes, Rand-k no). EF21+'s
     /// analysis (§3.5) needs a deterministic `C`.
@@ -66,6 +84,11 @@ impl<T: Compressor + ?Sized> Compressor for Box<T> {
     }
     fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
         (**self).compress(v, rng)
+    }
+    fn compress_into(&self, v: &[f64], rng: &mut Rng, out: &mut Compressed) {
+        // Explicit forward: the default would bounce through the inner
+        // `compress` and re-allocate, defeating the buffer-reuse contract.
+        (**self).compress_into(v, rng, out)
     }
     fn is_deterministic(&self) -> bool {
         (**self).is_deterministic()
@@ -97,6 +120,20 @@ impl Instrumented {
             sparsity: std::sync::OnceLock::new(),
         })
     }
+
+    /// Close one metered apply. `t0` is Some only when telemetry was
+    /// enabled at apply time, so the cached handles are only ever
+    /// initialized live, never as noops.
+    fn record(&self, t0: Option<std::time::Instant>, out: &Compressed, d: usize) {
+        if let Some(t0) = t0 {
+            self.ns
+                .get_or_init(|| crate::telemetry::histogram(&self.ns_key))
+                .record(t0.elapsed().as_nanos() as u64);
+            self.sparsity
+                .get_or_init(|| crate::telemetry::gauge(&self.sparsity_key))
+                .set(out.sparse.nnz() as f64 / d.max(1) as f64);
+        }
+    }
 }
 
 impl Compressor for Instrumented {
@@ -111,17 +148,14 @@ impl Compressor for Instrumented {
     fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
         let t0 = crate::telemetry::maybe_now();
         let out = self.inner.compress(v, rng);
-        // t0 is Some only when telemetry was enabled at apply time, so the
-        // cached handles are only ever initialized live, never as noops.
-        if let Some(t0) = t0 {
-            self.ns
-                .get_or_init(|| crate::telemetry::histogram(&self.ns_key))
-                .record(t0.elapsed().as_nanos() as u64);
-            self.sparsity
-                .get_or_init(|| crate::telemetry::gauge(&self.sparsity_key))
-                .set(out.sparse.nnz() as f64 / v.len().max(1) as f64);
-        }
+        self.record(t0, &out, v.len());
         out
+    }
+
+    fn compress_into(&self, v: &[f64], rng: &mut Rng, out: &mut Compressed) {
+        let t0 = crate::telemetry::maybe_now();
+        self.inner.compress_into(v, rng, out);
+        self.record(t0, out, v.len());
     }
 
     fn is_deterministic(&self) -> bool {

@@ -5,7 +5,7 @@
 //! random k-subset. `alpha = k/d`, same as Top-k, which is exactly the
 //! paper's point: identical worst-case theory, very different practice.
 
-use super::{Compressed, Compressor, SparseVec};
+use super::{Compressed, Compressor};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -30,17 +30,24 @@ impl Compressor for RandK {
     }
 
     fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(v, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, v: &[f64], rng: &mut Rng, out: &mut Compressed) {
         let d = v.len();
         let k = self.k.min(d);
-        let idx = if k == d {
-            (0..d as u32).collect()
+        let sp = &mut out.sparse;
+        if k == d {
+            sp.idx.clear();
+            sp.idx.extend(0..d as u32);
         } else {
-            rng.sample_indices(d, k)
-        };
-        let val: Vec<f64> = idx.iter().map(|&i| v[i as usize]).collect();
-        let sparse = SparseVec::new(idx, val);
-        let bits = sparse.standard_bits();
-        Compressed { sparse, bits }
+            rng.sample_indices_into(d, k, &mut sp.idx);
+        }
+        sp.val.clear();
+        sp.val.extend(sp.idx.iter().map(|&i| v[i as usize]));
+        out.bits = out.sparse.standard_bits();
     }
 
     fn is_deterministic(&self) -> bool {

@@ -6,7 +6,7 @@
 //! f32 scale — by far the cheapest per-round message, which makes it a
 //! useful extreme point in the bits/accuracy trade-off benches.
 
-use super::{Compressed, Compressor, SparseVec};
+use super::{Compressed, Compressor};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -21,26 +21,34 @@ impl Compressor for ScaledSign {
         1.0 / d as f64
     }
 
-    fn compress(&self, v: &[f64], _rng: &mut Rng) -> Compressed {
+    fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(v, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, v: &[f64], _rng: &mut Rng, out: &mut Compressed) {
         let d = v.len();
         let l1: f64 = v.iter().map(|x| x.abs()).sum();
         let scale = l1 / d as f64;
-        let dense: Vec<f64> = v
-            .iter()
-            .map(|&x| {
-                if x > 0.0 {
-                    scale
-                } else if x < 0.0 {
-                    -scale
-                } else {
-                    0.0
-                }
-            })
-            .collect();
-        let sparse = SparseVec::from_dense_full(&dense);
+        // Dense wire image (zeros kept), written straight into the reused
+        // buffers — same entries as `SparseVec::from_dense_full` of the
+        // signed-scale vector.
+        let sp = &mut out.sparse;
+        sp.idx.clear();
+        sp.idx.extend(0..d as u32);
+        sp.val.clear();
+        sp.val.extend(v.iter().map(|&x| {
+            if x > 0.0 {
+                scale
+            } else if x < 0.0 {
+                -scale
+            } else {
+                0.0
+            }
+        }));
         // 1 sign bit per coordinate + one f32 scale.
-        let bits = d as u64 + super::sparse::VALUE_BITS;
-        Compressed { sparse, bits }
+        out.bits = d as u64 + super::sparse::VALUE_BITS;
     }
 
     fn is_deterministic(&self) -> bool {

@@ -7,7 +7,7 @@
 //! Ties are broken deterministically (by index) so Top-k remains a
 //! deterministic operator, as required by EF21+'s analysis (§3.5).
 
-use super::{Compressed, Compressor, SparseVec};
+use super::{Compressed, Compressor};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -22,7 +22,9 @@ impl TopK {
     }
 
     /// Indices of the k largest |v| entries (deterministic tie-break by
-    /// lower index), returned sorted ascending.
+    /// lower index), written sorted ascending into the caller's buffer
+    /// (cleared first; its allocation is reused — the selection itself
+    /// allocates nothing in steady state).
     ///
     /// Perf (§Perf L3, iteration log in EXPERIMENTS.md): expected-O(d)
     /// `select_nth_unstable` instead of a full O(d log d) sort
@@ -30,11 +32,13 @@ impl TopK {
     /// baseline), and the index scratch buffer is thread-local so the
     /// 470k-dim transformer gradient compression does not allocate ~2 MB
     /// per round.
-    pub fn select_indices(&self, v: &[f64]) -> Vec<u32> {
+    pub fn select_indices_into(&self, v: &[f64], out: &mut Vec<u32>) {
         let d = v.len();
         let k = self.k.min(d);
+        out.clear();
         if k == d {
-            return (0..d as u32).collect();
+            out.extend(0..d as u32);
+            return;
         }
         SCRATCH.with(|cell| {
             let mut order = cell.take();
@@ -46,11 +50,18 @@ impl TopK {
                 (std::cmp::Reverse(FloatOrd(a)), *i)
             };
             order.select_nth_unstable_by_key(k - 1, key);
-            let mut top = order[..k].to_vec();
-            top.sort_unstable();
+            out.extend_from_slice(&order[..k]);
+            out.sort_unstable();
             cell.set(order);
-            top
-        })
+        });
+    }
+
+    /// [`Self::select_indices_into`] into a fresh vector (convenience;
+    /// the hot path uses the caller-buffer form).
+    pub fn select_indices(&self, v: &[f64]) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.select_indices_into(v, &mut out);
+        out
     }
 
     /// Baseline selection via full sort — kept for the §Perf ablation
@@ -121,12 +132,18 @@ impl Compressor for TopK {
         (self.k.min(d) as f64 / d as f64).min(1.0)
     }
 
-    fn compress(&self, v: &[f64], _rng: &mut Rng) -> Compressed {
-        let idx = self.select_indices(v);
-        let val: Vec<f64> = idx.iter().map(|&i| v[i as usize]).collect();
-        let sparse = SparseVec::new(idx, val);
-        let bits = sparse.standard_bits();
-        Compressed { sparse, bits }
+    fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(v, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, v: &[f64], _rng: &mut Rng, out: &mut Compressed) {
+        let sp = &mut out.sparse;
+        self.select_indices_into(v, &mut sp.idx);
+        sp.val.clear();
+        sp.val.extend(sp.idx.iter().map(|&i| v[i as usize]));
+        out.bits = out.sparse.standard_bits();
     }
 
     fn is_deterministic(&self) -> bool {
@@ -205,6 +222,26 @@ mod tests {
         let v = vec![f64::NAN, 1.0, 2.0];
         let idx = TopK::new(2).select_indices(&v);
         assert_eq!(idx, vec![1, 2]);
+    }
+
+    #[test]
+    fn compress_into_matches_compress_and_reuses_buffers() {
+        let mut rng = Rng::seed(6);
+        let v = random_vec(&mut rng, 64, 2.0);
+        let c = TopK::new(5);
+        let owned = Compressor::compress(&c, &v, &mut rng);
+        let mut out = Compressed::empty();
+        c.compress_into(&v, &mut rng, &mut out);
+        assert_eq!(owned.sparse, out.sparse);
+        assert_eq!(owned.bits, out.bits);
+        // Second apply reuses the same allocations (k unchanged).
+        let idx_ptr = out.sparse.idx.as_ptr();
+        let val_ptr = out.sparse.val.as_ptr();
+        let w = random_vec(&mut rng, 64, 2.0);
+        c.compress_into(&w, &mut rng, &mut out);
+        assert_eq!(out.sparse.idx.as_ptr(), idx_ptr, "index buffer was reallocated");
+        assert_eq!(out.sparse.val.as_ptr(), val_ptr, "value buffer was reallocated");
+        assert_eq!(out.sparse, Compressor::compress(&c, &w, &mut rng).sparse);
     }
 
     #[test]

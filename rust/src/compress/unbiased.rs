@@ -5,7 +5,7 @@
 //! (a) test Lemma 8 and (b) provide the unbiased comparators used in the
 //! discussion of §2.2.
 
-use super::{Compressed, Compressor, SparseVec};
+use super::{Compressed, Compressor};
 use crate::util::rng::Rng;
 
 /// An unbiased compressor with known variance parameter omega (Eq. 2).
@@ -13,6 +13,12 @@ pub trait UnbiasedCompressor: Send + Sync {
     fn name(&self) -> String;
     fn omega(&self, d: usize) -> f64;
     fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed;
+
+    /// Caller-buffer form of [`UnbiasedCompressor::compress`] (same
+    /// contract as [`super::Compressor::compress_into`]).
+    fn compress_into(&self, v: &[f64], rng: &mut Rng, out: &mut Compressed) {
+        *out = self.compress(v, rng);
+    }
 }
 
 /// Unbiased Rand-k: keep k random coordinates scaled by d/k.
@@ -39,14 +45,25 @@ impl UnbiasedCompressor for RandKUnbiased {
     }
 
     fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
+        let mut out = Compressed::empty();
+        UnbiasedCompressor::compress_into(self, v, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, v: &[f64], rng: &mut Rng, out: &mut Compressed) {
         let d = v.len();
         let k = self.k.min(d);
         let scale = d as f64 / k as f64;
-        let idx = if k == d { (0..d as u32).collect() } else { rng.sample_indices(d, k) };
-        let val: Vec<f64> = idx.iter().map(|&i| scale * v[i as usize]).collect();
-        let sparse = SparseVec::new(idx, val);
-        let bits = sparse.standard_bits();
-        Compressed { sparse, bits }
+        let sp = &mut out.sparse;
+        if k == d {
+            sp.idx.clear();
+            sp.idx.extend(0..d as u32);
+        } else {
+            rng.sample_indices_into(d, k, &mut sp.idx);
+        }
+        sp.val.clear();
+        sp.val.extend(sp.idx.iter().map(|&i| scale * v[i as usize]));
+        out.bits = out.sparse.standard_bits();
     }
 }
 
@@ -72,10 +89,15 @@ impl<U: UnbiasedCompressor> Compressor for Scaled<U> {
     }
 
     fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
-        let mut out = self.inner.compress(v, rng);
+        let mut out = Compressed::empty();
+        Compressor::compress_into(self, v, rng, &mut out);
+        out
+    }
+
+    fn compress_into(&self, v: &[f64], rng: &mut Rng, out: &mut Compressed) {
+        self.inner.compress_into(v, rng, out);
         let scale = 1.0 / (1.0 + self.inner.omega(v.len()));
         out.sparse.scale(scale);
-        out
     }
 
     fn is_deterministic(&self) -> bool {

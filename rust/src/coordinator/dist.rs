@@ -25,7 +25,7 @@ use crate::compress::{Compressed, SparseVec};
 use crate::metrics::{History, RoundRecord};
 use crate::sched::{Scheduler, StateTracker};
 use crate::telemetry::{self, keys};
-use crate::transport::codec::{decode, encode, BlockPatch, Frame};
+use crate::transport::codec::{decode, encode, encode_into, BlockPatch, Frame};
 use crate::transport::downlink::DownlinkMeter;
 use crate::transport::fault::FaultConn;
 use crate::transport::{local, tcp, Conn};
@@ -92,6 +92,9 @@ fn split_msg_by_blocks(c: &Compressed, layout: &BlockLayout, loss: f64) -> Vec<F
 /// round, until Stop. `Model` frames replace the cached model;
 /// `ModelDelta` frames patch it in place. With `up_blocks` set, sparse
 /// standard-encoded uplinks are split into per-block `UpBlock` frames.
+/// Frame bytes on both directions go through per-connection reusable
+/// buffers (`recv_into` / `encode_into`), so sustained rounds stop
+/// churning frame allocations.
 fn worker_loop(
     mut worker: Box<dyn WorkerNode>,
     conn: &mut dyn Conn,
@@ -99,8 +102,11 @@ fn worker_loop(
 ) -> Result<()> {
     let mut first = true;
     let mut cached: Option<Vec<f64>> = None;
+    let mut rx_buf = Vec::new();
+    let mut tx_buf = Vec::new();
     loop {
-        match decode(&conn.recv()?)? {
+        conn.recv_into(&mut rx_buf)?;
+        match decode(&rx_buf)? {
             Frame::Model(x) => cached = Some(x),
             Frame::ModelDelta(patches) => {
                 let x = cached
@@ -139,21 +145,24 @@ fn worker_loop(
             let layout = up_blocks.as_ref().expect("splittable implies layout");
             let WireMsg::Sparse(c) = &msg else { unreachable!() };
             for frame in split_msg_by_blocks(c, layout, loss) {
-                conn.send(&encode(&frame))?;
+                encode_into(&frame, &mut tx_buf);
+                conn.send(&tx_buf)?;
             }
         } else {
-            conn.send(&encode(&Frame::Up { msg, loss }))?;
+            encode_into(&Frame::Up { msg, loss }, &mut tx_buf);
+            conn.send(&tx_buf)?;
         }
     }
 }
 
 /// Reassemble one worker's uplink: either a single `Up` frame or a run
 /// of `UpBlock` frames (block order), concatenated back into one
-/// message with summed bits.
-fn recv_worker_msg(c: &mut dyn Conn) -> Result<(WireMsg, f64, u64)> {
-    let raw = c.recv()?;
+/// message with summed bits. `raw` is the caller's reusable receive
+/// buffer.
+fn recv_worker_msg(c: &mut dyn Conn, raw: &mut Vec<u8>) -> Result<(WireMsg, f64, u64)> {
+    c.recv_into(raw)?;
     let mut bytes = raw.len() as u64;
-    match decode(&raw)? {
+    match decode(raw)? {
         Frame::Up { msg, loss } => Ok((msg, loss, bytes)),
         Frame::UpBlock { block, n_blocks, msg, loss } => {
             ensure!(block == 0, "blocked uplink must start at block 0, got {block}");
@@ -185,9 +194,9 @@ fn recv_worker_msg(c: &mut dyn Conn) -> Result<(WireMsg, f64, u64)> {
             };
             absorb(msg)?;
             for want in 1..n_blocks {
-                let raw = c.recv()?;
+                c.recv_into(raw)?;
                 bytes += raw.len() as u64;
-                match decode(&raw)? {
+                match decode(raw)? {
                     Frame::UpBlock { block, n_blocks: nb, msg, .. } => {
                         ensure!(
                             block == want && nb == n_blocks,
@@ -208,12 +217,16 @@ fn recv_worker_msg(c: &mut dyn Conn) -> Result<(WireMsg, f64, u64)> {
     }
 }
 
-fn gather(conns: &mut [Box<dyn Conn>], d: usize) -> Result<(Vec<WireMsg>, Vec<f64>, u64)> {
+fn gather(
+    conns: &mut [Box<dyn Conn>],
+    d: usize,
+    rx_buf: &mut Vec<u8>,
+) -> Result<(Vec<WireMsg>, Vec<f64>, u64)> {
     let mut msgs = Vec::with_capacity(conns.len());
     let mut losses = Vec::with_capacity(conns.len());
     let mut bytes = 0u64;
     for c in conns.iter_mut() {
-        let (msg, loss, b) = recv_worker_msg(c.as_mut())?;
+        let (msg, loss, b) = recv_worker_msg(c.as_mut(), rx_buf)?;
         // Indices are sorted (decode + reassembly enforce it), so one
         // upper-bound check keeps a malformed peer from panicking the
         // master's absorb with an out-of-range coordinate.
@@ -399,11 +412,13 @@ where
     let mut frame_bytes = 0u64;
     let mut down_bytes = 0u64;
 
-    // One broadcast: plan against the meter, encode dense or delta, and
-    // ship the same bytes to every worker.
+    // One broadcast: plan against the meter, encode dense or delta into
+    // the caller's reusable frame buffer, and ship the same bytes to
+    // every worker.
     let send_model = |master_conns: &mut Vec<Box<dyn Conn>>,
                           downlink: &mut DownlinkMeter,
-                          x: &[f64]|
+                          x: &[f64],
+                          frame_buf: &mut Vec<u8>|
      -> Result<u64> {
         let plan = downlink.plan(x);
         let frame = if plan.full {
@@ -423,21 +438,25 @@ where
                     .collect(),
             )
         };
-        let bytes = encode(&frame);
+        encode_into(&frame, frame_buf);
         for c in master_conns.iter_mut() {
-            c.send(&bytes)?;
+            c.send(frame_buf)?;
         }
         telemetry::counter(keys::DOWNLINK_BITS).incr(plan.bits);
-        let sent = bytes.len() as u64 * n_workers as u64;
+        let sent = frame_buf.len() as u64 * n_workers as u64;
         telemetry::counter(keys::DOWNLINK_FRAME_BYTES).incr(sent);
         Ok(sent)
     };
 
+    // Per-run reusable frame buffers (broadcast assembly + uplink reads).
+    let mut bcast_buf = Vec::new();
+    let mut rx_buf = Vec::new();
+
     // Init phase.
     let x0 = master.x().to_vec();
     let dim = x0.len();
-    down_bytes += send_model(&mut master_conns, &mut downlink, &x0)?;
-    let (msgs, _losses, fb) = gather(&mut master_conns, dim)?;
+    down_bytes += send_model(&mut master_conns, &mut downlink, &x0, &mut bcast_buf)?;
+    let (msgs, _losses, fb) = gather(&mut master_conns, dim, &mut rx_buf)?;
     frame_bytes += fb;
     let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
     bits_cum += init_bits;
@@ -448,8 +467,8 @@ where
     for t in 0..rounds {
         let t_round = telemetry::maybe_now();
         let x = master.begin_round();
-        down_bytes += send_model(&mut master_conns, &mut downlink, &x)?;
-        let (msgs, losses, fb) = gather(&mut master_conns, dim)?;
+        down_bytes += send_model(&mut master_conns, &mut downlink, &x, &mut bcast_buf)?;
+        let (msgs, losses, fb) = gather(&mut master_conns, dim, &mut rx_buf)?;
         frame_bytes += fb;
         let round_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
         bits_cum += round_bits;
@@ -622,7 +641,8 @@ where
     let sent0 = bytes.len() as u64 * n_workers as u64;
     telemetry::counter(keys::DOWNLINK_FRAME_BYTES).incr(sent0);
     down_bytes += sent0;
-    let (msgs, losses, fb) = gather(&mut master_conns, d)?;
+    let mut rx_buf = Vec::new();
+    let (msgs, losses, fb) = gather(&mut master_conns, d, &mut rx_buf)?;
     last_loss.copy_from_slice(&losses);
     frame_bytes += fb;
     let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();

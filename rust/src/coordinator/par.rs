@@ -56,10 +56,10 @@
 //! argument as above, applied per tile.
 
 use super::runner::{self, RunConfig, WorkerPool};
-use crate::algo::{MasterNode, WireMsg, WorkerNode};
+use crate::algo::{ensure_msg_slots, MasterNode, WireMsg, WorkerNode};
 use crate::metrics::History;
 use crate::telemetry::{self, keys};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 
 /// Pool size for `--threads auto`: every available core.
@@ -67,15 +67,25 @@ pub fn auto_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Round-trip buffers a round command carries: the chunk's message
+/// slots and loss scratch, owned alternately by the coordinator and the
+/// chunk thread (ownership ping-pong — the steady-state round exchanges
+/// them without allocating; the channels themselves are bounded
+/// `sync_channel`s whose slots are pre-allocated at wiring time).
+struct RoundBufs {
+    msgs: Vec<WireMsg>,
+    losses: Vec<f64>,
+}
+
 /// One command from the coordinator to a pool thread.
 enum Cmd {
     /// Run `WorkerNode::init` on every worker of the chunk.
-    Init(Arc<Vec<f64>>),
+    Init(Arc<Vec<f64>>, RoundBufs),
     /// Run one round at the broadcast model.
-    Round(Arc<Vec<f64>>),
+    Round(Arc<Vec<f64>>, RoundBufs),
     /// Run one round on the chunk's slice of the global participation
     /// mask; absent workers are untouched and reply with `absent_msg`.
-    RoundSubset(Arc<Vec<f64>>, Arc<Vec<bool>>),
+    RoundSubset(Arc<Vec<f64>>, Arc<Vec<bool>>, RoundBufs),
     /// Snapshot per-worker instrumentation (recording rounds only).
     Observe,
     /// Scheduler fault hooks, addressed by chunk-local worker index.
@@ -95,12 +105,20 @@ struct Obs {
 /// order.
 enum Reply {
     /// Messages plus cached losses (init replies carry losses too; the
-    /// coordinator ignores them there).
-    Msgs { msgs: Vec<WireMsg>, losses: Vec<f64> },
+    /// coordinator ignores them there). The buffers are the ones the
+    /// command carried, refilled — the coordinator hands them back on
+    /// the next round.
+    Msgs(RoundBufs),
     Observed(Vec<Obs>),
     /// Crash/resync acknowledged (keeps the hooks synchronous, so a
     /// resync is visible before the round command that follows it).
     Ack,
+}
+
+/// Refresh a chunk's loss scratch from its workers (capacity reused).
+fn fill_losses(workers: &[Box<dyn WorkerNode>], losses: &mut Vec<f64>) {
+    losses.clear();
+    losses.extend(workers.iter().map(|w| w.last_loss()));
 }
 
 /// Chunk event loop: owns its workers for the lifetime of the run.
@@ -110,34 +128,43 @@ fn pool_loop(
     mut workers: Vec<Box<dyn WorkerNode>>,
     start: usize,
     rx: Receiver<Cmd>,
-    tx: Sender<Reply>,
+    tx: SyncSender<Reply>,
 ) {
     while let Ok(cmd) = rx.recv() {
         let reply = match cmd {
-            Cmd::Init(x0) => {
-                let msgs = workers.iter_mut().map(|w| w.init(&x0[..])).collect();
-                let losses = workers.iter().map(|w| w.last_loss()).collect();
-                Reply::Msgs { msgs, losses }
+            Cmd::Init(x0, mut bufs) => {
+                ensure_msg_slots(&mut bufs.msgs, workers.len());
+                for (w, m) in workers.iter_mut().zip(bufs.msgs.iter_mut()) {
+                    *m = w.init(&x0[..]);
+                }
+                fill_losses(&workers, &mut bufs.losses);
+                Reply::Msgs(bufs)
             }
-            Cmd::Round(x) => {
+            Cmd::Round(x, mut bufs) => {
                 // Per-thread round latency; ROUND_NS stays coordinator-side.
                 let t0 = telemetry::maybe_now();
-                let msgs = workers.iter_mut().map(|w| w.round(&x[..])).collect();
-                let losses = workers.iter().map(|w| w.last_loss()).collect();
+                ensure_msg_slots(&mut bufs.msgs, workers.len());
+                for (w, m) in workers.iter_mut().zip(bufs.msgs.iter_mut()) {
+                    w.round_into(&x[..], m);
+                }
+                fill_losses(&workers, &mut bufs.losses);
                 telemetry::record_elapsed_ns(keys::POOL_CHUNK_NS, t0);
-                Reply::Msgs { msgs, losses }
+                Reply::Msgs(bufs)
             }
-            Cmd::RoundSubset(x, active) => {
+            Cmd::RoundSubset(x, active, mut bufs) => {
                 let t0 = telemetry::maybe_now();
                 let mask = &active[start..start + workers.len()];
-                let msgs = workers
-                    .iter_mut()
-                    .zip(mask)
-                    .map(|(w, &a)| if a { w.round(&x[..]) } else { w.absent_msg() })
-                    .collect();
-                let losses = workers.iter().map(|w| w.last_loss()).collect();
+                ensure_msg_slots(&mut bufs.msgs, workers.len());
+                for ((w, &a), m) in workers.iter_mut().zip(mask).zip(bufs.msgs.iter_mut()) {
+                    if a {
+                        w.round_into(&x[..], m);
+                    } else {
+                        *m = w.absent_msg();
+                    }
+                }
+                fill_losses(&workers, &mut bufs.losses);
                 telemetry::record_elapsed_ns(keys::POOL_CHUNK_NS, t0);
-                Reply::Msgs { msgs, losses }
+                Reply::Msgs(bufs)
             }
             Cmd::Observe => Reply::Observed(
                 workers
@@ -171,26 +198,50 @@ fn pool_loop(
 /// the surrounding scope joins them.
 struct ParPool {
     n: usize,
-    chans: Vec<(Sender<Cmd>, Receiver<Reply>)>,
+    chans: Vec<(SyncSender<Cmd>, Receiver<Reply>)>,
     /// First global worker index of each chunk (for routing per-worker
     /// fault hooks to the owning thread).
     starts: Vec<usize>,
+    /// Per-chunk round-trip buffers, parked here between rounds (`None`
+    /// while in flight on the chunk thread).
+    bufs: Vec<Option<RoundBufs>>,
     /// Whether every worker supports crash→resync (queried before the
     /// boxes moved onto the pool threads).
     resync_ok: bool,
 }
 
 impl ParPool {
-    /// Broadcast a command builder to all chunks, then gather replies in
-    /// chunk (== worker) order.
-    fn exchange(&mut self, cmd: impl Fn() -> Cmd) -> Vec<Reply> {
-        for (tx, _) in &self.chans {
-            tx.send(cmd()).expect("pool thread terminated early");
+    /// Run one message-producing phase: split the flat `msgs` buffer into
+    /// per-chunk segments (moved, not copied — last chunk first so no
+    /// tail shifting occurs), ship one command per chunk, then collect
+    /// replies in chunk (== worker) order, reassembling `msgs` and
+    /// summing losses left-to-right. Steady state allocates nothing: the
+    /// segment moves are `drain`/`append` ownership transfers and the
+    /// channel slots are pre-allocated.
+    fn exchange_round(&mut self, msgs: &mut Vec<WireMsg>, make: impl Fn(RoundBufs) -> Cmd) -> f64 {
+        ensure_msg_slots(msgs, self.n);
+        for i in (0..self.chans.len()).rev() {
+            let mut bufs = self.bufs[i].take().expect("round buffers in flight");
+            bufs.msgs.clear();
+            bufs.msgs.extend(msgs.drain(self.starts[i]..));
+            self.chans[i].0.send(make(bufs)).expect("pool thread terminated early");
         }
-        self.chans
-            .iter()
-            .map(|(_, rx)| rx.recv().expect("pool thread terminated early"))
-            .collect()
+        let mut loss_sum = 0.0;
+        for i in 0..self.chans.len() {
+            match self.chans[i].1.recv().expect("pool thread terminated early") {
+                Reply::Msgs(mut bufs) => {
+                    msgs.append(&mut bufs.msgs);
+                    for l in &bufs.losses {
+                        loss_sum += *l;
+                    }
+                    self.bufs[i] = Some(bufs);
+                }
+                Reply::Observed(_) | Reply::Ack => {
+                    unreachable!("mismatched reply to a round command")
+                }
+            }
+        }
+        loss_sum
     }
 
     /// Route a per-worker fault hook to the chunk thread owning global
@@ -208,27 +259,6 @@ impl ParPool {
             _ => unreachable!("non-ack reply to a fault hook"),
         }
     }
-
-    /// Concatenate message replies preserving worker order; losses are
-    /// summed left-to-right across the same order.
-    fn gather_msgs(&mut self, cmd: impl Fn() -> Cmd) -> (Vec<WireMsg>, f64) {
-        let mut all_msgs = Vec::with_capacity(self.n);
-        let mut loss_sum = 0.0;
-        for reply in self.exchange(cmd) {
-            match reply {
-                Reply::Msgs { msgs, losses } => {
-                    all_msgs.extend(msgs);
-                    for l in losses {
-                        loss_sum += l;
-                    }
-                }
-                Reply::Observed(_) | Reply::Ack => {
-                    unreachable!("mismatched reply to a round command")
-                }
-            }
-        }
-        (all_msgs, loss_sum)
-    }
 }
 
 impl WorkerPool for ParPool {
@@ -236,18 +266,18 @@ impl WorkerPool for ParPool {
         self.n
     }
 
-    fn init(&mut self, x0: &Arc<Vec<f64>>) -> Vec<WireMsg> {
-        self.gather_msgs(|| Cmd::Init(x0.clone())).0
+    fn init(&mut self, x0: &Arc<Vec<f64>>, msgs: &mut Vec<WireMsg>) {
+        self.exchange_round(msgs, |bufs| Cmd::Init(x0.clone(), bufs));
     }
 
-    fn round(&mut self, x: &Arc<Vec<f64>>) -> (Vec<WireMsg>, f64) {
-        self.gather_msgs(|| Cmd::Round(x.clone()))
+    fn round(&mut self, x: &Arc<Vec<f64>>, msgs: &mut Vec<WireMsg>) -> f64 {
+        self.exchange_round(msgs, |bufs| Cmd::Round(x.clone(), bufs))
     }
 
-    fn round_subset(&mut self, x: &Arc<Vec<f64>>, active: &[bool]) -> (Vec<WireMsg>, f64) {
+    fn round_subset(&mut self, x: &Arc<Vec<f64>>, active: &[bool], msgs: &mut Vec<WireMsg>) -> f64 {
         debug_assert_eq!(active.len(), self.n);
         let mask = Arc::new(active.to_vec());
-        self.gather_msgs(|| Cmd::RoundSubset(x.clone(), mask.clone()))
+        self.exchange_round(msgs, |bufs| Cmd::RoundSubset(x.clone(), mask.clone(), bufs))
     }
 
     fn supports_resync(&mut self) -> bool {
@@ -265,10 +295,13 @@ impl WorkerPool for ParPool {
 
     fn observe(&mut self) -> (f64, f64, f64, f64) {
         let mut obs = Vec::with_capacity(self.n);
-        for reply in self.exchange(|| Cmd::Observe) {
-            match reply {
+        for (tx, _) in &self.chans {
+            tx.send(Cmd::Observe).expect("pool thread terminated early");
+        }
+        for (_, rx) in &self.chans {
+            match rx.recv().expect("pool thread terminated early") {
                 Reply::Observed(chunk) => obs.extend(chunk),
-                Reply::Msgs { .. } | Reply::Ack => {
+                Reply::Msgs(_) | Reply::Ack => {
                     unreachable!("mismatched reply to an observe command")
                 }
             }
@@ -308,6 +341,7 @@ pub fn run_protocol_par(
         let mut rest = workers;
         let mut chans = Vec::with_capacity(threads);
         let mut starts = Vec::with_capacity(threads);
+        let mut bufs = Vec::with_capacity(threads);
         let base = n / threads;
         let rem = n % threads;
         let mut start = 0usize;
@@ -316,15 +350,19 @@ pub fn run_protocol_par(
             // extra worker, preserving global worker order across chunks.
             let take = base + usize::from(i < rem);
             let chunk: Vec<Box<dyn WorkerNode>> = rest.drain(..take).collect();
-            let (cmd_tx, cmd_rx) = channel();
-            let (rep_tx, rep_rx) = channel();
+            // Bounded channels: at most one command and one reply are
+            // ever in flight per chunk, and the single slot is allocated
+            // here — steady-state sends are slot writes, not allocations.
+            let (cmd_tx, cmd_rx) = sync_channel(1);
+            let (rep_tx, rep_rx) = sync_channel(1);
             scope.spawn(move || pool_loop(chunk, start, cmd_rx, rep_tx));
             chans.push((cmd_tx, rep_rx));
             starts.push(start);
+            bufs.push(Some(RoundBufs { msgs: Vec::new(), losses: Vec::new() }));
             start += take;
         }
         debug_assert!(rest.is_empty());
-        runner::drive(master, ParPool { n, chans, starts, resync_ok }, cfg)
+        runner::drive(master, ParPool { n, chans, starts, bufs, resync_ok }, cfg)
     })
 }
 

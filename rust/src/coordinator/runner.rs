@@ -9,7 +9,7 @@
 //! stopping logic, so the two runners can only differ in *where* worker
 //! state machines execute — never in what the coordinator computes.
 
-use crate::algo::{MasterNode, WireMsg, WorkerNode};
+use crate::algo::{ensure_msg_slots, MasterNode, WireMsg, WorkerNode};
 use crate::blocks::BlockLayout;
 use crate::metrics::{History, RoundRecord};
 use crate::sched::{Scheduler, StateTracker};
@@ -90,16 +90,22 @@ impl RunConfig {
 /// floating-point reduction the protocol performs is a fixed-order sum
 /// regardless of the pool's internal scheduling — the determinism
 /// argument behind the parallel runner (DESIGN.md §4).
+///
+/// Round methods fill a caller-owned message buffer (resized to one slot
+/// per worker; slot allocations are reused round over round via
+/// [`WorkerNode::round_into`]) instead of returning fresh vectors — the
+/// steady-state round loop allocates nothing (DESIGN.md §8).
 pub(crate) trait WorkerPool {
     fn n_workers(&self) -> usize;
 
-    /// Run `init(x0)` on every worker; messages in worker order.
-    fn init(&mut self, x0: &Arc<Vec<f64>>) -> Vec<WireMsg>;
+    /// Run `init(x0)` on every worker; messages in worker order, written
+    /// into `msgs`.
+    fn init(&mut self, x0: &Arc<Vec<f64>>, msgs: &mut Vec<WireMsg>);
 
-    /// Run one round at `x` on every worker; returns the messages in
-    /// worker order plus the left-to-right sum of the workers' cached
+    /// Run one round at `x` on every worker; fills `msgs` in worker
+    /// order and returns the left-to-right sum of the workers' cached
     /// losses (the divergence guard's input).
-    fn round(&mut self, x: &Arc<Vec<f64>>) -> (Vec<WireMsg>, f64);
+    fn round(&mut self, x: &Arc<Vec<f64>>, msgs: &mut Vec<WireMsg>) -> f64;
 
     /// Reduced post-round observation `(loss, ||grad||^2, G^t,
     /// dcgd_frac)`; implementations MUST reduce via [`reduce_obs`] so
@@ -110,11 +116,11 @@ pub(crate) trait WorkerPool {
 
     /// Run one round on the workers marked `active` only; absent workers
     /// are untouched (no oracle eval, no state update, no RNG advance)
-    /// and contribute their [`WorkerNode::absent_msg`]. Messages come
-    /// back in worker order; the loss sum still spans ALL workers'
+    /// and contribute their [`WorkerNode::absent_msg`]. Messages land in
+    /// `msgs` in worker order; the loss sum still spans ALL workers'
     /// cached losses left-to-right, exactly like [`WorkerPool::round`]
     /// (an all-true mask is bit-identical to `round`).
-    fn round_subset(&mut self, x: &Arc<Vec<f64>>, active: &[bool]) -> (Vec<WireMsg>, f64);
+    fn round_subset(&mut self, x: &Arc<Vec<f64>>, active: &[bool], msgs: &mut Vec<WireMsg>) -> f64;
 
     /// Do all workers support crash→resync ([`WorkerNode::supports_resync`])?
     fn supports_resync(&mut self) -> bool;
@@ -173,14 +179,19 @@ impl WorkerPool for SeqPool {
         self.workers.len()
     }
 
-    fn init(&mut self, x0: &Arc<Vec<f64>>) -> Vec<WireMsg> {
-        self.workers.iter_mut().map(|w| w.init(&x0[..])).collect()
+    fn init(&mut self, x0: &Arc<Vec<f64>>, msgs: &mut Vec<WireMsg>) {
+        ensure_msg_slots(msgs, self.workers.len());
+        for (w, m) in self.workers.iter_mut().zip(msgs.iter_mut()) {
+            *m = w.init(&x0[..]);
+        }
     }
 
-    fn round(&mut self, x: &Arc<Vec<f64>>) -> (Vec<WireMsg>, f64) {
-        let msgs = self.workers.iter_mut().map(|w| w.round(&x[..])).collect();
-        let loss_sum = self.workers.iter().map(|w| w.last_loss()).sum();
-        (msgs, loss_sum)
+    fn round(&mut self, x: &Arc<Vec<f64>>, msgs: &mut Vec<WireMsg>) -> f64 {
+        ensure_msg_slots(msgs, self.workers.len());
+        for (w, m) in self.workers.iter_mut().zip(msgs.iter_mut()) {
+            w.round_into(&x[..], m);
+        }
+        self.workers.iter().map(|w| w.last_loss()).sum()
     }
 
     fn observe(&mut self) -> (f64, f64, f64, f64) {
@@ -192,16 +203,17 @@ impl WorkerPool for SeqPool {
         )
     }
 
-    fn round_subset(&mut self, x: &Arc<Vec<f64>>, active: &[bool]) -> (Vec<WireMsg>, f64) {
+    fn round_subset(&mut self, x: &Arc<Vec<f64>>, active: &[bool], msgs: &mut Vec<WireMsg>) -> f64 {
         debug_assert_eq!(active.len(), self.workers.len());
-        let msgs = self
-            .workers
-            .iter_mut()
-            .zip(active)
-            .map(|(w, &a)| if a { w.round(&x[..]) } else { w.absent_msg() })
-            .collect();
-        let loss_sum = self.workers.iter().map(|w| w.last_loss()).sum();
-        (msgs, loss_sum)
+        ensure_msg_slots(msgs, self.workers.len());
+        for ((w, &a), m) in self.workers.iter_mut().zip(active).zip(msgs.iter_mut()) {
+            if a {
+                w.round_into(&x[..], m);
+            } else {
+                *m = w.absent_msg();
+            }
+        }
+        self.workers.iter().map(|w| w.last_loss()).sum()
     }
 
     fn supports_resync(&mut self) -> bool {
@@ -288,10 +300,15 @@ pub(crate) fn drive<P: WorkerPool>(
     // Init phase: g_i^0 / w_i^0 at x^0 (counted as communication).
     // Initialization always runs on every worker — participation
     // sampling starts at round 0.
-    let x0 = Arc::new(master.x().to_vec());
-    let init_down = downlink.plan(&x0).bits;
+    // `x` and `msgs` are the loop's only buffers: the broadcast Arc is
+    // rewritten in place once every clone is back (steady state — the
+    // pools drop their clones before replying), and the message slots
+    // are refilled through `round_into`, so rounds allocate nothing.
+    let mut x = Arc::new(master.x().to_vec());
+    let mut msgs: Vec<WireMsg> = Vec::new();
+    let init_down = downlink.plan(&x).bits;
     telemetry::counter(keys::DOWNLINK_BITS).incr(init_down);
-    let msgs = pool.init(&x0);
+    pool.init(&x, &mut msgs);
     let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
     bits_cum += init_bits;
     telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
@@ -302,14 +319,19 @@ pub(crate) fn drive<P: WorkerPool>(
 
     for t in 0..cfg.rounds {
         let t_round = telemetry::maybe_now();
-        let x = Arc::new(master.begin_round());
+        match Arc::get_mut(&mut x) {
+            Some(buf) => master.begin_round_into(buf),
+            // A pool kept a clone alive (never the in-tree pools in
+            // steady state): fall back to a fresh allocation.
+            None => x = Arc::new(master.begin_round()),
+        }
         let down = downlink.plan(&x).bits;
         telemetry::counter(keys::DOWNLINK_BITS).incr(down);
-        let (msgs, loss_sum, round_bits) = match sched {
+        let (loss_sum, round_bits) = match sched {
             None => {
-                let (msgs, loss_sum) = pool.round(&x);
+                let loss_sum = pool.round(&x, &mut msgs);
                 let bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
-                (msgs, loss_sum, bits)
+                (loss_sum, bits)
             }
             Some(s) => {
                 let plan = s.round_plan(t);
@@ -324,7 +346,7 @@ pub(crate) fn drive<P: WorkerPool>(
                     pool.resync(w, tr.mirror(w));
                     crate::sched::record_resync_bits(d);
                 }
-                let (msgs, loss_sum) = pool.round_subset(&x, &plan.active);
+                let loss_sum = pool.round_subset(&x, &plan.active, &mut msgs);
                 // Only participants' messages travel; the synthesized
                 // absent no-ops cost nothing (their tag bits included).
                 let bits = msgs
@@ -337,7 +359,7 @@ pub(crate) fn drive<P: WorkerPool>(
                 if let Some(tr) = tracker.as_mut() {
                     tr.absorb_round(&msgs);
                 }
-                (msgs, loss_sum, bits)
+                (loss_sum, bits)
             }
         };
         bits_cum += round_bits;

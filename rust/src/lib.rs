@@ -56,6 +56,7 @@
 //! ```
 
 pub mod algo;
+pub mod bench;
 pub mod blocks;
 pub mod compress;
 pub mod config;
@@ -71,6 +72,13 @@ pub mod telemetry;
 pub mod theory;
 pub mod transport;
 pub mod util;
+
+/// Counting global allocator behind the zero-allocation round gate
+/// (`tests/integration_alloc.rs`, `ef21 bench`); ordinary builds use the
+/// system allocator untouched.
+#[cfg(feature = "count-allocs")]
+#[global_allocator]
+static COUNTING_ALLOC: crate::util::alloc::CountingAlloc = crate::util::alloc::CountingAlloc;
 
 /// Convenience re-exports for the common simulation workflow.
 pub mod prelude {

@@ -7,6 +7,7 @@
 //!            [--objective logreg|lstsq] [--csv out.csv] [--transport local|tcp]
 //!            [--threads n|auto] [--blocks flat|auto|<n>|name:len,...]
 //! ef21 exp   <stepsize|finetune|kdep|gdtune|lstsq|rates|dl> [flags...]
+//! ef21 bench [--json FILE] [--quick]
 //! ef21 data  info
 //! ef21 artifacts [--dir artifacts]
 //! ```
@@ -43,6 +44,7 @@ fn dispatch(args: &Args) -> Result<()> {
     let result = match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(args),
         Some("exp") => cmd_exp(args),
+        Some("bench") => ef21::bench::main(args),
         Some("data") => cmd_data(args),
         Some("artifacts") => cmd_artifacts(args),
         _ => {
@@ -102,6 +104,14 @@ USAGE:
                       iid/het shards at the PP theory stepsize)
   ef21 exp  rates    [--rounds T]    (theory checks; always full rounds)
   ef21 exp  dl       [--steps N] [--workers W] [--k-frac F] [--sweep-k]
+  ef21 bench [--json FILE] [--quick]
+                                     (machine-readable perf trajectory:
+                                      round-loop throughput seq/par at
+                                      d=1e4/1e6, compressor zoo, blocked
+                                      layout, participation sweep ->
+                                      BENCH_round.json; build with
+                                      --features count-allocs for the
+                                      allocs_per_round column)
   ef21 data info
   ef21 artifacts
 ";

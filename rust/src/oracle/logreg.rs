@@ -8,7 +8,7 @@
 
 use super::GradOracle;
 use crate::data::Shard;
-use crate::util::linalg;
+use crate::util::{linalg, simd};
 
 pub struct LogRegOracle {
     a: Vec<f32>,
@@ -55,6 +55,35 @@ impl LogRegOracle {
         &self.a
     }
 
+    /// Legacy row-at-a-time evaluation — kept as the differential-testing
+    /// baseline for the register-blocked `loss_grad_into` (the two must
+    /// agree bit for bit; asserted in `tests/simd_identity.rs`) and for
+    /// the §Perf bench ablation.
+    pub fn loss_grad_rowwise(&mut self, x: &[f64], grad: &mut Vec<f64>) -> f64 {
+        assert_eq!(x.len(), self.d);
+        let inv_n = 1.0 / self.n as f64;
+        let mut loss = 0.0f64;
+        grad.clear();
+        grad.resize(self.d, 0.0);
+        for i in 0..self.n {
+            let row = &self.a[i * self.d..(i + 1) * self.d];
+            let z = linalg::dot_f32_f64(row, x);
+            let yi = self.y[i] as f64;
+            let m = -yi * z;
+            loss += Self::softplus(m);
+            let r = -yi * Self::sigmoid(m); // d loss_i / d z
+            linalg::axpy_f32(r * inv_n, row, grad);
+        }
+        loss *= inv_n;
+        let mut reg = 0.0f64;
+        for (j, &xj) in x.iter().enumerate() {
+            let x2 = xj * xj;
+            reg += x2 / (1.0 + x2);
+            grad[j] += self.lam * 2.0 * xj / ((1.0 + x2) * (1.0 + x2));
+        }
+        loss + self.lam * reg
+    }
+
     /// Label of local row i (as f64).
     pub fn label(&self, i: usize) -> f64 {
         self.y[i] as f64
@@ -75,6 +104,17 @@ impl GradOracle for LogRegOracle {
     /// The allocation-free hot path (the workers' pooled buffers land
     /// here); `loss_grad` is a thin wrapper so both entry points share
     /// this arithmetic exactly.
+    ///
+    /// Rows are processed in register-blocked groups of 4
+    /// ([`crate::util::simd::dot4_f32_f64`] / [`simd::axpy4_f32`]): one
+    /// pass over `x`/`grad` serves four rows, amortizing the loads that
+    /// dominate the row-at-a-time walk. Bit-identity with the legacy
+    /// row-at-a-time loop ([`Self::loss_grad_rowwise`], the differential
+    /// baseline): each blocked dot runs the exact single-row recurrence,
+    /// the scalar link (softplus/sigmoid) and the `loss` accumulation
+    /// stay in row order, and the blocked axpy applies the four row
+    /// updates in row order within each coordinate — the same
+    /// per-coordinate f64 sequence as four sequential axpys.
     fn loss_grad_into(&mut self, x: &[f64], grad: &mut Vec<f64>) -> f64 {
         assert_eq!(x.len(), self.d);
         let t0 = crate::telemetry::maybe_now();
@@ -82,8 +122,29 @@ impl GradOracle for LogRegOracle {
         let mut loss = 0.0f64;
         grad.clear();
         grad.resize(self.d, 0.0);
-        for i in 0..self.n {
-            let row = &self.a[i * self.d..(i + 1) * self.d];
+        let d = self.d;
+        let blocked = self.n / 4 * 4;
+        let mut i = 0;
+        while i < blocked {
+            let base = i * d;
+            let r0 = &self.a[base..base + d];
+            let r1 = &self.a[base + d..base + 2 * d];
+            let r2 = &self.a[base + 2 * d..base + 3 * d];
+            let r3 = &self.a[base + 3 * d..base + 4 * d];
+            let z = simd::dot4_f32_f64(r0, r1, r2, r3, x);
+            let mut coef = [0.0f64; 4];
+            for (lane, zi) in z.iter().enumerate() {
+                let yi = self.y[i + lane] as f64;
+                let m = -yi * zi;
+                loss += Self::softplus(m);
+                let r = -yi * Self::sigmoid(m); // d loss_i / d z
+                coef[lane] = r * inv_n;
+            }
+            simd::axpy4_f32(coef, r0, r1, r2, r3, grad);
+            i += 4;
+        }
+        for i in blocked..self.n {
+            let row = &self.a[i * d..(i + 1) * d];
             let z = linalg::dot_f32_f64(row, x);
             let yi = self.y[i] as f64;
             let m = -yi * z;

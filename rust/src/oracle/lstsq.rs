@@ -4,7 +4,7 @@
 
 use super::GradOracle;
 use crate::data::Shard;
-use crate::util::linalg;
+use crate::util::{linalg, simd};
 
 pub struct LstsqOracle {
     a: Vec<f32>,
@@ -34,6 +34,24 @@ impl LstsqOracle {
     pub fn n_rows(&self) -> usize {
         self.n
     }
+
+    /// Legacy row-at-a-time evaluation — the differential-testing
+    /// baseline for the register-blocked `loss_grad_into` (bitwise
+    /// agreement asserted in `tests/simd_identity.rs`).
+    pub fn loss_grad_rowwise(&mut self, x: &[f64], grad: &mut Vec<f64>) -> f64 {
+        assert_eq!(x.len(), self.d);
+        let inv_n = 1.0 / self.n as f64;
+        let mut loss = 0.0;
+        grad.clear();
+        grad.resize(self.d, 0.0);
+        for i in 0..self.n {
+            let row = &self.a[i * self.d..(i + 1) * self.d];
+            let z = linalg::dot_f32_f64(row, x) - self.b[i] as f64;
+            loss += z * z;
+            linalg::axpy_f32(2.0 * z * inv_n, row, grad);
+        }
+        loss * inv_n
+    }
 }
 
 impl GradOracle for LstsqOracle {
@@ -48,7 +66,12 @@ impl GradOracle for LstsqOracle {
     }
 
     /// Allocation-free hot path; `loss_grad` wraps it (one arithmetic
-    /// code path for both entry points).
+    /// code path for both entry points). Register-blocked 4 rows at a
+    /// time like the logreg oracle — bit-identical to the row-at-a-time
+    /// baseline ([`Self::loss_grad_rowwise`]): blocked dots run the
+    /// exact single-row recurrence, residual/loss arithmetic stays in
+    /// row order, and the blocked axpy applies row updates in row order
+    /// per coordinate.
     fn loss_grad_into(&mut self, x: &[f64], grad: &mut Vec<f64>) -> f64 {
         assert_eq!(x.len(), self.d);
         let t0 = crate::telemetry::maybe_now();
@@ -56,8 +79,27 @@ impl GradOracle for LstsqOracle {
         let mut loss = 0.0;
         grad.clear();
         grad.resize(self.d, 0.0);
-        for i in 0..self.n {
-            let row = &self.a[i * self.d..(i + 1) * self.d];
+        let d = self.d;
+        let blocked = self.n / 4 * 4;
+        let mut i = 0;
+        while i < blocked {
+            let base = i * d;
+            let r0 = &self.a[base..base + d];
+            let r1 = &self.a[base + d..base + 2 * d];
+            let r2 = &self.a[base + 2 * d..base + 3 * d];
+            let r3 = &self.a[base + 3 * d..base + 4 * d];
+            let zs = simd::dot4_f32_f64(r0, r1, r2, r3, x);
+            let mut coef = [0.0f64; 4];
+            for (lane, zi) in zs.iter().enumerate() {
+                let z = zi - self.b[i + lane] as f64;
+                loss += z * z;
+                coef[lane] = 2.0 * z * inv_n;
+            }
+            simd::axpy4_f32(coef, r0, r1, r2, r3, grad);
+            i += 4;
+        }
+        for i in blocked..self.n {
+            let row = &self.a[i * d..(i + 1) * d];
             let z = linalg::dot_f32_f64(row, x) - self.b[i] as f64;
             loss += z * z;
             linalg::axpy_f32(2.0 * z * inv_n, row, grad);

@@ -127,22 +127,39 @@ impl<'a> Reader<'a> {
     fn remaining(&self) -> usize {
         self.b.len() - self.i
     }
+
+    /// Safe pre-allocation for a declared element count: a frame with
+    /// `declared` elements of `bytes_per` wire bytes each cannot be
+    /// longer than what remains, so the capacity is clamped there — the
+    /// one helper behind every decode-side `Vec::with_capacity` (five
+    /// hand-rolled `min(remaining / …)` expressions before it).
+    fn clamped_cap(&self, declared: usize, bytes_per: usize) -> usize {
+        declared.min(self.remaining() / bytes_per)
+    }
 }
 
 pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_into(frame, &mut out);
+    out
+}
+
+/// [`encode`] into a caller-owned buffer (cleared first; its allocation
+/// is reused) — the per-connection write path of sustained rounds.
+pub fn encode_into(frame: &Frame, out: &mut Vec<u8>) {
     // Handle cached in a static: initialized on the first *enabled* call
     // (t0 is Some only then), so the hot path never repeats the registry
     // lookup and the disabled path is a single atomic load.
     static ENCODE_NS: std::sync::OnceLock<crate::telemetry::Histogram> =
         std::sync::OnceLock::new();
     let t0 = crate::telemetry::maybe_now();
-    let out = encode_impl(frame);
+    out.clear();
+    encode_impl(frame, out);
     if let Some(t0) = t0 {
         ENCODE_NS
             .get_or_init(|| crate::telemetry::histogram(crate::telemetry::keys::CODEC_ENCODE_NS))
             .record(t0.elapsed().as_nanos() as u64);
     }
-    out
 }
 
 pub fn decode(bytes: &[u8]) -> Result<Frame> {
@@ -179,8 +196,7 @@ fn msg_kind(msg: &WireMsg) -> (u8, &Compressed) {
     }
 }
 
-fn encode_impl(frame: &Frame) -> Vec<u8> {
-    let mut out = Vec::new();
+fn encode_impl(frame: &Frame, out: &mut Vec<u8>) {
     match frame {
         Frame::Model(x) => {
             out.push(TAG_MODEL);
@@ -223,7 +239,6 @@ fn encode_impl(frame: &Frame) -> Vec<u8> {
             }
         }
     }
-    out
 }
 
 /// Shared tail of `Up` / `UpBlock` decoding (after the kind byte and any
@@ -232,11 +247,11 @@ fn take_msg_body(r: &mut Reader<'_>, kind: u8) -> Result<(WireMsg, f64)> {
     let loss = r.f64()?;
     let bits = r.u64()?;
     let nnz = r.u32()? as usize;
-    let mut idx = Vec::with_capacity(nnz.min(r.remaining() / 4));
+    let mut idx = Vec::with_capacity(r.clamped_cap(nnz, 4));
     for _ in 0..nnz {
         idx.push(r.u32()?);
     }
-    let mut val = Vec::with_capacity(nnz.min(r.remaining() / 4));
+    let mut val = Vec::with_capacity(r.clamped_cap(nnz, 4));
     for _ in 0..nnz {
         val.push(r.f32()? as f64);
     }
@@ -259,7 +274,7 @@ fn decode_impl(bytes: &[u8]) -> Result<Frame> {
     let frame = match r.u8()? {
         TAG_MODEL => {
             let d = r.u32()? as usize;
-            let mut x = Vec::with_capacity(d.min(r.remaining() / 4));
+            let mut x = Vec::with_capacity(r.clamped_cap(d, 4));
             for _ in 0..d {
                 x.push(r.f32()? as f64);
             }
@@ -273,7 +288,7 @@ fn decode_impl(bytes: &[u8]) -> Result<Frame> {
         TAG_STOP => Frame::Stop,
         TAG_MODEL_DELTA => {
             let n = r.u32()? as usize;
-            let mut patches = Vec::with_capacity(n.min(r.remaining() / 8));
+            let mut patches = Vec::with_capacity(r.clamped_cap(n, 8));
             let mut next_free = 0u64;
             for _ in 0..n {
                 let offset = r.u32()?;
@@ -284,7 +299,7 @@ fn decode_impl(bytes: &[u8]) -> Result<Frame> {
                     "ModelDelta patches overlap or are out of order"
                 );
                 next_free = offset as u64 + len as u64;
-                let mut vals = Vec::with_capacity(len.min(r.remaining() / 4));
+                let mut vals = Vec::with_capacity(r.clamped_cap(len, 4));
                 for _ in 0..len {
                     vals.push(r.f32()? as f64);
                 }
@@ -302,7 +317,7 @@ fn decode_impl(bytes: &[u8]) -> Result<Frame> {
         }
         TAG_STATE_SYNC => {
             let d = r.u32()? as usize;
-            let mut g = Vec::with_capacity(d.min(r.remaining() / 8));
+            let mut g = Vec::with_capacity(r.clamped_cap(d, 8));
             for _ in 0..d {
                 g.push(r.f64()?);
             }
@@ -444,6 +459,27 @@ mod tests {
         let mut bytes = encode(&Frame::StateSync(vec![1.0, 2.0]));
         bytes.truncate(bytes.len() - 3);
         assert!(decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn encode_into_matches_encode_and_reuses_buffer() {
+        let frames = [
+            Frame::Model(vec![1.0, -2.5]),
+            Frame::Up { msg: sample_msg(), loss: 0.5 },
+            Frame::Stop,
+            Frame::StateSync(vec![0.25; 3]),
+        ];
+        let mut buf = Vec::new();
+        // Pre-grow so every later encode fits in place.
+        encode_into(&Frame::StateSync(vec![0.0; 64]), &mut buf);
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        for f in &frames {
+            encode_into(f, &mut buf);
+            assert_eq!(buf, encode(f), "encode_into drifted from encode");
+            assert_eq!(buf.capacity(), cap, "buffer was reallocated");
+            assert_eq!(buf.as_ptr(), ptr);
+        }
     }
 
     #[test]

@@ -22,6 +22,16 @@ use anyhow::Result;
 pub trait Conn: Send {
     fn send(&mut self, frame: &[u8]) -> Result<()>;
     fn recv(&mut self) -> Result<Vec<u8>>;
+
+    /// Receive one frame into a caller-owned buffer (cleared and
+    /// refilled; its allocation is reused). The default forwards to
+    /// [`Conn::recv`]; transports that read off a raw byte stream (TCP)
+    /// override it so sustained rounds stop allocating a fresh frame
+    /// buffer per receive.
+    fn recv_into(&mut self, buf: &mut Vec<u8>) -> Result<()> {
+        *buf = self.recv()?;
+        Ok(())
+    }
 }
 
 impl<T: Conn + ?Sized> Conn for Box<T> {
@@ -31,5 +41,9 @@ impl<T: Conn + ?Sized> Conn for Box<T> {
 
     fn recv(&mut self) -> Result<Vec<u8>> {
         (**self).recv()
+    }
+
+    fn recv_into(&mut self, buf: &mut Vec<u8>) -> Result<()> {
+        (**self).recv_into(buf)
     }
 }

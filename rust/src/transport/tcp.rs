@@ -113,6 +113,10 @@ pub fn connect_retry_schedule() -> (u32, Duration) {
 
 pub struct TcpConn {
     stream: TcpStream,
+    /// Reusable write assembly buffer: each send builds `len ‖ frame`
+    /// here and ships it with one `write_all` — one syscall instead of
+    /// two, and no allocation per frame in sustained rounds.
+    wbuf: Vec<u8>,
 }
 
 impl TcpConn {
@@ -121,7 +125,7 @@ impl TcpConn {
         let timeout = io_timeout();
         stream.set_read_timeout(timeout).context("set_read_timeout")?;
         stream.set_write_timeout(timeout).context("set_write_timeout")?;
-        Ok(TcpConn { stream })
+        Ok(TcpConn { stream, wbuf: Vec::new() })
     }
 
     /// Override the default I/O timeouts (`None` = block forever).
@@ -160,23 +164,32 @@ impl TcpConn {
 impl Conn for TcpConn {
     fn send(&mut self, frame: &[u8]) -> Result<()> {
         let len = frame.len() as u32;
-        self.stream.write_all(&len.to_le_bytes()).context("tcp write len")?;
-        self.stream.write_all(frame).context("tcp write frame")?;
+        self.wbuf.clear();
+        self.wbuf.extend_from_slice(&len.to_le_bytes());
+        self.wbuf.extend_from_slice(frame);
+        self.stream.write_all(&self.wbuf).context("tcp write frame")?;
         telemetry::counter(keys::TX_FRAMES).incr(1);
         telemetry::counter(keys::TX_BYTES).incr(frame.len() as u64 + 4);
         Ok(())
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        self.recv_into(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn recv_into(&mut self, buf: &mut Vec<u8>) -> Result<()> {
         let mut len_bytes = [0u8; 4];
         self.stream.read_exact(&mut len_bytes).context("tcp read len")?;
         let len = u32::from_le_bytes(len_bytes) as usize;
         anyhow::ensure!(len <= 1 << 30, "frame too large: {len}");
-        let mut buf = vec![0u8; len];
-        self.stream.read_exact(&mut buf).context("tcp read frame")?;
+        buf.clear();
+        buf.resize(len, 0);
+        self.stream.read_exact(buf).context("tcp read frame")?;
         telemetry::counter(keys::RX_FRAMES).incr(1);
         telemetry::counter(keys::RX_BYTES).incr(len as u64 + 4);
-        Ok(buf)
+        Ok(())
     }
 }
 

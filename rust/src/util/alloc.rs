@@ -1,0 +1,84 @@
+//! Counting global allocator — the measurement behind the repo's
+//! zero-allocation guarantee for the steady-state round loop.
+//!
+//! [`CountingAlloc`] wraps [`std::alloc::System`] and bumps a process-wide
+//! relaxed atomic on every `alloc` / `alloc_zeroed` / `realloc` (frees are
+//! not counted: the gate cares about allocation *pressure*, and a path
+//! that frees without allocating is already alloc-free on the next
+//! round). It is only installed as `#[global_allocator]` under the
+//! `count-allocs` cargo feature (see `lib.rs`), so ordinary builds pay
+//! nothing; the counter itself compiles unconditionally so call sites
+//! don't need cfg gymnastics.
+//!
+//! Consumers:
+//!   * `rust/tests/integration_alloc.rs` — asserts that extending a sim
+//!     run by N rounds adds **zero** allocations (steady state);
+//!   * `ef21 bench` — reports `allocs_per_round` in `BENCH_round.json`
+//!     when the feature is on (`null` otherwise).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator wrapper counting allocation events process-wide.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Raw allocation-event count. Monotone; only meaningful as a *delta*
+/// around a measured section, and only nonzero when the `count-allocs`
+/// feature installed [`CountingAlloc`] as the global allocator.
+pub fn allocation_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// `Some(count)` when the counting allocator is installed (feature
+/// `count-allocs`), `None` otherwise — lets reports distinguish "zero
+/// allocations" from "not measured".
+pub fn measured_allocation_count() -> Option<u64> {
+    if cfg!(feature = "count-allocs") {
+        Some(allocation_count())
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_is_monotone_and_counts_when_installed() {
+        let before = allocation_count();
+        let v: Vec<u64> = (0..1024).collect();
+        std::hint::black_box(&v);
+        let after = allocation_count();
+        assert!(after >= before);
+        if cfg!(feature = "count-allocs") {
+            assert!(after > before, "an allocation must bump the counter");
+            assert!(measured_allocation_count().is_some());
+        } else {
+            assert_eq!(measured_allocation_count(), None);
+        }
+    }
+}

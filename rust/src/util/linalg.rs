@@ -1,65 +1,42 @@
 //! Small dense linear-algebra helpers on slices. The coordinator's hot path
-//! (aggregation, compressor input prep, oracle matvecs) runs through these;
-//! they are written so LLVM auto-vectorizes them (chunked accumulators, no
-//! bounds checks in the inner loop).
+//! (aggregation, compressor input prep, oracle matvecs) runs through these.
+//! The four leaf kernels (`dot`, `dot_f32_f64`, `axpy`, `axpy_f32`)
+//! dispatch to [`crate::util::simd`] — runtime-selected AVX2/SSE2 paths
+//! whose lane layout mirrors the legacy 4-accumulator scalar loops, so
+//! results are **bit-identical** whichever ISA executes them (the scalar
+//! reference bodies live in `simd::scalar`).
 
-/// Dot product with 4-way unrolled accumulators (f64).
+use crate::util::simd;
+
+/// Dot product with 4-way unrolled accumulators (f64). SIMD-dispatched;
+/// bit-identical to the scalar 4-accumulator loop.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f64; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for j in chunks * 4..a.len() {
-        s += a[j] * b[j];
-    }
-    s
+    simd::dot(a, b)
 }
 
 /// Dot product of an f32 row against an f64 vector (oracle inner loop:
-/// data stays f32, model/state stays f64).
+/// data stays f32, model/state stays f64). SIMD-dispatched.
 #[inline]
 pub fn dot_f32_f64(row: &[f32], x: &[f64]) -> f64 {
     debug_assert_eq!(row.len(), x.len());
-    let mut acc = [0.0f64; 4];
-    let chunks = row.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += row[j] as f64 * x[j];
-        acc[1] += row[j + 1] as f64 * x[j + 1];
-        acc[2] += row[j + 2] as f64 * x[j + 2];
-        acc[3] += row[j + 3] as f64 * x[j + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for j in chunks * 4..row.len() {
-        s += row[j] as f64 * x[j];
-    }
-    s
+    simd::dot_f32_f64(row, x)
 }
 
-/// y += alpha * x
+/// y += alpha * x (SIMD-dispatched; element-wise, so lane width cannot
+/// change any result).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    simd::axpy(alpha, x, y);
 }
 
-/// y += alpha * row (f32 row into f64 accumulator).
+/// y += alpha * row (f32 row into f64 accumulator; SIMD-dispatched).
 #[inline]
 pub fn axpy_f32(alpha: f64, row: &[f32], y: &mut [f64]) {
     debug_assert_eq!(row.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(row) {
-        *yi += alpha * *xi as f64;
-    }
+    simd::axpy_f32(alpha, row, y);
 }
 
 /// Squared Euclidean norm.

@@ -4,7 +4,9 @@
 //! and proptest are unavailable, so the library carries minimal, fully
 //! tested replacements.
 
+pub mod alloc;
 pub mod json;
 pub mod linalg;
 pub mod rng;
+pub mod simd;
 pub mod testing;

@@ -97,20 +97,40 @@ impl Rng {
         }
     }
 
+    /// Sample k distinct indices from [0, n) (Floyd's algorithm), written
+    /// sorted into the caller's buffer (cleared first). The membership set
+    /// is a thread-local scratch, so steady-state calls allocate nothing;
+    /// the draw sequence is exactly [`Rng::sample_indices`]'s — the two
+    /// consume identical RNG streams and return identical index sets.
+    pub fn sample_indices_into(&mut self, n: usize, k: usize, out: &mut Vec<u32>) {
+        assert!(k <= n);
+        out.clear();
+        SAMPLE_SCRATCH.with(|cell| {
+            let mut chosen = cell.borrow_mut();
+            chosen.clear();
+            for j in (n - k)..n {
+                let t = self.next_below(j + 1);
+                let pick = if chosen.contains(&(t as u32)) { j as u32 } else { t as u32 };
+                chosen.insert(pick);
+                out.push(pick);
+            }
+        });
+        out.sort_unstable();
+    }
+
     /// Sample k distinct indices from [0, n) (Floyd's algorithm).
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<u32> {
-        assert!(k <= n);
-        let mut chosen = std::collections::HashSet::with_capacity(k);
         let mut out = Vec::with_capacity(k);
-        for j in (n - k)..n {
-            let t = self.next_below(j + 1);
-            let pick = if chosen.contains(&(t as u32)) { j as u32 } else { t as u32 };
-            chosen.insert(pick);
-            out.push(pick);
-        }
-        out.sort_unstable();
+        self.sample_indices_into(n, k, &mut out);
         out
     }
+}
+
+thread_local! {
+    /// Reused membership set for [`Rng::sample_indices_into`] (cleared on
+    /// every use; clearing keeps the table allocation).
+    static SAMPLE_SCRATCH: std::cell::RefCell<std::collections::HashSet<u32>> =
+        std::cell::RefCell::new(std::collections::HashSet::new());
 }
 
 /// The RNG stream of worker `i` under the builders' fork scheme
@@ -216,6 +236,29 @@ mod tests {
             }
             assert!(idx.iter().all(|&i| (i as usize) < n));
         }
+    }
+
+    #[test]
+    fn sample_indices_into_matches_owned_and_reuses_buffer() {
+        // Same seed => identical draw sequence through both entry points.
+        let mut a = Rng::seed(21);
+        let mut b = Rng::seed(21);
+        let mut out = Vec::new();
+        for _ in 0..30 {
+            let k = 1 + a.next_below(15);
+            let n = k + a.next_below(60);
+            // Keep b's stream aligned with a's.
+            let k2 = 1 + b.next_below(15);
+            let n2 = k2 + b.next_below(60);
+            assert_eq!((k, n), (k2, n2));
+            a.sample_indices_into(n, k, &mut out);
+            assert_eq!(out, b.sample_indices(n, k));
+        }
+        // Buffer reuse: capacity settles, no reallocation on same-k draws.
+        a.sample_indices_into(50, 10, &mut out);
+        let ptr = out.as_ptr();
+        a.sample_indices_into(50, 10, &mut out);
+        assert_eq!(out.as_ptr(), ptr, "index buffer was reallocated");
     }
 
     #[test]

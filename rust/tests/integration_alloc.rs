@@ -1,0 +1,141 @@
+//! Zero-allocation gate for the steady-state round loop (DESIGN.md §8).
+//!
+//! Built only with `--features count-allocs`, which installs the
+//! counting global allocator. Methodology: run the identical scenario at
+//! two round counts (after a warmup run that populates thread-local
+//! scratch) and assert the allocation counts are **equal** — i.e. the
+//! extra rounds allocated exactly nothing. Setup, init, the t=0 record,
+//! and the final observation allocate identically in both runs, so they
+//! cancel; any per-round allocation shows up as a nonzero delta.
+//!
+//! Covered: EF21 / EF / DCGD × top-k (k=1 and 3) / sign, at pool widths
+//! 1 (sequential) and 4 (the pooled engine's command/reply slots and
+//! buffer ping-pong must also be allocation-free). EF21+ is asserted
+//! too: its branch candidates come from the pooled `Workspace` and the
+//! winner swaps buffers with the message slot, so it reaches zero as
+//! well (the historical exemption is thereby retired).
+#![cfg(feature = "count-allocs")]
+
+use ef21::algo::AlgoSpec;
+use ef21::compress::{Compressor, ScaledSign, TopK};
+use ef21::coordinator::{run_protocol_par, RunConfig};
+use ef21::oracle::{GradOracle, QuadraticOracle};
+use ef21::util::alloc::allocation_count;
+use ef21::util::rng::Rng;
+use std::sync::{Arc, Mutex};
+
+/// Serialize measuring sections: the counter is process-wide, so no
+/// other test's allocations may interleave with a measured run.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+const D: usize = 32;
+const WORKERS: usize = 8;
+
+fn oracles() -> Vec<Box<dyn GradOracle>> {
+    let mut rng = Rng::seed(42);
+    (0..WORKERS)
+        .map(|_| {
+            let h: Vec<f64> = (0..D).map(|_| 0.5 + rng.next_f64()).collect();
+            let c: Vec<f64> = (0..D).map(|_| rng.next_normal()).collect();
+            Box::new(QuadraticOracle::diagonal(h, c)) as Box<dyn GradOracle>
+        })
+        .collect()
+}
+
+fn compressor(spec: &str) -> Arc<dyn Compressor> {
+    match spec {
+        "top1" => Arc::new(TopK::new(1)),
+        "top3" => Arc::new(TopK::new(3)),
+        "sign" => Arc::new(ScaledSign),
+        other => panic!("unknown test compressor {other}"),
+    }
+}
+
+/// Allocation count consumed by one fresh run of `rounds` rounds.
+fn run_allocs(algo: AlgoSpec, spec: &str, threads: usize, rounds: usize) -> u64 {
+    let (m, w) =
+        ef21::algo::build(algo, vec![0.3; D], oracles(), compressor(spec), 0.01, 9);
+    // Record only at t=0 and the final round, so steady-state rounds are
+    // pure protocol (observation rounds legitimately snapshot gradients).
+    let cfg = RunConfig::rounds(rounds).with_record_every(usize::MAX);
+    let before = allocation_count();
+    let h = run_protocol_par(m, w, &cfg, threads);
+    let after = allocation_count();
+    assert_eq!(h.records.last().unwrap().round, rounds - 1, "run stopped early");
+    after - before
+}
+
+#[test]
+fn steady_state_rounds_allocate_nothing() {
+    for algo in [AlgoSpec::Ef21, AlgoSpec::Ef, AlgoSpec::Dcgd, AlgoSpec::Ef21Plus] {
+        for spec in ["top1", "top3", "sign"] {
+            if algo == AlgoSpec::Ef21Plus && spec == "sign" {
+                // The gate's required matrix is EF21/EF/DCGD × {top-k,
+                // sign}; EF21+ is asserted on the top-k pair.
+                continue;
+            }
+            for threads in [1usize, 4] {
+                let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+                // Warmup: thread-local scratch (top-k order buffer) and
+                // lazily-grown buffers settle on the measuring thread.
+                let _ = run_allocs(algo, spec, threads, 8);
+                let short = run_allocs(algo, spec, threads, 8);
+                let long = run_allocs(algo, spec, threads, 40);
+                assert_eq!(
+                    short,
+                    long,
+                    "{:?}/{spec}/threads={threads}: {} allocation(s) across 32 extra \
+                     steady-state rounds (expected 0)",
+                    algo,
+                    long.saturating_sub(short)
+                );
+            }
+        }
+    }
+}
+
+/// The measurement itself must be live: a run with the alloc-forcing
+/// legacy compression path (default `compress_into` → owned `compress`)
+/// MUST show per-round allocations, proving the gate can fail.
+#[test]
+fn gate_detects_the_allocating_legacy_path() {
+    struct AllocEveryCall(TopK);
+    impl Compressor for AllocEveryCall {
+        fn name(&self) -> String {
+            self.0.name()
+        }
+        fn alpha(&self, d: usize) -> f64 {
+            Compressor::alpha(&self.0, d)
+        }
+        fn compress(&self, v: &[f64], rng: &mut Rng) -> ef21::compress::Compressed {
+            self.0.compress(v, rng)
+        }
+        // No compress_into override: the trait default allocates.
+        fn is_deterministic(&self) -> bool {
+            true
+        }
+    }
+
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let run = |rounds: usize| {
+        let (m, w) = ef21::algo::build(
+            AlgoSpec::Ef21,
+            vec![0.3; D],
+            oracles(),
+            Arc::new(AllocEveryCall(TopK::new(3))),
+            0.01,
+            9,
+        );
+        let cfg = RunConfig::rounds(rounds).with_record_every(usize::MAX);
+        let before = allocation_count();
+        let _ = run_protocol_par(m, w, &cfg, 1);
+        allocation_count() - before
+    };
+    let _ = run(8);
+    let short = run(8);
+    let long = run(40);
+    assert!(
+        long > short,
+        "legacy allocating path was not detected (short={short}, long={long})"
+    );
+}

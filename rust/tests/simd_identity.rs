@@ -1,0 +1,263 @@
+//! SIMD bit-identity suite: the dispatched AVX2/SSE2 kernels must be
+//! **bitwise** equal to the scalar reference on every input — including
+//! lengths with every `% 4` remainder, NaN/±inf payload propagation,
+//! and subnormals — and whole trajectories must be byte-identical under
+//! `EF21_FORCE_SCALAR` vs the dispatched path (the golden-trajectory
+//! lock for the runtime-dispatch contract, DESIGN.md §8).
+//!
+//! Tests that pin the ISA via `simd::set_override` serialize on a local
+//! mutex. A concurrently-running test observing a temporary override
+//! still computes identical values (that is exactly the contract under
+//! test), so the override is safe to flip; the mutex only keeps the
+//! pin/unpin windows from interleaving.
+
+use ef21::algo::AlgoSpec;
+use ef21::compress::{Compressor, TopK};
+use ef21::coordinator::{run_protocol, RunConfig};
+use ef21::data::synth;
+use ef21::metrics::History;
+use ef21::oracle::{GradOracle, LogRegOracle, LstsqOracle};
+use ef21::util::rng::Rng;
+use ef21::util::simd::{self, Isa};
+use std::sync::Mutex;
+
+static ISA_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Pin the ISA for a scope; restores the detected default on drop.
+struct ForceIsa;
+impl ForceIsa {
+    fn new(isa: Isa) -> ForceIsa {
+        simd::set_override(Some(isa));
+        ForceIsa
+    }
+}
+impl Drop for ForceIsa {
+    fn drop(&mut self) {
+        simd::set_override(None);
+    }
+}
+
+const ISAS: [Isa; 3] = [Isa::Scalar, Isa::Sse2, Isa::Avx2];
+
+/// Inputs mixing normals with NaN, ±inf, subnormals, zeros, and exact
+/// ties — the payload classes where a reordered or fused vector path
+/// would betray itself bitwise.
+fn adversarial_vec(d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::seed(seed);
+    (0..d)
+        .map(|j| match (j + seed as usize) % 11 {
+            0 => f64::NAN,
+            1 => f64::INFINITY,
+            2 => f64::NEG_INFINITY,
+            3 => f64::MIN_POSITIVE / 8.0, // subnormal
+            4 => -f64::MIN_POSITIVE,
+            5 => 0.0,
+            6 => -0.0,
+            7 => 1.0, // exact ties with other 1.0 entries
+            _ => rng.next_normal(),
+        })
+        .collect()
+}
+
+#[test]
+fn kernels_bit_identical_across_isas_on_adversarial_inputs() {
+    let _l = lock();
+    for d in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 33, 100, 127] {
+        for seed in 0..4u64 {
+            let a = adversarial_vec(d, seed);
+            let b = adversarial_vec(d, seed + 100);
+            let row: Vec<f32> = adversarial_vec(d, seed + 200)
+                .iter()
+                .map(|&x| x as f32)
+                .collect();
+            // Reference under forced scalar.
+            let (r_dot, r_dotf, r_axpy, r_sub) = {
+                let _g = ForceIsa::new(Isa::Scalar);
+                let mut y = b.clone();
+                simd::axpy(1.5, &a, &mut y);
+                simd::axpy_f32(-0.75, &row, &mut y);
+                let mut s = vec![0.0; d];
+                simd::sub_into(&a, &b, &mut s);
+                (simd::dot(&a, &b), simd::dot_f32_f64(&row, &a), y, s)
+            };
+            for isa in ISAS {
+                let _g = ForceIsa::new(isa);
+                assert_eq!(
+                    simd::dot(&a, &b).to_bits(),
+                    r_dot.to_bits(),
+                    "dot d={d} seed={seed} {isa:?}"
+                );
+                assert_eq!(
+                    simd::dot_f32_f64(&row, &a).to_bits(),
+                    r_dotf.to_bits(),
+                    "dot_f32_f64 d={d} seed={seed} {isa:?}"
+                );
+                let mut y = b.clone();
+                simd::axpy(1.5, &a, &mut y);
+                simd::axpy_f32(-0.75, &row, &mut y);
+                for (got, want) in y.iter().zip(&r_axpy) {
+                    assert_eq!(got.to_bits(), want.to_bits(), "axpy d={d} seed={seed} {isa:?}");
+                }
+                let mut s = vec![0.0; d];
+                simd::sub_into(&a, &b, &mut s);
+                for (got, want) in s.iter().zip(&r_sub) {
+                    assert_eq!(got.to_bits(), want.to_bits(), "sub d={d} seed={seed} {isa:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_matvec_kernels_match_row_calls_across_isas() {
+    let _l = lock();
+    for d in [1usize, 3, 4, 5, 8, 13, 64, 65] {
+        let mut rng = Rng::seed(d as u64 + 9);
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|r| {
+                adversarial_vec(d, r as u64 + 50)
+                    .iter()
+                    .map(|&x| x as f32)
+                    .collect()
+            })
+            .collect();
+        let x: Vec<f64> = (0..d).map(|_| rng.next_normal()).collect();
+        let coef = [2.0, -0.5, 0.125, -3.0];
+        // Reference: four sequential single-row kernels, forced scalar.
+        let (r_dots, r_y) = {
+            let _g = ForceIsa::new(Isa::Scalar);
+            let dots: Vec<f64> = rows.iter().map(|r| simd::dot_f32_f64(r, &x)).collect();
+            let mut y = x.clone();
+            for (c, r) in coef.iter().zip(&rows) {
+                simd::axpy_f32(*c, r, &mut y);
+            }
+            (dots, y)
+        };
+        for isa in ISAS {
+            let _g = ForceIsa::new(isa);
+            let got = simd::dot4_f32_f64(&rows[0], &rows[1], &rows[2], &rows[3], &x);
+            for lane in 0..4 {
+                assert_eq!(
+                    got[lane].to_bits(),
+                    r_dots[lane].to_bits(),
+                    "dot4 lane {lane} d={d} {isa:?}"
+                );
+            }
+            let mut y = x.clone();
+            simd::axpy4_f32(coef, &rows[0], &rows[1], &rows[2], &rows[3], &mut y);
+            for (got, want) in y.iter().zip(&r_y) {
+                assert_eq!(got.to_bits(), want.to_bits(), "axpy4 d={d} {isa:?}");
+            }
+        }
+    }
+}
+
+/// The register-blocked oracle evaluation must equal the legacy
+/// row-at-a-time walk bitwise, for every `n % 4` remainder — under the
+/// dispatched ISA *and* forced scalar.
+#[test]
+fn oracle_blocked_rows_match_rowwise_baseline_bitwise() {
+    let _l = lock();
+    for n in [1usize, 2, 3, 4, 5, 7, 8, 9, 12, 30, 33] {
+        let ds = synth::generate_custom("simdid", n.max(4), 9, 0.5, n as u64);
+        let mut rng = Rng::seed(n as u64);
+        let x: Vec<f64> = (0..9).map(|_| rng.next_normal()).collect();
+        for isa in ISAS {
+            let _g = ForceIsa::new(isa);
+            let mut lr = LogRegOracle::new(ds.slice(0, n.min(ds.n)), 0.1);
+            let mut want = Vec::new();
+            let want_loss = lr.loss_grad_rowwise(&x, &mut want);
+            let mut got = Vec::new();
+            let got_loss = lr.loss_grad_into(&x, &mut got);
+            assert_eq!(got_loss.to_bits(), want_loss.to_bits(), "logreg loss n={n} {isa:?}");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "logreg grad n={n} {isa:?}");
+            }
+
+            let mut ls = LstsqOracle::new(ds.slice(0, n.min(ds.n)));
+            let want_loss = ls.loss_grad_rowwise(&x, &mut want);
+            let got_loss = ls.loss_grad_into(&x, &mut got);
+            assert_eq!(got_loss.to_bits(), want_loss.to_bits(), "lstsq loss n={n} {isa:?}");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "lstsq grad n={n} {isa:?}");
+            }
+        }
+    }
+}
+
+/// Tie-breaks feeding top-k: the Markov difference `grad - g` computed
+/// by any ISA must select the identical top-k support (ties broken by
+/// index), so compressed messages cannot depend on the dispatch.
+#[test]
+fn topk_selection_identical_across_isas_with_ties() {
+    let _l = lock();
+    for seed in 0..6u64 {
+        let d = 40;
+        let g = adversarial_vec(d, seed + 300);
+        // A gradient engineered to tie with g on half the coordinates.
+        let grad: Vec<f64> = g
+            .iter()
+            .enumerate()
+            .map(|(j, &v)| if j % 2 == 0 { v } else { v + 1.0 })
+            .collect();
+        let select = |isa: Isa| {
+            let _f = ForceIsa::new(isa);
+            let mut diff = vec![0.0; d];
+            // NaN-free lanes only for the selection input: replace
+            // non-finite diffs deterministically so TopK sees ties.
+            simd::sub_into(&grad, &g, &mut diff);
+            for v in diff.iter_mut() {
+                if !v.is_finite() {
+                    *v = 1.0;
+                }
+            }
+            TopK::new(7).select_indices(&diff)
+        };
+        let want = select(Isa::Scalar);
+        for isa in ISAS {
+            assert_eq!(select(isa), want, "seed={seed} {isa:?}");
+        }
+    }
+}
+
+fn ef21_trajectory(rounds: usize) -> History {
+    let p = synth::generate_custom("simdtraj", 600, 14, 0.4, 11);
+    let shards = ef21::data::partition::shards(&p, 4);
+    let oracles: Vec<Box<dyn GradOracle>> = shards
+        .iter()
+        .map(|s| Box::new(LogRegOracle::new(*s, 0.1)) as Box<dyn GradOracle>)
+        .collect();
+    let c = std::sync::Arc::new(TopK::new(2));
+    let alpha = Compressor::alpha(&*c, 14);
+    let l = 2.0;
+    let gamma = ef21::theory::stepsize_theorem1(l, l, alpha);
+    let (m, w) = ef21::algo::build(AlgoSpec::Ef21, vec![0.0; 14], oracles, c, gamma, 5);
+    run_protocol(m, w, &RunConfig::rounds(rounds))
+}
+
+/// Forced-scalar vs dispatched-SIMD golden-trajectory lock: every
+/// recorded f64 of a full EF21 run must agree to the bit.
+#[test]
+fn forced_scalar_trajectory_is_byte_identical_to_dispatched() {
+    let _l = lock();
+    let scalar = {
+        let _g = ForceIsa::new(Isa::Scalar);
+        ef21_trajectory(60)
+    };
+    let dispatched = ef21_trajectory(60); // detected ISA (AVX2 on CI)
+    assert_eq!(scalar.records.len(), dispatched.records.len());
+    for (a, b) in scalar.records.iter().zip(&dispatched.records) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "round {}", a.round);
+        assert_eq!(a.grad_norm_sq.to_bits(), b.grad_norm_sq.to_bits());
+        assert_eq!(a.bits_per_client.to_bits(), b.bits_per_client.to_bits());
+        assert_eq!(a.gt.to_bits(), b.gt.to_bits());
+    }
+    for (a, b) in scalar.final_x.iter().zip(&dispatched.final_x) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
