@@ -24,6 +24,14 @@ fn main() {
     bench("counter incr, cached handle (noop)", || {
         cached.incr(1);
     });
+    bench("span create+end           (noop)", || {
+        telemetry::span("bench.span").end();
+    });
+    bench("worker histogram lookup   (noop)", || {
+        // The per-worker key needs a format!; the noop path must bail
+        // before allocating it (zero-allocation gate).
+        telemetry::worker_round_ns(black_box(3)).record(1);
+    });
 
     telemetry::enable();
     header("telemetry enabled");
@@ -43,6 +51,11 @@ fn main() {
     bench("histogram record, cached handle (live)", || {
         v = v.wrapping_mul(6364136223846793005).wrapping_add(1);
         hist.record(v >> 40);
+    });
+    bench("span create+end (metrics on, tracing off)", || {
+        // Spans gate on the separate tracing flag: enabling the metrics
+        // registry must not start paying for trace events.
+        telemetry::span("bench.span").end();
     });
     bench("snapshot render (prometheus)", || {
         black_box(telemetry::snapshot().render_prometheus());

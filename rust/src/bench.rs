@@ -17,14 +17,21 @@
 //!   * `pp.*` — the participation sweep (p ∈ {1.0, 0.5, 0.1}) on the a9a
 //!     logistic problem, wall + uplink bits.
 //!
-//! Schema (`ef21.bench.round/v1`): a top-level object with `schema`,
+//! Schema (`ef21.bench.round/v2`): a top-level object with `schema`,
 //! `isa` (dispatched SIMD path), `threads_auto`, `alloc_counting`,
 //! `quick`, and `cases` — one object per case with `name`, `rounds`,
 //! `wall_ns`, `rounds_per_sec`, `uplink_bits`, `downlink_bits`, `d`,
-//! `workers`, and `allocs_per_round` (`null` unless built with
+//! `workers`, `allocs_per_round` (`null` unless built with
 //! `--features count-allocs`; `allocs_per_round` is a steady-state
 //! measurement — the delta between a long and a short run divided by the
-//! extra rounds, so setup/teardown allocations cancel).
+//! extra rounds, so setup/teardown allocations cancel), and `round_ns`
+//! (`null` for `compress.*` cases): the per-round latency distribution
+//! of the timed run — `count`, `p50`, `p90`, `p99`, `max`, `mean` in
+//! nanoseconds, read from a private telemetry registry layered onto the
+//! facade for the timed run only. Warmup and alloc-counting runs stay
+//! telemetry-disabled, so the zero-allocation path is measured exactly
+//! as it ships; v2 is what lets CI gate on tail (p99) regressions, not
+//! just mean throughput.
 
 use crate::algo::AlgoSpec;
 use crate::compress::{self, Compressed, Compressor};
@@ -33,6 +40,7 @@ use crate::coordinator::{auto_threads, run_protocol_par, RunConfig};
 use crate::exp::{Objective, Problem};
 use crate::metrics::History;
 use crate::oracle::{GradOracle, QuadraticOracle};
+use crate::telemetry;
 use crate::util::alloc::measured_allocation_count;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -41,6 +49,30 @@ use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Per-round latency distribution of a timed run (nanoseconds), read
+/// from the `coordinator.round.ns` histogram of a case-private registry.
+struct RoundSummary {
+    count: u64,
+    p50: u64,
+    p90: u64,
+    p99: u64,
+    max: u64,
+    mean: f64,
+}
+
+impl RoundSummary {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".into(), Json::Num(self.count as f64));
+        m.insert("p50".into(), Json::Num(self.p50 as f64));
+        m.insert("p90".into(), Json::Num(self.p90 as f64));
+        m.insert("p99".into(), Json::Num(self.p99 as f64));
+        m.insert("max".into(), Json::Num(self.max as f64));
+        m.insert("mean".into(), Json::Num(self.mean));
+        Json::Obj(m)
+    }
+}
 
 /// One emitted bench case.
 struct Case {
@@ -52,6 +84,7 @@ struct Case {
     d: usize,
     workers: usize,
     allocs_per_round: Option<f64>,
+    round_ns: Option<RoundSummary>,
 }
 
 impl Case {
@@ -77,8 +110,48 @@ impl Case {
                 None => Json::Null,
             },
         );
+        m.insert(
+            "round_ns".into(),
+            match &self.round_ns {
+                Some(r) => r.to_json(),
+                None => Json::Null,
+            },
+        );
         Json::Obj(m)
     }
+}
+
+/// Run `f` (the timed run, and only the timed run) with telemetry
+/// enabled and a fresh private registry layered onto the facade, then
+/// summarize the `coordinator.round.ns` histogram it recorded. The
+/// warmup and alloc-counting runs never pass through here: they run
+/// telemetry-disabled, so `allocs_per_round` keeps measuring the
+/// zero-allocation path exactly as it ships.
+fn with_round_stats<T>(f: impl FnOnce() -> T) -> (T, Option<RoundSummary>) {
+    let reg = Arc::new(telemetry::Registry::new());
+    telemetry::push_layer(Arc::new(telemetry::RegistryRecorder::new(reg.clone())));
+    let was_enabled = telemetry::is_enabled();
+    telemetry::enable();
+    let out = f();
+    if !was_enabled {
+        telemetry::disable();
+    }
+    telemetry::pop_layer();
+    let summary = reg
+        .snapshot()
+        .histograms
+        .into_iter()
+        .find(|(k, _)| k == telemetry::keys::ROUND_NS)
+        .map(|(_, h)| RoundSummary {
+            count: h.count,
+            p50: h.quantile(0.50),
+            p90: h.quantile(0.90),
+            p99: h.quantile(0.99),
+            max: h.max,
+            mean: h.mean(),
+        })
+        .filter(|s| s.count > 0);
+    (out, summary)
 }
 
 /// Wrapper forcing the legacy allocating compression path: only
@@ -163,9 +236,10 @@ fn round_case(
     rounds: usize,
     threads: usize,
 ) -> Case {
-    // Warmup run (allocator, page cache), then the timed run.
+    // Warmup run (allocator, page cache), then the timed run — the only
+    // run that records per-round latency (see `with_round_stats`).
     let _ = ef21_quad_run(n, d, make_c(), rounds.min(4), threads);
-    let (secs, h) = ef21_quad_run(n, d, make_c(), rounds, threads);
+    let ((secs, h), round_ns) = with_round_stats(|| ef21_quad_run(n, d, make_c(), rounds, threads));
     let uplink = (h.records.last().map(|r| r.bits_per_client).unwrap_or(0.0) * n as f64) as u64;
     // Fixed short/long pair (independent of the timing round count):
     // only the delta per extra round matters.
@@ -185,6 +259,7 @@ fn round_case(
         d,
         workers: n,
         allocs_per_round: apr,
+        round_ns,
     }
 }
 
@@ -214,6 +289,7 @@ fn compress_case(name: &str, c: &dyn Compressor, d: usize) -> Case {
         d,
         workers: 1,
         allocs_per_round: None,
+        round_ns: None, // per-call latency, not a round loop
     }
 }
 
@@ -239,9 +315,11 @@ fn pp_case(name: &str, participation: Option<f64>, rounds: usize) -> Case {
         cfg = cfg.with_sched(sched);
     }
     cfg.divergence_cap = 1e60;
-    let t0 = Instant::now();
-    let h = run_protocol_par(m, w, &cfg, 1);
-    let wall = t0.elapsed().as_nanos() as u64;
+    let ((wall, h), round_ns) = with_round_stats(|| {
+        let t0 = Instant::now();
+        let h = run_protocol_par(m, w, &cfg, 1);
+        (t0.elapsed().as_nanos() as u64, h)
+    });
     let uplink = (h.records.last().map(|r| r.bits_per_client).unwrap_or(0.0) * 20.0) as u64;
     Case {
         name: name.to_string(),
@@ -252,6 +330,7 @@ fn pp_case(name: &str, participation: Option<f64>, rounds: usize) -> Case {
         d,
         workers: 20,
         allocs_per_round: None,
+        round_ns,
     }
 }
 
@@ -318,7 +397,7 @@ pub fn main(args: &Args) -> Result<()> {
 
     // Assemble and write the report.
     let mut top = BTreeMap::new();
-    top.insert("schema".into(), Json::Str("ef21.bench.round/v1".into()));
+    top.insert("schema".into(), Json::Str("ef21.bench.round/v2".into()));
     top.insert("isa".into(), Json::Str(simd::isa().name().into()));
     top.insert("threads_auto".into(), Json::Num(auto as f64));
     top.insert(
@@ -335,19 +414,27 @@ pub fn main(args: &Args) -> Result<()> {
         .with_context(|| format!("writing {json_path}"))?;
 
     // Console summary (the JSON is the artifact; this is for humans).
-    println!("{:<38} {:>10} {:>14} {:>14} {:>9}", "case", "rounds", "wall", "rounds/s", "allocs/r");
+    println!(
+        "{:<38} {:>10} {:>14} {:>14} {:>12} {:>9}",
+        "case", "rounds", "wall", "rounds/s", "p99", "allocs/r"
+    );
     for c in &cases {
         let rps = if c.wall_ns == 0 { 0.0 } else { c.rounds as f64 / (c.wall_ns as f64 / 1e9) };
         let apr = match c.allocs_per_round {
             Some(a) => format!("{a:.1}"),
             None => "-".to_string(),
         };
+        let p99 = match &c.round_ns {
+            Some(r) => format!("{:.2} ms", r.p99 as f64 / 1e6),
+            None => "-".to_string(),
+        };
         println!(
-            "{:<38} {:>10} {:>11.2} ms {:>14.1} {:>10}",
+            "{:<38} {:>10} {:>11.2} ms {:>14.1} {:>12} {:>10}",
             c.name,
             c.rounds,
             c.wall_ns as f64 / 1e6,
             rps,
+            p99,
             apr
         );
     }

@@ -147,14 +147,18 @@ impl Compressor for Instrumented {
 
     fn compress(&self, v: &[f64], rng: &mut Rng) -> Compressed {
         let t0 = crate::telemetry::maybe_now();
+        let sp = crate::telemetry::span("compress.apply");
         let out = self.inner.compress(v, rng);
+        sp.end();
         self.record(t0, &out, v.len());
         out
     }
 
     fn compress_into(&self, v: &[f64], rng: &mut Rng, out: &mut Compressed) {
         let t0 = crate::telemetry::maybe_now();
+        let sp = crate::telemetry::span("compress.apply");
         self.inner.compress_into(v, rng, out);
+        sp.end();
         self.record(t0, out, v.len());
     }
 

@@ -99,13 +99,16 @@ fn worker_loop(
     mut worker: Box<dyn WorkerNode>,
     conn: &mut dyn Conn,
     up_blocks: Option<Arc<BlockLayout>>,
+    w: usize,
 ) -> Result<()> {
     let mut first = true;
     let mut cached: Option<Vec<f64>> = None;
     let mut rx_buf = Vec::new();
     let mut tx_buf = Vec::new();
     loop {
+        let recv_span = telemetry::span_arg("dist.worker.recv", "w", w as u64);
         conn.recv_into(&mut rx_buf)?;
+        recv_span.end();
         match decode(&rx_buf)? {
             Frame::Model(x) => cached = Some(x),
             Frame::ModelDelta(patches) => {
@@ -127,12 +130,14 @@ fn worker_loop(
             Frame::Up { .. } | Frame::UpBlock { .. } => bail!("worker received an uplink frame"),
         }
         let x = cached.as_ref().expect("model cached after broadcast");
+        let round_span = telemetry::span_arg("dist.worker.round", "w", w as u64);
         let msg = if first {
             first = false;
             worker.init(x)
         } else {
             worker.round(x)
         };
+        round_span.end();
         let loss = worker.last_loss();
         let splittable = match (&up_blocks, &msg) {
             // Only the standard sparse encoding has a per-entry-additive
@@ -141,6 +146,7 @@ fn worker_loop(
             (Some(_), WireMsg::Sparse(c)) => c.bits == c.sparse.standard_bits(),
             _ => false,
         };
+        let send_span = telemetry::span_arg("dist.worker.send", "w", w as u64);
         if splittable {
             let layout = up_blocks.as_ref().expect("splittable implies layout");
             let WireMsg::Sparse(c) = &msg else { unreachable!() };
@@ -152,6 +158,7 @@ fn worker_loop(
             encode_into(&Frame::Up { msg, loss }, &mut tx_buf);
             conn.send(&tx_buf)?;
         }
+        send_span.end();
     }
 }
 
@@ -217,16 +224,26 @@ fn recv_worker_msg(c: &mut dyn Conn, raw: &mut Vec<u8>) -> Result<(WireMsg, f64,
     }
 }
 
+/// Collect every worker's uplink in worker order. `round_start` (the
+/// round's `maybe_now` timestamp; `None` during init or when telemetry
+/// is off) feeds each worker's arrival latency — round start to that
+/// worker's uplink fully received — into its
+/// `coordinator.worker.round.ns.w<i>` histogram, so master-side
+/// stragglers dominate the per-worker tails.
 fn gather(
     conns: &mut [Box<dyn Conn>],
     d: usize,
     rx_buf: &mut Vec<u8>,
+    round_start: Option<std::time::Instant>,
 ) -> Result<(Vec<WireMsg>, Vec<f64>, u64)> {
     let mut msgs = Vec::with_capacity(conns.len());
     let mut losses = Vec::with_capacity(conns.len());
     let mut bytes = 0u64;
-    for c in conns.iter_mut() {
+    for (w, c) in conns.iter_mut().enumerate() {
+        let recv_span = telemetry::span_arg("dist.recv", "w", w as u64);
         let (msg, loss, b) = recv_worker_msg(c.as_mut(), rx_buf)?;
+        recv_span.end();
+        telemetry::record_worker_round_ns(w, round_start);
         // Indices are sorted (decode + reassembly enforce it), so one
         // upper-bound check keeps a malformed peer from panicking the
         // master's absorb with an out-of-range coordinate.
@@ -403,7 +420,7 @@ where
     let blocks = up_blocks.clone();
     let mk = make_worker.clone();
     let run_worker: RunWorker =
-        Arc::new(move |i, mut conn| worker_loop(mk(i), &mut *conn, blocks.clone()));
+        Arc::new(move |i, mut conn| worker_loop(mk(i), &mut *conn, blocks.clone(), i));
     let (mut master_conns, handles) = wire_transport(kind, n_workers, run_worker, false)?;
 
     let n = n_workers as f64;
@@ -456,7 +473,7 @@ where
     let x0 = master.x().to_vec();
     let dim = x0.len();
     down_bytes += send_model(&mut master_conns, &mut downlink, &x0, &mut bcast_buf)?;
-    let (msgs, _losses, fb) = gather(&mut master_conns, dim, &mut rx_buf)?;
+    let (msgs, _losses, fb) = gather(&mut master_conns, dim, &mut rx_buf, None)?;
     frame_bytes += fb;
     let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
     bits_cum += init_bits;
@@ -466,17 +483,25 @@ where
 
     for t in 0..rounds {
         let t_round = telemetry::maybe_now();
+        let round_span = telemetry::span_arg("coordinator.round", "round", t as u64);
         let x = master.begin_round();
+        let bcast_span = telemetry::span("round.broadcast");
         down_bytes += send_model(&mut master_conns, &mut downlink, &x, &mut bcast_buf)?;
-        let (msgs, losses, fb) = gather(&mut master_conns, dim, &mut rx_buf)?;
+        bcast_span.end();
+        let gather_span = telemetry::span("round.gather");
+        let (msgs, losses, fb) = gather(&mut master_conns, dim, &mut rx_buf, t_round)?;
+        gather_span.end();
         frame_bytes += fb;
         let round_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
         bits_cum += round_bits;
         telemetry::counter(keys::UPLINK_BITS).incr(round_bits);
         telemetry::counter(keys::UPLINK_FRAME_BYTES).incr(fb);
+        let absorb_span = telemetry::span("round.absorb");
         master.absorb(&msgs);
+        absorb_span.end();
         telemetry::counter(keys::ROUNDS).incr(1);
         telemetry::record_elapsed_ns(keys::ROUND_NS, t_round);
+        round_span.end();
         let loss = losses.iter().sum::<f64>() / n;
         history.records.push(RoundRecord {
             round: t,
@@ -642,7 +667,7 @@ where
     telemetry::counter(keys::DOWNLINK_FRAME_BYTES).incr(sent0);
     down_bytes += sent0;
     let mut rx_buf = Vec::new();
-    let (msgs, losses, fb) = gather(&mut master_conns, d, &mut rx_buf)?;
+    let (msgs, losses, fb) = gather(&mut master_conns, d, &mut rx_buf, None)?;
     last_loss.copy_from_slice(&losses);
     frame_bytes += fb;
     let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
@@ -656,19 +681,23 @@ where
 
     for t in 0..rounds {
         let t_round = telemetry::maybe_now();
+        let round_span = telemetry::span_arg("coordinator.round", "round", t as u64);
         let x = master.begin_round();
         let plan = sched.round_plan(t);
 
         // StateSync pushes precede this round's broadcast.
         for &w in &plan.resync {
+            let sp = telemetry::span_arg("sched.resync", "w", w as u64);
             let tr = tracker.as_ref().expect("rejoin scheduled without a tracker");
             let frame = encode(&Frame::StateSync(tr.mirror(w).to_vec()));
             master_conns[w].send(&frame)?;
             down_bytes += frame.len() as u64;
             crate::sched::record_resync_bits(d);
+            sp.end();
         }
 
         // Dense model to this round's participants only.
+        let bcast_span = telemetry::span("round.broadcast");
         telemetry::counter(keys::DOWNLINK_BITS).incr(downlink.plan(&x).bits);
         let bytes = encode(&Frame::Model(x));
         let mut sent = 0u64;
@@ -680,9 +709,13 @@ where
         }
         telemetry::counter(keys::DOWNLINK_FRAME_BYTES).incr(sent);
         down_bytes += sent;
+        bcast_span.end();
 
         // Gather participants in worker order; `dup`ed frames arrive
-        // twice and must match byte for byte.
+        // twice and must match byte for byte. Per-worker round latency is
+        // measured master-side, round start → uplink fully received, so
+        // straggler sleep injected by the fault plan lands in the tail.
+        let gather_span = telemetry::span("round.gather");
         let mut msgs: Vec<WireMsg> = Vec::with_capacity(n_workers);
         let mut round_bits = 0u64;
         let mut fb = 0u64;
@@ -691,6 +724,7 @@ where
                 msgs.push(absent_template.clone());
                 continue;
             }
+            let recv_span = telemetry::span_arg("dist.recv", "w", w as u64);
             let raw = conn.recv()?;
             fb += raw.len() as u64;
             let (msg, loss) = match decode(&raw)? {
@@ -702,6 +736,8 @@ where
                 fb += raw2.len() as u64;
                 ensure!(raw2 == raw, "duplicated uplink frame mismatch from worker {w}");
             }
+            recv_span.end();
+            telemetry::record_worker_round_ns(w, t_round);
             if let Some(&last) = msg.payload().sparse.idx.last() {
                 ensure!(
                     (last as usize) < d,
@@ -712,17 +748,21 @@ where
             round_bits += msg.bits();
             msgs.push(msg);
         }
+        gather_span.end();
         bits_cum += round_bits;
         frame_bytes += fb;
         telemetry::counter(keys::UPLINK_BITS).incr(round_bits);
         telemetry::counter(keys::UPLINK_FRAME_BYTES).incr(fb);
         plan.record_telemetry();
+        let absorb_span = telemetry::span("round.absorb");
         if let Some(tr) = tracker.as_mut() {
             tr.absorb_round(&msgs);
         }
         master.absorb(&msgs);
+        absorb_span.end();
         telemetry::counter(keys::ROUNDS).incr(1);
         telemetry::record_elapsed_ns(keys::ROUND_NS, t_round);
+        round_span.end();
         let loss = last_loss.iter().sum::<f64>() / n;
         history.records.push(RoundRecord {
             round: t,

@@ -143,26 +143,40 @@ fn pool_loop(
             Cmd::Round(x, mut bufs) => {
                 // Per-thread round latency; ROUND_NS stays coordinator-side.
                 let t0 = telemetry::maybe_now();
+                let chunk_span = telemetry::span_arg("pool.chunk", "start", start as u64);
                 ensure_msg_slots(&mut bufs.msgs, workers.len());
-                for (w, m) in workers.iter_mut().zip(bufs.msgs.iter_mut()) {
+                for (i, (w, m)) in workers.iter_mut().zip(bufs.msgs.iter_mut()).enumerate() {
+                    let tw = telemetry::maybe_now();
+                    let sp = telemetry::span_arg("worker.round", "w", (start + i) as u64);
                     w.round_into(&x[..], m);
+                    sp.end();
+                    telemetry::record_worker_round_ns(start + i, tw);
                 }
                 fill_losses(&workers, &mut bufs.losses);
+                chunk_span.end();
                 telemetry::record_elapsed_ns(keys::POOL_CHUNK_NS, t0);
                 Reply::Msgs(bufs)
             }
             Cmd::RoundSubset(x, active, mut bufs) => {
                 let t0 = telemetry::maybe_now();
+                let chunk_span = telemetry::span_arg("pool.chunk", "start", start as u64);
                 let mask = &active[start..start + workers.len()];
                 ensure_msg_slots(&mut bufs.msgs, workers.len());
-                for ((w, &a), m) in workers.iter_mut().zip(mask).zip(bufs.msgs.iter_mut()) {
+                for (i, ((w, &a), m)) in
+                    workers.iter_mut().zip(mask).zip(bufs.msgs.iter_mut()).enumerate()
+                {
                     if a {
+                        let tw = telemetry::maybe_now();
+                        let sp = telemetry::span_arg("worker.round", "w", (start + i) as u64);
                         w.round_into(&x[..], m);
+                        sp.end();
+                        telemetry::record_worker_round_ns(start + i, tw);
                     } else {
                         *m = w.absent_msg();
                     }
                 }
                 fill_losses(&workers, &mut bufs.losses);
+                chunk_span.end();
                 telemetry::record_elapsed_ns(keys::POOL_CHUNK_NS, t0);
                 Reply::Msgs(bufs)
             }

@@ -188,8 +188,12 @@ impl WorkerPool for SeqPool {
 
     fn round(&mut self, x: &Arc<Vec<f64>>, msgs: &mut Vec<WireMsg>) -> f64 {
         ensure_msg_slots(msgs, self.workers.len());
-        for (w, m) in self.workers.iter_mut().zip(msgs.iter_mut()) {
+        for (i, (w, m)) in self.workers.iter_mut().zip(msgs.iter_mut()).enumerate() {
+            let t0 = telemetry::maybe_now();
+            let sp = telemetry::span_arg("worker.round", "w", i as u64);
             w.round_into(&x[..], m);
+            sp.end();
+            telemetry::record_worker_round_ns(i, t0);
         }
         self.workers.iter().map(|w| w.last_loss()).sum()
     }
@@ -206,9 +210,17 @@ impl WorkerPool for SeqPool {
     fn round_subset(&mut self, x: &Arc<Vec<f64>>, active: &[bool], msgs: &mut Vec<WireMsg>) -> f64 {
         debug_assert_eq!(active.len(), self.workers.len());
         ensure_msg_slots(msgs, self.workers.len());
-        for ((w, &a), m) in self.workers.iter_mut().zip(active).zip(msgs.iter_mut()) {
+        for (i, ((w, &a), m)) in
+            self.workers.iter_mut().zip(active).zip(msgs.iter_mut()).enumerate()
+        {
             if a {
+                let t0 = telemetry::maybe_now();
+                let sp = telemetry::span_arg("worker.round", "w", i as u64);
                 w.round_into(&x[..], m);
+                sp.end();
+                // Absent workers do no work; only participants feed the
+                // per-worker latency histograms.
+                telemetry::record_worker_round_ns(i, t0);
             } else {
                 *m = w.absent_msg();
             }
@@ -248,7 +260,13 @@ impl WorkerPool for SeqPool {
 /// `coordinator.rounds` / `coordinator.round.ns` /
 /// `coordinator.divergence.aborts`. These increments all happen on the
 /// coordinator thread, so the deltas are identical whichever pool
-/// executes the workers.
+/// executes the workers. The pools additionally time each worker's step
+/// into `coordinator.worker.round.ns.w<i>` (the straggler report's
+/// input), and tracing spans (`coordinator.round` with nested
+/// `round.broadcast`/`round.workers`/`round.absorb`, plus per-worker
+/// `worker.round`) bracket the same regions when `--telemetry trace:` is
+/// active. Instrumentation never touches the math: trajectories are
+/// bit-identical with telemetry on or off.
 pub(crate) fn drive<P: WorkerPool>(
     mut master: Box<dyn MasterNode>,
     mut pool: P,
@@ -318,7 +336,14 @@ pub(crate) fn drive<P: WorkerPool>(
     master.init_absorb(&msgs);
 
     for t in 0..cfg.rounds {
+        // The tracing spans mirror the histogram timers: the
+        // "coordinator.round" span brackets exactly the region timed into
+        // `coordinator.round.ns`, with broadcast/workers/absorb phase
+        // spans nested inside it (observe is timed separately — the round
+        // histogram has never included it).
         let t_round = telemetry::maybe_now();
+        let round_span = telemetry::span_arg("coordinator.round", "round", t as u64);
+        let bcast_span = telemetry::span("round.broadcast");
         match Arc::get_mut(&mut x) {
             Some(buf) => master.begin_round_into(buf),
             // A pool kept a clone alive (never the in-tree pools in
@@ -327,6 +352,8 @@ pub(crate) fn drive<P: WorkerPool>(
         }
         let down = downlink.plan(&x).bits;
         telemetry::counter(keys::DOWNLINK_BITS).incr(down);
+        bcast_span.end();
+        let workers_span = telemetry::span("round.workers");
         let (loss_sum, round_bits) = match sched {
             None => {
                 let loss_sum = pool.round(&x, &mut msgs);
@@ -342,9 +369,11 @@ pub(crate) fn drive<P: WorkerPool>(
                     pool.crash(w);
                 }
                 for &w in &plan.resync {
+                    let sp = telemetry::span_arg("sched.resync", "w", w as u64);
                     let tr = tracker.as_ref().expect("rejoin scheduled without a tracker");
                     pool.resync(w, tr.mirror(w));
                     crate::sched::record_resync_bits(d);
+                    sp.end();
                 }
                 let loss_sum = pool.round_subset(&x, &plan.active, &mut msgs);
                 // Only participants' messages travel; the synthesized
@@ -362,18 +391,24 @@ pub(crate) fn drive<P: WorkerPool>(
                 (loss_sum, bits)
             }
         };
+        workers_span.end();
         bits_cum += round_bits;
         telemetry::counter(keys::UPLINK_BITS).incr(round_bits);
+        let absorb_span = telemetry::span("round.absorb");
         master.absorb(&msgs);
+        absorb_span.end();
         telemetry::counter(keys::ROUNDS).incr(1);
         telemetry::record_elapsed_ns(keys::ROUND_NS, t_round);
+        round_span.end();
 
         let record_now = t % cfg.record_every == 0 || t + 1 == cfg.rounds;
         // Cheap every-round divergence check on the cached worker losses.
         let mean_loss = loss_sum / n;
         let diverged = !mean_loss.is_finite() || mean_loss.abs() > cfg.divergence_cap;
         if record_now || diverged || cfg.grad_tol.is_some() {
+            let observe_span = telemetry::span("round.observe");
             let (loss, grad_sq, gt, dcgd) = pool.observe();
+            observe_span.end();
             if record_now || diverged {
                 history.records.push(RoundRecord {
                     round: t,

@@ -40,6 +40,12 @@ fn dispatch(args: &Args) -> Result<()> {
     if let Some(path) = guard.jsonl_path() {
         eprintln!("telemetry: writing jsonl snapshots to {}", path.display());
     }
+    if let Some(path) = guard.trace_path() {
+        eprintln!(
+            "telemetry: tracing round phases to {} (open in Perfetto / chrome://tracing)",
+            path.display()
+        );
+    }
 
     let result = match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(args),
@@ -64,7 +70,12 @@ USAGE:
   ef21 run  [--algo A] [--k K] [--dataset D] [--workers N] [--gamma-mult M]
             [--rounds T] [--objective logreg|lstsq] [--csv FILE]
             [--transport local|tcp]
-  (all commands) [--telemetry off|jsonl:<path>|tcp:<port>[,...]]
+  (all commands) [--telemetry off|jsonl:<path>|tcp:<port>|trace:<path>[,...]]
+                                      (jsonl/tcp sinks take an optional
+                                       @<prefix> key filter, e.g.
+                                       jsonl:w.jsonl@coordinator.worker;
+                                       trace: writes chrome://tracing
+                                       JSON — open in Perfetto)
   (sim run + sweep exps)
                  [--threads n|auto]   (auto = all cores; 1 = sequential;
                                        results are bit-identical either way;
@@ -186,6 +197,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(csv) = args.get_str("csv") {
         history.write_csv(std::path::Path::new(csv))?;
         println!("wrote {csv}");
+    }
+    // Tail diagnosis: when telemetry is on, name the slowest workers
+    // (per-worker p50/p99/max round latency) next to the scheduler's
+    // deadline counters.
+    if ef21::telemetry::is_enabled() {
+        if let Some(report) = ef21::telemetry::snapshot().render_straggler_report(5) {
+            eprint!("{report}");
+        }
     }
     Ok(())
 }

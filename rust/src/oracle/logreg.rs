@@ -118,6 +118,7 @@ impl GradOracle for LogRegOracle {
     fn loss_grad_into(&mut self, x: &[f64], grad: &mut Vec<f64>) -> f64 {
         assert_eq!(x.len(), self.d);
         let t0 = crate::telemetry::maybe_now();
+        let _sp = crate::telemetry::span("oracle.grad");
         let inv_n = 1.0 / self.n as f64;
         let mut loss = 0.0f64;
         grad.clear();

@@ -1,50 +1,76 @@
 //! Metric handles and their lock-free atomic storage cells.
 //!
-//! A handle is a cheap, cloneable view onto a storage cell owned by a
+//! A handle is a cheap, cloneable view onto storage owned by a
 //! [`crate::telemetry::Registry`]. The noop variant (`Counter::noop()` etc.)
-//! carries no cell at all, so recording through it is a single branch on a
-//! `None` — this is what makes disabled instrumentation cost ~1ns.
+//! carries no cell at all, so recording through it is a single branch —
+//! this is what makes disabled instrumentation cost ~1ns. A fanout
+//! variant (built by [`Counter::fanout`] etc., used by
+//! [`crate::telemetry::FanoutRecorder`]) carries several child handles
+//! and forwards each record to all of them.
 //!
 //! Storage is plain atomics (no locks anywhere on the record path):
 //!   * counters — `AtomicU64`, relaxed `fetch_add`;
 //!   * gauges   — `AtomicU64` holding `f64::to_bits`, relaxed `store`;
-//!   * histograms — 64 fixed power-of-two buckets (`bucket i` covers
-//!     `[2^i, 2^(i+1))`, bucket 0 also absorbs 0), plus sum and count.
+//!   * histograms — fixed log-linear sub-buckets (HdrHistogram-style;
+//!     see [`bucket_index`]) plus sum, count, and an exact running max.
 //!     Values are `u64` — by convention nanoseconds for `*.ns` keys.
+//!
+//! # Sub-bucket layout
+//!
+//! Each power-of-two octave `[2^o, 2^(o+1))` is split into
+//! [`SUB_BUCKETS`] = 16 equal-width linear sub-buckets, so a bucket's
+//! width is at most `lower/16` and the midpoint quantile estimate in
+//! [`crate::telemetry::HistogramSnapshot::quantile`] has relative error
+//! ≤ ~6.25% (values below 32 get exact unit-width buckets). The previous
+//! layout was one bucket per octave — up to 2× quantile error.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-/// Number of fixed log2 histogram buckets (covers the full u64 range).
-pub const HISTOGRAM_BUCKETS: usize = 64;
+/// Linear sub-buckets per power-of-two octave.
+pub const SUB_BUCKETS: usize = 16;
 
-/// Bucket index for a recorded value: `floor(log2(v))`, with 0 mapping to
-/// bucket 0. Bucket `i` therefore covers `[2^i, 2^(i+1) - 1]` (bucket 0
-/// covers `{0, 1}`).
+/// Total fixed histogram buckets covering the full `u64` range:
+/// unit-width buckets for `v < 32` (indices 0..=31), then 16 sub-buckets
+/// for each octave `[2^o, 2^(o+1))`, `o` in 5..=63.
+pub const HISTOGRAM_BUCKETS: usize = 32 + 59 * SUB_BUCKETS;
+
+/// Bucket index for a recorded value (log-linear, HdrHistogram-style).
+///
+/// * `v < 32`: exact — index `v` (the two lowest "octave groups" are
+///   unit-width, which also keeps the formula continuous at 32).
+/// * `v >= 32`: with octave `o = floor(log2 v)` and `shift = o - 4`,
+///   index = `(o-4)*16 + (v >> shift)` where `v >> shift` is in 16..=31
+///   — the value's top five bits select the linear sub-bucket.
+///
+/// Bucket width is `2^(o-4)`, at most 1/16 of the bucket's lower bound.
 #[inline]
 pub fn bucket_index(v: u64) -> usize {
-    if v == 0 {
-        0
+    if v < 32 {
+        v as usize
     } else {
-        63 - v.leading_zeros() as usize
-    }
-}
-
-/// Inclusive upper bound of bucket `i` (`u64::MAX` for the last bucket).
-pub fn bucket_upper(i: usize) -> u64 {
-    if i >= 63 {
-        u64::MAX
-    } else {
-        (2u64 << i) - 1
+        let octave = 63 - v.leading_zeros() as usize; // >= 5 here
+        let shift = octave - 4;
+        (shift * SUB_BUCKETS) + (v >> shift) as usize
     }
 }
 
 /// Inclusive lower bound of bucket `i`.
 pub fn bucket_lower(i: usize) -> u64 {
-    if i == 0 {
-        0
+    if i < 32 {
+        i as u64
     } else {
-        1u64 << i
+        let shift = i / SUB_BUCKETS - 1;
+        ((i - shift * SUB_BUCKETS) as u64) << shift
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (`u64::MAX` for the last bucket).
+pub fn bucket_upper(i: usize) -> u64 {
+    if i + 1 >= HISTOGRAM_BUCKETS {
+        u64::MAX
+    } else {
+        bucket_lower(i + 1) - 1
     }
 }
 
@@ -78,12 +104,12 @@ impl GaugeCell {
     }
 }
 
-/// Storage cell for a fixed-bucket log-scale histogram.
-#[derive(Debug)]
+/// Storage cell for a fixed-bucket log-linear histogram.
 pub struct HistogramCell {
     counts: [AtomicU64; HISTOGRAM_BUCKETS],
     sum: AtomicU64,
     count: AtomicU64,
+    max: AtomicU64,
 }
 
 impl HistogramCell {
@@ -92,6 +118,7 @@ impl HistogramCell {
             counts: std::array::from_fn(|_| AtomicU64::new(0)),
             sum: AtomicU64::new(0),
             count: AtomicU64::new(0),
+            max: AtomicU64::new(0),
         }
     }
 
@@ -100,6 +127,7 @@ impl HistogramCell {
         self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
@@ -108,6 +136,11 @@ impl HistogramCell {
 
     pub fn sum(&self) -> u64 {
         self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Exact largest recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
     }
 
     pub fn bucket_counts(&self) -> Vec<u64> {
@@ -121,93 +154,168 @@ impl Default for HistogramCell {
     }
 }
 
-/// Handle to a counter (None = noop).
+impl std::fmt::Debug for HistogramCell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HistogramCell")
+            .field("count", &self.count())
+            .field("sum", &self.sum())
+            .field("max", &self.max())
+            .finish()
+    }
+}
+
+/// The three handle shapes shared by every metric kind: no storage,
+/// one storage cell, or a fanout over child handles (recorder layering).
 #[derive(Clone, Debug, Default)]
-pub struct Counter(Option<Arc<CounterCell>>);
+enum Repr<C> {
+    #[default]
+    Noop,
+    Cell(Arc<C>),
+    Fanout(Arc<[Handle<C>]>),
+}
+
+#[derive(Clone, Debug, Default)]
+struct Handle<C>(Repr<C>);
+
+impl<C> Handle<C> {
+    fn fanout(children: Vec<Handle<C>>) -> Handle<C> {
+        let mut live: Vec<Handle<C>> =
+            children.into_iter().filter(|c| !matches!(c.0, Repr::Noop)).collect();
+        match live.len() {
+            0 => Handle(Repr::Noop),
+            1 => live.pop().expect("len checked"),
+            _ => Handle(Repr::Fanout(live.into())),
+        }
+    }
+
+    #[inline]
+    fn each(&self, f: &mut impl FnMut(&C)) {
+        match &self.0 {
+            Repr::Noop => {}
+            Repr::Cell(c) => f(c),
+            Repr::Fanout(children) => {
+                for c in children.iter() {
+                    c.each(f);
+                }
+            }
+        }
+    }
+
+    /// The first live cell in issue order (the primary target — for a
+    /// registry-then-layers fanout that is the global registry's cell).
+    fn primary(&self) -> Option<&Arc<C>> {
+        match &self.0 {
+            Repr::Noop => None,
+            Repr::Cell(c) => Some(c),
+            Repr::Fanout(children) => children.iter().find_map(|c| c.primary()),
+        }
+    }
+
+    fn is_noop(&self) -> bool {
+        matches!(self.0, Repr::Noop)
+    }
+}
+
+/// Handle to a counter (noop, single-cell, or fanout).
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Handle<CounterCell>);
 
 impl Counter {
     pub fn noop() -> Counter {
-        Counter(None)
+        Counter(Handle(Repr::Noop))
     }
 
     pub(crate) fn from_cell(cell: Arc<CounterCell>) -> Counter {
-        Counter(Some(cell))
+        Counter(Handle(Repr::Cell(cell)))
+    }
+
+    /// Combine handles into one that records to every live child
+    /// (noop children are dropped; 0 live children collapse to noop).
+    pub fn fanout(children: Vec<Counter>) -> Counter {
+        Counter(Handle::fanout(children.into_iter().map(|c| c.0).collect()))
     }
 
     #[inline]
     pub fn incr(&self, n: u64) {
-        if let Some(c) = &self.0 {
-            c.incr(n);
-        }
+        self.0.each(&mut |c| c.incr(n));
     }
 
-    /// Current value (0 for a noop handle).
+    /// Current value (0 for a noop handle; the first live target's value
+    /// for a fanout handle).
     pub fn get(&self) -> u64 {
-        self.0.as_ref().map(|c| c.get()).unwrap_or(0)
+        self.0.primary().map(|c| c.get()).unwrap_or(0)
     }
 
     pub fn is_noop(&self) -> bool {
-        self.0.is_none()
+        self.0.is_noop()
     }
 }
 
-/// Handle to a gauge (None = noop).
+/// Handle to a gauge (noop, single-cell, or fanout).
 #[derive(Clone, Debug, Default)]
-pub struct Gauge(Option<Arc<GaugeCell>>);
+pub struct Gauge(Handle<GaugeCell>);
 
 impl Gauge {
     pub fn noop() -> Gauge {
-        Gauge(None)
+        Gauge(Handle(Repr::Noop))
     }
 
     pub(crate) fn from_cell(cell: Arc<GaugeCell>) -> Gauge {
-        Gauge(Some(cell))
+        Gauge(Handle(Repr::Cell(cell)))
+    }
+
+    /// See [`Counter::fanout`].
+    pub fn fanout(children: Vec<Gauge>) -> Gauge {
+        Gauge(Handle::fanout(children.into_iter().map(|c| c.0).collect()))
     }
 
     #[inline]
     pub fn set(&self, v: f64) {
-        if let Some(g) = &self.0 {
-            g.set(v);
-        }
+        self.0.each(&mut |g| g.set(v));
     }
 
-    /// Current value (0.0 for a noop handle).
+    /// Current value (0.0 for a noop handle; first live target for
+    /// fanout).
     pub fn get(&self) -> f64 {
-        self.0.as_ref().map(|g| g.get()).unwrap_or(0.0)
+        self.0.primary().map(|g| g.get()).unwrap_or(0.0)
     }
 
     pub fn is_noop(&self) -> bool {
-        self.0.is_none()
+        self.0.is_noop()
     }
 }
 
-/// Handle to a histogram (None = noop).
+/// Handle to a histogram (noop, single-cell, or fanout).
 #[derive(Clone, Debug, Default)]
-pub struct Histogram(Option<Arc<HistogramCell>>);
+pub struct Histogram(Handle<HistogramCell>);
 
 impl Histogram {
     pub fn noop() -> Histogram {
-        Histogram(None)
+        Histogram(Handle(Repr::Noop))
     }
 
     pub(crate) fn from_cell(cell: Arc<HistogramCell>) -> Histogram {
-        Histogram(Some(cell))
+        Histogram(Handle(Repr::Cell(cell)))
+    }
+
+    /// See [`Counter::fanout`].
+    pub fn fanout(children: Vec<Histogram>) -> Histogram {
+        Histogram(Handle::fanout(children.into_iter().map(|c| c.0).collect()))
     }
 
     #[inline]
     pub fn record(&self, v: u64) {
-        if let Some(h) = &self.0 {
-            h.record(v);
-        }
+        self.0.each(&mut |h| h.record(v));
     }
 
-    /// Number of recorded samples (0 for a noop handle).
+    /// Number of recorded samples (0 for a noop handle; first live
+    /// target for fanout).
     pub fn count(&self) -> u64 {
-        self.0.as_ref().map(|h| h.count()).unwrap_or(0)
+        self.0.primary().map(|h| h.count()).unwrap_or(0)
     }
 
     pub fn is_noop(&self) -> bool {
-        self.0.is_none()
+        self.0.is_noop()
     }
 }
 
@@ -217,14 +325,20 @@ mod tests {
 
     #[test]
     fn bucket_index_boundaries() {
-        assert_eq!(bucket_index(0), 0);
-        assert_eq!(bucket_index(1), 0);
-        assert_eq!(bucket_index(2), 1);
-        assert_eq!(bucket_index(3), 1);
-        assert_eq!(bucket_index(4), 2);
-        assert_eq!(bucket_index(1023), 9);
-        assert_eq!(bucket_index(1024), 10);
-        assert_eq!(bucket_index(u64::MAX), 63);
+        // Values below 32 map exactly to their own bucket.
+        for v in 0..32u64 {
+            assert_eq!(bucket_index(v), v as usize);
+        }
+        // First sub-bucketed octave: [32, 64) in width-2 buckets.
+        assert_eq!(bucket_index(32), 32);
+        assert_eq!(bucket_index(33), 32);
+        assert_eq!(bucket_index(34), 33);
+        assert_eq!(bucket_index(63), 47);
+        assert_eq!(bucket_index(64), 48);
+        // 1023 = 0b11_1111_1111: octave 9, top-five-bits sub-bucket 31.
+        assert_eq!(bucket_index(1023), 5 * SUB_BUCKETS + 31);
+        assert_eq!(bucket_index(1024), 6 * SUB_BUCKETS + 16);
+        assert_eq!(bucket_index(u64::MAX), HISTOGRAM_BUCKETS - 1);
     }
 
     #[test]
@@ -232,13 +346,38 @@ mod tests {
         for i in 0..HISTOGRAM_BUCKETS {
             let lo = bucket_lower(i);
             let hi = bucket_upper(i);
-            assert!(lo <= hi);
+            assert!(lo <= hi, "bucket {i}");
             assert_eq!(bucket_index(lo), i);
             assert_eq!(bucket_index(hi), i);
             if i + 1 < HISTOGRAM_BUCKETS {
                 assert_eq!(hi + 1, bucket_lower(i + 1));
+            } else {
+                assert_eq!(hi, u64::MAX);
             }
         }
+    }
+
+    #[test]
+    fn bucket_width_is_within_one_sixteenth_of_lower_bound() {
+        // The documented quantile error bound: width <= lower/16 for all
+        // sub-bucketed values (exact below 32).
+        for i in 32..HISTOGRAM_BUCKETS - 1 {
+            let lo = bucket_lower(i);
+            let width = bucket_upper(i) - lo + 1;
+            assert!(width * 16 <= lo, "bucket {i}: width {width} vs lower {lo}");
+        }
+    }
+
+    #[test]
+    fn histogram_cell_tracks_exact_max() {
+        let h = HistogramCell::new();
+        assert_eq!(h.max(), 0);
+        h.record(17);
+        h.record(100_000);
+        h.record(99);
+        assert_eq!(h.max(), 100_000);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 17 + 100_000 + 99);
     }
 
     #[test]
@@ -271,5 +410,43 @@ mod tests {
         h.record(0);
         h.record(5);
         assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn fanout_records_into_every_child() {
+        let a = Arc::new(CounterCell::default());
+        let b = Arc::new(CounterCell::default());
+        let f = Counter::fanout(vec![
+            Counter::from_cell(a.clone()),
+            Counter::noop(),
+            Counter::from_cell(b.clone()),
+        ]);
+        assert!(!f.is_noop());
+        f.incr(5);
+        assert_eq!(a.get(), 5);
+        assert_eq!(b.get(), 5);
+        // get() reads the first live target.
+        assert_eq!(f.get(), 5);
+
+        let ha = Arc::new(HistogramCell::new());
+        let hb = Arc::new(HistogramCell::new());
+        let fh = Histogram::fanout(vec![
+            Histogram::from_cell(ha.clone()),
+            Histogram::from_cell(hb.clone()),
+        ]);
+        fh.record(9);
+        assert_eq!(ha.count(), 1);
+        assert_eq!(hb.count(), 1);
+    }
+
+    #[test]
+    fn fanout_collapses_noops() {
+        assert!(Counter::fanout(vec![]).is_noop());
+        assert!(Counter::fanout(vec![Counter::noop(), Counter::noop()]).is_noop());
+        // A single live child collapses to a plain cell handle.
+        let a = Arc::new(CounterCell::default());
+        let f = Counter::fanout(vec![Counter::noop(), Counter::from_cell(a.clone())]);
+        f.incr(1);
+        assert_eq!(a.get(), 1);
     }
 }

@@ -2,29 +2,52 @@
 //! object per flush period, plus a final flush on shutdown. Lines are the
 //! [`Snapshot::to_json`] object extended with a `ts_ms` wall-clock stamp,
 //! so the last line of the file is always the run's cumulative totals.
+//!
+//! [`Snapshot`]: super::Snapshot
 
 use std::io::Write as _;
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
 use anyhow::{Context, Result};
 
+use super::registry::Registry;
 use crate::util::json::Json;
 
-/// Running exporter; dropping it without [`JsonlExporter::stop`] detaches
-/// the flusher thread (it exits on the next tick after the channel closes).
+/// Running exporter. [`JsonlExporter::stop`] joins the flusher and
+/// surfaces its I/O errors; plain `Drop` also signals shutdown and joins
+/// for the final flush, but can only swallow errors — prefer `stop()`.
 pub struct JsonlExporter {
     stop_tx: mpsc::Sender<()>,
-    handle: std::thread::JoinHandle<Result<()>>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
     path: PathBuf,
 }
 
 impl JsonlExporter {
-    /// Spawn the flusher writing to `path` every `period`. Truncates any
-    /// existing file; parent directories are created.
+    /// Spawn the flusher writing the process-global snapshot to `path`
+    /// every `period`. Truncates any existing file; parent directories
+    /// are created.
     pub fn spawn(path: impl Into<PathBuf>, period: Duration) -> Result<JsonlExporter> {
-        let path = path.into();
+        Self::spawn_inner(path.into(), period, None)
+    }
+
+    /// Like [`JsonlExporter::spawn`], but snapshotting a private
+    /// [`Registry`] instead of the process-global one — the sink side of
+    /// a `@<prefix>`-filtered `--telemetry` spec.
+    pub fn spawn_with_source(
+        path: impl Into<PathBuf>,
+        period: Duration,
+        source: Arc<Registry>,
+    ) -> Result<JsonlExporter> {
+        Self::spawn_inner(path.into(), period, Some(source))
+    }
+
+    fn spawn_inner(
+        path: PathBuf,
+        period: Duration,
+        source: Option<Arc<Registry>>,
+    ) -> Result<JsonlExporter> {
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)
@@ -36,9 +59,9 @@ impl JsonlExporter {
         let (stop_tx, stop_rx) = mpsc::channel::<()>();
         let handle = std::thread::Builder::new()
             .name("ef21-telemetry-jsonl".into())
-            .spawn(move || flusher(file, period, stop_rx))
+            .spawn(move || flusher(file, period, stop_rx, source))
             .context("spawning jsonl flusher")?;
-        Ok(JsonlExporter { stop_tx, handle, path })
+        Ok(JsonlExporter { stop_tx, handle: Some(handle), path })
     }
 
     pub fn path(&self) -> &std::path::Path {
@@ -47,11 +70,24 @@ impl JsonlExporter {
 
     /// Signal shutdown, wait for the final flush, and surface any I/O
     /// error from the flusher thread.
-    pub fn stop(self) -> Result<()> {
+    pub fn stop(mut self) -> Result<()> {
         let _ = self.stop_tx.send(());
-        match self.handle.join() {
+        let handle = self.handle.take().expect("stop consumes the exporter");
+        match handle.join() {
             Ok(r) => r,
             Err(_) => anyhow::bail!("jsonl flusher thread panicked"),
+        }
+    }
+}
+
+impl Drop for JsonlExporter {
+    /// Best-effort [`JsonlExporter::stop`]: without this, dropping the
+    /// exporter would detach the flusher, and a process exiting right
+    /// after could kill it mid-write and lose the final snapshot line.
+    fn drop(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            let _ = self.stop_tx.send(());
+            let _ = handle.join();
         }
     }
 }
@@ -60,6 +96,7 @@ fn flusher(
     mut file: std::fs::File,
     period: Duration,
     stop_rx: mpsc::Receiver<()>,
+    source: Option<Arc<Registry>>,
 ) -> Result<()> {
     loop {
         let stopping = match stop_rx.recv_timeout(period) {
@@ -67,7 +104,7 @@ fn flusher(
             // Explicit stop or the exporter handle was dropped.
             Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => true,
         };
-        write_line(&mut file)?;
+        write_line(&mut file, &source)?;
         if stopping {
             file.flush().context("final jsonl flush")?;
             return Ok(());
@@ -75,8 +112,11 @@ fn flusher(
     }
 }
 
-fn write_line(file: &mut std::fs::File) -> Result<()> {
-    let snap = super::snapshot();
+fn write_line(file: &mut std::fs::File, source: &Option<Arc<Registry>>) -> Result<()> {
+    let snap = match source {
+        Some(reg) => reg.snapshot(),
+        None => super::snapshot(),
+    };
     let mut j = match snap.to_json() {
         Json::Obj(m) => m,
         _ => unreachable!("snapshot json is always an object"),
@@ -108,6 +148,33 @@ mod tests {
             assert!(j.get("ts_ms").is_some());
             assert!(j.get("counters").is_some());
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn drop_without_stop_still_flushes_the_final_snapshot() {
+        let path = std::env::temp_dir()
+            .join(format!("ef21_jsonl_drop_test_{}.jsonl", std::process::id()));
+        // A private source registry keeps this test off the global flag,
+        // and a long period guarantees no periodic tick fires: any line
+        // in the file can only come from the Drop-driven final flush.
+        let reg = Arc::new(Registry::new());
+        reg.counter("drop.test.counter").incr(42);
+        {
+            let _exp = JsonlExporter::spawn_with_source(
+                &path,
+                Duration::from_secs(3600),
+                reg.clone(),
+            )
+            .unwrap();
+        } // dropped without stop()
+        let text = std::fs::read_to_string(&path).unwrap();
+        let last = text.lines().last().expect("drop must flush a final line");
+        let j = Json::parse(last).expect("valid json line");
+        assert_eq!(
+            j.get("counters").unwrap().get("drop.test.counter").unwrap().as_f64(),
+            Some(42.0)
+        );
         std::fs::remove_file(&path).ok();
     }
 }

@@ -1,16 +1,25 @@
 //! Runtime telemetry: a lock-free metrics facade with per-layer
-//! instrumentation and pluggable exporters.
+//! instrumentation, phase-level tracing spans, and pluggable exporters.
 //!
 //! Modeled on the metrics-rs recorder/exporter split, sized for this
 //! crate (no external deps):
 //!
 //!   * [`Recorder`] issues [`Counter`]/[`Gauge`]/[`Histogram`] handles;
 //!     storage is plain atomics ([`handles`]), owned by a [`Registry`].
+//!     Histograms use log-linear sub-buckets (16 per octave) so quantile
+//!     summaries carry ≤ ~6.25% relative error.
 //!   * The process defaults to a [`NoopRecorder`]: until [`enable`] is
 //!     called, every instrumentation site costs one relaxed atomic load
-//!     plus a `None` branch (~1ns), so the hot paths of the coordinator,
+//!     plus a noop branch (~1ns), so the hot paths of the coordinator,
 //!     codec, compressors, and oracles pay nothing in ordinary runs
 //!     (`bench_telemetry` tracks this).
+//!   * Recorders compose metrics-rs style: [`push_layer`] stacks extra
+//!     [`Recorder`]s (via [`FanoutRecorder`]) behind the facade, and
+//!     [`FilterRecorder`] scopes a layer to a key prefix — this is how
+//!     a spec like `jsonl:sched.jsonl@sched.` gives one sink its own
+//!     registry fed by a slice of the key space.
+//!   * [`span`]/[`span_arg`] open phase-level tracing spans ([`trace`]);
+//!     `trace:<path>` exports them as chrome://tracing JSON (Perfetto).
 //!   * [`snapshot`] renders a sorted key→value view; exporters are a
 //!     periodic JSONL file sink ([`jsonl::JsonlExporter`]) and a
 //!     Prometheus-style plaintext TCP endpoint ([`prom::PromServer`]).
@@ -21,10 +30,11 @@
 //! codec (`codec.encode/decode.ns`), compressors
 //! (`compress.<name>.ns/.sparsity`), oracles (`oracle.grad.*`,
 //! `oracle.xla.*`), and the coordinator (`coordinator.rounds`,
-//! `coordinator.round.ns`).
+//! `coordinator.round.ns`, per-worker `coordinator.worker.round.ns.w<i>`
+//! feeding [`Snapshot::straggler_report`]).
 //!
-//! CLI wiring: `--telemetry jsonl:<path>|tcp:<port>|off` (comma-separable)
-//! through [`init_from_spec`].
+//! CLI wiring: `--telemetry jsonl:<path>[@<prefix>]|tcp:<port>[@<prefix>]|
+//! trace:<path>|off` (comma-separable) through [`init_from_spec`].
 
 pub mod handles;
 pub mod jsonl;
@@ -32,14 +42,18 @@ pub mod prom;
 pub mod recorder;
 pub mod registry;
 pub mod snapshot;
+pub mod trace;
 
 pub use handles::{Counter, Gauge, Histogram};
-pub use recorder::{NoopRecorder, Recorder, RegistryRecorder};
+pub use recorder::{
+    FanoutRecorder, FilterRecorder, NoopRecorder, Recorder, RegistryRecorder,
+};
 pub use registry::Registry;
-pub use snapshot::{HistogramSnapshot, Snapshot};
+pub use snapshot::{HistogramSnapshot, Snapshot, WorkerLatency};
+pub use trace::{span, span_arg, Span};
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, OnceLock, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -83,6 +97,14 @@ pub mod keys {
     pub const POOL_CHUNK_NS: &str = "coordinator.pool.chunk.ns";
     /// Pool width of the most recent parallel run (gauge).
     pub const POOL_THREADS: &str = "coordinator.pool.threads";
+    /// Per-worker round-latency histograms: one histogram per worker,
+    /// keyed `coordinator.worker.round.ns.w<i>` (see
+    /// [`crate::telemetry::worker_round_ns`]). The in-process engines
+    /// time worker i's gradient+compress step; the distributed master
+    /// times from round start to the arrival of worker i's uplink, so
+    /// stragglers dominate the tail. Feeds
+    /// [`crate::telemetry::Snapshot::straggler_report`].
+    pub const WORKER_ROUND_NS_PREFIX: &str = "coordinator.worker.round.ns.w";
     /// Cumulative participant-rounds under a participation schedule
     /// (each scheduled round adds its participant count; with full
     /// participation over R rounds the delta is `R * n`).
@@ -102,6 +124,12 @@ pub mod keys {
 }
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Extra recorders stacked by [`push_layer`], and the cached composition
+/// (global registry + stack) the facade consults. `None` composition =
+/// no layers = the direct global-registry fast path.
+static LAYER_STACK: RwLock<Vec<Arc<dyn Recorder>>> = RwLock::new(Vec::new());
+static COMPOSED: RwLock<Option<Arc<dyn Recorder>>> = RwLock::new(None);
 
 fn global_registry() -> &'static Arc<Registry> {
     static REGISTRY: OnceLock<Arc<Registry>> = OnceLock::new();
@@ -124,8 +152,42 @@ pub fn is_enabled() -> bool {
     ENABLED.load(Ordering::Relaxed)
 }
 
-/// The process-global recorder: the registry-backed one when enabled,
-/// the noop one otherwise.
+/// Stack an extra recorder behind the facade: while it is on the stack
+/// (and telemetry is enabled), every newly issued handle records into
+/// the global registry AND every stacked layer, composed via
+/// [`FanoutRecorder`]. Wrap the layer in a [`FilterRecorder`] to scope
+/// it to a key prefix. Handles issued and cached *before* the push keep
+/// their previous targets — push layers before the instrumented run.
+pub fn push_layer(layer: Arc<dyn Recorder>) {
+    let mut stack = LAYER_STACK.write().unwrap();
+    stack.push(layer);
+    rebuild_composed(&stack);
+}
+
+/// Pop the most recently pushed layer (no-op on an empty stack). As with
+/// [`push_layer`], handles cached while the layer was active keep
+/// recording into it.
+pub fn pop_layer() {
+    let mut stack = LAYER_STACK.write().unwrap();
+    stack.pop();
+    rebuild_composed(&stack);
+}
+
+fn rebuild_composed(stack: &[Arc<dyn Recorder>]) {
+    *COMPOSED.write().unwrap() = if stack.is_empty() {
+        None
+    } else {
+        let mut targets: Vec<Arc<dyn Recorder>> =
+            vec![Arc::new(RegistryRecorder::new(global_registry().clone()))];
+        targets.extend(stack.iter().cloned());
+        Some(Arc::new(FanoutRecorder::new(targets)) as Arc<dyn Recorder>)
+    };
+}
+
+/// The process-global base recorder: the registry-backed one when
+/// enabled, the noop one otherwise. Note the facade helpers below also
+/// consult the [`push_layer`] stack; this accessor is the unlayered
+/// base.
 pub fn recorder() -> &'static dyn Recorder {
     static NOOP: NoopRecorder = NoopRecorder;
     static LIVE: OnceLock<RegistryRecorder> = OnceLock::new();
@@ -139,19 +201,37 @@ pub fn recorder() -> &'static dyn Recorder {
 /// Counter handle for `key` (noop when telemetry is disabled).
 #[inline]
 pub fn counter(key: &str) -> Counter {
-    recorder().counter(key)
+    if !is_enabled() {
+        return Counter::noop();
+    }
+    if let Some(r) = COMPOSED.read().unwrap().as_ref() {
+        return r.counter(key);
+    }
+    global_registry().counter(key)
 }
 
 /// Gauge handle for `key` (noop when telemetry is disabled).
 #[inline]
 pub fn gauge(key: &str) -> Gauge {
-    recorder().gauge(key)
+    if !is_enabled() {
+        return Gauge::noop();
+    }
+    if let Some(r) = COMPOSED.read().unwrap().as_ref() {
+        return r.gauge(key);
+    }
+    global_registry().gauge(key)
 }
 
 /// Histogram handle for `key` (noop when telemetry is disabled).
 #[inline]
 pub fn histogram(key: &str) -> Histogram {
-    recorder().histogram(key)
+    if !is_enabled() {
+        return Histogram::noop();
+    }
+    if let Some(r) = COMPOSED.read().unwrap().as_ref() {
+        return r.histogram(key);
+    }
+    global_registry().histogram(key)
 }
 
 /// Start a timing span: `Some(Instant)` only when telemetry is enabled,
@@ -173,6 +253,25 @@ pub fn record_elapsed_ns(key: &str, started: Option<Instant>) {
     }
 }
 
+/// Handle to worker `w`'s per-round latency histogram
+/// (`coordinator.worker.round.ns.w<w>`). Checks the enable flag before
+/// formatting the key, so disabled call sites never allocate (the
+/// zero-allocation round gate runs with telemetry disabled).
+pub fn worker_round_ns(w: usize) -> Histogram {
+    if !is_enabled() {
+        return Histogram::noop();
+    }
+    histogram(&format!("{}{w}", keys::WORKER_ROUND_NS_PREFIX))
+}
+
+/// Close a [`maybe_now`] span into worker `w`'s round-latency histogram.
+#[inline]
+pub fn record_worker_round_ns(w: usize, started: Option<Instant>) {
+    if let Some(t0) = started {
+        worker_round_ns(w).record(t0.elapsed().as_nanos() as u64);
+    }
+}
+
 /// One gradient-oracle evaluation: bumps [`keys::ORACLE_GRAD_EVALS`] and
 /// closes the timing span into [`keys::ORACLE_GRAD_NS`].
 #[inline]
@@ -188,16 +287,20 @@ pub fn snapshot() -> Snapshot {
 }
 
 /// Exporters started from a `--telemetry` spec; shut down via
-/// [`TelemetryGuard::shutdown`] to get the final flush.
+/// [`TelemetryGuard::shutdown`] to get the final flush (and the trace
+/// file — spans are only written out at shutdown).
 #[derive(Default)]
 pub struct TelemetryGuard {
     jsonl: Option<jsonl::JsonlExporter>,
     prom: Option<prom::PromServer>,
+    trace: Option<trace::TraceExporter>,
+    /// Filter layers pushed for `@<prefix>` sinks; popped on shutdown.
+    layers: usize,
 }
 
 impl TelemetryGuard {
     pub fn is_active(&self) -> bool {
-        self.jsonl.is_some() || self.prom.is_some()
+        self.jsonl.is_some() || self.prom.is_some() || self.trace.is_some()
     }
 
     /// Bound exposition port, when a TCP exporter is running.
@@ -209,13 +312,24 @@ impl TelemetryGuard {
         self.jsonl.as_ref().map(|j| j.path())
     }
 
-    /// Stop all exporters (final JSONL flush included).
+    /// Output path of the chrome://tracing exporter, when tracing.
+    pub fn trace_path(&self) -> Option<&std::path::Path> {
+        self.trace.as_ref().map(|t| t.path())
+    }
+
+    /// Stop all exporters (final JSONL flush and trace write included).
     pub fn shutdown(self) -> Result<()> {
         if let Some(p) = self.prom {
             p.stop();
         }
         if let Some(j) = self.jsonl {
             j.stop()?;
+        }
+        for _ in 0..self.layers {
+            pop_layer();
+        }
+        if let Some(t) = self.trace {
+            t.stop()?;
         }
         Ok(())
     }
@@ -227,38 +341,90 @@ pub const JSONL_FLUSH_PERIOD: Duration = Duration::from_millis(500);
 /// Parse a `--telemetry` spec and start the requested exporters, enabling
 /// global recording if any sink is configured.
 ///
-/// Grammar: comma-separated list of `off`, `jsonl:<path>`, `tcp:<port>`
-/// (`prom:<port>` is an alias). Examples: `jsonl:results/run.jsonl`,
-/// `tcp:9100`, `jsonl:/tmp/m.jsonl,tcp:0`.
+/// Grammar: comma-separated list of `off`, `jsonl:<path>[@<prefix>]`,
+/// `tcp:<port>[@<prefix>]` (`prom:` is an alias), and `trace:<path>`.
+/// A `@<prefix>` suffix scopes that sink to metric keys starting with
+/// the prefix: the sink gets its own [`Registry`] fed through a
+/// [`FilterRecorder`] layer instead of the process-global registry (the
+/// split after the LAST `@`, so paths containing `@` still work).
+/// `trace:<path>` turns on span capture and writes chrome://tracing
+/// JSON (openable in Perfetto) at shutdown. Examples:
+/// `jsonl:results/run.jsonl`, `tcp:9100`, `trace:round.trace.json`,
+/// `jsonl:/tmp/sched.jsonl@sched.,trace:/tmp/t.json`.
 pub fn init_from_spec(spec: &str) -> Result<TelemetryGuard> {
     let mut guard = TelemetryGuard::default();
     for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
         if part == "off" {
             continue;
         }
-        if let Some(path) = part.strip_prefix("jsonl:") {
+        if let Some(rest) = part.strip_prefix("jsonl:") {
+            let (path, prefix) = split_filter(rest)?;
             anyhow::ensure!(!path.is_empty(), "--telemetry jsonl: needs a path");
             anyhow::ensure!(guard.jsonl.is_none(), "--telemetry lists jsonl: twice");
             // Spawn first, enable after: a failed exporter must not leave
             // the process recording with nothing draining it.
-            guard.jsonl = Some(jsonl::JsonlExporter::spawn(path, JSONL_FLUSH_PERIOD)?);
+            guard.jsonl = Some(match prefix {
+                None => jsonl::JsonlExporter::spawn(path, JSONL_FLUSH_PERIOD)?,
+                Some(p) => {
+                    let reg = Arc::new(Registry::new());
+                    let exp = jsonl::JsonlExporter::spawn_with_source(
+                        path,
+                        JSONL_FLUSH_PERIOD,
+                        reg.clone(),
+                    )?;
+                    push_filter_layer(&mut guard, p, reg);
+                    exp
+                }
+            });
             enable();
-        } else if let Some(port) =
+        } else if let Some(rest) =
             part.strip_prefix("tcp:").or_else(|| part.strip_prefix("prom:"))
         {
+            let (port, prefix) = split_filter(rest)?;
             let port: u16 = port
                 .parse()
                 .with_context(|| format!("--telemetry tcp: bad port '{port}'"))?;
             anyhow::ensure!(guard.prom.is_none(), "--telemetry lists tcp: twice");
-            guard.prom = Some(prom::PromServer::bind(port)?);
+            guard.prom = Some(match prefix {
+                None => prom::PromServer::bind(port)?,
+                Some(p) => {
+                    let reg = Arc::new(Registry::new());
+                    let srv = prom::PromServer::bind_with_source(port, reg.clone())?;
+                    push_filter_layer(&mut guard, p, reg);
+                    srv
+                }
+            });
+            enable();
+        } else if let Some(path) = part.strip_prefix("trace:") {
+            anyhow::ensure!(!path.is_empty(), "--telemetry trace: needs a path");
+            anyhow::ensure!(guard.trace.is_none(), "--telemetry lists trace: twice");
+            guard.trace = Some(trace::TraceExporter::start(path)?);
             enable();
         } else {
             anyhow::bail!(
-                "bad --telemetry spec '{part}' (expected off, jsonl:<path>, or tcp:<port>)"
+                "bad --telemetry spec '{part}' (expected off, jsonl:<path>[@<prefix>], tcp:<port>[@<prefix>], or trace:<path>)"
             );
         }
     }
     Ok(guard)
+}
+
+/// Split a sink operand at the LAST `@` into `(operand, Some(prefix))`;
+/// an empty prefix is an error, no `@` means unfiltered.
+fn split_filter(s: &str) -> Result<(&str, Option<&str>)> {
+    match s.rsplit_once('@') {
+        None => Ok((s, None)),
+        Some((_, "")) => anyhow::bail!("--telemetry '@' filter needs a key prefix"),
+        Some((operand, prefix)) => Ok((operand, Some(prefix))),
+    }
+}
+
+fn push_filter_layer(guard: &mut TelemetryGuard, prefix: &str, reg: Arc<Registry>) {
+    push_layer(Arc::new(FilterRecorder::new(
+        vec![prefix.to_string()],
+        Arc::new(RegistryRecorder::new(reg)),
+    )));
+    guard.layers += 1;
 }
 
 #[cfg(test)]
@@ -270,10 +436,25 @@ mod tests {
         assert!(init_from_spec("bogus").is_err());
         assert!(init_from_spec("jsonl:").is_err());
         assert!(init_from_spec("tcp:notaport").is_err());
+        assert!(init_from_spec("trace:").is_err());
+        // '@' filter with an empty prefix is rejected before any sink
+        // spawns (no side effects on the global flag).
+        assert!(init_from_spec("jsonl:/tmp/x.jsonl@").is_err());
+        assert!(init_from_spec("tcp:0@").is_err());
         // "off" (and empty) never starts anything or flips the flag.
         let g = init_from_spec("off").unwrap();
         assert!(!g.is_active());
         let g = init_from_spec("").unwrap();
         assert!(!g.is_active());
+    }
+
+    #[test]
+    fn split_filter_takes_the_last_at() {
+        assert_eq!(split_filter("a/b.jsonl").unwrap(), ("a/b.jsonl", None));
+        assert_eq!(
+            split_filter("a@b/c.jsonl@sched.").unwrap(),
+            ("a@b/c.jsonl", Some("sched."))
+        );
+        assert!(split_filter("x@").is_err());
     }
 }

@@ -15,6 +15,8 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use super::registry::Registry;
+
 const ACCEPT_POLL: Duration = Duration::from_millis(25);
 
 /// Running exposition server. [`PromServer::stop`] joins the accept loop;
@@ -27,8 +29,19 @@ pub struct PromServer {
 
 impl PromServer {
     /// Bind `127.0.0.1:port` (`port` 0 picks an ephemeral port; see
-    /// [`PromServer::port`]) and start serving.
+    /// [`PromServer::port`]) and start serving the process-global
+    /// snapshot.
     pub fn bind(port: u16) -> Result<PromServer> {
+        Self::bind_inner(port, None)
+    }
+
+    /// Like [`PromServer::bind`], but serving a private [`Registry`] —
+    /// the sink side of a `@<prefix>`-filtered `--telemetry` spec.
+    pub fn bind_with_source(port: u16, source: Arc<Registry>) -> Result<PromServer> {
+        Self::bind_inner(port, Some(source))
+    }
+
+    fn bind_inner(port: u16, source: Option<Arc<Registry>>) -> Result<PromServer> {
         let listener = TcpListener::bind(("127.0.0.1", port))
             .with_context(|| format!("binding telemetry port {port}"))?;
         let port = listener.local_addr().context("telemetry local_addr")?.port();
@@ -39,7 +52,7 @@ impl PromServer {
         let stop = shutdown.clone();
         let handle = std::thread::Builder::new()
             .name("ef21-telemetry-prom".into())
-            .spawn(move || accept_loop(listener, stop))
+            .spawn(move || accept_loop(listener, stop, source))
             .context("spawning prom server")?;
         Ok(PromServer { port, shutdown, handle })
     }
@@ -55,12 +68,16 @@ impl PromServer {
     }
 }
 
-fn accept_loop(listener: TcpListener, shutdown: Arc<AtomicBool>) {
+fn accept_loop(
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+    source: Option<Arc<Registry>>,
+) {
     while !shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
                 // Serve inline; exposition is tiny and scrapes are rare.
-                let _ = serve(stream);
+                let _ = serve(stream, &source);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(ACCEPT_POLL);
@@ -70,7 +87,7 @@ fn accept_loop(listener: TcpListener, shutdown: Arc<AtomicBool>) {
     }
 }
 
-fn serve(mut stream: TcpStream) -> std::io::Result<()> {
+fn serve(mut stream: TcpStream, source: &Option<Arc<Registry>>) -> std::io::Result<()> {
     // Drain whatever request line/headers the client sends (best-effort;
     // a raw TCP reader sends nothing and just waits for our bytes).
     stream.set_nonblocking(false)?;
@@ -78,7 +95,11 @@ fn serve(mut stream: TcpStream) -> std::io::Result<()> {
     let mut req = [0u8; 1024];
     let _ = stream.read(&mut req);
 
-    let body = super::snapshot().render_prometheus();
+    let body = match source {
+        Some(reg) => reg.snapshot(),
+        None => super::snapshot(),
+    }
+    .render_prometheus();
     stream.set_write_timeout(Some(Duration::from_secs(2)))?;
     write!(
         stream,
@@ -105,5 +126,18 @@ mod tests {
         assert!(text.contains("text/plain"));
         // stop() must join promptly (bounded by the accept poll interval).
         server.stop();
+    }
+
+    #[test]
+    fn serves_a_private_source_registry() {
+        let reg = Arc::new(Registry::new());
+        reg.counter("prom.source.test").incr(11);
+        let server = PromServer::bind_with_source(0, reg).unwrap();
+        let mut conn = TcpStream::connect(("127.0.0.1", server.port())).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut text = String::new();
+        conn.read_to_string(&mut text).unwrap();
+        server.stop();
+        assert!(text.contains("ef21_prom_source_test 11"), "got: {text}");
     }
 }

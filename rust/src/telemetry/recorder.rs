@@ -2,11 +2,18 @@
 //!
 //! Mirrors the metrics-rs split between the facade (handle issuance) and
 //! storage: a [`Recorder`] hands out [`Counter`]/[`Gauge`]/[`Histogram`]
-//! handles for string keys. Two implementations:
+//! handles for string keys. Four implementations:
 //!   * [`NoopRecorder`] — the process-global default; every handle is a
 //!     noop, so instrumentation on disabled processes costs ~1ns.
 //!   * [`RegistryRecorder`] — issues live handles backed by a
 //!     [`Registry`]'s atomic cells.
+//!   * [`FanoutRecorder`] — composes several recorders; every issued
+//!     handle records into all of them (metrics-rs layer-style). The cost
+//!     is paid once at handle issuance: the returned handle holds the
+//!     per-target cells directly, so the record path is still lock-free.
+//!   * [`FilterRecorder`] — key-prefix allowlist in front of another
+//!     recorder; non-matching keys get noop handles. This is how a sink
+//!     subscribes to a slice of the key space (e.g. `jsonl:x@sched.`).
 
 use super::handles::{Counter, Gauge, Histogram};
 use super::registry::Registry;
@@ -75,6 +82,85 @@ impl Recorder for RegistryRecorder {
     }
 }
 
+/// Composes recorders: issued handles record into every target. The
+/// first target is the primary — its cells answer `get()`/`count()` on
+/// the issued handles, and its snapshot is the fanout's snapshot.
+pub struct FanoutRecorder {
+    targets: Vec<Arc<dyn Recorder>>,
+}
+
+impl FanoutRecorder {
+    pub fn new(targets: Vec<Arc<dyn Recorder>>) -> FanoutRecorder {
+        FanoutRecorder { targets }
+    }
+}
+
+impl Recorder for FanoutRecorder {
+    fn counter(&self, key: &str) -> Counter {
+        Counter::fanout(self.targets.iter().map(|t| t.counter(key)).collect())
+    }
+
+    fn gauge(&self, key: &str) -> Gauge {
+        Gauge::fanout(self.targets.iter().map(|t| t.gauge(key)).collect())
+    }
+
+    fn histogram(&self, key: &str) -> Histogram {
+        Histogram::fanout(self.targets.iter().map(|t| t.histogram(key)).collect())
+    }
+
+    fn snapshot(&self) -> Snapshot {
+        self.targets.first().map(|t| t.snapshot()).unwrap_or_default()
+    }
+}
+
+/// Key-prefix allowlist in front of another recorder: keys matching any
+/// prefix get the inner recorder's handle, everything else gets noop.
+/// An empty prefix list matches every key (a transparent layer).
+pub struct FilterRecorder {
+    prefixes: Vec<String>,
+    inner: Arc<dyn Recorder>,
+}
+
+impl FilterRecorder {
+    pub fn new(prefixes: Vec<String>, inner: Arc<dyn Recorder>) -> FilterRecorder {
+        FilterRecorder { prefixes, inner }
+    }
+
+    fn matches(&self, key: &str) -> bool {
+        self.prefixes.is_empty() || self.prefixes.iter().any(|p| key.starts_with(p.as_str()))
+    }
+}
+
+impl Recorder for FilterRecorder {
+    fn counter(&self, key: &str) -> Counter {
+        if self.matches(key) {
+            self.inner.counter(key)
+        } else {
+            Counter::noop()
+        }
+    }
+
+    fn gauge(&self, key: &str) -> Gauge {
+        if self.matches(key) {
+            self.inner.gauge(key)
+        } else {
+            Gauge::noop()
+        }
+    }
+
+    fn histogram(&self, key: &str) -> Histogram {
+        if self.matches(key) {
+            self.inner.histogram(key)
+        } else {
+            Histogram::noop()
+        }
+    }
+
+    fn snapshot(&self) -> Snapshot {
+        self.inner.snapshot()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,5 +185,48 @@ mod tests {
         assert_eq!(s.counter("c"), Some(7));
         assert_eq!(s.gauge("g"), Some(0.5));
         assert_eq!(s.histogram("h").unwrap().count, 1);
+    }
+
+    #[test]
+    fn fanout_records_into_all_targets_and_reads_the_primary() {
+        let a = Arc::new(Registry::new());
+        let b = Arc::new(Registry::new());
+        let fan = FanoutRecorder::new(vec![
+            Arc::new(RegistryRecorder::new(a.clone())) as Arc<dyn Recorder>,
+            Arc::new(RegistryRecorder::new(b.clone())),
+        ]);
+        let c = fan.counter("fan.c");
+        c.incr(4);
+        fan.gauge("fan.g").set(1.5);
+        fan.histogram("fan.h").record(33);
+        assert_eq!(a.snapshot().counter("fan.c"), Some(4));
+        assert_eq!(b.snapshot().counter("fan.c"), Some(4));
+        assert_eq!(b.snapshot().gauge("fan.g"), Some(1.5));
+        assert_eq!(a.snapshot().histogram("fan.h").unwrap().count, 1);
+        // Handle reads and the fanout snapshot come from the primary.
+        assert_eq!(c.get(), 4);
+        assert_eq!(fan.snapshot().counter("fan.c"), Some(4));
+        // Empty fanout degenerates to noop handles.
+        assert!(FanoutRecorder::new(vec![]).counter("x").is_noop());
+    }
+
+    #[test]
+    fn filter_passes_matching_prefixes_only() {
+        let reg = Arc::new(Registry::new());
+        let f = FilterRecorder::new(
+            vec!["sched.".into(), "coordinator.round".into()],
+            Arc::new(RegistryRecorder::new(reg.clone())),
+        );
+        f.counter("sched.drops").incr(2);
+        f.counter("transport.uplink.bits").incr(99);
+        f.histogram("coordinator.round.ns").record(10);
+        assert!(f.counter("transport.uplink.bits").is_noop());
+        let s = reg.snapshot();
+        assert_eq!(s.counter("sched.drops"), Some(2));
+        assert_eq!(s.counter("transport.uplink.bits"), None);
+        assert_eq!(s.histogram("coordinator.round.ns").unwrap().count, 1);
+        // Empty prefix list is a transparent layer.
+        let open = FilterRecorder::new(vec![], Arc::new(RegistryRecorder::new(reg)));
+        assert!(!open.counter("anything.goes").is_noop());
     }
 }

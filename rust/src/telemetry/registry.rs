@@ -95,7 +95,7 @@ impl Registry {
                 // cumulative bucket (record bumps buckets before count).
                 let buckets = h.bucket_counts();
                 let count = buckets.iter().sum();
-                (k.clone(), HistogramSnapshot { count, sum: h.sum(), buckets })
+                (k.clone(), HistogramSnapshot { count, sum: h.sum(), max: h.max(), buckets })
             })
             .collect();
         Snapshot { counters, gauges, histograms }

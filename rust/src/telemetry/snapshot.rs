@@ -1,6 +1,7 @@
 //! Point-in-time metric views and their two renderings: compact JSON
 //! (for the JSONL file sink, via [`crate::util::json`]) and Prometheus
-//! text exposition format (for the TCP endpoint).
+//! text exposition format (for the TCP endpoint). Also home of the
+//! straggler report derived from the per-worker round histograms.
 
 use super::handles::{bucket_lower, bucket_upper, HISTOGRAM_BUCKETS};
 use crate::util::json::Json;
@@ -11,6 +12,9 @@ use std::collections::BTreeMap;
 pub struct HistogramSnapshot {
     pub count: u64,
     pub sum: u64,
+    /// Exact largest recorded value (0 when empty) — unlike the
+    /// quantiles, not subject to bucketing error.
+    pub max: u64,
     /// Per-bucket sample counts, length [`HISTOGRAM_BUCKETS`].
     pub buckets: Vec<u64>,
 }
@@ -24,9 +28,10 @@ impl HistogramSnapshot {
         }
     }
 
-    /// Approximate quantile (`0.0 <= q <= 1.0`): the arithmetic midpoint of
-    /// the bucket containing the q-th sample. Error is bounded by the 2x
-    /// bucket width.
+    /// Approximate quantile (`0.0 <= q <= 1.0`): the arithmetic midpoint
+    /// of the log-linear sub-bucket containing the q-th sample. With 16
+    /// sub-buckets per octave the bucket width is at most 1/16 of its
+    /// lower bound, so the relative error is ≤ ~6.25% (exact below 32).
     pub fn quantile(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -43,11 +48,18 @@ impl HistogramSnapshot {
         }
         bucket_upper(HISTOGRAM_BUCKETS - 1)
     }
+}
 
-    /// Index of the highest non-empty bucket, if any sample was recorded.
-    fn last_nonempty_bucket(&self) -> Option<usize> {
-        self.buckets.iter().rposition(|&c| c > 0)
-    }
+/// One row of [`Snapshot::straggler_report`]: a worker's round-latency
+/// summary, derived from its `coordinator.worker.round.ns.w<i>` histogram.
+#[derive(Clone, Debug)]
+pub struct WorkerLatency {
+    pub worker: usize,
+    pub count: u64,
+    pub p50: u64,
+    pub p99: u64,
+    pub max: u64,
+    pub mean: f64,
 }
 
 /// Sorted key→value view over all registered metrics.
@@ -78,8 +90,84 @@ impl Snapshot {
         self.histograms.iter().find(|(k, _)| k == key).map(|(_, v)| v)
     }
 
+    /// Top-`k` slowest workers by p99 round latency, from the per-worker
+    /// `coordinator.worker.round.ns.w<i>` histograms (empty when the
+    /// per-worker instrumentation never fired).
+    pub fn straggler_report(&self, k: usize) -> Vec<WorkerLatency> {
+        let mut rows: Vec<WorkerLatency> = self
+            .histograms
+            .iter()
+            .filter_map(|(key, h)| {
+                let idx = key.strip_prefix(super::keys::WORKER_ROUND_NS_PREFIX)?;
+                let worker: usize = idx.parse().ok()?;
+                if h.count == 0 {
+                    return None;
+                }
+                Some(WorkerLatency {
+                    worker,
+                    count: h.count,
+                    p50: h.quantile(0.5),
+                    p99: h.quantile(0.99),
+                    max: h.max,
+                    mean: h.mean(),
+                })
+            })
+            .collect();
+        rows.sort_by(|a, b| b.p99.cmp(&a.p99).then(a.worker.cmp(&b.worker)));
+        rows.truncate(k);
+        rows
+    }
+
+    /// Human-readable straggler report: the top-`k` slowest workers next
+    /// to the scheduler's deadline counters. `None` when no per-worker
+    /// histogram has samples.
+    pub fn render_straggler_report(&self, k: usize) -> Option<String> {
+        use std::fmt::Write as _;
+        let total = self
+            .histograms
+            .iter()
+            .filter(|(key, h)| {
+                key.starts_with(super::keys::WORKER_ROUND_NS_PREFIX) && h.count > 0
+            })
+            .count();
+        let rows = self.straggler_report(k);
+        if rows.is_empty() {
+            return None;
+        }
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "stragglers: top {} of {} workers by p99 round latency",
+            rows.len(),
+            total
+        );
+        for r in rows {
+            let _ = writeln!(
+                out,
+                "  w{:<4} p50={:>10} p99={:>10} max={:>10} mean={:>10} n={}",
+                r.worker,
+                fmt_ns(r.p50),
+                fmt_ns(r.p99),
+                fmt_ns(r.max),
+                fmt_ns(r.mean as u64),
+                r.count
+            );
+        }
+        for key in [
+            super::keys::SCHED_PARTICIPANTS,
+            super::keys::SCHED_STRAGGLERS,
+            super::keys::SCHED_DROPS,
+            super::keys::SCHED_DUP_FRAMES,
+        ] {
+            if let Some(v) = self.counter(key) {
+                let _ = writeln!(out, "  {key} = {v}");
+            }
+        }
+        Some(out)
+    }
+
     /// Compact JSON object:
-    /// `{"counters":{..},"gauges":{..},"histograms":{name:{count,sum,mean,p50,p99}}}`.
+    /// `{"counters":{..},"gauges":{..},"histograms":{name:{count,sum,mean,p50,p90,p99,max}}}`.
     pub fn to_json(&self) -> Json {
         let mut counters = BTreeMap::new();
         for (k, v) in &self.counters {
@@ -96,7 +184,9 @@ impl Snapshot {
             o.insert("sum".to_string(), Json::Num(h.sum as f64));
             o.insert("mean".to_string(), Json::Num(h.mean()));
             o.insert("p50".to_string(), Json::Num(h.quantile(0.5) as f64));
+            o.insert("p90".to_string(), Json::Num(h.quantile(0.9) as f64));
             o.insert("p99".to_string(), Json::Num(h.quantile(0.99) as f64));
+            o.insert("max".to_string(), Json::Num(h.max as f64));
             histograms.insert(k.clone(), Json::Obj(o));
         }
         let mut root = BTreeMap::new();
@@ -108,7 +198,9 @@ impl Snapshot {
 
     /// Prometheus text exposition (v0.0.4): `ef21_`-prefixed metric names
     /// with dots mangled to underscores; histograms as cumulative `le`
-    /// buckets plus `_sum`/`_count`.
+    /// buckets (non-empty buckets only — the sub-bucket grid has
+    /// [`HISTOGRAM_BUCKETS`] cells, most of them empty) ending in `+Inf`,
+    /// plus `_sum`/`_count`, so `histogram_quantile()` works.
     pub fn render_prometheus(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::new();
@@ -125,15 +217,13 @@ impl Snapshot {
         for (k, h) in &self.histograms {
             let name = prom_name(k);
             let _ = writeln!(out, "# TYPE {name} histogram");
-            let last = h.last_nonempty_bucket().unwrap_or(0);
             let mut cum = 0u64;
-            for i in 0..=last.min(HISTOGRAM_BUCKETS - 1) {
-                cum += h.buckets[i];
-                let _ = writeln!(
-                    out,
-                    "{name}_bucket{{le=\"{}\"}} {cum}",
-                    bucket_upper(i)
-                );
+            for (i, &c) in h.buckets.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                cum += c;
+                let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", bucket_upper(i));
             }
             let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count);
             let _ = writeln!(out, "{name}_sum {}", h.sum);
@@ -155,6 +245,19 @@ fn prom_name(key: &str) -> String {
         }
     }
     name
+}
+
+/// Scale a nanosecond value into a short human-readable duration.
+fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
 }
 
 #[cfg(test)]
@@ -185,17 +288,26 @@ mod tests {
     }
 
     #[test]
-    fn quantiles_are_order_of_magnitude_right() {
+    fn quantiles_land_in_the_sub_bucket() {
         let s = sample();
         let h = s.histogram("codec.encode.ns").unwrap();
         assert_eq!(h.sum, 1 + 2 + 2 + 900 + 1100);
-        // p50 falls in bucket [2,3]; p99 in the bucket holding 1100.
-        let p50 = h.quantile(0.5);
-        assert!((2..=3).contains(&p50), "p50={p50}");
+        assert_eq!(h.max, 1100);
+        // Values below 32 get exact unit buckets: p50 is exactly 2.
+        assert_eq!(h.quantile(0.5), 2);
+        // p99 falls in 1100's sub-bucket [1088, 1151] — much tighter than
+        // the old power-of-two bucket [1024, 2047].
         let p99 = h.quantile(0.99);
-        assert!((1024..=2047).contains(&p99), "p99={p99}");
+        assert!((1088..=1151).contains(&p99), "p99={p99}");
         // Degenerate cases.
-        assert_eq!(HistogramSnapshot { count: 0, sum: 0, buckets: vec![0; 64] }.quantile(0.5), 0);
+        let empty = HistogramSnapshot {
+            count: 0,
+            sum: 0,
+            max: 0,
+            buckets: vec![0; HISTOGRAM_BUCKETS],
+        };
+        assert_eq!(empty.quantile(0.5), 0);
+        assert_eq!(empty.mean(), 0.0);
     }
 
     #[test]
@@ -209,6 +321,9 @@ mod tests {
         );
         let hist = j.get("histograms").unwrap().get("codec.encode.ns").unwrap();
         assert_eq!(hist.get("count").unwrap().as_f64(), Some(5.0));
+        assert_eq!(hist.get("max").unwrap().as_f64(), Some(1100.0));
+        assert_eq!(hist.get("p50").unwrap().as_f64(), Some(2.0));
+        assert!(hist.get("p90").is_some() && hist.get("p99").is_some());
     }
 
     #[test]
@@ -219,16 +334,65 @@ mod tests {
         assert!(text.contains("ef21_transport_uplink_bits 1280"));
         assert!(text.contains("# TYPE ef21_compress_top1_sparsity gauge"));
         assert!(text.contains("ef21_codec_encode_ns_count 5"));
-        assert!(text.contains("ef21_codec_encode_ns_bucket{le=\"+Inf\"} 5"));
-        // Cumulative buckets never decrease.
+        assert!(text.contains("ef21_codec_encode_ns_sum 2005"));
+        // Cumulative buckets are monotone non-decreasing and END in +Inf
+        // carrying the total count.
+        let bucket_lines: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("ef21_codec_encode_ns_bucket{le=\""))
+            .collect();
+        assert!(bucket_lines.len() >= 2, "expected several le buckets");
+        assert!(
+            bucket_lines.last().unwrap().contains("le=\"+Inf\"} 5"),
+            "bucket series must end in +Inf with the total count"
+        );
         let mut prev = 0u64;
-        for line in text.lines().filter(|l| l.starts_with("ef21_codec_encode_ns_bucket{le=\"")) {
-            if line.contains("+Inf") {
-                continue;
-            }
+        for line in &bucket_lines {
             let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
-            assert!(v >= prev);
+            assert!(v >= prev, "cumulative buckets decreased: {line}");
             prev = v;
         }
+        assert_eq!(prev, 5);
+    }
+
+    #[test]
+    fn straggler_report_ranks_by_p99() {
+        let r = Registry::new();
+        // Worker 3 is the straggler; workers 0..3 are fast.
+        for w in 0..3usize {
+            let h = r.histogram(&format!("coordinator.worker.round.ns.w{w}"));
+            for _ in 0..10 {
+                h.record(1_000 + w as u64);
+            }
+        }
+        let slow = r.histogram("coordinator.worker.round.ns.w3");
+        for _ in 0..9 {
+            slow.record(1_000);
+        }
+        slow.record(50_000_000);
+        r.counter("sched.stragglers").incr(4);
+        let snap = r.snapshot();
+
+        let rows = snap.straggler_report(2);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].worker, 3, "w3's fat tail must rank first");
+        assert_eq!(rows[0].max, 50_000_000);
+        assert!(rows[0].p99 > rows[1].p99);
+
+        let text = snap.render_straggler_report(2).unwrap();
+        assert!(text.contains("top 2 of 4 workers"), "{text}");
+        assert!(text.contains("w3"), "{text}");
+        assert!(text.contains("sched.stragglers = 4"), "{text}");
+
+        // No per-worker histograms -> no report.
+        assert!(Registry::new().snapshot().render_straggler_report(3).is_none());
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(17), "17ns");
+        assert_eq!(fmt_ns(1_500), "1.50us");
+        assert_eq!(fmt_ns(2_250_000), "2.25ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.00s");
     }
 }

@@ -1,0 +1,381 @@
+//! Phase-level tracing: span guards, per-thread event rings, and a
+//! chrome://tracing-compatible JSON exporter (open the file in Perfetto
+//! or `chrome://tracing`).
+//!
+//! # Span model
+//!
+//! [`span`] returns a RAII guard; the elapsed wall time between guard
+//! creation and drop becomes one complete (`"ph":"X"`) trace event named
+//! by the span's `&'static str` key. Spans nest naturally by scoping —
+//! the viewer reconstructs the stack per thread from the timestamps.
+//! Tracing has its own enable flag, independent of the metrics facade:
+//! a disabled [`span`] call is one relaxed atomic load and a branch
+//! (same ~1ns budget as the noop metric handles), and records nothing.
+//!
+//! # Ring ownership
+//!
+//! The record path is lock-free: each thread owns a thread-local event
+//! buffer and appends without synchronization. A buffer migrates its
+//! events to the process-global sink under a mutex only when it fills
+//! ([`LOCAL_RING`] events — one lock per 4096 spans) and on thread exit
+//! via the thread-local's destructor. The global sink is bounded by
+//! [`GLOBAL_EVENT_CAP`]; once full, newest events are dropped and
+//! counted, and the drop total lands in the exported file's `otherData`
+//! — a long run degrades to a truncated trace, never to unbounded
+//! memory.
+//!
+//! # Trace schema
+//!
+//! The exporter writes the chrome://tracing "JSON object format":
+//! `{"traceEvents":[...]}` where each span is
+//! `{"name","ph":"X","pid":1,"tid",ts,"dur","args"?}` with `ts`/`dur`
+//! in fractional microseconds relative to the process trace epoch, plus
+//! one `"ph":"M"` `thread_name` metadata event per recording thread.
+
+use std::cell::RefCell;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// Thread-local buffer size: events per global-sink handoff.
+const LOCAL_RING: usize = 4096;
+
+/// Hard cap on events buffered process-wide (~150MB worst case). Beyond
+/// it the newest events are dropped and counted.
+const GLOBAL_EVENT_CAP: usize = 1 << 21;
+
+static TRACING: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+/// One completed span.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    /// Trace-local thread id (stable per OS thread, dense from 1).
+    pub tid: u32,
+    /// Start offset from the process trace epoch, nanoseconds.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Optional numeric annotation, e.g. `("w", worker_index)`.
+    pub arg: Option<(&'static str, u64)>,
+}
+
+#[derive(Default)]
+struct GlobalSink {
+    events: Vec<TraceEvent>,
+    /// `(tid, thread name)` for every thread that ever recorded.
+    threads: Vec<(u32, String)>,
+}
+
+fn global() -> &'static Mutex<GlobalSink> {
+    static SINK: OnceLock<Mutex<GlobalSink>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(GlobalSink::default()))
+}
+
+/// The single time origin all span timestamps are relative to.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+#[inline]
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+struct LocalBuf {
+    tid: u32,
+    events: Vec<TraceEvent>,
+}
+
+impl LocalBuf {
+    fn new() -> LocalBuf {
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let name = std::thread::current().name().unwrap_or("?").to_string();
+        global().lock().unwrap().threads.push((tid, name));
+        LocalBuf { tid, events: Vec::with_capacity(LOCAL_RING) }
+    }
+
+    fn flush(&mut self) {
+        if self.events.is_empty() {
+            return;
+        }
+        let mut sink = global().lock().unwrap();
+        let room = GLOBAL_EVENT_CAP.saturating_sub(sink.events.len());
+        if room < self.events.len() {
+            DROPPED.fetch_add((self.events.len() - room) as u64, Ordering::Relaxed);
+            self.events.truncate(room);
+        }
+        sink.events.append(&mut self.events);
+    }
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> = RefCell::new(LocalBuf::new());
+}
+
+fn push(mut ev: TraceEvent) {
+    // try_with: during thread teardown the local is gone; drop the event.
+    let _ = LOCAL.try_with(|cell| {
+        let mut buf = cell.borrow_mut();
+        ev.tid = buf.tid;
+        buf.events.push(ev);
+        if buf.events.len() >= LOCAL_RING {
+            buf.flush();
+        }
+    });
+}
+
+/// RAII span guard: measures from creation to drop (or explicit
+/// [`Span::end`]). A guard created while tracing is disabled is inert.
+#[must_use = "a span measures until dropped; binding to _ drops immediately"]
+pub struct Span(Option<SpanActive>);
+
+struct SpanActive {
+    name: &'static str,
+    arg: Option<(&'static str, u64)>,
+    start_ns: u64,
+}
+
+impl Span {
+    /// Close the span now (dropping does the same; this spells it out).
+    pub fn end(self) {}
+
+    pub fn is_noop(&self) -> bool {
+        self.0.is_none()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(active) = self.0.take() {
+            let end = now_ns();
+            push(TraceEvent {
+                name: active.name,
+                tid: 0, // filled in by push() from the thread-local
+                start_ns: active.start_ns,
+                dur_ns: end.saturating_sub(active.start_ns),
+                arg: active.arg,
+            });
+        }
+    }
+}
+
+/// Open a span named `name`. ~1ns when tracing is disabled.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !TRACING.load(Ordering::Relaxed) {
+        return Span(None);
+    }
+    Span(Some(SpanActive { name, arg: None, start_ns: now_ns() }))
+}
+
+/// Open a span carrying one numeric annotation (e.g. a worker index).
+#[inline]
+pub fn span_arg(name: &'static str, key: &'static str, value: u64) -> Span {
+    if !TRACING.load(Ordering::Relaxed) {
+        return Span(None);
+    }
+    Span(Some(SpanActive { name, arg: Some((key, value)), start_ns: now_ns() }))
+}
+
+/// Start capturing spans. Pins the trace epoch first so no span can
+/// observe a timestamp before it.
+pub fn enable_tracing() {
+    let _ = epoch();
+    TRACING.store(true, Ordering::SeqCst);
+}
+
+pub fn disable_tracing() {
+    TRACING.store(false, Ordering::SeqCst);
+}
+
+pub fn is_tracing() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// Push the calling thread's local ring into the global sink. Exporters
+/// call this before [`drain`] so the coordinator thread's tail spans
+/// (still below the flush threshold) make it into the file. Other
+/// threads' rings flush on fill and on thread exit.
+pub fn flush_thread() {
+    let _ = LOCAL.try_with(|cell| cell.borrow_mut().flush());
+}
+
+/// Take everything captured so far: `(events, thread names, dropped)`.
+/// Resets the event buffer and drop counter; thread names persist.
+pub fn drain() -> (Vec<TraceEvent>, Vec<(u32, String)>, u64) {
+    flush_thread();
+    let mut sink = global().lock().unwrap();
+    let events = std::mem::take(&mut sink.events);
+    let threads = sink.threads.clone();
+    (events, threads, DROPPED.swap(0, Ordering::Relaxed))
+}
+
+/// File exporter behind `--telemetry trace:<path>`: enables tracing at
+/// construction, writes the chrome://tracing JSON on [`TraceExporter::stop`].
+pub struct TraceExporter {
+    path: PathBuf,
+}
+
+impl TraceExporter {
+    /// Validate the output path (create parents, truncate) up front so a
+    /// bad path fails at startup rather than at shutdown, then start
+    /// capturing.
+    pub fn start(path: impl Into<PathBuf>) -> Result<TraceExporter> {
+        let path = path.into();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating trace dir {}", parent.display()))?;
+            }
+        }
+        std::fs::File::create(&path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        enable_tracing();
+        Ok(TraceExporter { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Stop capturing, drain every ring, and write the trace file.
+    pub fn stop(self) -> Result<()> {
+        disable_tracing();
+        let (mut events, threads, dropped) = drain();
+        events.sort_by_key(|e| e.start_ns);
+        write_chrome_trace(&self.path, &events, &threads, dropped)
+    }
+}
+
+/// Render nanoseconds as a JSON number of fractional microseconds
+/// (chrome://tracing's unit) without going through f64.
+fn micros(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1_000, ns % 1_000)
+}
+
+fn json_str(s: &str) -> String {
+    crate::util::json::Json::Str(s.to_string()).to_string()
+}
+
+/// Serialize events in the chrome://tracing "JSON object format".
+pub fn write_chrome_trace(
+    path: &Path,
+    events: &[TraceEvent],
+    threads: &[(u32, String)],
+    dropped: u64,
+) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("writing trace file {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    write!(
+        w,
+        "{{\"displayTimeUnit\":\"ns\",\"otherData\":{{\"dropped_events\":{dropped}}},\"traceEvents\":["
+    )?;
+    let mut first = true;
+    for (tid, name) in threads {
+        if !first {
+            w.write_all(b",")?;
+        }
+        first = false;
+        write!(
+            w,
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"args\":{{\"name\":{}}}}}",
+            json_str(name)
+        )?;
+    }
+    for ev in events {
+        if !first {
+            w.write_all(b",")?;
+        }
+        first = false;
+        write!(
+            w,
+            "{{\"name\":{},\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{},\"dur\":{}",
+            json_str(ev.name),
+            ev.tid,
+            micros(ev.start_ns),
+            micros(ev.dur_ns)
+        )?;
+        if let Some((k, v)) = ev.arg {
+            write!(w, ",\"args\":{{{}:{v}}}", json_str(k))?;
+        }
+        w.write_all(b"}")?;
+    }
+    w.write_all(b"]}")?;
+    w.flush().context("flushing trace file")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    // The ONE unit test that toggles the process-wide tracing flag (the
+    // rest of the lib test binary never traces, so no cross-test races;
+    // end-to-end coverage lives in tests/integration_trace.rs, its own
+    // process).
+    #[test]
+    fn span_lifecycle_drain_and_chrome_export() {
+        // Disabled: spans are inert.
+        assert!(!is_tracing());
+        assert!(span("t.disabled").is_noop());
+
+        enable_tracing();
+        {
+            let outer = span_arg("t.outer", "w", 3);
+            span("t.inner").end();
+            outer.end();
+        }
+        disable_tracing();
+
+        let (events, threads, dropped) = drain();
+        assert_eq!(dropped, 0);
+        let outer = events.iter().find(|e| e.name == "t.outer").expect("outer span");
+        let inner = events.iter().find(|e| e.name == "t.inner").expect("inner span");
+        assert_eq!(outer.arg, Some(("w", 3)));
+        assert!(inner.start_ns >= outer.start_ns);
+        assert!(
+            inner.start_ns + inner.dur_ns <= outer.start_ns + outer.dur_ns,
+            "inner span must nest inside outer"
+        );
+        assert!(!events.iter().any(|e| e.name == "t.disabled"));
+        assert!(threads.iter().any(|(tid, _)| *tid == outer.tid));
+
+        // Export parses as JSON with the chrome://tracing shape.
+        let path = std::env::temp_dir()
+            .join(format!("ef21_trace_unit_{}.json", std::process::id()));
+        write_chrome_trace(&path, &events, &threads, 0).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        std::fs::remove_file(&path).ok();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs.iter().any(|e| e.get("ph").unwrap().as_str() == Some("M")));
+        let x = evs
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("t.outer"))
+            .expect("exported outer span");
+        assert_eq!(x.get("ph").unwrap().as_str(), Some("X"));
+        assert!(x.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(x.get("args").unwrap().get("w").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn micros_formats_fractional_microseconds() {
+        assert_eq!(micros(0), "0.000");
+        assert_eq!(micros(1_234), "1.234");
+        assert_eq!(micros(1_000_007), "1000.007");
+    }
+}

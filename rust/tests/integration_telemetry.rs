@@ -91,6 +91,26 @@ fn global_lifecycle_uplink_exactness_and_exporters() {
     assert!((sparsity - 2.0 / 16.0).abs() < 1e-12, "top2 over d=16: {sparsity}");
     assert!(snap.histogram(keys::ROUND_NS).expect("round ns").count >= 10);
 
+    // --- Per-worker round latency: both runners key a histogram per
+    // worker, and the straggler report ranks all 20. ---
+    let w0 = snap
+        .histogram(&format!("{}0", keys::WORKER_ROUND_NS_PREFIX))
+        .expect("per-worker histogram for w0");
+    assert!(w0.count >= 10, "w0 timed on every round: {}", w0.count);
+    assert_eq!(snap.straggler_report(25).len(), 20, "one report row per worker");
+    let report = snap.render_straggler_report(5).expect("straggler report");
+    assert!(report.contains("top 5 of 20 workers"), "{report}");
+
+    // --- Recorder layering: a pushed layer receives every new record
+    // alongside the global registry; popping restores the plain facade. ---
+    let side = Arc::new(Registry::new());
+    telemetry::push_layer(Arc::new(telemetry::RegistryRecorder::new(side.clone())));
+    telemetry::counter("itest.layered").incr(5);
+    telemetry::pop_layer();
+    telemetry::counter("itest.layered").incr(2);
+    assert_eq!(side.snapshot().counter("itest.layered"), Some(5));
+    assert_eq!(telemetry::snapshot().counter("itest.layered"), Some(7));
+
     // --- JSONL exporter: last line carries the same cumulative counter. ---
     let path = std::env::temp_dir()
         .join(format!("ef21_itest_telemetry_{}.jsonl", std::process::id()));
@@ -148,22 +168,28 @@ fn concurrent_counter_increments_sum_exactly() {
 }
 
 #[test]
-fn histogram_bucket_boundaries_are_powers_of_two() {
+fn histogram_buckets_are_log_linear_with_16_sub_buckets() {
     let reg = Registry::new();
     let h = reg.histogram("itest.hist");
-    for v in [0u64, 1, 2, 3, 4, 1023, 1024] {
+    for v in [0u64, 1, 2, 3, 4, 31, 32, 33, 1023, 1024] {
         h.record(v);
     }
     let snap = reg.snapshot();
     let hs = snap.histogram("itest.hist").unwrap();
-    assert_eq!(hs.count, 7);
-    assert_eq!(hs.sum, 0 + 1 + 2 + 3 + 4 + 1023 + 1024);
-    assert_eq!(hs.buckets[0], 2, "bucket 0 holds {{0, 1}}");
-    assert_eq!(hs.buckets[1], 2, "bucket 1 holds {{2, 3}}");
-    assert_eq!(hs.buckets[2], 1, "bucket 2 holds [4, 7]");
-    assert_eq!(hs.buckets[9], 1, "bucket 9 holds [512, 1023]");
-    assert_eq!(hs.buckets[10], 1, "bucket 10 holds [1024, 2047]");
-    assert_eq!(hs.buckets.iter().sum::<u64>(), 7);
+    assert_eq!(hs.count, 10);
+    assert_eq!(hs.sum, 0 + 1 + 2 + 3 + 4 + 31 + 32 + 33 + 1023 + 1024);
+    // Values below 32 land in exact unit buckets.
+    for v in [0usize, 1, 2, 3, 4, 31] {
+        assert_eq!(hs.buckets[v], 1, "unit bucket {v}");
+    }
+    // From 32 up, each octave splits into 16 sub-buckets of width
+    // 2^(octave-4): 32 and 33 share [32, 34); 1023 tops out the
+    // [992, 1024) sub-bucket; 1024 opens [1024, 1088).
+    assert_eq!(hs.buckets[32], 2, "sub-bucket [32, 34) holds {{32, 33}}");
+    assert_eq!(hs.buckets[111], 1, "sub-bucket [992, 1024) holds 1023");
+    assert_eq!(hs.buckets[112], 1, "sub-bucket [1024, 1088) holds 1024");
+    assert_eq!(hs.buckets.iter().sum::<u64>(), 10);
+    assert_eq!(hs.max, 1024, "exact max rides alongside the buckets");
 }
 
 #[test]

@@ -1,0 +1,91 @@
+//! End-to-end tracing: `--telemetry trace:<path>` on a short simulated
+//! run must produce a chrome://tracing file whose `coordinator.round`
+//! spans account for (at least) the wall time the `coordinator.round.ns`
+//! histogram measured, with per-worker and per-phase spans present.
+//!
+//! This binary holds the ONLY test that turns the process-wide tracing
+//! flag on end-to-end (the lib's single unit test exercises the span
+//! machinery in the lib binary; integration_telemetry.rs never traces),
+//! so the global flag cannot race across parallel test threads.
+
+use ef21::algo::AlgoSpec;
+use ef21::exp::{Objective, Problem};
+use ef21::telemetry::{self, keys};
+use ef21::util::json::Json;
+
+#[test]
+fn trace_spans_cover_the_round_loop() {
+    let path = std::env::temp_dir().join(format!("ef21_itest_trace_{}.json", std::process::id()));
+    let guard = telemetry::init_from_spec(&format!("trace:{}", path.display())).unwrap();
+    assert!(telemetry::is_enabled(), "trace: spec enables the metrics facade too");
+
+    const ROUNDS: usize = 30;
+    let ds = ef21::data::synth::generate_custom("trace", 600, 12, 0.4, 11);
+    let p = Problem::from_dataset(ds, Objective::LogReg, 4, 0.1);
+    let h = p.run_trial(AlgoSpec::Ef21, "top2", 1.0, None, ROUNDS, 1, 5);
+    assert!(!h.diverged());
+    let snap = telemetry::snapshot();
+    let round_ns_sum = snap.histogram(keys::ROUND_NS).expect("round ns histogram").sum;
+
+    guard.shutdown().unwrap();
+    telemetry::disable();
+    assert!(!telemetry::trace::is_tracing(), "shutdown stops capture");
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let j = Json::parse(&text).expect("trace file parses as JSON");
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+
+    // Thread-name metadata and a bounded (here: zero) drop count.
+    assert!(evs.iter().any(|e| e.get("ph").unwrap().as_str() == Some("M")));
+    assert_eq!(
+        j.get("otherData").unwrap().get("dropped_events").unwrap().as_f64(),
+        Some(0.0)
+    );
+
+    // One coordinator.round complete event per round, together covering
+    // >= 95% of the wall time the round histogram recorded (the span
+    // brackets the same region the timer measures).
+    let rounds: Vec<&Json> = evs
+        .iter()
+        .filter(|e| e.get("name").unwrap().as_str() == Some("coordinator.round"))
+        .collect();
+    assert_eq!(rounds.len(), ROUNDS, "one round span per round");
+    let span_us: f64 = rounds.iter().map(|e| e.get("dur").unwrap().as_f64().unwrap()).sum();
+    let hist_us = round_ns_sum as f64 / 1_000.0;
+    assert!(
+        span_us >= 0.95 * hist_us,
+        "round spans cover only {span_us:.1}us of {hist_us:.1}us measured"
+    );
+    // Round spans carry their round index.
+    assert!(rounds
+        .iter()
+        .any(|e| e.get("args").unwrap().get("round").unwrap().as_f64() == Some(0.0)));
+
+    // Phase, per-worker, and leaf (oracle/compressor) spans all landed.
+    for name in [
+        "round.broadcast",
+        "round.workers",
+        "round.absorb",
+        "round.observe",
+        "worker.round",
+        "oracle.grad",
+        "compress.apply",
+    ] {
+        assert!(
+            evs.iter().any(|e| e.get("name").unwrap().as_str() == Some(name)),
+            "missing {name} spans in the exported trace"
+        );
+    }
+    // All four workers show up as worker.round annotations.
+    for w in 0..4u64 {
+        assert!(
+            evs.iter().any(|e| {
+                e.get("name").unwrap().as_str() == Some("worker.round")
+                    && e.get("args").and_then(|a| a.get("w")).and_then(Json::as_f64)
+                        == Some(w as f64)
+            }),
+            "missing worker.round span for worker {w}"
+        );
+    }
+}

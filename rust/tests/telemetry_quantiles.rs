@@ -1,0 +1,110 @@
+//! Property tests for the log-linear histogram quantiles: the midpoint
+//! estimator must stay within the documented ≤ 1/16 relative error of an
+//! exact sorted reference across magnitudes and seeds, be monotone in q,
+//! and handle the documented edge cases (empty, single sample, 0, 1,
+//! `u64::MAX`).
+//!
+//! Private `Registry` instances only — this binary never touches the
+//! process-global telemetry flag, so the tests can run in parallel.
+
+use ef21::telemetry::Registry;
+use ef21::util::rng::Rng;
+
+/// Exact reference with the same rank convention as
+/// `HistogramSnapshot::quantile`: the `ceil(q * n).max(1)`-th smallest.
+fn exact_quantile(sorted: &[u64], q: f64) -> u64 {
+    assert!(!sorted.is_empty());
+    let rank = ((q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank - 1]
+}
+
+/// |est − exact| ≤ exact/16 + 1: the sub-bucket width is at most 1/16 of
+/// its lower bound (hence of any sample inside it), plus one for integer
+/// midpoint rounding in the exact unit-bucket range below 32.
+fn assert_within_bound(est: u64, exact: u64, ctx: &str) {
+    let bound = exact / 16 + 1;
+    let err = est.abs_diff(exact);
+    assert!(err <= bound, "{ctx}: est={est} exact={exact} err={err} > bound={bound}");
+}
+
+#[test]
+fn quantiles_track_the_exact_reference_across_magnitudes() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::seed(seed);
+        let reg = Registry::new();
+        let h = reg.histogram("q.prop");
+        let mut vals = Vec::with_capacity(1000);
+        for _ in 0..1000 {
+            // Mixed magnitudes: the sub-32 exact range, microsecond- and
+            // millisecond-scale latencies, and occasional huge outliers.
+            let v = match rng.next_u64() % 4 {
+                0 => rng.next_u64() % 32,
+                1 => 1_000 + rng.next_u64() % 9_000,
+                2 => 1_000_000 + rng.next_u64() % 9_000_000,
+                _ => rng.next_u64() % (1 << 40),
+            };
+            vals.push(v);
+            h.record(v);
+        }
+        vals.sort_unstable();
+        let snap = reg.snapshot();
+        let hs = snap.histogram("q.prop").unwrap();
+        for &q in &[0.0, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0] {
+            let est = hs.quantile(q);
+            let exact = exact_quantile(&vals, q);
+            assert_within_bound(est, exact, &format!("seed {seed} q={q}"));
+        }
+        assert_eq!(hs.max, *vals.last().unwrap(), "max is tracked exactly");
+    }
+}
+
+#[test]
+fn quantile_is_monotone_in_q() {
+    let mut rng = Rng::seed(42);
+    let reg = Registry::new();
+    let h = reg.histogram("q.mono");
+    for _ in 0..500 {
+        h.record(rng.next_u64() % (1 << 30));
+    }
+    let snap = reg.snapshot();
+    let hs = snap.histogram("q.mono").unwrap();
+    let mut last = 0u64;
+    for i in 0..=100u32 {
+        let q = f64::from(i) / 100.0;
+        let v = hs.quantile(q);
+        assert!(v >= last, "quantile({q}) = {v} went below {last}");
+        last = v;
+    }
+}
+
+#[test]
+fn edge_cases_empty_single_and_extremes() {
+    // Empty histogram: every quantile is 0.
+    let reg = Registry::new();
+    let _ = reg.histogram("q.edge"); // registered, never recorded
+    let snap = reg.snapshot();
+    let hs = snap.histogram("q.edge").unwrap();
+    assert_eq!(hs.count, 0);
+    for &q in &[0.0, 0.5, 1.0] {
+        assert_eq!(hs.quantile(q), 0);
+    }
+
+    // A single sample at each documented extreme stays within bound.
+    for v in [0u64, 1, 31, 32, u64::MAX] {
+        let reg = Registry::new();
+        reg.histogram("q.single").record(v);
+        let snap = reg.snapshot();
+        let hs = snap.histogram("q.single").unwrap();
+        assert_eq!(hs.count, 1);
+        for &q in &[0.0, 0.5, 1.0] {
+            assert_within_bound(hs.quantile(q), v, &format!("single value {v} q={q}"));
+        }
+        assert_eq!(hs.max, v, "exact max for single sample {v}");
+    }
+
+    // Below 32 the buckets are unit-width, so quantiles are exact.
+    let reg = Registry::new();
+    reg.histogram("q.unit").record(17);
+    let snap = reg.snapshot();
+    assert_eq!(snap.histogram("q.unit").unwrap().quantile(0.5), 17);
+}
