@@ -7,6 +7,7 @@
 
 use super::{BuildOpts, MasterNode, WireMsg, WorkerNode};
 use crate::blocks::{scatter_add_blocked, BlockLayout, ParamBlocks};
+use crate::ckpt::wire;
 use crate::compress::{Compressor, SparseVec};
 use crate::oracle::GradOracle;
 use crate::util::linalg;
@@ -62,7 +63,30 @@ impl WorkerNode for DcgdWorker {
     fn crash(&mut self) {}
 
     fn resync(&mut self, _state: &[f64]) {}
+
+    // DCGD has no Markov state; the blob only carries the RNG position
+    // (rand-k consumes it) and the cached loss/grad observables.
+    fn ckpt_save(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        wire::put_u8(out, CKPT_TAG);
+        wire::put_rng(out, &self.rng);
+        wire::put_f64(out, self.last_loss);
+        wire::put_f64s(out, &self.last_grad);
+        Ok(())
+    }
+
+    fn ckpt_load(&mut self, blob: &[u8]) -> anyhow::Result<()> {
+        let mut rd = wire::Rd::new(blob);
+        anyhow::ensure!(rd.u8()? == CKPT_TAG, "checkpoint blob is not DCGD worker state");
+        self.rng = wire::read_rng(&mut rd)?;
+        self.last_loss = rd.f64()?;
+        wire::read_f64s_into(&mut rd, &mut self.last_grad)?;
+        rd.done()
+    }
 }
+
+/// Blob discriminator shared by the DCGD worker and master state blobs
+/// (GD is DCGD with the identity compressor, so it shares the tag too).
+const CKPT_TAG: u8 = 0x0D;
 
 pub struct DcgdMaster {
     x: Vec<f64>,
@@ -127,6 +151,21 @@ impl MasterNode for DcgdMaster {
         let payloads: Vec<&SparseVec> = msgs.iter().map(|m| &m.payload().sparse).collect();
         let layout = self.u.layout().clone();
         scatter_add_blocked(self.u.as_mut_slice(), &layout, &payloads, inv_n, self.threads);
+    }
+
+    fn ckpt_save(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        wire::put_u8(out, CKPT_TAG);
+        wire::put_f64s(out, &self.x);
+        wire::put_f64s(out, self.u.as_slice());
+        Ok(())
+    }
+
+    fn ckpt_load(&mut self, blob: &[u8]) -> anyhow::Result<()> {
+        let mut rd = wire::Rd::new(blob);
+        anyhow::ensure!(rd.u8()? == CKPT_TAG, "checkpoint blob is not DCGD master state");
+        wire::read_f64s_into(&mut rd, &mut self.x)?;
+        wire::read_f64s_into(&mut rd, self.u.as_mut_slice())?;
+        rd.done()
     }
 }
 

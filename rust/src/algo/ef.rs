@@ -9,6 +9,7 @@
 
 use super::{BuildOpts, MasterNode, WireMsg, WorkerNode};
 use crate::blocks::{scatter_add_blocked, BlockLayout, ParamBlocks};
+use crate::ckpt::wire;
 use crate::compress::{Compressor, SparseVec};
 use crate::oracle::GradOracle;
 use crate::util::linalg;
@@ -92,7 +93,31 @@ impl WorkerNode for EfWorker {
     fn last_grad(&self) -> &[f64] {
         &self.last_grad
     }
+
+    // The error accumulator is not message-reconstructible (no resync),
+    // but it checkpoints fine: the blob serializes e_i directly.
+    fn ckpt_save(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        wire::put_u8(out, CKPT_TAG);
+        wire::put_rng(out, &self.rng);
+        wire::put_f64(out, self.last_loss);
+        wire::put_f64s(out, &self.last_grad);
+        wire::put_f64s(out, self.e.as_slice());
+        Ok(())
+    }
+
+    fn ckpt_load(&mut self, blob: &[u8]) -> anyhow::Result<()> {
+        let mut rd = wire::Rd::new(blob);
+        anyhow::ensure!(rd.u8()? == CKPT_TAG, "checkpoint blob is not EF worker state");
+        self.rng = wire::read_rng(&mut rd)?;
+        self.last_loss = rd.f64()?;
+        wire::read_f64s_into(&mut rd, &mut self.last_grad)?;
+        wire::read_f64s_into(&mut rd, self.e.as_mut_slice())?;
+        rd.done()
+    }
 }
+
+/// Blob discriminator shared by the EF worker and master state blobs.
+const CKPT_TAG: u8 = 0x0E;
 
 pub struct EfMaster {
     x: Vec<f64>,
@@ -155,6 +180,21 @@ impl MasterNode for EfMaster {
         let payloads: Vec<&SparseVec> = msgs.iter().map(|m| &m.payload().sparse).collect();
         let layout = self.u.layout().clone();
         scatter_add_blocked(self.u.as_mut_slice(), &layout, &payloads, inv_n, self.threads);
+    }
+
+    fn ckpt_save(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        wire::put_u8(out, CKPT_TAG);
+        wire::put_f64s(out, &self.x);
+        wire::put_f64s(out, self.u.as_slice());
+        Ok(())
+    }
+
+    fn ckpt_load(&mut self, blob: &[u8]) -> anyhow::Result<()> {
+        let mut rd = wire::Rd::new(blob);
+        anyhow::ensure!(rd.u8()? == CKPT_TAG, "checkpoint blob is not EF master state");
+        wire::read_f64s_into(&mut rd, &mut self.x)?;
+        wire::read_f64s_into(&mut rd, self.u.as_mut_slice())?;
+        rd.done()
     }
 }
 

@@ -8,6 +8,7 @@
 
 use super::{BuildOpts, MasterNode, WireMsg, WorkerNode};
 use crate::blocks::{scatter_add_blocked, BlockLayout, ParamBlocks};
+use crate::ckpt::wire;
 use crate::compress::{Compressor, SparseVec};
 use crate::oracle::GradOracle;
 use crate::util::linalg;
@@ -127,7 +128,29 @@ impl WorkerNode for Ef21Worker {
         assert_eq!(state.len(), self.g.as_slice().len(), "StateSync dimension mismatch");
         self.g.as_mut_slice().copy_from_slice(state);
     }
+
+    fn ckpt_save(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        wire::put_u8(out, CKPT_TAG);
+        wire::put_rng(out, &self.rng);
+        wire::put_f64(out, self.last_loss);
+        wire::put_f64s(out, &self.last_grad);
+        wire::put_f64s(out, self.g.as_slice());
+        Ok(())
+    }
+
+    fn ckpt_load(&mut self, blob: &[u8]) -> anyhow::Result<()> {
+        let mut rd = wire::Rd::new(blob);
+        anyhow::ensure!(rd.u8()? == CKPT_TAG, "checkpoint blob is not EF21 worker state");
+        self.rng = wire::read_rng(&mut rd)?;
+        self.last_loss = rd.f64()?;
+        wire::read_f64s_into(&mut rd, &mut self.last_grad)?;
+        wire::read_f64s_into(&mut rd, self.g.as_mut_slice())?;
+        rd.done()
+    }
 }
+
+/// Blob discriminator shared by the EF21 worker and master state blobs.
+const CKPT_TAG: u8 = 0x21;
 
 pub struct Ef21Master {
     x: Vec<f64>,
@@ -203,6 +226,21 @@ impl MasterNode for Ef21Master {
         let payloads: Vec<&SparseVec> = msgs.iter().map(|m| &m.payload().sparse).collect();
         let layout = self.g.layout().clone();
         scatter_add_blocked(self.g.as_mut_slice(), &layout, &payloads, inv_n, self.threads);
+    }
+
+    fn ckpt_save(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        wire::put_u8(out, CKPT_TAG);
+        wire::put_f64s(out, &self.x);
+        wire::put_f64s(out, self.g.as_slice());
+        Ok(())
+    }
+
+    fn ckpt_load(&mut self, blob: &[u8]) -> anyhow::Result<()> {
+        let mut rd = wire::Rd::new(blob);
+        anyhow::ensure!(rd.u8()? == CKPT_TAG, "checkpoint blob is not EF21 master state");
+        wire::read_f64s_into(&mut rd, &mut self.x)?;
+        wire::read_f64s_into(&mut rd, self.g.as_mut_slice())?;
+        rd.done()
     }
 }
 

@@ -12,6 +12,7 @@
 
 use super::{BuildOpts, MasterNode, WireMsg, WorkerNode};
 use crate::blocks::{BlockLayout, ParamBlocks, Workspace};
+use crate::ckpt::wire;
 use crate::compress::Compressor;
 use crate::oracle::GradOracle;
 use crate::util::linalg;
@@ -175,7 +176,31 @@ impl WorkerNode for Ef21PlusWorker {
         assert_eq!(state.len(), self.g.as_slice().len(), "StateSync dimension mismatch");
         self.g.as_mut_slice().copy_from_slice(state);
     }
+
+    fn ckpt_save(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        wire::put_u8(out, CKPT_TAG);
+        wire::put_rng(out, &self.rng);
+        wire::put_f64(out, self.last_loss);
+        wire::put_f64s(out, &self.last_grad);
+        wire::put_f64s(out, self.g.as_slice());
+        wire::put_u8(out, self.last_branch_dcgd as u8);
+        Ok(())
+    }
+
+    fn ckpt_load(&mut self, blob: &[u8]) -> anyhow::Result<()> {
+        let mut rd = wire::Rd::new(blob);
+        anyhow::ensure!(rd.u8()? == CKPT_TAG, "checkpoint blob is not EF21+ worker state");
+        self.rng = wire::read_rng(&mut rd)?;
+        self.last_loss = rd.f64()?;
+        wire::read_f64s_into(&mut rd, &mut self.last_grad)?;
+        wire::read_f64s_into(&mut rd, self.g.as_mut_slice())?;
+        self.last_branch_dcgd = rd.u8()? != 0;
+        rd.done()
+    }
 }
+
+/// Blob discriminator shared by the EF21+ worker and master state blobs.
+const CKPT_TAG: u8 = 0x2B;
 
 pub struct Ef21PlusMaster {
     x: Vec<f64>,
@@ -245,6 +270,30 @@ impl MasterNode for Ef21PlusMaster {
                 WireMsg::Sparse(_) => panic!("EF21+ master expects tagged messages"),
             }
         }
+    }
+
+    fn ckpt_save(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        wire::put_u8(out, CKPT_TAG);
+        wire::put_f64s(out, &self.x);
+        wire::put_u32(out, self.g_i.len() as u32);
+        for gi in &self.g_i {
+            wire::put_f64s(out, gi);
+        }
+        wire::put_f64s(out, &self.g_sum);
+        Ok(())
+    }
+
+    fn ckpt_load(&mut self, blob: &[u8]) -> anyhow::Result<()> {
+        let mut rd = wire::Rd::new(blob);
+        anyhow::ensure!(rd.u8()? == CKPT_TAG, "checkpoint blob is not EF21+ master state");
+        wire::read_f64s_into(&mut rd, &mut self.x)?;
+        let n = rd.u32()? as usize;
+        anyhow::ensure!(n == self.g_i.len(), "EF21+ master blob has {n} mirrors, run has {}", self.g_i.len());
+        for gi in self.g_i.iter_mut() {
+            wire::read_f64s_into(&mut rd, gi)?;
+        }
+        wire::read_f64s_into(&mut rd, &mut self.g_sum)?;
+        rd.done()
     }
 }
 

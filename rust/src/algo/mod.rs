@@ -205,6 +205,26 @@ pub trait WorkerNode: Send {
         let _ = state;
         unreachable!("resync scheduled for a worker without resync support");
     }
+
+    // -- checkpoint hooks (durable run snapshots, `crate::ckpt`) --
+
+    /// Append every piece of round-to-round state — algorithm state, the
+    /// RNG stream position, cached instrumentation — to `out` as an
+    /// opaque blob ([`crate::ckpt::wire`] encoding). Restoring the blob
+    /// via [`Self::ckpt_load`] into a freshly built worker must continue
+    /// the trajectory bitwise identically. Oracles, compressors, and
+    /// layouts are rebuilt from configuration, not serialized.
+    fn ckpt_save(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        let _ = out;
+        anyhow::bail!("this worker does not support checkpointing")
+    }
+
+    /// Restore state written by [`Self::ckpt_save`] on an identically
+    /// configured worker.
+    fn ckpt_load(&mut self, blob: &[u8]) -> anyhow::Result<()> {
+        let _ = blob;
+        anyhow::bail!("this worker does not support checkpointing")
+    }
 }
 
 /// Master-side state machine.
@@ -233,6 +253,22 @@ pub trait MasterNode: Send {
 
     /// Absorb this round's uplink messages.
     fn absorb(&mut self, msgs: &[WireMsg]);
+
+    // -- checkpoint hooks (durable run snapshots, `crate::ckpt`) --
+
+    /// Append the master's full state (model + aggregate) to `out` as an
+    /// opaque blob; see [`WorkerNode::ckpt_save`].
+    fn ckpt_save(&self, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        let _ = out;
+        anyhow::bail!("this master does not support checkpointing")
+    }
+
+    /// Restore state written by [`Self::ckpt_save`] on an identically
+    /// configured master.
+    fn ckpt_load(&mut self, blob: &[u8]) -> anyhow::Result<()> {
+        let _ = blob;
+        anyhow::bail!("this master does not support checkpointing")
+    }
 }
 
 /// Algorithm selector (CLI/config facing).

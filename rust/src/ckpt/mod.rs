@@ -1,0 +1,471 @@
+//! Durable checkpoint/resume: a versioned binary snapshot of everything
+//! the round loop needs to continue a run **bitwise identically** after
+//! a master crash.
+//!
+//! # What is captured
+//!
+//! EF21's Markov-state view ("EF21 with Bells & Whistles", arXiv
+//! 2110.03294) pins down the full run state exactly:
+//!
+//! * the model `x` and the master's aggregate state (inside the opaque
+//!   master blob, serialized by [`crate::algo::MasterNode::ckpt_save`]);
+//! * every worker's Markov/error state `g_i`/`e_i`, RNG stream position
+//!   (rand-k consumes the stream every compress), and cached
+//!   instrumentation (`last_loss`/`last_grad` — under partial
+//!   participation an absent worker's stale cache feeds the divergence
+//!   sum and the round records, so it is trajectory-relevant state);
+//! * the master's resync mirrors ([`crate::sched::StateTracker`]);
+//! * the [`crate::transport::downlink::DownlinkMeter`] image + counters
+//!   (the delta planner must keep patching against what workers hold);
+//! * the recorded [`History`] so far and the cumulative uplink bits;
+//! * the next round index. The scheduler itself is **not** serialized:
+//!   round plans are pure in `(spec, seed, t, n)`, so the round index is
+//!   the entire scheduler position.
+//!
+//! Not captured: oracles/datasets, compressor objects, layouts, stepsize
+//! — all rebuilt from the run configuration, which the caller fingerprints
+//! ([`Checkpoint::fingerprint`]) so a checkpoint cannot be resumed into a
+//! mismatched run. Transport frame-byte counters restart from zero.
+//!
+//! # Container format (`ef21.ckpt/v1`)
+//!
+//! ```text
+//!   magic  "ef21.ckpt/v1\n"
+//!   sections: [u32 tag][u64 len][payload]...   (little-endian)
+//!   last section: CKSUM — FNV-1a-64 over every preceding byte
+//! ```
+//!
+//! Unknown section tags are rejected (v1 readers read v1 files only);
+//! truncation, trailing garbage, and bit flips all fail with a clear
+//! error instead of resuming a corrupted run. Writes go through
+//! [`Checkpoint::write_atomic`]: tmp file + rename, so a crash mid-write
+//! leaves the previous checkpoint intact.
+
+pub mod wire;
+
+use crate::metrics::{History, RoundRecord};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+use wire::Rd;
+
+/// File magic, version included.
+pub const MAGIC: &[u8] = b"ef21.ckpt/v1\n";
+
+// Section tags.
+const SEC_META: u32 = 1;
+const SEC_MASTER: u32 = 2;
+const SEC_WORKERS: u32 = 3;
+const SEC_TRACKER: u32 = 4;
+const SEC_DOWNLINK: u32 = 5;
+const SEC_HISTORY: u32 = 6;
+const SEC_LOSSES: u32 = 7;
+const SEC_CKSUM: u32 = 0xC5C5_C5C5;
+
+/// FNV-1a 64 over a byte slice (no external deps; collision resistance
+/// is not the goal — catching truncation and bit rot is).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Downlink meter dynamic state: last-broadcast f32 image (None until
+/// the first broadcast / dense mode) + cumulative payload bits +
+/// cumulative dense-baseline bits.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DownlinkState {
+    pub last: Option<Vec<f32>>,
+    pub bits_cum: u64,
+    pub dense_bits_cum: u64,
+}
+
+/// One decoded/encodable run snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    /// Caller-chosen run identity (algo, compressor, shape, seed,
+    /// schedule...). Resume verifies it verbatim.
+    pub fingerprint: String,
+    /// First round the resumed loop executes.
+    pub next_round: usize,
+    /// Cumulative uplink bits at snapshot time (the `bits/n` x-axis).
+    pub uplink_bits_cum: u64,
+    /// Opaque master blob ([`crate::algo::MasterNode::ckpt_save`]).
+    pub master: Vec<u8>,
+    /// Opaque per-worker blobs, in worker order.
+    pub workers: Vec<Vec<u8>>,
+    /// Resync mirrors, present iff the run keeps a StateTracker.
+    pub tracker: Option<Vec<Vec<f64>>>,
+    /// Downlink meter state.
+    pub downlink: DownlinkState,
+    /// Everything recorded so far (final_x is ignored/empty).
+    pub history: History,
+    /// Master-side per-worker loss cache (distributed scheduled runner
+    /// only; the sim runners cache inside the worker blobs).
+    pub last_loss: Option<Vec<f64>>,
+}
+
+fn put_section(out: &mut Vec<u8>, tag: u32, payload: &[u8]) {
+    wire::put_u32(out, tag);
+    wire::put_u64(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+}
+
+impl Checkpoint {
+    /// Serialize to the `ef21.ckpt/v1` container.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+
+        let mut sec = Vec::new();
+        wire::put_str(&mut sec, &self.fingerprint);
+        wire::put_u64(&mut sec, self.next_round as u64);
+        wire::put_u64(&mut sec, self.uplink_bits_cum);
+        wire::put_u32(&mut sec, self.workers.len() as u32);
+        put_section(&mut out, SEC_META, &sec);
+
+        put_section(&mut out, SEC_MASTER, &self.master);
+
+        sec.clear();
+        wire::put_u32(&mut sec, self.workers.len() as u32);
+        for blob in &self.workers {
+            wire::put_u32(&mut sec, blob.len() as u32);
+            sec.extend_from_slice(blob);
+        }
+        put_section(&mut out, SEC_WORKERS, &sec);
+
+        if let Some(mirrors) = &self.tracker {
+            sec.clear();
+            wire::put_u32(&mut sec, mirrors.len() as u32);
+            for m in mirrors {
+                wire::put_f64s(&mut sec, m);
+            }
+            put_section(&mut out, SEC_TRACKER, &sec);
+        }
+
+        sec.clear();
+        match &self.downlink.last {
+            Some(img) => {
+                wire::put_u8(&mut sec, 1);
+                wire::put_u32(&mut sec, img.len() as u32);
+                for &v in img {
+                    wire::put_f32(&mut sec, v);
+                }
+            }
+            None => wire::put_u8(&mut sec, 0),
+        }
+        wire::put_u64(&mut sec, self.downlink.bits_cum);
+        wire::put_u64(&mut sec, self.downlink.dense_bits_cum);
+        put_section(&mut out, SEC_DOWNLINK, &sec);
+
+        sec.clear();
+        wire::put_str(&mut sec, &self.history.label);
+        wire::put_u64(&mut sec, self.history.downlink_bits);
+        wire::put_u32(&mut sec, self.history.records.len() as u32);
+        for r in &self.history.records {
+            wire::put_u64(&mut sec, r.round as u64);
+            wire::put_f64(&mut sec, r.bits_per_client);
+            wire::put_f64(&mut sec, r.loss);
+            wire::put_f64(&mut sec, r.grad_norm_sq);
+            wire::put_f64(&mut sec, r.gt);
+            wire::put_f64(&mut sec, r.dcgd_frac);
+        }
+        put_section(&mut out, SEC_HISTORY, &sec);
+
+        if let Some(losses) = &self.last_loss {
+            sec.clear();
+            wire::put_f64s(&mut sec, losses);
+            put_section(&mut out, SEC_LOSSES, &sec);
+        }
+
+        let sum = fnv1a64(&out);
+        let mut tail = Vec::with_capacity(8);
+        wire::put_u64(&mut tail, sum);
+        put_section(&mut out, SEC_CKSUM, &tail);
+        out
+    }
+
+    /// Decode and verify an `ef21.ckpt/v1` container.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        ensure!(
+            bytes.len() >= MAGIC.len() && &bytes[..MAGIC.len()] == MAGIC,
+            "not an ef21 checkpoint (bad magic; expected {:?})",
+            String::from_utf8_lossy(MAGIC).trim_end()
+        );
+        let mut ck = Checkpoint::default();
+        let mut rd = Rd::new(&bytes[MAGIC.len()..]);
+        let mut meta_workers: Option<usize> = None;
+        let mut seen_cksum = false;
+        let mut seen = std::collections::BTreeSet::new();
+        while rd.remaining() > 0 {
+            ensure!(!seen_cksum, "trailing bytes after the checksum section");
+            let base = bytes.len() - rd.remaining();
+            let tag = rd.u32().context("truncated section header")?;
+            let len = rd.u64().context("truncated section header")? as usize;
+            let payload = rd
+                .bytes(len)
+                .with_context(|| format!("truncated section 0x{tag:x} ({len} bytes declared)"))?;
+            ensure!(seen.insert(tag), "duplicate section 0x{tag:x}");
+            let mut p = Rd::new(payload);
+            match tag {
+                SEC_META => {
+                    ck.fingerprint = p.str()?;
+                    ck.next_round = p.u64()? as usize;
+                    ck.uplink_bits_cum = p.u64()?;
+                    meta_workers = Some(p.u32()? as usize);
+                }
+                SEC_MASTER => ck.master = payload.to_vec(),
+                SEC_WORKERS => {
+                    let n = p.u32()? as usize;
+                    let mut blobs = Vec::with_capacity(n.min(1 << 16));
+                    for _ in 0..n {
+                        let blen = p.u32()? as usize;
+                        blobs.push(p.bytes(blen).context("truncated worker blob")?.to_vec());
+                    }
+                    ck.workers = blobs;
+                }
+                SEC_TRACKER => {
+                    let n = p.u32()? as usize;
+                    let mut mirrors = Vec::with_capacity(n.min(1 << 16));
+                    for _ in 0..n {
+                        mirrors.push(p.f64s()?);
+                    }
+                    ck.tracker = Some(mirrors);
+                }
+                SEC_DOWNLINK => {
+                    let has_img = p.u8()?;
+                    ck.downlink.last = match has_img {
+                        0 => None,
+                        1 => {
+                            let d = p.u32()? as usize;
+                            let mut img = Vec::with_capacity(p.clamped_cap(d, 4));
+                            for _ in 0..d {
+                                img.push(p.f32()?);
+                            }
+                            Some(img)
+                        }
+                        other => bail!("downlink section: bad image flag {other}"),
+                    };
+                    ck.downlink.bits_cum = p.u64()?;
+                    ck.downlink.dense_bits_cum = p.u64()?;
+                }
+                SEC_HISTORY => {
+                    ck.history.label = p.str()?;
+                    ck.history.downlink_bits = p.u64()?;
+                    let n = p.u32()? as usize;
+                    let mut records = Vec::with_capacity(p.clamped_cap(n, 48));
+                    for _ in 0..n {
+                        records.push(RoundRecord {
+                            round: p.u64()? as usize,
+                            bits_per_client: p.f64()?,
+                            loss: p.f64()?,
+                            grad_norm_sq: p.f64()?,
+                            gt: p.f64()?,
+                            dcgd_frac: p.f64()?,
+                        });
+                    }
+                    ck.history.records = records;
+                }
+                SEC_LOSSES => ck.last_loss = Some(p.f64s()?),
+                SEC_CKSUM => {
+                    let want = p.u64()?;
+                    let got = fnv1a64(&bytes[..base]);
+                    ensure!(
+                        want == got,
+                        "checkpoint checksum mismatch (file {want:#018x}, computed \
+                         {got:#018x}) — the file is truncated or corrupted"
+                    );
+                    seen_cksum = true;
+                }
+                other => bail!("unknown checkpoint section 0x{other:x} (v1 reader)"),
+            }
+            if tag != SEC_CKSUM {
+                p.done().with_context(|| format!("section 0x{tag:x} has trailing bytes"))?;
+            }
+        }
+        ensure!(seen_cksum, "checkpoint has no checksum section (truncated file?)");
+        ensure!(seen.contains(&SEC_META), "checkpoint has no META section");
+        ensure!(seen.contains(&SEC_MASTER), "checkpoint has no MASTER section");
+        ensure!(seen.contains(&SEC_WORKERS), "checkpoint has no WORKERS section");
+        ensure!(seen.contains(&SEC_HISTORY), "checkpoint has no HISTORY section");
+        if let Some(nw) = meta_workers {
+            ensure!(
+                nw == ck.workers.len(),
+                "META declares {nw} workers but the WORKERS section holds {}",
+                ck.workers.len()
+            );
+        }
+        Ok(ck)
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, fsync, rename over
+    /// `path`. Returns the encoded size in bytes. Metered under
+    /// `ckpt.write.ns` / `ckpt.bytes`.
+    pub fn write_atomic(&self, path: &Path) -> Result<u64> {
+        let t0 = crate::telemetry::maybe_now();
+        let bytes = self.encode();
+        let tmp = path.with_extension(match path.extension() {
+            Some(e) => format!("{}.tmp", e.to_string_lossy()),
+            None => "tmp".to_string(),
+        });
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+        crate::telemetry::counter(crate::telemetry::keys::CKPT_BYTES).incr(bytes.len() as u64);
+        if let Some(t0) = t0 {
+            crate::telemetry::record_elapsed_ns(crate::telemetry::keys::CKPT_WRITE_NS, t0);
+        }
+        Ok(bytes.len() as u64)
+    }
+
+    /// Read + decode a checkpoint file.
+    pub fn read(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::decode(&bytes)
+            .with_context(|| format!("decoding checkpoint {}", path.display()))
+    }
+
+    /// Verify the run identity before resuming into a configuration the
+    /// snapshot was not taken from.
+    pub fn verify_fingerprint(&self, expected: &str) -> Result<()> {
+        ensure!(
+            self.fingerprint == expected,
+            "checkpoint was taken from a different run:\n  checkpoint: {}\n  this run:   {}",
+            self.fingerprint,
+            expected
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            fingerprint: "EF21|top1|n=4|d=8|seed=0|sched=".into(),
+            next_round: 7,
+            uplink_bits_cum: 12345,
+            master: vec![1, 2, 3, 4],
+            workers: vec![vec![9], vec![], vec![8, 7]],
+            tracker: Some(vec![vec![1.0, -2.0], vec![0.5, 0.25]]),
+            downlink: DownlinkState {
+                last: Some(vec![1.0f32, 2.5]),
+                bits_cum: 640,
+                dense_bits_cum: 640,
+            },
+            history: History {
+                label: "EF21 top1 1x".into(),
+                records: vec![RoundRecord {
+                    round: 6,
+                    bits_per_client: 96.0,
+                    loss: 0.5,
+                    grad_norm_sq: 1e-3,
+                    gt: 2e-3,
+                    dcgd_frac: 0.0,
+                }],
+                downlink_bits: 2048,
+                final_x: Vec::new(),
+            },
+            last_loss: Some(vec![0.1, 0.2, 0.3]),
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let ck = sample();
+        let bytes = ck.encode();
+        assert_eq!(&bytes[..MAGIC.len()], MAGIC);
+        let back = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(back.fingerprint, ck.fingerprint);
+        assert_eq!(back.next_round, 7);
+        assert_eq!(back.uplink_bits_cum, 12345);
+        assert_eq!(back.master, ck.master);
+        assert_eq!(back.workers, ck.workers);
+        assert_eq!(back.tracker, ck.tracker);
+        assert_eq!(back.downlink, ck.downlink);
+        assert_eq!(back.history.label, ck.history.label);
+        assert_eq!(back.history.downlink_bits, 2048);
+        assert_eq!(back.history.records.len(), 1);
+        assert_eq!(back.history.records[0].round, 6);
+        assert_eq!(back.history.records[0].loss.to_bits(), 0.5f64.to_bits());
+        assert_eq!(back.last_loss, ck.last_loss);
+    }
+
+    #[test]
+    fn optional_sections_roundtrip_absent() {
+        let ck = Checkpoint { tracker: None, last_loss: None, ..sample() };
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        assert!(back.tracker.is_none());
+        assert!(back.last_loss.is_none());
+    }
+
+    #[test]
+    fn corruption_is_rejected_with_clear_errors() {
+        let bytes = sample().encode();
+        // Bad magic.
+        let mut b = bytes.clone();
+        b[0] ^= 0xFF;
+        let e = Checkpoint::decode(&b).unwrap_err().to_string();
+        assert!(e.contains("bad magic"), "{e}");
+        // Truncation (drop the checksum tail).
+        let e = Checkpoint::decode(&bytes[..bytes.len() - 10]).unwrap_err();
+        assert!(format!("{e:#}").contains("truncated"), "{e:#}");
+        // A flipped payload byte fails the checksum.
+        let mut b = bytes.clone();
+        let mid = MAGIC.len() + 20;
+        b[mid] ^= 0x01;
+        let e = format!("{:#}", Checkpoint::decode(&b).unwrap_err());
+        assert!(e.contains("checksum mismatch"), "{e}");
+        // Trailing garbage after the checksum.
+        let mut b = bytes.clone();
+        b.extend_from_slice(&[0u8; 12]);
+        assert!(Checkpoint::decode(&b).is_err());
+        // Empty file.
+        assert!(Checkpoint::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_rejected() {
+        let ck = sample();
+        assert!(ck.verify_fingerprint(&ck.fingerprint).is_ok());
+        let e = ck.verify_fingerprint("EF|rand8|n=2").unwrap_err().to_string();
+        assert!(e.contains("different run"), "{e}");
+    }
+
+    #[test]
+    fn write_atomic_roundtrips_and_replaces() {
+        let dir = std::env::temp_dir().join(format!("ef21_ckpt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        let ck = sample();
+        let n = ck.write_atomic(&path).unwrap();
+        assert_eq!(n, ck.encode().len() as u64);
+        let back = Checkpoint::read(&path).unwrap();
+        assert_eq!(back.next_round, ck.next_round);
+        // Overwrite with a later snapshot; the tmp file must be gone.
+        let later = Checkpoint { next_round: 9, ..ck };
+        later.write_atomic(&path).unwrap();
+        assert_eq!(Checkpoint::read(&path).unwrap().next_round, 9);
+        assert!(!path.with_extension("ckpt.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

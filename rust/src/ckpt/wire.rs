@@ -1,0 +1,189 @@
+//! Little-endian byte helpers shared by the checkpoint container and the
+//! per-node state blobs ([`crate::algo::WorkerNode::ckpt_save`] &c.).
+//! Reads are checked: truncated input is an error, never a panic.
+
+use anyhow::{ensure, Result};
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// u32 length prefix + raw f64s.
+pub fn put_f64s(out: &mut Vec<u8>, v: &[f64]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        put_f64(out, x);
+    }
+}
+
+/// u32 length prefix + UTF-8 bytes.
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Serialize an RNG stream position (4×u64, [`crate::util::rng::Rng::state`]).
+pub fn put_rng(out: &mut Vec<u8>, rng: &crate::util::rng::Rng) {
+    for w in rng.state() {
+        put_u64(out, w);
+    }
+}
+
+/// Read an RNG stream position written by [`put_rng`].
+pub fn read_rng(rd: &mut Rd) -> Result<crate::util::rng::Rng> {
+    let s = [rd.u64()?, rd.u64()?, rd.u64()?, rd.u64()?];
+    Ok(crate::util::rng::Rng::from_state(s))
+}
+
+/// Read a [`put_f64s`] vector into an existing buffer; the length must
+/// match exactly (state blobs are restored into identically configured
+/// nodes, so a length mismatch means a config/checkpoint mismatch).
+pub fn read_f64s_into(rd: &mut Rd, out: &mut [f64]) -> Result<()> {
+    let n = rd.u32()? as usize;
+    ensure!(n == out.len(), "blob vector len {n} vs expected {}", out.len());
+    for v in out.iter_mut() {
+        *v = rd.f64()?;
+    }
+    Ok(())
+}
+
+/// Checked little-endian reader over a byte slice.
+pub struct Rd<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Rd<'a> {
+    pub fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b, i: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.remaining() >= n,
+            "truncated blob: need {n} bytes at offset {}, have {}",
+            self.i,
+            self.remaining()
+        );
+        let out = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed f64 vector ([`put_f64s`]).
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(self.clamped_cap(n, 8));
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed UTF-8 string ([`put_str`]).
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.bytes(n)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("invalid UTF-8 in blob string: {e}"))?
+            .to_string())
+    }
+
+    /// A safe `Vec::with_capacity` argument for `declared` elements of
+    /// `bytes_per` bytes each: never more than the bytes actually left,
+    /// so a corrupted length prefix cannot trigger a huge allocation
+    /// before the read fails.
+    pub fn clamped_cap(&self, declared: usize, bytes_per: usize) -> usize {
+        declared.min(self.remaining() / bytes_per.max(1))
+    }
+
+    /// Assert the blob was consumed exactly.
+    pub fn done(&self) -> Result<()> {
+        ensure!(self.remaining() == 0, "{} trailing bytes in blob", self.remaining());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_primitives() {
+        let mut b = Vec::new();
+        put_u8(&mut b, 7);
+        put_u32(&mut b, 0xDEAD_BEEF);
+        put_u64(&mut b, u64::MAX - 1);
+        put_f32(&mut b, -1.5);
+        put_f64(&mut b, std::f64::consts::PI);
+        put_f64s(&mut b, &[1.0, -0.0, f64::INFINITY]);
+        put_str(&mut b, "ef21");
+        let mut r = Rd::new(&b);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f64().unwrap().to_bits(), std::f64::consts::PI.to_bits());
+        let v = r.f64s().unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.str().unwrap(), "ef21");
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn truncation_and_trailing_are_errors() {
+        let mut b = Vec::new();
+        put_u64(&mut b, 42);
+        let mut r = Rd::new(&b[..5]);
+        assert!(r.u64().is_err());
+        let mut r = Rd::new(&b);
+        assert_eq!(r.u32().unwrap(), 42);
+        assert!(r.done().is_err());
+        // Corrupted length prefix: errors without a giant allocation.
+        let mut b = Vec::new();
+        put_u32(&mut b, u32::MAX);
+        let mut r = Rd::new(&b);
+        assert!(r.f64s().is_err());
+    }
+}

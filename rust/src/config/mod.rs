@@ -227,6 +227,71 @@ impl SchedSpec {
     }
 }
 
+/// `--checkpoint`/`--checkpoint-every`/`--resume` spec: durable
+/// snapshot/restart configuration (see [`crate::ckpt`]). The default —
+/// no snapshot path, no resume — is the exact legacy run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CkptSpec {
+    /// Snapshot destination (`--checkpoint <path>`); written atomically
+    /// (tmp + rename) so a crash mid-write can never corrupt the last
+    /// good snapshot.
+    pub save_path: Option<std::path::PathBuf>,
+    /// Snapshot cadence in rounds (`--checkpoint-every <r>`, default 1:
+    /// a snapshot at the end of every round).
+    pub every: usize,
+    /// Snapshot to resume from (`--resume <path>`).
+    pub resume_path: Option<std::path::PathBuf>,
+}
+
+impl Default for CkptSpec {
+    fn default() -> Self {
+        CkptSpec { save_path: None, every: 1, resume_path: None }
+    }
+}
+
+impl CkptSpec {
+    /// Read `--checkpoint`, `--checkpoint-every`, and `--resume` from
+    /// parsed args (all absent = legacy: no snapshots, no resume).
+    pub fn from_args(args: &cli::Args) -> Result<CkptSpec> {
+        let save_path = args.get_str("checkpoint").map(std::path::PathBuf::from);
+        anyhow::ensure!(
+            save_path.is_some() || args.get_str("checkpoint-every").is_none(),
+            "--checkpoint-every needs --checkpoint <path>"
+        );
+        let every = args.get_parse::<usize>("checkpoint-every")?.unwrap_or(1);
+        anyhow::ensure!(every >= 1, "--checkpoint-every 0: need a positive round cadence");
+        let resume_path = args.get_str("resume").map(std::path::PathBuf::from);
+        Ok(CkptSpec { save_path, every, resume_path })
+    }
+
+    /// True when this spec cannot change the legacy run at all.
+    pub fn is_legacy(&self) -> bool {
+        self.save_path.is_none() && self.resume_path.is_none()
+    }
+
+    /// Resolve to runner [`CkptOptions`]: read and decode the resume
+    /// snapshot (checksum-verified), check its fingerprint against this
+    /// run's identity, and stamp the same fingerprint into any snapshots
+    /// the run writes.
+    pub fn build(
+        &self,
+        fingerprint: &str,
+    ) -> Result<crate::coordinator::runner::CkptOptions> {
+        use crate::coordinator::runner::{CkptOptions, SaveCfg};
+        let mut opts = CkptOptions::default();
+        if let Some(path) = &self.save_path {
+            opts.save = Some(SaveCfg { path: path.clone(), every: self.every.max(1) });
+        }
+        if let Some(path) = &self.resume_path {
+            let ck = crate::ckpt::Checkpoint::read(path)?;
+            ck.verify_fingerprint(fingerprint)?;
+            opts.resume = Some(ck);
+        }
+        opts.fingerprint = Some(fingerprint.to_string());
+        Ok(opts)
+    }
+}
+
 /// Read `--net-timeout-ms` (0 = disable I/O timeouts). The caller
 /// installs it process-wide via
 /// [`crate::transport::tcp::set_default_io_timeout_ms`]; when absent the
@@ -330,6 +395,37 @@ impl RunSpec {
             self.compressor,
             self.gamma_mult,
             self.dataset
+        )
+    }
+
+    /// Run identity stamped into checkpoints and verified on resume:
+    /// everything a resumed trajectory must share with the saving run to
+    /// be bitwise-identical. `d` is the resolved problem dimension and
+    /// `transport` the runner path (`sim`, `local`, `tcp`, ...).
+    ///
+    /// Deliberately excluded: `rounds` (resuming with a larger horizon
+    /// just trains further), `threads` (pooled runs are bit-identical to
+    /// sequential), `telemetry` (metering never touches the math), and
+    /// the fault plan's `killmaster` clause (the resumed run is launched
+    /// without the very crash the checkpoint recovers from).
+    pub fn fingerprint(&self, d: usize, transport: &str) -> String {
+        format!(
+            "ef21.run|{}|{}|{}|w{}|d{}|seed{}|gm{}|ga{:?}|lam{}|re{}|blocks{:?}|part{:?}|dl{:?}|faults[{}]|{}",
+            self.algo.name(),
+            self.compressor,
+            self.dataset,
+            self.n_workers,
+            d,
+            self.seed,
+            self.gamma_mult,
+            self.gamma_abs,
+            self.lam,
+            self.record_every,
+            self.blocks,
+            self.sched.participation,
+            self.sched.deadline_ms,
+            self.sched.faults.fingerprint(),
+            transport,
         )
     }
 }
@@ -489,6 +585,61 @@ mod tests {
             "soon".into()
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn ckpt_spec_parses_and_validates() {
+        let s = CkptSpec::from_args(&cli::Args::from_vec(vec![])).unwrap();
+        assert!(s.is_legacy());
+        assert_eq!(s.every, 1);
+        let s = CkptSpec::from_args(&cli::Args::from_vec(vec![
+            "--checkpoint".into(),
+            "/tmp/run.ckpt".into(),
+            "--checkpoint-every".into(),
+            "5".into(),
+            "--resume".into(),
+            "/tmp/old.ckpt".into(),
+        ]))
+        .unwrap();
+        assert!(!s.is_legacy());
+        assert_eq!(s.save_path.as_deref(), Some(std::path::Path::new("/tmp/run.ckpt")));
+        assert_eq!(s.every, 5);
+        assert_eq!(s.resume_path.as_deref(), Some(std::path::Path::new("/tmp/old.ckpt")));
+        // A cadence without a destination, and a zero cadence, both error.
+        assert!(CkptSpec::from_args(&cli::Args::from_vec(vec![
+            "--checkpoint-every".into(),
+            "5".into(),
+        ]))
+        .is_err());
+        assert!(CkptSpec::from_args(&cli::Args::from_vec(vec![
+            "--checkpoint".into(),
+            "/tmp/run.ckpt".into(),
+            "--checkpoint-every".into(),
+            "0".into(),
+        ]))
+        .is_err());
+        // A missing resume file surfaces at build time, not mid-run.
+        let s = CkptSpec {
+            resume_path: Some("/nonexistent/nope.ckpt".into()),
+            ..CkptSpec::default()
+        };
+        assert!(s.build("fp").is_err());
+    }
+
+    #[test]
+    fn fingerprint_ignores_killmaster_but_not_real_faults() {
+        let base = RunSpec::default();
+        let mut killed = base.clone();
+        killed.sched.faults = crate::sched::FaultPlan::parse("killmaster@7").unwrap();
+        // The kill the checkpoint recovers from must not change identity…
+        assert_eq!(base.fingerprint(100, "sim"), killed.fingerprint(100, "sim"));
+        // …but trajectory-shaping differences must.
+        let mut crashed = base.clone();
+        crashed.sched.faults =
+            crate::sched::FaultPlan::parse("crash@3,rejoin@6").unwrap();
+        assert_ne!(base.fingerprint(100, "sim"), crashed.fingerprint(100, "sim"));
+        assert_ne!(base.fingerprint(100, "sim"), base.fingerprint(101, "sim"));
+        assert_ne!(base.fingerprint(100, "sim"), base.fingerprint(100, "local"));
     }
 
     #[test]

@@ -19,8 +19,10 @@
 //! (one per block, reassembled in block order by the master) whenever
 //! the payload uses the standard sparse encoding.
 
+use super::runner::CkptOptions;
 use crate::algo::{MasterNode, WireMsg, WorkerNode};
 use crate::blocks::BlockLayout;
+use crate::ckpt::{Checkpoint, DownlinkState};
 use crate::compress::{Compressed, SparseVec};
 use crate::metrics::{History, RoundRecord};
 use crate::sched::{Scheduler, StateTracker};
@@ -126,8 +128,27 @@ fn worker_loop(
                     x[off..off + p.vals.len()].copy_from_slice(&p.vals);
                 }
             }
+            Frame::CkptReq => {
+                // Synchronous snapshot: serialize and reply before the
+                // next broadcast can mutate any state.
+                let mut blob = Vec::new();
+                worker.ckpt_save(&mut blob)?;
+                encode_into(&Frame::CkptState(blob), &mut tx_buf);
+                conn.send(&tx_buf)?;
+                continue;
+            }
+            Frame::Restore { blob, model } => {
+                // Resume push replaces init: restore the state blob and
+                // cache the exact model image the master's delta planner
+                // believes we hold (dense mode just overwrites it on the
+                // next full Model frame).
+                worker.ckpt_load(&blob)?;
+                cached = Some(model);
+                first = false;
+                continue;
+            }
             Frame::Stop => return Ok(()),
-            Frame::Up { .. } | Frame::UpBlock { .. } => bail!("worker received an uplink frame"),
+            _ => bail!("worker received an unexpected frame"),
         }
         let x = cached.as_ref().expect("model cached after broadcast");
         let round_span = telemetry::span_arg("dist.worker.round", "w", w as u64);
@@ -315,8 +336,12 @@ fn wire_transport(
                     rw(i, Box::new(conn))
                 }));
             }
-            // Order accepted conns by the announced worker id.
-            let conns = acceptor.join().expect("acceptor panicked")?;
+            // Order accepted conns by the announced worker id. A panic in
+            // the acceptor thread becomes an error, not a master panic.
+            let conns = match acceptor.join() {
+                Ok(res) => res?,
+                Err(p) => bail!("transport acceptor thread panicked: {}", panic_msg(&*p)),
+            };
             let mut ordered: Vec<Option<tcp::TcpConn>> = (0..n_workers).map(|_| None).collect();
             for mut c in conns {
                 let id_bytes = c.recv()?;
@@ -342,6 +367,34 @@ fn wire_transport(
     Ok((master_conns, handles))
 }
 
+/// Best-effort human-readable message out of a panic payload.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".into())
+}
+
+/// Join every worker thread, converting panics and worker errors into
+/// one `anyhow` error so the master shuts down cleanly (all threads are
+/// joined even when an early one failed).
+fn join_all(handles: Vec<std::thread::JoinHandle<Result<()>>>) -> Result<()> {
+    let mut first_err: Option<anyhow::Error> = None;
+    for (i, h) in handles.into_iter().enumerate() {
+        let res = match h.join() {
+            Ok(r) => r.with_context(|| format!("worker thread {i} failed")),
+            Err(p) => Err(anyhow::anyhow!("worker thread {i} panicked: {}", panic_msg(&*p))),
+        };
+        if let Err(e) = res {
+            first_err.get_or_insert(e);
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
 /// Shared run tail: stamp the final model, stop every worker, join the
 /// threads, and package the outcome — one copy for both master loops so
 /// shutdown semantics cannot drift between the dense and the scheduled
@@ -359,9 +412,7 @@ fn finish_run(
     for c in master_conns.iter_mut() {
         c.send(&stop)?;
     }
-    for h in handles {
-        h.join().expect("worker thread panicked")?;
-    }
+    join_all(handles)?;
     Ok(DistOutcome {
         history,
         final_x: master.x().to_vec(),
@@ -389,7 +440,7 @@ where
 
 /// [`run_distributed`] with an explicit broadcast mode.
 pub fn run_distributed_opts<F>(
-    mut master: Box<dyn MasterNode>,
+    master: Box<dyn MasterNode>,
     n_workers: usize,
     make_worker: F,
     rounds: usize,
@@ -400,7 +451,50 @@ pub fn run_distributed_opts<F>(
 where
     F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
 {
+    run_distributed_ckpt(
+        master,
+        n_workers,
+        make_worker,
+        rounds,
+        kind,
+        label,
+        broadcast,
+        CkptOptions::default(),
+    )
+}
+
+/// [`run_distributed_opts`] with checkpoint/resume: snapshots are taken
+/// through an in-band `CkptReq`/`CkptState` exchange (the transport is
+/// lockstep, so the reply arrives before any later broadcast can mutate
+/// worker state), and a resume replaces the init phase with one
+/// `Restore` push per worker carrying its state blob plus the exact
+/// model image the downlink planner believes the worker holds.
+#[allow(clippy::too_many_arguments)]
+pub fn run_distributed_ckpt<F>(
+    mut master: Box<dyn MasterNode>,
+    n_workers: usize,
+    make_worker: F,
+    rounds: usize,
+    kind: TransportKind,
+    label: &str,
+    broadcast: Broadcast,
+    opts: CkptOptions,
+) -> Result<DistOutcome>
+where
+    F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
+{
     assert!(n_workers >= 1);
+    let fingerprint = opts.fingerprint.clone().unwrap_or_else(|| label.to_string());
+    if let Some(ck) = &opts.resume {
+        // Validate before any thread is spawned, so a mismatched resume
+        // fails fast instead of stranding worker threads.
+        ck.verify_fingerprint(&fingerprint)?;
+        ensure!(
+            ck.workers.len() == n_workers,
+            "checkpoint holds {} workers but this run has {n_workers}",
+            ck.workers.len()
+        );
+    }
     let make_worker = std::sync::Arc::new(make_worker);
     let (mut downlink, up_blocks) = match &broadcast {
         Broadcast::Dense => (DownlinkMeter::dense(master.x().len()), None),
@@ -459,6 +553,10 @@ where
         for c in master_conns.iter_mut() {
             c.send(frame_buf)?;
         }
+        // Commit only after every worker has the frame: a failed send
+        // must not advance the planner past an image the workers never
+        // received.
+        downlink.commit(x, &plan);
         telemetry::counter(keys::DOWNLINK_BITS).incr(plan.bits);
         let sent = frame_buf.len() as u64 * n_workers as u64;
         telemetry::counter(keys::DOWNLINK_FRAME_BYTES).incr(sent);
@@ -469,19 +567,48 @@ where
     let mut bcast_buf = Vec::new();
     let mut rx_buf = Vec::new();
 
-    // Init phase.
-    let x0 = master.x().to_vec();
-    let dim = x0.len();
-    down_bytes += send_model(&mut master_conns, &mut downlink, &x0, &mut bcast_buf)?;
-    let (msgs, _losses, fb) = gather(&mut master_conns, dim, &mut rx_buf, None)?;
-    frame_bytes += fb;
-    let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
-    bits_cum += init_bits;
-    telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
-    telemetry::counter(keys::UPLINK_FRAME_BYTES).incr(fb);
-    master.init_absorb(&msgs);
+    let dim = master.x().len();
+    let start_round = match opts.resume {
+        None => {
+            // Init phase.
+            let x0 = master.x().to_vec();
+            down_bytes += send_model(&mut master_conns, &mut downlink, &x0, &mut bcast_buf)?;
+            let (msgs, _losses, fb) = gather(&mut master_conns, dim, &mut rx_buf, None)?;
+            frame_bytes += fb;
+            let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
+            bits_cum += init_bits;
+            telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
+            telemetry::counter(keys::UPLINK_FRAME_BYTES).incr(fb);
+            master.init_absorb(&msgs);
+            0
+        }
+        // Resume: push every worker its state blob (validated above) and
+        // skip init — the snapshot already contains its effects.
+        Some(ck) => {
+            master.ckpt_load(&ck.master).context("restoring master state")?;
+            // The model image the workers must cache: in delta mode the
+            // meter's last-broadcast f32 image (future ModelDelta frames
+            // patch against exactly it), in dense mode the f32-rounded
+            // restored model (replaced by the next full Model frame
+            // anyway).
+            let model: Vec<f64> = match &ck.downlink.last {
+                Some(img) => img.iter().map(|&v| f64::from(v)).collect(),
+                None => master.x().iter().map(|&v| v as f32 as f64).collect(),
+            };
+            downlink.restore(ck.downlink.last, ck.downlink.bits_cum, ck.downlink.dense_bits_cum)?;
+            for (c, blob) in master_conns.iter_mut().zip(ck.workers) {
+                encode_into(&Frame::Restore { blob, model: model.clone() }, &mut bcast_buf);
+                c.send(&bcast_buf)?;
+                down_bytes += bcast_buf.len() as u64;
+            }
+            bits_cum = ck.uplink_bits_cum;
+            history = ck.history;
+            history.label = label.to_string();
+            ck.next_round
+        }
+    };
 
-    for t in 0..rounds {
+    for t in start_round..rounds {
         let t_round = telemetry::maybe_now();
         let round_span = telemetry::span_arg("coordinator.round", "round", t as u64);
         let x = master.begin_round();
@@ -511,9 +638,63 @@ where
             gt: f64::NAN,
             dcgd_frac: f64::NAN,
         });
+
+        // End-of-round snapshot: round t is fully absorbed and recorded,
+        // so a resume starts cleanly at t+1. The exchange is in-band —
+        // the protocol is lockstep, so every worker is parked on recv
+        // right now and replies before any further state change.
+        if let Some(save) = &opts.save {
+            if (t + 1) % save.every == 0 {
+                let req = encode(&Frame::CkptReq);
+                for c in master_conns.iter_mut() {
+                    c.send(&req)?;
+                }
+                let mut worker_blobs = Vec::with_capacity(n_workers);
+                for (w, c) in master_conns.iter_mut().enumerate() {
+                    c.recv_into(&mut rx_buf)?;
+                    match decode(&rx_buf)? {
+                        Frame::CkptState(blob) => worker_blobs.push(blob),
+                        _ => bail!("expected CkptState from worker {w}"),
+                    }
+                }
+                let mut mblob = Vec::new();
+                master.ckpt_save(&mut mblob).context("serializing master state")?;
+                let (img, dl_bits, dl_dense) = downlink.ckpt_state();
+                let ck = Checkpoint {
+                    fingerprint: fingerprint.clone(),
+                    next_round: t + 1,
+                    uplink_bits_cum: bits_cum,
+                    master: mblob,
+                    workers: worker_blobs,
+                    tracker: None,
+                    downlink: DownlinkState {
+                        last: img.map(<[f32]>::to_vec),
+                        bits_cum: dl_bits,
+                        dense_bits_cum: dl_dense,
+                    },
+                    history: history.clone(),
+                    last_loss: None,
+                };
+                ck.write_atomic(&save.path)
+                    .with_context(|| format!("writing checkpoint at round {t}"))?;
+            }
+        }
     }
     history.downlink_bits = downlink.bits();
     finish_run(master, master_conns, handles, history, frame_bytes, down_bytes)
+}
+
+/// Checkpoint coordinates a scheduled worker derives from the shared run
+/// configuration (never negotiated on the wire): the first round it
+/// executes and the master's snapshot cadence.
+#[derive(Clone, Copy)]
+struct SchedCkpt {
+    /// First round this (possibly resumed) worker runs; 0 = fresh run
+    /// with an init phase.
+    start: usize,
+    /// `Some(e)`: the master snapshots after every `e`-th round and this
+    /// worker must answer the matching `CkptReq` barrier.
+    every: Option<usize>,
 }
 
 /// Scheduled worker event loop: the worker derives the same per-round
@@ -521,24 +702,42 @@ where
 /// negotiation — on which rounds carry a broadcast, an uplink, a
 /// StateSync, or nothing at all for this worker. Wire faults (straggle
 /// sleep, frame duplication) are realized by arming the [`FaultConn`]
-/// before each uplink.
+/// before each uplink. The checkpoint cadence is likewise derived from
+/// config on both sides: even a non-participating worker answers the
+/// `CkptReq` barrier, because its state must be captured before a later
+/// `plan.crash` can mutate it. Every recv site accepts `Stop`, so a
+/// `killmaster@r` shutdown drains cleanly wherever the worker is parked.
 fn worker_loop_sched(
     mut worker: Box<dyn WorkerNode>,
     conn: Box<dyn Conn>,
     sched: &Scheduler,
     w: usize,
     rounds: usize,
+    ckpt: SchedCkpt,
 ) -> Result<()> {
     let mut conn = FaultConn::new(conn);
-    // Init runs on every worker — participation sampling starts at round 0.
-    let x = match decode(&conn.recv()?)? {
-        Frame::Model(x) => x,
-        _ => bail!("worker {w}: expected the init Model broadcast"),
-    };
-    let msg = worker.init(&x);
-    let loss = worker.last_loss();
-    conn.send(&encode(&Frame::Up { msg, loss }))?;
-    for t in 0..rounds {
+    if ckpt.start == 0 {
+        // Init runs on every worker — participation sampling starts at
+        // round 0.
+        let x = match decode(&conn.recv()?)? {
+            Frame::Model(x) => x,
+            Frame::Stop => return Ok(()),
+            _ => bail!("worker {w}: expected the init Model broadcast"),
+        };
+        let msg = worker.init(&x);
+        let loss = worker.last_loss();
+        conn.send(&encode(&Frame::Up { msg, loss }))?;
+    } else {
+        // Resumed run: the Restore push replaces init entirely. The model
+        // image is unused on this path — scheduling is dense, so every
+        // active round ships a full Model frame.
+        match decode(&conn.recv()?)? {
+            Frame::Restore { blob, .. } => worker.ckpt_load(&blob)?,
+            Frame::Stop => return Ok(()),
+            _ => bail!("worker {w}: expected the Restore push on resume"),
+        }
+    }
+    for t in ckpt.start..rounds {
         let plan = sched.round_plan(t);
         if plan.crash.contains(&w) {
             worker.crash();
@@ -546,18 +745,32 @@ fn worker_loop_sched(
         if plan.resync.contains(&w) {
             match decode(&conn.recv()?)? {
                 Frame::StateSync(g) => worker.resync(&g),
+                Frame::Stop => return Ok(()),
                 _ => bail!("worker {w}: expected StateSync at rejoin round {t}"),
             }
         }
         if plan.active[w] {
             let x = match decode(&conn.recv()?)? {
                 Frame::Model(x) => x,
+                Frame::Stop => return Ok(()),
                 _ => bail!("worker {w}: expected Model broadcast in round {t}"),
             };
             let msg = worker.round(&x);
             let loss = worker.last_loss();
             conn.arm(plan.delay_ms[w], plan.dup[w]);
             conn.send(&encode(&Frame::Up { msg, loss }))?;
+        }
+        // Checkpoint barrier (all workers, participants or not).
+        if ckpt.every.is_some_and(|e| (t + 1) % e == 0) {
+            match decode(&conn.recv()?)? {
+                Frame::CkptReq => {
+                    let mut blob = Vec::new();
+                    worker.ckpt_save(&mut blob)?;
+                    conn.send(&encode(&Frame::CkptState(blob)))?;
+                }
+                Frame::Stop => return Ok(()),
+                _ => bail!("worker {w}: expected CkptReq after round {t}"),
+            }
         }
     }
     match decode(&conn.recv()?)? {
@@ -577,7 +790,7 @@ fn worker_loop_sched(
 /// would go stale under block-delta frames). Currently drives
 /// EF21-family workers whose absent message is the empty sparse no-op.
 pub fn run_distributed_sched<F>(
-    mut master: Box<dyn MasterNode>,
+    master: Box<dyn MasterNode>,
     n_workers: usize,
     make_worker: F,
     rounds: usize,
@@ -588,7 +801,53 @@ pub fn run_distributed_sched<F>(
 where
     F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
 {
+    run_distributed_sched_ckpt(
+        master,
+        n_workers,
+        make_worker,
+        rounds,
+        kind,
+        label,
+        sched,
+        CkptOptions::default(),
+    )
+}
+
+/// [`run_distributed_sched`] with checkpoint/resume. Snapshots extend
+/// the plain-path ones with the master's resync mirrors and its
+/// per-worker loss cache; the checkpoint exchange is a synchronous
+/// barrier whose cadence both sides derive from the run configuration
+/// (an absent worker does not recv every round, so an in-band request
+/// could not reach it before a later scheduled crash mutates its state).
+/// A `killmaster@r` fault aborts the master at the start of round `r` —
+/// workers are stopped and joined cleanly, then the run fails with an
+/// error naming the fault.
+#[allow(clippy::too_many_arguments)]
+pub fn run_distributed_sched_ckpt<F>(
+    mut master: Box<dyn MasterNode>,
+    n_workers: usize,
+    make_worker: F,
+    rounds: usize,
+    kind: TransportKind,
+    label: &str,
+    sched: Arc<Scheduler>,
+    opts: CkptOptions,
+) -> Result<DistOutcome>
+where
+    F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
+{
     assert!(n_workers >= 1);
+    let fingerprint = opts.fingerprint.clone().unwrap_or_else(|| label.to_string());
+    if let Some(ck) = &opts.resume {
+        // Validate before any thread is spawned, so a mismatched resume
+        // fails fast instead of stranding worker threads.
+        ck.verify_fingerprint(&fingerprint)?;
+        ensure!(
+            ck.workers.len() == n_workers,
+            "checkpoint holds {} workers but this run has {n_workers}",
+            ck.workers.len()
+        );
+    }
     ensure!(
         sched.n_workers() == n_workers,
         "scheduler was built for {} workers but the run has {n_workers}",
@@ -637,10 +896,15 @@ where
     let mut downlink = DownlinkMeter::dense(d);
     telemetry::gauge(keys::BLOCKS).set(1.0);
 
+    // Both sides derive the checkpoint coordinates from the same config.
+    let wc = SchedCkpt {
+        start: opts.resume.as_ref().map_or(0, |ck| ck.next_round),
+        every: opts.save.as_ref().map(|s| s.every),
+    };
     let sched_w = sched.clone();
     let mk = make_worker.clone();
     let run_worker: RunWorker =
-        Arc::new(move |i, conn| worker_loop_sched(mk(i), conn, &sched_w, i, rounds));
+        Arc::new(move |i, conn| worker_loop_sched(mk(i), conn, &sched_w, i, rounds, wc));
     let (mut master_conns, handles) =
         wire_transport(kind, n_workers, run_worker, kind == TransportKind::Tcp)?;
 
@@ -656,30 +920,84 @@ where
     // value, in the same worker-order sum).
     let mut last_loss = vec![0.0f64; n_workers];
 
-    // Init phase: full participation, dense broadcast to everyone.
-    let x0 = master.x().to_vec();
-    let bytes = encode(&Frame::Model(x0.clone()));
-    for c in master_conns.iter_mut() {
-        c.send(&bytes)?;
-    }
-    telemetry::counter(keys::DOWNLINK_BITS).incr(downlink.plan(&x0).bits);
-    let sent0 = bytes.len() as u64 * n_workers as u64;
-    telemetry::counter(keys::DOWNLINK_FRAME_BYTES).incr(sent0);
-    down_bytes += sent0;
     let mut rx_buf = Vec::new();
-    let (msgs, losses, fb) = gather(&mut master_conns, d, &mut rx_buf, None)?;
-    last_loss.copy_from_slice(&losses);
-    frame_bytes += fb;
-    let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
-    bits_cum += init_bits;
-    telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
-    telemetry::counter(keys::UPLINK_FRAME_BYTES).incr(fb);
-    if let Some(tr) = tracker.as_mut() {
-        tr.absorb_round(&msgs);
-    }
-    master.init_absorb(&msgs);
+    let start_round = match opts.resume {
+        None => {
+            // Init phase: full participation, dense broadcast to everyone.
+            let x0 = master.x().to_vec();
+            let bytes = encode(&Frame::Model(x0.clone()));
+            for c in master_conns.iter_mut() {
+                c.send(&bytes)?;
+            }
+            telemetry::counter(keys::DOWNLINK_BITS).incr(downlink.broadcast(&x0).bits);
+            let sent0 = bytes.len() as u64 * n_workers as u64;
+            telemetry::counter(keys::DOWNLINK_FRAME_BYTES).incr(sent0);
+            down_bytes += sent0;
+            let (msgs, losses, fb) = gather(&mut master_conns, d, &mut rx_buf, None)?;
+            last_loss.copy_from_slice(&losses);
+            frame_bytes += fb;
+            let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
+            bits_cum += init_bits;
+            telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
+            telemetry::counter(keys::UPLINK_FRAME_BYTES).incr(fb);
+            if let Some(tr) = tracker.as_mut() {
+                tr.absorb_round(&msgs)?;
+            }
+            master.init_absorb(&msgs);
+            0
+        }
+        // Resume (validated above): push every worker its state blob and
+        // skip init — the snapshot already contains its effects.
+        Some(ck) => {
+            master.ckpt_load(&ck.master).context("restoring master state")?;
+            match (&ck.tracker, tracker.as_mut()) {
+                (Some(mirrors), Some(tr)) => tr.restore(mirrors)?,
+                (None, None) => {}
+                (Some(_), None) => bail!(
+                    "checkpoint carries resync mirrors but this run keeps no state \
+                     tracker (schedule mismatch?)"
+                ),
+                (None, Some(_)) => bail!(
+                    "this run needs a state tracker but the checkpoint has no \
+                     resync mirrors (schedule mismatch?)"
+                ),
+            }
+            let losses = ck
+                .last_loss
+                .context("scheduled-run checkpoint is missing the per-worker loss cache")?;
+            ensure!(
+                losses.len() == n_workers,
+                "checkpoint loss cache holds {} workers but this run has {n_workers}",
+                losses.len()
+            );
+            last_loss = losses;
+            downlink.restore(ck.downlink.last, ck.downlink.bits_cum, ck.downlink.dense_bits_cum)?;
+            // Scheduling is dense broadcast: the Restore frame needs no
+            // model image (every active round ships a full Model frame).
+            for (c, blob) in master_conns.iter_mut().zip(ck.workers) {
+                let frame = encode(&Frame::Restore { blob, model: Vec::new() });
+                c.send(&frame)?;
+                down_bytes += frame.len() as u64;
+            }
+            bits_cum = ck.uplink_bits_cum;
+            history = ck.history;
+            history.label = label.to_string();
+            ck.next_round
+        }
+    };
 
-    for t in 0..rounds {
+    for t in start_round..rounds {
+        // Scheduled master kill: abort before any round-t work, exactly
+        // as a crashed master would — but stop and join the workers
+        // first so the process shuts down cleanly.
+        if sched.kill_master_at(t) {
+            let stop = encode(&Frame::Stop);
+            for c in master_conns.iter_mut() {
+                c.send(&stop)?;
+            }
+            join_all(handles)?;
+            bail!("fault plan: master killed at round {t} (killmaster@{t})");
+        }
         let t_round = telemetry::maybe_now();
         let round_span = telemetry::span_arg("coordinator.round", "round", t as u64);
         let x = master.begin_round();
@@ -698,7 +1016,7 @@ where
 
         // Dense model to this round's participants only.
         let bcast_span = telemetry::span("round.broadcast");
-        telemetry::counter(keys::DOWNLINK_BITS).incr(downlink.plan(&x).bits);
+        telemetry::counter(keys::DOWNLINK_BITS).incr(downlink.broadcast(&x).bits);
         let bytes = encode(&Frame::Model(x));
         let mut sent = 0u64;
         for (w, c) in master_conns.iter_mut().enumerate() {
@@ -756,7 +1074,7 @@ where
         plan.record_telemetry();
         let absorb_span = telemetry::span("round.absorb");
         if let Some(tr) = tracker.as_mut() {
-            tr.absorb_round(&msgs);
+            tr.absorb_round(&msgs)?;
         }
         master.absorb(&msgs);
         absorb_span.end();
@@ -772,6 +1090,46 @@ where
             gt: f64::NAN,
             dcgd_frac: f64::NAN,
         });
+
+        // End-of-round snapshot barrier: EVERY worker answers (cadence
+        // derived from config on both sides), because an absent worker
+        // does not recv each round and its state must be captured before
+        // a later scheduled crash can mutate it.
+        if let Some(save) = &opts.save {
+            if (t + 1) % save.every == 0 {
+                let req = encode(&Frame::CkptReq);
+                for c in master_conns.iter_mut() {
+                    c.send(&req)?;
+                }
+                let mut worker_blobs = Vec::with_capacity(n_workers);
+                for (w, c) in master_conns.iter_mut().enumerate() {
+                    match decode(&c.recv()?)? {
+                        Frame::CkptState(blob) => worker_blobs.push(blob),
+                        _ => bail!("expected CkptState from worker {w}"),
+                    }
+                }
+                let mut mblob = Vec::new();
+                master.ckpt_save(&mut mblob).context("serializing master state")?;
+                let (img, dl_bits, dl_dense) = downlink.ckpt_state();
+                let ck = Checkpoint {
+                    fingerprint: fingerprint.clone(),
+                    next_round: t + 1,
+                    uplink_bits_cum: bits_cum,
+                    master: mblob,
+                    workers: worker_blobs,
+                    tracker: tracker.as_ref().map(|tr| tr.mirrors().to_vec()),
+                    downlink: DownlinkState {
+                        last: img.map(<[f32]>::to_vec),
+                        bits_cum: dl_bits,
+                        dense_bits_cum: dl_dense,
+                    },
+                    history: history.clone(),
+                    last_loss: Some(last_loss.clone()),
+                };
+                ck.write_atomic(&save.path)
+                    .with_context(|| format!("writing checkpoint at round {t}"))?;
+            }
+        }
     }
     history.downlink_bits = downlink.bits();
     finish_run(master, master_conns, handles, history, frame_bytes, down_bytes)

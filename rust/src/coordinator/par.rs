@@ -55,10 +55,11 @@
 //! execution stays bit-identical to the sequential runner — the same
 //! argument as above, applied per tile.
 
-use super::runner::{self, RunConfig, WorkerPool};
+use super::runner::{self, CkptOptions, RunConfig, WorkerPool};
 use crate::algo::{ensure_msg_slots, MasterNode, WireMsg, WorkerNode};
 use crate::metrics::History;
 use crate::telemetry::{self, keys};
+use anyhow::Result;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 
@@ -91,6 +92,9 @@ enum Cmd {
     /// Scheduler fault hooks, addressed by chunk-local worker index.
     Crash(usize),
     Resync(usize, Arc<Vec<f64>>),
+    /// Checkpoint hooks, addressed by chunk-local worker index.
+    CkptSave(usize),
+    CkptLoad(usize, Arc<Vec<u8>>),
 }
 
 /// Per-worker observation snapshot, copied out of the owning thread.
@@ -113,6 +117,10 @@ enum Reply {
     /// Crash/resync acknowledged (keeps the hooks synchronous, so a
     /// resync is visible before the round command that follows it).
     Ack,
+    /// Checkpoint hook results (`anyhow::Error` is `Send`, so failures
+    /// travel back to the coordinator intact).
+    Saved(Result<Vec<u8>>),
+    Loaded(Result<()>),
 }
 
 /// Refresh a chunk's loss scratch from its workers (capacity reused).
@@ -199,6 +207,11 @@ fn pool_loop(
                 workers[local].resync(&state);
                 Reply::Ack
             }
+            Cmd::CkptSave(local) => {
+                let mut blob = Vec::new();
+                Reply::Saved(workers[local].ckpt_save(&mut blob).map(|()| blob))
+            }
+            Cmd::CkptLoad(local, blob) => Reply::Loaded(workers[local].ckpt_load(&blob)),
         };
         // The coordinator hanging up (drive returned) ends the loop.
         if tx.send(reply).is_err() {
@@ -258,9 +271,10 @@ impl ParPool {
         loss_sum
     }
 
-    /// Route a per-worker fault hook to the chunk thread owning global
-    /// worker `w`, synchronously (waits for the Ack).
-    fn hook(&mut self, w: usize, cmd: impl Fn(usize) -> Cmd) {
+    /// Route a per-worker command to the chunk thread owning global
+    /// worker `w` and wait for its reply (keeps hooks synchronous, so
+    /// their effects are visible before the next round command).
+    fn route(&mut self, w: usize, cmd: impl FnOnce(usize) -> Cmd) -> Reply {
         let chunk = match self.starts.binary_search(&w) {
             Ok(c) => c,
             Err(c) => c - 1,
@@ -268,7 +282,12 @@ impl ParPool {
         let local = w - self.starts[chunk];
         let (tx, rx) = &self.chans[chunk];
         tx.send(cmd(local)).expect("pool thread terminated early");
-        match rx.recv().expect("pool thread terminated early") {
+        rx.recv().expect("pool thread terminated early")
+    }
+
+    /// Route a fault hook (expects a bare Ack back).
+    fn hook(&mut self, w: usize, cmd: impl FnOnce(usize) -> Cmd) {
+        match self.route(w, cmd) {
             Reply::Ack => {}
             _ => unreachable!("non-ack reply to a fault hook"),
         }
@@ -307,6 +326,26 @@ impl WorkerPool for ParPool {
         self.hook(w, |local| Cmd::Resync(local, state.clone()));
     }
 
+    fn ckpt_save(&mut self, w: usize, out: &mut Vec<u8>) -> Result<()> {
+        match self.route(w, Cmd::CkptSave) {
+            Reply::Saved(res) => {
+                let blob = res?;
+                out.clear();
+                out.extend_from_slice(&blob);
+                Ok(())
+            }
+            _ => unreachable!("mismatched reply to a checkpoint save"),
+        }
+    }
+
+    fn ckpt_load(&mut self, w: usize, blob: &[u8]) -> Result<()> {
+        let blob = Arc::new(blob.to_vec());
+        match self.route(w, |local| Cmd::CkptLoad(local, blob.clone())) {
+            Reply::Loaded(res) => res,
+            _ => unreachable!("mismatched reply to a checkpoint load"),
+        }
+    }
+
     fn observe(&mut self) -> (f64, f64, f64, f64) {
         let mut obs = Vec::with_capacity(self.n);
         for (tx, _) in &self.chans {
@@ -340,10 +379,24 @@ pub fn run_protocol_par(
     cfg: &RunConfig,
     threads: usize,
 ) -> History {
+    run_protocol_par_ckpt(master, workers, cfg, threads, CkptOptions::default())
+        .unwrap_or_else(|e| panic!("run_protocol_par: {e:#}"))
+}
+
+/// [`run_protocol_par`] with checkpoint/resume options. Fallible:
+/// checkpoint IO, a resume/config mismatch, or a scheduled
+/// `killmaster@r` fault all surface as errors instead of panics.
+pub fn run_protocol_par_ckpt(
+    master: Box<dyn MasterNode>,
+    workers: Vec<Box<dyn WorkerNode>>,
+    cfg: &RunConfig,
+    threads: usize,
+    opts: CkptOptions,
+) -> Result<History> {
     assert!(!workers.is_empty());
     let threads = threads.max(1).min(workers.len());
     if threads == 1 {
-        return runner::run_protocol(master, workers, cfg);
+        return runner::run_protocol_ckpt(master, workers, cfg, opts);
     }
     telemetry::gauge(keys::POOL_THREADS).set(threads as f64);
 
@@ -376,7 +429,7 @@ pub fn run_protocol_par(
             start += take;
         }
         debug_assert!(rest.is_empty());
-        runner::drive(master, ParPool { n, chans, starts, bufs, resync_ok }, cfg)
+        runner::drive(master, ParPool { n, chans, starts, bufs, resync_ok }, cfg, opts)
     })
 }
 

@@ -11,11 +11,14 @@
 
 use crate::algo::{ensure_msg_slots, MasterNode, WireMsg, WorkerNode};
 use crate::blocks::BlockLayout;
+use crate::ckpt::{Checkpoint, DownlinkState};
 use crate::metrics::{History, RoundRecord};
 use crate::sched::{Scheduler, StateTracker};
 use crate::telemetry::{self, keys};
 use crate::transport::downlink::DownlinkMeter;
 use crate::util::linalg;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::PathBuf;
 use std::sync::Arc;
 
 /// Runner configuration.
@@ -85,6 +88,42 @@ impl RunConfig {
     }
 }
 
+/// Periodic checkpointing: write a snapshot to `path` (atomically, via
+/// tmp + rename) at the end of every `every`-th round.
+#[derive(Clone, Debug)]
+pub struct SaveCfg {
+    pub path: PathBuf,
+    pub every: usize,
+}
+
+/// Checkpoint/resume options for one protocol run. The default is the
+/// exact legacy behavior: no snapshots, no resume.
+#[derive(Default)]
+pub struct CkptOptions {
+    /// Write snapshots on a round cadence.
+    pub save: Option<SaveCfg>,
+    /// Resume from a decoded snapshot instead of running init.
+    pub resume: Option<Checkpoint>,
+    /// Run identity stamped into snapshots and verified on resume.
+    /// Defaults to the run label when unset.
+    pub fingerprint: Option<String>,
+}
+
+impl CkptOptions {
+    pub fn saving(path: PathBuf, every: usize) -> Self {
+        CkptOptions { save: Some(SaveCfg { path, every: every.max(1) }), ..Default::default() }
+    }
+
+    pub fn resuming(ck: Checkpoint) -> Self {
+        CkptOptions { resume: Some(ck), ..Default::default() }
+    }
+
+    pub fn with_fingerprint(mut self, fp: impl Into<String>) -> Self {
+        self.fingerprint = Some(fp.into());
+        self
+    }
+}
+
 /// Where the worker state machines execute. The coordinator only ever
 /// sees messages and observations **in worker-index order**, so every
 /// floating-point reduction the protocol performs is a fixed-order sum
@@ -130,6 +169,15 @@ pub(crate) trait WorkerPool {
 
     /// Forward a StateSync restore to worker `w`.
     fn resync(&mut self, w: usize, state: &[f64]);
+
+    // -- checkpoint/resume --
+
+    /// Serialize worker `w`'s full state blob
+    /// ([`WorkerNode::ckpt_save`]) into `out`.
+    fn ckpt_save(&mut self, w: usize, out: &mut Vec<u8>) -> Result<()>;
+
+    /// Restore worker `w` from a blob written by [`WorkerPool::ckpt_save`].
+    fn ckpt_load(&mut self, w: usize, blob: &[u8]) -> Result<()>;
 }
 
 /// Aggregate per-worker instrumentation in worker-index order. Shared by
@@ -239,6 +287,52 @@ impl WorkerPool for SeqPool {
     fn resync(&mut self, w: usize, state: &[f64]) {
         self.workers[w].resync(state);
     }
+
+    fn ckpt_save(&mut self, w: usize, out: &mut Vec<u8>) -> Result<()> {
+        self.workers[w].ckpt_save(out)
+    }
+
+    fn ckpt_load(&mut self, w: usize, blob: &[u8]) -> Result<()> {
+        self.workers[w].ckpt_load(blob)
+    }
+}
+
+/// Collect one [`Checkpoint`] from the live run state. `next_round` is
+/// the first round a resumed loop will execute.
+pub(crate) fn snapshot<P: WorkerPool>(
+    master: &dyn MasterNode,
+    pool: &mut P,
+    tracker: Option<&StateTracker>,
+    downlink: &DownlinkMeter,
+    history: &History,
+    bits_cum: u64,
+    next_round: usize,
+    fingerprint: &str,
+) -> Result<Checkpoint> {
+    let mut mblob = Vec::new();
+    master.ckpt_save(&mut mblob).context("serializing master state")?;
+    let mut workers = Vec::with_capacity(pool.n_workers());
+    for w in 0..pool.n_workers() {
+        let mut blob = Vec::new();
+        pool.ckpt_save(w, &mut blob).with_context(|| format!("serializing worker {w}"))?;
+        workers.push(blob);
+    }
+    let (img, dl_bits, dl_dense) = downlink.ckpt_state();
+    Ok(Checkpoint {
+        fingerprint: fingerprint.to_string(),
+        next_round,
+        uplink_bits_cum: bits_cum,
+        master: mblob,
+        workers,
+        tracker: tracker.map(|tr| tr.mirrors().to_vec()),
+        downlink: DownlinkState {
+            last: img.map(|s| s.to_vec()),
+            bits_cum: dl_bits,
+            dense_bits_cum: dl_dense,
+        },
+        history: history.clone(),
+        last_loss: None,
+    })
 }
 
 /// Drive the full protocol over any [`WorkerPool`]: init, then
@@ -271,8 +365,10 @@ pub(crate) fn drive<P: WorkerPool>(
     mut master: Box<dyn MasterNode>,
     mut pool: P,
     cfg: &RunConfig,
-) -> History {
+    opts: CkptOptions,
+) -> Result<History> {
     let n = pool.n_workers() as f64;
+    let fingerprint = opts.fingerprint.unwrap_or_else(|| cfg.label.clone());
     let mut history = History::new(cfg.label.clone());
     let mut bits_cum: u64 = 0;
 
@@ -322,20 +418,70 @@ pub(crate) fn drive<P: WorkerPool>(
     // rewritten in place once every clone is back (steady state — the
     // pools drop their clones before replying), and the message slots
     // are refilled through `round_into`, so rounds allocate nothing.
-    let mut x = Arc::new(master.x().to_vec());
     let mut msgs: Vec<WireMsg> = Vec::new();
-    let init_down = downlink.plan(&x).bits;
-    telemetry::counter(keys::DOWNLINK_BITS).incr(init_down);
-    pool.init(&x, &mut msgs);
-    let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
-    bits_cum += init_bits;
-    telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
-    if let Some(tr) = tracker.as_mut() {
-        tr.absorb_round(&msgs);
-    }
-    master.init_absorb(&msgs);
+    let start_round = match opts.resume {
+        None => {
+            let x0 = Arc::new(master.x().to_vec());
+            let init_down = downlink.broadcast(&x0).bits;
+            telemetry::counter(keys::DOWNLINK_BITS).incr(init_down);
+            pool.init(&x0, &mut msgs);
+            let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
+            bits_cum += init_bits;
+            telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
+            if let Some(tr) = tracker.as_mut() {
+                tr.absorb_round(&msgs)?;
+            }
+            master.init_absorb(&msgs);
+            0
+        }
+        // Resume: restore every piece of run state and skip init
+        // entirely — the snapshot already contains its effects.
+        Some(ck) => {
+            ck.verify_fingerprint(&fingerprint)?;
+            ensure!(
+                ck.workers.len() == pool.n_workers(),
+                "checkpoint holds {} workers but this run has {}",
+                ck.workers.len(),
+                pool.n_workers()
+            );
+            master.ckpt_load(&ck.master).context("restoring master state")?;
+            for (w, blob) in ck.workers.iter().enumerate() {
+                pool.ckpt_load(w, blob).with_context(|| format!("restoring worker {w}"))?;
+            }
+            match (&ck.tracker, tracker.as_mut()) {
+                (Some(mirrors), Some(tr)) => tr.restore(mirrors)?,
+                (None, None) => {}
+                (Some(_), None) => bail!(
+                    "checkpoint carries resync mirrors but this run keeps no state \
+                     tracker (schedule mismatch?)"
+                ),
+                (None, Some(_)) => bail!(
+                    "this run needs a state tracker but the checkpoint has no \
+                     resync mirrors (schedule mismatch?)"
+                ),
+            }
+            downlink.restore(
+                ck.downlink.last,
+                ck.downlink.bits_cum,
+                ck.downlink.dense_bits_cum,
+            )?;
+            bits_cum = ck.uplink_bits_cum;
+            let mut h = ck.history;
+            h.label = cfg.label.clone();
+            history = h;
+            ck.next_round
+        }
+    };
+    let mut x = Arc::new(master.x().to_vec());
 
-    for t in 0..cfg.rounds {
+    for t in start_round..cfg.rounds {
+        // Scheduled master kill: abort before any round-t work so a
+        // resume from the last snapshot replays round t from scratch.
+        if let Some(s) = sched {
+            if s.kill_master_at(t) {
+                bail!("fault plan: master killed at round {t} (killmaster@{t})");
+            }
+        }
         // The tracing spans mirror the histogram timers: the
         // "coordinator.round" span brackets exactly the region timed into
         // `coordinator.round.ns`, with broadcast/workers/absorb phase
@@ -350,7 +496,7 @@ pub(crate) fn drive<P: WorkerPool>(
             // steady state): fall back to a fresh allocation.
             None => x = Arc::new(master.begin_round()),
         }
-        let down = downlink.plan(&x).bits;
+        let down = downlink.broadcast(&x).bits;
         telemetry::counter(keys::DOWNLINK_BITS).incr(down);
         bcast_span.end();
         let workers_span = telemetry::span("round.workers");
@@ -386,7 +532,7 @@ pub(crate) fn drive<P: WorkerPool>(
                     .sum::<u64>();
                 plan.record_telemetry();
                 if let Some(tr) = tracker.as_mut() {
-                    tr.absorb_round(&msgs);
+                    tr.absorb_round(&msgs)?;
                 }
                 (loss_sum, bits)
             }
@@ -429,10 +575,30 @@ pub(crate) fn drive<P: WorkerPool>(
                 }
             }
         }
+
+        // End-of-round snapshot: round t is fully absorbed and recorded,
+        // so a resume starts cleanly at t+1. Divergence/tolerance stops
+        // above skip the write — the run is over, not crashed.
+        if let Some(save) = &opts.save {
+            if (t + 1) % save.every == 0 {
+                let ck = snapshot(
+                    &*master,
+                    &mut pool,
+                    tracker.as_ref(),
+                    &downlink,
+                    &history,
+                    bits_cum,
+                    t + 1,
+                    &fingerprint,
+                )?;
+                ck.write_atomic(&save.path)
+                    .with_context(|| format!("writing checkpoint at round {t}"))?;
+            }
+        }
     }
     history.downlink_bits = downlink.bits();
     history.final_x = master.x().to_vec();
-    history
+    Ok(history)
 }
 
 /// Drive the protocol sequentially on the calling thread (the legacy
@@ -443,8 +609,21 @@ pub fn run_protocol(
     workers: Vec<Box<dyn WorkerNode>>,
     cfg: &RunConfig,
 ) -> History {
+    run_protocol_ckpt(master, workers, cfg, CkptOptions::default())
+        .unwrap_or_else(|e| panic!("run_protocol: {e:#}"))
+}
+
+/// [`run_protocol`] with checkpoint/resume options. Fallible: checkpoint
+/// IO, a resume/config mismatch, or a scheduled `killmaster@r` fault all
+/// surface as errors instead of panics.
+pub fn run_protocol_ckpt(
+    master: Box<dyn MasterNode>,
+    workers: Vec<Box<dyn WorkerNode>>,
+    cfg: &RunConfig,
+    opts: CkptOptions,
+) -> Result<History> {
     assert!(!workers.is_empty());
-    drive(master, SeqPool { workers }, cfg)
+    drive(master, SeqPool { workers }, cfg, opts)
 }
 
 #[cfg(test)]

@@ -6,8 +6,8 @@
 use crate::algo::{AlgoSpec, BuildOpts};
 use crate::blocks::BlockLayout;
 use crate::compress;
-use crate::coordinator::par::run_protocol_par;
-use crate::coordinator::runner::RunConfig;
+use crate::coordinator::par::run_protocol_par_ckpt;
+use crate::coordinator::runner::{CkptOptions, RunConfig};
 use crate::data::{partition, synth, Dataset};
 use crate::metrics::History;
 use crate::oracle::{GradOracle, LogRegOracle, LstsqOracle};
@@ -199,24 +199,56 @@ impl Problem {
         threads: usize,
         layout: Arc<BlockLayout>,
     ) -> History {
+        self.run_trial_ckpt(
+            algo,
+            comp_spec,
+            gamma_mult,
+            gamma_abs,
+            rounds,
+            record_every,
+            seed,
+            threads,
+            layout,
+            CkptOptions::default(),
+        )
+        .unwrap_or_else(|e| panic!("run_trial: {e:#}"))
+    }
+
+    /// [`Self::run_trial_blocked`] with checkpoint/resume options.
+    /// Fallible: checkpoint IO, a resume/config mismatch, a bad
+    /// compressor or schedule spec, or a scheduled `killmaster@r` fault
+    /// all surface as errors instead of panics.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_trial_ckpt(
+        &self,
+        algo: AlgoSpec,
+        comp_spec: &str,
+        gamma_mult: f64,
+        gamma_abs: Option<f64>,
+        rounds: usize,
+        record_every: usize,
+        seed: u64,
+        threads: usize,
+        layout: Arc<BlockLayout>,
+        opts: CkptOptions,
+    ) -> anyhow::Result<History> {
         // The worker pool owns the `threads` budget: with several workers
         // per round already fanned across pool threads, a per-compress
         // block fan-out on top would oversubscribe to ~threads^2 scoped
         // threads (block-parallel compression is a library-level knob for
         // single-compressor workloads — see bench_round's comparison).
-        let c: Arc<dyn compress::Compressor> = Arc::from(
-            compress::from_spec_blocked(comp_spec, &layout, 1).expect("compressor spec"),
-        );
+        let c: Arc<dyn compress::Compressor> =
+            Arc::from(compress::from_spec_blocked(comp_spec, &layout, 1)?);
         let alpha = c.alpha(self.d());
         let gamma = gamma_abs.unwrap_or_else(|| gamma_mult * self.theory_gamma(alpha));
         let x0 = vec![0.0; self.d()];
-        let opts = BuildOpts {
+        let build_opts = BuildOpts {
             layout: if layout.is_flat() { None } else { Some(layout.clone()) },
             threads,
             full_init: false,
         };
         let (master, workers) =
-            crate::algo::build_with(algo, x0, self.oracles(), c, gamma, seed, &opts);
+            crate::algo::build_with(algo, x0, self.oracles(), c, gamma, seed, &build_opts);
         let label = format!("{} {} {gamma_mult}x", algo.name(), comp_spec);
         let mut cfg = RunConfig::rounds(rounds)
             .with_label(label)
@@ -224,15 +256,11 @@ impl Problem {
         if !layout.is_flat() {
             cfg = cfg.with_layout(layout);
         }
-        if let Some(sched) = self
-            .sched
-            .build(self.n_workers, seed)
-            .expect("invalid --participation/--faults schedule for this problem")
-        {
+        if let Some(sched) = self.sched.build(self.n_workers, seed)? {
             cfg = cfg.with_sched(sched);
         }
         cfg.divergence_cap = 1e60;
-        run_protocol_par(master, workers, &cfg, threads)
+        run_protocol_par_ckpt(master, workers, &cfg, threads, opts)
     }
 
     /// Evaluate the exact global loss and squared gradient norm at `x`

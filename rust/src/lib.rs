@@ -58,6 +58,7 @@
 pub mod algo;
 pub mod bench;
 pub mod blocks;
+pub mod ckpt;
 pub mod compress;
 pub mod config;
 pub mod coordinator;

@@ -70,6 +70,7 @@ USAGE:
   ef21 run  [--algo A] [--k K] [--dataset D] [--workers N] [--gamma-mult M]
             [--rounds T] [--objective logreg|lstsq] [--csv FILE]
             [--transport local|tcp]
+            [--checkpoint FILE [--checkpoint-every R]] [--resume FILE]
   (all commands) [--telemetry off|jsonl:<path>|tcp:<port>|trace:<path>[,...]]
                                       (jsonl/tcp sinks take an optional
                                        @<prefix> key filter, e.g.
@@ -97,10 +98,24 @@ USAGE:
                  [--faults <spec>]    (deterministic fault schedule:
                                        crash@R,rejoin@R,
                                        straggle(w,r0..r1,MSms),
-                                       drop(w@r), dup(w@r))
+                                       drop(w@r), dup(w@r),
+                                       killmaster@R — master aborts at the
+                                       start of round R; restart with
+                                       --resume and the trajectory is
+                                       bitwise identical)
                  [--deadline-ms D]    (straggler cutoff per round; unset =
                                        barrier waits; with straggles it
                                        floors to the net timeout)
+  (run)          [--checkpoint FILE]  (write a durable snapshot at the end
+                                       of every --checkpoint-every R rounds
+                                       [default 1]; atomic tmp+rename, so a
+                                       crash mid-write never corrupts the
+                                       last good snapshot)
+                 [--resume FILE]      (restart from a snapshot: checksum +
+                                       run-fingerprint verified, then the
+                                       run continues bitwise-identically to
+                                       one that was never interrupted; drop
+                                       any killmaster clause when resuming)
   (transports)   [--net-timeout-ms T] (TCP read/write + connect-retry
                                        budget; 0 = no timeout; env
                                        fallback EF21_NET_TIMEOUT_MS)
@@ -129,6 +144,7 @@ USAGE:
 
 fn cmd_run(args: &Args) -> Result<()> {
     let spec = RunSpec::from_args(args)?;
+    let ckpt = ef21::config::CkptSpec::from_args(args)?;
     let objective = match args.get_str("objective").unwrap_or("logreg") {
         "lstsq" => exp::Objective::Lstsq,
         _ => exp::Objective::LogReg,
@@ -168,8 +184,22 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
 
     let transport = args.get_str("transport").unwrap_or("sim");
+    // Checkpoint identity: local and tcp are bit-identical (both are the
+    // lockstep dist protocol), so a snapshot moves freely between them —
+    // but never across the sim/dist boundary (downlink accounting
+    // differs).
+    let path_tag = if transport == "sim" { "sim" } else { "dist" };
+    let ckpt_opts = ckpt.build(&spec.fingerprint(problem.d(), path_tag))?;
+    if let (Some(ck), Some(r)) = (&ckpt_opts.resume, spec.sched.faults.kill_master()) {
+        anyhow::ensure!(
+            r < ck.next_round,
+            "--faults killmaster@{r} would kill the resumed run again (resume starts \
+             at round {}); drop the killmaster clause when resuming",
+            ck.next_round
+        );
+    }
     let history = if transport == "sim" {
-        problem.run_trial_blocked(
+        problem.run_trial_ckpt(
             spec.algo,
             &spec.compressor,
             spec.gamma_mult,
@@ -179,9 +209,10 @@ fn cmd_run(args: &Args) -> Result<()> {
             spec.seed,
             threads,
             layout.clone(),
-        )
+            ckpt_opts,
+        )?
     } else {
-        run_over_transport(&problem, &spec, gamma, transport, layout.clone())?
+        run_over_transport(&problem, &spec, gamma, transport, layout.clone(), ckpt_opts)?
     };
 
     let last = history.records.last().expect("no rounds recorded");
@@ -218,8 +249,11 @@ fn run_over_transport(
     gamma: f64,
     transport: &str,
     layout: std::sync::Arc<ef21::blocks::BlockLayout>,
+    ckpt_opts: ef21::coordinator::runner::CkptOptions,
 ) -> Result<ef21::metrics::History> {
-    use ef21::coordinator::dist::{run_distributed_opts, Broadcast, TransportKind};
+    use ef21::coordinator::dist::{
+        run_distributed_ckpt, run_distributed_sched_ckpt, Broadcast, TransportKind,
+    };
     let kind = match transport {
         "tcp" => TransportKind::Tcp,
         "local" => TransportKind::Local,
@@ -276,7 +310,7 @@ fn run_over_transport(
             as Box<dyn ef21::algo::WorkerNode>
     };
     let out = match sched {
-        Some(sched) => ef21::coordinator::dist::run_distributed_sched(
+        Some(sched) => run_distributed_sched_ckpt(
             master,
             problem.n_workers,
             make_worker,
@@ -284,8 +318,9 @@ fn run_over_transport(
             kind,
             &spec.label(),
             sched,
+            ckpt_opts,
         )?,
-        None => run_distributed_opts(
+        None => run_distributed_ckpt(
             master,
             problem.n_workers,
             make_worker,
@@ -293,6 +328,7 @@ fn run_over_transport(
             kind,
             &spec.label(),
             broadcast,
+            ckpt_opts,
         )?,
     };
     println!(

@@ -25,6 +25,12 @@
 //!                                    sent twice; the receiver reads and
 //!                                    verifies both copies (trajectory
 //!                                    unchanged, wire bytes doubled)
+//!   killmaster@<r>                   the master aborts at the start of
+//!                                    round r, before any round-r work
+//!                                    (the chaos hook for checkpoint/
+//!                                    resume: restart from the last
+//!                                    snapshot and the trajectory must be
+//!                                    bitwise identical)
 //! ```
 //!
 //! Example: `crash@3,rejoin@6,straggle(2,5..8,80ms),dup(1@4)`.
@@ -63,6 +69,7 @@ pub struct FaultPlan {
     straggles: Vec<Straggle>,
     drops: Vec<(usize, usize)>,
     dups: Vec<(usize, usize)>,
+    kill_master: Option<usize>,
 }
 
 /// Split on top-level commas only (commas inside `(...)` belong to the
@@ -209,10 +216,22 @@ impl FaultPlan {
                 plan.dups.push(parse_worker_round(args, clause)?);
                 continue;
             }
+            if let Some(round) = clause.strip_prefix("killmaster@") {
+                let r: usize = round
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad round in fault clause '{clause}'"))?;
+                ensure!(
+                    plan.kill_master.is_none(),
+                    "fault plan: duplicate killmaster clause (the master only dies once)"
+                );
+                plan.kill_master = Some(r);
+                continue;
+            }
             bail!(
                 "unknown fault clause '{clause}' \
                  (expected [w<i>:]crash@<r>, [w<i>:]rejoin@<r>, \
-                 straggle(<w>,<r0>..<r1>,<ms>ms), drop(<w>@<r>), dup(<w>@<r>))"
+                 straggle(<w>,<r0>..<r1>,<ms>ms), drop(<w>@<r>), dup(<w>@<r>), \
+                 killmaster@<r>)"
             );
         }
         Ok(plan)
@@ -223,6 +242,18 @@ impl FaultPlan {
             && self.straggles.is_empty()
             && self.drops.is_empty()
             && self.dups.is_empty()
+            && self.kill_master.is_none()
+    }
+
+    /// Canonical identity string for checkpoint fingerprints. The
+    /// `killmaster` clause is deliberately excluded: it models the very
+    /// crash a checkpoint recovers from, so the resumed run is launched
+    /// without it and must still fingerprint-match the saving run.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "crashes{:?} straggles{:?} drops{:?} dups{:?}",
+            self.crashes, self.straggles, self.drops, self.dups
+        )
     }
 
     /// Largest worker index the plan references (for validation against n).
@@ -301,6 +332,17 @@ impl FaultPlan {
 
     pub fn duplicated(&self, w: usize, t: usize) -> bool {
         self.dups.contains(&(w, t))
+    }
+
+    /// Round the master is scheduled to die at, if any. Not a worker
+    /// fault: [`max_worker`](Self::max_worker) ignores it.
+    pub fn kill_master(&self) -> Option<usize> {
+        self.kill_master
+    }
+
+    /// Does the master abort at the start of round `t`?
+    pub fn kill_master_at(&self, t: usize) -> bool {
+        self.kill_master == Some(t)
     }
 }
 
@@ -390,6 +432,25 @@ mod tests {
         let q = FaultPlan::parse("straggle(0,0..0,300ms),straggle(0,5..5,300ms)").unwrap();
         assert_eq!(q.max_delay_ms(), 300);
         assert_eq!(FaultPlan::none().max_delay_ms(), 0);
+    }
+
+    #[test]
+    fn killmaster_parses_and_queries() {
+        let p = FaultPlan::parse("killmaster@7").unwrap();
+        assert!(!p.is_empty());
+        assert_eq!(p.kill_master(), Some(7));
+        assert!(p.kill_master_at(7));
+        assert!(!p.kill_master_at(6));
+        // Not a worker fault: no worker validation against it.
+        assert_eq!(p.max_worker(), None);
+        assert!(!p.has_crashes());
+        // Composes with worker faults.
+        let p = FaultPlan::parse("w1:crash@2,w1:rejoin@4,killmaster@5").unwrap();
+        assert!(p.kill_master_at(5));
+        assert!(p.crashed_during(1, 3));
+        // The master only dies once.
+        assert!(FaultPlan::parse("killmaster@3,killmaster@9").is_err());
+        assert!(FaultPlan::parse("killmaster@x").is_err());
     }
 
     #[test]

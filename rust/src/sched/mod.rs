@@ -171,6 +171,12 @@ impl Scheduler {
         self.faults.has_crashes()
     }
 
+    /// Does the master abort at the start of round `t`
+    /// (`killmaster@<r>` — the checkpoint/resume chaos hook)?
+    pub fn kill_master_at(&self, t: usize) -> bool {
+        self.faults.kill_master_at(t)
+    }
+
     /// True when the schedule cannot alter the legacy protocol at all.
     pub fn is_noop(&self) -> bool {
         self.participation == Participation::Full && self.faults.is_empty()

@@ -11,6 +11,7 @@
 //! `rust/tests/integration_sched.rs`.
 
 use crate::algo::WireMsg;
+use anyhow::{ensure, Result};
 
 /// Per-worker mirrors of the reconstructible worker state.
 pub struct StateTracker {
@@ -38,17 +39,57 @@ impl StateTracker {
     }
 
     /// Fold a whole round of messages (absent workers contribute empty
-    /// no-op messages, so absorbing everything is safe).
-    pub fn absorb_round(&mut self, msgs: &[WireMsg]) {
-        debug_assert_eq!(msgs.len(), self.g.len());
+    /// no-op messages, so absorbing everything is safe). The slice must
+    /// cover every worker: this is a hard error, not a debug assert — in
+    /// release builds a short slice would silently skip workers and a
+    /// long one would panic mid-absorb, either way corrupting the resync
+    /// mirrors for every later rejoin.
+    pub fn absorb_round(&mut self, msgs: &[WireMsg]) -> Result<()> {
+        ensure!(
+            msgs.len() == self.g.len(),
+            "StateTracker::absorb_round: {} messages for {} mirrored workers",
+            msgs.len(),
+            self.g.len()
+        );
         for (w, m) in msgs.iter().enumerate() {
             self.absorb_msg(w, m);
         }
+        Ok(())
     }
 
     /// The reconstructed state of worker `w`.
     pub fn mirror(&self, w: usize) -> &[f64] {
         &self.g[w]
+    }
+
+    /// Number of mirrored workers.
+    pub fn n_workers(&self) -> usize {
+        self.g.len()
+    }
+
+    /// All mirrors, in worker order (checkpoint serialization).
+    pub fn mirrors(&self) -> &[Vec<f64>] {
+        &self.g
+    }
+
+    /// Overwrite every mirror from a checkpoint image.
+    pub fn restore(&mut self, mirrors: &[Vec<f64>]) -> Result<()> {
+        ensure!(
+            mirrors.len() == self.g.len(),
+            "StateTracker::restore: {} mirrors for {} workers",
+            mirrors.len(),
+            self.g.len()
+        );
+        for (dst, src) in self.g.iter_mut().zip(mirrors) {
+            ensure!(
+                src.len() == dst.len(),
+                "StateTracker::restore: mirror dim {} vs {}",
+                src.len(),
+                dst.len()
+            );
+            dst.copy_from_slice(src);
+        }
+        Ok(())
     }
 }
 
@@ -65,10 +106,38 @@ mod tests {
     #[test]
     fn deltas_accumulate_per_worker() {
         let mut t = StateTracker::new(2, 3);
-        t.absorb_round(&[sparse(vec![0], vec![1.0]), sparse(vec![2], vec![-2.0])]);
-        t.absorb_round(&[sparse(vec![0, 1], vec![0.5, 3.0]), sparse(vec![], vec![])]);
+        t.absorb_round(&[sparse(vec![0], vec![1.0]), sparse(vec![2], vec![-2.0])]).unwrap();
+        t.absorb_round(&[sparse(vec![0, 1], vec![0.5, 3.0]), sparse(vec![], vec![])]).unwrap();
         assert_eq!(t.mirror(0), &[1.5, 3.0, 0.0]);
         assert_eq!(t.mirror(1), &[0.0, 0.0, -2.0]);
+    }
+
+    #[test]
+    fn absorb_round_length_mismatch_is_a_hard_error() {
+        let mut t = StateTracker::new(2, 3);
+        // Short slice: must error, not silently skip worker 1.
+        assert!(t.absorb_round(&[sparse(vec![0], vec![1.0])]).is_err());
+        // Long slice: must error, not panic mid-absorb.
+        let three: Vec<WireMsg> =
+            (0..3).map(|_| sparse(vec![0], vec![1.0])).collect();
+        assert!(t.absorb_round(&three).is_err());
+        // Mirrors untouched by rejected rounds.
+        assert_eq!(t.mirror(0), &[0.0, 0.0, 0.0]);
+        assert_eq!(t.mirror(1), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn mirrors_restore_roundtrip() {
+        let mut t = StateTracker::new(2, 2);
+        t.absorb_round(&[sparse(vec![0], vec![1.0]), sparse(vec![1], vec![2.0])]).unwrap();
+        let image: Vec<Vec<f64>> = t.mirrors().to_vec();
+        let mut fresh = StateTracker::new(2, 2);
+        fresh.restore(&image).unwrap();
+        assert_eq!(fresh.mirror(0), t.mirror(0));
+        assert_eq!(fresh.mirror(1), t.mirror(1));
+        assert!(fresh.restore(&image[..1]).is_err());
+        assert!(fresh.restore(&[vec![0.0; 3], vec![0.0; 3]]).is_err());
+        assert_eq!(fresh.n_workers(), 2);
     }
 
     #[test]

@@ -121,6 +121,11 @@ pub mod keys {
     /// Extra uplink frames injected by `dup(w@r)` clauses (dist runner;
     /// the duplicate bytes also land in `transport.uplink.frame.bytes`).
     pub const SCHED_DUP_FRAMES: &str = "sched.dup.frames";
+    /// Latency of one atomic checkpoint write (encode + write + fsync +
+    /// rename), histogram in nanoseconds.
+    pub const CKPT_WRITE_NS: &str = "ckpt.write.ns";
+    /// Cumulative encoded checkpoint bytes written.
+    pub const CKPT_BYTES: &str = "ckpt.bytes";
 }
 
 static ENABLED: AtomicBool = AtomicBool::new(false);

@@ -20,6 +20,15 @@
 //!                    unlike the f32 data plane, so a resynced worker is
 //!                    bit-identical to one that was merely absent; metered
 //!                    as 64*d bits under `sched.resync.bits`)
+//!   0x07 CkptReq   : empty                     (master -> worker: reply with
+//!                    your opaque checkpoint blob)
+//!   0x08 CkptState : u32 len | len bytes       (worker -> master: the blob,
+//!                    [`crate::algo::WorkerNode::ckpt_save`])
+//!   0x09 Restore   : u32 len | len bytes       (master -> worker at resume:
+//!                    | u32 d | d * f64         the blob to load plus the
+//!                    exact f64 model image the worker must cache — f64, not
+//!                    the f32 data plane, so a resumed delta-broadcast worker
+//!                    patches against precisely the pre-crash image)
 //!
 //! Values travel as f32 — the same precision the bit accounting charges —
 //! so the simulated `bits/n` axis and the real byte stream agree (the `Up`
@@ -36,6 +45,9 @@ pub const TAG_STOP: u8 = 0x03;
 pub const TAG_MODEL_DELTA: u8 = 0x04;
 pub const TAG_UP_BLOCK: u8 = 0x05;
 pub const TAG_STATE_SYNC: u8 = 0x06;
+pub const TAG_CKPT_REQ: u8 = 0x07;
+pub const TAG_CKPT_STATE: u8 = 0x08;
+pub const TAG_RESTORE: u8 = 0x09;
 
 /// One contiguous patch of a [`Frame::ModelDelta`] broadcast.
 #[derive(Clone, Debug, PartialEq)]
@@ -64,6 +76,13 @@ pub enum Frame {
     /// Crash-recovery state push (master -> rejoining worker): the
     /// reconstructed worker state, full f64 precision.
     StateSync(Vec<f64>),
+    /// Checkpoint request (master -> worker): reply with a CkptState.
+    CkptReq,
+    /// The worker's opaque checkpoint blob (worker -> master).
+    CkptState(Vec<u8>),
+    /// Resume push (master -> fresh worker): state blob + the exact f64
+    /// model image to cache (replaces init on a resumed run).
+    Restore { blob: Vec<u8>, model: Vec<f64> },
 }
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -238,6 +257,21 @@ fn encode_impl(frame: &Frame, out: &mut Vec<u8>) {
                 put_f64(&mut out, v);
             }
         }
+        Frame::CkptReq => out.push(TAG_CKPT_REQ),
+        Frame::CkptState(blob) => {
+            out.push(TAG_CKPT_STATE);
+            put_u32(&mut out, blob.len() as u32);
+            out.extend_from_slice(blob);
+        }
+        Frame::Restore { blob, model } => {
+            out.push(TAG_RESTORE);
+            put_u32(&mut out, blob.len() as u32);
+            out.extend_from_slice(blob);
+            put_u32(&mut out, model.len() as u32);
+            for &v in model {
+                put_f64(&mut out, v);
+            }
+        }
     }
 }
 
@@ -322,6 +356,21 @@ fn decode_impl(bytes: &[u8]) -> Result<Frame> {
                 g.push(r.f64()?);
             }
             Frame::StateSync(g)
+        }
+        TAG_CKPT_REQ => Frame::CkptReq,
+        TAG_CKPT_STATE => {
+            let n = r.u32()? as usize;
+            Frame::CkptState(r.take(n)?.to_vec())
+        }
+        TAG_RESTORE => {
+            let n = r.u32()? as usize;
+            let blob = r.take(n)?.to_vec();
+            let d = r.u32()? as usize;
+            let mut model = Vec::with_capacity(r.clamped_cap(d, 8));
+            for _ in 0..d {
+                model.push(r.f64()?);
+            }
+            Frame::Restore { blob, model }
         }
         t => bail!("unknown frame tag {t:#x}"),
     };
@@ -458,6 +507,33 @@ mod tests {
         ));
         let mut bytes = encode(&Frame::StateSync(vec![1.0, 2.0]));
         bytes.truncate(bytes.len() - 3);
+        assert!(decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn roundtrip_checkpoint_frames() {
+        assert!(matches!(decode(&encode(&Frame::CkptReq)).unwrap(), Frame::CkptReq));
+        let blob = vec![0x21u8, 0xFF, 0x00, 0x7A];
+        match decode(&encode(&Frame::CkptState(blob.clone()))).unwrap() {
+            Frame::CkptState(b) => assert_eq!(b, blob),
+            _ => panic!("wrong frame"),
+        }
+        // Restore carries the model in exact f64 (not the f32 data plane).
+        let model = vec![1.0, -2.5e-300, std::f64::consts::PI];
+        match decode(&encode(&Frame::Restore { blob: blob.clone(), model: model.clone() }))
+            .unwrap()
+        {
+            Frame::Restore { blob: b, model: m } => {
+                assert_eq!(b, blob);
+                for (a, x) in m.iter().zip(&model) {
+                    assert_eq!(a.to_bits(), x.to_bits());
+                }
+            }
+            _ => panic!("wrong frame"),
+        }
+        // Truncated blob length is rejected.
+        let mut bytes = encode(&Frame::CkptState(blob));
+        bytes.truncate(bytes.len() - 2);
         assert!(decode(&bytes).is_err());
     }
 

@@ -98,20 +98,23 @@ impl DownlinkMeter {
         self.dense_bits_cum
     }
 
-    /// Plan (and account) one broadcast of model `x`.
-    pub fn plan(&mut self, x: &[f64]) -> BroadcastPlan {
+    /// Plan one broadcast of model `x` — **pure**: no accounting, no
+    /// state update. Call [`DownlinkMeter::commit`] once the frame has
+    /// actually reached the workers. The split matters on real
+    /// transports: if a send fails mid-broadcast, committing anyway
+    /// would record an image the workers never received, and every
+    /// later delta frame would patch against the wrong base.
+    pub fn plan(&self, x: &[f64]) -> BroadcastPlan {
         let d = self.layout.d();
         assert_eq!(x.len(), d, "broadcast does not match layout dimension");
-        self.dense_bits_cum += dense_bits(d);
 
-        // Dense mode is stateless: the legacy hot path pays only this
-        // constant-time accounting, no per-round f32 image.
+        // Dense mode is stateless: the legacy hot path pays only
+        // constant-time accounting (in commit), no per-round f32 image.
         if !self.delta {
-            self.bits_cum += dense_bits(d);
             return BroadcastPlan { full: true, changed: Vec::new(), bits: dense_bits(d) };
         }
 
-        let plan = match &mut self.last {
+        match &self.last {
             // Nothing broadcast yet: full frame.
             None => BroadcastPlan { full: true, changed: Vec::new(), bits: dense_bits(d) },
             Some(last) => {
@@ -132,10 +135,21 @@ impl DownlinkMeter {
                     BroadcastPlan { full: false, changed, bits: delta_bits }
                 }
             }
-        };
+        }
+    }
 
-        // The post-broadcast worker image is f32(x) whichever encoding
-        // won (an unchanged block's image already equals it).
+    /// Account a delivered broadcast and advance the planner state to
+    /// the post-broadcast worker image (f32(x) whichever encoding won —
+    /// an unchanged block's image already equals it). Only call this
+    /// after every worker has the frame.
+    pub fn commit(&mut self, x: &[f64], plan: &BroadcastPlan) {
+        let d = self.layout.d();
+        assert_eq!(x.len(), d, "broadcast does not match layout dimension");
+        self.dense_bits_cum += dense_bits(d);
+        self.bits_cum += plan.bits;
+        if !self.delta {
+            return;
+        }
         match &mut self.last {
             Some(last) => {
                 for (li, &xi) in last.iter_mut().zip(x) {
@@ -144,8 +158,44 @@ impl DownlinkMeter {
             }
             None => self.last = Some(x.iter().map(|&v| v as f32).collect()),
         }
-        self.bits_cum += plan.bits;
+    }
+
+    /// [`DownlinkMeter::plan`] + [`DownlinkMeter::commit`] in one step,
+    /// for the simulated runners where the broadcast cannot fail.
+    pub fn broadcast(&mut self, x: &[f64]) -> BroadcastPlan {
+        let plan = self.plan(x);
+        self.commit(x, &plan);
         plan
+    }
+
+    /// Checkpoint image: the last-broadcast f32 model (None until the
+    /// first broadcast, and always None in dense mode) plus both
+    /// cumulative bit counters.
+    pub fn ckpt_state(&self) -> (Option<&[f32]>, u64, u64) {
+        (self.last.as_deref(), self.bits_cum, self.dense_bits_cum)
+    }
+
+    /// Restore a checkpointed meter. Mode and layout come from the run
+    /// configuration (they are not serialized); only the dynamic state
+    /// is replaced.
+    pub fn restore(
+        &mut self,
+        last: Option<Vec<f32>>,
+        bits_cum: u64,
+        dense_bits_cum: u64,
+    ) -> anyhow::Result<()> {
+        if let Some(img) = &last {
+            anyhow::ensure!(
+                img.len() == self.layout.d(),
+                "downlink checkpoint image dim {} vs layout d={}",
+                img.len(),
+                self.layout.d()
+            );
+        }
+        self.last = last;
+        self.bits_cum = bits_cum;
+        self.dense_bits_cum = dense_bits_cum;
+        Ok(())
     }
 }
 
@@ -157,7 +207,7 @@ mod tests {
     fn dense_mode_charges_32d_every_round() {
         let mut m = DownlinkMeter::dense(10);
         for _ in 0..3 {
-            let p = m.plan(&[1.0; 10]);
+            let p = m.broadcast(&[1.0; 10]);
             assert!(p.full);
             assert_eq!(p.bits, 320);
         }
@@ -171,15 +221,15 @@ mod tests {
         let mut m = DownlinkMeter::delta(layout);
         let mut x = vec![1.0f64; 100];
         // First broadcast is always full.
-        assert!(m.plan(&x).full);
+        assert!(m.broadcast(&x).full);
         // Touch one coordinate in block 2 (coords 40..60).
         x[45] += 1.0;
-        let p = m.plan(&x);
+        let p = m.broadcast(&x);
         assert!(!p.full);
         assert_eq!(p.changed, vec![2]);
         assert_eq!(p.bits, DELTA_FRAME_BITS + PATCH_HEADER_BITS + 32 * 20);
         // No change at all -> heartbeat frame, near-zero bits.
-        let p = m.plan(&x);
+        let p = m.broadcast(&x);
         assert!(!p.full);
         assert!(p.changed.is_empty());
         assert_eq!(p.bits, DELTA_FRAME_BITS);
@@ -191,10 +241,10 @@ mod tests {
         let layout = Arc::new(BlockLayout::equal(2, 8).unwrap());
         let mut m = DownlinkMeter::delta(layout);
         let x = vec![1.0f64; 8];
-        m.plan(&x);
+        m.broadcast(&x);
         // A perturbation below f32 resolution does not clear the floor.
         let y: Vec<f64> = x.iter().map(|v| v + 1e-12).collect();
-        let p = m.plan(&y);
+        let p = m.broadcast(&y);
         assert!(p.changed.is_empty(), "sub-ULP update must not count as changed");
     }
 
@@ -205,13 +255,59 @@ mod tests {
         let layout = Arc::new(BlockLayout::equal(4, 16).unwrap());
         let mut m = DownlinkMeter::delta(layout);
         let mut x: Vec<f64> = (0..16).map(|i| i as f64).collect();
-        m.plan(&x);
+        m.broadcast(&x);
         for v in x.iter_mut() {
             *v += 1.0;
         }
-        let p = m.plan(&x);
+        let p = m.broadcast(&x);
         assert!(p.full, "all-changed must fall back to a dense frame");
         assert_eq!(p.bits, dense_bits(16));
         assert!(m.bits() <= m.dense_baseline_bits());
+    }
+
+    #[test]
+    fn uncommitted_plan_does_not_desync_the_planner() {
+        let layout = Arc::new(BlockLayout::equal(2, 8).unwrap());
+        let mut m = DownlinkMeter::delta(layout);
+        let x = vec![1.0f64; 8];
+        m.broadcast(&x);
+        // A broadcast that fails mid-send: planned but never committed.
+        let y: Vec<f64> = x.iter().map(|v| v + 1.0).collect();
+        let aborted = m.plan(&y);
+        assert!(!aborted.changed.is_empty() || aborted.full);
+        assert_eq!(m.bits(), dense_bits(8), "aborted plan must not be billed");
+        // Retrying the same model must replan the same patches — the
+        // workers still hold the pre-failure image.
+        let retry = m.plan(&y);
+        assert_eq!(retry.changed, aborted.changed);
+        assert_eq!(retry.bits, aborted.bits);
+        m.commit(&y, &retry);
+        // Now the image has advanced: the same model is a heartbeat.
+        assert!(m.plan(&y).changed.is_empty());
+    }
+
+    #[test]
+    fn ckpt_state_restore_roundtrip() {
+        let layout = Arc::new(BlockLayout::equal(2, 8).unwrap());
+        let mut m = DownlinkMeter::delta(layout.clone());
+        let x = vec![1.0f64; 8];
+        m.broadcast(&x);
+        let y: Vec<f64> = x.iter().map(|v| v + 1.0).collect();
+        m.broadcast(&y);
+        let (img, bits, dense) = m.ckpt_state();
+        let (img, bits, dense) = (img.map(<[f32]>::to_vec), bits, dense);
+        let mut fresh = DownlinkMeter::delta(layout);
+        fresh.restore(img, bits, dense).unwrap();
+        assert_eq!(fresh.bits(), m.bits());
+        assert_eq!(fresh.dense_baseline_bits(), m.dense_baseline_bits());
+        // The restored planner sees the same image: same future plans.
+        let z: Vec<f64> = y.iter().map(|v| v + 1.0).collect();
+        let a = m.broadcast(&z);
+        let b = fresh.broadcast(&z);
+        assert_eq!(a.changed, b.changed);
+        assert_eq!(a.bits, b.bits);
+        // A wrong-dimension image is rejected.
+        let mut bad = DownlinkMeter::dense(8);
+        assert!(bad.restore(Some(vec![0.0f32; 3]), 0, 0).is_err());
     }
 }

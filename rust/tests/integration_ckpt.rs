@@ -1,0 +1,394 @@
+//! Checkpoint/resume acceptance suite (ISSUE 7): durable snapshots with
+//! bitwise-identical restarts.
+//!
+//!   * kill-at-round-r (`killmaster@r`) + resume from the last snapshot
+//!     replays the exact uninterrupted trajectory — every RoundRecord and
+//!     the final model bit for bit — for EF21/EF21+/EF/DCGD under top-k
+//!     and rand-k (the RNG stream position is checkpoint state);
+//!   * the same holds with partial participation and worker faults in the
+//!     schedule (the resync tracker mirrors ride in the snapshot), and
+//!     over the local transport on both the plain and scheduled paths;
+//!   * a snapshot also extends a completed run: resuming with a larger
+//!     `--rounds` continues bitwise-identically to a run that had the
+//!     larger horizon from the start;
+//!   * fingerprint mismatches, corrupted bytes, and truncated files are
+//!     rejected with a clear error before any state is touched.
+
+use ef21::algo::{AlgoSpec, WorkerNode};
+use ef21::ckpt::Checkpoint;
+use ef21::compress::{Compressor, RandK, TopK};
+use ef21::coordinator::dist::{
+    run_distributed_ckpt, run_distributed_opts, run_distributed_sched,
+    run_distributed_sched_ckpt, Broadcast, TransportKind,
+};
+use ef21::coordinator::runner::{run_protocol, run_protocol_ckpt, CkptOptions, RunConfig};
+use ef21::metrics::History;
+use ef21::oracle::GradOracle;
+use ef21::sched::{FaultPlan, Participation, Scheduler};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn quads() -> Vec<Box<dyn GradOracle>> {
+    ef21::oracle::quadratic::divergence_example()
+        .into_iter()
+        .map(|q| Box::new(q) as Box<dyn GradOracle>)
+        .collect()
+}
+
+fn quad(i: usize) -> Box<dyn GradOracle> {
+    Box::new(ef21::oracle::quadratic::divergence_example().remove(i))
+}
+
+fn sched(part: Participation, faults: &str, n: usize) -> Arc<Scheduler> {
+    Arc::new(Scheduler::new(part, FaultPlan::parse(faults).unwrap(), None, n, 99).unwrap())
+}
+
+/// Fresh snapshot path under the system temp dir (unique per test name;
+/// any stale file from a previous run is removed first).
+fn tmp_ckpt(name: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("ef21_ckpt_test_{}_{name}.ckpt", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+fn assert_histories_bitwise(a: &History, b: &History, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.round, y.round, "{what}");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: loss at round {}", x.round);
+        assert_eq!(
+            x.grad_norm_sq.to_bits(),
+            y.grad_norm_sq.to_bits(),
+            "{what}: grad at round {}",
+            x.round
+        );
+        assert_eq!(
+            x.bits_per_client.to_bits(),
+            y.bits_per_client.to_bits(),
+            "{what}: bits at round {}",
+            x.round
+        );
+        assert_eq!(x.gt.to_bits(), y.gt.to_bits(), "{what}: gt at round {}", x.round);
+    }
+    assert_eq!(a.final_x.len(), b.final_x.len(), "{what}: final_x dim");
+    for (x, y) in a.final_x.iter().zip(&b.final_x) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: final_x");
+    }
+    assert_eq!(a.downlink_bits, b.downlink_bits, "{what}: downlink bits");
+}
+
+/// THE acceptance property: kill the master mid-run, resume from the
+/// last snapshot, and the trajectory is bitwise identical to a run that
+/// was never interrupted — for every checkpointable algorithm, under the
+/// deterministic Top-k AND the randomized Rand-k (whose RNG position
+/// must ride in the snapshot).
+#[test]
+fn kill_and_resume_is_bitwise_identical_for_all_algos_and_compressors() {
+    let compressors: Vec<(&str, Arc<dyn Compressor>)> = vec![
+        ("top1", Arc::new(TopK::new(1))),
+        ("rand2", Arc::new(RandK::new(2))),
+    ];
+    for (name, c) in compressors {
+        for algo in [AlgoSpec::Ef21, AlgoSpec::Ef21Plus, AlgoSpec::Ef, AlgoSpec::Dcgd] {
+            if algo == AlgoSpec::Ef21Plus && name == "rand2" {
+                continue; // EF21+ requires a deterministic compressor
+            }
+            let what = format!("{} {name}", algo.name());
+            let build = || {
+                ef21::algo::build(algo, vec![1.0; 3], quads(), c.clone(), 0.01, 5)
+            };
+            // Uninterrupted reference.
+            let (m, w) = build();
+            let baseline = run_protocol(m, w, &RunConfig::rounds(30));
+
+            // Crashed run: snapshots every 4 rounds, master killed at the
+            // start of round 13 → the last snapshot resumes from round 12.
+            let path = tmp_ckpt(&format!("kill_{}_{name}", algo.name()));
+            let (m, w) = build();
+            let cfg = RunConfig::rounds(30)
+                .with_sched(sched(Participation::Full, "killmaster@13", 3));
+            let err = run_protocol_ckpt(m, w, &cfg, CkptOptions::saving(path.clone(), 4))
+                .expect_err("the fault plan must kill this run");
+            assert!(format!("{err:#}").contains("killmaster"), "{what}: {err:#}");
+
+            // Resume: fresh nodes, no fault plan, state from the snapshot.
+            let ck = Checkpoint::read(&path).unwrap();
+            assert_eq!(ck.next_round, 12, "{what}: snapshot cadence");
+            let (m, w) = build();
+            let resumed =
+                run_protocol_ckpt(m, w, &RunConfig::rounds(30), CkptOptions::resuming(ck))
+                    .unwrap();
+            assert_histories_bitwise(&baseline, &resumed, &what);
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+/// Kill + resume under partial participation AND a crash/rejoin fault
+/// window: the resync tracker's mirrors ride in the snapshot, and the
+/// resumed run (same schedule minus the killmaster clause) replays the
+/// uninterrupted trajectory exactly.
+#[test]
+fn kill_and_resume_with_participation_and_faults_is_bitwise() {
+    let faults = "crash@2,rejoin@5";
+    let build = || {
+        ef21::algo::build(AlgoSpec::Ef21, vec![1.0; 3], quads(), Arc::new(TopK::new(1)), 0.01, 5)
+    };
+    let (m, w) = build();
+    let base_cfg =
+        RunConfig::rounds(30).with_sched(sched(Participation::Bernoulli(0.7), faults, 3));
+    let baseline = run_protocol(m, w, &base_cfg);
+
+    let path = tmp_ckpt("kill_pp_faults");
+    let (m, w) = build();
+    let killed_cfg = RunConfig::rounds(30).with_sched(sched(
+        Participation::Bernoulli(0.7),
+        &format!("{faults},killmaster@17"),
+        3,
+    ));
+    run_protocol_ckpt(m, w, &killed_cfg, CkptOptions::saving(path.clone(), 5))
+        .expect_err("killmaster@17 must abort the run");
+
+    let ck = Checkpoint::read(&path).unwrap();
+    assert_eq!(ck.next_round, 15);
+    assert!(ck.tracker.is_some(), "rejoin schedules must checkpoint the resync mirrors");
+    let (m, w) = build();
+    let resumed = run_protocol_ckpt(m, w, &base_cfg, CkptOptions::resuming(ck)).unwrap();
+    assert_histories_bitwise(&baseline, &resumed, "pp+faults");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A final-round snapshot extends a finished run: resuming it with a
+/// larger horizon continues bitwise-identically to a run that had the
+/// larger horizon from the start (uplink/downlink accounting and the
+/// recorded history carry over exactly).
+#[test]
+fn resume_extends_a_completed_run_bitwise() {
+    let build = || {
+        ef21::algo::build(
+            AlgoSpec::Ef21Plus,
+            vec![1.0; 3],
+            quads(),
+            Arc::new(TopK::new(1)),
+            0.01,
+            5,
+        )
+    };
+    let (m, w) = build();
+    let long = run_protocol(m, w, &RunConfig::rounds(20));
+
+    let path = tmp_ckpt("extend");
+    let (m, w) = build();
+    let short =
+        run_protocol_ckpt(m, w, &RunConfig::rounds(10), CkptOptions::saving(path.clone(), 10))
+            .unwrap();
+    assert_eq!(short.records.len(), 10);
+    let ck = Checkpoint::read(&path).unwrap();
+    assert_eq!(ck.next_round, 10);
+    let (m, w) = build();
+    let extended =
+        run_protocol_ckpt(m, w, &RunConfig::rounds(20), CkptOptions::resuming(ck)).unwrap();
+    assert_histories_bitwise(&long, &extended, "extend");
+    let _ = std::fs::remove_file(&path);
+}
+
+fn dist_build_master() -> Box<ef21::algo::ef21::Ef21Master> {
+    Box::new(ef21::algo::ef21::Ef21Master::new(vec![1.0; 3], 3, 0.01))
+}
+
+fn dist_make_worker(c: Arc<dyn Compressor>) -> impl Fn(usize) -> Box<dyn WorkerNode> + Send + Sync {
+    move |i: usize| {
+        let rng = ef21::util::rng::worker_rng(9, i);
+        Box::new(ef21::algo::ef21::Ef21Worker::new(quad(i), c.clone(), rng))
+            as Box<dyn WorkerNode>
+    }
+}
+
+/// Plain-path local transport: a mid-run snapshot resumes into the exact
+/// uninterrupted trajectory — master state, worker Markov state, and the
+/// downlink meter image all restore over the wire's Restore frame.
+#[test]
+fn local_transport_snapshot_resumes_bitwise() {
+    let c: Arc<dyn Compressor> = Arc::new(TopK::new(1));
+    let baseline = run_distributed_opts(
+        dist_build_master(),
+        3,
+        dist_make_worker(c.clone()),
+        12,
+        TransportKind::Local,
+        "dist-ckpt",
+        Broadcast::Dense,
+    )
+    .unwrap();
+
+    // Saving run: snapshots at rounds 5 and 10 → the file holds round 10.
+    let path = tmp_ckpt("dist_plain");
+    run_distributed_ckpt(
+        dist_build_master(),
+        3,
+        dist_make_worker(c.clone()),
+        12,
+        TransportKind::Local,
+        "dist-ckpt",
+        Broadcast::Dense,
+        CkptOptions::saving(path.clone(), 5),
+    )
+    .unwrap();
+    let ck = Checkpoint::read(&path).unwrap();
+    assert_eq!(ck.next_round, 10);
+
+    let resumed = run_distributed_ckpt(
+        dist_build_master(),
+        3,
+        dist_make_worker(c),
+        12,
+        TransportKind::Local,
+        "dist-ckpt",
+        Broadcast::Dense,
+        CkptOptions::resuming(ck),
+    )
+    .unwrap();
+    assert_histories_bitwise(&baseline.history, &resumed.history, "dist plain");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Scheduled local transport: `killmaster@r` really tears the master
+/// down mid-run (workers shut down cleanly, the error names the fault),
+/// and resuming from the last snapshot — same schedule minus the kill —
+/// replays the uninterrupted trajectory bit for bit.
+#[test]
+fn local_transport_killmaster_and_resume_is_bitwise() {
+    let c: Arc<dyn Compressor> = Arc::new(TopK::new(1));
+    let part = Participation::Bernoulli(0.7);
+    let baseline = run_distributed_sched(
+        dist_build_master(),
+        3,
+        dist_make_worker(c.clone()),
+        15,
+        TransportKind::Local,
+        "dist-kill",
+        sched(part, "", 3),
+    )
+    .unwrap();
+
+    let path = tmp_ckpt("dist_kill");
+    let err = run_distributed_sched_ckpt(
+        dist_build_master(),
+        3,
+        dist_make_worker(c.clone()),
+        15,
+        TransportKind::Local,
+        "dist-kill",
+        sched(part, "killmaster@7", 3),
+        CkptOptions::saving(path.clone(), 3),
+    )
+    .expect_err("killmaster@7 must abort the scheduled run");
+    assert!(format!("{err:#}").contains("killmaster"), "{err:#}");
+
+    let ck = Checkpoint::read(&path).unwrap();
+    assert_eq!(ck.next_round, 6);
+    assert!(ck.last_loss.is_some(), "scheduled dist snapshots carry the loss cache");
+    let resumed = run_distributed_sched_ckpt(
+        dist_build_master(),
+        3,
+        dist_make_worker(c),
+        15,
+        TransportKind::Local,
+        "dist-kill",
+        sched(part, "", 3),
+        CkptOptions::resuming(ck),
+    )
+    .unwrap();
+    assert_histories_bitwise(&baseline.history, &resumed.history, "dist killmaster");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A snapshot from one run configuration must not silently resume
+/// another: the fingerprint check rejects it before any state moves.
+#[test]
+fn fingerprint_mismatch_is_rejected() {
+    let path = tmp_ckpt("fingerprint");
+    let (m, w) =
+        ef21::algo::build(AlgoSpec::Ef21, vec![1.0; 3], quads(), Arc::new(TopK::new(1)), 0.01, 5);
+    run_protocol_ckpt(
+        m,
+        w,
+        &RunConfig::rounds(6),
+        CkptOptions::saving(path.clone(), 3).with_fingerprint("run-A"),
+    )
+    .unwrap();
+    let ck = Checkpoint::read(&path).unwrap();
+    assert_eq!(ck.fingerprint, "run-A");
+    assert!(ck.verify_fingerprint("run-A").is_ok());
+    let (m, w) =
+        ef21::algo::build(AlgoSpec::Ef21, vec![1.0; 3], quads(), Arc::new(TopK::new(1)), 0.01, 5);
+    let err = run_protocol_ckpt(
+        m,
+        w,
+        &RunConfig::rounds(6),
+        CkptOptions::resuming(ck).with_fingerprint("run-B"),
+    )
+    .expect_err("a different fingerprint must be rejected");
+    assert!(format!("{err:#}").contains("different run"), "{err:#}");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Corrupted and truncated checkpoint files are rejected with a clear
+/// error — never decoded into garbage state.
+#[test]
+fn corrupted_and_truncated_checkpoints_are_rejected() {
+    let path = tmp_ckpt("corrupt");
+    let (m, w) =
+        ef21::algo::build(AlgoSpec::Ef21, vec![1.0; 3], quads(), Arc::new(TopK::new(1)), 0.01, 5);
+    run_protocol_ckpt(m, w, &RunConfig::rounds(6), CkptOptions::saving(path.clone(), 3))
+        .unwrap();
+    let good = std::fs::read(&path).unwrap();
+    assert!(Checkpoint::decode(&good).is_ok());
+
+    // Flip one byte at several offsets: every corruption is caught
+    // (structurally or by the FNV checksum), never silently accepted.
+    for at in [20, good.len() / 2, good.len() - 5] {
+        let mut bad = good.clone();
+        bad[at] ^= 0x40;
+        assert!(Checkpoint::decode(&bad).is_err(), "flip at {at} must be rejected");
+    }
+    // A clean prefix truncation (as a crashed writer without the atomic
+    // rename would leave) is caught too.
+    for keep in [0, MAGIC_LEN, good.len() / 2, good.len() - 1] {
+        assert!(
+            Checkpoint::decode(&good[..keep]).is_err(),
+            "truncation to {keep} bytes must be rejected"
+        );
+    }
+    // Checksum errors name the problem.
+    let mut bad = good.clone();
+    let mid = good.len() / 2;
+    bad[mid] ^= 0x01;
+    let msg = format!("{:#}", Checkpoint::decode(&bad).unwrap_err());
+    assert!(
+        msg.contains("checksum") || msg.contains("truncated") || msg.contains("section"),
+        "unhelpful corruption error: {msg}"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+const MAGIC_LEN: usize = 13; // b"ef21.ckpt/v1\n"
+
+/// Resuming with the wrong worker count is rejected up front.
+#[test]
+fn worker_count_mismatch_is_rejected() {
+    let path = tmp_ckpt("nworkers");
+    let (m, w) =
+        ef21::algo::build(AlgoSpec::Ef21, vec![1.0; 3], quads(), Arc::new(TopK::new(1)), 0.01, 5);
+    run_protocol_ckpt(m, w, &RunConfig::rounds(4), CkptOptions::saving(path.clone(), 2))
+        .unwrap();
+    let mut ck = Checkpoint::read(&path).unwrap();
+    ck.workers.pop(); // now claims 2 workers
+    let (m, w) =
+        ef21::algo::build(AlgoSpec::Ef21, vec![1.0; 3], quads(), Arc::new(TopK::new(1)), 0.01, 5);
+    let err = run_protocol_ckpt(m, w, &RunConfig::rounds(4), CkptOptions::resuming(ck))
+        .expect_err("worker-count mismatch must be rejected");
+    assert!(format!("{err:#}").contains("workers"), "{err:#}");
+    let _ = std::fs::remove_file(&path);
+}
