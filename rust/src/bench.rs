@@ -15,9 +15,17 @@
 //!   * `compress.*` — the compressor zoo (top-k / rand-k / sign /
 //!     identity) and the 32-block layer-wise layout at DL scale;
 //!   * `pp.*` — the participation sweep (p ∈ {1.0, 0.5, 0.1}) on the a9a
-//!     logistic problem, wall + uplink bits.
+//!     logistic problem, wall + uplink bits;
+//!   * `fleet.*` — the fleet-scale sweep (DESIGN.md §11): the sharded
+//!     tree-aggregation master driven by n simulated clients
+//!     (n ∈ {10^2, 10^4} quick, plus 10^6 full), recording rounds/sec,
+//!     the per-round latency tail, master RSS, and the sparse resync
+//!     mirrors' byte footprint. `--fleet-n 100,10000` runs *only* the
+//!     fleet cases at the listed client counts — CI's RSS-sublinearity
+//!     leg launches one process per n so the RSS samples are
+//!     independent.
 //!
-//! Schema (`ef21.bench.round/v2`): a top-level object with `schema`,
+//! Schema (`ef21.bench.round/v3`): a top-level object with `schema`,
 //! `isa` (dispatched SIMD path), `threads_auto`, `alloc_counting`,
 //! `quick`, and `cases` — one object per case with `name`, `rounds`,
 //! `wall_ns`, `rounds_per_sec`, `uplink_bits`, `downlink_bits`, `d`,
@@ -31,7 +39,10 @@
 //! facade for the timed run only. Warmup and alloc-counting runs stay
 //! telemetry-disabled, so the zero-allocation path is measured exactly
 //! as it ships; v2 is what lets CI gate on tail (p99) regressions, not
-//! just mean throughput.
+//! just mean throughput. v3 adds the `fleet.*` cases, which carry two
+//! extra keys (absent elsewhere, so v2 baseline diffs stay valid):
+//! `rss_kb` — master `VmRSS` after the run (`null` off Linux) — and
+//! `mirror_bytes` — bytes held by the sparse per-worker state mirrors.
 
 use crate::algo::AlgoSpec;
 use crate::compress::{self, Compressed, Compressor};
@@ -85,6 +96,10 @@ struct Case {
     workers: usize,
     allocs_per_round: Option<f64>,
     round_ns: Option<RoundSummary>,
+    /// Master resident set size after the run — `fleet.*` cases only.
+    rss_kb: Option<u64>,
+    /// Sparse state-mirror footprint — `fleet.*` cases only.
+    mirror_bytes: Option<u64>,
 }
 
 impl Case {
@@ -117,6 +132,14 @@ impl Case {
                 None => Json::Null,
             },
         );
+        // Fleet-only keys: emitted only when measured, so non-fleet
+        // cases keep their exact v2 shape.
+        if let Some(rss) = self.rss_kb {
+            m.insert("rss_kb".into(), Json::Num(rss as f64));
+        }
+        if let Some(b) = self.mirror_bytes {
+            m.insert("mirror_bytes".into(), Json::Num(b as f64));
+        }
         Json::Obj(m)
     }
 }
@@ -260,6 +283,8 @@ fn round_case(
         workers: n,
         allocs_per_round: apr,
         round_ns,
+        rss_kb: None,
+        mirror_bytes: None,
     }
 }
 
@@ -290,6 +315,8 @@ fn compress_case(name: &str, c: &dyn Compressor, d: usize) -> Case {
         workers: 1,
         allocs_per_round: None,
         round_ns: None, // per-call latency, not a round loop
+        rss_kb: None,
+        mirror_bytes: None,
     }
 }
 
@@ -331,15 +358,90 @@ fn pp_case(name: &str, participation: Option<f64>, rounds: usize) -> Case {
         workers: 20,
         allocs_per_round: None,
         round_ns,
+        rss_kb: None,
+        mirror_bytes: None,
     }
 }
 
-/// Entry point for `ef21 bench [--json PATH] [--quick]`.
+/// Summarize an explicit per-round sample vector (the fleet harness
+/// times rounds itself rather than going through the telemetry
+/// histogram, so its percentiles are exact, not bucketed).
+fn summarize_samples(mut ns: Vec<u64>) -> Option<RoundSummary> {
+    if ns.is_empty() {
+        return None;
+    }
+    ns.sort_unstable();
+    let q = |frac: f64| ns[((ns.len() - 1) as f64 * frac).round() as usize];
+    let sum: u64 = ns.iter().sum();
+    Some(RoundSummary {
+        count: ns.len() as u64,
+        p50: q(0.50),
+        p90: q(0.90),
+        p99: q(0.99),
+        max: *ns.last().expect("nonempty"),
+        mean: sum as f64 / ns.len() as f64,
+    })
+}
+
+/// Fleet-scale sweep point: the sharded tree-aggregation master driven
+/// by `n` simulated clients (`coordinator::fleet`). Whole-run wall time
+/// includes shard spawn/join — the fleet claim is about steady-state
+/// aggregation, and at 10 rounds the spawn cost is visible in `wall_ns`
+/// vs `round_ns.mean`, which is fine: both are recorded.
+fn fleet_case(n_clients: usize, quick: bool) -> Result<Case> {
+    let mut spec = crate::coordinator::fleet::FleetSpec::quick(n_clients);
+    if !quick {
+        // More rounds for stable tails, fewer at 1e6 to bound wall time.
+        spec.rounds = if n_clients >= 1_000_000 { 6 } else { 30 };
+    }
+    let out = crate::coordinator::fleet::run_fleet(&spec)?;
+    // Every merged entry is one client coordinate: u32 index + f64
+    // value, the standard sparse uplink accounting.
+    let uplink_bits = out.entries_folded * 96;
+    Ok(Case {
+        name: format!("fleet.n{n_clients}"),
+        rounds: out.rounds as u64,
+        wall_ns: out.wall_ns,
+        uplink_bits,
+        downlink_bits: 0, // simulated clients: no model broadcast
+        d: spec.d,
+        workers: n_clients,
+        allocs_per_round: None,
+        round_ns: summarize_samples(out.round_ns),
+        rss_kb: out.rss_kb,
+        mirror_bytes: Some(out.mirror_bytes),
+    })
+}
+
+/// Entry point for `ef21 bench [--json PATH] [--quick] [--fleet-n N,N,..]`.
 pub fn main(args: &Args) -> Result<()> {
     let quick = args.has("quick");
     let json_path = args.get_str("json").unwrap_or("BENCH_round.json").to_string();
+    // `--fleet-n 100,10000`: run only the fleet sweep, at these client
+    // counts. Without it, the full suite runs and the fleet sweep uses
+    // its default ladder.
+    let fleet_only: Option<Vec<usize>> = match args.get_str("fleet-n") {
+        None => None,
+        Some(list) => Some(
+            list.split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<usize>()
+                        .map_err(|e| anyhow::anyhow!("--fleet-n {t:?}: {e}"))
+                })
+                .collect::<Result<Vec<usize>>>()?,
+        ),
+    };
     let auto = auto_threads();
     let mut cases: Vec<Case> = Vec::new();
+
+    if let Some(ns) = &fleet_only {
+        eprintln!("bench: fleet sweep only (n = {ns:?})...");
+        for &n in ns {
+            cases.push(fleet_case(n, quick)?);
+        }
+        return write_report(&json_path, quick, auto, &cases);
+    }
 
     // Round loops on synthetic quadratics: top-k at 1% density.
     let (r4, r6) = if quick { (60, 6) } else { (300, 24) };
@@ -395,9 +497,22 @@ pub fn main(args: &Args) -> Result<()> {
         cases.push(pp_case(&format!("pp.p{p}"), Some(p), rpp));
     }
 
-    // Assemble and write the report.
+    // Fleet-scale sweep: 10^2 and 10^4 simulated clients always, 10^6
+    // in full runs only.
+    let fleet_ns: &[usize] =
+        if quick { &[100, 10_000] } else { &[100, 10_000, 1_000_000] };
+    eprintln!("bench: fleet sweep (n = {fleet_ns:?})...");
+    for &n in fleet_ns {
+        cases.push(fleet_case(n, quick)?);
+    }
+
+    write_report(&json_path, quick, auto, &cases)
+}
+
+/// Assemble the JSON report, write it, and print the console summary.
+fn write_report(json_path: &str, quick: bool, auto: usize, cases: &[Case]) -> Result<()> {
     let mut top = BTreeMap::new();
-    top.insert("schema".into(), Json::Str("ef21.bench.round/v2".into()));
+    top.insert("schema".into(), Json::Str("ef21.bench.round/v3".into()));
     top.insert("isa".into(), Json::Str(simd::isa().name().into()));
     top.insert("threads_auto".into(), Json::Num(auto as f64));
     top.insert(
@@ -410,7 +525,7 @@ pub fn main(args: &Args) -> Result<()> {
         Json::Arr(cases.iter().map(Case::to_json).collect()),
     );
     let body = Json::Obj(top).to_string();
-    std::fs::write(&json_path, body.as_bytes())
+    std::fs::write(json_path, body.as_bytes())
         .with_context(|| format!("writing {json_path}"))?;
 
     // Console summary (the JSON is the artifact; this is for humans).
@@ -418,7 +533,7 @@ pub fn main(args: &Args) -> Result<()> {
         "{:<38} {:>10} {:>14} {:>14} {:>12} {:>9}",
         "case", "rounds", "wall", "rounds/s", "p99", "allocs/r"
     );
-    for c in &cases {
+    for c in cases {
         let rps = if c.wall_ns == 0 { 0.0 } else { c.rounds as f64 / (c.wall_ns as f64 / 1e9) };
         let apr = match c.allocs_per_round {
             Some(a) => format!("{a:.1}"),

@@ -55,10 +55,16 @@ pub const MAGIC: &[u8] = b"ef21.ckpt/v1\n";
 const SEC_META: u32 = 1;
 const SEC_MASTER: u32 = 2;
 const SEC_WORKERS: u32 = 3;
+/// Dense resync mirrors (v1 layout). Decode-only: old snapshots are
+/// converted to [`TrackerImage`] on read; new files write
+/// [`SEC_TRACKER_SPARSE`].
 const SEC_TRACKER: u32 = 4;
 const SEC_DOWNLINK: u32 = 5;
 const SEC_HISTORY: u32 = 6;
 const SEC_LOSSES: u32 = 7;
+/// Sparse resync mirrors ([`TrackerImage`]) — O(total nnz) on disk
+/// instead of the dense n×d f64 dump.
+const SEC_TRACKER_SPARSE: u32 = 8;
 const SEC_CKSUM: u32 = 0xC5C5_C5C5;
 
 /// FNV-1a 64 over a byte slice (no external deps; collision resistance
@@ -70,6 +76,52 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+/// One worker's resync mirror as sorted-unique `(idx, val)` pairs.
+/// Coordinates absent from `idx` are exactly `+0.0` (the dense initial
+/// value); an explicit entry may hold any bits, including `-0.0`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseMirror {
+    pub idx: Vec<u32>,
+    pub val: Vec<f64>,
+}
+
+/// The [`crate::sched::StateTracker`] checkpoint image: one compacted
+/// sparse mirror per worker plus the mirrored dimension (needed for
+/// validation — the sparse entries alone do not pin down `d`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TrackerImage {
+    pub d: usize,
+    pub mirrors: Vec<SparseMirror>,
+}
+
+impl TrackerImage {
+    /// Convert a dense v1 mirror dump, keeping every cell whose **bits**
+    /// are nonzero. `+0.0` cells become implicit (bit-identical to the
+    /// reconstruction default); `-0.0` has nonzero bits and keeps an
+    /// explicit entry, so reconstruction is exact for every cell.
+    pub fn from_dense(mirrors: &[Vec<f64>]) -> Result<TrackerImage> {
+        let d = mirrors.first().map_or(0, Vec::len);
+        let mut out = Vec::with_capacity(mirrors.len());
+        for m in mirrors {
+            ensure!(
+                m.len() == d,
+                "dense tracker mirrors are ragged ({} vs {d})",
+                m.len()
+            );
+            let mut idx = Vec::new();
+            let mut val = Vec::new();
+            for (i, &v) in m.iter().enumerate() {
+                if v.to_bits() != 0 {
+                    idx.push(i as u32);
+                    val.push(v);
+                }
+            }
+            out.push(SparseMirror { idx, val });
+        }
+        Ok(TrackerImage { d, mirrors: out })
+    }
 }
 
 /// Downlink meter dynamic state: last-broadcast f32 image (None until
@@ -97,7 +149,9 @@ pub struct Checkpoint {
     /// Opaque per-worker blobs, in worker order.
     pub workers: Vec<Vec<u8>>,
     /// Resync mirrors, present iff the run keeps a StateTracker.
-    pub tracker: Option<Vec<Vec<f64>>>,
+    /// Written sparse ([`SEC_TRACKER_SPARSE`]); dense v1 snapshots are
+    /// converted losslessly on decode.
+    pub tracker: Option<TrackerImage>,
     /// Downlink meter state.
     pub downlink: DownlinkState,
     /// Everything recorded so far (final_x is ignored/empty).
@@ -136,13 +190,20 @@ impl Checkpoint {
         }
         put_section(&mut out, SEC_WORKERS, &sec);
 
-        if let Some(mirrors) = &self.tracker {
+        if let Some(image) = &self.tracker {
             sec.clear();
-            wire::put_u32(&mut sec, mirrors.len() as u32);
-            for m in mirrors {
-                wire::put_f64s(&mut sec, m);
+            wire::put_u64(&mut sec, image.d as u64);
+            wire::put_u32(&mut sec, image.mirrors.len() as u32);
+            for m in &image.mirrors {
+                wire::put_u32(&mut sec, m.idx.len() as u32);
+                for &i in &m.idx {
+                    wire::put_u32(&mut sec, i);
+                }
+                for &v in &m.val {
+                    wire::put_f64(&mut sec, v);
+                }
             }
-            put_section(&mut out, SEC_TRACKER, &sec);
+            put_section(&mut out, SEC_TRACKER_SPARSE, &sec);
         }
 
         sec.clear();
@@ -227,12 +288,39 @@ impl Checkpoint {
                     ck.workers = blobs;
                 }
                 SEC_TRACKER => {
+                    // Dense v1 compatibility path: convert losslessly.
+                    ensure!(
+                        ck.tracker.is_none(),
+                        "checkpoint has both dense and sparse tracker sections"
+                    );
                     let n = p.u32()? as usize;
                     let mut mirrors = Vec::with_capacity(n.min(1 << 16));
                     for _ in 0..n {
                         mirrors.push(p.f64s()?);
                     }
-                    ck.tracker = Some(mirrors);
+                    ck.tracker = Some(TrackerImage::from_dense(&mirrors)?);
+                }
+                SEC_TRACKER_SPARSE => {
+                    ensure!(
+                        ck.tracker.is_none(),
+                        "checkpoint has both dense and sparse tracker sections"
+                    );
+                    let d = p.u64()? as usize;
+                    let n = p.u32()? as usize;
+                    let mut mirrors = Vec::with_capacity(n.min(1 << 16));
+                    for _ in 0..n {
+                        let nnz = p.u32()? as usize;
+                        let mut idx = Vec::with_capacity(p.clamped_cap(nnz, 4));
+                        for _ in 0..nnz {
+                            idx.push(p.u32()?);
+                        }
+                        let mut val = Vec::with_capacity(p.clamped_cap(nnz, 8));
+                        for _ in 0..nnz {
+                            val.push(p.f64()?);
+                        }
+                        mirrors.push(SparseMirror { idx, val });
+                    }
+                    ck.tracker = Some(TrackerImage { d, mirrors });
                 }
                 SEC_DOWNLINK => {
                     let has_img = p.u8()?;
@@ -358,7 +446,13 @@ mod tests {
             uplink_bits_cum: 12345,
             master: vec![1, 2, 3, 4],
             workers: vec![vec![9], vec![], vec![8, 7]],
-            tracker: Some(vec![vec![1.0, -2.0], vec![0.5, 0.25]]),
+            tracker: Some(TrackerImage {
+                d: 2,
+                mirrors: vec![
+                    SparseMirror { idx: vec![0, 1], val: vec![1.0, -2.0] },
+                    SparseMirror { idx: vec![0, 1], val: vec![0.5, 0.25] },
+                ],
+            }),
             downlink: DownlinkState {
                 last: Some(vec![1.0f32, 2.5]),
                 bits_cum: 640,
@@ -400,6 +494,52 @@ mod tests {
         assert_eq!(back.history.records[0].round, 6);
         assert_eq!(back.history.records[0].loss.to_bits(), 0.5f64.to_bits());
         assert_eq!(back.last_loss, ck.last_loss);
+    }
+
+    /// Dense v1 snapshots (SEC_TRACKER) still decode, converted to the
+    /// sparse image losslessly: +0.0 cells become implicit, -0.0 and
+    /// every nonzero cell keep their exact bits.
+    #[test]
+    fn dense_v1_tracker_section_still_decodes() {
+        // Hand-build a v1-layout container: re-encode sample() without
+        // its sparse tracker section, then splice in a dense SEC_TRACKER
+        // before the checksum.
+        let ck = Checkpoint { tracker: None, ..sample() };
+        let bytes = ck.encode();
+        let body_len = bytes.len() - (4 + 8 + 8); // strip CKSUM section
+        let mut v1 = bytes[..body_len].to_vec();
+        let mut sec = Vec::new();
+        wire::put_u32(&mut sec, 2);
+        wire::put_f64s(&mut sec, &[1.5, 0.0, -0.0]);
+        wire::put_f64s(&mut sec, &[0.0, 0.25, 0.0]);
+        put_section(&mut v1, SEC_TRACKER, &sec);
+        let sum = fnv1a64(&v1);
+        let mut tail = Vec::new();
+        wire::put_u64(&mut tail, sum);
+        put_section(&mut v1, SEC_CKSUM, &tail);
+
+        let back = Checkpoint::decode(&v1).unwrap();
+        let tr = back.tracker.expect("dense tracker section must decode");
+        assert_eq!(tr.d, 3);
+        assert_eq!(tr.mirrors.len(), 2);
+        assert_eq!(tr.mirrors[0].idx, vec![0, 2]);
+        assert_eq!(tr.mirrors[0].val[0].to_bits(), 1.5f64.to_bits());
+        assert_eq!(tr.mirrors[0].val[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(tr.mirrors[1].idx, vec![1]);
+        assert_eq!(tr.mirrors[1].val, vec![0.25]);
+
+        // A file carrying BOTH tracker layouts is rejected.
+        let mut both = v1[..v1.len() - (4 + 8 + 8)].to_vec();
+        let mut sp = Vec::new();
+        wire::put_u64(&mut sp, 3);
+        wire::put_u32(&mut sp, 0);
+        put_section(&mut both, SEC_TRACKER_SPARSE, &sp);
+        let sum = fnv1a64(&both);
+        let mut tail = Vec::new();
+        wire::put_u64(&mut tail, sum);
+        put_section(&mut both, SEC_CKSUM, &tail);
+        let e = format!("{:#}", Checkpoint::decode(&both).unwrap_err());
+        assert!(e.contains("both dense and sparse"), "{e}");
     }
 
     #[test]

@@ -135,6 +135,41 @@ impl BlocksSpec {
     }
 }
 
+/// `--master` spec: which engine drives the master side of a transport
+/// run. `threads` (the default) is the lockstep thread-per-connection
+/// loop; `reactor` multiplexes every connection through a sharded
+/// nonblocking poller (see `coordinator::reactor`) — same wire
+/// protocol, same per-round absorb order, bit-identical trajectories.
+///
+/// Deliberately excluded from the checkpoint fingerprint: the engines
+/// are bit-identical by construction (and locked by
+/// `tests/integration_fleet.rs`), so a snapshot moves freely between
+/// them — same rationale as the `threads` knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MasterEngine {
+    #[default]
+    Threads,
+    Reactor,
+}
+
+impl MasterEngine {
+    pub fn parse(s: &str) -> Result<MasterEngine> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "threads" => Ok(MasterEngine::Threads),
+            "reactor" => Ok(MasterEngine::Reactor),
+            other => anyhow::bail!("--master {other}: expected 'threads' or 'reactor'"),
+        }
+    }
+
+    /// Read `--master` from parsed args (absent = `threads`).
+    pub fn from_args(args: &cli::Args) -> Result<MasterEngine> {
+        match args.get_str("master") {
+            Some(s) => MasterEngine::parse(s),
+            None => Ok(MasterEngine::Threads),
+        }
+    }
+}
+
 /// `--participation`/`--faults`/`--deadline-ms` spec: the round
 /// scheduling configuration (see `crate::sched`). The default —
 /// full participation, no faults, no deadline — is the exact legacy
@@ -333,6 +368,10 @@ pub struct RunSpec {
     /// Round participation/fault schedule (`--participation`, `--faults`,
     /// `--deadline-ms`; the default is the exact legacy protocol).
     pub sched: SchedSpec,
+    /// Transport-run master engine (`--master threads|reactor`;
+    /// `Threads` = exact legacy thread-per-connection loop). Not part of
+    /// the fingerprint: the engines are bit-identical.
+    pub master: MasterEngine,
 }
 
 impl Default for RunSpec {
@@ -352,6 +391,7 @@ impl Default for RunSpec {
             threads: Threads::Auto,
             blocks: BlocksSpec::Flat,
             sched: SchedSpec::default(),
+            master: MasterEngine::Threads,
         }
     }
 }
@@ -385,6 +425,7 @@ impl RunSpec {
         s.threads = Threads::from_args(args)?;
         s.blocks = BlocksSpec::from_args(args)?;
         s.sched = SchedSpec::from_args(args)?;
+        s.master = MasterEngine::from_args(args)?;
         Ok(s)
     }
 
@@ -640,6 +681,26 @@ mod tests {
         assert_ne!(base.fingerprint(100, "sim"), crashed.fingerprint(100, "sim"));
         assert_ne!(base.fingerprint(100, "sim"), base.fingerprint(101, "sim"));
         assert_ne!(base.fingerprint(100, "sim"), base.fingerprint(100, "local"));
+    }
+
+    #[test]
+    fn master_engine_parses_and_stays_out_of_the_fingerprint() {
+        assert_eq!(MasterEngine::parse("threads").unwrap(), MasterEngine::Threads);
+        assert_eq!(MasterEngine::parse("Reactor").unwrap(), MasterEngine::Reactor);
+        assert!(MasterEngine::parse("poll").is_err());
+        let s = RunSpec::from_args(&cli::Args::from_vec(vec![
+            "--master".into(),
+            "reactor".into(),
+        ]))
+        .unwrap();
+        assert_eq!(s.master, MasterEngine::Reactor);
+        // Bit-identical engines share checkpoint identity.
+        let mut t = s.clone();
+        t.master = MasterEngine::Threads;
+        assert_eq!(s.fingerprint(100, "dist"), t.fingerprint(100, "dist"));
+        // Absent = legacy.
+        let d = RunSpec::from_args(&cli::Args::from_vec(vec![])).unwrap();
+        assert_eq!(d.master, MasterEngine::Threads);
     }
 
     #[test]

@@ -97,7 +97,7 @@ fn split_msg_by_blocks(c: &Compressed, layout: &BlockLayout, loss: f64) -> Vec<F
 /// Frame bytes on both directions go through per-connection reusable
 /// buffers (`recv_into` / `encode_into`), so sustained rounds stop
 /// churning frame allocations.
-fn worker_loop(
+pub(crate) fn worker_loop(
     mut worker: Box<dyn WorkerNode>,
     conn: &mut dyn Conn,
     up_blocks: Option<Arc<BlockLayout>>,
@@ -282,7 +282,7 @@ fn gather(
 }
 
 /// Worker-thread entry point: `(worker index, connection) -> exit result`.
-type RunWorker = Arc<dyn Fn(usize, Box<dyn Conn>) -> Result<()> + Send + Sync>;
+pub(crate) type RunWorker = Arc<dyn Fn(usize, Box<dyn Conn>) -> Result<()> + Send + Sync>;
 
 /// Master-side conns (worker order) plus the worker thread handles.
 type WiredTransport = (Vec<Box<dyn Conn>>, Vec<std::thread::JoinHandle<Result<()>>>);
@@ -316,59 +316,78 @@ fn wire_transport(
             }
         }
         TransportKind::Tcp => {
-            let (port, acceptor) = tcp::listen_local(n_workers)?;
-            for i in 0..n_workers {
-                let rw = run_worker.clone();
-                handles.push(std::thread::spawn(move || {
-                    // Stagger connects so accept order == worker order.
-                    std::thread::sleep(std::time::Duration::from_millis(5 * i as u64));
-                    let (attempts, backoff) = tcp::connect_retry_schedule();
-                    let mut conn = tcp::TcpConn::connect_with_retry(
-                        &format!("127.0.0.1:{port}"),
-                        attempts,
-                        backoff,
-                    )?;
-                    if unbounded_worker_reads {
-                        conn.set_io_timeout(None)?;
-                    }
-                    // Identify ourselves first so the master can order us.
-                    conn.send(&(i as u32).to_le_bytes())?;
-                    rw(i, Box::new(conn))
-                }));
-            }
-            // Order accepted conns by the announced worker id. A panic in
-            // the acceptor thread becomes an error, not a master panic.
-            let conns = match acceptor.join() {
-                Ok(res) => res?,
-                Err(p) => bail!("transport acceptor thread panicked: {}", panic_msg(&*p)),
-            };
-            let mut ordered: Vec<Option<tcp::TcpConn>> = (0..n_workers).map(|_| None).collect();
-            for mut c in conns {
-                let id_bytes = c.recv()?;
-                // Length-checked decode: a malformed hello must surface
-                // as an error, not an out-of-bounds slice panic.
-                ensure!(
-                    id_bytes.len() == 4,
-                    "bad worker-id handshake frame: {} bytes (expected 4)",
-                    id_bytes.len()
-                );
-                let id =
-                    u32::from_le_bytes(id_bytes[..].try_into().expect("length checked above"))
-                        as usize;
-                ensure!(id < n_workers, "bad worker id {id}");
-                ensure!(ordered[id].is_none(), "duplicate worker id {id}");
-                ordered[id] = Some(c);
-            }
-            for c in ordered {
-                master_conns.push(Box::new(c.context("missing worker connection")?));
+            let (conns, h) = wire_tcp_raw(n_workers, run_worker, unbounded_worker_reads)?;
+            handles = h;
+            for c in conns {
+                master_conns.push(Box::new(c));
             }
         }
     }
     Ok((master_conns, handles))
 }
 
+/// The TCP arm of [`wire_transport`], returning the concrete
+/// [`tcp::TcpConn`]s (worker order) so the reactor can strip them down
+/// to raw nonblocking streams. Workers dial simultaneously (no stagger)
+/// and announce their id first; the master orders accepted conns by it.
+pub(crate) fn wire_tcp_raw(
+    n_workers: usize,
+    run_worker: RunWorker,
+    unbounded_worker_reads: bool,
+) -> Result<(Vec<tcp::TcpConn>, Vec<std::thread::JoinHandle<Result<()>>>)> {
+    let (port, acceptor) = tcp::listen_local(n_workers)?;
+    let mut handles = Vec::with_capacity(n_workers);
+    for i in 0..n_workers {
+        let rw = run_worker.clone();
+        handles.push(std::thread::spawn(move || {
+            // No connect stagger: accept order is irrelevant (the
+            // master orders conns by the announced id below) and
+            // the listener's deepened backlog absorbs the herd.
+            let (attempts, backoff) = tcp::connect_retry_schedule();
+            let mut conn = tcp::TcpConn::connect_with_retry(
+                &format!("127.0.0.1:{port}"),
+                attempts,
+                backoff,
+            )?;
+            if unbounded_worker_reads {
+                conn.set_io_timeout(None)?;
+            }
+            // Identify ourselves first so the master can order us.
+            conn.send(&(i as u32).to_le_bytes())?;
+            rw(i, Box::new(conn))
+        }));
+    }
+    // Order accepted conns by the announced worker id. A panic in
+    // the acceptor thread becomes an error, not a master panic.
+    let conns = match acceptor.join() {
+        Ok(res) => res?,
+        Err(p) => bail!("transport acceptor thread panicked: {}", panic_msg(&*p)),
+    };
+    let mut ordered: Vec<Option<tcp::TcpConn>> = (0..n_workers).map(|_| None).collect();
+    for mut c in conns {
+        let id_bytes = c.recv()?;
+        // Length-checked decode: a malformed hello must surface
+        // as an error, not an out-of-bounds slice panic.
+        ensure!(
+            id_bytes.len() == 4,
+            "bad worker-id handshake frame: {} bytes (expected 4)",
+            id_bytes.len()
+        );
+        let id = u32::from_le_bytes(id_bytes[..].try_into().expect("length checked above"))
+            as usize;
+        ensure!(id < n_workers, "bad worker id {id}");
+        ensure!(ordered[id].is_none(), "duplicate worker id {id}");
+        ordered[id] = Some(c);
+    }
+    let mut out = Vec::with_capacity(n_workers);
+    for c in ordered {
+        out.push(c.context("missing worker connection")?);
+    }
+    Ok((out, handles))
+}
+
 /// Best-effort human-readable message out of a panic payload.
-fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
     p.downcast_ref::<&str>()
         .map(|s| s.to_string())
         .or_else(|| p.downcast_ref::<String>().cloned())
@@ -378,7 +397,7 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
 /// Join every worker thread, converting panics and worker errors into
 /// one `anyhow` error so the master shuts down cleanly (all threads are
 /// joined even when an early one failed).
-fn join_all(handles: Vec<std::thread::JoinHandle<Result<()>>>) -> Result<()> {
+pub(crate) fn join_all(handles: Vec<std::thread::JoinHandle<Result<()>>>) -> Result<()> {
     let mut first_err: Option<anyhow::Error> = None;
     for (i, h) in handles.into_iter().enumerate() {
         let res = match h.join() {
@@ -1006,8 +1025,8 @@ where
         // StateSync pushes precede this round's broadcast.
         for &w in &plan.resync {
             let sp = telemetry::span_arg("sched.resync", "w", w as u64);
-            let tr = tracker.as_ref().expect("rejoin scheduled without a tracker");
-            let frame = encode(&Frame::StateSync(tr.mirror(w).to_vec()));
+            let tr = tracker.as_mut().expect("rejoin scheduled without a tracker");
+            let frame = encode(&Frame::StateSync(tr.mirror_dense(w).to_vec()));
             master_conns[w].send(&frame)?;
             down_bytes += frame.len() as u64;
             crate::sched::record_resync_bits(d);
@@ -1117,7 +1136,7 @@ where
                     uplink_bits_cum: bits_cum,
                     master: mblob,
                     workers: worker_blobs,
-                    tracker: tracker.as_ref().map(|tr| tr.mirrors().to_vec()),
+                    tracker: tracker.as_mut().map(|tr| tr.image()),
                     downlink: DownlinkState {
                         last: img.map(<[f32]>::to_vec),
                         bits_cum: dl_bits,

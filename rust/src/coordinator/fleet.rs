@@ -1,0 +1,336 @@
+//! Fleet-scale simulation harness: drives the master's aggregation path
+//! with `n` **simulated** clients — pure functions of `(seed, worker,
+//! round)` instead of live sockets/threads — so `ef21 bench` can push
+//! the coordinator to 1e4–1e6 clients on one machine and measure what
+//! actually limits fleet size: rounds/sec, master RSS, and per-round
+//! tail latency.
+//!
+//! The data path is the real one end to end:
+//!
+//! * client uplinks are sparse top-k-shaped messages
+//!   ([`client_uplink`], deterministic in `(seed, w, t)` and therefore
+//!   independent of how workers are sharded);
+//! * each shard thread reduces its contiguous worker range through the
+//!   order-preserving aggregation tree ([`super::tree`]) and absorbs
+//!   every uplink into a **sparse** [`StateTracker`] shard (the root
+//!   never touches per-worker state — mirrors live with the shard that
+//!   owns the workers);
+//! * the master merges the shard streams in shard order (contiguous
+//!   ranges ⇒ worker order is preserved) and folds
+//!   `g[idx] += inv_n · val` then `x -= γ·g` — the exact EF21 master
+//!   update ([`crate::algo::ef21::Ef21Master`]).
+//!
+//! Determinism: the resulting `g`/`x` digests are bitwise independent of
+//! shard count and tree fan-out (asserted in
+//! `rust/tests/integration_fleet.rs`) and equal to the flat worker-order
+//! reference fold.
+
+use super::tree::{tree_reduce, MergedUplink};
+use crate::algo::WireMsg;
+use crate::ckpt::fnv1a64;
+use crate::compress::{Compressed, SparseVec};
+use crate::sched::StateTracker;
+use crate::util::linalg;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use std::sync::mpsc::sync_channel;
+
+/// One fleet-sweep scenario.
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    /// Simulated clients.
+    pub n_clients: usize,
+    /// Model dimension.
+    pub d: usize,
+    /// Entries per client uplink (top-k shaped).
+    pub k: usize,
+    /// Rounds to drive.
+    pub rounds: usize,
+    /// Aggregation-tree fan-out per relay (< 2 ⇒ one flat merge level).
+    pub fanout: usize,
+    /// Shard threads (0 ⇒ [`super::reactor::default_shards`]).
+    pub shards: usize,
+    /// Client stream seed.
+    pub seed: u64,
+    /// Master stepsize for the `x -= γ·g` update.
+    pub gamma: f64,
+    /// Absorb every uplink into sparse per-worker mirrors (the crash
+    /// resync structure) — the memory-scaling claim under test.
+    pub track_mirrors: bool,
+}
+
+impl FleetSpec {
+    pub fn quick(n_clients: usize) -> FleetSpec {
+        FleetSpec {
+            n_clients,
+            d: 100_000,
+            k: 4,
+            rounds: 10,
+            fanout: 32,
+            shards: 0,
+            seed: 210_605_203, // arXiv 2106.05203
+            gamma: 0.1,
+            track_mirrors: true,
+        }
+    }
+}
+
+/// What one sweep point measured.
+#[derive(Clone, Debug)]
+pub struct FleetOutcome {
+    pub rounds: usize,
+    pub wall_ns: u64,
+    /// Master-side per-round latency, one sample per round.
+    pub round_ns: Vec<u64>,
+    /// Total merged entries folded at the root across the run.
+    pub entries_folded: u64,
+    /// Bytes held by the sparse resync mirrors at the end (summed over
+    /// shards; 0 when `track_mirrors` is off).
+    pub mirror_bytes: u64,
+    /// FNV-1a-64 over the final `g` / `x` little-endian f64 bytes: the
+    /// cross-shard / cross-fanout determinism witness.
+    pub g_digest: u64,
+    pub x_digest: u64,
+    /// Master RSS after the run (`None` off Linux).
+    pub rss_kb: Option<u64>,
+}
+
+/// Client `w`'s uplink for round `t`: `k` sorted-unique coordinates with
+/// unit-scale normal values, derived from `(seed, w, t)` alone — no
+/// per-client state anywhere, which is what lets one machine simulate a
+/// million of them.
+pub fn client_uplink(seed: u64, w: usize, t: usize, d: usize, k: usize) -> SparseVec {
+    let mut rng = Rng::seed(
+        seed ^ (w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (t as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9),
+    );
+    let idx = rng.sample_indices(d, k);
+    let val = (0..k).map(|_| rng.next_normal()).collect();
+    SparseVec::new(idx, val)
+}
+
+/// Flat worker-order reference: fold every client's uplink for round `t`
+/// straight into `g` — the bitwise ground truth the sharded tree path
+/// must reproduce.
+pub fn reference_round(spec: &FleetSpec, t: usize, g: &mut [f64]) {
+    let inv_n = 1.0 / spec.n_clients as f64;
+    for w in 0..spec.n_clients {
+        client_uplink(spec.seed, w, t, spec.d, spec.k).add_scaled_into(inv_n, g);
+    }
+}
+
+/// FNV-1a-64 over a dense vector's little-endian f64 bytes.
+pub fn dense_digest(v: &[f64]) -> u64 {
+    let mut bytes = Vec::with_capacity(v.len() * 8);
+    for x in v {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    fnv1a64(&bytes)
+}
+
+/// What a shard hands the master each round.
+struct ShardRound {
+    merged: MergedUplink,
+    mirror_bytes: u64,
+}
+
+/// Run one fleet sweep point. Shard threads own contiguous client
+/// ranges and run one round ahead at most (bounded channels), so steady
+/// state overlaps client generation + tree reduction with the master's
+/// root fold without unbounded buffering.
+pub fn run_fleet(spec: &FleetSpec) -> Result<FleetOutcome> {
+    ensure!(spec.n_clients >= 1, "fleet needs at least one client");
+    ensure!(spec.k >= 1 && spec.k <= spec.d, "need 1 <= k <= d");
+    let n_shards = if spec.shards == 0 {
+        super::reactor::default_shards()
+    } else {
+        spec.shards
+    }
+    .min(spec.n_clients);
+
+    // Contiguous ranges, sizes differing by at most one; shard order ==
+    // worker order, the invariant the root merge relies on.
+    let mut starts = Vec::with_capacity(n_shards + 1);
+    let mut acc = 0usize;
+    for s in 0..n_shards {
+        starts.push(acc);
+        acc += (spec.n_clients + n_shards - 1 - s) / n_shards;
+    }
+    starts.push(acc);
+    debug_assert_eq!(acc, spec.n_clients);
+
+    let mut handles = Vec::with_capacity(n_shards);
+    let mut round_rxs = Vec::with_capacity(n_shards);
+    for s in 0..n_shards {
+        let (lo, hi) = (starts[s], starts[s + 1]);
+        let spec = spec.clone();
+        // Depth 1: a shard may finish round t+1 while the master still
+        // folds round t, no further.
+        let (tx, rx) = sync_channel::<ShardRound>(1);
+        round_rxs.push(rx);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("fleet-shard-{s}"))
+                .spawn(move || -> Result<()> {
+                    let mut tracker = spec
+                        .track_mirrors
+                        .then(|| StateTracker::new(hi - lo, spec.d));
+                    for t in 0..spec.rounds {
+                        let mut leaves = Vec::with_capacity(hi - lo);
+                        for w in lo..hi {
+                            let up = client_uplink(spec.seed, w, t, spec.d, spec.k);
+                            if let Some(tr) = tracker.as_mut() {
+                                let msg = WireMsg::Sparse(Compressed {
+                                    bits: up.standard_bits(),
+                                    sparse: up.clone(),
+                                });
+                                tr.absorb_msg(w - lo, &msg);
+                            }
+                            leaves.push(MergedUplink::from_sparse(&up));
+                        }
+                        let merged = tree_reduce(leaves, spec.fanout);
+                        let mirror_bytes =
+                            tracker.as_ref().map_or(0, StateTracker::mirror_bytes);
+                        tx.send(ShardRound { merged, mirror_bytes })
+                            .map_err(|_| anyhow::anyhow!("fleet master hung up"))?;
+                    }
+                    Ok(())
+                })
+                .context("spawn fleet shard")?,
+        );
+    }
+
+    // Master: root of the tree. Never touches per-worker state — only
+    // the merged shard streams and the dense g/x pair.
+    let inv_n = 1.0 / spec.n_clients as f64;
+    let mut g = vec![0.0f64; spec.d];
+    let mut x = vec![0.0f64; spec.d];
+    let mut round_ns = Vec::with_capacity(spec.rounds);
+    let mut entries_folded = 0u64;
+    let mut mirror_bytes = 0u64;
+    let t0 = std::time::Instant::now();
+    for _t in 0..spec.rounds {
+        let r0 = std::time::Instant::now();
+        // Shard-order collection keeps worker order; the final merge
+        // level interleaves the shard streams exactly as one flat merge
+        // over all workers would.
+        let mut shard_streams = Vec::with_capacity(n_shards);
+        mirror_bytes = 0;
+        for (s, rx) in round_rxs.iter().enumerate() {
+            let sr = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("fleet shard {s} exited early"))?;
+            mirror_bytes += sr.mirror_bytes;
+            shard_streams.push(sr.merged);
+        }
+        let root = MergedUplink::merge(&shard_streams);
+        entries_folded += root.len() as u64;
+        root.fold_scaled_into(inv_n, &mut g);
+        // The EF21 master step: x -= γ·g.
+        linalg::axpy(-spec.gamma, &g, &mut x);
+        round_ns.push(r0.elapsed().as_nanos() as u64);
+    }
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    for (s, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(r) => r.with_context(|| format!("fleet shard {s} failed"))?,
+            Err(p) => anyhow::bail!(
+                "fleet shard {s} panicked: {}",
+                super::dist::panic_msg(&*p)
+            ),
+        }
+    }
+    Ok(FleetOutcome {
+        rounds: spec.rounds,
+        wall_ns,
+        round_ns,
+        entries_folded,
+        mirror_bytes,
+        g_digest: dense_digest(&g),
+        x_digest: dense_digest(&x),
+        rss_kb: crate::util::mem::rss_kb(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_uplink_is_pure_and_well_formed() {
+        let a = client_uplink(7, 3, 5, 100, 4);
+        let b = client_uplink(7, 3, 5, 100, 4);
+        assert_eq!(a, b);
+        assert_eq!(a.nnz(), 4);
+        assert!(a.idx.windows(2).all(|w| w[0] < w[1]));
+        assert!(a.idx.iter().all(|&i| (i as usize) < 100));
+        // Different worker / round / seed decorrelate.
+        assert_ne!(a, client_uplink(7, 4, 5, 100, 4));
+        assert_ne!(a, client_uplink(7, 3, 6, 100, 4));
+        assert_ne!(a, client_uplink(8, 3, 5, 100, 4));
+    }
+
+    /// The core fleet claim, in miniature: digests are bitwise invariant
+    /// across shard counts and fan-outs, and equal to the flat
+    /// worker-order reference.
+    #[test]
+    fn sharded_tree_matches_flat_reference_bitwise() {
+        let base = FleetSpec {
+            n_clients: 37,
+            d: 101,
+            k: 3,
+            rounds: 4,
+            fanout: 4,
+            shards: 3,
+            seed: 11,
+            gamma: 0.25,
+            track_mirrors: false,
+        };
+        // Flat reference trajectory.
+        let mut g = vec![0.0; base.d];
+        let mut x = vec![0.0; base.d];
+        for t in 0..base.rounds {
+            reference_round(&base, t, &mut g);
+            linalg::axpy(-base.gamma, &g, &mut x);
+        }
+        let (want_g, want_x) = (dense_digest(&g), dense_digest(&x));
+        for (shards, fanout) in [(1, 0), (2, 2), (3, 4), (5, 16), (8, 3)] {
+            let spec = FleetSpec { shards, fanout, ..base.clone() };
+            let out = run_fleet(&spec).unwrap();
+            assert_eq!(out.g_digest, want_g, "shards={shards} fanout={fanout}");
+            assert_eq!(out.x_digest, want_x, "shards={shards} fanout={fanout}");
+            assert_eq!(out.rounds, base.rounds);
+            assert_eq!(out.round_ns.len(), base.rounds);
+            assert_eq!(out.entries_folded, (37 * 3 * 4) as u64);
+        }
+    }
+
+    #[test]
+    fn mirrors_account_bytes_and_stay_sparse() {
+        let spec = FleetSpec {
+            n_clients: 50,
+            d: 10_000,
+            k: 2,
+            rounds: 3,
+            fanout: 8,
+            shards: 4,
+            seed: 5,
+            gamma: 0.1,
+            track_mirrors: true,
+        };
+        let out = run_fleet(&spec).unwrap();
+        assert!(out.mirror_bytes > 0);
+        // Sparse bound: way under the dense n×d×8 floor (4 MB here).
+        let dense_floor = (spec.n_clients * spec.d * 8) as u64;
+        assert!(
+            out.mirror_bytes * 100 < dense_floor,
+            "mirrors {} B vs dense {} B",
+            out.mirror_bytes,
+            dense_floor
+        );
+        // Tracking mirrors must not change the trajectory.
+        let untracked = run_fleet(&FleetSpec { track_mirrors: false, ..spec }).unwrap();
+        assert_eq!(out.g_digest, untracked.g_digest);
+        assert_eq!(out.x_digest, untracked.x_digest);
+    }
+}

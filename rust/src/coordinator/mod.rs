@@ -1,13 +1,19 @@
 //! The coordinator: drives the master/worker round protocol, meters the
-//! uplink, records metrics, and runs it on three engines sharing one
+//! uplink, records metrics, and runs it on four engines sharing one
 //! protocol loop: [`runner`] (sequential, in-process), [`par`]
 //! (persistent worker-thread pool, bit-identical to sequential for
-//! deterministic algorithms), and [`dist`] (real transports with one
-//! thread per worker).
+//! deterministic algorithms), [`dist`] (real transports with one
+//! thread per worker), and [`reactor`] (sharded event-driven master
+//! multiplexing thousands of connections, bit-identical to [`dist`]).
+//! [`tree`] supplies the order-preserving hierarchical aggregation and
+//! [`fleet`] the simulated-client fleet harness behind `bench`.
 
 pub mod dist;
+pub mod fleet;
 pub mod par;
+pub mod reactor;
 pub mod runner;
+pub mod tree;
 
 pub use par::{auto_threads, run_protocol_par};
 pub use runner::{run_protocol, RunConfig};

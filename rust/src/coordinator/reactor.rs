@@ -1,0 +1,668 @@
+//! Event-driven master: a small sharded reactor that multiplexes every
+//! worker connection onto a handful of I/O threads instead of parking
+//! one blocking OS thread per connection ([`super::dist`]'s model, an
+//! O(n) wall at fleet scale — 10k workers would mean 10k master-side
+//! threads plus their stacks).
+//!
+//! # Shape
+//!
+//! `n_shards` reactor threads each own a contiguous worker range. Every
+//! connection is nonblocking: TCP conns carry an incremental
+//! length-prefix framing state machine (partial reads resume where they
+//! left off; writes queue and drain on readiness), local conns poll
+//! their mpsc queue. Shards forward every **complete** frame to the
+//! master over one event channel and fan broadcast frames out to their
+//! conns. No epoll dependency: each shard readiness-polls its own conns
+//! with an adaptive spin → yield → sleep backoff, which is simple,
+//! portable, and — at the fan-in the protocol produces (every worker
+//! answers every round) — keeps the sockets saturated.
+//!
+//! # Determinism
+//!
+//! Bit-identity with [`super::dist`] (and the sequential runner) holds
+//! because arrival order is *discarded*: the master slots each worker's
+//! uplink by worker id, waits for the round to complete, then decodes
+//! and absorbs **in worker order** — the same fixed-order f64 fold as
+//! the lockstep loop. Asserted per algorithm/compressor in
+//! `rust/tests/integration_fleet.rs`.
+//!
+//! The reactor speaks the dense-broadcast, whole-uplink protocol (the
+//! fleet fast path). Block-delta downlinks, uplink splitting,
+//! schedules, and checkpoints stay on the thread-per-conn engines.
+
+use super::dist::{
+    join_all, panic_msg, wire_tcp_raw, DistOutcome, RunWorker, TransportKind,
+};
+use crate::algo::{MasterNode, WireMsg, WorkerNode};
+use crate::metrics::{History, RoundRecord};
+use crate::telemetry::{self, keys};
+use crate::transport::codec::{decode, encode, Frame};
+use crate::transport::downlink::DownlinkMeter;
+use crate::transport::{local, tcp};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Hard frame-size cap, matching the blocking TCP transport.
+const MAX_FRAME: usize = 1 << 30;
+
+/// One queued outbound frame: 4-byte LE length prefix + shared payload,
+/// with resume offsets so a partial write continues where it stopped.
+struct WriteInFlight {
+    hdr: [u8; 4],
+    hdr_off: usize,
+    frame: Arc<Vec<u8>>,
+    off: usize,
+}
+
+/// Nonblocking TCP conn: incremental framing in both directions.
+struct NbTcp {
+    stream: TcpStream,
+    /// Inbound length prefix, filled byte by byte.
+    hdr: [u8; 4],
+    hdr_fill: usize,
+    /// Inbound body once the prefix is complete.
+    body: Vec<u8>,
+    body_fill: usize,
+    in_body: bool,
+    wq: VecDeque<WriteInFlight>,
+}
+
+impl NbTcp {
+    fn new(stream: TcpStream) -> Result<NbTcp> {
+        stream.set_nonblocking(true).context("set_nonblocking")?;
+        Ok(NbTcp {
+            stream,
+            hdr: [0; 4],
+            hdr_fill: 0,
+            body: Vec::new(),
+            body_fill: 0,
+            in_body: false,
+            wq: VecDeque::new(),
+        })
+    }
+
+    fn enqueue(&mut self, frame: Arc<Vec<u8>>) {
+        let hdr = (frame.len() as u32).to_le_bytes();
+        self.wq.push_back(WriteInFlight { hdr, hdr_off: 0, frame, off: 0 });
+    }
+
+    /// Drain as much of the write queue as the socket accepts.
+    fn pump_write(&mut self) -> Result<bool> {
+        let mut progress = false;
+        while let Some(item) = self.wq.front_mut() {
+            while item.hdr_off < 4 {
+                match self.stream.write(&item.hdr[item.hdr_off..]) {
+                    Ok(0) => bail!("tcp write stalled (0 bytes accepted)"),
+                    Ok(n) => {
+                        item.hdr_off += n;
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(progress),
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e).context("tcp write frame header"),
+                }
+            }
+            while item.off < item.frame.len() {
+                match self.stream.write(&item.frame[item.off..]) {
+                    Ok(0) => bail!("tcp write stalled (0 bytes accepted)"),
+                    Ok(n) => {
+                        item.off += n;
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(progress),
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e).context("tcp write frame"),
+                }
+            }
+            telemetry::counter(keys::TX_FRAMES).incr(1);
+            telemetry::counter(keys::TX_BYTES).incr(item.frame.len() as u64 + 4);
+            self.wq.pop_front();
+        }
+        Ok(progress)
+    }
+
+    /// Read whatever is available, appending every completed frame to
+    /// `out`. A closed peer is an error (the protocol ends with Stop,
+    /// never a silent EOF while the master still polls).
+    fn pump_read(&mut self, out: &mut Vec<Vec<u8>>) -> Result<bool> {
+        let mut progress = false;
+        loop {
+            if !self.in_body {
+                match self.stream.read(&mut self.hdr[self.hdr_fill..]) {
+                    Ok(0) => bail!("tcp peer closed mid-protocol"),
+                    Ok(n) => {
+                        self.hdr_fill += n;
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(progress),
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e).context("tcp read frame header"),
+                }
+                if self.hdr_fill < 4 {
+                    continue;
+                }
+                let len = u32::from_le_bytes(self.hdr) as usize;
+                ensure!(len <= MAX_FRAME, "frame too large: {len}");
+                self.body = vec![0; len];
+                self.body_fill = 0;
+                self.in_body = true;
+            }
+            while self.body_fill < self.body.len() {
+                match self.stream.read(&mut self.body[self.body_fill..]) {
+                    Ok(0) => bail!("tcp peer closed mid-frame"),
+                    Ok(n) => {
+                        self.body_fill += n;
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(progress),
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e).context("tcp read frame"),
+                }
+            }
+            telemetry::counter(keys::RX_FRAMES).incr(1);
+            telemetry::counter(keys::RX_BYTES).incr(self.body.len() as u64 + 4);
+            out.push(std::mem::take(&mut self.body));
+            self.in_body = false;
+            self.hdr_fill = 0;
+        }
+    }
+}
+
+/// One multiplexed connection: nonblocking TCP or an in-process channel
+/// (whose sends never block and whose reads are a queue poll).
+enum NbConn {
+    Local(local::LocalConn),
+    Tcp(NbTcp),
+}
+
+impl NbConn {
+    fn enqueue(&mut self, frame: &Arc<Vec<u8>>) -> Result<()> {
+        match self {
+            NbConn::Local(c) => crate::transport::Conn::send(c, frame),
+            NbConn::Tcp(t) => {
+                t.enqueue(frame.clone());
+                Ok(())
+            }
+        }
+    }
+
+    /// One readiness pass: flush pending writes, then collect complete
+    /// inbound frames. Returns whether any byte moved.
+    fn pump(&mut self, out: &mut Vec<Vec<u8>>) -> Result<bool> {
+        match self {
+            NbConn::Local(c) => {
+                let mut progress = false;
+                while let Some(f) = c.try_recv_frame()? {
+                    out.push(f);
+                    progress = true;
+                }
+                Ok(progress)
+            }
+            NbConn::Tcp(t) => {
+                let w = t.pump_write()?;
+                let r = t.pump_read(out)?;
+                Ok(w || r)
+            }
+        }
+    }
+
+    fn flushed(&self) -> bool {
+        match self {
+            NbConn::Local(_) => true,
+            NbConn::Tcp(t) => t.wq.is_empty(),
+        }
+    }
+}
+
+/// Master → shard commands.
+enum ShardCmd {
+    /// Queue this frame to every live conn on the shard.
+    Broadcast(Arc<Vec<u8>>),
+    /// Queue this (Stop) frame, flush every write queue, then exit.
+    Stop(Arc<Vec<u8>>),
+}
+
+/// Adaptive idle backoff: spin briefly (a round's uplinks usually land
+/// within microseconds of each other), then yield, then sleep — so an
+/// idle shard costs ~nothing while an active one never sleeps.
+fn backoff(idle: &mut u32) {
+    *idle = idle.saturating_add(1);
+    if *idle < 32 {
+        std::hint::spin_loop();
+    } else if *idle < 256 {
+        std::thread::yield_now();
+    } else {
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+/// Shard event loop: apply commands, pump every conn, forward complete
+/// frames (tagged with their worker id) to the master in discovery
+/// order. A failed conn reports once and is dropped from the poll set.
+fn shard_loop(
+    mut conns: Vec<(usize, NbConn)>,
+    cmd_rx: Receiver<ShardCmd>,
+    evt_tx: Sender<(usize, Result<Vec<u8>>)>,
+) {
+    let mut stopping = false;
+    let mut dead = vec![false; conns.len()];
+    let mut frames: Vec<Vec<u8>> = Vec::new();
+    let mut idle = 0u32;
+    loop {
+        let mut progress = false;
+        loop {
+            match cmd_rx.try_recv() {
+                Ok(ShardCmd::Broadcast(f)) => {
+                    progress = true;
+                    for (slot, (w, c)) in conns.iter_mut().enumerate() {
+                        if dead[slot] {
+                            continue;
+                        }
+                        if let Err(e) = c.enqueue(&f) {
+                            dead[slot] = true;
+                            let _ = evt_tx.send((*w, Err(e)));
+                        }
+                    }
+                }
+                Ok(ShardCmd::Stop(f)) => {
+                    progress = true;
+                    stopping = true;
+                    for (slot, (_, c)) in conns.iter_mut().enumerate() {
+                        if !dead[slot] {
+                            // A worker gone before Stop already failed the
+                            // run; the flush below only owes the live ones.
+                            let _ = c.enqueue(&f);
+                        }
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                // Master dropped the channel (error path): nothing left
+                // to deliver anywhere.
+                Err(TryRecvError::Disconnected) => return,
+            }
+        }
+        let mut all_flushed = true;
+        for (slot, (w, c)) in conns.iter_mut().enumerate() {
+            if dead[slot] {
+                continue;
+            }
+            match c.pump(&mut frames) {
+                Ok(p) => progress |= p,
+                Err(e) => {
+                    dead[slot] = true;
+                    // Frames completed before the failure still count.
+                    for f in frames.drain(..) {
+                        let _ = evt_tx.send((*w, Ok(f)));
+                    }
+                    let _ = evt_tx.send((*w, Err(e)));
+                    continue;
+                }
+            }
+            for f in frames.drain(..) {
+                let _ = evt_tx.send((*w, Ok(f)));
+            }
+            all_flushed &= c.flushed();
+        }
+        if stopping && all_flushed {
+            return;
+        }
+        if progress {
+            idle = 0;
+        } else {
+            backoff(&mut idle);
+        }
+    }
+}
+
+/// The running reactor: shard threads + their command channels + the
+/// shared event stream.
+struct Reactor {
+    cmd_txs: Vec<Sender<ShardCmd>>,
+    evt_rx: Receiver<(usize, Result<Vec<u8>>)>,
+    shards: Vec<std::thread::JoinHandle<()>>,
+    /// Read timeout while waiting for uplink events (None = wait forever).
+    timeout: Option<Duration>,
+}
+
+impl Reactor {
+    fn spawn(conns: Vec<NbConn>, n_shards: usize) -> Reactor {
+        let n = conns.len();
+        let n_shards = n_shards.max(1).min(n.max(1));
+        let (evt_tx, evt_rx) = channel();
+        let mut cmd_txs = Vec::with_capacity(n_shards);
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut it = conns.into_iter().enumerate();
+        for s in 0..n_shards {
+            // Contiguous ranges, sizes differing by at most one.
+            let count = (n + n_shards - 1 - s) / n_shards;
+            let part: Vec<(usize, NbConn)> = it.by_ref().take(count).collect();
+            let (cmd_tx, cmd_rx) = channel();
+            let tx = evt_tx.clone();
+            shards.push(
+                std::thread::Builder::new()
+                    .name(format!("reactor-shard-{s}"))
+                    .spawn(move || shard_loop(part, cmd_rx, tx))
+                    .expect("spawn reactor shard"),
+            );
+            cmd_txs.push(cmd_tx);
+        }
+        Reactor { cmd_txs, evt_rx, shards, timeout: tcp::io_timeout() }
+    }
+
+    fn broadcast(&self, frame: Vec<u8>) -> Result<()> {
+        let frame = Arc::new(frame);
+        for tx in &self.cmd_txs {
+            tx.send(ShardCmd::Broadcast(frame.clone()))
+                .map_err(|_| anyhow::anyhow!("reactor shard exited early"))?;
+        }
+        Ok(())
+    }
+
+    fn next_event(&self) -> Result<(usize, Result<Vec<u8>>)> {
+        match self.timeout {
+            Some(t) => match self.evt_rx.recv_timeout(t) {
+                Ok(evt) => Ok(evt),
+                Err(RecvTimeoutError::Timeout) => {
+                    bail!("reactor timed out after {t:?} waiting for worker uplinks")
+                }
+                Err(RecvTimeoutError::Disconnected) => bail!("every reactor shard exited"),
+            },
+            None => self
+                .evt_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("every reactor shard exited")),
+        }
+    }
+
+    /// Collect exactly one complete uplink frame per worker (any arrival
+    /// order), stamping per-worker latency as each lands. Returns the
+    /// frames in worker order plus their total payload bytes.
+    fn collect_round(
+        &self,
+        n_workers: usize,
+        round_start: Option<std::time::Instant>,
+    ) -> Result<(Vec<Vec<u8>>, u64)> {
+        let mut slots: Vec<Option<Vec<u8>>> = (0..n_workers).map(|_| None).collect();
+        let mut filled = 0usize;
+        let mut bytes = 0u64;
+        while filled < n_workers {
+            let (w, res) = self.next_event()?;
+            let frame = res.with_context(|| format!("worker {w} connection failed"))?;
+            ensure!(w < n_workers, "reactor event for unknown worker {w}");
+            ensure!(
+                slots[w].is_none(),
+                "worker {w} sent an extra frame this round (lockstep violation)"
+            );
+            telemetry::record_worker_round_ns(w, round_start);
+            bytes += frame.len() as u64;
+            slots[w] = Some(frame);
+            filled += 1;
+        }
+        let frames =
+            slots.into_iter().map(|s| s.expect("all slots filled")).collect();
+        Ok((frames, bytes))
+    }
+
+    /// Broadcast Stop, let every shard flush and exit, and join them.
+    fn shutdown(self) -> Result<()> {
+        let stop = Arc::new(encode(&Frame::Stop));
+        for tx in &self.cmd_txs {
+            tx.send(ShardCmd::Stop(stop.clone()))
+                .map_err(|_| anyhow::anyhow!("reactor shard exited before Stop"))?;
+        }
+        for (s, h) in self.shards.into_iter().enumerate() {
+            h.join()
+                .map_err(|p| anyhow::anyhow!("reactor shard {s} panicked: {}", panic_msg(&*p)))?;
+        }
+        Ok(())
+    }
+}
+
+/// Wire one nonblocking conn per worker (worker order) and spawn the
+/// worker threads — the reactor-side twin of the thread-per-conn
+/// transport wiring, speaking the identical TCP handshake.
+fn wire_reactor(
+    kind: TransportKind,
+    n_workers: usize,
+    run_worker: RunWorker,
+) -> Result<(Vec<NbConn>, Vec<std::thread::JoinHandle<Result<()>>>)> {
+    match kind {
+        TransportKind::Local => {
+            let mut conns = Vec::with_capacity(n_workers);
+            let mut handles = Vec::with_capacity(n_workers);
+            for i in 0..n_workers {
+                let (m_end, w_end) = local::pair();
+                conns.push(NbConn::Local(m_end));
+                let rw = run_worker.clone();
+                handles.push(std::thread::spawn(move || rw(i, Box::new(w_end))));
+            }
+            Ok((conns, handles))
+        }
+        TransportKind::Tcp => {
+            let (raw, handles) = wire_tcp_raw(n_workers, run_worker, false)?;
+            let mut conns = Vec::with_capacity(n_workers);
+            for c in raw {
+                conns.push(NbConn::Tcp(NbTcp::new(c.into_stream())?));
+            }
+            Ok((conns, handles))
+        }
+    }
+}
+
+/// Run the dense-broadcast protocol through the sharded reactor:
+/// trajectories are bit-identical to [`super::dist::run_distributed`]
+/// while the master spends `n_shards` threads instead of `n_workers`.
+/// `n_shards == 0` picks a small default from the machine's parallelism.
+pub fn run_reactor<F>(
+    mut master: Box<dyn MasterNode>,
+    n_workers: usize,
+    make_worker: F,
+    rounds: usize,
+    kind: TransportKind,
+    label: &str,
+    n_shards: usize,
+) -> Result<DistOutcome>
+where
+    F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
+{
+    assert!(n_workers >= 1);
+    let n_shards = if n_shards == 0 { default_shards() } else { n_shards };
+    let make_worker = Arc::new(make_worker);
+    let run_worker: RunWorker = Arc::new(move |i, mut conn| {
+        super::dist::worker_loop(make_worker(i), &mut *conn, None, i)
+    });
+    let (conns, handles) = wire_reactor(kind, n_workers, run_worker)?;
+    let reactor = Reactor::spawn(conns, n_shards);
+
+    let mut downlink = DownlinkMeter::dense(master.x().len());
+    telemetry::gauge(keys::BLOCKS).set(downlink.layout().n_blocks() as f64);
+    let n = n_workers as f64;
+    let d = master.x().len();
+    let mut history = History::new(label.to_string());
+    let mut bits_cum = 0u64;
+    let mut frame_bytes = 0u64;
+    let mut down_bytes = 0u64;
+
+    let send_model = |reactor: &Reactor, downlink: &mut DownlinkMeter, x: &[f64]| -> Result<u64> {
+        let plan = downlink.plan(x);
+        let frame = encode(&Frame::Model(x.to_vec()));
+        let sent = frame.len() as u64 * n_workers as u64;
+        reactor.broadcast(frame)?;
+        downlink.commit(x, &plan);
+        telemetry::counter(keys::DOWNLINK_BITS).incr(plan.bits);
+        telemetry::counter(keys::DOWNLINK_FRAME_BYTES).incr(sent);
+        Ok(sent)
+    };
+
+    // Decode one round's frames in worker order and bound-check the
+    // indices — identical validation to the blocking gather path.
+    let decode_round = |frames: Vec<Vec<u8>>| -> Result<(Vec<WireMsg>, Vec<f64>)> {
+        let mut msgs = Vec::with_capacity(frames.len());
+        let mut losses = Vec::with_capacity(frames.len());
+        for (w, raw) in frames.iter().enumerate() {
+            let (msg, loss) = match decode(raw)? {
+                Frame::Up { msg, loss } => (msg, loss),
+                Frame::UpBlock { .. } => {
+                    bail!("reactor speaks whole uplinks only (worker {w} sent UpBlock)")
+                }
+                _ => bail!("reactor expected an Up frame from worker {w}"),
+            };
+            if let Some(&last) = msg.payload().sparse.idx.last() {
+                ensure!(
+                    (last as usize) < d,
+                    "uplink index {last} out of range for model dim {d}"
+                );
+            }
+            msgs.push(msg);
+            losses.push(loss);
+        }
+        Ok((msgs, losses))
+    };
+
+    // Init phase.
+    let x0 = master.x().to_vec();
+    down_bytes += send_model(&reactor, &mut downlink, &x0)?;
+    let (frames, fb) = reactor.collect_round(n_workers, None)?;
+    frame_bytes += fb;
+    let (msgs, _losses) = decode_round(frames)?;
+    let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
+    bits_cum += init_bits;
+    telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
+    telemetry::counter(keys::UPLINK_FRAME_BYTES).incr(fb);
+    master.init_absorb(&msgs);
+
+    for t in 0..rounds {
+        let t_round = telemetry::maybe_now();
+        let round_span = telemetry::span_arg("coordinator.round", "round", t as u64);
+        let x = master.begin_round();
+        let bcast_span = telemetry::span("round.broadcast");
+        down_bytes += send_model(&reactor, &mut downlink, &x)?;
+        bcast_span.end();
+        let gather_span = telemetry::span("round.gather");
+        let (frames, fb) = reactor.collect_round(n_workers, t_round)?;
+        let (msgs, losses) = decode_round(frames)?;
+        gather_span.end();
+        frame_bytes += fb;
+        let round_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
+        bits_cum += round_bits;
+        telemetry::counter(keys::UPLINK_BITS).incr(round_bits);
+        telemetry::counter(keys::UPLINK_FRAME_BYTES).incr(fb);
+        let absorb_span = telemetry::span("round.absorb");
+        master.absorb(&msgs);
+        absorb_span.end();
+        telemetry::counter(keys::ROUNDS).incr(1);
+        telemetry::record_elapsed_ns(keys::ROUND_NS, t_round);
+        round_span.end();
+        let loss = losses.iter().sum::<f64>() / n;
+        history.records.push(RoundRecord {
+            round: t,
+            bits_per_client: bits_cum as f64 / n,
+            loss,
+            grad_norm_sq: f64::NAN, // dense grads stay worker-local here
+            gt: f64::NAN,
+            dcgd_frac: f64::NAN,
+        });
+    }
+
+    history.downlink_bits = downlink.bits();
+    history.final_x = master.x().to_vec();
+    reactor.shutdown()?;
+    join_all(handles)?;
+    Ok(DistOutcome {
+        history,
+        final_x: master.x().to_vec(),
+        uplink_frame_bytes: frame_bytes,
+        downlink_frame_bytes: down_bytes,
+    })
+}
+
+/// Default shard count: a handful of I/O threads regardless of fleet
+/// size (the whole point), capped by the machine's parallelism.
+pub fn default_shards() -> usize {
+    std::thread::available_parallelism().map_or(4, |p| p.get().min(8)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_escalates_and_resets() {
+        let mut idle = 0u32;
+        for _ in 0..300 {
+            backoff(&mut idle);
+        }
+        assert!(idle >= 300);
+        idle = 0;
+        backoff(&mut idle);
+        assert_eq!(idle, 1);
+    }
+
+    #[test]
+    fn default_shards_is_small_and_positive() {
+        let s = default_shards();
+        assert!(s >= 1 && s <= 8, "{s}");
+    }
+
+    #[test]
+    fn nbtcp_reassembles_partial_frames() {
+        // A peer that dribbles a frame byte by byte must still produce
+        // exactly one complete frame, and a frame split across pumps
+        // must resume mid-header and mid-body.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = listener.local_addr().unwrap().port();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let payload = b"dribble";
+            let mut wire = (payload.len() as u32).to_le_bytes().to_vec();
+            wire.extend_from_slice(payload);
+            for chunk in wire.chunks(3) {
+                s.write_all(chunk).unwrap();
+                s.flush().unwrap();
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            // Keep the socket open until the reader is done.
+            std::thread::sleep(Duration::from_millis(100));
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = NbTcp::new(stream).unwrap();
+        let mut out = Vec::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while out.is_empty() {
+            assert!(std::time::Instant::now() < deadline, "no frame within 5s");
+            conn.pump_read(&mut out).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(out, vec![b"dribble".to_vec()]);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn nbtcp_write_queue_flushes() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = listener.local_addr().unwrap().port();
+        let reader = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let mut hdr = [0u8; 4];
+            s.read_exact(&mut hdr).unwrap();
+            let mut body = vec![0u8; u32::from_le_bytes(hdr) as usize];
+            s.read_exact(&mut body).unwrap();
+            body
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = NbTcp::new(stream).unwrap();
+        let payload: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        conn.enqueue(Arc::new(payload.clone()));
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !conn.wq.is_empty() {
+            assert!(std::time::Instant::now() < deadline, "queue stuck for 5s");
+            conn.pump_write().unwrap();
+        }
+        assert_eq!(reader.join().unwrap(), payload);
+    }
+}

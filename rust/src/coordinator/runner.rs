@@ -302,7 +302,7 @@ impl WorkerPool for SeqPool {
 pub(crate) fn snapshot<P: WorkerPool>(
     master: &dyn MasterNode,
     pool: &mut P,
-    tracker: Option<&StateTracker>,
+    tracker: Option<&mut StateTracker>,
     downlink: &DownlinkMeter,
     history: &History,
     bits_cum: u64,
@@ -324,7 +324,7 @@ pub(crate) fn snapshot<P: WorkerPool>(
         uplink_bits_cum: bits_cum,
         master: mblob,
         workers,
-        tracker: tracker.map(|tr| tr.mirrors().to_vec()),
+        tracker: tracker.map(|tr| tr.image()),
         downlink: DownlinkState {
             last: img.map(|s| s.to_vec()),
             bits_cum: dl_bits,
@@ -516,8 +516,8 @@ pub(crate) fn drive<P: WorkerPool>(
                 }
                 for &w in &plan.resync {
                     let sp = telemetry::span_arg("sched.resync", "w", w as u64);
-                    let tr = tracker.as_ref().expect("rejoin scheduled without a tracker");
-                    pool.resync(w, tr.mirror(w));
+                    let tr = tracker.as_mut().expect("rejoin scheduled without a tracker");
+                    pool.resync(w, tr.mirror_dense(w));
                     crate::sched::record_resync_bits(d);
                     sp.end();
                 }
@@ -584,7 +584,7 @@ pub(crate) fn drive<P: WorkerPool>(
                 let ck = snapshot(
                     &*master,
                     &mut pool,
-                    tracker.as_ref(),
+                    tracker.as_mut(),
                     &downlink,
                     &history,
                     bits_cum,

@@ -1,0 +1,255 @@
+//! Hierarchical uplink aggregation with a **bitwise-deterministic**
+//! reduction order.
+//!
+//! # Why not sum at the relays?
+//!
+//! The master's flat absorb loop folds every worker's sparse message into
+//! `g` **in worker order**: for each shared coordinate `c`, the dense cell
+//! sees `g[c] += s·v_0; g[c] += s·v_1; ...` — one fused-order f64 chain.
+//! A relay that numerically pre-summed its children would change the
+//! grouping (`fl(fl(g+v0)+v1) != fl(g+fl(v0+v1))` in general), so the
+//! root's bits would drift from the flat trajectory. That violates the
+//! repo-wide determinism contract (DESIGN.md §2).
+//!
+//! # Ordered sparse merge
+//!
+//! Instead, relays do a **symbolic** reduction: a k-way merge of their
+//! children's sorted entry streams by coordinate, keeping *duplicate
+//! coordinates as separate entries in child order* (stable merge: among
+//! the minimum coordinates, the lowest child index goes first, one entry
+//! per pick). The merged stream is sorted by coordinate with ties in
+//! worker order, because children are attached in worker order at every
+//! level — an inductive invariant.
+//!
+//! The root then folds the merged stream left to right:
+//! `g[idx] += scale * val` per entry — the **same expression** as
+//! [`crate::compress::SparseVec::add_scaled_into`]. Per coordinate, the
+//! adds hit the accumulator in exactly worker order; across coordinates,
+//! f64 cells are independent. Hence the root's `g` is bit-identical to
+//! the flat loop **at any fan-out and depth** — asserted in the tests
+//! below for fan-outs 2/3/8/16 against the flat reference.
+//!
+//! The payoff is the same as a numeric tree's: each relay touches only
+//! its subtree's entries, relays at one level can run in parallel, and
+//! the root consumes one pre-ordered stream instead of n per-worker
+//! messages — it never touches per-worker state.
+
+use crate::algo::WireMsg;
+use crate::compress::SparseVec;
+use anyhow::{bail, Result};
+
+/// A relay-level aggregate: one sorted-by-coordinate entry stream in
+/// which duplicate coordinates remain separate entries, ordered by the
+/// originating worker. Index order within one worker's message is
+/// preserved (messages are sorted, so both descriptions coincide).
+#[derive(Clone, Debug, Default)]
+pub struct MergedUplink {
+    pub idx: Vec<u32>,
+    pub val: Vec<f64>,
+}
+
+impl MergedUplink {
+    /// Number of (not necessarily distinct) entries.
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Wrap one worker's uplink as a leaf stream. Delta-style messages
+    /// only: the DCGD assignment branch is not a sum and cannot ride an
+    /// additive tree (EF21+ runs keep the flat path).
+    pub fn from_msg(msg: &WireMsg) -> Result<MergedUplink> {
+        let c = match msg {
+            WireMsg::Sparse(c) | WireMsg::Tagged { dcgd_branch: false, payload: c } => c,
+            WireMsg::Tagged { dcgd_branch: true, .. } => {
+                bail!("aggregation tree cannot carry a DCGD-branch (assignment) message")
+            }
+        };
+        Ok(MergedUplink { idx: c.sparse.idx.clone(), val: c.sparse.val.clone() })
+    }
+
+    /// Leaf stream from a sparse payload without going through a WireMsg.
+    pub fn from_sparse(s: &SparseVec) -> MergedUplink {
+        MergedUplink { idx: s.idx.clone(), val: s.val.clone() }
+    }
+
+    /// Stable k-way merge of child streams in child order: among the
+    /// children whose next coordinate is minimal, the lowest child index
+    /// emits one entry. Children attached in worker order therefore keep
+    /// every duplicate coordinate in worker order.
+    pub fn merge(children: &[MergedUplink]) -> MergedUplink {
+        let total: usize = children.iter().map(MergedUplink::len).sum();
+        let mut out = MergedUplink {
+            idx: Vec::with_capacity(total),
+            val: Vec::with_capacity(total),
+        };
+        // Fleet fan-outs are small (≤ a few dozen children per relay), so
+        // a linear scan beats a binary heap and — unlike a heap — makes
+        // the tie-break rule (lowest child first) obvious and load-bearing.
+        let mut cursor = vec![0usize; children.len()];
+        loop {
+            let mut best: Option<(u32, usize)> = None;
+            for (c, child) in children.iter().enumerate() {
+                if let Some(&coord) = child.idx.get(cursor[c]) {
+                    if best.map_or(true, |(b, _)| coord < b) {
+                        best = Some((coord, c));
+                    }
+                }
+            }
+            let Some((coord, c)) = best else { break };
+            out.idx.push(coord);
+            out.val.push(children[c].val[cursor[c]]);
+            cursor[c] += 1;
+        }
+        out
+    }
+
+    /// Root fold: `g[idx] += scale * val` per entry, left to right — the
+    /// exact per-entry expression of the flat absorb loop
+    /// ([`SparseVec::add_scaled_into`]), applied in the same per-cell
+    /// order the flat loop would.
+    pub fn fold_scaled_into(&self, scale: f64, g: &mut [f64]) {
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            g[i as usize] += scale * v;
+        }
+    }
+}
+
+/// Reduce leaf streams through a tree of the given fan-out: children are
+/// grouped `fanout` at a time in order at every level until one stream
+/// remains. `fanout == 0` (or ≥ leaf count) degenerates to a single-level
+/// merge. Returns an empty stream for zero leaves.
+pub fn tree_reduce(leaves: Vec<MergedUplink>, fanout: usize) -> MergedUplink {
+    let mut level = leaves;
+    if level.is_empty() {
+        return MergedUplink::default();
+    }
+    let fanout = if fanout < 2 { usize::MAX } else { fanout };
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_euclid(fanout) + 1);
+        for group in level.chunks(fanout.min(level.len())) {
+            next.push(MergedUplink::merge(group));
+        }
+        level = next;
+    }
+    level.pop().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Compressed;
+    use crate::util::rng::Rng;
+
+    fn leaf(idx: Vec<u32>, val: Vec<f64>) -> MergedUplink {
+        MergedUplink::from_sparse(&SparseVec::new(idx, val))
+    }
+
+    /// The flat reference: per-message `add_scaled_into` in worker order.
+    fn flat_absorb(msgs: &[SparseVec], scale: f64, d: usize) -> Vec<f64> {
+        let mut g = vec![0.1f64; d]; // nonzero start: grouping changes would show
+        for m in msgs {
+            m.add_scaled_into(scale, &mut g);
+        }
+        g
+    }
+
+    fn random_msgs(n: usize, d: usize, seed: u64) -> Vec<SparseVec> {
+        let mut rng = Rng::seed(seed);
+        (0..n)
+            .map(|_| {
+                let k = 1 + rng.next_below(d / 2);
+                let idx = rng.sample_indices(d, k);
+                // Wildly mixed magnitudes so any reassociation flips bits.
+                let val: Vec<f64> = (0..k)
+                    .map(|j| rng.next_normal() * 10f64.powi((j % 7) as i32 * 3 - 9))
+                    .collect();
+                SparseVec::new(idx, val)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn merge_keeps_duplicates_in_child_order() {
+        let m = MergedUplink::merge(&[
+            leaf(vec![1, 5], vec![10.0, 11.0]),
+            leaf(vec![1, 3], vec![20.0, 21.0]),
+            leaf(vec![1], vec![30.0]),
+        ]);
+        assert_eq!(m.idx, vec![1, 1, 1, 3, 5]);
+        assert_eq!(m.val, vec![10.0, 20.0, 30.0, 21.0, 11.0]);
+    }
+
+    #[test]
+    fn empty_children_and_empty_tree() {
+        let m = MergedUplink::merge(&[leaf(vec![], vec![]), leaf(vec![2], vec![1.0])]);
+        assert_eq!(m.idx, vec![2]);
+        assert!(tree_reduce(Vec::new(), 4).is_empty());
+        let single = tree_reduce(vec![leaf(vec![0], vec![5.0])], 4);
+        assert_eq!(single.val, vec![5.0]);
+    }
+
+    #[test]
+    fn dcgd_branch_is_rejected() {
+        let msg = WireMsg::Tagged {
+            dcgd_branch: true,
+            payload: Compressed { sparse: SparseVec::new(vec![0], vec![1.0]), bits: 64 },
+        };
+        assert!(MergedUplink::from_msg(&msg).is_err());
+        let delta = WireMsg::Tagged {
+            dcgd_branch: false,
+            payload: Compressed { sparse: SparseVec::new(vec![0], vec![1.0]), bits: 64 },
+        };
+        assert_eq!(MergedUplink::from_msg(&delta).unwrap().idx, vec![0]);
+    }
+
+    /// The determinism contract: at every fan-out (including degenerate
+    /// and deep trees), the root fold is bit-identical to the flat
+    /// worker-order absorb.
+    #[test]
+    fn tree_fold_matches_flat_absorb_bitwise_at_all_fanouts() {
+        let (n, d) = (23, 17);
+        let scale = 1.0 / n as f64;
+        let msgs = random_msgs(n, d, 99);
+        let want = flat_absorb(&msgs, scale, d);
+        for fanout in [0, 2, 3, 8, 16, 64] {
+            let leaves: Vec<MergedUplink> =
+                msgs.iter().map(MergedUplink::from_sparse).collect();
+            let root = tree_reduce(leaves, fanout);
+            assert_eq!(root.len(), msgs.iter().map(SparseVec::nnz).sum::<usize>());
+            let mut g = vec![0.1f64; d];
+            root.fold_scaled_into(scale, &mut g);
+            for (c, (a, b)) in g.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "fanout {fanout}, coord {c}: {a:e} vs {b:e}"
+                );
+            }
+        }
+    }
+
+    /// Merging is associative as a stream operation: merging merged
+    /// groups equals one flat merge (the invariant that makes depth
+    /// irrelevant).
+    #[test]
+    fn grouped_merge_equals_flat_merge() {
+        let msgs = random_msgs(9, 11, 7);
+        let leaves: Vec<MergedUplink> =
+            msgs.iter().map(MergedUplink::from_sparse).collect();
+        let flat = MergedUplink::merge(&leaves);
+        let l = MergedUplink::merge(&leaves[..4]);
+        let r = MergedUplink::merge(&leaves[4..]);
+        let grouped = MergedUplink::merge(&[l, r]);
+        assert_eq!(flat.idx, grouped.idx);
+        let same = flat
+            .val
+            .iter()
+            .zip(&grouped.val)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same);
+    }
+}

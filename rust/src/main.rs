@@ -5,9 +5,10 @@
 //! ef21 run   [--algo ef21|ef21+|ef|dcgd|gd] [--k 1 | --compressor top1]
 //!            [--dataset a9a] [--workers 20] [--gamma-mult 1] [--rounds N]
 //!            [--objective logreg|lstsq] [--csv out.csv] [--transport local|tcp]
+//!            [--master threads|reactor]
 //!            [--threads n|auto] [--blocks flat|auto|<n>|name:len,...]
 //! ef21 exp   <stepsize|finetune|kdep|gdtune|lstsq|rates|dl> [flags...]
-//! ef21 bench [--json FILE] [--quick]
+//! ef21 bench [--json FILE] [--quick] [--fleet-n N,N,...]
 //! ef21 data  info
 //! ef21 artifacts [--dir artifacts]
 //! ```
@@ -119,6 +120,17 @@ USAGE:
   (transports)   [--net-timeout-ms T] (TCP read/write + connect-retry
                                        budget; 0 = no timeout; env
                                        fallback EF21_NET_TIMEOUT_MS)
+                 [--master threads|reactor]
+                                      (master engine: threads = one OS
+                                       thread per connection [legacy];
+                                       reactor = sharded nonblocking
+                                       poller multiplexing every
+                                       connection — same protocol,
+                                       bit-identical trajectories, scales
+                                       to thousands of workers. reactor
+                                       drives the plain flat path: no
+                                       --participation/--faults/--blocks/
+                                       --checkpoint)
   ef21 exp  stepsize [--dataset D] [--k K] [--max-pow P] [--rounds T] [--all]
   ef21 exp  finetune [--dataset D] [--rounds T] [--tol X]
   ef21 exp  kdep     [--dataset D] [--rounds T]
@@ -130,14 +142,18 @@ USAGE:
                       iid/het shards at the PP theory stepsize)
   ef21 exp  rates    [--rounds T]    (theory checks; always full rounds)
   ef21 exp  dl       [--steps N] [--workers W] [--k-frac F] [--sweep-k]
-  ef21 bench [--json FILE] [--quick]
+  ef21 bench [--json FILE] [--quick] [--fleet-n N,N,...]
                                      (machine-readable perf trajectory:
                                       round-loop throughput seq/par at
                                       d=1e4/1e6, compressor zoo, blocked
-                                      layout, participation sweep ->
-                                      BENCH_round.json; build with
-                                      --features count-allocs for the
-                                      allocs_per_round column)
+                                      layout, participation sweep, fleet
+                                      sweep [10^2..10^6 simulated
+                                      clients: rounds/sec, RSS, mirror
+                                      bytes] -> BENCH_round.json;
+                                      --fleet-n runs only the fleet
+                                      cases at the listed client counts;
+                                      build with --features count-allocs
+                                      for the allocs_per_round column)
   ef21 data info
   ef21 artifacts
 ";
@@ -264,6 +280,26 @@ fn run_over_transport(
         "transport mode currently drives EF21 (the paper's method)"
     );
     let sched = spec.sched.build_for_transport(spec.n_workers, spec.seed)?;
+    if spec.master == ef21::config::MasterEngine::Reactor {
+        // The reactor drives the plain lockstep protocol (dense
+        // broadcast, every worker every round); the scheduler, blocked,
+        // and checkpoint paths stay on the thread-per-connection engine.
+        anyhow::ensure!(
+            sched.is_none(),
+            "--master reactor drives the plain protocol; drop \
+             --participation/--faults/--deadline-ms or use --master threads"
+        );
+        anyhow::ensure!(
+            layout.is_flat(),
+            "--master reactor needs a flat layout (dense broadcast); \
+             use --master threads with --blocks"
+        );
+        anyhow::ensure!(
+            ckpt_opts.save.is_none() && ckpt_opts.resume.is_none(),
+            "--master reactor does not checkpoint; use --master threads \
+             with --checkpoint/--resume"
+        );
+    }
     anyhow::ensure!(
         sched.is_none() || layout.is_flat(),
         "--participation/--faults need a flat layout over transports \
@@ -309,6 +345,22 @@ fn run_over_transport(
         Box::new(ef21::algo::ef21::Ef21Worker::with_layout(oracle, c, rng, worker_layout.clone()))
             as Box<dyn ef21::algo::WorkerNode>
     };
+    if spec.master == ef21::config::MasterEngine::Reactor {
+        let out = ef21::coordinator::reactor::run_reactor(
+            master,
+            problem.n_workers,
+            make_worker,
+            spec.rounds,
+            kind,
+            &spec.label(),
+            ef21::coordinator::reactor::default_shards(),
+        )?;
+        println!(
+            "transport={transport} (reactor): {} uplink frame bytes, {} downlink frame bytes",
+            out.uplink_frame_bytes, out.downlink_frame_bytes
+        );
+        return Ok(out.history);
+    }
     let out = match sched {
         Some(sched) => run_distributed_sched_ckpt(
             master,

@@ -9,31 +9,155 @@
 //! f32 data-plane frames), so a resynced worker is **bit-identical** to
 //! one that had merely been absent — asserted in
 //! `rust/tests/integration_sched.rs`.
+//!
+//! # Representation: sparse base + absorb-order delta log
+//!
+//! Mirrors are NOT stored as n×d dense f64 vectors (an O(n·d) wall at
+//! fleet scale — 1e4 workers × 1e6 coordinates would be 80 GB). Each
+//! worker's mirror is
+//!
+//! * a **base**: sorted unique `(idx, val)` pairs — the per-coordinate
+//!   left-fold of every entry absorbed before the last compaction, and
+//! * a **pending log**: `(idx, val)` pairs in exact absorb order since.
+//!
+//! Compaction folds the pending entries into the base per coordinate in
+//! log order, which is precisely the order the dense replay would apply
+//! them — floating-point addition is applied to the same accumulator in
+//! the same sequence, so the compacted value is bit-identical to the
+//! dense cell (asserted against a dense replay in the tests below and in
+//! `rust/tests/integration_fleet.rs`). A coordinate never touched stays
+//! implicit (+0.0, exactly the dense initial value); explicit entries
+//! are never pruned, so an exact `-0.0` fold result survives. The
+//! DCGD-tagged branch (EF21+) is whole-state assignment: it resets base
+//! and log to the message payload alone.
+//!
+//! Dense images are reconstructed **lazily** into one reusable d-sized
+//! scratch buffer ([`StateTracker::mirror_dense`]) only when a StateSync
+//! push or a resync actually needs one — memory stays
+//! O(d + total nnz), independent of n·d.
 
 use crate::algo::WireMsg;
+use crate::ckpt::{SparseMirror, TrackerImage};
 use anyhow::{ensure, Result};
+
+/// One worker's sparse mirror: compacted base + absorb-order log.
+#[derive(Default)]
+struct Mirror {
+    /// Sorted unique coordinates of the compacted base.
+    base_idx: Vec<u32>,
+    /// Per-coordinate fold values, aligned with `base_idx`.
+    base_val: Vec<f64>,
+    /// Entries absorbed since the last compaction, in absorb order.
+    pending: Vec<(u32, f64)>,
+}
+
+impl Mirror {
+    /// Fold the pending log into the base, per coordinate in log order —
+    /// the exact sequence a dense replay applies to each cell.
+    fn compact(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        // Stable sort: entries sharing a coordinate keep absorb order.
+        self.pending.sort_by_key(|e| e.0);
+        let old_idx = std::mem::take(&mut self.base_idx);
+        let old_val = std::mem::take(&mut self.base_val);
+        let mut idx = Vec::with_capacity(old_idx.len() + self.pending.len());
+        let mut val = Vec::with_capacity(old_idx.len() + self.pending.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < old_idx.len() || j < self.pending.len() {
+            let take_base = match (old_idx.get(i), self.pending.get(j)) {
+                (Some(&b), Some(&(p, _))) => b < p,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            if take_base {
+                idx.push(old_idx[i]);
+                val.push(old_val[i]);
+                i += 1;
+                continue;
+            }
+            let coord = self.pending[j].0;
+            // Dense cell: starts at the base value (implicit 0.0 when the
+            // coordinate was never folded), then `+=` per log entry.
+            let mut acc = if old_idx.get(i) == Some(&coord) {
+                let v = old_val[i];
+                i += 1;
+                v
+            } else {
+                0.0
+            };
+            while j < self.pending.len() && self.pending[j].0 == coord {
+                acc += self.pending[j].1;
+                j += 1;
+            }
+            idx.push(coord);
+            val.push(acc);
+        }
+        self.base_idx = idx;
+        self.base_val = val;
+        self.pending.clear();
+    }
+
+    fn bytes(&self) -> u64 {
+        (self.base_idx.len() * 4 + self.base_val.len() * 8 + self.pending.len() * 16) as u64
+    }
+}
 
 /// Per-worker mirrors of the reconstructible worker state.
 pub struct StateTracker {
-    g: Vec<Vec<f64>>,
+    d: usize,
+    mirrors: Vec<Mirror>,
+    /// Reusable dense reconstruction buffer ([`StateTracker::mirror_dense`]).
+    scratch: Vec<f64>,
 }
 
 impl StateTracker {
     pub fn new(n_workers: usize, d: usize) -> StateTracker {
-        StateTracker { g: vec![vec![0.0; d]; n_workers] }
+        let mut mirrors = Vec::with_capacity(n_workers);
+        mirrors.resize_with(n_workers, Mirror::default);
+        StateTracker { d, mirrors, scratch: vec![0.0; d] }
     }
 
     /// Fold one worker's uplink message into its mirror. Sparse and
     /// Markov-tagged messages are state deltas; the DCGD-tagged branch
     /// (EF21+) assigns the whole state.
     pub fn absorb_msg(&mut self, w: usize, msg: &WireMsg) {
+        let m = &mut self.mirrors[w];
         match msg {
             WireMsg::Sparse(c) | WireMsg::Tagged { dcgd_branch: false, payload: c } => {
-                c.sparse.add_into(&mut self.g[w]);
+                if let Some(&last) = c.sparse.idx.last() {
+                    assert!(
+                        (last as usize) < self.d,
+                        "mirror delta index {last} out of range for d={}",
+                        self.d
+                    );
+                }
+                m.pending
+                    .extend(c.sparse.idx.iter().copied().zip(c.sparse.val.iter().copied()));
+                // Amortized compaction keeps the log from outgrowing the
+                // base; the fold order is preserved, so WHEN compaction
+                // runs never changes any reconstructed bit.
+                if m.pending.len() >= 64.max(m.base_idx.len()) {
+                    m.compact();
+                }
             }
             WireMsg::Tagged { dcgd_branch: true, payload } => {
-                self.g[w].iter_mut().for_each(|v| *v = 0.0);
-                payload.sparse.add_into(&mut self.g[w]);
+                if let Some(&last) = payload.sparse.idx.last() {
+                    assert!(
+                        (last as usize) < self.d,
+                        "mirror assign index {last} out of range for d={}",
+                        self.d
+                    );
+                }
+                // Whole-state assignment: dense semantics are "zero
+                // everything, then add the payload once" — exactly a
+                // fresh base equal to the payload entries.
+                m.base_idx.clear();
+                m.base_idx.extend_from_slice(&payload.sparse.idx);
+                m.base_val.clear();
+                m.base_val.extend_from_slice(&payload.sparse.val);
+                m.pending.clear();
             }
         }
     }
@@ -46,10 +170,10 @@ impl StateTracker {
     /// mirrors for every later rejoin.
     pub fn absorb_round(&mut self, msgs: &[WireMsg]) -> Result<()> {
         ensure!(
-            msgs.len() == self.g.len(),
+            msgs.len() == self.mirrors.len(),
             "StateTracker::absorb_round: {} messages for {} mirrored workers",
             msgs.len(),
-            self.g.len()
+            self.mirrors.len()
         );
         for (w, m) in msgs.iter().enumerate() {
             self.absorb_msg(w, m);
@@ -57,37 +181,93 @@ impl StateTracker {
         Ok(())
     }
 
-    /// The reconstructed state of worker `w`.
-    pub fn mirror(&self, w: usize) -> &[f64] {
-        &self.g[w]
+    /// The reconstructed dense state of worker `w`, materialized lazily
+    /// into the tracker's one reusable scratch buffer (valid until the
+    /// next `mirror_dense` call). Base values are per-coordinate fold
+    /// results and pending entries continue the same fold, so every cell
+    /// carries exactly the bits a dense n×d tracker would hold.
+    pub fn mirror_dense(&mut self, w: usize) -> &[f64] {
+        self.scratch.iter_mut().for_each(|v| *v = 0.0);
+        let m = &self.mirrors[w];
+        for (&i, &v) in m.base_idx.iter().zip(&m.base_val) {
+            self.scratch[i as usize] = v;
+        }
+        for &(i, v) in &m.pending {
+            self.scratch[i as usize] += v;
+        }
+        &self.scratch
     }
 
     /// Number of mirrored workers.
     pub fn n_workers(&self) -> usize {
-        self.g.len()
+        self.mirrors.len()
     }
 
-    /// All mirrors, in worker order (checkpoint serialization).
-    pub fn mirrors(&self) -> &[Vec<f64>] {
-        &self.g
+    /// Mirrored dimension.
+    pub fn dim(&self) -> usize {
+        self.d
     }
 
-    /// Overwrite every mirror from a checkpoint image.
-    pub fn restore(&mut self, mirrors: &[Vec<f64>]) -> Result<()> {
+    /// Bytes held by the sparse mirrors (checkpoint/bench accounting;
+    /// excludes the single d-sized scratch buffer).
+    pub fn mirror_bytes(&self) -> u64 {
+        self.mirrors.iter().map(Mirror::bytes).sum()
+    }
+
+    /// Sparse checkpoint image, in worker order: each mirror is compacted
+    /// (an exact fold — see the module docs) and its base cloned. Cost is
+    /// O(total nnz), never the dense n×d clone the v1 tracker paid.
+    pub fn image(&mut self) -> TrackerImage {
+        let mirrors = self
+            .mirrors
+            .iter_mut()
+            .map(|m| {
+                m.compact();
+                SparseMirror { idx: m.base_idx.clone(), val: m.base_val.clone() }
+            })
+            .collect();
+        TrackerImage { d: self.d, mirrors }
+    }
+
+    /// Overwrite every mirror from a checkpoint image (sparse v2 images
+    /// verbatim; dense v1 snapshots arrive converted by the checkpoint
+    /// decoder — see [`TrackerImage::from_dense`]).
+    pub fn restore(&mut self, image: &TrackerImage) -> Result<()> {
         ensure!(
-            mirrors.len() == self.g.len(),
+            image.mirrors.len() == self.mirrors.len(),
             "StateTracker::restore: {} mirrors for {} workers",
-            mirrors.len(),
-            self.g.len()
+            image.mirrors.len(),
+            self.mirrors.len()
         );
-        for (dst, src) in self.g.iter_mut().zip(mirrors) {
+        ensure!(
+            image.d == self.d,
+            "StateTracker::restore: mirror dim {} vs {}",
+            image.d,
+            self.d
+        );
+        for (dst, src) in self.mirrors.iter_mut().zip(&image.mirrors) {
             ensure!(
-                src.len() == dst.len(),
-                "StateTracker::restore: mirror dim {} vs {}",
-                src.len(),
-                dst.len()
+                src.idx.len() == src.val.len(),
+                "StateTracker::restore: ragged mirror ({} indices, {} values)",
+                src.idx.len(),
+                src.val.len()
             );
-            dst.copy_from_slice(src);
+            if let Some(&last) = src.idx.last() {
+                ensure!(
+                    (last as usize) < self.d,
+                    "StateTracker::restore: mirror index {last} out of range for d={}",
+                    self.d
+                );
+            }
+            ensure!(
+                src.idx.windows(2).all(|w| w[0] < w[1]),
+                "StateTracker::restore: mirror indices not sorted+unique"
+            );
+            dst.base_idx.clear();
+            dst.base_idx.extend_from_slice(&src.idx);
+            dst.base_val.clear();
+            dst.base_val.extend_from_slice(&src.val);
+            dst.pending.clear();
         }
         Ok(())
     }
@@ -108,8 +288,8 @@ mod tests {
         let mut t = StateTracker::new(2, 3);
         t.absorb_round(&[sparse(vec![0], vec![1.0]), sparse(vec![2], vec![-2.0])]).unwrap();
         t.absorb_round(&[sparse(vec![0, 1], vec![0.5, 3.0]), sparse(vec![], vec![])]).unwrap();
-        assert_eq!(t.mirror(0), &[1.5, 3.0, 0.0]);
-        assert_eq!(t.mirror(1), &[0.0, 0.0, -2.0]);
+        assert_eq!(t.mirror_dense(0), &[1.5, 3.0, 0.0]);
+        assert_eq!(t.mirror_dense(1), &[0.0, 0.0, -2.0]);
     }
 
     #[test]
@@ -118,26 +298,49 @@ mod tests {
         // Short slice: must error, not silently skip worker 1.
         assert!(t.absorb_round(&[sparse(vec![0], vec![1.0])]).is_err());
         // Long slice: must error, not panic mid-absorb.
-        let three: Vec<WireMsg> =
-            (0..3).map(|_| sparse(vec![0], vec![1.0])).collect();
+        let three: Vec<WireMsg> = (0..3).map(|_| sparse(vec![0], vec![1.0])).collect();
         assert!(t.absorb_round(&three).is_err());
         // Mirrors untouched by rejected rounds.
-        assert_eq!(t.mirror(0), &[0.0, 0.0, 0.0]);
-        assert_eq!(t.mirror(1), &[0.0, 0.0, 0.0]);
+        assert_eq!(t.mirror_dense(0), &[0.0, 0.0, 0.0]);
+        assert_eq!(t.mirror_dense(1), &[0.0, 0.0, 0.0]);
     }
 
     #[test]
-    fn mirrors_restore_roundtrip() {
+    fn image_restore_roundtrip() {
         let mut t = StateTracker::new(2, 2);
         t.absorb_round(&[sparse(vec![0], vec![1.0]), sparse(vec![1], vec![2.0])]).unwrap();
-        let image: Vec<Vec<f64>> = t.mirrors().to_vec();
+        let image = t.image();
         let mut fresh = StateTracker::new(2, 2);
         fresh.restore(&image).unwrap();
-        assert_eq!(fresh.mirror(0), t.mirror(0));
-        assert_eq!(fresh.mirror(1), t.mirror(1));
-        assert!(fresh.restore(&image[..1]).is_err());
-        assert!(fresh.restore(&[vec![0.0; 3], vec![0.0; 3]]).is_err());
+        assert_eq!(fresh.mirror_dense(0).to_vec(), t.mirror_dense(0).to_vec());
+        assert_eq!(fresh.mirror_dense(1).to_vec(), t.mirror_dense(1).to_vec());
+        // Worker-count and dimension mismatches are hard errors.
+        let short = TrackerImage { d: 2, mirrors: image.mirrors[..1].to_vec() };
+        assert!(fresh.restore(&short).is_err());
+        let wrong_d = TrackerImage { d: 3, ..image.clone() };
+        assert!(fresh.restore(&wrong_d).is_err());
         assert_eq!(fresh.n_workers(), 2);
+    }
+
+    #[test]
+    fn restore_rejects_malformed_mirrors() {
+        let mut t = StateTracker::new(1, 4);
+        // Ragged.
+        let img = TrackerImage {
+            d: 4,
+            mirrors: vec![SparseMirror { idx: vec![0, 1], val: vec![1.0] }],
+        };
+        assert!(t.restore(&img).is_err());
+        // Out of range.
+        let img =
+            TrackerImage { d: 4, mirrors: vec![SparseMirror { idx: vec![9], val: vec![1.0] }] };
+        assert!(t.restore(&img).is_err());
+        // Unsorted.
+        let img = TrackerImage {
+            d: 4,
+            mirrors: vec![SparseMirror { idx: vec![2, 1], val: vec![1.0, 1.0] }],
+        };
+        assert!(t.restore(&img).is_err());
     }
 
     #[test]
@@ -149,12 +352,76 @@ mod tests {
             payload: Compressed { sparse: SparseVec::new(vec![1], vec![7.0]), bits: 64 },
         };
         t.absorb_msg(0, &assign);
-        assert_eq!(t.mirror(0), &[0.0, 7.0, 0.0]);
+        assert_eq!(t.mirror_dense(0), &[0.0, 7.0, 0.0]);
         let delta = WireMsg::Tagged {
             dcgd_branch: false,
             payload: Compressed { sparse: SparseVec::new(vec![0], vec![2.0]), bits: 64 },
         };
         t.absorb_msg(0, &delta);
-        assert_eq!(t.mirror(0), &[2.0, 7.0, 0.0]);
+        assert_eq!(t.mirror_dense(0), &[2.0, 7.0, 0.0]);
+    }
+
+    /// The exactness contract: at any message count (compaction runs at
+    /// arbitrary points), the reconstructed dense mirror is bit-identical
+    /// to a dense replay of the same absorb sequence.
+    #[test]
+    fn sparse_mirror_matches_dense_replay_bitwise() {
+        let d = 19;
+        let mut rng = crate::util::rng::Rng::seed(41);
+        let mut t = StateTracker::new(1, d);
+        let mut dense = vec![0.0f64; d];
+        for step in 0..400 {
+            let k = 1 + rng.next_below(6);
+            let idx = rng.sample_indices(d, k);
+            let val: Vec<f64> = (0..k).map(|_| rng.next_normal() * 1e3).collect();
+            let payload =
+                Compressed { sparse: SparseVec::new(idx, val), bits: 64 * k as u64 };
+            let msg = if step % 37 == 11 {
+                WireMsg::Tagged { dcgd_branch: true, payload }
+            } else {
+                WireMsg::Sparse(payload)
+            };
+            // Dense replay (the v1 tracker's exact update rule).
+            match &msg {
+                WireMsg::Sparse(c) | WireMsg::Tagged { dcgd_branch: false, payload: c } => {
+                    c.sparse.add_into(&mut dense);
+                }
+                WireMsg::Tagged { dcgd_branch: true, payload } => {
+                    dense.iter_mut().for_each(|v| *v = 0.0);
+                    payload.sparse.add_into(&mut dense);
+                }
+            }
+            t.absorb_msg(0, &msg);
+        }
+        for (a, b) in t.mirror_dense(0).iter().zip(&dense) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // The sparse mirror holds at most d entries plus a bounded log.
+        assert!(t.mirror_bytes() <= (d * 12 + 64 * 16) as u64 * 2);
+    }
+
+    /// Images survive a roundtrip through the dense v1 representation
+    /// (the checkpoint compatibility path) bit-for-bit.
+    #[test]
+    fn dense_v1_conversion_is_exact() {
+        let mut t = StateTracker::new(2, 5);
+        t.absorb_round(&[
+            sparse(vec![0, 4], vec![1.5, -0.0]),
+            sparse(vec![2], vec![f64::MIN_POSITIVE]),
+        ])
+        .unwrap();
+        let dense: Vec<Vec<f64>> =
+            (0..2).map(|w| t.mirror_dense(w).to_vec()).collect();
+        let image = TrackerImage::from_dense(&dense).unwrap();
+        let mut back = StateTracker::new(2, 5);
+        back.restore(&image).unwrap();
+        for w in 0..2 {
+            let want = dense[w].clone();
+            for (a, b) in back.mirror_dense(w).iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // -0.0 survives (its bits are nonzero, so it keeps an entry).
+        assert_eq!(back.mirror_dense(0)[4].to_bits(), (-0.0f64).to_bits());
     }
 }

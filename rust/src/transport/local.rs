@@ -28,6 +28,26 @@ impl Conn for LocalConn {
     }
 }
 
+impl LocalConn {
+    /// Nonblocking receive for the reactor's readiness loop: a complete
+    /// frame if one is queued, `None` if the peer simply has not sent
+    /// yet, an error once the peer is gone.
+    pub fn try_recv_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        use std::sync::mpsc::TryRecvError;
+        match self.rx.try_recv() {
+            Ok(frame) => {
+                telemetry::counter(keys::RX_FRAMES).incr(1);
+                telemetry::counter(keys::RX_BYTES).incr(frame.len() as u64);
+                Ok(Some(frame))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => {
+                anyhow::bail!("local conn closed (try_recv)")
+            }
+        }
+    }
+}
+
 /// Create a connected (master_end, worker_end) pair.
 pub fn pair() -> (LocalConn, LocalConn) {
     let (tx_a, rx_b) = channel();
@@ -65,5 +85,15 @@ mod tests {
         let (mut m, w) = pair();
         drop(w);
         assert!(m.send(b"x").is_err() || m.recv().is_err());
+    }
+
+    #[test]
+    fn try_recv_frame_is_nonblocking() {
+        let (mut m, mut w) = pair();
+        assert!(m.try_recv_frame().unwrap().is_none());
+        w.send(b"later").unwrap();
+        assert_eq!(m.try_recv_frame().unwrap().unwrap(), b"later");
+        drop(w);
+        assert!(m.try_recv_frame().is_err());
     }
 }

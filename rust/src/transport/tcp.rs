@@ -139,6 +139,12 @@ impl TcpConn {
         Self::new(stream)
     }
 
+    /// Surrender the underlying stream (used by the reactor, which runs
+    /// its own nonblocking framing instead of the blocking [`Conn`] path).
+    pub(crate) fn into_stream(self) -> TcpStream {
+        self.stream
+    }
+
     /// Connect with up to `attempts` tries and doubling `backoff` between
     /// them — lets workers dial a master that is still binding its
     /// listener, while a genuinely dead address fails in bounded time.
@@ -193,10 +199,36 @@ impl Conn for TcpConn {
     }
 }
 
+/// Ask the kernel for a deeper accept queue on an already-listening
+/// socket. `std` hardcodes a backlog of 128, which drops/refuses SYNs
+/// when thousands of workers dial the instant the port is published
+/// (they no longer stagger their connects). POSIX allows re-calling
+/// `listen(2)` on a listening socket to change the backlog and Linux
+/// honors it, so this is a direct libc call — the symbol is already
+/// linked on every unix target, no new dependency. Best-effort: the
+/// kernel clamps to `somaxconn`, and connect-side retry still covers an
+/// overflowing queue.
+#[cfg(unix)]
+fn raise_listen_backlog(listener: &TcpListener, backlog: i32) {
+    use std::os::unix::io::AsRawFd;
+    extern "C" {
+        fn listen(fd: std::os::raw::c_int, backlog: std::os::raw::c_int) -> std::os::raw::c_int;
+    }
+    unsafe {
+        let _ = listen(listener.as_raw_fd(), backlog);
+    }
+}
+
+#[cfg(not(unix))]
+fn raise_listen_backlog(_listener: &TcpListener, _backlog: i32) {}
+
 /// Accept `n` connections on an ephemeral local port; returns the port and
 /// a handle producing the accepted master-side conns in arrival order.
+/// The accept queue is deepened ([`raise_listen_backlog`]) so a
+/// simultaneous thundering herd of connects is queued, not refused.
 pub fn listen_local(n: usize) -> Result<(u16, std::thread::JoinHandle<Result<Vec<TcpConn>>>)> {
     let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
+    raise_listen_backlog(&listener, 4096);
     let port = listener.local_addr()?.port();
     let handle = std::thread::spawn(move || {
         let mut conns = Vec::with_capacity(n);
@@ -243,6 +275,40 @@ mod tests {
         let mut conns = acceptor.join().unwrap().unwrap();
         assert_eq!(conns[0].recv().unwrap(), payload);
         client.join().unwrap();
+    }
+
+    #[test]
+    fn simultaneous_connects_are_all_accepted() {
+        // No stagger: every client dials the instant the port exists.
+        // The deepened backlog (plus connect retry for overflow) must
+        // deliver all of them.
+        let n = 64;
+        let (port, acceptor) = listen_local(n).unwrap();
+        let clients: Vec<_> = (0..n as u32)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let (attempts, backoff) = connect_retry_schedule();
+                    let mut c = TcpConn::connect_with_retry(
+                        &format!("127.0.0.1:{port}"),
+                        attempts,
+                        backoff,
+                    )
+                    .unwrap();
+                    c.send(&i.to_le_bytes()).unwrap();
+                    c
+                })
+            })
+            .collect();
+        let mut conns = acceptor.join().unwrap().unwrap();
+        let mut seen: Vec<u32> = conns
+            .iter_mut()
+            .map(|c| u32::from_le_bytes(c.recv().unwrap().try_into().unwrap()))
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n as u32).collect::<Vec<_>>());
+        for c in clients {
+            c.join().unwrap();
+        }
     }
 
     #[test]

@@ -1,0 +1,46 @@
+//! Process memory introspection for the fleet bench: resident set size
+//! read from `/proc/self/status` (no external crates). Off Linux the
+//! probes return `None` and the bench simply omits the fields.
+
+/// Parse a `VmRSS:\t  123 kB`-style line's numeric field.
+fn parse_kb_line(line: &str) -> Option<u64> {
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// `/proc/self/status` field in kB, or `None` when unavailable.
+fn status_field(key: &str) -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status.lines().find(|l| l.starts_with(key)).and_then(parse_kb_line)
+}
+
+/// Current resident set size in kB (`VmRSS`).
+pub fn rss_kb() -> Option<u64> {
+    status_field("VmRSS:")
+}
+
+/// Peak resident set size in kB (`VmHWM`).
+pub fn peak_rss_kb() -> Option<u64> {
+    status_field("VmHWM:")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_status_lines() {
+        assert_eq!(parse_kb_line("VmRSS:\t  123456 kB"), Some(123456));
+        assert_eq!(parse_kb_line("VmRSS: 7 kB"), Some(7));
+        assert_eq!(parse_kb_line("VmRSS:"), None);
+        assert_eq!(parse_kb_line("VmRSS:\tnope kB"), None);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn live_probes_report_plausible_values() {
+        let rss = rss_kb().expect("VmRSS readable on Linux");
+        let peak = peak_rss_kb().expect("VmHWM readable on Linux");
+        assert!(rss > 0);
+        assert!(peak >= rss / 2, "peak {peak} kB vs rss {rss} kB");
+    }
+}

@@ -7,6 +7,7 @@
 pub mod alloc;
 pub mod json;
 pub mod linalg;
+pub mod mem;
 pub mod rng;
 pub mod simd;
 pub mod testing;

@@ -1,0 +1,227 @@
+//! Fleet-scale integration: the sharded reactor master is bit-identical
+//! to the thread-per-connection engine (every algorithm, deterministic
+//! and randomized compressors, local channels and real TCP), the
+//! hierarchical aggregation tree reproduces the flat worker-order fold
+//! bitwise at every fan-out/shard split, sparse state mirrors survive a
+//! crash→image→restore cycle bit-identically to a dense replay, and a
+//! 2000-client simulated fleet completes a bounded-time smoke run.
+
+use ef21::algo::{AlgoSpec, MasterNode, WireMsg, WorkerNode};
+use ef21::compress::Compressor;
+use ef21::coordinator::dist::{run_distributed, DistOutcome, TransportKind};
+use ef21::coordinator::fleet::{dense_digest, reference_round, FleetSpec};
+use ef21::coordinator::reactor::run_reactor;
+use ef21::data::{partition, synth};
+use ef21::oracle::{GradOracle, LogRegOracle};
+use ef21::sched::StateTracker;
+use ef21::util::linalg;
+use ef21::util::rng::Rng;
+use std::sync::{Arc, Mutex};
+
+const N_WORKERS: usize = 6;
+const ROUNDS: usize = 15;
+const GAMMA: f64 = 0.05;
+
+/// Build the (master, make_worker) pair for one engine run. Both engines
+/// get byte-identical node constructions, so any trajectory divergence
+/// is the engine's fault.
+fn nodes(
+    algo: AlgoSpec,
+    comp: &str,
+) -> (Box<dyn MasterNode>, impl Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static) {
+    let ds = synth::generate_custom("fleet", 480, 10, 0.4, 3);
+    let oracles: Vec<Box<dyn GradOracle>> = partition::shards(&ds, N_WORKERS)
+        .into_iter()
+        .map(|s| Box::new(LogRegOracle::new(s, 0.1)) as Box<dyn GradOracle>)
+        .collect();
+    let c: Arc<dyn Compressor> = Arc::from(ef21::compress::from_spec(comp).expect("spec"));
+    let (m, w) = ef21::algo::build(algo, vec![0.0; ds.d], oracles, c, GAMMA, 17);
+    let slots = Mutex::new(w.into_iter().map(Some).collect::<Vec<_>>());
+    let make = move |i: usize| slots.lock().unwrap()[i].take().expect("worker built twice");
+    (m, make)
+}
+
+fn run_threads(algo: AlgoSpec, comp: &str, kind: TransportKind) -> DistOutcome {
+    let (m, make) = nodes(algo, comp);
+    run_distributed(m, N_WORKERS, make, ROUNDS, kind, "threads").expect("thread engine")
+}
+
+fn run_reactor_engine(
+    algo: AlgoSpec,
+    comp: &str,
+    kind: TransportKind,
+    shards: usize,
+) -> DistOutcome {
+    let (m, make) = nodes(algo, comp);
+    run_reactor(m, N_WORKERS, make, ROUNDS, kind, "reactor", shards).expect("reactor engine")
+}
+
+/// Bitwise trajectory equality: every recorded f64 compared by bits, not
+/// tolerance — the reactor's contract is exact lockstep reproduction.
+fn assert_bitwise_equal(a: &DistOutcome, b: &DistOutcome, what: &str) {
+    assert_eq!(a.history.records.len(), b.history.records.len(), "{what}: record count");
+    for (ra, rb) in a.history.records.iter().zip(&b.history.records) {
+        assert_eq!(ra.round, rb.round, "{what}");
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "{what}: loss @r{}", ra.round);
+        assert_eq!(
+            ra.grad_norm_sq.to_bits(),
+            rb.grad_norm_sq.to_bits(),
+            "{what}: |grad|^2 @r{}",
+            ra.round
+        );
+        assert_eq!(
+            ra.bits_per_client.to_bits(),
+            rb.bits_per_client.to_bits(),
+            "{what}: bits @r{}",
+            ra.round
+        );
+    }
+    assert_eq!(a.history.downlink_bits, b.history.downlink_bits, "{what}: downlink bits");
+    assert_eq!(a.final_x.len(), b.final_x.len(), "{what}: final_x len");
+    for (i, (xa, xb)) in a.final_x.iter().zip(&b.final_x).enumerate() {
+        assert_eq!(xa.to_bits(), xb.to_bits(), "{what}: final_x[{i}]");
+    }
+    // Identical protocol ⇒ identical wire accounting.
+    assert_eq!(a.uplink_frame_bytes, b.uplink_frame_bytes, "{what}: uplink bytes");
+    assert_eq!(a.downlink_frame_bytes, b.downlink_frame_bytes, "{what}: downlink bytes");
+}
+
+#[test]
+fn reactor_matches_threads_bitwise_all_algos_local() {
+    for algo in AlgoSpec::ALL {
+        for comp in ["top2", "rand2"] {
+            let threads = run_threads(algo, comp, TransportKind::Local);
+            // Shard counts bracketing the fleet: 1 (pure event loop) and
+            // more shards than workers (degenerate 1-conn shards).
+            for shards in [1, 3, N_WORKERS + 2] {
+                let reactor = run_reactor_engine(algo, comp, TransportKind::Local, shards);
+                assert_bitwise_equal(
+                    &threads,
+                    &reactor,
+                    &format!("{} {comp} shards={shards}", algo.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn reactor_matches_threads_bitwise_over_tcp() {
+    // One real-socket case: the nonblocking framing state machine under
+    // genuine partial reads/writes.
+    let threads = run_threads(AlgoSpec::Ef21, "top2", TransportKind::Tcp);
+    let reactor = run_reactor_engine(AlgoSpec::Ef21, "top2", TransportKind::Tcp, 2);
+    assert_bitwise_equal(&threads, &reactor, "ef21 top2 tcp");
+}
+
+/// The aggregation tree's integration-level contract: at every
+/// (shards, fanout) split the fleet master's g/x trajectories equal the
+/// flat worker-order fold bitwise.
+#[test]
+fn aggregation_tree_equals_flat_fold_bitwise_at_all_fanouts() {
+    let base = FleetSpec {
+        n_clients: 64,
+        d: 257,
+        k: 5,
+        rounds: 3,
+        fanout: 0,
+        shards: 1,
+        seed: 42,
+        gamma: 0.3,
+        track_mirrors: false,
+    };
+    let mut g = vec![0.0; base.d];
+    let mut x = vec![0.0; base.d];
+    for t in 0..base.rounds {
+        reference_round(&base, t, &mut g);
+        linalg::axpy(-base.gamma, &g, &mut x);
+    }
+    let (want_g, want_x) = (dense_digest(&g), dense_digest(&x));
+    for shards in [1usize, 2, 5, 9] {
+        for fanout in [0usize, 2, 3, 16, 64] {
+            let out = ef21::coordinator::fleet::run_fleet(&FleetSpec {
+                shards,
+                fanout,
+                ..base.clone()
+            })
+            .expect("fleet run");
+            assert_eq!(out.g_digest, want_g, "g: shards={shards} fanout={fanout}");
+            assert_eq!(out.x_digest, want_x, "x: shards={shards} fanout={fanout}");
+        }
+    }
+}
+
+/// Crash→resync with sparse mirrors: feed real compressor outputs
+/// (top-k deltas, rand-k deltas, DCGD whole-state assignments) through
+/// the tracker, snapshot + restore mid-stream (the crash), and require
+/// the reconstructed mirror to match a dense replay bit for bit.
+#[test]
+fn sparse_mirror_resync_matches_dense_replay_after_crash() {
+    let d = 64;
+    let topk = ef21::compress::TopK::new(3);
+    let randk = ef21::compress::RandK::new(4);
+    let mut rng = Rng::seed(99);
+    let mut tracker = StateTracker::new(2, d);
+    let mut dense = vec![vec![0.0f64; d]; 2];
+    for step in 0..120 {
+        for w in 0..2 {
+            let v: Vec<f64> = (0..d).map(|_| rng.next_normal()).collect();
+            let payload = if w == 0 {
+                topk.compress(&v, &mut rng)
+            } else {
+                randk.compress(&v, &mut rng)
+            };
+            let msg = if step % 17 == 5 {
+                WireMsg::Tagged { dcgd_branch: true, payload }
+            } else {
+                WireMsg::Sparse(payload)
+            };
+            match &msg {
+                WireMsg::Tagged { dcgd_branch: true, payload } => {
+                    dense[w].iter_mut().for_each(|x| *x = 0.0);
+                    payload.sparse.add_into(&mut dense[w]);
+                }
+                WireMsg::Sparse(c) | WireMsg::Tagged { dcgd_branch: false, payload: c } => {
+                    c.sparse.add_into(&mut dense[w]);
+                }
+            }
+            tracker.absorb_msg(w, &msg);
+        }
+        if step == 60 {
+            // The crash: only the sparse image survives; the rebuilt
+            // tracker must carry on bit-identically.
+            let image = tracker.image();
+            tracker = StateTracker::new(2, d);
+            tracker.restore(&image).expect("restore");
+        }
+    }
+    for w in 0..2 {
+        let mirror = tracker.mirror_dense(w).to_vec();
+        for (i, (m, e)) in mirror.iter().zip(&dense[w]).enumerate() {
+            assert_eq!(m.to_bits(), e.to_bits(), "worker {w} coord {i}");
+        }
+    }
+}
+
+/// 2000 simulated clients complete a short run on one master within a
+/// generous wall bound, with sparse mirrors far under the dense n×d
+/// floor — the "one master, thousands of clients" smoke.
+#[test]
+fn two_thousand_client_fleet_smoke_is_bounded() {
+    let spec = FleetSpec { rounds: 5, ..FleetSpec::quick(2000) };
+    let t0 = std::time::Instant::now();
+    let out = ef21::coordinator::fleet::run_fleet(&spec).expect("fleet run");
+    let wall = t0.elapsed();
+    assert!(wall.as_secs() < 60, "2000-client smoke took {wall:?}");
+    assert_eq!(out.rounds, spec.rounds);
+    assert_eq!(out.entries_folded, (spec.n_clients * spec.k * spec.rounds) as u64);
+    assert!(out.g_digest != 0 && out.x_digest != 0);
+    // Mirrors stay sparse: nowhere near the dense n×d×8 = 1.6 GB floor.
+    let dense_floor = (spec.n_clients * spec.d * 8) as u64;
+    assert!(
+        out.mirror_bytes * 100 < dense_floor,
+        "mirrors {} B vs dense floor {} B",
+        out.mirror_bytes,
+        dense_floor
+    );
+}
