@@ -22,7 +22,7 @@ fn main() {
     for &(d, k) in &[(300usize, 32usize), (469_504, 23_475)] {
         let sv = sparse(d, k, &mut rng);
         let msg = WireMsg::Sparse(Compressed { bits: sv.standard_bits(), sparse: sv });
-        let up = Frame::Up { msg, loss: 1.0 };
+        let up = Frame::Up { msg, loss: 1.0, health: None };
         bench(&format!("encode Up d={d:>7} k={k:>6}"), || {
             black_box(encode(&up));
         });

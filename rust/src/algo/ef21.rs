@@ -114,6 +114,12 @@ impl WorkerNode for Ef21Worker {
         Some(linalg::dist_sq(self.g.as_slice(), &self.last_grad))
     }
 
+    fn contraction_ref_sq(&self) -> Option<f64> {
+        // `diff` still holds the last compressor input ∇f_i(x) − g_i^prev
+        // (round_into only reads it after writing it).
+        Some(linalg::dot(&self.diff, &self.diff))
+    }
+
     // Crash model: g_i is exactly what the master's StateTracker mirrors
     // (every uplink is a delta against it), so resync is lossless.
     fn supports_resync(&self) -> bool {

@@ -165,6 +165,14 @@ pub trait WorkerNode: Send {
         None
     }
 
+    /// `||∇f_i(x) − g_i^{prev}||²` — the norm of the last compressor
+    /// input, paired with [`WorkerNode::distortion_sq`]: their ratio is
+    /// the Eq. 3 contraction check `‖C(v)−v‖² ≤ (1−α)‖v‖²` the health
+    /// monitor evaluates per worker.
+    fn contraction_ref_sq(&self) -> Option<f64> {
+        None
+    }
+
     /// EF21+: whether the last round took the DCGD branch.
     fn used_dcgd_branch(&self) -> Option<bool> {
         None

@@ -41,8 +41,10 @@
 //! as it ships; v2 is what lets CI gate on tail (p99) regressions, not
 //! just mean throughput. v3 adds the `fleet.*` cases, which carry two
 //! extra keys (absent elsewhere, so v2 baseline diffs stay valid):
-//! `rss_kb` — master `VmRSS` after the run (`null` off Linux) — and
-//! `mirror_bytes` — bytes held by the sparse per-worker state mirrors.
+//! `rss_kb` — master `VmRSS` after the run (`null` when
+//! `/proc/self/status` is unavailable: non-Linux, or a container that
+//! masks `/proc`) — and `mirror_bytes` — bytes held by the sparse
+//! per-worker state mirrors.
 
 use crate::algo::AlgoSpec;
 use crate::compress::{self, Compressed, Compressor};
@@ -96,10 +98,16 @@ struct Case {
     workers: usize,
     allocs_per_round: Option<f64>,
     round_ns: Option<RoundSummary>,
-    /// Master resident set size after the run — `fleet.*` cases only.
+    /// Fleet-only columns — `Some` exactly for `fleet.*` cases.
+    fleet: Option<FleetStats>,
+}
+
+/// The `fleet.*` extra columns: master RSS after the run (`None` ⇒ JSON
+/// `null` — `/proc/self/status` unavailable, e.g. non-Linux or a masked
+/// `/proc`) and the sparse resync mirrors' byte footprint.
+struct FleetStats {
     rss_kb: Option<u64>,
-    /// Sparse state-mirror footprint — `fleet.*` cases only.
-    mirror_bytes: Option<u64>,
+    mirror_bytes: u64,
 }
 
 impl Case {
@@ -132,13 +140,19 @@ impl Case {
                 None => Json::Null,
             },
         );
-        // Fleet-only keys: emitted only when measured, so non-fleet
-        // cases keep their exact v2 shape.
-        if let Some(rss) = self.rss_kb {
-            m.insert("rss_kb".into(), Json::Num(rss as f64));
-        }
-        if let Some(b) = self.mirror_bytes {
-            m.insert("mirror_bytes".into(), Json::Num(b as f64));
+        // Fleet-only keys: always present on fleet cases (rss_kb is
+        // null when the probe has nothing to read — a masked /proc must
+        // not silently shrink the schema), absent elsewhere so
+        // non-fleet cases keep their exact v2 shape.
+        if let Some(fs) = &self.fleet {
+            m.insert(
+                "rss_kb".into(),
+                match fs.rss_kb {
+                    Some(rss) => Json::Num(rss as f64),
+                    None => Json::Null,
+                },
+            );
+            m.insert("mirror_bytes".into(), Json::Num(fs.mirror_bytes as f64));
         }
         Json::Obj(m)
     }
@@ -283,8 +297,7 @@ fn round_case(
         workers: n,
         allocs_per_round: apr,
         round_ns,
-        rss_kb: None,
-        mirror_bytes: None,
+        fleet: None,
     }
 }
 
@@ -315,8 +328,7 @@ fn compress_case(name: &str, c: &dyn Compressor, d: usize) -> Case {
         workers: 1,
         allocs_per_round: None,
         round_ns: None, // per-call latency, not a round loop
-        rss_kb: None,
-        mirror_bytes: None,
+        fleet: None,
     }
 }
 
@@ -358,8 +370,7 @@ fn pp_case(name: &str, participation: Option<f64>, rounds: usize) -> Case {
         workers: 20,
         allocs_per_round: None,
         round_ns,
-        rss_kb: None,
-        mirror_bytes: None,
+        fleet: None,
     }
 }
 
@@ -408,8 +419,7 @@ fn fleet_case(n_clients: usize, quick: bool) -> Result<Case> {
         workers: n_clients,
         allocs_per_round: None,
         round_ns: summarize_samples(out.round_ns),
-        rss_kb: out.rss_kb,
-        mirror_bytes: Some(out.mirror_bytes),
+        fleet: Some(FleetStats { rss_kb: out.rss_kb, mirror_bytes: out.mirror_bytes }),
     })
 }
 

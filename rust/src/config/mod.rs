@@ -372,6 +372,13 @@ pub struct RunSpec {
     /// `Threads` = exact legacy thread-per-connection loop). Not part of
     /// the fingerprint: the engines are bit-identical.
     pub master: MasterEngine,
+    /// Health monitor spec (`--health off|every:<r>[,...]`; off = the
+    /// exact legacy run). Like telemetry, excluded from the fingerprint:
+    /// monitoring never touches the trajectory.
+    pub health: crate::health::HealthSpec,
+    /// Live ops endpoint port (`--ops <port>`; None = no server).
+    /// Excluded from the fingerprint for the same reason.
+    pub ops: Option<u16>,
 }
 
 impl Default for RunSpec {
@@ -392,6 +399,8 @@ impl Default for RunSpec {
             blocks: BlocksSpec::Flat,
             sched: SchedSpec::default(),
             master: MasterEngine::Threads,
+            health: crate::health::HealthSpec::default(),
+            ops: None,
         }
     }
 }
@@ -426,6 +435,8 @@ impl RunSpec {
         s.blocks = BlocksSpec::from_args(args)?;
         s.sched = SchedSpec::from_args(args)?;
         s.master = MasterEngine::from_args(args)?;
+        s.health = crate::health::HealthSpec::from_args(args)?;
+        s.ops = args.get_parse("ops")?;
         Ok(s)
     }
 
@@ -701,6 +712,31 @@ mod tests {
         // Absent = legacy.
         let d = RunSpec::from_args(&cli::Args::from_vec(vec![])).unwrap();
         assert_eq!(d.master, MasterEngine::Threads);
+    }
+
+    #[test]
+    fn health_and_ops_parse_and_stay_out_of_the_fingerprint() {
+        // Absent = off = exact legacy run.
+        let d = RunSpec::from_args(&cli::Args::from_vec(vec![])).unwrap();
+        assert!(d.health.is_off());
+        assert_eq!(d.ops, None);
+        let s = RunSpec::from_args(&cli::Args::from_vec(vec![
+            "--health".into(),
+            "every:5,window:4".into(),
+            "--ops".into(),
+            "9200".into(),
+        ]))
+        .unwrap();
+        assert_eq!((s.health.every, s.health.window), (5, 4));
+        assert_eq!(s.ops, Some(9200));
+        // Monitoring never touches the trajectory, so checkpoints move
+        // freely between health-on and health-off runs.
+        assert_eq!(d.fingerprint(100, "sim"), s.fingerprint(100, "sim"));
+        assert!(RunSpec::from_args(&cli::Args::from_vec(vec![
+            "--health".into(),
+            "every:zero".into(),
+        ]))
+        .is_err());
     }
 
     #[test]

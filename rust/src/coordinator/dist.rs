@@ -97,11 +97,16 @@ fn split_msg_by_blocks(c: &Compressed, layout: &BlockLayout, loss: f64) -> Vec<F
 /// Frame bytes on both directions go through per-connection reusable
 /// buffers (`recv_into` / `encode_into`), so sustained rounds stop
 /// churning frame allocations.
+/// With `health` on, every uplink piggybacks the worker's distortion
+/// probe `||g_i - grad f_i||^2` (8 bytes, flagged in the kind byte) and
+/// block-splitting is skipped so the probe rides one whole `Up` frame —
+/// the trajectory is unchanged either way.
 pub(crate) fn worker_loop(
     mut worker: Box<dyn WorkerNode>,
     conn: &mut dyn Conn,
     up_blocks: Option<Arc<BlockLayout>>,
     w: usize,
+    health: bool,
 ) -> Result<()> {
     let mut first = true;
     let mut cached: Option<Vec<f64>> = None;
@@ -160,13 +165,14 @@ pub(crate) fn worker_loop(
         };
         round_span.end();
         let loss = worker.last_loss();
-        let splittable = match (&up_blocks, &msg) {
-            // Only the standard sparse encoding has a per-entry-additive
-            // cost; anything else (sign, dense-init, tagged EF21+) goes
-            // up whole.
-            (Some(_), WireMsg::Sparse(c)) => c.bits == c.sparse.standard_bits(),
-            _ => false,
-        };
+        let splittable = !health
+            && match (&up_blocks, &msg) {
+                // Only the standard sparse encoding has a per-entry-additive
+                // cost; anything else (sign, dense-init, tagged EF21+) goes
+                // up whole.
+                (Some(_), WireMsg::Sparse(c)) => c.bits == c.sparse.standard_bits(),
+                _ => false,
+            };
         let send_span = telemetry::span_arg("dist.worker.send", "w", w as u64);
         if splittable {
             let layout = up_blocks.as_ref().expect("splittable implies layout");
@@ -176,7 +182,9 @@ pub(crate) fn worker_loop(
                 conn.send(&tx_buf)?;
             }
         } else {
-            encode_into(&Frame::Up { msg, loss }, &mut tx_buf);
+            let probe =
+                if health { Some(worker.distortion_sq().unwrap_or(f64::NAN)) } else { None };
+            encode_into(&Frame::Up { msg, loss, health: probe }, &mut tx_buf);
             conn.send(&tx_buf)?;
         }
         send_span.end();
@@ -186,12 +194,17 @@ pub(crate) fn worker_loop(
 /// Reassemble one worker's uplink: either a single `Up` frame or a run
 /// of `UpBlock` frames (block order), concatenated back into one
 /// message with summed bits. `raw` is the caller's reusable receive
-/// buffer.
-fn recv_worker_msg(c: &mut dyn Conn, raw: &mut Vec<u8>) -> Result<(WireMsg, f64, u64)> {
+/// buffer. The fourth element is the piggybacked health probe (`None`
+/// unless the worker runs with health on — blocked uplinks never carry
+/// one).
+fn recv_worker_msg(
+    c: &mut dyn Conn,
+    raw: &mut Vec<u8>,
+) -> Result<(WireMsg, f64, u64, Option<f64>)> {
     c.recv_into(raw)?;
     let mut bytes = raw.len() as u64;
     match decode(raw)? {
-        Frame::Up { msg, loss } => Ok((msg, loss, bytes)),
+        Frame::Up { msg, loss, health } => Ok((msg, loss, bytes, health)),
         Frame::UpBlock { block, n_blocks, msg, loss } => {
             ensure!(block == 0, "blocked uplink must start at block 0, got {block}");
             let mut idx: Vec<u32> = Vec::new();
@@ -239,7 +252,7 @@ fn recv_worker_msg(c: &mut dyn Conn, raw: &mut Vec<u8>) -> Result<(WireMsg, f64,
             // concatenation is globally sorted — the reassembled message
             // equals the worker's original one, bits included.
             let sparse = SparseVec::new(idx, val);
-            Ok((WireMsg::Sparse(Compressed { sparse, bits }), loss, bytes))
+            Ok((WireMsg::Sparse(Compressed { sparse, bits }), loss, bytes, None))
         }
         _ => bail!("master expected an uplink frame"),
     }
@@ -250,20 +263,32 @@ fn recv_worker_msg(c: &mut dyn Conn, raw: &mut Vec<u8>) -> Result<(WireMsg, f64,
 /// is off) feeds each worker's arrival latency — round start to that
 /// worker's uplink fully received — into its
 /// `coordinator.worker.round.ns.w<i>` histogram, so master-side
-/// stragglers dominate the per-worker tails.
+/// stragglers dominate the per-worker tails. `healths` (health-on runs
+/// only) is cleared and refilled with each worker's piggybacked
+/// distortion probe, NaN where a frame carried none.
 fn gather(
     conns: &mut [Box<dyn Conn>],
     d: usize,
     rx_buf: &mut Vec<u8>,
     round_start: Option<std::time::Instant>,
+    healths: Option<&mut Vec<(f64, f64)>>,
 ) -> Result<(Vec<WireMsg>, Vec<f64>, u64)> {
     let mut msgs = Vec::with_capacity(conns.len());
     let mut losses = Vec::with_capacity(conns.len());
     let mut bytes = 0u64;
+    let mut healths = healths;
+    if let Some(h) = healths.as_deref_mut() {
+        h.clear();
+    }
     for (w, c) in conns.iter_mut().enumerate() {
         let recv_span = telemetry::span_arg("dist.recv", "w", w as u64);
-        let (msg, loss, b) = recv_worker_msg(c.as_mut(), rx_buf)?;
+        let (msg, loss, b, probe) = recv_worker_msg(c.as_mut(), rx_buf)?;
         recv_span.end();
+        if let Some(h) = healths.as_deref_mut() {
+            // ref_sq never travels the wire: NaN keeps the contraction
+            // rule inactive while G^t stays exact.
+            h.push((probe.unwrap_or(f64::NAN), f64::NAN));
+        }
         telemetry::record_worker_round_ns(w, round_start);
         // Indices are sorted (decode + reassembly enforce it), so one
         // upper-bound check keeps a malformed peer from panicking the
@@ -529,11 +554,18 @@ where
     };
     telemetry::gauge(keys::BLOCKS).set(downlink.layout().n_blocks() as f64);
 
+    // Health monitor (off = None = zero work): workers piggyback their
+    // distortion probe on the uplink; ref_sq stays worker-local, so the
+    // contraction rule is inactive on this path (ratio_max NaN).
+    let mut health = opts.health.clone().map(|hc| crate::health::Health::new(hc, label));
+    let health_on = health.is_some();
+    let mut probes: Vec<(f64, f64)> = Vec::new();
+
     // Wire up transports and spawn worker threads.
     let blocks = up_blocks.clone();
     let mk = make_worker.clone();
     let run_worker: RunWorker =
-        Arc::new(move |i, mut conn| worker_loop(mk(i), &mut *conn, blocks.clone(), i));
+        Arc::new(move |i, mut conn| worker_loop(mk(i), &mut *conn, blocks.clone(), i, health_on));
     let (mut master_conns, handles) = wire_transport(kind, n_workers, run_worker, false)?;
 
     let n = n_workers as f64;
@@ -592,7 +624,7 @@ where
             // Init phase.
             let x0 = master.x().to_vec();
             down_bytes += send_model(&mut master_conns, &mut downlink, &x0, &mut bcast_buf)?;
-            let (msgs, _losses, fb) = gather(&mut master_conns, dim, &mut rx_buf, None)?;
+            let (msgs, _losses, fb) = gather(&mut master_conns, dim, &mut rx_buf, None, None)?;
             frame_bytes += fb;
             let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
             bits_cum += init_bits;
@@ -635,7 +667,25 @@ where
         down_bytes += send_model(&mut master_conns, &mut downlink, &x, &mut bcast_buf)?;
         bcast_span.end();
         let gather_span = telemetry::span("round.gather");
-        let (msgs, losses, fb) = gather(&mut master_conns, dim, &mut rx_buf, t_round)?;
+        let want_probes = health.as_ref().is_some_and(|h| h.due(t));
+        let gathered = gather(
+            &mut master_conns,
+            dim,
+            &mut rx_buf,
+            t_round,
+            if want_probes { Some(&mut probes) } else { None },
+        );
+        let (msgs, losses, fb) = match gathered {
+            Ok(v) => v,
+            Err(e) => {
+                // A dead/errored worker surfaces here: capture the flight
+                // recorder before propagating.
+                if let Some(h) = &health {
+                    h.dump_blackbox("worker_error", t);
+                }
+                return Err(e);
+            }
+        };
         gather_span.end();
         frame_bytes += fb;
         let round_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
@@ -657,6 +707,17 @@ where
             gt: f64::NAN,
             dcgd_frac: f64::NAN,
         });
+        if let Some(h) = health.as_mut() {
+            if want_probes {
+                let hspan = telemetry::span("round.health");
+                let anomalies = h.observe(t, loss, &probes);
+                hspan.end();
+                if !anomalies.is_empty() {
+                    h.dump_blackbox("anomaly", t);
+                }
+            }
+            h.record_round(history.records.last().expect("just pushed"));
+        }
 
         // End-of-round snapshot: round t is fully absorbed and recorded,
         // so a resume starts cleanly at t+1. The exchange is in-band —
@@ -733,8 +794,16 @@ fn worker_loop_sched(
     w: usize,
     rounds: usize,
     ckpt: SchedCkpt,
+    health: bool,
 ) -> Result<()> {
     let mut conn = FaultConn::new(conn);
+    let probe = |worker: &dyn WorkerNode| {
+        if health {
+            Some(worker.distortion_sq().unwrap_or(f64::NAN))
+        } else {
+            None
+        }
+    };
     if ckpt.start == 0 {
         // Init runs on every worker — participation sampling starts at
         // round 0.
@@ -745,7 +814,8 @@ fn worker_loop_sched(
         };
         let msg = worker.init(&x);
         let loss = worker.last_loss();
-        conn.send(&encode(&Frame::Up { msg, loss }))?;
+        let health = probe(worker.as_ref());
+        conn.send(&encode(&Frame::Up { msg, loss, health }))?;
     } else {
         // Resumed run: the Restore push replaces init entirely. The model
         // image is unused on this path — scheduling is dense, so every
@@ -776,8 +846,9 @@ fn worker_loop_sched(
             };
             let msg = worker.round(&x);
             let loss = worker.last_loss();
+            let health = probe(worker.as_ref());
             conn.arm(plan.delay_ms[w], plan.dup[w]);
-            conn.send(&encode(&Frame::Up { msg, loss }))?;
+            conn.send(&encode(&Frame::Up { msg, loss, health }))?;
         }
         // Checkpoint barrier (all workers, participants or not).
         if ckpt.every.is_some_and(|e| (t + 1) % e == 0) {
@@ -920,10 +991,18 @@ where
         start: opts.resume.as_ref().map_or(0, |ck| ck.next_round),
         every: opts.save.as_ref().map(|s| s.every),
     };
+    // Health monitor (off = None = zero work). Absent workers send no
+    // uplink, so their probe slot stays NaN and G^t averages only the
+    // round's participants.
+    let mut health = opts.health.clone().map(|hc| crate::health::Health::new(hc, label));
+    let health_on = health.is_some();
+    let mut probes: Vec<(f64, f64)> = Vec::new();
+
     let sched_w = sched.clone();
     let mk = make_worker.clone();
-    let run_worker: RunWorker =
-        Arc::new(move |i, conn| worker_loop_sched(mk(i), conn, &sched_w, i, rounds, wc));
+    let run_worker: RunWorker = Arc::new(move |i, conn| {
+        worker_loop_sched(mk(i), conn, &sched_w, i, rounds, wc, health_on)
+    });
     let (mut master_conns, handles) =
         wire_transport(kind, n_workers, run_worker, kind == TransportKind::Tcp)?;
 
@@ -952,7 +1031,7 @@ where
             let sent0 = bytes.len() as u64 * n_workers as u64;
             telemetry::counter(keys::DOWNLINK_FRAME_BYTES).incr(sent0);
             down_bytes += sent0;
-            let (msgs, losses, fb) = gather(&mut master_conns, d, &mut rx_buf, None)?;
+            let (msgs, losses, fb) = gather(&mut master_conns, d, &mut rx_buf, None, None)?;
             last_loss.copy_from_slice(&losses);
             frame_bytes += fb;
             let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
@@ -1010,6 +1089,11 @@ where
         // as a crashed master would — but stop and join the workers
         // first so the process shuts down cleanly.
         if sched.kill_master_at(t) {
+            // Capture the flight recorder before the abort: this IS the
+            // crash the blackbox exists for.
+            if let Some(h) = &health {
+                h.dump_blackbox("killmaster", t);
+            }
             let stop = encode(&Frame::Stop);
             for c in master_conns.iter_mut() {
                 c.send(&stop)?;
@@ -1053,37 +1137,56 @@ where
         // measured master-side, round start → uplink fully received, so
         // straggler sleep injected by the fault plan lands in the tail.
         let gather_span = telemetry::span("round.gather");
+        let want_probes = health.as_ref().is_some_and(|h| h.due(t));
+        if want_probes {
+            probes.clear();
+            probes.resize(n_workers, (f64::NAN, f64::NAN));
+        }
         let mut msgs: Vec<WireMsg> = Vec::with_capacity(n_workers);
         let mut round_bits = 0u64;
         let mut fb = 0u64;
-        for (w, conn) in master_conns.iter_mut().enumerate() {
-            if !plan.active[w] {
-                msgs.push(absent_template.clone());
-                continue;
+        let gathered: Result<()> = (|| {
+            for (w, conn) in master_conns.iter_mut().enumerate() {
+                if !plan.active[w] {
+                    msgs.push(absent_template.clone());
+                    continue;
+                }
+                let recv_span = telemetry::span_arg("dist.recv", "w", w as u64);
+                let raw = conn.recv()?;
+                fb += raw.len() as u64;
+                let (msg, loss, probe) = match decode(&raw)? {
+                    Frame::Up { msg, loss, health } => (msg, loss, health),
+                    _ => bail!("master expected an Up frame from worker {w}"),
+                };
+                if plan.dup[w] {
+                    let raw2 = conn.recv()?;
+                    fb += raw2.len() as u64;
+                    ensure!(raw2 == raw, "duplicated uplink frame mismatch from worker {w}");
+                }
+                recv_span.end();
+                telemetry::record_worker_round_ns(w, t_round);
+                if let Some(&last) = msg.payload().sparse.idx.last() {
+                    ensure!(
+                        (last as usize) < d,
+                        "uplink index {last} out of range for model dim {d}"
+                    );
+                }
+                if want_probes {
+                    probes[w].0 = probe.unwrap_or(f64::NAN);
+                }
+                last_loss[w] = loss;
+                round_bits += msg.bits();
+                msgs.push(msg);
             }
-            let recv_span = telemetry::span_arg("dist.recv", "w", w as u64);
-            let raw = conn.recv()?;
-            fb += raw.len() as u64;
-            let (msg, loss) = match decode(&raw)? {
-                Frame::Up { msg, loss } => (msg, loss),
-                _ => bail!("master expected an Up frame from worker {w}"),
-            };
-            if plan.dup[w] {
-                let raw2 = conn.recv()?;
-                fb += raw2.len() as u64;
-                ensure!(raw2 == raw, "duplicated uplink frame mismatch from worker {w}");
+            Ok(())
+        })();
+        if let Err(e) = gathered {
+            // A dead/errored worker surfaces here: capture the flight
+            // recorder before propagating.
+            if let Some(h) = &health {
+                h.dump_blackbox("worker_error", t);
             }
-            recv_span.end();
-            telemetry::record_worker_round_ns(w, t_round);
-            if let Some(&last) = msg.payload().sparse.idx.last() {
-                ensure!(
-                    (last as usize) < d,
-                    "uplink index {last} out of range for model dim {d}"
-                );
-            }
-            last_loss[w] = loss;
-            round_bits += msg.bits();
-            msgs.push(msg);
+            return Err(e);
         }
         gather_span.end();
         bits_cum += round_bits;
@@ -1109,6 +1212,24 @@ where
             gt: f64::NAN,
             dcgd_frac: f64::NAN,
         });
+        if let Some(h) = health.as_mut() {
+            h.record_plan(t, &plan);
+            if want_probes {
+                let hspan = telemetry::span("round.health");
+                let anomalies = h.observe(t, loss, &probes);
+                if let Some(tr) = tracker.as_mut() {
+                    let digests = (0..n_workers)
+                        .map(|w| crate::health::blackbox::digest_f64(tr.mirror_dense(w)))
+                        .collect();
+                    h.record_worker_digests(t, digests);
+                }
+                hspan.end();
+                if !anomalies.is_empty() {
+                    h.dump_blackbox("anomaly", t);
+                }
+            }
+            h.record_round(history.records.last().expect("just pushed"));
+        }
 
         // End-of-round snapshot barrier: EVERY worker answers (cadence
         // derived from config on both sides), because an absent worker

@@ -29,6 +29,7 @@ use super::tree::{tree_reduce, MergedUplink};
 use crate::algo::WireMsg;
 use crate::ckpt::fnv1a64;
 use crate::compress::{Compressed, SparseVec};
+use crate::health::blackbox::{FlightRecorder, DEFAULT_RING};
 use crate::sched::StateTracker;
 use crate::util::linalg;
 use crate::util::rng::Rng;
@@ -57,6 +58,11 @@ pub struct FleetSpec {
     /// Absorb every uplink into sparse per-worker mirrors (the crash
     /// resync structure) — the memory-scaling claim under test.
     pub track_mirrors: bool,
+    /// Flight-recorder dump path (`ef21.blackbox/v1`). When set, the
+    /// master records per-round g/x digests and dumps the ring on a
+    /// shard failure; `None` (the default) records nothing — the bench
+    /// sweeps measure the untouched fast path.
+    pub blackbox: Option<std::path::PathBuf>,
 }
 
 impl FleetSpec {
@@ -71,6 +77,7 @@ impl FleetSpec {
             seed: 210_605_203, // arXiv 2106.05203
             gamma: 0.1,
             track_mirrors: true,
+            blackbox: None,
         }
     }
 }
@@ -132,6 +139,21 @@ pub fn dense_digest(v: &[f64]) -> u64 {
 struct ShardRound {
     merged: MergedUplink,
     mirror_bytes: u64,
+}
+
+/// Best-effort blackbox dump on a fleet failure path: reported on
+/// stderr, never propagated (the dump must not mask the shard error
+/// that triggered it). No-op unless `spec.blackbox` is set.
+fn dump_fleet_blackbox(spec: &FleetSpec, bb: Option<&FlightRecorder>, reason: &str, round: usize) {
+    if let (Some(path), Some(bb)) = (spec.blackbox.as_ref(), bb) {
+        match bb.dump(path, reason, round) {
+            Ok(bytes) => eprintln!(
+                "fleet: blackbox dumped to {} ({bytes} bytes, reason: {reason})",
+                path.display()
+            ),
+            Err(e) => eprintln!("fleet: blackbox dump to {} failed: {e:#}", path.display()),
+        }
+    }
 }
 
 /// Run one fleet sweep point. Shard threads own contiguous client
@@ -208,8 +230,11 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetOutcome> {
     let mut round_ns = Vec::with_capacity(spec.rounds);
     let mut entries_folded = 0u64;
     let mut mirror_bytes = 0u64;
+    let mut bb = spec.blackbox.as_ref().map(|_| FlightRecorder::new("fleet", DEFAULT_RING));
+    let mut last_round = 0usize;
     let t0 = std::time::Instant::now();
-    for _t in 0..spec.rounds {
+    for t in 0..spec.rounds {
+        last_round = t;
         let r0 = std::time::Instant::now();
         // Shard-order collection keeps worker order; the final merge
         // level interleaves the shard streams exactly as one flat merge
@@ -217,9 +242,13 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetOutcome> {
         let mut shard_streams = Vec::with_capacity(n_shards);
         mirror_bytes = 0;
         for (s, rx) in round_rxs.iter().enumerate() {
-            let sr = rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("fleet shard {s} exited early"))?;
+            let sr = match rx.recv() {
+                Ok(sr) => sr,
+                Err(_) => {
+                    dump_fleet_blackbox(spec, bb.as_ref(), "worker_error", t);
+                    anyhow::bail!("fleet shard {s} exited early");
+                }
+            };
             mirror_bytes += sr.mirror_bytes;
             shard_streams.push(sr.merged);
         }
@@ -229,15 +258,24 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetOutcome> {
         // The EF21 master step: x -= γ·g.
         linalg::axpy(-spec.gamma, &g, &mut x);
         round_ns.push(r0.elapsed().as_nanos() as u64);
+        if let Some(bb) = bb.as_mut() {
+            // The per-round postmortem trail: g/x trajectory digests,
+            // the same witnesses the determinism tests compare.
+            bb.record_worker_digests(t, vec![dense_digest(&g), dense_digest(&x)]);
+        }
     }
     let wall_ns = t0.elapsed().as_nanos() as u64;
     for (s, h) in handles.into_iter().enumerate() {
-        match h.join() {
-            Ok(r) => r.with_context(|| format!("fleet shard {s} failed"))?,
-            Err(p) => anyhow::bail!(
+        let failed = match h.join() {
+            Ok(r) => r.with_context(|| format!("fleet shard {s} failed")),
+            Err(p) => Err(anyhow::anyhow!(
                 "fleet shard {s} panicked: {}",
                 super::dist::panic_msg(&*p)
-            ),
+            )),
+        };
+        if let Err(e) = failed {
+            dump_fleet_blackbox(spec, bb.as_ref(), "worker_error", last_round);
+            return Err(e);
         }
     }
     Ok(FleetOutcome {
@@ -285,6 +323,7 @@ mod tests {
             seed: 11,
             gamma: 0.25,
             track_mirrors: false,
+            blackbox: None,
         };
         // Flat reference trajectory.
         let mut g = vec![0.0; base.d];
@@ -317,6 +356,7 @@ mod tests {
             seed: 5,
             gamma: 0.1,
             track_mirrors: true,
+            blackbox: None,
         };
         let out = run_fleet(&spec).unwrap();
         assert!(out.mirror_bytes > 0);
@@ -332,5 +372,33 @@ mod tests {
         let untracked = run_fleet(&FleetSpec { track_mirrors: false, ..spec }).unwrap();
         assert_eq!(out.g_digest, untracked.g_digest);
         assert_eq!(out.x_digest, untracked.x_digest);
+    }
+
+    /// The flight recorder is failure-triggered: on a clean run it
+    /// records digests in memory but writes nothing, and the trajectory
+    /// is bitwise unchanged by having it armed.
+    #[test]
+    fn blackbox_arming_is_invisible_on_a_clean_run() {
+        let dir = std::env::temp_dir().join(format!("ef21_fleet_bb_{}", std::process::id()));
+        let path = dir.join("bb.json");
+        std::fs::remove_file(&path).ok();
+        let base = FleetSpec {
+            n_clients: 21,
+            d: 64,
+            k: 2,
+            rounds: 3,
+            fanout: 4,
+            shards: 2,
+            seed: 9,
+            gamma: 0.2,
+            track_mirrors: false,
+            blackbox: None,
+        };
+        let plain = run_fleet(&base).unwrap();
+        let armed = run_fleet(&FleetSpec { blackbox: Some(path.clone()), ..base }).unwrap();
+        assert_eq!(plain.g_digest, armed.g_digest);
+        assert_eq!(plain.x_digest, armed.x_digest);
+        assert!(!path.exists(), "no dump on a clean run");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

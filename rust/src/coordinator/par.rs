@@ -89,6 +89,9 @@ enum Cmd {
     RoundSubset(Arc<Vec<f64>>, Arc<Vec<bool>>, RoundBufs),
     /// Snapshot per-worker instrumentation (recording rounds only).
     Observe,
+    /// Snapshot per-worker health scalars `(err_sq, ref_sq)` — cached
+    /// values only, no gradient copies (health-monitor rounds only).
+    Probe,
     /// Scheduler fault hooks, addressed by chunk-local worker index.
     Crash(usize),
     Resync(usize, Arc<Vec<f64>>),
@@ -114,6 +117,7 @@ enum Reply {
     /// the next round.
     Msgs(RoundBufs),
     Observed(Vec<Obs>),
+    Probed(Vec<(f64, f64)>),
     /// Crash/resync acknowledged (keeps the hooks synchronous, so a
     /// resync is visible before the round command that follows it).
     Ack,
@@ -199,6 +203,17 @@ fn pool_loop(
                     })
                     .collect(),
             ),
+            Cmd::Probe => Reply::Probed(
+                workers
+                    .iter()
+                    .map(|w| {
+                        (
+                            w.distortion_sq().unwrap_or(f64::NAN),
+                            w.contraction_ref_sq().unwrap_or(f64::NAN),
+                        )
+                    })
+                    .collect(),
+            ),
             Cmd::Crash(local) => {
                 workers[local].crash();
                 Reply::Ack
@@ -263,9 +278,7 @@ impl ParPool {
                     }
                     self.bufs[i] = Some(bufs);
                 }
-                Reply::Observed(_) | Reply::Ack => {
-                    unreachable!("mismatched reply to a round command")
-                }
+                _ => unreachable!("mismatched reply to a round command"),
             }
         }
         loss_sum
@@ -354,15 +367,26 @@ impl WorkerPool for ParPool {
         for (_, rx) in &self.chans {
             match rx.recv().expect("pool thread terminated early") {
                 Reply::Observed(chunk) => obs.extend(chunk),
-                Reply::Msgs(_) | Reply::Ack => {
-                    unreachable!("mismatched reply to an observe command")
-                }
+                _ => unreachable!("mismatched reply to an observe command"),
             }
         }
         runner::reduce_obs(
             self.n,
             obs.iter().map(|o| (o.loss, &o.grad[..], o.distortion_sq, o.dcgd_branch)),
         )
+    }
+
+    fn probe_health(&mut self, out: &mut Vec<(f64, f64)>) {
+        for (tx, _) in &self.chans {
+            tx.send(Cmd::Probe).expect("pool thread terminated early");
+        }
+        // Chunk (== worker) order, same as observe.
+        for (_, rx) in &self.chans {
+            match rx.recv().expect("pool thread terminated early") {
+                Reply::Probed(chunk) => out.extend(chunk),
+                _ => unreachable!("mismatched reply to a probe command"),
+            }
+        }
     }
 }
 

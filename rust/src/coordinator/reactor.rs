@@ -459,7 +459,7 @@ fn wire_reactor(
 /// while the master spends `n_shards` threads instead of `n_workers`.
 /// `n_shards == 0` picks a small default from the machine's parallelism.
 pub fn run_reactor<F>(
-    mut master: Box<dyn MasterNode>,
+    master: Box<dyn MasterNode>,
     n_workers: usize,
     make_worker: F,
     rounds: usize,
@@ -470,11 +470,35 @@ pub fn run_reactor<F>(
 where
     F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
 {
+    run_reactor_health(master, n_workers, make_worker, rounds, kind, label, n_shards, None)
+}
+
+/// [`run_reactor`] with an optional health monitor: workers piggyback
+/// their distortion probe on each uplink (8 bytes, see the codec), the
+/// master evaluates the paper's certificates on the monitor cadence,
+/// and the flight recorder dumps on anomaly or worker error. `None` is
+/// exactly [`run_reactor`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_reactor_health<F>(
+    mut master: Box<dyn MasterNode>,
+    n_workers: usize,
+    make_worker: F,
+    rounds: usize,
+    kind: TransportKind,
+    label: &str,
+    n_shards: usize,
+    health_cfg: Option<crate::health::HealthCfg>,
+) -> Result<DistOutcome>
+where
+    F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
+{
     assert!(n_workers >= 1);
     let n_shards = if n_shards == 0 { default_shards() } else { n_shards };
+    let mut health = health_cfg.map(|hc| crate::health::Health::new(hc, label));
+    let health_on = health.is_some();
     let make_worker = Arc::new(make_worker);
     let run_worker: RunWorker = Arc::new(move |i, mut conn| {
-        super::dist::worker_loop(make_worker(i), &mut *conn, None, i)
+        super::dist::worker_loop(make_worker(i), &mut *conn, None, i, health_on)
     });
     let (conns, handles) = wire_reactor(kind, n_workers, run_worker)?;
     let reactor = Reactor::spawn(conns, n_shards);
@@ -500,13 +524,21 @@ where
     };
 
     // Decode one round's frames in worker order and bound-check the
-    // indices — identical validation to the blocking gather path.
-    let decode_round = |frames: Vec<Vec<u8>>| -> Result<(Vec<WireMsg>, Vec<f64>)> {
+    // indices — identical validation to the blocking gather path. With
+    // `probes` set, each worker's piggybacked distortion probe fills its
+    // slot (ref_sq never travels the wire: NaN keeps the contraction
+    // rule inactive while G^t stays exact).
+    let decode_round = |frames: Vec<Vec<u8>>,
+                        mut probes: Option<&mut Vec<(f64, f64)>>|
+     -> Result<(Vec<WireMsg>, Vec<f64>)> {
+        if let Some(p) = probes.as_deref_mut() {
+            p.clear();
+        }
         let mut msgs = Vec::with_capacity(frames.len());
         let mut losses = Vec::with_capacity(frames.len());
         for (w, raw) in frames.iter().enumerate() {
-            let (msg, loss) = match decode(raw)? {
-                Frame::Up { msg, loss } => (msg, loss),
+            let (msg, loss, probe) = match decode(raw)? {
+                Frame::Up { msg, loss, health } => (msg, loss, health),
                 Frame::UpBlock { .. } => {
                     bail!("reactor speaks whole uplinks only (worker {w} sent UpBlock)")
                 }
@@ -518,18 +550,22 @@ where
                     "uplink index {last} out of range for model dim {d}"
                 );
             }
+            if let Some(p) = probes.as_deref_mut() {
+                p.push((probe.unwrap_or(f64::NAN), f64::NAN));
+            }
             msgs.push(msg);
             losses.push(loss);
         }
         Ok((msgs, losses))
     };
+    let mut probes: Vec<(f64, f64)> = Vec::new();
 
     // Init phase.
     let x0 = master.x().to_vec();
     down_bytes += send_model(&reactor, &mut downlink, &x0)?;
     let (frames, fb) = reactor.collect_round(n_workers, None)?;
     frame_bytes += fb;
-    let (msgs, _losses) = decode_round(frames)?;
+    let (msgs, _losses) = decode_round(frames, None)?;
     let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
     bits_cum += init_bits;
     telemetry::counter(keys::UPLINK_BITS).incr(init_bits);
@@ -544,8 +580,23 @@ where
         down_bytes += send_model(&reactor, &mut downlink, &x)?;
         bcast_span.end();
         let gather_span = telemetry::span("round.gather");
-        let (frames, fb) = reactor.collect_round(n_workers, t_round)?;
-        let (msgs, losses) = decode_round(frames)?;
+        let want_probes = health.as_ref().is_some_and(|h| h.due(t));
+        let gathered = reactor.collect_round(n_workers, t_round).and_then(|(frames, fb)| {
+            let (msgs, losses) =
+                decode_round(frames, if want_probes { Some(&mut probes) } else { None })?;
+            Ok((msgs, losses, fb))
+        });
+        let (msgs, losses, fb) = match gathered {
+            Ok(v) => v,
+            Err(e) => {
+                // A dead/errored worker surfaces here: capture the flight
+                // recorder before propagating.
+                if let Some(h) = &health {
+                    h.dump_blackbox("worker_error", t);
+                }
+                return Err(e);
+            }
+        };
         gather_span.end();
         frame_bytes += fb;
         let round_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
@@ -567,6 +618,17 @@ where
             gt: f64::NAN,
             dcgd_frac: f64::NAN,
         });
+        if let Some(h) = health.as_mut() {
+            if want_probes {
+                let hspan = telemetry::span("round.health");
+                let anomalies = h.observe(t, loss, &probes);
+                hspan.end();
+                if !anomalies.is_empty() {
+                    h.dump_blackbox("anomaly", t);
+                }
+            }
+            h.record_round(history.records.last().expect("just pushed"));
+        }
     }
 
     history.downlink_bits = downlink.bits();

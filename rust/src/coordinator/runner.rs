@@ -107,6 +107,13 @@ pub struct CkptOptions {
     /// Run identity stamped into snapshots and verified on resume.
     /// Defaults to the run label when unset.
     pub fingerprint: Option<String>,
+    /// Theory-grounded health monitor + flight recorder (DESIGN.md §12).
+    /// `None` (the default) is the exact legacy behavior: the round loop
+    /// does no health work at all — not even an allocation — so the
+    /// golden/differential harness and the zero-alloc gate cannot see
+    /// it. Like telemetry, health is excluded from run fingerprints: a
+    /// checkpoint moves freely between health-on and health-off runs.
+    pub health: Option<crate::health::HealthCfg>,
 }
 
 impl CkptOptions {
@@ -120,6 +127,11 @@ impl CkptOptions {
 
     pub fn with_fingerprint(mut self, fp: impl Into<String>) -> Self {
         self.fingerprint = Some(fp.into());
+        self
+    }
+
+    pub fn with_health(mut self, health: Option<crate::health::HealthCfg>) -> Self {
+        self.health = health;
         self
     }
 }
@@ -150,6 +162,13 @@ pub(crate) trait WorkerPool {
     /// dcgd_frac)`; implementations MUST reduce via [`reduce_obs`] so
     /// both runners perform identical f64 arithmetic.
     fn observe(&mut self) -> (f64, f64, f64, f64);
+
+    /// Per-worker health probe, pushed onto `out` in worker order:
+    /// `(err_sq, ref_sq)` = ([`WorkerNode::distortion_sq`],
+    /// [`WorkerNode::contraction_ref_sq`]), NaN where the algorithm
+    /// exposes neither. Reads cached instrumentation only — no oracle
+    /// work — and is only called on health-monitor rounds.
+    fn probe_health(&mut self, out: &mut Vec<(f64, f64)>);
 
     // -- scheduler operations (partial participation & fault model) --
 
@@ -253,6 +272,15 @@ impl WorkerPool for SeqPool {
                 .iter()
                 .map(|w| (w.last_loss(), w.last_grad(), w.distortion_sq(), w.used_dcgd_branch())),
         )
+    }
+
+    fn probe_health(&mut self, out: &mut Vec<(f64, f64)>) {
+        for w in &self.workers {
+            out.push((
+                w.distortion_sq().unwrap_or(f64::NAN),
+                w.contraction_ref_sq().unwrap_or(f64::NAN),
+            ));
+        }
     }
 
     fn round_subset(&mut self, x: &Arc<Vec<f64>>, active: &[bool], msgs: &mut Vec<WireMsg>) -> f64 {
@@ -372,6 +400,11 @@ pub(crate) fn drive<P: WorkerPool>(
     let mut history = History::new(cfg.label.clone());
     let mut bits_cum: u64 = 0;
 
+    // Health monitor + flight recorder (None = zero work, zero allocs).
+    let mut health = opts.health.clone().map(|hc| crate::health::Health::new(hc, &cfg.label));
+    // Probe scratch: Vec::new() allocates nothing until health pushes.
+    let mut probe: Vec<(f64, f64)> = Vec::new();
+
     // Downlink meter: dense accounting for flat layouts, f32-floor
     // block-delta accounting for blocked ones. Metering only — the
     // broadcast the workers actually see is unchanged.
@@ -479,6 +512,9 @@ pub(crate) fn drive<P: WorkerPool>(
         // resume from the last snapshot replays round t from scratch.
         if let Some(s) = sched {
             if s.kill_master_at(t) {
+                if let Some(h) = health.as_ref() {
+                    h.dump_blackbox("killmaster", t);
+                }
                 bail!("fault plan: master killed at round {t} (killmaster@{t})");
             }
         }
@@ -531,6 +567,9 @@ pub(crate) fn drive<P: WorkerPool>(
                     .map(|(m, _)| m.bits())
                     .sum::<u64>();
                 plan.record_telemetry();
+                if let Some(h) = health.as_mut() {
+                    h.record_plan(t, &plan);
+                }
                 if let Some(tr) = tracker.as_mut() {
                     tr.absorb_round(&msgs)?;
                 }
@@ -548,25 +587,50 @@ pub(crate) fn drive<P: WorkerPool>(
         round_span.end();
 
         let record_now = t % cfg.record_every == 0 || t + 1 == cfg.rounds;
+        let health_due = health.as_ref().is_some_and(|h| h.due(t));
         // Cheap every-round divergence check on the cached worker losses.
         let mean_loss = loss_sum / n;
         let diverged = !mean_loss.is_finite() || mean_loss.abs() > cfg.divergence_cap;
-        if record_now || diverged || cfg.grad_tol.is_some() {
+        if record_now || diverged || cfg.grad_tol.is_some() || health_due {
             let observe_span = telemetry::span("round.observe");
             let (loss, grad_sq, gt, dcgd) = pool.observe();
             observe_span.end();
+            if health_due {
+                let h = health.as_mut().unwrap();
+                let health_span = telemetry::span("round.health");
+                probe.clear();
+                pool.probe_health(&mut probe);
+                let anomalies = h.observe(t, loss, &probe);
+                if let Some(tr) = tracker.as_mut() {
+                    let digests = (0..probe.len())
+                        .map(|w| crate::health::blackbox::digest_f64(tr.mirror_dense(w)))
+                        .collect();
+                    h.record_worker_digests(t, digests);
+                }
+                health_span.end();
+                if !anomalies.is_empty() {
+                    h.dump_blackbox("anomaly", t);
+                }
+            }
             if record_now || diverged {
-                history.records.push(RoundRecord {
+                let rec = RoundRecord {
                     round: t,
                     bits_per_client: bits_cum as f64 / n,
                     loss,
                     grad_norm_sq: grad_sq,
                     gt,
                     dcgd_frac: dcgd,
-                });
+                };
+                if let Some(h) = health.as_mut() {
+                    h.record_round(&rec);
+                }
+                history.records.push(rec);
             }
             if diverged {
                 telemetry::counter(keys::DIVERGENCE_ABORTS).incr(1);
+                if let Some(h) = health.as_ref() {
+                    h.dump_blackbox("divergence", t);
+                }
                 break;
             }
             if let Some(tol) = cfg.grad_tol {

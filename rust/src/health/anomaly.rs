@@ -1,0 +1,341 @@
+//! Pure-function anomaly rules over a sliding window of
+//! [`HealthRecord`]s. No I/O, no clocks, no globals: `detect` is a
+//! function of (rules, window) evaluated at the newest record, which
+//! makes every rule property-testable on synthetic G^t/Φ^t sequences.
+
+use super::HealthRecord;
+
+/// What went wrong. Each kind maps to one rule in [`detect`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AnomalyKind {
+    /// Windowed-average contraction ratio exceeded Eq. 3's (1−α) bound.
+    /// Averaged because rand-k style compressors only contract in
+    /// expectation; deterministic top-k violates per-round long before
+    /// the average trips.
+    ContractionViolation,
+    /// Φ^t rose beyond tolerance — Theorem 1 descent broken.
+    LyapunovIncrease,
+    /// A full window of observations with no meaningful Φ descent while
+    /// G^t is still far from zero (converged runs have tiny G and are
+    /// exempt).
+    StalledDescent,
+    /// One worker's G contribution dwarfs the fleet median — a bad
+    /// shard, broken compressor state, or desynced mirror.
+    WorkerOutlier,
+}
+
+impl AnomalyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AnomalyKind::ContractionViolation => "contraction_violation",
+            AnomalyKind::LyapunovIncrease => "lyapunov_increase",
+            AnomalyKind::StalledDescent => "stalled_descent",
+            AnomalyKind::WorkerOutlier => "worker_outlier",
+        }
+    }
+}
+
+/// One raised event, attributed to the round it was detected at.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Anomaly {
+    pub kind: AnomalyKind,
+    pub round: usize,
+    pub detail: String,
+}
+
+/// Rule thresholds. `contraction_bound` and `window` come from the
+/// health config; the rest have conservative defaults tuned so a clean
+/// EF21 run at the Theorem 1 stepsize raises nothing.
+#[derive(Clone, Debug)]
+pub struct Rules {
+    /// Eq. 3's (1−α): E‖C(v)−v‖² ≤ (1−α)‖v‖².
+    pub contraction_bound: f64,
+    /// Relative tolerance (numerical slack) for the Φ rules and the
+    /// contraction margin.
+    pub tol: f64,
+    /// Window length the windowed rules need filled before firing.
+    pub window: usize,
+    /// WorkerOutlier fires when err_sq > outlier_factor × median.
+    pub outlier_factor: f64,
+    /// G floor below which Stalled/Outlier are exempt (converged run).
+    pub g_floor: f64,
+}
+
+impl Default for Rules {
+    fn default() -> Self {
+        Rules {
+            contraction_bound: 1.0,
+            tol: 1e-6,
+            window: 8,
+            outlier_factor: 50.0,
+            g_floor: 1e-10,
+        }
+    }
+}
+
+/// Evaluate all rules at the NEWEST record of `window` (oldest-first
+/// slice). Windowed rules stay silent until the window is full; this is
+/// called once per observation, so each returned anomaly is a fresh
+/// event for that round.
+pub fn detect(rules: &Rules, window: &[HealthRecord]) -> Vec<Anomaly> {
+    let mut out = Vec::new();
+    let newest = match window.last() {
+        Some(r) => r,
+        None => return out,
+    };
+    let round = newest.round;
+
+    // 1. Contraction-bound violation: mean of the per-round worst-case
+    // ratios over a full window exceeds (1−α)(1+tol).
+    if window.len() >= rules.window {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for r in window {
+            if r.ratio_max.is_finite() {
+                sum += r.ratio_max;
+                n += 1;
+            }
+        }
+        if n >= rules.window {
+            let mean = sum / n as f64;
+            let bound = rules.contraction_bound * (1.0 + rules.tol);
+            if mean > bound {
+                out.push(Anomaly {
+                    kind: AnomalyKind::ContractionViolation,
+                    round,
+                    detail: format!(
+                        "windowed mean contraction ratio {mean:.6e} > (1-alpha) bound {:.6e} \
+                         over {n} rounds",
+                        rules.contraction_bound
+                    ),
+                });
+            }
+        }
+    }
+
+    // 2. Lyapunov increase: Φ rose beyond tolerance this observation.
+    if newest.phi_delta.is_finite() && newest.phi.is_finite() {
+        let prev_phi = newest.phi - newest.phi_delta;
+        let slack = rules.tol * prev_phi.abs().max(1.0);
+        if newest.phi_delta > slack {
+            out.push(Anomaly {
+                kind: AnomalyKind::LyapunovIncrease,
+                round,
+                detail: format!(
+                    "phi rose {prev_phi:.6e} -> {:.6e} (delta {:+.6e} > slack {slack:.3e})",
+                    newest.phi, newest.phi_delta
+                ),
+            });
+        }
+    }
+
+    // 3. Stalled descent: a full window of deltas, none a meaningful
+    // decrease, while G says we are far from a stationary point. The
+    // G guard keeps converged plateaus (tiny G, tiny deltas) quiet.
+    if window.len() >= rules.window && newest.gt.is_finite() && newest.gt > rules.g_floor {
+        let deltas: Vec<f64> =
+            window.iter().map(|r| r.phi_delta).filter(|d| d.is_finite()).collect();
+        if deltas.len() >= rules.window - 1 {
+            let scale = rules.tol * newest.phi.abs().max(1.0);
+            if deltas.iter().all(|&d| d >= -scale) {
+                out.push(Anomaly {
+                    kind: AnomalyKind::StalledDescent,
+                    round,
+                    detail: format!(
+                        "no phi descent over last {} observations (G^t = {:.3e} still above \
+                         floor {:.1e})",
+                        deltas.len(),
+                        newest.gt,
+                        rules.g_floor
+                    ),
+                });
+            }
+        }
+    }
+
+    // 4. Per-worker outlier G contribution. Needs enough workers for a
+    // median to mean anything.
+    let mut finite: Vec<f64> = newest.worker_g.iter().copied().filter(|g| g.is_finite()).collect();
+    if finite.len() >= 4 {
+        finite.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = finite[finite.len() / 2];
+        if median > rules.g_floor {
+            for (w, &g) in newest.worker_g.iter().enumerate() {
+                if g.is_finite() && g > rules.outlier_factor * median {
+                    out.push(Anomaly {
+                        kind: AnomalyKind::WorkerOutlier,
+                        round,
+                        detail: format!(
+                            "worker {w} err_sq {g:.3e} > {}x fleet median {median:.3e}",
+                            rules.outlier_factor
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Synthesize one health record; ratios/worker_g default healthy.
+    fn rec(round: usize, phi: f64, phi_delta: f64, gt: f64, ratio: f64) -> HealthRecord {
+        HealthRecord {
+            round,
+            loss: phi - gt,
+            gt,
+            phi,
+            phi_delta,
+            ratio_max: ratio,
+            worker_g: vec![gt; 4],
+        }
+    }
+
+    fn rules() -> Rules {
+        // alpha = 0.25 -> bound 0.75, window 4 to keep tests short.
+        Rules { contraction_bound: 0.75, window: 4, ..Rules::default() }
+    }
+
+    /// Build the window a monitor would hold after feeding `seq`
+    /// (keeps the last `window` records) and detect at the newest.
+    fn detect_tail(r: &Rules, seq: &[HealthRecord]) -> Vec<Anomaly> {
+        let start = seq.len().saturating_sub(r.window);
+        detect(r, &seq[start..])
+    }
+
+    /// Property: a clean EF21 trajectory — Φ strictly decreasing, ratios
+    /// under the bound, balanced workers — raises zero anomalies at
+    /// every step, across many randomized decay profiles.
+    #[test]
+    fn clean_ef21_sequences_raise_nothing() {
+        let r = rules();
+        for seed in 0..50u64 {
+            let mut rng = Rng::seed(seed + 1);
+            let mut phi = 10.0 * (1.0 + rng.next_f64());
+            let mut gt = 1.0;
+            let mut seq = Vec::new();
+            for t in 0..30 {
+                // Geometric-ish decay with random per-round factors,
+                // ratios spread anywhere inside the contraction bound.
+                let decay = 0.80 + 0.15 * rng.next_f64();
+                let new_phi = phi * decay;
+                let delta = if t == 0 { f64::NAN } else { new_phi - phi };
+                phi = new_phi;
+                gt *= decay;
+                let ratio = r.contraction_bound * rng.next_f64() * 0.99;
+                seq.push(rec(t, phi, delta, gt, ratio));
+                let found = detect_tail(&r, &seq);
+                assert!(found.is_empty(), "seed {seed} round {t}: {found:?}");
+            }
+        }
+    }
+
+    /// Property: injecting a sustained contraction violation into an
+    /// otherwise-clean run raises exactly ContractionViolation — no
+    /// other kind — once the window fills with bad ratios. Fixed ratios
+    /// keep the first-fire round exact: with clean = 0.1×bound and
+    /// bad = 1.2×bound, a window of (1 clean + 3 bad) averages
+    /// 0.925×bound — under the bound — so the rule first trips when the
+    /// window holds only bad rounds.
+    #[test]
+    fn injected_contraction_violation_raises_exactly_that() {
+        let r = rules();
+        let mut phi = 5.0;
+        let mut seq = Vec::new();
+        let mut fired_at = None;
+        for t in 0..20 {
+            let new_phi = phi * 0.9;
+            let delta = if t == 0 { f64::NAN } else { new_phi - phi };
+            phi = new_phi;
+            let ratio =
+                if t >= 8 { r.contraction_bound * 1.2 } else { r.contraction_bound * 0.1 };
+            seq.push(rec(t, phi, delta, 0.5, ratio));
+            let found = detect_tail(&r, &seq);
+            if t < 8 + r.window - 1 {
+                // Window not yet saturated with violating rounds.
+                assert!(found.is_empty(), "round {t}: early fire {found:?}");
+            } else {
+                assert!(!found.is_empty(), "round {t}: should fire");
+                for a in &found {
+                    assert_eq!(a.kind, AnomalyKind::ContractionViolation, "round {t}");
+                }
+                fired_at.get_or_insert(t);
+            }
+        }
+        // Fires exactly when the window first fills with violations.
+        assert_eq!(fired_at, Some(8 + r.window - 1));
+    }
+
+    #[test]
+    fn lyapunov_increase_fires_on_phi_spike_only() {
+        let r = rules();
+        let mut seq = vec![
+            rec(0, 5.0, f64::NAN, 0.5, 0.3),
+            rec(1, 4.5, -0.5, 0.4, 0.3),
+            rec(2, 4.0, -0.5, 0.3, 0.3),
+        ];
+        assert!(detect_tail(&r, &seq).is_empty());
+        // Spike: phi jumps 4.0 -> 6.0.
+        seq.push(rec(3, 6.0, 2.0, 0.3, 0.3));
+        let found = detect_tail(&r, &seq);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].kind, AnomalyKind::LyapunovIncrease);
+        assert_eq!(found[0].round, 3);
+        // A tiny numerical wobble under tolerance stays quiet.
+        seq.push(rec(4, 6.0 + 1e-9, 1e-9, 0.3, 0.3));
+        assert!(detect_tail(&r, &seq).is_empty());
+    }
+
+    #[test]
+    fn stalled_descent_needs_full_window_and_big_g() {
+        let r = rules();
+        // Plateau with G far above floor: fires once window is full.
+        let mut seq = vec![rec(0, 5.0, f64::NAN, 0.5, 0.3)];
+        for t in 1..r.window + 1 {
+            seq.push(rec(t, 5.0, 0.0, 0.5, 0.3));
+        }
+        let found = detect_tail(&r, &seq);
+        assert!(found.iter().any(|a| a.kind == AnomalyKind::StalledDescent), "{found:?}");
+        // Same plateau at convergence (G under floor): silent.
+        let mut seq = vec![rec(0, 5.0, f64::NAN, 1e-14, 0.3)];
+        for t in 1..r.window + 1 {
+            seq.push(rec(t, 5.0, 0.0, 1e-14, 0.3));
+        }
+        assert!(detect_tail(&r, &seq).is_empty());
+    }
+
+    #[test]
+    fn worker_outlier_fires_on_skewed_fleet() {
+        let r = rules();
+        let mut bad = rec(7, 5.0, -0.1, 0.5, 0.3);
+        bad.worker_g = vec![0.1, 0.1, 0.1, 0.1, 0.1 * r.outlier_factor * 20.0];
+        let found = detect(&r, &[bad]);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].kind, AnomalyKind::WorkerOutlier);
+        assert!(found[0].detail.contains("worker 4"));
+        // Balanced fleet, and tiny-median fleets, stay quiet.
+        let ok = rec(8, 5.0, -0.1, 0.5, 0.3);
+        assert!(detect(&r, &[ok]).is_empty());
+        let mut tiny = rec(9, 5.0, -0.1, 1e-13, 0.3);
+        tiny.worker_g = vec![1e-13, 1e-13, 1e-13, 1e-13, 1e-9];
+        assert!(detect(&r, &[tiny]).is_empty());
+    }
+
+    #[test]
+    fn nan_ratio_windows_never_fire_contraction() {
+        // Transport paths: ratio_max always NaN -> rule inactive.
+        let r = rules();
+        let mut seq = Vec::new();
+        for t in 0..10 {
+            seq.push(rec(t, 5.0 - t as f64 * 0.1, -0.1, 0.5, f64::NAN));
+        }
+        assert!(detect_tail(&r, &seq)
+            .iter()
+            .all(|a| a.kind != AnomalyKind::ContractionViolation));
+    }
+}

@@ -1,0 +1,301 @@
+//! Crash flight recorder: a bounded ring of recent rounds dumped
+//! atomically as a versioned `ef21.blackbox/v1` JSON artifact when
+//! something goes wrong (divergence guard, anomaly, `killmaster@r`, a
+//! worker error). The dump is the postmortem counterpart of the live
+//! `--ops` endpoint: everything a human needs to reconstruct the last
+//! seconds of a run without re-running it.
+//!
+//! Format notes: serialized with [`crate::util::json::Json`] (stable
+//! key order, integers rendered without decimals) so `python3 -m
+//! json.tool` and diff-based CI checks both work; written with the
+//! checkpoint module's tmp → write → fsync → rename discipline so a
+//! crash mid-dump never leaves a torn artifact; NaN/inf degrade to
+//! `null` (JSON has no NaN).
+
+use super::anomaly::Anomaly;
+use super::{num, HealthRecord};
+use crate::metrics::RoundRecord;
+use crate::sched::RoundPlan;
+use crate::telemetry::trace;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Write;
+use std::path::Path;
+
+/// Artifact schema tag; bump on breaking layout changes.
+pub const SCHEMA: &str = "ef21.blackbox/v1";
+
+/// Ring capacity in distinct rounds. Enough to cover several monitor
+/// windows without letting a million-round run grow the artifact.
+pub const DEFAULT_RING: usize = 64;
+
+/// How many trace events the dump snapshots from the ring tail.
+const TRACE_TAIL: usize = 64;
+
+/// Cap on retained anomalies (the counted total lives in telemetry).
+const MAX_ANOMALIES: usize = 64;
+
+/// FNV-1a over a float slice's little-endian bytes — the worker state
+/// digest the ring stores (no intermediate byte buffer, so probing
+/// allocates nothing beyond the digest vector itself).
+pub fn digest_f64(v: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in v {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Everything captured about one round. Fields fill in lazily as the
+/// runner reports them; a round with only a metrics row is fine.
+#[derive(Clone, Debug, Default)]
+struct Entry {
+    round: usize,
+    /// Mirrored metrics row (loss/grad/bits at x^{t+1}).
+    metrics: Option<(f64, f64, f64, f64, f64)>, // bits, loss, grad_sq, gt, dcgd
+    health: Option<HealthRecord>,
+    /// Scheduler plan digest: (participants, crashes, resyncs, stragglers, dups).
+    plan: Option<(usize, usize, usize, usize, usize)>,
+    /// Per-worker state digests (FNV-1a over mirror bytes), worker order.
+    digests: Option<Vec<u64>>,
+}
+
+impl Entry {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("round".into(), Json::Num(self.round as f64));
+        if let Some((bits, loss, grad_sq, gt, dcgd)) = self.metrics {
+            let mut mm = BTreeMap::new();
+            mm.insert("bits_per_client".into(), num(bits));
+            mm.insert("loss".into(), num(loss));
+            mm.insert("grad_norm_sq".into(), num(grad_sq));
+            mm.insert("gt".into(), num(gt));
+            mm.insert("dcgd_frac".into(), num(dcgd));
+            m.insert("metrics".into(), Json::Obj(mm));
+        }
+        if let Some(h) = &self.health {
+            m.insert("health".into(), h.to_json());
+        }
+        if let Some((participants, crashes, resyncs, stragglers, dups)) = self.plan {
+            let mut pm = BTreeMap::new();
+            pm.insert("participants".into(), Json::Num(participants as f64));
+            pm.insert("crashes".into(), Json::Num(crashes as f64));
+            pm.insert("resyncs".into(), Json::Num(resyncs as f64));
+            pm.insert("stragglers".into(), Json::Num(stragglers as f64));
+            pm.insert("dups".into(), Json::Num(dups as f64));
+            m.insert("plan".into(), Json::Obj(pm));
+        }
+        if let Some(d) = &self.digests {
+            // Hex strings: u64 digests don't fit f64 exactly.
+            m.insert(
+                "worker_digests".into(),
+                Json::Arr(d.iter().map(|v| Json::Str(format!("{v:016x}"))).collect()),
+            );
+        }
+        Json::Obj(m)
+    }
+}
+
+/// The bounded ring plus the anomaly log. Owned by [`super::Health`];
+/// all recording methods are cheap (no I/O until [`FlightRecorder::dump`]).
+pub struct FlightRecorder {
+    label: String,
+    cap: usize,
+    entries: VecDeque<Entry>,
+    anomalies: Vec<Anomaly>,
+    anomalies_dropped: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(label: &str, cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            label: label.to_string(),
+            cap: cap.max(1),
+            entries: VecDeque::new(),
+            anomalies: Vec::new(),
+            anomalies_dropped: 0,
+        }
+    }
+
+    /// Get-or-create the ring slot for `round` (rounds arrive in
+    /// nondecreasing order from every runner).
+    fn entry(&mut self, round: usize) -> &mut Entry {
+        let fresh = match self.entries.back() {
+            Some(e) => e.round != round,
+            None => true,
+        };
+        if fresh {
+            self.entries.push_back(Entry { round, ..Entry::default() });
+            while self.entries.len() > self.cap {
+                self.entries.pop_front();
+            }
+        }
+        self.entries.back_mut().unwrap()
+    }
+
+    pub fn record_round(&mut self, rec: &RoundRecord) {
+        self.entry(rec.round).metrics =
+            Some((rec.bits_per_client, rec.loss, rec.grad_norm_sq, rec.gt, rec.dcgd_frac));
+    }
+
+    pub fn record_health(&mut self, rec: &HealthRecord) {
+        self.entry(rec.round).health = Some(rec.clone());
+    }
+
+    pub fn record_plan(&mut self, round: usize, plan: &RoundPlan) {
+        let participants = plan.active.iter().filter(|&&a| a).count();
+        let stragglers = plan.delay_ms.iter().filter(|&&d| d > 0).count();
+        let dups = plan.dup.iter().filter(|&&d| d).count();
+        self.entry(round).plan =
+            Some((participants, plan.crash.len(), plan.resync.len(), stragglers, dups));
+    }
+
+    pub fn record_worker_digests(&mut self, round: usize, digests: Vec<u64>) {
+        self.entry(round).digests = Some(digests);
+    }
+
+    pub fn note_anomaly(&mut self, a: Anomaly) {
+        if self.anomalies.len() < MAX_ANOMALIES {
+            self.anomalies.push(a);
+        } else {
+            self.anomalies_dropped += 1;
+        }
+    }
+
+    /// Render the artifact body.
+    fn to_json(&self, reason: &str, round: usize) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), Json::Str(SCHEMA.into()));
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("reason".into(), Json::Str(reason.to_string()));
+        m.insert("round".into(), Json::Num(round as f64));
+        m.insert(
+            "anomalies".into(),
+            Json::Arr(
+                self.anomalies
+                    .iter()
+                    .map(|a| {
+                        let mut am = BTreeMap::new();
+                        am.insert("kind".into(), Json::Str(a.kind.name().into()));
+                        am.insert("round".into(), Json::Num(a.round as f64));
+                        am.insert("detail".into(), Json::Str(a.detail.clone()));
+                        Json::Obj(am)
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert("anomalies_dropped".into(), Json::Num(self.anomalies_dropped as f64));
+        m.insert("rounds".into(), Json::Arr(self.entries.iter().map(Entry::to_json).collect()));
+        // Trace tail: non-destructive snapshot so an active exporter
+        // still writes the full trace at shutdown.
+        let tail = trace::tail(TRACE_TAIL);
+        let mut tm = BTreeMap::new();
+        tm.insert("dropped".into(), Json::Num(trace::dropped_total() as f64));
+        tm.insert(
+            "tail".into(),
+            Json::Arr(
+                tail.iter()
+                    .map(|e| {
+                        let mut em = BTreeMap::new();
+                        em.insert("name".into(), Json::Str(e.name.into()));
+                        em.insert("tid".into(), Json::Num(e.tid as f64));
+                        em.insert("start_ns".into(), Json::Num(e.start_ns as f64));
+                        em.insert("dur_ns".into(), Json::Num(e.dur_ns as f64));
+                        if let Some((k, v)) = e.arg {
+                            em.insert("arg".into(), Json::Str(format!("{k}={v}")));
+                        }
+                        Json::Obj(em)
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert("trace".into(), Json::Obj(tm));
+        Json::Obj(m)
+    }
+
+    /// Write the artifact atomically (tmp → write → fsync → rename, the
+    /// checkpoint discipline) and return the byte count.
+    pub fn dump(&self, path: &Path, reason: &str, round: usize) -> Result<u64> {
+        let body = self.to_json(reason, round).to_string();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating blackbox dir {}", parent.display()))?;
+            }
+        }
+        let tmp = path.with_extension("blackbox.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(body.as_bytes())
+                .and_then(|()| f.sync_all())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+        Ok(body.len() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::health::anomaly::AnomalyKind;
+
+    fn rr(round: usize, loss: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            bits_per_client: 64.0,
+            loss,
+            grad_norm_sq: 0.5,
+            gt: 0.25,
+            dcgd_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_keyed_by_round() {
+        let mut fr = FlightRecorder::new("t", 4);
+        for t in 0..10 {
+            fr.record_round(&rr(t, 1.0));
+            fr.record_worker_digests(t, vec![t as u64]);
+        }
+        assert_eq!(fr.entries.len(), 4);
+        assert_eq!(fr.entries.front().unwrap().round, 6);
+        // Same-round updates merge into one entry.
+        let e = fr.entries.back().unwrap();
+        assert!(e.metrics.is_some() && e.digests.is_some());
+    }
+
+    #[test]
+    fn dump_is_versioned_valid_json_and_atomic() {
+        let dir = std::env::temp_dir().join(format!("ef21_bb_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bb.json");
+        let mut fr = FlightRecorder::new("smoke", 8);
+        fr.record_round(&rr(3, f64::NAN)); // NaN must degrade to null
+        fr.note_anomaly(Anomaly {
+            kind: AnomalyKind::LyapunovIncrease,
+            round: 3,
+            detail: "phi rose".into(),
+        });
+        let bytes = fr.dump(&path, "divergence", 3).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(bytes as usize, text.len());
+        let j = Json::parse(&text).expect("valid json");
+        assert_eq!(j.get("schema").and_then(|s| s.as_str()), Some(SCHEMA));
+        assert_eq!(j.get("reason").and_then(|s| s.as_str()), Some("divergence"));
+        let rounds = j.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 1);
+        assert_eq!(rounds[0].get("metrics").unwrap().get("loss"), Some(&Json::Null));
+        let an = j.get("anomalies").unwrap().as_arr().unwrap();
+        assert_eq!(an[0].get("kind").and_then(|s| s.as_str()), Some("lyapunov_increase"));
+        // No tmp file left behind.
+        assert!(!dir.join("bb.blackbox.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,469 @@
+//! Theory-grounded run health: the paper's own convergence certificates
+//! monitored live, plus postmortem capture (DESIGN.md §12).
+//!
+//! Theorem 1 of EF21 proves descent of the Lyapunov function
+//! `Φ^t = f(x^t) + (γ/θ)·G^t`, where
+//! `G^t = (1/n)·Σ_i ||g_i^t − ∇f_i(x^t)||²` is the compression error
+//! that Eq. 3 contracts by `(1−α)` each round. A run that silently
+//! violates the contraction (bad α from a misconfigured block budget,
+//! heterogeneous shards outside the stepsize bound) looks identical to a
+//! healthy one until the divergence cap trips — unless these quantities
+//! are computed at runtime. This module does exactly that, in three
+//! layers:
+//!
+//! 1. **Monitor** ([`Health::observe`]): on a `--health every:<r>`
+//!    cadence, compute `G^t`, `Φ^t`, per-worker contraction ratios
+//!    against the `(1−α)` bound, and descent deltas — exported as
+//!    `health.*` telemetry keys and per-round [`HealthRecord`]s.
+//! 2. **Anomaly detector** ([`anomaly`]): pure-function rules over a
+//!    sliding window of health records raising counted, logged events.
+//! 3. **Flight recorder** ([`blackbox`]): a bounded ring of recent
+//!    rounds dumped atomically as a versioned `ef21.blackbox/v1` JSON
+//!    artifact when the divergence guard, an anomaly, `killmaster@r`,
+//!    or a worker error fires. The live counterpart is the `--ops`
+//!    HTTP endpoint ([`ops`]).
+//!
+//! Everything here is off by default and bitwise invisible when off:
+//! the monitor reads only cached worker instrumentation (the same
+//! values [`crate::coordinator`]'s `observe` reduces), never touches
+//! the trajectory, and allocates nothing unless a health config is
+//! present.
+//!
+//! # Where the quantities come from
+//!
+//! After round `t` the master has stepped to `x^{t+1}` and every
+//! participant holds `last_grad = ∇f_i(x^{t+1})` and
+//! `g_i^{t+1} = g_i^t + C(∇f_i(x^{t+1}) − g_i^t)`, so:
+//!
+//! * `err_sq_i = ||g_i^{t+1} − ∇f_i(x^{t+1})||²` — exactly the `G^{t+1}`
+//!   summand, and also exactly `||C(v_i) − v_i||²` for
+//!   `v_i = ∇f_i(x^{t+1}) − g_i^t`;
+//! * `ref_sq_i = ||v_i||²` — the compressor input norm, making
+//!   `err_sq_i / ref_sq_i ≤ (1−α)` the Eq. 3 contraction check
+//!   (deterministic compressors satisfy it per round; rand-k only in
+//!   expectation, which is why the anomaly rule averages over a window).
+//!
+//! The sim runners probe both scalars from the worker pool; the
+//! distributed/reactor paths piggyback `err_sq` (8 bytes) on the uplink
+//! frame (`ref_sq` stays worker-local there, so the contraction rule is
+//! simply inactive — `ratio_max` is NaN).
+
+pub mod anomaly;
+pub mod blackbox;
+pub mod ops;
+
+use crate::config::cli::Args;
+use crate::telemetry::{self, keys};
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+/// CLI-level health spec, parsed from
+/// `--health off | every:<r>[,window:<w>][,tol:<f>][,blackbox:<path>]`.
+/// Deliberately excluded from the run fingerprint (like telemetry):
+/// monitoring never changes the trajectory, so a checkpoint moves freely
+/// between health-on and health-off runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthSpec {
+    /// Monitor cadence in rounds; 0 = off (the default).
+    pub every: usize,
+    /// Sliding-window length for the anomaly rules.
+    pub window: usize,
+    /// Relative tolerance for the Lyapunov/contraction rules.
+    pub tol: f64,
+    /// Flight-recorder dump path (`ef21.blackbox/v1` JSON artifact).
+    pub blackbox: Option<String>,
+}
+
+impl Default for HealthSpec {
+    fn default() -> Self {
+        HealthSpec { every: 0, window: 8, tol: 1e-6, blackbox: None }
+    }
+}
+
+impl HealthSpec {
+    pub fn is_off(&self) -> bool {
+        self.every == 0
+    }
+
+    /// Parse the `--health` grammar.
+    pub fn parse(spec: &str) -> Result<HealthSpec> {
+        let mut out = HealthSpec::default();
+        if spec == "off" {
+            return Ok(out);
+        }
+        for part in spec.split(',') {
+            let (key, val) = match part.split_once(':') {
+                Some(kv) => kv,
+                None => bail!(
+                    "bad --health clause '{part}' (expected \
+                     every:<r>[,window:<w>][,tol:<f>][,blackbox:<path>] or off)"
+                ),
+            };
+            match key {
+                "every" => {
+                    out.every = val
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--health every:{val}: {e}"))?;
+                    if out.every == 0 {
+                        bail!("--health every:0 is 'off'; spell it --health off");
+                    }
+                }
+                "window" => {
+                    out.window = val
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--health window:{val}: {e}"))?;
+                    if out.window < 2 {
+                        bail!("--health window must be >= 2, got {val}");
+                    }
+                }
+                "tol" => {
+                    out.tol = val
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--health tol:{val}: {e}"))?;
+                    if !(out.tol >= 0.0) {
+                        bail!("--health tol must be >= 0, got {val}");
+                    }
+                }
+                "blackbox" => out.blackbox = Some(val.to_string()),
+                other => bail!("unknown --health clause '{other}'"),
+            }
+        }
+        if out.every == 0 {
+            bail!("--health needs an every:<r> clause (or 'off')");
+        }
+        Ok(out)
+    }
+
+    /// Read `--health` (default off).
+    pub fn from_args(args: &Args) -> Result<HealthSpec> {
+        match args.get_str("health") {
+            None => Ok(HealthSpec::default()),
+            Some(s) => Self::parse(s),
+        }
+    }
+
+    /// Bind the spec to one run's theory context. `None` when off.
+    /// `θ = 1 − sqrt(1−α)` is the Lemma 3 constant the Lyapunov
+    /// coefficient `γ/θ` uses.
+    pub fn build(&self, alpha: f64, gamma: f64) -> Option<HealthCfg> {
+        if self.is_off() {
+            return None;
+        }
+        let (theta, _beta) = crate::theory::theta_beta(alpha);
+        Some(HealthCfg {
+            every: self.every,
+            window: self.window,
+            tol: self.tol,
+            blackbox: self.blackbox.clone().map(PathBuf::from),
+            alpha,
+            gamma,
+            theta,
+        })
+    }
+}
+
+/// A health spec bound to one run's theory constants — everything the
+/// monitor needs to evaluate the paper's certificates.
+#[derive(Clone, Debug)]
+pub struct HealthCfg {
+    pub every: usize,
+    pub window: usize,
+    pub tol: f64,
+    pub blackbox: Option<PathBuf>,
+    /// Compressor contraction parameter (Eq. 3's α).
+    pub alpha: f64,
+    /// Master stepsize γ.
+    pub gamma: f64,
+    /// Lemma 3's θ = 1 − sqrt(1−α); the Lyapunov coefficient is γ/θ.
+    pub theta: f64,
+}
+
+/// One monitored round. All quantities refer to the state after the
+/// round's master step (the same convention as
+/// [`crate::metrics::RoundRecord`]). NaN marks "not measurable on this
+/// path" (e.g. `ratio_max` over transports).
+#[derive(Clone, Debug)]
+pub struct HealthRecord {
+    pub round: usize,
+    /// f(x) = average worker loss.
+    pub loss: f64,
+    /// G^t = (1/n) Σ err_sq_i.
+    pub gt: f64,
+    /// Φ^t = loss + (γ/θ)·G^t.
+    pub phi: f64,
+    /// Φ^t − Φ^{t−obs} (NaN on the first observation).
+    pub phi_delta: f64,
+    /// max_i err_sq_i / ref_sq_i (NaN when ref_sq is unavailable).
+    pub ratio_max: f64,
+    /// Per-worker err_sq_i in worker order (NaN = unknown).
+    pub worker_g: Vec<f64>,
+}
+
+/// JSON number that degrades NaN/inf to `null` (JSON has no NaN).
+pub(crate) fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+impl HealthRecord {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("round".into(), Json::Num(self.round as f64));
+        m.insert("loss".into(), num(self.loss));
+        m.insert("gt".into(), num(self.gt));
+        m.insert("phi".into(), num(self.phi));
+        m.insert("phi_delta".into(), num(self.phi_delta));
+        m.insert("ratio_max".into(), num(self.ratio_max));
+        m.insert(
+            "worker_g".into(),
+            Json::Arr(self.worker_g.iter().map(|&g| num(g)).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// The per-run health state machine: monitor + anomaly window + flight
+/// recorder. Owned by whichever runner drives the round loop; every
+/// method is cheap and none touches the trajectory.
+pub struct Health {
+    pub cfg: HealthCfg,
+    label: String,
+    /// Sliding window of recent records (oldest first).
+    recent: VecDeque<HealthRecord>,
+    rules: anomaly::Rules,
+    pub records: u64,
+    pub anomaly_count: u64,
+    pub recorder: blackbox::FlightRecorder,
+}
+
+impl Health {
+    pub fn new(cfg: HealthCfg, label: &str) -> Health {
+        let rules = anomaly::Rules {
+            contraction_bound: 1.0 - cfg.alpha,
+            tol: cfg.tol,
+            window: cfg.window,
+            ..anomaly::Rules::default()
+        };
+        Health {
+            cfg,
+            label: label.to_string(),
+            recent: VecDeque::new(),
+            rules,
+            records: 0,
+            anomaly_count: 0,
+            recorder: blackbox::FlightRecorder::new(label, blackbox::DEFAULT_RING),
+        }
+    }
+
+    /// Is the monitor due at round `t`?
+    pub fn due(&self, t: usize) -> bool {
+        self.cfg.every > 0 && t % self.cfg.every == 0
+    }
+
+    /// Feed one observation: mean loss plus per-worker
+    /// `(err_sq, ref_sq)` pairs (NaN where unavailable). Computes
+    /// G^t/Φ^t/ratios, exports `health.*` telemetry, runs the anomaly
+    /// rules, and records everything into the flight recorder. Returns
+    /// the anomalies this observation raised (usually empty).
+    pub fn observe(
+        &mut self,
+        round: usize,
+        loss: f64,
+        workers: &[(f64, f64)],
+    ) -> Vec<anomaly::Anomaly> {
+        let mut worker_g = Vec::with_capacity(workers.len());
+        let mut g_sum = 0.0;
+        let mut g_n = 0usize;
+        let mut ratio_max = f64::NAN;
+        for &(err_sq, ref_sq) in workers {
+            worker_g.push(err_sq);
+            if err_sq.is_finite() {
+                g_sum += err_sq;
+                g_n += 1;
+            }
+            if err_sq.is_finite() && ref_sq.is_finite() && ref_sq > 0.0 {
+                let r = err_sq / ref_sq;
+                if !(ratio_max >= r) {
+                    ratio_max = r;
+                }
+            }
+        }
+        // G^t averages over ALL workers (the paper's 1/n), treating the
+        // rare all-NaN probe as unmeasurable rather than zero.
+        let gt = if g_n == 0 { f64::NAN } else { g_sum / workers.len() as f64 };
+        let phi = loss + (self.cfg.gamma / self.cfg.theta) * gt;
+        let phi_delta = match self.recent.back() {
+            Some(prev) => phi - prev.phi,
+            None => f64::NAN,
+        };
+        let rec = HealthRecord { round, loss, gt, phi, phi_delta, ratio_max, worker_g };
+
+        telemetry::counter(keys::HEALTH_RECORDS).incr(1);
+        telemetry::gauge(keys::HEALTH_G).set(gt);
+        telemetry::gauge(keys::HEALTH_PHI).set(phi);
+        telemetry::gauge(keys::HEALTH_PHI_DELTA).set(phi_delta);
+        telemetry::gauge(keys::HEALTH_RATIO_MAX).set(ratio_max);
+
+        self.recent.push_back(rec.clone());
+        while self.recent.len() > self.cfg.window {
+            self.recent.pop_front();
+        }
+        self.records += 1;
+
+        self.recent.make_contiguous();
+        let anomalies = anomaly::detect(&self.rules, self.recent.as_slices().0);
+        for a in &anomalies {
+            self.anomaly_count += 1;
+            telemetry::counter(keys::HEALTH_ANOMALIES).incr(1);
+            eprintln!("health: ANOMALY [{}] round {}: {}", a.kind.name(), a.round, a.detail);
+            self.recorder.note_anomaly(a.clone());
+        }
+        self.recorder.record_health(&rec);
+        ops::publish_health(&rec, self.anomaly_count, self.records);
+        anomalies
+    }
+
+    /// Mirror a recorded metrics row into the flight recorder ring.
+    pub fn record_round(&mut self, rec: &crate::metrics::RoundRecord) {
+        self.recorder.record_round(rec);
+        ops::publish_round(&self.label, rec.round, rec.loss);
+    }
+
+    /// Mirror a scheduler round plan digest into the flight recorder.
+    pub fn record_plan(&mut self, round: usize, plan: &crate::sched::RoundPlan) {
+        self.recorder.record_plan(round, plan);
+    }
+
+    /// Mirror per-worker state digests (e.g. FNV over resync mirrors).
+    pub fn record_worker_digests(&mut self, round: usize, digests: Vec<u64>) {
+        self.recorder.record_worker_digests(round, digests);
+    }
+
+    /// Dump the flight recorder as an `ef21.blackbox/v1` artifact, if a
+    /// blackbox path is configured. Best-effort: failures are reported
+    /// on stderr, never propagated (the dump runs on error paths where a
+    /// second failure must not mask the first).
+    pub fn dump_blackbox(&self, reason: &str, round: usize) -> Option<PathBuf> {
+        let path = self.cfg.blackbox.as_ref()?;
+        match self.recorder.dump(path, reason, round) {
+            Ok(bytes) => {
+                eprintln!(
+                    "health: blackbox dumped to {} ({} bytes, reason: {reason})",
+                    path.display(),
+                    bytes
+                );
+                Some(path.clone())
+            }
+            Err(e) => {
+                eprintln!("health: blackbox dump to {} failed: {e:#}", path.display());
+                None
+            }
+        }
+    }
+}
+
+/// Serializes tests that exercise the process-global ops publish path
+/// against the ops server's own test (which opens the publish gate).
+#[cfg(test)]
+pub(crate) fn tests_ops_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::OnceLock<std::sync::Mutex<()>> = std::sync::OnceLock::new();
+    LOCK.get_or_init(|| std::sync::Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_grammar_and_defaults() {
+        assert!(HealthSpec::default().is_off());
+        assert!(HealthSpec::parse("off").unwrap().is_off());
+        let s = HealthSpec::parse("every:5").unwrap();
+        assert_eq!(s.every, 5);
+        assert_eq!(s.window, 8);
+        assert!(s.blackbox.is_none());
+        let s = HealthSpec::parse("every:2,window:4,tol:0.01,blackbox:/tmp/bb.json").unwrap();
+        assert_eq!((s.every, s.window), (2, 4));
+        assert!((s.tol - 0.01).abs() < 1e-15);
+        assert_eq!(s.blackbox.as_deref(), Some("/tmp/bb.json"));
+        for bad in ["every:0", "window:4", "every:x", "every:2,window:1", "nope", "every:2,zz:1"] {
+            assert!(HealthSpec::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn build_binds_theory_constants() {
+        let s = HealthSpec::parse("every:1").unwrap();
+        let cfg = s.build(0.75, 0.1).unwrap();
+        // theta = 1 - sqrt(1 - 3/4) = 1/2.
+        assert!((cfg.theta - 0.5).abs() < 1e-12);
+        assert!((cfg.alpha - 0.75).abs() < 1e-12);
+        assert!(HealthSpec::default().build(0.75, 0.1).is_none());
+    }
+
+    #[test]
+    fn monitor_computes_certificates() {
+        let _guard = tests_ops_lock();
+        let cfg = HealthSpec::parse("every:2").unwrap().build(0.75, 0.1).unwrap();
+        let mut h = Health::new(cfg, "t");
+        assert!(h.due(0) && !h.due(1) && h.due(2));
+        // Two workers: err 0.2/0.4 -> G = 0.3; loss 1.0; phi = 1 + (0.1/0.5)*0.3.
+        let a = h.observe(0, 1.0, &[(0.2, 1.0), (0.4, 2.0)]);
+        assert!(a.is_empty());
+        let rec = h.recent.back().unwrap();
+        assert!((rec.gt - 0.3).abs() < 1e-12);
+        assert!((rec.phi - 1.06).abs() < 1e-12);
+        assert!(rec.phi_delta.is_nan());
+        assert!((rec.ratio_max - 0.2).abs() < 1e-12);
+        // Second observation carries the delta.
+        h.observe(2, 0.9, &[(0.1, 1.0), (0.1, 1.0)]);
+        let rec = h.recent.back().unwrap();
+        assert!(rec.phi_delta < 0.0);
+        assert_eq!(h.records, 2);
+        assert_eq!(h.anomaly_count, 0);
+    }
+
+    #[test]
+    fn monitor_handles_missing_refs_and_nan_workers() {
+        let _guard = tests_ops_lock();
+        let cfg = HealthSpec::parse("every:1").unwrap().build(0.5, 0.2).unwrap();
+        let mut h = Health::new(cfg, "t");
+        // Transports: ref_sq unavailable (NaN) -> ratio_max NaN, G fine.
+        h.observe(0, 1.0, &[(0.2, f64::NAN), (0.4, f64::NAN)]);
+        let rec = h.recent.back().unwrap();
+        assert!((rec.gt - 0.3).abs() < 1e-12);
+        assert!(rec.ratio_max.is_nan());
+        // All-NaN probe: G unmeasurable, not zero.
+        h.observe(1, 1.0, &[(f64::NAN, f64::NAN)]);
+        assert!(h.recent.back().unwrap().gt.is_nan());
+    }
+
+    #[test]
+    fn health_record_json_degrades_nan_to_null() {
+        let rec = HealthRecord {
+            round: 3,
+            loss: 1.5,
+            gt: 0.25,
+            phi: 2.0,
+            phi_delta: f64::NAN,
+            ratio_max: f64::NAN,
+            worker_g: vec![0.25, f64::NAN],
+        };
+        let j = rec.to_json();
+        assert_eq!(j.get("round").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("phi_delta"), Some(&Json::Null));
+        let wg = j.get("worker_g").unwrap().as_arr().unwrap();
+        assert_eq!(wg[0].as_f64(), Some(0.25));
+        assert_eq!(wg[1], Json::Null);
+        // Round-trips through the writer.
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

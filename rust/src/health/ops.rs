@@ -1,0 +1,281 @@
+//! Live ops endpoint: `--ops <port>` serves `/health`, `/status`, and
+//! `/workers` JSON over the same minimal HTTP/1.0 stack as
+//! [`crate::telemetry::prom`]. Where Prometheus exposition answers
+//! "what are the metrics", this answers the operator's three questions
+//! about a long fleet run — is it converging (the Theorem 1
+//! certificates), where is it (round progress), and which worker is
+//! misbehaving — without attaching a scraper.
+//!
+//! Publishing is push-based and gated on one relaxed atomic: runners
+//! call [`publish_round`]/[`publish_health`] unconditionally, and when
+//! no server was ever started the calls return after a single atomic
+//! load — nothing allocates, so the zero-alloc gate does not notice the
+//! wiring.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{Read as _, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Last-published run state; the process-global single source the
+/// endpoint renders. One slot is enough: a process drives one run.
+#[derive(Clone, Debug, Default)]
+struct OpsState {
+    label: String,
+    round: usize,
+    loss: f64,
+    gt: f64,
+    phi: f64,
+    phi_delta: f64,
+    ratio_max: f64,
+    records: u64,
+    anomalies: u64,
+    /// Per-worker err_sq from the latest health observation.
+    workers: Vec<f64>,
+    seen_health: bool,
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+fn state() -> &'static Mutex<OpsState> {
+    static STATE: OnceLock<Mutex<OpsState>> = OnceLock::new();
+    STATE.get_or_init(|| Mutex::new(OpsState::default()))
+}
+
+/// Cheap progress publish from every runner's record point.
+pub fn publish_round(label: &str, round: usize, loss: f64) {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return;
+    }
+    let mut s = state().lock().unwrap();
+    if s.label != label {
+        s.label.clear();
+        s.label.push_str(label);
+    }
+    s.round = round;
+    s.loss = loss;
+}
+
+/// Publish one health observation (called from [`super::Health::observe`]).
+pub fn publish_health(rec: &super::HealthRecord, anomalies: u64, records: u64) {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return;
+    }
+    let mut s = state().lock().unwrap();
+    s.round = rec.round;
+    s.loss = rec.loss;
+    s.gt = rec.gt;
+    s.phi = rec.phi;
+    s.phi_delta = rec.phi_delta;
+    s.ratio_max = rec.ratio_max;
+    s.records = records;
+    s.anomalies = anomalies;
+    s.workers.clear();
+    s.workers.extend_from_slice(&rec.worker_g);
+    s.seen_health = true;
+}
+
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// `/health`: the verdict plus the certificates behind it.
+fn render_health(s: &OpsState) -> String {
+    let mut m = BTreeMap::new();
+    // "ok" until an anomaly is counted; "unknown" before any observation.
+    let verdict = if !s.seen_health {
+        "unknown"
+    } else if s.anomalies == 0 {
+        "ok"
+    } else {
+        "anomalous"
+    };
+    m.insert("health".into(), Json::Str(verdict.into()));
+    m.insert("anomalies".into(), Json::Num(s.anomalies as f64));
+    m.insert("records".into(), Json::Num(s.records as f64));
+    m.insert("gt".into(), num(s.gt));
+    m.insert("phi".into(), num(s.phi));
+    m.insert("phi_delta".into(), num(s.phi_delta));
+    m.insert("contraction_ratio_max".into(), num(s.ratio_max));
+    Json::Obj(m).to_string()
+}
+
+/// `/status`: where the run is.
+fn render_status(s: &OpsState) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("label".into(), Json::Str(s.label.clone()));
+    m.insert("round".into(), Json::Num(s.round as f64));
+    m.insert("loss".into(), num(s.loss));
+    m.insert("workers".into(), Json::Num(s.workers.len() as f64));
+    Json::Obj(m).to_string()
+}
+
+/// `/workers`: per-worker G contributions from the last observation.
+fn render_workers(s: &OpsState) -> String {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "err_sq".into(),
+        Json::Arr(s.workers.iter().map(|&g| num(g)).collect()),
+    );
+    m.insert("round".into(), Json::Num(s.round as f64));
+    Json::Obj(m).to_string()
+}
+
+/// Running ops server (same lifecycle contract as
+/// [`crate::telemetry::prom::PromServer`]).
+pub struct OpsServer {
+    port: u16,
+    shutdown: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl OpsServer {
+    /// Bind `127.0.0.1:port` (0 picks an ephemeral port) and start
+    /// answering. Flips the publish gate on.
+    pub fn bind(port: u16) -> Result<OpsServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding ops port {port}"))?;
+        let port = listener.local_addr().context("ops local_addr")?.port();
+        listener.set_nonblocking(true).context("ops listener nonblocking")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stop = shutdown.clone();
+        let handle = std::thread::Builder::new()
+            .name("ef21-ops".into())
+            .spawn(move || accept_loop(listener, stop))
+            .context("spawning ops server")?;
+        ACTIVE.store(true, Ordering::SeqCst);
+        Ok(OpsServer { port, shutdown, handle })
+    }
+
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    pub fn stop(self) {
+        ACTIVE.store(false, Ordering::SeqCst);
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = self.handle.join();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shutdown: Arc<AtomicBool>) {
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = serve(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn serve(mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut req = [0u8; 1024];
+    let n = stream.read(&mut req).unwrap_or(0);
+    let path = parse_path(&req[..n]);
+
+    let snap = state().lock().unwrap().clone();
+    let (status, body) = match path.as_deref() {
+        Some("/health") => ("200 OK", render_health(&snap)),
+        Some("/status") | Some("/") => ("200 OK", render_status(&snap)),
+        Some("/workers") => ("200 OK", render_workers(&snap)),
+        _ => ("404 Not Found", "{\"error\": \"unknown path\"}".to_string()),
+    };
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    write!(
+        stream,
+        "HTTP/1.0 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Extract the request path from `GET <path> HTTP/1.x`.
+fn parse_path(req: &[u8]) -> Option<String> {
+    let line = std::str::from_utf8(req).ok()?.lines().next()?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next()?;
+    if method != "GET" {
+        return None;
+    }
+    // Strip any query string; the routes take no parameters.
+    let path = parts.next()?.split('?').next()?;
+    Some(path.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::health::HealthRecord;
+
+    fn get(port: u16, path: &str) -> String {
+        let mut conn = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        conn.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes()).unwrap();
+        let mut text = String::new();
+        conn.read_to_string(&mut text).unwrap();
+        text
+    }
+
+    fn body(resp: &str) -> Json {
+        let idx = resp.find("\r\n\r\n").unwrap();
+        Json::parse(&resp[idx + 4..]).expect("json body")
+    }
+
+    #[test]
+    fn serves_health_status_workers_and_404() {
+        // Publishing is process-global; serialize against the monitor
+        // tests (whose observe() also publishes while the gate is open).
+        let _guard = crate::health::tests_ops_lock();
+        let server = OpsServer::bind(0).unwrap();
+        let port = server.port();
+        publish_round("ops-test", 7, 1.25);
+        publish_health(
+            &HealthRecord {
+                round: 7,
+                loss: 1.25,
+                gt: 0.5,
+                phi: 2.0,
+                phi_delta: -0.25,
+                ratio_max: f64::NAN,
+                worker_g: vec![0.5, 0.5],
+            },
+            0,
+            3,
+        );
+
+        let h = body(&get(port, "/health"));
+        assert_eq!(h.get("health").and_then(|v| v.as_str()), Some("ok"));
+        assert_eq!(h.get("phi").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(h.get("contraction_ratio_max"), Some(&Json::Null));
+
+        let s = body(&get(port, "/status"));
+        assert_eq!(s.get("label").and_then(|v| v.as_str()), Some("ops-test"));
+        assert_eq!(s.get("round").and_then(|v| v.as_f64()), Some(7.0));
+
+        let w = body(&get(port, "/workers"));
+        assert_eq!(w.get("err_sq").unwrap().as_arr().unwrap().len(), 2);
+
+        let nf = get(port, "/nope");
+        assert!(nf.starts_with("HTTP/1.0 404"), "got: {nf}");
+        server.stop();
+        // Gate closes with the server: publishes become no-ops again.
+        assert!(!ACTIVE.load(Ordering::SeqCst));
+    }
+}

@@ -64,6 +64,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod exp;
+pub mod health;
 pub mod metrics;
 pub mod nn;
 pub mod oracle;

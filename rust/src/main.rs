@@ -7,6 +7,7 @@
 //!            [--objective logreg|lstsq] [--csv out.csv] [--transport local|tcp]
 //!            [--master threads|reactor]
 //!            [--threads n|auto] [--blocks flat|auto|<n>|name:len,...]
+//!            [--health off|every:<r>[,...]] [--ops <port>]
 //! ef21 exp   <stepsize|finetune|kdep|gdtune|lstsq|rates|dl> [flags...]
 //! ef21 bench [--json FILE] [--quick] [--fleet-n N,N,...]
 //! ef21 data  info
@@ -47,6 +48,19 @@ fn dispatch(args: &Args) -> Result<()> {
             path.display()
         );
     }
+    // Live ops endpoint (push-gated like telemetry: when absent the
+    // runners' publish calls are single-atomic-load no-ops).
+    let ops = match args.get_parse::<u16>("ops")? {
+        Some(port) => {
+            let srv = ef21::health::ops::OpsServer::bind(port)?;
+            eprintln!(
+                "ops: serving /health /status /workers on 127.0.0.1:{}",
+                srv.port()
+            );
+            Some(srv)
+        }
+        None => None,
+    };
 
     let result = match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(args),
@@ -60,6 +74,9 @@ fn dispatch(args: &Args) -> Result<()> {
         }
     };
     // Final flush even on command error; surface whichever failed first.
+    if let Some(srv) = ops {
+        srv.stop();
+    }
     let shutdown = guard.shutdown();
     result.and(shutdown)
 }
@@ -78,6 +95,24 @@ USAGE:
                                        jsonl:w.jsonl@coordinator.worker;
                                        trace: writes chrome://tracing
                                        JSON — open in Perfetto)
+  (all commands) [--ops PORT]         (live ops endpoint: HTTP JSON on
+                                       127.0.0.1:PORT — /health gives the
+                                       Theorem 1 verdict, /status the run
+                                       position, /workers the per-worker
+                                       G contributions; 0 = ephemeral)
+  (run)          [--health off|every:<r>[,window:<w>][,tol:<x>]
+                          [,blackbox:<dir>]]
+                                      (theory-grounded monitor: every r
+                                       rounds compute G^t, the Lyapunov
+                                       value f(x)+(gamma/theta)G, and
+                                       per-worker contraction ratios vs
+                                       the (1-alpha) bound; windowed
+                                       anomaly rules; anomalies,
+                                       divergence, killmaster, and worker
+                                       errors dump an ef21.blackbox/v1
+                                       flight-recorder JSON under <dir>.
+                                       off [default] is bit-identical to
+                                       builds without the monitor)
   (sim run + sweep exps)
                  [--threads n|auto]   (auto = all cores; 1 = sequential;
                                        results are bit-identical either way;
@@ -205,7 +240,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     // but never across the sim/dist boundary (downlink accounting
     // differs).
     let path_tag = if transport == "sim" { "sim" } else { "dist" };
-    let ckpt_opts = ckpt.build(&spec.fingerprint(problem.d(), path_tag))?;
+    let mut ckpt_opts = ckpt.build(&spec.fingerprint(problem.d(), path_tag))?;
+    // The monitor binds the run's actual (alpha, gamma) pair so the
+    // contraction bound and Lyapunov coefficient match Theorem 1 exactly.
+    ckpt_opts.health = spec.health.build(alpha, gamma);
     if let (Some(ck), Some(r)) = (&ckpt_opts.resume, spec.sched.faults.kill_master()) {
         anyhow::ensure!(
             r < ck.next_round,
@@ -346,7 +384,7 @@ fn run_over_transport(
             as Box<dyn ef21::algo::WorkerNode>
     };
     if spec.master == ef21::config::MasterEngine::Reactor {
-        let out = ef21::coordinator::reactor::run_reactor(
+        let out = ef21::coordinator::reactor::run_reactor_health(
             master,
             problem.n_workers,
             make_worker,
@@ -354,6 +392,7 @@ fn run_over_transport(
             kind,
             &spec.label(),
             ef21::coordinator::reactor::default_shards(),
+            ckpt_opts.health.clone(),
         )?;
         println!(
             "transport={transport} (reactor): {} uplink frame bytes, {} downlink frame bytes",

@@ -126,6 +126,23 @@ pub mod keys {
     pub const CKPT_WRITE_NS: &str = "ckpt.write.ns";
     /// Cumulative encoded checkpoint bytes written.
     pub const CKPT_BYTES: &str = "ckpt.bytes";
+    /// Trace-ring events dropped at the global cap, surfaced live
+    /// (Prometheus/JSONL) rather than only in chrome-trace `otherData`.
+    pub const TRACE_DROPPED: &str = "telemetry.trace.dropped";
+    /// Health monitor observations recorded (counter).
+    pub const HEALTH_RECORDS: &str = "health.records";
+    /// Anomalies raised by the health rules (counter).
+    pub const HEALTH_ANOMALIES: &str = "health.anomalies";
+    /// Latest G^t = (1/n)·Σᵢ‖gᵢ − ∇fᵢ(x)‖² (gauge).
+    pub const HEALTH_G: &str = "health.g";
+    /// Latest Lyapunov value Φ^t = f(x^t) + (γ/θ)·G^t (gauge).
+    pub const HEALTH_PHI: &str = "health.phi";
+    /// Φ^t − Φ^{t−every}: negative on a healthy run (gauge).
+    pub const HEALTH_PHI_DELTA: &str = "health.phi.delta";
+    /// Worst per-worker contraction ratio ‖C(v)−v‖²/‖v‖² this
+    /// observation; bounded by (1−α) for deterministic compressors
+    /// (gauge; sim paths only).
+    pub const HEALTH_RATIO_MAX: &str = "health.contraction.ratio.max";
 }
 
 static ENABLED: AtomicBool = AtomicBool::new(false);

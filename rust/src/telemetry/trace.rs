@@ -108,7 +108,11 @@ impl LocalBuf {
         let mut sink = global().lock().unwrap();
         let room = GLOBAL_EVENT_CAP.saturating_sub(sink.events.len());
         if room < self.events.len() {
-            DROPPED.fetch_add((self.events.len() - room) as u64, Ordering::Relaxed);
+            let lost = (self.events.len() - room) as u64;
+            DROPPED.fetch_add(lost, Ordering::Relaxed);
+            // Live surface (Prometheus/JSONL), not only the post-hoc
+            // chrome-trace otherData. No-op when telemetry is disabled.
+            crate::telemetry::counter(crate::telemetry::keys::TRACE_DROPPED).incr(lost);
             self.events.truncate(room);
         }
         sink.events.append(&mut self.events);
@@ -211,6 +215,22 @@ pub fn is_tracing() -> bool {
 /// threads' rings flush on fill and on thread exit.
 pub fn flush_thread() {
     let _ = LOCAL.try_with(|cell| cell.borrow_mut().flush());
+}
+
+/// Clone the newest `n` events without consuming anything — the crash
+/// flight recorder's view of the trace ring. Unlike [`drain`] this
+/// leaves the buffer and drop counter intact, so an active
+/// [`TraceExporter`] still gets the full trace at shutdown.
+pub fn tail(n: usize) -> Vec<TraceEvent> {
+    flush_thread();
+    let sink = global().lock().unwrap();
+    let start = sink.events.len().saturating_sub(n);
+    sink.events[start..].to_vec()
+}
+
+/// Events dropped so far (live view; [`drain`] resets it).
+pub fn dropped_total() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
 }
 
 /// Take everything captured so far: `(events, thread names, dropped)`.

@@ -3,8 +3,12 @@
 //! Frames:
 //!   0x01 Model     : u32 d | d * f32          (master -> worker broadcast)
 //!   0x02 Up        : u8 kind | f64 loss | u64 bits | u32 nnz
-//!                    | nnz * u32 idx | nnz * f32 val
-//!                    kind: 0 = Sparse, 1 = Markov delta, 2 = DCGD assign
+//!                    | nnz * u32 idx | nnz * f32 val [| f64 health]
+//!                    kind low 7 bits: 0 = Sparse, 1 = Markov delta,
+//!                    2 = DCGD assign; high bit 0x80 set means a trailing
+//!                    f64 health probe (the worker's ||g_i - grad f_i||^2)
+//!                    follows the payload — instrumentation, excluded
+//!                    from metered bits like `loss`
 //!   0x03 Stop      : empty                    (master -> worker shutdown)
 //!   0x04 ModelDelta: u32 n_patches | per patch: u32 offset | u32 len
 //!                    | len * f32              (blocks past the f32 floor;
@@ -49,6 +53,11 @@ pub const TAG_CKPT_REQ: u8 = 0x07;
 pub const TAG_CKPT_STATE: u8 = 0x08;
 pub const TAG_RESTORE: u8 = 0x09;
 
+/// High bit of the `Up` kind byte: a trailing f64 health probe follows
+/// the payload. `UpBlock` never sets it (health-on workers send whole
+/// `Up` frames instead of splitting).
+pub const HEALTH_FLAG: u8 = 0x80;
+
 /// One contiguous patch of a [`Frame::ModelDelta`] broadcast.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BlockPatch {
@@ -63,8 +72,9 @@ pub struct BlockPatch {
 pub enum Frame {
     /// Broadcast model (f32 on the wire).
     Model(Vec<f64>),
-    /// Worker uplink: message plus piggybacked instrumentation loss.
-    Up { msg: WireMsg, loss: f64 },
+    /// Worker uplink: message plus piggybacked instrumentation loss and
+    /// (with `--health`) the worker's distortion probe `||g_i - grad f_i||^2`.
+    Up { msg: WireMsg, loss: f64, health: Option<f64> },
     Stop,
     /// Broadcast delta: only the blocks whose f32 image moved since the
     /// last broadcast. An empty patch list is a heartbeat (the round
@@ -224,11 +234,15 @@ fn encode_impl(frame: &Frame, out: &mut Vec<u8>) {
                 put_f32(&mut out, v as f32);
             }
         }
-        Frame::Up { msg, loss } => {
+        Frame::Up { msg, loss, health } => {
             out.push(TAG_UP);
             let (kind, payload) = msg_kind(msg);
-            out.push(kind);
+            // High bit of the kind byte flags a trailing health probe.
+            out.push(kind | if health.is_some() { HEALTH_FLAG } else { 0 });
             put_msg_body(&mut out, payload, *loss);
+            if let Some(h) = health {
+                put_f64(&mut out, *h);
+            }
         }
         Frame::Stop => out.push(TAG_STOP),
         Frame::ModelDelta(patches) => {
@@ -316,8 +330,10 @@ fn decode_impl(bytes: &[u8]) -> Result<Frame> {
         }
         TAG_UP => {
             let kind = r.u8()?;
-            let (msg, loss) = take_msg_body(&mut r, kind)?;
-            Frame::Up { msg, loss }
+            let (msg, loss) = take_msg_body(&mut r, kind & !HEALTH_FLAG)?;
+            let health =
+                if kind & HEALTH_FLAG != 0 { Some(r.f64()?) } else { None };
+            Frame::Up { msg, loss, health }
         }
         TAG_STOP => Frame::Stop,
         TAG_MODEL_DELTA => {
@@ -405,10 +421,11 @@ mod tests {
 
     #[test]
     fn roundtrip_up() {
-        let f = Frame::Up { msg: sample_msg(), loss: 0.75 };
+        let f = Frame::Up { msg: sample_msg(), loss: 0.75, health: None };
         match decode(&encode(&f)).unwrap() {
-            Frame::Up { msg, loss } => {
+            Frame::Up { msg, loss, health } => {
                 assert_eq!(loss, 0.75);
+                assert_eq!(health, None);
                 match msg {
                     WireMsg::Tagged { dcgd_branch, payload } => {
                         assert!(dcgd_branch);
@@ -429,7 +446,7 @@ mod tests {
         assert!(decode(&[0xFF]).is_err());
         assert!(decode(&[]).is_err());
         // Truncated Up frame.
-        let mut bytes = encode(&Frame::Up { msg: sample_msg(), loss: 0.0 });
+        let mut bytes = encode(&Frame::Up { msg: sample_msg(), loss: 0.0, health: None });
         bytes.truncate(bytes.len() - 1);
         assert!(decode(&bytes).is_err());
         // Trailing junk.
@@ -541,7 +558,7 @@ mod tests {
     fn encode_into_matches_encode_and_reuses_buffer() {
         let frames = [
             Frame::Model(vec![1.0, -2.5]),
-            Frame::Up { msg: sample_msg(), loss: 0.5 },
+            Frame::Up { msg: sample_msg(), loss: 0.5, health: Some(0.125) },
             Frame::Stop,
             Frame::StateSync(vec![0.25; 3]),
         ];
@@ -559,6 +576,34 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_up_with_health_probe() {
+        // Health probe travels as exact f64 after the payload; the
+        // flagged frame costs exactly 8 bytes more than the plain one.
+        let plain = encode(&Frame::Up { msg: sample_msg(), loss: 0.75, health: None });
+        let probe = 1.25e-7_f64;
+        let f = Frame::Up { msg: sample_msg(), loss: 0.75, health: Some(probe) };
+        let bytes = encode(&f);
+        assert_eq!(bytes.len(), plain.len() + 8);
+        assert_eq!(bytes[1] & HEALTH_FLAG, HEALTH_FLAG);
+        match decode(&bytes).unwrap() {
+            Frame::Up { msg, loss, health } => {
+                assert_eq!(loss, 0.75);
+                assert_eq!(health.unwrap().to_bits(), probe.to_bits());
+                assert_eq!(msg.bits(), 3 * 64 + 1 + 1);
+            }
+            _ => panic!("wrong frame"),
+        }
+        // Truncating the trailing probe is rejected.
+        let mut cut = bytes.clone();
+        cut.truncate(cut.len() - 1);
+        assert!(decode(&cut).is_err());
+        // A flagged UpBlock kind byte is rejected (blocks never carry it).
+        let mut blk = encode(&Frame::UpBlock { block: 0, n_blocks: 2, msg: sample_msg(), loss: 0.0 });
+        blk[1] |= HEALTH_FLAG;
+        assert!(decode(&blk).is_err());
+    }
+
+    #[test]
     fn payload_bytes_match_accounted_bits() {
         // Up frame payload (idx+val) must be exactly bits/8 rounded up
         // minus the tag bit for sparse messages.
@@ -567,6 +612,7 @@ mod tests {
         let f = Frame::Up {
             msg: WireMsg::Sparse(Compressed { sparse, bits }),
             loss: 0.0,
+            health: None,
         };
         let bytes = encode(&f);
         // header: tag(1) + kind(1) + loss(8) + bits(8) + nnz(4) = 22 bytes.

@@ -1,16 +1,28 @@
 //! Process memory introspection for the fleet bench: resident set size
-//! read from `/proc/self/status` (no external crates). Off Linux the
-//! probes return `None` and the bench simply omits the fields.
+//! read from `/proc/self/status` (no external crates). When the file is
+//! unavailable — non-Linux hosts, or containers that mask `/proc` — the
+//! probes degrade to `None` and the bench reports the column as JSON
+//! `null` instead of omitting or fabricating it.
 
 /// Parse a `VmRSS:\t  123 kB`-style line's numeric field.
 fn parse_kb_line(line: &str) -> Option<u64> {
     line.split_whitespace().nth(1)?.parse().ok()
 }
 
+/// Extract `key`'s kB value from status-file text.
+fn field_from_status(status: &str, key: &str) -> Option<u64> {
+    status.lines().find(|l| l.starts_with(key)).and_then(parse_kb_line)
+}
+
+/// Read a status file and pull one field; `None` on any failure (file
+/// missing, unreadable, field absent, or malformed).
+fn status_field_at(path: &str, key: &str) -> Option<u64> {
+    field_from_status(&std::fs::read_to_string(path).ok()?, key)
+}
+
 /// `/proc/self/status` field in kB, or `None` when unavailable.
 fn status_field(key: &str) -> Option<u64> {
-    let status = std::fs::read_to_string("/proc/self/status").ok()?;
-    status.lines().find(|l| l.starts_with(key)).and_then(parse_kb_line)
+    status_field_at("/proc/self/status", key)
 }
 
 /// Current resident set size in kB (`VmRSS`).
@@ -33,6 +45,25 @@ mod tests {
         assert_eq!(parse_kb_line("VmRSS: 7 kB"), Some(7));
         assert_eq!(parse_kb_line("VmRSS:"), None);
         assert_eq!(parse_kb_line("VmRSS:\tnope kB"), None);
+    }
+
+    #[test]
+    fn extracts_field_from_status_text() {
+        let status = "Name:\tef21\nVmHWM:\t  2048 kB\nVmRSS:\t  1024 kB\n";
+        assert_eq!(field_from_status(status, "VmRSS:"), Some(1024));
+        assert_eq!(field_from_status(status, "VmHWM:"), Some(2048));
+        assert_eq!(field_from_status(status, "VmSwap:"), None);
+        assert_eq!(field_from_status("", "VmRSS:"), None);
+    }
+
+    /// The degraded branch: a missing status file (non-Linux, masked
+    /// /proc) yields `None` rather than an error or a bogus number.
+    #[test]
+    fn missing_status_file_degrades_to_none() {
+        assert_eq!(
+            status_field_at("/proc/ef21-no-such-status-file", "VmRSS:"),
+            None
+        );
     }
 
     #[test]

@@ -69,12 +69,15 @@ fn roundtrip_property_all_frame_kinds() {
             _ => panic!("Model roundtrip changed kind"),
         }
 
-        // Up
+        // Up: the optional health probe rides the kind byte's high bit
+        // and must round-trip bit for bit (f64, no f32 quantization).
         let msg = random_msg(rng, d);
         let loss = rng.next_normal();
-        match decode(&encode(&Frame::Up { msg: msg.clone(), loss })).unwrap() {
-            Frame::Up { msg: m2, loss: l2 } => {
+        let health = if rng.next_below(2) == 0 { Some(rng.next_normal()) } else { None };
+        match decode(&encode(&Frame::Up { msg: msg.clone(), loss, health })).unwrap() {
+            Frame::Up { msg: m2, loss: l2, health: h2 } => {
                 assert_eq!(loss.to_bits(), l2.to_bits());
+                assert_eq!(health.map(f64::to_bits), h2.map(f64::to_bits));
                 assert_msg_eq(&msg, &m2);
             }
             _ => panic!("Up roundtrip changed kind"),
@@ -136,7 +139,7 @@ fn truncation_never_panics() {
         let d = 2 + rng.next_below(60);
         let frames = vec![
             Frame::Model((0..d).map(|_| rng.next_normal()).collect()),
-            Frame::Up { msg: random_msg(rng, d), loss: 0.5 },
+            Frame::Up { msg: random_msg(rng, d), loss: 0.5, health: Some(0.25) },
             Frame::UpBlock { block: 0, n_blocks: 3, msg: random_msg(rng, d), loss: 0.0 },
             Frame::ModelDelta(vec![BlockPatch {
                 offset: 1,

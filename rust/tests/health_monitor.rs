@@ -1,0 +1,146 @@
+//! Integration tests for the theory-grounded health monitor
+//! (DESIGN.md §12): on a clean EF21 least-squares run at the Theorem-1
+//! stepsize the Lyapunov function Φ^t = f(x^t) + (γ/θ)·G^t descends
+//! every round and the anomaly detector stays silent; and with health
+//! off (the default) or on, the trajectory is bit-identical — the
+//! monitor is observation-only. The golden-trajectory fixtures run with
+//! `CkptOptions::default()` (health = None), so they lock the health-off
+//! path; the invisibility test here locks the health-on path against it.
+
+use ef21::algo::{AlgoSpec, MasterNode as _, WireMsg, WorkerNode as _};
+use ef21::blocks::BlockLayout;
+use ef21::compress::Compressor;
+use ef21::coordinator::runner::CkptOptions;
+use ef21::exp::{Objective, Problem};
+use ef21::health::{Health, HealthSpec};
+use ef21::theory;
+use std::sync::Arc;
+
+const N_WORKERS: usize = 4;
+const K: usize = 2;
+
+/// Least-squares problem (PL, §A.2) — the objective the acceptance
+/// criterion names.
+fn lstsq_problem() -> Problem {
+    let ds = ef21::data::synth::generate_custom("health", 240, 12, 0.4, 7);
+    Problem::from_dataset(ds, Objective::Lstsq, N_WORKERS, 0.0)
+}
+
+/// Clean EF21 at the Theorem-1 stepsize: drive the protocol manually
+/// (the same init/begin_round/round/absorb order as the runners), feed
+/// each round's worker probes to [`Health::observe`], and assert the
+/// paper's certificates hold — Φ^{t+1} ≤ Φ^t every round, the top-k
+/// contraction ratio stays under (1−α), and zero anomalies fire. Φ is
+/// recomputed here from the raw probes, independently of the monitor's
+/// arithmetic, so the test checks the theory and the monitor against
+/// each other.
+#[test]
+fn clean_ef21_lstsq_descends_lyapunov_with_zero_anomalies() {
+    let p = lstsq_problem();
+    let d = p.d();
+    let c: Arc<dyn Compressor> = Arc::from(ef21::compress::from_spec(&format!("top{K}")).unwrap());
+    let alpha = c.alpha(d);
+    let gamma = theory::stepsize_theorem1(p.smoothness.l, p.smoothness.l_tilde, alpha);
+    let (theta, _) = theory::theta_beta(alpha);
+
+    let (mut master, mut workers) =
+        ef21::algo::build(AlgoSpec::Ef21, vec![0.0; d], p.oracles(), c, gamma, 7);
+    let x0 = master.x().to_vec();
+    let init: Vec<WireMsg> = workers.iter_mut().map(|w| w.init(&x0)).collect();
+    master.init_absorb(&init);
+
+    let cfg = HealthSpec::parse("every:1").unwrap().build(alpha, gamma).unwrap();
+    let mut health = Health::new(cfg, "health-test");
+
+    let rounds = 60;
+    let mut prev_phi = f64::INFINITY;
+    let mut first_phi = f64::NAN;
+    for t in 0..rounds {
+        let x = master.begin_round();
+        let msgs: Vec<WireMsg> = workers.iter_mut().map(|w| w.round(&x)).collect();
+        master.absorb(&msgs);
+
+        let loss = workers.iter().map(|w| w.last_loss()).sum::<f64>() / N_WORKERS as f64;
+        let probes: Vec<(f64, f64)> = workers
+            .iter()
+            .map(|w| {
+                (
+                    w.distortion_sq().expect("EF21 exposes err_sq"),
+                    w.contraction_ref_sq().expect("EF21 exposes ref_sq"),
+                )
+            })
+            .collect();
+
+        // Eq. 3, deterministic for top-k: ||C(v)−v||² ≤ (1−α)||v||².
+        for (w, &(err, ref_sq)) in probes.iter().enumerate() {
+            if ref_sq > 0.0 {
+                assert!(
+                    err / ref_sq <= (1.0 - alpha) + 1e-12,
+                    "round {t} worker {w}: contraction ratio {} > 1−α = {}",
+                    err / ref_sq,
+                    1.0 - alpha
+                );
+            }
+        }
+
+        // Theorem 1's certificate, recomputed from the raw probes.
+        let gt = probes.iter().map(|&(err, _)| err).sum::<f64>() / N_WORKERS as f64;
+        let phi = loss + (gamma / theta) * gt;
+        assert!(
+            phi <= prev_phi + 1e-9 * prev_phi.abs().max(1.0),
+            "round {t}: Φ rose from {prev_phi} to {phi}"
+        );
+        prev_phi = phi;
+        if t == 0 {
+            first_phi = phi;
+        }
+
+        let anomalies = health.observe(t, loss, &probes);
+        assert!(anomalies.is_empty(), "round {t}: unexpected anomalies {anomalies:?}");
+    }
+    assert_eq!(health.records, rounds as u64);
+    assert_eq!(health.anomaly_count, 0);
+    // The run actually made progress — Φ descent was not vacuous.
+    assert!(prev_phi < first_phi, "Φ never decreased: {first_phi} -> {prev_phi}");
+}
+
+/// Health is observation-only: the same trial run with the monitor off
+/// (the default) and on (every round) produces bit-identical histories.
+/// Together with the golden fixtures (which run health-off), this locks
+/// both sides of the bit-identity contract.
+#[test]
+fn health_monitor_is_trajectory_invisible() {
+    let p = lstsq_problem();
+    let layout = Arc::new(BlockLayout::flat(p.d()));
+    let run = |opts: CkptOptions| {
+        p.run_trial_ckpt(AlgoSpec::Ef21, "top2", 1.0, None, 30, 1, 7, 1, layout.clone(), opts)
+            .expect("trial")
+    };
+
+    let off_opts = CkptOptions::default();
+    assert!(off_opts.health.is_none(), "health must default to off");
+    let off = run(off_opts);
+
+    let alpha = K as f64 / p.d() as f64;
+    let health = HealthSpec::parse("every:1").unwrap().build(alpha, p.theory_gamma(alpha));
+    let on = run(CkptOptions::default().with_health(health));
+
+    assert_eq!(off.records.len(), on.records.len());
+    for (a, b) in off.records.iter().zip(&on.records) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss @r{}", a.round);
+        assert_eq!(
+            a.grad_norm_sq.to_bits(),
+            b.grad_norm_sq.to_bits(),
+            "|grad|^2 @r{}",
+            a.round
+        );
+        assert_eq!(a.gt.to_bits(), b.gt.to_bits(), "G^t @r{}", a.round);
+        assert_eq!(a.bits_per_client.to_bits(), b.bits_per_client.to_bits(), "bits @r{}", a.round);
+    }
+    assert_eq!(off.downlink_bits, on.downlink_bits);
+    assert_eq!(off.final_x.len(), on.final_x.len());
+    for (i, (xa, xb)) in off.final_x.iter().zip(&on.final_x).enumerate() {
+        assert_eq!(xa.to_bits(), xb.to_bits(), "final_x[{i}]");
+    }
+}

@@ -14,8 +14,10 @@ use ef21::coordinator::reactor::run_reactor;
 use ef21::data::{partition, synth};
 use ef21::oracle::{GradOracle, LogRegOracle};
 use ef21::sched::StateTracker;
+use ef21::telemetry;
 use ef21::util::linalg;
 use ef21::util::rng::Rng;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 const N_WORKERS: usize = 6;
@@ -114,6 +116,67 @@ fn reactor_matches_threads_bitwise_over_tcp() {
     assert_bitwise_equal(&threads, &reactor, "ef21 top2 tcp");
 }
 
+/// Run `f` with telemetry enabled and a private registry layered onto
+/// the facade (the `bench::with_round_stats` pattern), returning `f`'s
+/// result plus per-worker round-latency sample counts and the rendered
+/// straggler report from that registry.
+fn with_worker_latency<T>(
+    f: impl FnOnce() -> T,
+) -> (T, BTreeMap<usize, u64>, Option<String>) {
+    let reg = Arc::new(telemetry::Registry::new());
+    telemetry::push_layer(Arc::new(telemetry::RegistryRecorder::new(reg.clone())));
+    let was_enabled = telemetry::is_enabled();
+    telemetry::enable();
+    let out = f();
+    if !was_enabled {
+        telemetry::disable();
+    }
+    telemetry::pop_layer();
+    let snap = reg.snapshot();
+    let counts = snap
+        .histograms
+        .iter()
+        .filter_map(|(key, h)| {
+            let w: usize = key.strip_prefix(telemetry::keys::WORKER_ROUND_NS_PREFIX)?.parse().ok()?;
+            Some((w, h.count))
+        })
+        .collect();
+    (out, counts, snap.render_straggler_report(N_WORKERS))
+}
+
+/// Reactor-master parity for per-worker latency telemetry: the reactor's
+/// `collect_round` must populate the same `coordinator.worker.round.ns.w<i>`
+/// histograms the thread master does, and the straggler report must
+/// render from either engine's samples. Counts are asserted as `>=`
+/// rather than `==`: telemetry enablement is process-global, so sibling
+/// tests running concurrently in this binary may add samples to the
+/// layered registry (they all drive the same N_WORKERS, so the worker
+/// index set stays exact).
+#[test]
+fn reactor_worker_latency_telemetry_matches_threads() {
+    let (threads, t_counts, t_report) =
+        with_worker_latency(|| run_threads(AlgoSpec::Ef21, "top2", TransportKind::Local));
+    let (reactor, r_counts, r_report) =
+        with_worker_latency(|| run_reactor_engine(AlgoSpec::Ef21, "top2", TransportKind::Local, 3));
+    // Telemetry capture must not perturb the trajectory.
+    assert_bitwise_equal(&threads, &reactor, "ef21 top2 telemetry-on");
+    let all: Vec<usize> = (0..N_WORKERS).collect();
+    for (label, counts) in [("threads", &t_counts), ("reactor", &r_counts)] {
+        let workers: Vec<usize> = counts.keys().copied().collect();
+        assert_eq!(workers, all, "{label}: per-worker histogram coverage");
+        for (w, n) in counts {
+            assert!(*n >= ROUNDS as u64, "{label}: w{w} has {n} samples, want >= {ROUNDS}");
+        }
+    }
+    for (label, report) in [("threads", t_report), ("reactor", r_report)] {
+        let text = report.unwrap_or_else(|| panic!("{label}: straggler report missing"));
+        assert!(
+            text.contains(&format!("top {N_WORKERS} of")),
+            "{label}: report lists all workers:\n{text}"
+        );
+    }
+}
+
 /// The aggregation tree's integration-level contract: at every
 /// (shards, fanout) split the fleet master's g/x trajectories equal the
 /// flat worker-order fold bitwise.
@@ -129,6 +192,7 @@ fn aggregation_tree_equals_flat_fold_bitwise_at_all_fanouts() {
         seed: 42,
         gamma: 0.3,
         track_mirrors: false,
+        blackbox: None,
     };
     let mut g = vec![0.0; base.d];
     let mut x = vec![0.0; base.d];

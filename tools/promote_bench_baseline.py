@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Promote measured bench cases from a CI `bench-baseline` artifact into
+the committed BENCH_round.json perf baseline.
+
+The perf gate (ci.yml, "Baseline diff") fails a run at <0.9x
+rounds_per_sec or >1.1x round_ns.p99 against the committed baseline.
+The original baseline was a deliberately conservative hand-seeded
+bootstrap; this script replaces entries with *measured* CI values,
+derated by a headroom factor so runner noise does not make the gate
+flaky: promoted rounds_per_sec = measured * 0.85 and promoted p99 =
+measured * 1.20 by default. Raw measured values are preserved per case
+under a `measured` sub-object (the gate only reads `rounds_per_sec` and
+`round_ns.p99`), and a top-level `provenance` block records where each
+promoted case came from.
+
+Typical flow from the repo root:
+
+    gh run download <run-id> -n bench-baseline -D /tmp/ba
+    tools/promote_bench_baseline.py \
+        --baseline BENCH_round.json \
+        --measured /tmp/ba/fleet_n100.json \
+        --measured /tmp/ba/fleet_n10000.json \
+        --source "ci run <run-id>" --only fleet. --in-place
+    git add BENCH_round.json
+
+Or just take the candidate CI already assembled with this script:
+`bench-baseline` contains BENCH_round.promoted.json — copy it over
+BENCH_round.json and commit.
+
+Later --measured files win on case-name collisions, so the per-process
+fleet reports (independent RSS samples) override the in-process fleet
+entries of a full run's report.
+"""
+
+import argparse
+import json
+import sys
+
+SCHEMA_PREFIX = "ef21.bench.round/"
+
+
+def load_report(path):
+    with open(path) as f:
+        report = json.load(f)
+    schema = report.get("schema", "")
+    if not schema.startswith(SCHEMA_PREFIX):
+        sys.exit(f"{path}: schema {schema!r} is not an {SCHEMA_PREFIX}* report")
+    return report
+
+
+def derate(case, rps_headroom, p99_headroom):
+    """A gate-safe copy of a measured case: throughput floor lowered,
+    tail ceiling raised, raw numbers kept under `measured`."""
+    out = dict(case)
+    measured = {}
+    if case.get("rounds_per_sec"):
+        measured["rounds_per_sec"] = case["rounds_per_sec"]
+        out["rounds_per_sec"] = round(case["rounds_per_sec"] * rps_headroom, 1)
+    if isinstance(case.get("round_ns"), dict) and case["round_ns"].get("p99"):
+        measured["p99"] = case["round_ns"]["p99"]
+        out["round_ns"] = dict(case["round_ns"])
+        out["round_ns"]["p99"] = int(case["round_ns"]["p99"] * p99_headroom)
+    out["measured"] = measured
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed baseline to merge into")
+    ap.add_argument(
+        "--measured",
+        action="append",
+        required=True,
+        help="measured report(s) from the bench-baseline artifact; repeatable, later wins",
+    )
+    ap.add_argument(
+        "--only",
+        action="append",
+        default=[],
+        help="promote only cases whose name starts with this prefix (repeatable; default all)",
+    )
+    ap.add_argument("--source", default="ci bench-baseline artifact", help="provenance note")
+    ap.add_argument("--rps-headroom", type=float, default=0.85)
+    ap.add_argument("--p99-headroom", type=float, default=1.20)
+    ap.add_argument("--out", help="write here instead of stdout")
+    ap.add_argument("--in-place", action="store_true", help="overwrite --baseline")
+    args = ap.parse_args()
+
+    baseline = load_report(args.baseline)
+    wanted = lambda name: not args.only or any(name.startswith(p) for p in args.only)
+
+    promoted = {}
+    for path in args.measured:
+        for case in load_report(path)["cases"]:
+            if wanted(case["name"]):
+                promoted[case["name"]] = (
+                    derate(case, args.rps_headroom, args.p99_headroom),
+                    path,
+                )
+    if not promoted:
+        sys.exit("no measured cases matched the --only filter")
+
+    cases, seen = [], set()
+    for case in baseline["cases"]:
+        if case["name"] in promoted:
+            cases.append(promoted[case["name"]][0])
+            seen.add(case["name"])
+        else:
+            cases.append(case)
+    for name, (case, _) in promoted.items():
+        if name not in seen:
+            cases.append(case)
+    baseline["cases"] = cases
+
+    prov = baseline.setdefault("provenance", {})
+    for name, (_, path) in sorted(promoted.items()):
+        prov[name] = {
+            "source": args.source,
+            "from": path.rsplit("/", 1)[-1],
+            "rps_headroom": args.rps_headroom,
+            "p99_headroom": args.p99_headroom,
+        }
+
+    body = json.dumps(baseline, indent=2) + "\n"
+    out_path = args.baseline if args.in_place else args.out
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(body)
+        names = ", ".join(sorted(promoted))
+        print(f"promoted {len(promoted)} case(s) into {out_path}: {names}")
+    else:
+        sys.stdout.write(body)
+
+
+if __name__ == "__main__":
+    main()
