@@ -327,6 +327,103 @@ impl CkptSpec {
     }
 }
 
+/// `--session`/`--chaos`/`--on-worker-loss`/`--min-workers` spec: the
+/// self-healing transport session layer (DESIGN.md §13). The default —
+/// sessions off, no chaos, abort on worker loss — is the exact legacy
+/// wire protocol, byte for byte.
+///
+/// Deliberately excluded from the checkpoint fingerprint: the session
+/// envelope is transport framing, recovery replays the identical logical
+/// frame stream, and degradation reuses the scheduler-absence (EF21-PP)
+/// semantics the fingerprint already captures via the participation
+/// spec. A snapshot moves freely between session-on and session-off
+/// runs.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NetSpec {
+    /// `--session on|off`; `None` = auto (on exactly when chaos or a
+    /// non-abort loss policy or a quorum floor needs it).
+    pub session: Option<bool>,
+    /// `--chaos <spec>` clauses (`reset(w@r)`, `corrupt(w@r)`,
+    /// `stall(w,r0..r1,MSms)`, `down(w@r)`), kept raw until build.
+    pub chaos: Option<String>,
+    /// `--on-worker-loss abort|degrade:<grace_ms>|wait`.
+    pub on_loss: crate::coordinator::dist::LossPolicy,
+    /// `--min-workers <n>` quorum floor for the degrade policy.
+    pub min_workers: Option<usize>,
+}
+
+impl NetSpec {
+    /// Read the four flags from parsed args (all absent = legacy).
+    pub fn from_args(args: &cli::Args) -> Result<NetSpec> {
+        use crate::coordinator::dist::LossPolicy;
+        let session = match args.get_str("session") {
+            None => None,
+            Some("on") => Some(true),
+            Some("off") => Some(false),
+            Some(other) => anyhow::bail!("--session {other}: expected 'on' or 'off'"),
+        };
+        let chaos = args.get_str("chaos").map(str::to_string);
+        let on_loss = match args.get_str("on-worker-loss") {
+            None | Some("abort") => LossPolicy::Abort,
+            Some("wait") => LossPolicy::Wait,
+            Some(s) => match s.strip_prefix("degrade:").map(str::parse::<u64>) {
+                Some(Ok(grace_ms)) => LossPolicy::Degrade { grace_ms },
+                _ => anyhow::bail!(
+                    "--on-worker-loss {s}: expected abort, degrade:<grace_ms>, or wait"
+                ),
+            },
+        };
+        let min_workers = args.get_parse::<usize>("min-workers")?;
+        let spec = NetSpec { session, chaos, on_loss, min_workers };
+        anyhow::ensure!(
+            session != Some(false) || !spec.needs_session(),
+            "--session off conflicts with --chaos/--on-worker-loss/--min-workers: \
+             recovery and degradation both run over sessions"
+        );
+        Ok(spec)
+    }
+
+    /// True when this spec cannot change the legacy wire protocol.
+    pub fn is_legacy(&self) -> bool {
+        self.session != Some(true)
+            && self.chaos.is_none()
+            && self.on_loss == crate::coordinator::dist::LossPolicy::Abort
+            && self.min_workers.is_none()
+    }
+
+    /// Would the resolved spec run with sessions enabled? Auto-enables
+    /// when any dependent feature is requested.
+    pub fn session_enabled(&self) -> bool {
+        self.session.unwrap_or_else(|| self.needs_session())
+    }
+
+    /// Some other flag depends on the session layer.
+    fn needs_session(&self) -> bool {
+        self.chaos.is_some()
+            || self.on_loss != crate::coordinator::dist::LossPolicy::Abort
+            || self.min_workers.is_some()
+    }
+
+    /// Resolve to runner [`crate::coordinator::dist::NetOpts`], parsing
+    /// the chaos spec and minting the run's session config (ids and
+    /// retry jitter derive from the run seed).
+    pub fn build(&self, seed: u64) -> Result<crate::coordinator::dist::NetOpts> {
+        let mut net = crate::coordinator::dist::NetOpts::default();
+        if let Some(spec) = &self.chaos {
+            let plan = crate::transport::chaos::ChaosPlan::parse(spec)?;
+            if !plan.is_empty() {
+                net.chaos = Some(std::sync::Arc::new(plan));
+            }
+        }
+        net.on_loss = self.on_loss;
+        net.min_workers = self.min_workers;
+        if self.session_enabled() {
+            net.session = Some(crate::transport::session::SessionCfg::new(seed));
+        }
+        Ok(net)
+    }
+}
+
 /// Read `--net-timeout-ms` (0 = disable I/O timeouts). The caller
 /// installs it process-wide via
 /// [`crate::transport::tcp::set_default_io_timeout_ms`]; when absent the
@@ -753,5 +850,80 @@ mod tests {
     fn bad_values_error() {
         let args = cli::Args::from_vec(vec!["--rounds".into(), "abc".into()]);
         assert!(RunSpec::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn net_spec_parses_and_auto_enables_sessions() {
+        use crate::coordinator::dist::LossPolicy;
+        // Absent flags = legacy = sessions off, exact legacy wire bytes.
+        let d = NetSpec::from_args(&cli::Args::from_vec(vec![])).unwrap();
+        assert!(d.is_legacy());
+        assert!(!d.session_enabled());
+        let net = d.build(7).unwrap();
+        assert!(net.session.is_none() && net.chaos.is_none());
+        assert_eq!(net.on_loss, LossPolicy::Abort);
+        // `--session on` alone wraps frames but changes nothing else.
+        let s = NetSpec::from_args(&cli::Args::from_vec(vec![
+            "--session".into(),
+            "on".into(),
+        ]))
+        .unwrap();
+        assert!(!s.is_legacy());
+        assert!(s.session_enabled());
+        assert!(s.build(7).unwrap().session.is_some());
+        // Chaos / degrade / quorum each auto-enable sessions.
+        let s = NetSpec::from_args(&cli::Args::from_vec(vec![
+            "--chaos".into(),
+            "reset(0@2),corrupt(1@4)".into(),
+            "--on-worker-loss".into(),
+            "degrade:500".into(),
+            "--min-workers".into(),
+            "3".into(),
+        ]))
+        .unwrap();
+        assert!(s.session_enabled());
+        assert_eq!(s.on_loss, LossPolicy::Degrade { grace_ms: 500 });
+        assert_eq!(s.min_workers, Some(3));
+        let net = s.build(7).unwrap();
+        assert!(net.session.is_some());
+        assert!(net.chaos.is_some());
+        assert_eq!(
+            NetSpec::from_args(&cli::Args::from_vec(vec![
+                "--on-worker-loss".into(),
+                "wait".into(),
+            ]))
+            .unwrap()
+            .on_loss,
+            LossPolicy::Wait
+        );
+        // Conflicts and malformed values error at parse/build.
+        assert!(NetSpec::from_args(&cli::Args::from_vec(vec![
+            "--session".into(),
+            "off".into(),
+            "--chaos".into(),
+            "reset(0@2)".into(),
+        ]))
+        .is_err());
+        assert!(NetSpec::from_args(&cli::Args::from_vec(vec![
+            "--session".into(),
+            "maybe".into(),
+        ]))
+        .is_err());
+        assert!(NetSpec::from_args(&cli::Args::from_vec(vec![
+            "--on-worker-loss".into(),
+            "degrade:soon".into(),
+        ]))
+        .is_err());
+        let bad = NetSpec { chaos: Some("explode(0@1)".into()), ..NetSpec::default() };
+        assert!(bad.build(7).is_err());
+        // Same seed → same session ids; the layer itself never shifts
+        // checkpoint identity (NetSpec is not part of RunSpec), so a
+        // snapshot moves freely between session-on and session-off runs.
+        let a = s.build(7).unwrap();
+        let b = s.build(7).unwrap();
+        assert_eq!(
+            a.session.as_ref().map(|c| c.seed),
+            b.session.as_ref().map(|c| c.seed)
+        );
     }
 }

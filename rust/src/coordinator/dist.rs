@@ -27,12 +27,17 @@ use crate::compress::{Compressed, SparseVec};
 use crate::metrics::{History, RoundRecord};
 use crate::sched::{Scheduler, StateTracker};
 use crate::telemetry::{self, keys};
+use crate::transport::chaos::{ChaosConn, ChaosPlan, SharedChaosState};
 use crate::transport::codec::{decode, encode, encode_into, BlockPatch, Frame};
 use crate::transport::downlink::DownlinkMeter;
 use crate::transport::fault::FaultConn;
+use crate::transport::session::{
+    Reconnect, RetryPolicy, RingOverrun, SessionCfg, SessionConn,
+};
 use crate::transport::{local, tcp, Conn};
 use anyhow::{bail, ensure, Context, Result};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Which transport carries the protocol.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,6 +56,71 @@ pub enum Broadcast {
     /// Block-delta frames over this layout: only blocks past the
     /// f32-quantization floor travel; uplinks are block-tagged.
     Delta(Arc<BlockLayout>),
+}
+
+/// What the master does when a worker exhausts its reconnect budget (or
+/// suffers an unrecoverable link death) mid-run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossPolicy {
+    /// Fail the run (default; exactly the pre-session behavior).
+    Abort,
+    /// Wait up to `grace_ms` for the worker to resume, then convert it
+    /// into a scheduler absence for every remaining round — EF21-PP
+    /// semantics, reusing the absent-message path (scheduled runner
+    /// only).
+    Degrade { grace_ms: u64 },
+    /// Wait indefinitely for the worker to reconnect.
+    Wait,
+}
+
+impl Default for LossPolicy {
+    fn default() -> Self {
+        LossPolicy::Abort
+    }
+}
+
+/// Network resilience options threaded through the distributed runners.
+/// The default (`None` everywhere, `Abort`) is byte-identical to the
+/// pre-session wire protocol.
+#[derive(Default)]
+pub struct NetOpts {
+    /// `Some` = session envelope + reconnect/replay on every conn.
+    pub session: Option<SessionCfg>,
+    /// Seeded wire chaos (requires `session`).
+    pub chaos: Option<Arc<ChaosPlan>>,
+    pub on_loss: LossPolicy,
+    /// Quorum floor for `Degrade`: fewer live workers than this aborts
+    /// the run (with a blackbox dump). `None` = 1.
+    pub min_workers: Option<usize>,
+}
+
+impl NetOpts {
+    /// Validation shared by every `_net` entry point.
+    fn validate(&self, n_workers: usize) -> Result<()> {
+        if let Some(chaos) = &self.chaos {
+            ensure!(
+                self.session.is_some(),
+                "wire chaos requires the session layer (its recovery path)"
+            );
+            if let Some(w) = chaos.max_worker() {
+                ensure!(
+                    w < n_workers,
+                    "chaos spec references worker {w} but the run has {n_workers}"
+                );
+            }
+        }
+        if let Some(m) = self.min_workers {
+            ensure!(
+                m >= 1 && m <= n_workers,
+                "--min-workers {m} out of range for {n_workers} workers"
+            );
+        }
+        Ok(())
+    }
+
+    fn quorum_floor(&self) -> usize {
+        self.min_workers.unwrap_or(1)
+    }
 }
 
 /// Outcome of a distributed run.
@@ -112,13 +182,21 @@ pub(crate) fn worker_loop(
     let mut cached: Option<Vec<f64>> = None;
     let mut rx_buf = Vec::new();
     let mut tx_buf = Vec::new();
+    // Broadcasts seen so far: round k's model is the (k+2)-th (the first
+    // is init). Only used to label I/O errors.
+    let mut round: i64 = -2;
     loop {
         let recv_span = telemetry::span_arg("dist.worker.recv", "w", w as u64);
-        conn.recv_into(&mut rx_buf)?;
+        conn.recv_into(&mut rx_buf)
+            .with_context(|| format!("worker {w}: recv broadcast (round {round})"))?;
         recv_span.end();
         match decode(&rx_buf)? {
-            Frame::Model(x) => cached = Some(x),
+            Frame::Model(x) => {
+                cached = Some(x);
+                round += 1;
+            }
             Frame::ModelDelta(patches) => {
+                round += 1;
                 let x = cached
                     .as_mut()
                     .context("worker got ModelDelta before any full Model frame")?;
@@ -179,13 +257,15 @@ pub(crate) fn worker_loop(
             let WireMsg::Sparse(c) = &msg else { unreachable!() };
             for frame in split_msg_by_blocks(c, layout, loss) {
                 encode_into(&frame, &mut tx_buf);
-                conn.send(&tx_buf)?;
+                conn.send(&tx_buf)
+                    .with_context(|| format!("worker {w}: send uplink block (round {round})"))?;
             }
         } else {
             let probe =
                 if health { Some(worker.distortion_sq().unwrap_or(f64::NAN)) } else { None };
             encode_into(&Frame::Up { msg, loss, health: probe }, &mut tx_buf);
-            conn.send(&tx_buf)?;
+            conn.send(&tx_buf)
+                .with_context(|| format!("worker {w}: send uplink (round {round})"))?;
         }
         send_span.end();
     }
@@ -282,7 +362,8 @@ fn gather(
     }
     for (w, c) in conns.iter_mut().enumerate() {
         let recv_span = telemetry::span_arg("dist.recv", "w", w as u64);
-        let (msg, loss, b, probe) = recv_worker_msg(c.as_mut(), rx_buf)?;
+        let (msg, loss, b, probe) = recv_worker_msg(c.as_mut(), rx_buf)
+            .with_context(|| format!("receiving uplink from worker {w}"))?;
         recv_span.end();
         if let Some(h) = healths.as_deref_mut() {
             // ref_sq never travels the wire: NaN keeps the contraction
@@ -368,12 +449,8 @@ pub(crate) fn wire_tcp_raw(
             // No connect stagger: accept order is irrelevant (the
             // master orders conns by the announced id below) and
             // the listener's deepened backlog absorbs the herd.
-            let (attempts, backoff) = tcp::connect_retry_schedule();
-            let mut conn = tcp::TcpConn::connect_with_retry(
-                &format!("127.0.0.1:{port}"),
-                attempts,
-                backoff,
-            )?;
+            let mut conn =
+                tcp::TcpConn::connect_with_retry(&format!("127.0.0.1:{port}"), i as u64)?;
             if unbounded_worker_reads {
                 conn.set_io_timeout(None)?;
             }
@@ -411,6 +488,168 @@ pub(crate) fn wire_tcp_raw(
     Ok((out, handles))
 }
 
+/// [`wire_transport`] plus the session/chaos layers from [`NetOpts`].
+/// With sessions off this *is* [`wire_transport`] — the wire bytes stay
+/// identical to builds without the session module. With sessions on,
+/// every endpoint gains a [`SessionConn`] (CRC envelope + retransmit
+/// ring); on TCP the worker side redials through a seeded
+/// [`RetryPolicy`] and the master side adopts resumed streams from a
+/// [`tcp::TcpSwitchboard`], keyed by the worker's RESUME hello. The
+/// chaos proxy (when armed) wraps only worker endpoints, *under* the
+/// session layer, and shares its fault state across redials.
+fn wire_transport_net(
+    kind: TransportKind,
+    n_workers: usize,
+    run_worker: RunWorker,
+    unbounded_worker_reads: bool,
+    net: &NetOpts,
+) -> Result<WiredTransport> {
+    let Some(cfg) = net.session.clone() else {
+        ensure!(net.chaos.is_none(), "wire chaos requires the session layer");
+        return wire_transport(kind, n_workers, run_worker, unbounded_worker_reads);
+    };
+    let seed = cfg.seed;
+    let chaos = net.chaos.clone();
+    let mut master_conns: Vec<Box<dyn Conn>> = Vec::with_capacity(n_workers);
+    let mut handles = Vec::with_capacity(n_workers);
+    match kind {
+        TransportKind::Local => {
+            // In-process channels cannot be redialed: both sides recover
+            // by in-place retransmission only (chaos runs soft, modelling
+            // resets as in-flight frame loss).
+            for i in 0..n_workers {
+                let (m_end, w_end) = local::pair();
+                master_conns.push(Box::new(SessionConn::new(
+                    Box::new(m_end),
+                    i,
+                    &cfg,
+                    Reconnect::Replay,
+                )));
+                let rw = run_worker.clone();
+                let wcfg = cfg.clone();
+                let plan = chaos.clone();
+                handles.push(std::thread::spawn(move || {
+                    let raw: Box<dyn Conn> = Box::new(w_end);
+                    let inner: Box<dyn Conn> = match plan {
+                        Some(p) => Box::new(ChaosConn::new(raw, p, i, seed, false)),
+                        None => raw,
+                    };
+                    let sess = SessionConn::new(inner, i, &wcfg, Reconnect::Replay);
+                    rw(i, Box::new(sess))
+                }));
+            }
+        }
+        TransportKind::Tcp => {
+            let mut sb = tcp::TcpSwitchboard::bind(n_workers)?;
+            let port = sb.port;
+            // `wait` keeps the worker redialing forever; everything else
+            // bounds the redial budget by the resolved I/O timeout.
+            let wait = net.on_loss == LossPolicy::Wait;
+            for i in 0..n_workers {
+                let rw = run_worker.clone();
+                let wcfg = cfg.clone();
+                let plan = chaos.clone();
+                handles.push(std::thread::spawn(move || -> Result<()> {
+                    let addr = format!("127.0.0.1:{port}");
+                    let mut conn = tcp::TcpConn::connect_with_retry(&addr, seed ^ i as u64)?;
+                    if unbounded_worker_reads {
+                        conn.set_io_timeout(None)?;
+                    }
+                    conn.send(&(i as u32).to_le_bytes())?;
+                    // The chaos state outlives any one socket: a redial
+                    // re-wraps the fresh conn around the same state.
+                    let chaos_state: Option<(Arc<ChaosPlan>, SharedChaosState)> =
+                        plan.map(|p| (p, SharedChaosState::default()));
+                    let wrap = |raw: tcp::TcpConn,
+                                st: &Option<(Arc<ChaosPlan>, SharedChaosState)>|
+                     -> Box<dyn Conn> {
+                        match st {
+                            Some((p, s)) => Box::new(ChaosConn::with_state(
+                                Box::new(raw),
+                                p.clone(),
+                                i,
+                                seed,
+                                true,
+                                s.clone(),
+                            )),
+                            None => Box::new(raw),
+                        }
+                    };
+                    let inner = wrap(conn, &chaos_state);
+                    let redial_addr = addr.clone();
+                    let redial = move || -> Result<Box<dyn Conn>> {
+                        let mut policy = RetryPolicy::for_io_timeout(seed ^ 0x5EED ^ i as u64);
+                        if wait {
+                            policy.budget = None;
+                        }
+                        let mut conn =
+                            policy.run(&format!("worker {i} redial {redial_addr}"), || {
+                                std::net::TcpStream::connect(&redial_addr)
+                                    .map_err(anyhow::Error::from)
+                                    .and_then(tcp::TcpConn::new)
+                            })?;
+                        if unbounded_worker_reads {
+                            conn.set_io_timeout(None)?;
+                        }
+                        conn.send(&(i as u32 | tcp::RESUME_FLAG).to_le_bytes())?;
+                        Ok(match &chaos_state {
+                            Some((p, s)) => Box::new(ChaosConn::with_state(
+                                Box::new(conn),
+                                p.clone(),
+                                i,
+                                seed,
+                                true,
+                                s.clone(),
+                            )),
+                            None => Box::new(conn),
+                        })
+                    };
+                    let sess =
+                        SessionConn::new(inner, i, &wcfg, Reconnect::Dial(Box::new(redial)));
+                    rw(i, Box::new(sess))
+                }));
+            }
+            let initial = sb.initial_conns(n_workers)?;
+            let mut resume_rxs = Vec::with_capacity(n_workers);
+            for w in 0..n_workers {
+                resume_rxs.push(sb.take_resume_rx(w));
+            }
+            // Keep the switchboard's acceptor alive for the whole run by
+            // cloning the Arc into every adopt closure; the last drop
+            // stops it.
+            let sb = Arc::new(sb);
+            let grace = match net.on_loss {
+                LossPolicy::Abort => Some(tcp::io_timeout().unwrap_or(tcp::DEFAULT_IO_TIMEOUT)),
+                LossPolicy::Degrade { grace_ms } => Some(Duration::from_millis(grace_ms)),
+                LossPolicy::Wait => None,
+            };
+            for (w, conn) in initial.into_iter().enumerate() {
+                let rx = resume_rxs.remove(0);
+                let keep = sb.clone();
+                let adopt = move || -> Result<Box<dyn Conn>> {
+                    let _ = &keep;
+                    let conn = match grace {
+                        Some(g) => rx.recv_timeout(g).map_err(|_| {
+                            anyhow::anyhow!("worker {w} did not reconnect within {g:?}")
+                        })?,
+                        None => rx.recv().map_err(|_| {
+                            anyhow::anyhow!("acceptor gone while awaiting worker {w} resume")
+                        })?,
+                    };
+                    Ok(Box::new(conn) as Box<dyn Conn>)
+                };
+                master_conns.push(Box::new(SessionConn::new(
+                    Box::new(conn),
+                    w,
+                    &cfg,
+                    Reconnect::Adopt(Box::new(adopt)),
+                )));
+            }
+        }
+    }
+    Ok((master_conns, handles))
+}
+
 /// Best-effort human-readable message out of a panic payload.
 pub(crate) fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
     p.downcast_ref::<&str>()
@@ -439,10 +678,52 @@ pub(crate) fn join_all(handles: Vec<std::thread::JoinHandle<Result<()>>>) -> Res
     }
 }
 
-/// Shared run tail: stamp the final model, stop every worker, join the
-/// threads, and package the outcome — one copy for both master loops so
-/// shutdown semantics cannot drift between the dense and the scheduled
-/// paths.
+/// [`join_all`] for runs where some workers were degraded to scheduler
+/// absences: a degraded worker's thread died (or is still parked) with
+/// the very transport failure that degraded it, so its exit is reported
+/// but never fails the run. A thread that has not finished (e.g. parked
+/// in an unbounded redial loop) is detached rather than joined — the
+/// run's outcome no longer depends on it.
+pub(crate) fn join_all_tolerant(
+    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    degraded: &[bool],
+) -> Result<()> {
+    let mut first_err: Option<anyhow::Error> = None;
+    for (i, h) in handles.into_iter().enumerate() {
+        if degraded.get(i).copied().unwrap_or(false) {
+            if h.is_finished() {
+                match h.join() {
+                    Ok(Err(e)) => eprintln!("[session] degraded worker {i} exited: {e:#}"),
+                    Err(p) => {
+                        eprintln!("[session] degraded worker {i} panicked: {}", panic_msg(&*p))
+                    }
+                    Ok(Ok(())) => {}
+                }
+            } else {
+                eprintln!("[session] detaching degraded worker {i}'s thread");
+                drop(h);
+            }
+            continue;
+        }
+        let res = match h.join() {
+            Ok(r) => r.with_context(|| format!("worker thread {i} failed")),
+            Err(p) => Err(anyhow::anyhow!("worker thread {i} panicked: {}", panic_msg(&*p))),
+        };
+        if let Err(e) = res {
+            first_err.get_or_insert(e);
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Shared run tail: stamp the final model, stop every live worker, join
+/// the threads, and package the outcome — one copy for both master loops
+/// so shutdown semantics cannot drift between the dense and the
+/// scheduled paths. `degraded` marks workers already lost to the
+/// `--on-worker-loss degrade` policy (empty slice = none).
 fn finish_run(
     master: Box<dyn MasterNode>,
     mut master_conns: Vec<Box<dyn Conn>>,
@@ -450,13 +731,17 @@ fn finish_run(
     mut history: History,
     uplink_frame_bytes: u64,
     downlink_frame_bytes: u64,
+    degraded: &[bool],
 ) -> Result<DistOutcome> {
     history.final_x = master.x().to_vec();
     let stop = encode(&Frame::Stop);
-    for c in master_conns.iter_mut() {
-        c.send(&stop)?;
+    for (w, c) in master_conns.iter_mut().enumerate() {
+        if degraded.get(w).copied().unwrap_or(false) {
+            continue;
+        }
+        c.send(&stop).with_context(|| format!("sending Stop to worker {w}"))?;
     }
-    join_all(handles)?;
+    join_all_tolerant(handles, degraded)?;
     Ok(DistOutcome {
         history,
         final_x: master.x().to_vec(),
@@ -515,7 +800,7 @@ where
 /// model image the downlink planner believes the worker holds.
 #[allow(clippy::too_many_arguments)]
 pub fn run_distributed_ckpt<F>(
-    mut master: Box<dyn MasterNode>,
+    master: Box<dyn MasterNode>,
     n_workers: usize,
     make_worker: F,
     rounds: usize,
@@ -527,7 +812,51 @@ pub fn run_distributed_ckpt<F>(
 where
     F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
 {
+    run_distributed_ckpt_net(
+        master,
+        n_workers,
+        make_worker,
+        rounds,
+        kind,
+        label,
+        broadcast,
+        opts,
+        NetOpts::default(),
+    )
+}
+
+/// [`run_distributed_ckpt`] with network resilience options: session
+/// envelope, reconnect/replay, and seeded wire chaos. The plain
+/// (unscheduled) protocol has no absence semantics, so the `degrade`
+/// loss policy and `--min-workers` are rejected here — the scheduled
+/// runner owns them.
+#[allow(clippy::too_many_arguments)]
+pub fn run_distributed_ckpt_net<F>(
+    mut master: Box<dyn MasterNode>,
+    n_workers: usize,
+    make_worker: F,
+    rounds: usize,
+    kind: TransportKind,
+    label: &str,
+    broadcast: Broadcast,
+    opts: CkptOptions,
+    net: NetOpts,
+) -> Result<DistOutcome>
+where
+    F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
+{
     assert!(n_workers >= 1);
+    net.validate(n_workers)?;
+    ensure!(
+        !matches!(net.on_loss, LossPolicy::Degrade { .. }) && net.min_workers.is_none(),
+        "--on-worker-loss degrade / --min-workers need the scheduled runner \
+         (EF21-PP absence semantics); use --sched or a no-op participation schedule"
+    );
+    ensure!(
+        net.chaos.is_none() || opts.resume.is_none(),
+        "chaos injection cannot resume from a checkpoint (the proxy counts rounds \
+         from the start of the wire stream)"
+    );
     let fingerprint = opts.fingerprint.clone().unwrap_or_else(|| label.to_string());
     if let Some(ck) = &opts.resume {
         // Validate before any thread is spawned, so a mismatched resume
@@ -566,7 +895,8 @@ where
     let mk = make_worker.clone();
     let run_worker: RunWorker =
         Arc::new(move |i, mut conn| worker_loop(mk(i), &mut *conn, blocks.clone(), i, health_on));
-    let (mut master_conns, handles) = wire_transport(kind, n_workers, run_worker, false)?;
+    let (mut master_conns, handles) =
+        wire_transport_net(kind, n_workers, run_worker, false, &net)?;
 
     let n = n_workers as f64;
     let mut history = History::new(label.to_string());
@@ -716,6 +1046,9 @@ where
                     h.dump_blackbox("anomaly", t);
                 }
             }
+            if let Some(scfg) = net.session.as_ref() {
+                h.record_session(t, n_workers, scfg.stats.snapshot());
+            }
             h.record_round(history.records.last().expect("just pushed"));
         }
 
@@ -761,7 +1094,7 @@ where
         }
     }
     history.downlink_bits = downlink.bits();
-    finish_run(master, master_conns, handles, history, frame_bytes, down_bytes)
+    finish_run(master, master_conns, handles, history, frame_bytes, down_bytes, &[])
 }
 
 /// Checkpoint coordinates a scheduled worker derives from the shared run
@@ -807,7 +1140,8 @@ fn worker_loop_sched(
     if ckpt.start == 0 {
         // Init runs on every worker — participation sampling starts at
         // round 0.
-        let x = match decode(&conn.recv()?)? {
+        let raw = conn.recv().with_context(|| format!("worker {w}: recv init broadcast"))?;
+        let x = match decode(&raw)? {
             Frame::Model(x) => x,
             Frame::Stop => return Ok(()),
             _ => bail!("worker {w}: expected the init Model broadcast"),
@@ -815,12 +1149,14 @@ fn worker_loop_sched(
         let msg = worker.init(&x);
         let loss = worker.last_loss();
         let health = probe(worker.as_ref());
-        conn.send(&encode(&Frame::Up { msg, loss, health }))?;
+        conn.send(&encode(&Frame::Up { msg, loss, health }))
+            .with_context(|| format!("worker {w}: send init uplink"))?;
     } else {
         // Resumed run: the Restore push replaces init entirely. The model
         // image is unused on this path — scheduling is dense, so every
         // active round ships a full Model frame.
-        match decode(&conn.recv()?)? {
+        let raw = conn.recv().with_context(|| format!("worker {w}: recv Restore push"))?;
+        match decode(&raw)? {
             Frame::Restore { blob, .. } => worker.ckpt_load(&blob)?,
             Frame::Stop => return Ok(()),
             _ => bail!("worker {w}: expected the Restore push on resume"),
@@ -832,14 +1168,20 @@ fn worker_loop_sched(
             worker.crash();
         }
         if plan.resync.contains(&w) {
-            match decode(&conn.recv()?)? {
+            let raw = conn
+                .recv()
+                .with_context(|| format!("worker {w}: recv StateSync (round {t})"))?;
+            match decode(&raw)? {
                 Frame::StateSync(g) => worker.resync(&g),
                 Frame::Stop => return Ok(()),
                 _ => bail!("worker {w}: expected StateSync at rejoin round {t}"),
             }
         }
         if plan.active[w] {
-            let x = match decode(&conn.recv()?)? {
+            let raw = conn
+                .recv()
+                .with_context(|| format!("worker {w}: recv broadcast (round {t})"))?;
+            let x = match decode(&raw)? {
                 Frame::Model(x) => x,
                 Frame::Stop => return Ok(()),
                 _ => bail!("worker {w}: expected Model broadcast in round {t}"),
@@ -848,22 +1190,28 @@ fn worker_loop_sched(
             let loss = worker.last_loss();
             let health = probe(worker.as_ref());
             conn.arm(plan.delay_ms[w], plan.dup[w]);
-            conn.send(&encode(&Frame::Up { msg, loss, health }))?;
+            conn.send(&encode(&Frame::Up { msg, loss, health }))
+                .with_context(|| format!("worker {w}: send uplink (round {t})"))?;
         }
         // Checkpoint barrier (all workers, participants or not).
         if ckpt.every.is_some_and(|e| (t + 1) % e == 0) {
-            match decode(&conn.recv()?)? {
+            let raw = conn
+                .recv()
+                .with_context(|| format!("worker {w}: recv CkptReq barrier (round {t})"))?;
+            match decode(&raw)? {
                 Frame::CkptReq => {
                     let mut blob = Vec::new();
                     worker.ckpt_save(&mut blob)?;
-                    conn.send(&encode(&Frame::CkptState(blob)))?;
+                    conn.send(&encode(&Frame::CkptState(blob)))
+                        .with_context(|| format!("worker {w}: send CkptState (round {t})"))?;
                 }
                 Frame::Stop => return Ok(()),
                 _ => bail!("worker {w}: expected CkptReq after round {t}"),
             }
         }
     }
-    match decode(&conn.recv()?)? {
+    let raw = conn.recv().with_context(|| format!("worker {w}: recv final Stop"))?;
+    match decode(&raw)? {
         Frame::Stop => Ok(()),
         _ => bail!("worker {w}: expected Stop"),
     }
@@ -914,7 +1262,7 @@ where
 /// error naming the fault.
 #[allow(clippy::too_many_arguments)]
 pub fn run_distributed_sched_ckpt<F>(
-    mut master: Box<dyn MasterNode>,
+    master: Box<dyn MasterNode>,
     n_workers: usize,
     make_worker: F,
     rounds: usize,
@@ -926,7 +1274,93 @@ pub fn run_distributed_sched_ckpt<F>(
 where
     F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
 {
+    run_distributed_sched_ckpt_net(
+        master,
+        n_workers,
+        make_worker,
+        rounds,
+        kind,
+        label,
+        sched,
+        opts,
+        NetOpts::default(),
+    )
+}
+
+/// Classify a master-side transport failure for worker `w` under the
+/// run's loss policy: `Degrade` converts it into a permanent scheduler
+/// absence (EF21-PP semantics — the master synthesizes the worker's
+/// absent message from here on), everything else propagates with
+/// (worker, round, phase) context attached.
+fn degrade_or_fail(
+    e: anyhow::Error,
+    w: usize,
+    t: usize,
+    phase: &str,
+    on_loss: LossPolicy,
+    degraded: &mut [bool],
+    conn: &mut dyn Conn,
+) -> Result<()> {
+    if !matches!(on_loss, LossPolicy::Degrade { .. }) {
+        return Err(e.context(format!("worker {w}, round {t}, {phase}")));
+    }
+    if e.downcast_ref::<RingOverrun>().is_some() {
+        eprintln!(
+            "[session] worker {w}: retransmit ring overran; raise the session ring \
+             depth if this worker should have been recoverable"
+        );
+    }
+    eprintln!(
+        "[session] worker {w} lost during {phase} of round {t}: {e:#}; \
+         degrading to scheduler absence (EF21-PP)"
+    );
+    degraded[w] = true;
+    // Cut the socket so the (possibly still parked) worker thread fails
+    // fast instead of waiting out its read timeout.
+    conn.sever();
+    telemetry::counter(keys::SESSION_DEGRADED_WORKERS).incr(1);
+    Ok(())
+}
+
+/// [`run_distributed_sched_ckpt`] with network resilience options. This
+/// is where `--on-worker-loss degrade` lives: a worker that exhausts its
+/// reconnect budget becomes a scheduler absence for every remaining
+/// round — exactly the EF21-PP partial-participation semantics the
+/// scheduled runner already implements — and `--min-workers` puts a
+/// quorum floor under that (breach = blackbox dump + abort, resumable
+/// from the last pre-degrade checkpoint).
+#[allow(clippy::too_many_arguments)]
+pub fn run_distributed_sched_ckpt_net<F>(
+    mut master: Box<dyn MasterNode>,
+    n_workers: usize,
+    make_worker: F,
+    rounds: usize,
+    kind: TransportKind,
+    label: &str,
+    sched: Arc<Scheduler>,
+    opts: CkptOptions,
+    net: NetOpts,
+) -> Result<DistOutcome>
+where
+    F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
+{
     assert!(n_workers >= 1);
+    net.validate(n_workers)?;
+    ensure!(
+        net.chaos.is_none() || opts.resume.is_none(),
+        "chaos injection cannot resume from a checkpoint (the proxy counts rounds \
+         from the start of the wire stream)"
+    );
+    if net.chaos.is_some() {
+        // The proxy counts rounds from the downlink stream, which only
+        // works when every worker sees every broadcast.
+        ensure!(
+            sched.participation() == crate::sched::Participation::Full,
+            "wire chaos requires full participation (the proxy counts rounds from \
+             the downlink; model absences with --on-worker-loss degrade or \
+             --participation instead)"
+        );
+    }
     let fingerprint = opts.fingerprint.clone().unwrap_or_else(|| label.to_string());
     if let Some(ck) = &opts.resume {
         // Validate before any thread is spawned, so a mismatched resume
@@ -944,10 +1378,12 @@ where
         sched.n_workers()
     );
     // Wall-clock feasibility on real sockets: an in-deadline straggler
-    // sleeps before sending, so the peer's read timeout must outlast it.
+    // (and any chaos stall) sleeps before sending, so the peer's read
+    // timeout must outlast it.
     let realized_max = {
         let m = sched.faults().max_delay_ms();
-        sched.deadline_ms().map_or(m, |dl| m.min(dl))
+        let m = sched.deadline_ms().map_or(m, |dl| m.min(dl));
+        m + net.chaos.as_ref().map_or(0, |c| c.max_stall_ms())
     };
     if kind == TransportKind::Tcp {
         if let Some(io) = tcp::io_timeout() {
@@ -957,9 +1393,9 @@ where
             // much again for compute.
             ensure!(
                 u128::from(realized_max) * 2 < io.as_millis(),
-                "scheduled straggle delay of {realized_max}ms needs a TCP I/O timeout \
-                 above {}ms (2x headroom for compute), got {}ms; raise --net-timeout-ms \
-                 or tighten the deadline",
+                "scheduled straggle + chaos stall delay of {realized_max}ms needs a TCP \
+                 I/O timeout above {}ms (2x headroom for compute), got {}ms; raise \
+                 --net-timeout-ms or tighten the deadline",
                 2 * realized_max,
                 io.as_millis()
             );
@@ -1004,7 +1440,7 @@ where
         worker_loop_sched(mk(i), conn, &sched_w, i, rounds, wc, health_on)
     });
     let (mut master_conns, handles) =
-        wire_transport(kind, n_workers, run_worker, kind == TransportKind::Tcp)?;
+        wire_transport_net(kind, n_workers, run_worker, kind == TransportKind::Tcp, &net)?;
 
     let n = n_workers as f64;
     let mut history = History::new(label.to_string());
@@ -1017,6 +1453,13 @@ where
     // runners' cached-loss reduction (absent workers keep their stale
     // value, in the same worker-order sum).
     let mut last_loss = vec![0.0f64; n_workers];
+    // Workers permanently lost to the degrade policy: treated as
+    // scheduler absences (EF21-PP) from the round they died onward.
+    let mut degraded = vec![false; n_workers];
+    // Round covered by the last checkpoint written (quorum-breach
+    // messaging), and whether degradation has frozen checkpointing.
+    let mut last_ckpt: Option<usize> = None;
+    let mut ckpt_frozen = false;
 
     let mut rx_buf = Vec::new();
     let start_round = match opts.resume {
@@ -1095,10 +1538,12 @@ where
                 h.dump_blackbox("killmaster", t);
             }
             let stop = encode(&Frame::Stop);
-            for c in master_conns.iter_mut() {
-                c.send(&stop)?;
+            for (w, c) in master_conns.iter_mut().enumerate() {
+                if !degraded[w] {
+                    c.send(&stop)?;
+                }
             }
-            join_all(handles)?;
+            join_all_tolerant(handles, &degraded)?;
             bail!("fault plan: master killed at round {t} (killmaster@{t})");
         }
         let t_round = telemetry::maybe_now();
@@ -1108,23 +1553,51 @@ where
 
         // StateSync pushes precede this round's broadcast.
         for &w in &plan.resync {
+            if degraded[w] {
+                continue;
+            }
             let sp = telemetry::span_arg("sched.resync", "w", w as u64);
             let tr = tracker.as_mut().expect("rejoin scheduled without a tracker");
             let frame = encode(&Frame::StateSync(tr.mirror_dense(w).to_vec()));
-            master_conns[w].send(&frame)?;
+            if let Err(e) = master_conns[w].send(&frame) {
+                degrade_or_fail(
+                    e,
+                    w,
+                    t,
+                    "StateSync push",
+                    net.on_loss,
+                    &mut degraded,
+                    master_conns[w].as_mut(),
+                )?;
+                sp.end();
+                continue;
+            }
             down_bytes += frame.len() as u64;
             crate::sched::record_resync_bits(d);
             sp.end();
         }
 
-        // Dense model to this round's participants only.
+        // Dense model to this round's live participants only. The
+        // logical downlink meter counts once per round regardless — a
+        // degraded worker's accounting matches a scheduled absence.
         let bcast_span = telemetry::span("round.broadcast");
         telemetry::counter(keys::DOWNLINK_BITS).incr(downlink.broadcast(&x).bits);
         let bytes = encode(&Frame::Model(x));
         let mut sent = 0u64;
         for (w, c) in master_conns.iter_mut().enumerate() {
-            if plan.active[w] {
-                c.send(&bytes)?;
+            if plan.active[w] && !degraded[w] {
+                if let Err(e) = c.send(&bytes) {
+                    degrade_or_fail(
+                        e,
+                        w,
+                        t,
+                        "model broadcast",
+                        net.on_loss,
+                        &mut degraded,
+                        c.as_mut(),
+                    )?;
+                    continue;
+                }
                 sent += bytes.len() as u64;
             }
         }
@@ -1145,42 +1618,64 @@ where
         let mut msgs: Vec<WireMsg> = Vec::with_capacity(n_workers);
         let mut round_bits = 0u64;
         let mut fb = 0u64;
-        let gathered: Result<()> = (|| {
-            for (w, conn) in master_conns.iter_mut().enumerate() {
-                if !plan.active[w] {
-                    msgs.push(absent_template.clone());
-                    continue;
-                }
-                let recv_span = telemetry::span_arg("dist.recv", "w", w as u64);
+        let mut gather_err: Option<anyhow::Error> = None;
+        for w in 0..n_workers {
+            if !plan.active[w] || degraded[w] {
+                msgs.push(absent_template.clone());
+                continue;
+            }
+            let recv_span = telemetry::span_arg("dist.recv", "w", w as u64);
+            let gathered = (|| -> Result<(WireMsg, f64, Option<f64>, u64)> {
+                let conn = master_conns[w].as_mut();
                 let raw = conn.recv()?;
-                fb += raw.len() as u64;
+                let mut b = raw.len() as u64;
                 let (msg, loss, probe) = match decode(&raw)? {
                     Frame::Up { msg, loss, health } => (msg, loss, health),
                     _ => bail!("master expected an Up frame from worker {w}"),
                 };
                 if plan.dup[w] {
                     let raw2 = conn.recv()?;
-                    fb += raw2.len() as u64;
+                    b += raw2.len() as u64;
                     ensure!(raw2 == raw, "duplicated uplink frame mismatch from worker {w}");
                 }
-                recv_span.end();
-                telemetry::record_worker_round_ns(w, t_round);
                 if let Some(&last) = msg.payload().sparse.idx.last() {
                     ensure!(
                         (last as usize) < d,
                         "uplink index {last} out of range for model dim {d}"
                     );
                 }
-                if want_probes {
-                    probes[w].0 = probe.unwrap_or(f64::NAN);
+                Ok((msg, loss, probe, b))
+            })();
+            recv_span.end();
+            match gathered {
+                Ok((msg, loss, probe, b)) => {
+                    telemetry::record_worker_round_ns(w, t_round);
+                    if want_probes {
+                        probes[w].0 = probe.unwrap_or(f64::NAN);
+                    }
+                    last_loss[w] = loss;
+                    round_bits += msg.bits();
+                    fb += b;
+                    msgs.push(msg);
                 }
-                last_loss[w] = loss;
-                round_bits += msg.bits();
-                msgs.push(msg);
+                Err(e) => match degrade_or_fail(
+                    e,
+                    w,
+                    t,
+                    "gather",
+                    net.on_loss,
+                    &mut degraded,
+                    master_conns[w].as_mut(),
+                ) {
+                    Ok(()) => msgs.push(absent_template.clone()),
+                    Err(e) => {
+                        gather_err = Some(e);
+                        break;
+                    }
+                },
             }
-            Ok(())
-        })();
-        if let Err(e) = gathered {
+        }
+        if let Some(e) = gather_err {
             // A dead/errored worker surfaces here: capture the flight
             // recorder before propagating.
             if let Some(h) = &health {
@@ -1189,6 +1684,37 @@ where
             return Err(e);
         }
         gather_span.end();
+
+        // Quorum floor: once the live-worker count falls below
+        // --min-workers, continuing would silently converge on a
+        // different problem. Capture the flight recorder, stop the
+        // survivors, and abort pointing at the last clean checkpoint.
+        let live = degraded.iter().filter(|&&g| !g).count();
+        if live < net.quorum_floor() {
+            if let Some(h) = &health {
+                h.dump_blackbox("quorum", t);
+            }
+            let stop = encode(&Frame::Stop);
+            for (w, c) in master_conns.iter_mut().enumerate() {
+                if !degraded[w] {
+                    let _ = c.send(&stop);
+                }
+            }
+            let _ = join_all_tolerant(handles, &degraded);
+            match last_ckpt {
+                Some(r) => bail!(
+                    "quorum lost at round {t}: {live} live workers < floor {}; \
+                     resume from the checkpoint covering rounds ..={r}",
+                    net.quorum_floor()
+                ),
+                None => bail!(
+                    "quorum lost at round {t}: {live} live workers < floor {} \
+                     and no checkpoint was written; enable --ckpt to make such \
+                     runs resumable",
+                    net.quorum_floor()
+                ),
+            }
+        }
         bits_cum += round_bits;
         frame_bytes += fb;
         telemetry::counter(keys::UPLINK_BITS).incr(round_bits);
@@ -1214,6 +1740,9 @@ where
         });
         if let Some(h) = health.as_mut() {
             h.record_plan(t, &plan);
+            if let Some(scfg) = net.session.as_ref() {
+                h.record_session(t, n_workers, scfg.stats.snapshot());
+            }
             if want_probes {
                 let hspan = telemetry::span("round.health");
                 let anomalies = h.observe(t, loss, &probes);
@@ -1237,42 +1766,98 @@ where
         // a later scheduled crash can mutate it.
         if let Some(save) = &opts.save {
             if (t + 1) % save.every == 0 {
+                // The barrier exchange always runs with the live workers
+                // (they derive the cadence from config and block on it),
+                // but once any worker has degraded the file write is
+                // frozen: a degraded worker mutated state after its last
+                // captured blob, so a checkpoint written now could not
+                // restore a consistent run.
                 let req = encode(&Frame::CkptReq);
-                for c in master_conns.iter_mut() {
-                    c.send(&req)?;
-                }
-                let mut worker_blobs = Vec::with_capacity(n_workers);
                 for (w, c) in master_conns.iter_mut().enumerate() {
-                    match decode(&c.recv()?)? {
-                        Frame::CkptState(blob) => worker_blobs.push(blob),
-                        _ => bail!("expected CkptState from worker {w}"),
+                    if degraded[w] {
+                        continue;
+                    }
+                    if let Err(e) = c.send(&req) {
+                        degrade_or_fail(
+                            e,
+                            w,
+                            t,
+                            "CkptReq barrier",
+                            net.on_loss,
+                            &mut degraded,
+                            c.as_mut(),
+                        )?;
                     }
                 }
-                let mut mblob = Vec::new();
-                master.ckpt_save(&mut mblob).context("serializing master state")?;
-                let (img, dl_bits, dl_dense) = downlink.ckpt_state();
-                let ck = Checkpoint {
-                    fingerprint: fingerprint.clone(),
-                    next_round: t + 1,
-                    uplink_bits_cum: bits_cum,
-                    master: mblob,
-                    workers: worker_blobs,
-                    tracker: tracker.as_mut().map(|tr| tr.image()),
-                    downlink: DownlinkState {
-                        last: img.map(<[f32]>::to_vec),
-                        bits_cum: dl_bits,
-                        dense_bits_cum: dl_dense,
-                    },
-                    history: history.clone(),
-                    last_loss: Some(last_loss.clone()),
-                };
-                ck.write_atomic(&save.path)
-                    .with_context(|| format!("writing checkpoint at round {t}"))?;
+                let mut worker_blobs = Vec::with_capacity(n_workers);
+                for w in 0..n_workers {
+                    if degraded[w] {
+                        worker_blobs.push(Vec::new());
+                        continue;
+                    }
+                    let res = (|| -> Result<Vec<u8>> {
+                        match decode(&master_conns[w].recv()?)? {
+                            Frame::CkptState(blob) => Ok(blob),
+                            _ => bail!("expected CkptState from worker {w}"),
+                        }
+                    })();
+                    match res {
+                        Ok(blob) => worker_blobs.push(blob),
+                        Err(e) => {
+                            degrade_or_fail(
+                                e,
+                                w,
+                                t,
+                                "CkptState barrier",
+                                net.on_loss,
+                                &mut degraded,
+                                master_conns[w].as_mut(),
+                            )?;
+                            worker_blobs.push(Vec::new());
+                        }
+                    }
+                }
+                if degraded.iter().any(|&g| g) {
+                    if !ckpt_frozen {
+                        ckpt_frozen = true;
+                        eprintln!(
+                            "[ckpt] checkpointing frozen from round {t}: a degraded \
+                             worker's state can no longer be captured; {} remains the \
+                             resume point",
+                            match last_ckpt {
+                                Some(r) => format!("the checkpoint covering rounds ..={r}"),
+                                None => "no checkpoint".to_string(),
+                            }
+                        );
+                    }
+                } else {
+                    let mut mblob = Vec::new();
+                    master.ckpt_save(&mut mblob).context("serializing master state")?;
+                    let (img, dl_bits, dl_dense) = downlink.ckpt_state();
+                    let ck = Checkpoint {
+                        fingerprint: fingerprint.clone(),
+                        next_round: t + 1,
+                        uplink_bits_cum: bits_cum,
+                        master: mblob,
+                        workers: worker_blobs,
+                        tracker: tracker.as_mut().map(|tr| tr.image()),
+                        downlink: DownlinkState {
+                            last: img.map(<[f32]>::to_vec),
+                            bits_cum: dl_bits,
+                            dense_bits_cum: dl_dense,
+                        },
+                        history: history.clone(),
+                        last_loss: Some(last_loss.clone()),
+                    };
+                    ck.write_atomic(&save.path)
+                        .with_context(|| format!("writing checkpoint at round {t}"))?;
+                    last_ckpt = Some(t);
+                }
             }
         }
     }
     history.downlink_bits = downlink.bits();
-    finish_run(master, master_conns, handles, history, frame_bytes, down_bytes)
+    finish_run(master, master_conns, handles, history, frame_bytes, down_bytes, &degraded)
 }
 
 #[cfg(test)]

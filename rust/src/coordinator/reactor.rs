@@ -31,14 +31,16 @@
 //! schedules, and checkpoints stay on the thread-per-conn engines.
 
 use super::dist::{
-    join_all, panic_msg, wire_tcp_raw, DistOutcome, RunWorker, TransportKind,
+    join_all, panic_msg, wire_tcp_raw, DistOutcome, LossPolicy, NetOpts, RunWorker, TransportKind,
 };
 use crate::algo::{MasterNode, WireMsg, WorkerNode};
 use crate::metrics::{History, RoundRecord};
 use crate::telemetry::{self, keys};
+use crate::transport::chaos::ChaosConn;
 use crate::transport::codec::{decode, encode, Frame};
 use crate::transport::downlink::DownlinkMeter;
-use crate::transport::{local, tcp};
+use crate::transport::session::{self, Inspect, Reconnect, RingOverrun, SessionCfg, SessionConn};
+use crate::transport::{local, tcp, Conn};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
@@ -223,6 +225,8 @@ impl NbConn {
 enum ShardCmd {
     /// Queue this frame to every live conn on the shard.
     Broadcast(Arc<Vec<u8>>),
+    /// Queue this frame to one worker's conn (session replay traffic).
+    Send(usize, Arc<Vec<u8>>),
     /// Queue this (Stop) frame, flush every write queue, then exit.
     Stop(Arc<Vec<u8>>),
 }
@@ -261,6 +265,18 @@ fn shard_loop(
                     progress = true;
                     for (slot, (w, c)) in conns.iter_mut().enumerate() {
                         if dead[slot] {
+                            continue;
+                        }
+                        if let Err(e) = c.enqueue(&f) {
+                            dead[slot] = true;
+                            let _ = evt_tx.send((*w, Err(e)));
+                        }
+                    }
+                }
+                Ok(ShardCmd::Send(target, f)) => {
+                    progress = true;
+                    for (slot, (w, c)) in conns.iter_mut().enumerate() {
+                        if *w != target || dead[slot] {
                             continue;
                         }
                         if let Err(e) = c.enqueue(&f) {
@@ -325,6 +341,8 @@ struct Reactor {
     cmd_txs: Vec<Sender<ShardCmd>>,
     evt_rx: Receiver<(usize, Result<Vec<u8>>)>,
     shards: Vec<std::thread::JoinHandle<()>>,
+    /// Which shard owns each worker's conn (targeted session replays).
+    shard_of: Vec<usize>,
     /// Read timeout while waiting for uplink events (None = wait forever).
     timeout: Option<Duration>,
 }
@@ -336,11 +354,15 @@ impl Reactor {
         let (evt_tx, evt_rx) = channel();
         let mut cmd_txs = Vec::with_capacity(n_shards);
         let mut shards = Vec::with_capacity(n_shards);
+        let mut shard_of = vec![0usize; n];
         let mut it = conns.into_iter().enumerate();
         for s in 0..n_shards {
             // Contiguous ranges, sizes differing by at most one.
             let count = (n + n_shards - 1 - s) / n_shards;
             let part: Vec<(usize, NbConn)> = it.by_ref().take(count).collect();
+            for (w, _) in &part {
+                shard_of[*w] = s;
+            }
             let (cmd_tx, cmd_rx) = channel();
             let tx = evt_tx.clone();
             shards.push(
@@ -351,16 +373,22 @@ impl Reactor {
             );
             cmd_txs.push(cmd_tx);
         }
-        Reactor { cmd_txs, evt_rx, shards, timeout: tcp::io_timeout() }
+        Reactor { cmd_txs, evt_rx, shards, shard_of, timeout: tcp::io_timeout() }
     }
 
-    fn broadcast(&self, frame: Vec<u8>) -> Result<()> {
-        let frame = Arc::new(frame);
+    fn broadcast(&self, frame: Arc<Vec<u8>>) -> Result<()> {
         for tx in &self.cmd_txs {
             tx.send(ShardCmd::Broadcast(frame.clone()))
                 .map_err(|_| anyhow::anyhow!("reactor shard exited early"))?;
         }
         Ok(())
+    }
+
+    /// Queue one frame to a single worker (session replay traffic).
+    fn send_to(&self, w: usize, frame: Arc<Vec<u8>>) -> Result<()> {
+        self.cmd_txs[self.shard_of[w]]
+            .send(ShardCmd::Send(w, frame))
+            .map_err(|_| anyhow::anyhow!("reactor shard for worker {w} exited early"))
     }
 
     fn next_event(&self) -> Result<(usize, Result<Vec<u8>>)> {
@@ -381,24 +409,35 @@ impl Reactor {
 
     /// Collect exactly one complete uplink frame per worker (any arrival
     /// order), stamping per-worker latency as each lands. Returns the
-    /// frames in worker order plus their total payload bytes.
+    /// frames in worker order plus their total payload bytes. With a
+    /// session mux, control/duplicate/corrupt frames are absorbed by the
+    /// mux and never fill a slot, so the lockstep invariant below keeps
+    /// holding under chaos: each slot takes exactly one in-order frame.
     fn collect_round(
         &self,
         n_workers: usize,
         round_start: Option<std::time::Instant>,
+        mut mux: Option<&mut SessionMux>,
     ) -> Result<(Vec<Vec<u8>>, u64)> {
         let mut slots: Vec<Option<Vec<u8>>> = (0..n_workers).map(|_| None).collect();
         let mut filled = 0usize;
         let mut bytes = 0u64;
         while filled < n_workers {
             let (w, res) = self.next_event()?;
-            let frame = res.with_context(|| format!("worker {w} connection failed"))?;
+            let mut frame = res.with_context(|| format!("worker {w} connection failed"))?;
             ensure!(w < n_workers, "reactor event for unknown worker {w}");
+            if let Some(m) = mux.as_deref_mut() {
+                if !m.on_frame(self, w, &mut frame)? {
+                    continue;
+                }
+            }
             ensure!(
                 slots[w].is_none(),
                 "worker {w} sent an extra frame this round (lockstep violation)"
             );
             telemetry::record_worker_round_ns(w, round_start);
+            // Post-unseal length: the session envelope is transport
+            // overhead, not protocol bytes.
             bytes += frame.len() as u64;
             slots[w] = Some(frame);
             filled += 1;
@@ -408,9 +447,9 @@ impl Reactor {
         Ok((frames, bytes))
     }
 
-    /// Broadcast Stop, let every shard flush and exit, and join them.
-    fn shutdown(self) -> Result<()> {
-        let stop = Arc::new(encode(&Frame::Stop));
+    /// Broadcast the prebuilt Stop frame (sealed when sessions are on),
+    /// let every shard flush and exit, and join them.
+    fn shutdown(self, stop: Arc<Vec<u8>>) -> Result<()> {
         for tx in &self.cmd_txs {
             tx.send(ShardCmd::Stop(stop.clone()))
                 .map_err(|_| anyhow::anyhow!("reactor shard exited before Stop"))?;
@@ -420,6 +459,114 @@ impl Reactor {
                 .map_err(|p| anyhow::anyhow!("reactor shard {s} panicked: {}", panic_msg(&*p)))?;
         }
         Ok(())
+    }
+}
+
+/// Master-side session endpoint for the reactor. Every master frame is a
+/// broadcast, so one shared downlink sequence stream serves all workers:
+/// each frame is sealed once and retained in a bounded ring of the
+/// sealed bytes for replay. Uplinks keep one cursor per worker. The
+/// reactor keeps no acceptor after wiring, so session recovery here
+/// covers chaos-injected loss and corruption over a live socket; a truly
+/// dead conn still fails the run (no `--on-worker-loss degrade` on this
+/// engine — that stays with the thread-per-conn scheduler master).
+struct SessionMux {
+    cfg: SessionCfg,
+    /// Next downlink (broadcast) sequence number.
+    tx_seq: u64,
+    /// Sealed broadcast frames still available for replay.
+    ring: VecDeque<(u64, Arc<Vec<u8>>)>,
+    /// Next uplink sequence expected from each worker.
+    rx_seq: Vec<u64>,
+    /// Deterministic per-worker session ids (`session_id(seed, w)`).
+    sids: Vec<u64>,
+}
+
+impl SessionMux {
+    fn new(cfg: &SessionCfg, n_workers: usize) -> SessionMux {
+        SessionMux {
+            cfg: cfg.clone(),
+            tx_seq: 0,
+            ring: VecDeque::new(),
+            rx_seq: vec![0; n_workers],
+            sids: (0..n_workers).map(|w| session::session_id(cfg.seed, w)).collect(),
+        }
+    }
+
+    /// Seal the next broadcast frame and retain it for replay.
+    fn seal_broadcast(&mut self, frame: &[u8]) -> Arc<Vec<u8>> {
+        let sealed = Arc::new(session::seal(frame, self.tx_seq));
+        if self.ring.len() == self.cfg.ring {
+            self.ring.pop_front();
+        }
+        self.ring.push_back((self.tx_seq, sealed.clone()));
+        self.tx_seq += 1;
+        sealed
+    }
+
+    /// Replay every retained broadcast from `from` onward to worker `w`.
+    fn replay(&mut self, reactor: &Reactor, w: usize, from: u64) -> Result<()> {
+        let oldest = self.ring.front().map_or(self.tx_seq, |&(seq, _)| seq);
+        if from < oldest {
+            return Err(anyhow::Error::new(RingOverrun { wanted: from, oldest })
+                .context(format!("replaying downlink to worker {w}")));
+        }
+        let mut n = 0u64;
+        for (seq, f) in self.ring.iter() {
+            if *seq >= from {
+                reactor.send_to(w, f.clone())?;
+                n += 1;
+            }
+        }
+        if n > 0 {
+            self.cfg.stats.note_replayed(n);
+        }
+        Ok(())
+    }
+
+    /// Ask worker `w` to replay its uplink stream from our cursor.
+    fn request_replay(&self, reactor: &Reactor, w: usize) -> Result<()> {
+        let req = encode(&Frame::SessReq { sid: self.sids[w], from_seq: self.rx_seq[w] });
+        reactor.send_to(w, Arc::new(req))
+    }
+
+    /// Inspect one inbound frame. Returns `true` when `frame` now holds
+    /// the next in-order logical frame for worker `w` (unsealed in
+    /// place); control frames, duplicates, gaps, and corruption are
+    /// handled here and swallowed.
+    fn on_frame(&mut self, reactor: &Reactor, w: usize, frame: &mut Vec<u8>) -> Result<bool> {
+        match session::unseal(frame) {
+            Inspect::Control(Frame::SessReq { sid, from_seq }) => {
+                ensure!(
+                    sid == self.sids[w],
+                    "worker {w} sent a SessReq for a foreign session ({sid:#x})"
+                );
+                self.replay(reactor, w, from_seq)?;
+                Ok(false)
+            }
+            Inspect::Control(_) => {
+                bail!("worker {w} sent SessAck to the master (protocol direction violation)")
+            }
+            Inspect::Corrupt => {
+                self.cfg.stats.note_crc_reject();
+                self.request_replay(reactor, w)?;
+                Ok(false)
+            }
+            Inspect::Sealed(seq) => {
+                let want = self.rx_seq[w];
+                if seq < want {
+                    // Duplicate from an earlier replay: already consumed.
+                    Ok(false)
+                } else if seq > want {
+                    // Gap: something before this frame was lost in flight.
+                    self.request_replay(reactor, w)?;
+                    Ok(false)
+                } else {
+                    self.rx_seq[w] = want + 1;
+                    Ok(true)
+                }
+            }
+        }
     }
 }
 
@@ -480,7 +627,7 @@ where
 /// exactly [`run_reactor`].
 #[allow(clippy::too_many_arguments)]
 pub fn run_reactor_health<F>(
-    mut master: Box<dyn MasterNode>,
+    master: Box<dyn MasterNode>,
     n_workers: usize,
     make_worker: F,
     rounds: usize,
@@ -492,16 +639,87 @@ pub fn run_reactor_health<F>(
 where
     F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
 {
+    run_reactor_net(
+        master,
+        n_workers,
+        make_worker,
+        rounds,
+        kind,
+        label,
+        n_shards,
+        health_cfg,
+        NetOpts::default(),
+    )
+}
+
+/// [`run_reactor_health`] with self-healing sessions and chaos. The
+/// reactor supports `--session` and soft chaos (`reset`/`corrupt`/
+/// `stall` recover over the still-live socket via the session mux) but
+/// not worker re-admission: `down` clauses, `--on-worker-loss
+/// degrade|wait`, and `--min-workers` need the thread-per-conn
+/// scheduler master, which keeps an acceptor and per-worker state
+/// mirrors.
+#[allow(clippy::too_many_arguments)]
+pub fn run_reactor_net<F>(
+    mut master: Box<dyn MasterNode>,
+    n_workers: usize,
+    make_worker: F,
+    rounds: usize,
+    kind: TransportKind,
+    label: &str,
+    n_shards: usize,
+    health_cfg: Option<crate::health::HealthCfg>,
+    net: NetOpts,
+) -> Result<DistOutcome>
+where
+    F: Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static,
+{
     assert!(n_workers >= 1);
+    net.validate(n_workers)?;
+    ensure!(
+        matches!(net.on_loss, LossPolicy::Abort) && net.min_workers.is_none(),
+        "--on-worker-loss degrade/wait and --min-workers need the thread-per-conn \
+         master (--master threads): the reactor keeps no acceptor for re-admission"
+    );
+    if let Some(plan) = net.chaos.as_ref() {
+        ensure!(
+            !plan.has_downs(),
+            "chaos `down` clauses need the thread-per-conn master: the reactor \
+             cannot re-admit a severed worker"
+        );
+        if let Some(io) = tcp::io_timeout() {
+            ensure!(
+                Duration::from_millis(plan.max_stall_ms().saturating_mul(2)) < io,
+                "chaos stalls up to {} ms cannot fit the {io:?} I/O timeout; raise --net-timeout-ms",
+                plan.max_stall_ms()
+            );
+        }
+    }
     let n_shards = if n_shards == 0 { default_shards() } else { n_shards };
     let mut health = health_cfg.map(|hc| crate::health::Health::new(hc, label));
     let health_on = health.is_some();
     let make_worker = Arc::new(make_worker);
-    let run_worker: RunWorker = Arc::new(move |i, mut conn| {
+    let wcfg = net.session.clone();
+    let wplan = net.chaos.clone();
+    let run_worker: RunWorker = Arc::new(move |i, conn| {
+        let mut conn: Box<dyn Conn> = match &wcfg {
+            Some(cfg) => {
+                let inner: Box<dyn Conn> = match &wplan {
+                    // Soft severity: chaos resets surface as
+                    // `TransientLoss`, recovered by retransmission over
+                    // the still-live socket (the reactor cannot redial).
+                    Some(plan) => Box::new(ChaosConn::new(conn, plan.clone(), i, cfg.seed, false)),
+                    None => conn,
+                };
+                Box::new(SessionConn::new(inner, i, cfg, Reconnect::Replay))
+            }
+            None => conn,
+        };
         super::dist::worker_loop(make_worker(i), &mut *conn, None, i, health_on)
     });
     let (conns, handles) = wire_reactor(kind, n_workers, run_worker)?;
     let reactor = Reactor::spawn(conns, n_shards);
+    let mut mux = net.session.as_ref().map(|cfg| SessionMux::new(cfg, n_workers));
 
     let mut downlink = DownlinkMeter::dense(master.x().len());
     telemetry::gauge(keys::BLOCKS).set(downlink.layout().n_blocks() as f64);
@@ -512,11 +730,20 @@ where
     let mut frame_bytes = 0u64;
     let mut down_bytes = 0u64;
 
-    let send_model = |reactor: &Reactor, downlink: &mut DownlinkMeter, x: &[f64]| -> Result<u64> {
+    let send_model = |reactor: &Reactor,
+                      downlink: &mut DownlinkMeter,
+                      mux: Option<&mut SessionMux>,
+                      x: &[f64]|
+     -> Result<u64> {
         let plan = downlink.plan(x);
         let frame = encode(&Frame::Model(x.to_vec()));
+        // Logical accounting: the session envelope is transport overhead,
+        // so `sent` counts pre-seal bytes either way.
         let sent = frame.len() as u64 * n_workers as u64;
-        reactor.broadcast(frame)?;
+        match mux {
+            Some(m) => reactor.broadcast(m.seal_broadcast(&frame))?,
+            None => reactor.broadcast(Arc::new(frame))?,
+        }
         downlink.commit(x, &plan);
         telemetry::counter(keys::DOWNLINK_BITS).incr(plan.bits);
         telemetry::counter(keys::DOWNLINK_FRAME_BYTES).incr(sent);
@@ -562,8 +789,8 @@ where
 
     // Init phase.
     let x0 = master.x().to_vec();
-    down_bytes += send_model(&reactor, &mut downlink, &x0)?;
-    let (frames, fb) = reactor.collect_round(n_workers, None)?;
+    down_bytes += send_model(&reactor, &mut downlink, mux.as_mut(), &x0)?;
+    let (frames, fb) = reactor.collect_round(n_workers, None, mux.as_mut())?;
     frame_bytes += fb;
     let (msgs, _losses) = decode_round(frames, None)?;
     let init_bits = msgs.iter().map(|m| m.bits()).sum::<u64>();
@@ -577,15 +804,16 @@ where
         let round_span = telemetry::span_arg("coordinator.round", "round", t as u64);
         let x = master.begin_round();
         let bcast_span = telemetry::span("round.broadcast");
-        down_bytes += send_model(&reactor, &mut downlink, &x)?;
+        down_bytes += send_model(&reactor, &mut downlink, mux.as_mut(), &x)?;
         bcast_span.end();
         let gather_span = telemetry::span("round.gather");
         let want_probes = health.as_ref().is_some_and(|h| h.due(t));
-        let gathered = reactor.collect_round(n_workers, t_round).and_then(|(frames, fb)| {
-            let (msgs, losses) =
-                decode_round(frames, if want_probes { Some(&mut probes) } else { None })?;
-            Ok((msgs, losses, fb))
-        });
+        let gathered =
+            reactor.collect_round(n_workers, t_round, mux.as_mut()).and_then(|(frames, fb)| {
+                let (msgs, losses) =
+                    decode_round(frames, if want_probes { Some(&mut probes) } else { None })?;
+                Ok((msgs, losses, fb))
+            });
         let (msgs, losses, fb) = match gathered {
             Ok(v) => v,
             Err(e) => {
@@ -619,6 +847,9 @@ where
             dcgd_frac: f64::NAN,
         });
         if let Some(h) = health.as_mut() {
+            if let Some(scfg) = net.session.as_ref() {
+                h.record_session(t, n_workers, scfg.stats.snapshot());
+            }
             if want_probes {
                 let hspan = telemetry::span("round.health");
                 let anomalies = h.observe(t, loss, &probes);
@@ -633,7 +864,11 @@ where
 
     history.downlink_bits = downlink.bits();
     history.final_x = master.x().to_vec();
-    reactor.shutdown()?;
+    let stop = match mux.as_mut() {
+        Some(m) => m.seal_broadcast(&encode(&Frame::Stop)),
+        None => Arc::new(encode(&Frame::Stop)),
+    };
+    reactor.shutdown(stop)?;
     join_all(handles)?;
     Ok(DistOutcome {
         history,

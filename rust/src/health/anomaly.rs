@@ -22,6 +22,12 @@ pub enum AnomalyKind {
     /// One worker's G contribution dwarfs the fleet median — a bad
     /// shard, broken compressor state, or desynced mirror.
     WorkerOutlier,
+    /// More session reconnects landed in one round than the fleet has
+    /// workers — the transport is flapping instead of recovering.
+    /// Raised by the session accounting in `Health::record_session`,
+    /// not by [`detect`]: it reads transport counters, not the
+    /// certificate window.
+    ReconnectStorm,
 }
 
 impl AnomalyKind {
@@ -31,6 +37,7 @@ impl AnomalyKind {
             AnomalyKind::LyapunovIncrease => "lyapunov_increase",
             AnomalyKind::StalledDescent => "stalled_descent",
             AnomalyKind::WorkerOutlier => "worker_outlier",
+            AnomalyKind::ReconnectStorm => "reconnect_storm",
         }
     }
 }

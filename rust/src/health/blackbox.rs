@@ -62,6 +62,9 @@ struct Entry {
     plan: Option<(usize, usize, usize, usize, usize)>,
     /// Per-worker state digests (FNV-1a over mirror bytes), worker order.
     digests: Option<Vec<u64>>,
+    /// Session-layer deltas this round: (reconnects, replayed_frames,
+    /// crc_rejects). Only recorded for rounds where any were nonzero.
+    session: Option<(u64, u64, u64)>,
 }
 
 impl Entry {
@@ -88,6 +91,13 @@ impl Entry {
             pm.insert("stragglers".into(), Json::Num(stragglers as f64));
             pm.insert("dups".into(), Json::Num(dups as f64));
             m.insert("plan".into(), Json::Obj(pm));
+        }
+        if let Some((reconnects, replayed, crc_rejects)) = self.session {
+            let mut sm = BTreeMap::new();
+            sm.insert("reconnects".into(), Json::Num(reconnects as f64));
+            sm.insert("replayed_frames".into(), Json::Num(replayed as f64));
+            sm.insert("crc_rejects".into(), Json::Num(crc_rejects as f64));
+            m.insert("session".into(), Json::Obj(sm));
         }
         if let Some(d) = &self.digests {
             // Hex strings: u64 digests don't fit f64 exactly.
@@ -156,6 +166,12 @@ impl FlightRecorder {
 
     pub fn record_worker_digests(&mut self, round: usize, digests: Vec<u64>) {
         self.entry(round).digests = Some(digests);
+    }
+
+    /// Record a round's session-layer activity deltas (reconnects,
+    /// replayed frames, CRC rejects) — only called for active rounds.
+    pub fn record_session(&mut self, round: usize, delta: (u64, u64, u64)) {
+        self.entry(round).session = Some(delta);
     }
 
     pub fn note_anomaly(&mut self, a: Anomaly) {

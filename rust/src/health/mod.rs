@@ -240,6 +240,9 @@ pub struct Health {
     pub records: u64,
     pub anomaly_count: u64,
     pub recorder: blackbox::FlightRecorder,
+    /// Cumulative session counters `(reconnects, replayed_frames,
+    /// crc_rejects)` at the previous observation, for per-round deltas.
+    last_session: (u64, u64, u64),
 }
 
 impl Health {
@@ -258,6 +261,7 @@ impl Health {
             records: 0,
             anomaly_count: 0,
             recorder: blackbox::FlightRecorder::new(label, blackbox::DEFAULT_RING),
+            last_session: (0, 0, 0),
         }
     }
 
@@ -327,6 +331,41 @@ impl Health {
         self.recorder.record_health(&rec);
         ops::publish_health(&rec, self.anomaly_count, self.records);
         anomalies
+    }
+
+    /// Feed the run's cumulative session counters `(reconnects,
+    /// replayed_frames, crc_rejects)` after round `round`. Computes
+    /// per-round deltas, mirrors active rounds into the flight
+    /// recorder, and raises [`anomaly::AnomalyKind::ReconnectStorm`]
+    /// when more reconnects landed in one round than the fleet has
+    /// workers — a healthy recovery touches each lost worker once, so
+    /// exceeding `n` means the transport is flapping.
+    pub fn record_session(&mut self, round: usize, n_workers: usize, totals: (u64, u64, u64)) {
+        let prev = self.last_session;
+        self.last_session = totals;
+        let delta = (
+            totals.0.saturating_sub(prev.0),
+            totals.1.saturating_sub(prev.1),
+            totals.2.saturating_sub(prev.2),
+        );
+        if delta == (0, 0, 0) {
+            return;
+        }
+        self.recorder.record_session(round, delta);
+        if delta.0 > n_workers as u64 {
+            let a = anomaly::Anomaly {
+                kind: anomaly::AnomalyKind::ReconnectStorm,
+                round,
+                detail: format!(
+                    "{} session reconnects in one round across {n_workers} workers",
+                    delta.0
+                ),
+            };
+            self.anomaly_count += 1;
+            telemetry::counter(keys::HEALTH_ANOMALIES).incr(1);
+            eprintln!("health: ANOMALY [{}] round {}: {}", a.kind.name(), a.round, a.detail);
+            self.recorder.note_anomaly(a);
+        }
     }
 
     /// Mirror a recorded metrics row into the flight recorder ring.

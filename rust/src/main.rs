@@ -165,7 +165,41 @@ USAGE:
                                        to thousands of workers. reactor
                                        drives the plain flat path: no
                                        --participation/--faults/--blocks/
-                                       --checkpoint)
+                                       --checkpoint; sessions and soft
+                                       chaos work, but not down() clauses
+                                       or --on-worker-loss degrade/wait)
+                 [--session on|off]   (self-healing transport sessions:
+                                       CRC32-enveloped, sequence-numbered
+                                       frames; a dropped or corrupted
+                                       link reconnects with jittered
+                                       backoff and replays the missing
+                                       frames, falling back to an exact
+                                       state resync. off [default] is the
+                                       byte-identical legacy wire; auto-
+                                       enabled by the three flags below)
+                 [--chaos <spec>]     (seeded in-process wire-fault
+                                       injection: reset(w@r) severs w's
+                                       link in round r, corrupt(w@r)
+                                       flips a payload bit, stall(w,
+                                       r0..r1,MSms) delays I/O, down(w@r)
+                                       kills the worker for good;
+                                       deterministic from (spec, seed,
+                                       round) — a recovered run is
+                                       bitwise identical to fault-free)
+                 [--on-worker-loss abort|degrade:<grace_ms>|wait]
+                                      (master policy when a worker
+                                       exhausts its reconnect budget:
+                                       abort [default] fails the run;
+                                       degrade waits <grace_ms> then
+                                       treats the worker as absent from
+                                       then on — exact EF21-PP semantics,
+                                       same trajectory as a
+                                       --participation schedule that
+                                       excludes it; wait retries forever)
+                 [--min-workers N]    (quorum floor for degrade: fewer
+                                       than N live workers dumps the
+                                       flight recorder and aborts with a
+                                       pointer to the last checkpoint)
   ef21 exp  stepsize [--dataset D] [--k K] [--max-pow P] [--rounds T] [--all]
   ef21 exp  finetune [--dataset D] [--rounds T] [--tol X]
   ef21 exp  kdep     [--dataset D] [--rounds T]
@@ -196,6 +230,7 @@ USAGE:
 fn cmd_run(args: &Args) -> Result<()> {
     let spec = RunSpec::from_args(args)?;
     let ckpt = ef21::config::CkptSpec::from_args(args)?;
+    let net = ef21::config::NetSpec::from_args(args)?;
     let objective = match args.get_str("objective").unwrap_or("logreg") {
         "lstsq" => exp::Objective::Lstsq,
         _ => exp::Objective::LogReg,
@@ -235,6 +270,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
 
     let transport = args.get_str("transport").unwrap_or("sim");
+    // The session layer wraps wire frames; sim has no wire.
+    anyhow::ensure!(
+        transport != "sim" || net.is_legacy(),
+        "--session/--chaos/--on-worker-loss/--min-workers need a real transport \
+         (--transport local|tcp)"
+    );
     // Checkpoint identity: local and tcp are bit-identical (both are the
     // lockstep dist protocol), so a snapshot moves freely between them —
     // but never across the sim/dist boundary (downlink accounting
@@ -266,7 +307,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             ckpt_opts,
         )?
     } else {
-        run_over_transport(&problem, &spec, gamma, transport, layout.clone(), ckpt_opts)?
+        run_over_transport(&problem, &spec, &net, gamma, transport, layout.clone(), ckpt_opts)?
     };
 
     let last = history.records.last().expect("no rounds recorded");
@@ -300,13 +341,15 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn run_over_transport(
     problem: &exp::Problem,
     spec: &RunSpec,
+    net: &ef21::config::NetSpec,
     gamma: f64,
     transport: &str,
     layout: std::sync::Arc<ef21::blocks::BlockLayout>,
     ckpt_opts: ef21::coordinator::runner::CkptOptions,
 ) -> Result<ef21::metrics::History> {
     use ef21::coordinator::dist::{
-        run_distributed_ckpt, run_distributed_sched_ckpt, Broadcast, TransportKind,
+        run_distributed_ckpt_net, run_distributed_sched_ckpt_net, Broadcast, LossPolicy,
+        TransportKind,
     };
     let kind = match transport {
         "tcp" => TransportKind::Tcp,
@@ -318,6 +361,7 @@ fn run_over_transport(
         "transport mode currently drives EF21 (the paper's method)"
     );
     let sched = spec.sched.build_for_transport(spec.n_workers, spec.seed)?;
+    let netopts = net.build(spec.seed)?;
     if spec.master == ef21::config::MasterEngine::Reactor {
         // The reactor drives the plain lockstep protocol (dense
         // broadcast, every worker every round); the scheduler, blocked,
@@ -384,7 +428,7 @@ fn run_over_transport(
             as Box<dyn ef21::algo::WorkerNode>
     };
     if spec.master == ef21::config::MasterEngine::Reactor {
-        let out = ef21::coordinator::reactor::run_reactor_health(
+        let out = ef21::coordinator::reactor::run_reactor_net(
             master,
             problem.n_workers,
             make_worker,
@@ -393,6 +437,7 @@ fn run_over_transport(
             &spec.label(),
             ef21::coordinator::reactor::default_shards(),
             ckpt_opts.health.clone(),
+            netopts,
         )?;
         println!(
             "transport={transport} (reactor): {} uplink frame bytes, {} downlink frame bytes",
@@ -400,8 +445,25 @@ fn run_over_transport(
         );
         return Ok(out.history);
     }
+    // Degradation reuses the scheduler's absence bookkeeping (EF21-PP
+    // semantics), so a degrade/quorum run without an explicit schedule
+    // routes through the scheduled runner under a no-op full schedule —
+    // bit-identical to the plain path until a worker is actually lost.
+    let needs_sched_runner = matches!(netopts.on_loss, LossPolicy::Degrade { .. })
+        || netopts.min_workers.is_some();
+    let sched = match sched {
+        None if needs_sched_runner => {
+            anyhow::ensure!(
+                layout.is_flat(),
+                "--on-worker-loss degrade / --min-workers need a flat layout \
+                 (absent workers would miss block-delta frames)"
+            );
+            Some(std::sync::Arc::new(ef21::sched::Scheduler::noop(problem.n_workers)))
+        }
+        s => s,
+    };
     let out = match sched {
-        Some(sched) => run_distributed_sched_ckpt(
+        Some(sched) => run_distributed_sched_ckpt_net(
             master,
             problem.n_workers,
             make_worker,
@@ -410,8 +472,9 @@ fn run_over_transport(
             &spec.label(),
             sched,
             ckpt_opts,
+            netopts,
         )?,
-        None => run_distributed_ckpt(
+        None => run_distributed_ckpt_net(
             master,
             problem.n_workers,
             make_worker,
@@ -420,6 +483,7 @@ fn run_over_transport(
             &spec.label(),
             broadcast,
             ckpt_opts,
+            netopts,
         )?,
     };
     println!(

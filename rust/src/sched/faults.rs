@@ -73,8 +73,8 @@ pub struct FaultPlan {
 }
 
 /// Split on top-level commas only (commas inside `(...)` belong to the
-/// clause).
-fn split_clauses(s: &str) -> Vec<&str> {
+/// clause). Shared with the chaos DSL (`transport/chaos.rs`).
+pub(crate) fn split_clauses(s: &str) -> Vec<&str> {
     let mut out = Vec::new();
     let mut depth = 0usize;
     let mut start = 0;
@@ -119,15 +119,15 @@ fn parse_at(clause: &str, kind: &str) -> Result<Option<(usize, usize)>> {
 }
 
 /// Parse `<name>(<args>)` returning the args string.
-fn parse_call<'a>(clause: &'a str, name: &str) -> Option<&'a str> {
+pub(crate) fn parse_call<'a>(clause: &'a str, name: &str) -> Option<&'a str> {
     clause
         .strip_prefix(name)
         .and_then(|r| r.strip_prefix('('))
         .and_then(|r| r.strip_suffix(')'))
 }
 
-/// Parse `<w>@<r>` (drop/dup argument).
-fn parse_worker_round(args: &str, clause: &str) -> Result<(usize, usize)> {
+/// Parse `<w>@<r>` (drop/dup/reset/corrupt/down argument).
+pub(crate) fn parse_worker_round(args: &str, clause: &str) -> Result<(usize, usize)> {
     let (w, r) = args
         .split_once('@')
         .ok_or_else(|| anyhow::anyhow!("expected <worker>@<round> in '{clause}'"))?;

@@ -143,6 +143,19 @@ pub mod keys {
     /// observation; bounded by (1−α) for deterministic compressors
     /// (gauge; sim paths only).
     pub const HEALTH_RATIO_MAX: &str = "health.contraction.ratio.max";
+    /// Session-layer reconnects completed (redial or adopt handshakes
+    /// plus in-place replays after transient frame loss).
+    pub const SESSION_RECONNECTS: &str = "session.reconnects";
+    /// Frames retransmitted from a session's ring (replay handshakes and
+    /// in-place resends).
+    pub const SESSION_REPLAYED_FRAMES: &str = "session.replayed.frames";
+    /// Envelope-protected frames rejected by CRC32/sequence checks and
+    /// re-requested instead of crashing the run.
+    pub const SESSION_CRC_REJECTS: &str = "session.crc.rejects";
+    /// Workers converted to scheduler absences by
+    /// `--on-worker-loss degrade` after exhausting their reconnect
+    /// budget (counter; also the live count within one run).
+    pub const SESSION_DEGRADED_WORKERS: &str = "session.degraded.workers";
 }
 
 static ENABLED: AtomicBool = AtomicBool::new(false);

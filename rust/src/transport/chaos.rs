@@ -1,0 +1,526 @@
+//! Seeded wire-level chaos proxy: a [`Conn`] wrapper around the
+//! *worker-side* endpoint that injects frame loss, single-bit
+//! corruption, stalls, and permanent link death — deterministically from
+//! `(spec, seed, worker, round)`, so a chaos run is exactly repeatable
+//! and its recovered trajectory can be asserted bitwise against the
+//! fault-free run.
+//!
+//! Grammar (clauses comma-separated, same splitter as the fault DSL):
+//!
+//! ```text
+//!   reset(w@r)          one frame of worker w's round r evaporates in
+//!                       flight; a seeded coin picks the direction (the
+//!                       round's model broadcast or the worker's uplink).
+//!                       On a redial-capable transport the socket is
+//!                       severed too, forcing the full RESUME handshake;
+//!                       otherwise the session layer retransmits over the
+//!                       live conn.
+//!   corrupt(w@r)        one seeded bit flip in a round-r frame (direction
+//!                       by the same coin) — the CRC envelope must detect
+//!                       it and the session layer re-request the frame.
+//!   stall(w,r0..r1,MSms) worker w sleeps MS ms before each uplink of
+//!                       rounds r0..=r1 (real wall-clock; trajectory
+//!                       unchanged).
+//!   down(w@r)           worker w's link dies permanently when round r's
+//!                       broadcast arrives — the deterministic trigger for
+//!                       the `--on-worker-loss` policies.
+//! ```
+//!
+//! Wrapping only the worker endpoints still exercises every detection
+//! site: a tx-corrupt is caught by the *master's* CRC check, an
+//! rx-corrupt by the worker's, and reset recovery runs in both
+//! directions. Rounds are counted autonomously from the downlink: each
+//! *new* (by envelope sequence) `Model`/`ModelDelta` frame opens the next
+//! round, so the proxy needs no side channel to the scheduler — which is
+//! also why chaos requires full participation and the session envelope
+//! (both validated at the CLI).
+
+use super::codec::{TAG_MODEL, TAG_MODEL_DELTA, TAG_SESS_ACK, TAG_SESS_REQ, TAG_UP, TAG_UP_BLOCK};
+use super::session::{crc32, TransientLoss, SESS_FLAG, TRAILER};
+use super::Conn;
+use crate::sched::faults::{parse_call, parse_worker_round, split_clauses};
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One stall window: uplinks of rounds `from..=to` sleep `delay_ms`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Stall {
+    pub worker: usize,
+    pub from: usize,
+    pub to: usize,
+    pub delay_ms: u64,
+}
+
+/// A parsed, validated chaos schedule. Excluded from run fingerprints by
+/// construction (a recovered run must share the fault-free identity).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChaosPlan {
+    resets: Vec<(usize, usize)>,
+    corrupts: Vec<(usize, usize)>,
+    stalls: Vec<Stall>,
+    downs: Vec<(usize, usize)>,
+    /// CRC32 of the cleaned spec, folded into every fault-site RNG so
+    /// distinct specs realize distinct direction/bit choices.
+    spec_hash: u32,
+}
+
+impl ChaosPlan {
+    pub fn parse(spec: &str) -> Result<ChaosPlan> {
+        let cleaned: String = spec.chars().filter(|c| !c.is_whitespace()).collect();
+        let mut plan = ChaosPlan { spec_hash: crc32(cleaned.as_bytes()), ..Default::default() };
+        if cleaned.is_empty() || cleaned == "none" {
+            return Ok(plan);
+        }
+        for clause in split_clauses(&cleaned) {
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(args) = parse_call(clause, "reset") {
+                plan.resets.push(parse_worker_round(args, clause)?);
+                continue;
+            }
+            if let Some(args) = parse_call(clause, "corrupt") {
+                plan.corrupts.push(parse_worker_round(args, clause)?);
+                continue;
+            }
+            if let Some(args) = parse_call(clause, "down") {
+                plan.downs.push(parse_worker_round(args, clause)?);
+                continue;
+            }
+            if let Some(args) = parse_call(clause, "stall") {
+                let parts: Vec<&str> = args.split(',').collect();
+                ensure!(parts.len() == 3, "stall needs (worker, r0..r1, delay_ms): '{clause}'");
+                let worker: usize =
+                    parts[0].parse().map_err(|_| anyhow::anyhow!("bad worker in '{clause}'"))?;
+                let (from, to) = parts[1]
+                    .split_once("..")
+                    .ok_or_else(|| anyhow::anyhow!("bad round range in '{clause}'"))?;
+                let from: usize =
+                    from.parse().map_err(|_| anyhow::anyhow!("bad range start in '{clause}'"))?;
+                let to: usize =
+                    to.parse().map_err(|_| anyhow::anyhow!("bad range end in '{clause}'"))?;
+                ensure!(from <= to, "stall range {from}..{to} is empty in '{clause}'");
+                let ms = parts[2].strip_suffix("ms").unwrap_or(parts[2]);
+                let delay_ms: u64 =
+                    ms.parse().map_err(|_| anyhow::anyhow!("bad delay in '{clause}'"))?;
+                ensure!(delay_ms > 0, "stall delay must be positive in '{clause}'");
+                plan.stalls.push(Stall { worker, from, to, delay_ms });
+                continue;
+            }
+            bail!(
+                "unknown chaos clause '{clause}' (expected reset(<w>@<r>), \
+                 corrupt(<w>@<r>), stall(<w>,<r0>..<r1>,<ms>ms), down(<w>@<r>))"
+            );
+        }
+        // A downed worker can't also suffer later recoverable faults.
+        for &(w, r) in &plan.downs {
+            for &(w2, r2) in plan.resets.iter().chain(&plan.corrupts) {
+                ensure!(
+                    w2 != w || r2 < r,
+                    "chaos plan: worker {w} is down from round {r} but has a \
+                     recoverable fault at round {r2}"
+                );
+            }
+        }
+        Ok(plan)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.resets.is_empty()
+            && self.corrupts.is_empty()
+            && self.stalls.is_empty()
+            && self.downs.is_empty()
+    }
+
+    /// Largest worker index referenced (for validation against n).
+    pub fn max_worker(&self) -> Option<usize> {
+        self.resets
+            .iter()
+            .chain(&self.corrupts)
+            .chain(&self.downs)
+            .map(|&(w, _)| w)
+            .chain(self.stalls.iter().map(|s| s.worker))
+            .max()
+    }
+
+    /// Any permanent link death scheduled?
+    pub fn has_downs(&self) -> bool {
+        !self.downs.is_empty()
+    }
+
+    /// The round worker `w` goes permanently dark, if any.
+    pub fn down_round(&self, w: usize) -> Option<usize> {
+        self.downs.iter().filter(|&&(dw, _)| dw == w).map(|&(_, r)| r).min()
+    }
+
+    /// Largest stall a single round can sleep (timeout validation).
+    pub fn max_stall_ms(&self) -> u64 {
+        self.stalls.iter().map(|s| s.delay_ms).max().unwrap_or(0)
+    }
+
+    fn reset_at(&self, w: usize, r: usize) -> bool {
+        self.resets.contains(&(w, r))
+    }
+
+    fn corrupt_at(&self, w: usize, r: usize) -> bool {
+        self.corrupts.contains(&(w, r))
+    }
+
+    fn stall_ms(&self, w: usize, r: usize) -> u64 {
+        self.stalls
+            .iter()
+            .filter(|s| s.worker == w && s.from <= r && r <= s.to)
+            .map(|s| s.delay_ms)
+            .sum()
+    }
+}
+
+/// Permanent injected link death (`down(w@r)`): not recoverable by the
+/// session layer; surfaces to the master as worker loss and is governed
+/// by `--on-worker-loss`.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkDown {
+    pub worker: usize,
+    pub round: usize,
+}
+
+impl std::fmt::Display for LinkDown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "chaos: worker {} link down since round {}", self.worker, self.round)
+    }
+}
+
+impl std::error::Error for LinkDown {}
+
+/// Injection site kinds, folded into the fault-site RNG seed.
+const KIND_RESET: u64 = 1;
+const KIND_CORRUPT: u64 = 2;
+
+/// Fault-tracking state that must survive a redial: when the session
+/// layer replaces a severed socket, the fresh [`ChaosConn`] wrapper is
+/// built with [`ChaosConn::with_state`] over the *same* shared state, so
+/// round counting and one-shot fault bookkeeping continue seamlessly.
+#[derive(Default)]
+pub struct ChaosState {
+    /// Sealed model frames counted so far (dedup'd by envelope seq):
+    /// the k-th opens round k-1 (the first is the init broadcast).
+    models_seen: u64,
+    /// Highest envelope seq among counted model frames — replayed
+    /// duplicates carry older seqs and must not advance the round.
+    last_model_seq: Option<u64>,
+    /// Consumed one-shot fault sites (kind, round).
+    fired: Vec<(u64, usize)>,
+    /// Last round whose stall already slept (one sleep per round even
+    /// when the uplink is retransmitted).
+    stalled_round: Option<usize>,
+    down: bool,
+}
+
+/// Shared handle to a worker's [`ChaosState`], cloned into redial
+/// closures so reconnection preserves fault progress.
+pub type SharedChaosState = Arc<Mutex<ChaosState>>;
+
+/// The chaos proxy. Sits *under* the worker's `SessionConn` (it mangles
+/// sealed wire bytes) and above the raw transport.
+pub struct ChaosConn {
+    inner: Box<dyn Conn>,
+    plan: Arc<ChaosPlan>,
+    worker: usize,
+    seed: u64,
+    state: SharedChaosState,
+    /// Sever the real transport on reset/down (redial-capable paths).
+    hard: bool,
+}
+
+impl ChaosConn {
+    pub fn new(
+        inner: Box<dyn Conn>,
+        plan: Arc<ChaosPlan>,
+        worker: usize,
+        seed: u64,
+        hard: bool,
+    ) -> ChaosConn {
+        Self::with_state(inner, plan, worker, seed, hard, Arc::default())
+    }
+
+    /// Wrap a (fresh) transport while continuing from existing shared
+    /// fault state — the redial path.
+    pub fn with_state(
+        inner: Box<dyn Conn>,
+        plan: Arc<ChaosPlan>,
+        worker: usize,
+        seed: u64,
+        hard: bool,
+        state: SharedChaosState,
+    ) -> ChaosConn {
+        ChaosConn { inner, plan, worker, seed, state, hard }
+    }
+
+    /// The shared fault state, for re-wrapping after a redial.
+    pub fn shared_state(&self) -> SharedChaosState {
+        self.state.clone()
+    }
+
+    /// Deterministic per-site RNG: every direction and bit choice derives
+    /// only from (spec, seed, worker, round, kind).
+    fn site_rng(&self, kind: u64, round: usize) -> Rng {
+        Rng::seed(
+            self.seed
+                ^ (u64::from(self.plan.spec_hash) << 16)
+                ^ ((self.worker as u64) << 40)
+                ^ ((round as u64) << 4)
+                ^ kind,
+        )
+    }
+
+    /// Does the (kind, round) site inject on the uplink (tx) direction?
+    fn dir_is_tx(&self, kind: u64, round: usize) -> bool {
+        self.site_rng(kind, round).next_u64() & 1 == 1
+    }
+
+    fn consume(st: &mut ChaosState, kind: u64, round: usize) -> bool {
+        if st.fired.contains(&(kind, round)) {
+            return false;
+        }
+        st.fired.push((kind, round));
+        true
+    }
+
+    /// Round the worker's *next uplink* belongs to (`None` during init).
+    fn current_round(&self) -> Option<usize> {
+        self.state.lock().expect("chaos state poisoned").current_round()
+    }
+
+    fn down_err(&self, round: usize) -> anyhow::Error {
+        anyhow::Error::new(LinkDown { worker: self.worker, round })
+    }
+}
+
+impl ChaosState {
+    fn current_round(&self) -> Option<usize> {
+        (self.models_seen >= 2).then(|| self.models_seen as usize - 2)
+    }
+}
+
+impl Conn for ChaosConn {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        let mut st = self.state.lock().expect("chaos state poisoned");
+        if st.down {
+            bail!(self.down_err(self.plan.down_round(self.worker).unwrap_or(0)));
+        }
+        let tag = frame.first().copied().unwrap_or(0) & !SESS_FLAG;
+        let is_up = tag == TAG_UP || tag == TAG_UP_BLOCK;
+        if let (true, Some(r)) = (is_up, st.current_round()) {
+            let stall = self.plan.stall_ms(self.worker, r);
+            if stall > 0 && st.stalled_round != Some(r) {
+                st.stalled_round = Some(r);
+                std::thread::sleep(Duration::from_millis(stall));
+            }
+            if self.plan.corrupt_at(self.worker, r)
+                && self.dir_is_tx(KIND_CORRUPT, r)
+                && Self::consume(&mut st, KIND_CORRUPT, r)
+            {
+                let mut mangled = frame.to_vec();
+                let bit = self.site_rng(KIND_CORRUPT, r).fork(1).next_below(mangled.len() * 8);
+                mangled[bit / 8] ^= 1 << (bit % 8);
+                return self.inner.send(&mangled);
+            }
+            if self.plan.reset_at(self.worker, r)
+                && self.dir_is_tx(KIND_RESET, r)
+                && Self::consume(&mut st, KIND_RESET, r)
+            {
+                // The frame evaporates. On a redial path the socket dies
+                // with it; otherwise the session retransmits in place.
+                if self.hard {
+                    self.inner.sever();
+                    bail!("chaos: injected connection reset (worker {}, round {r})", self.worker);
+                }
+                return Err(anyhow::Error::new(TransientLoss));
+            }
+        }
+        self.inner.send(frame)
+    }
+
+    fn recv_into(&mut self, buf: &mut Vec<u8>) -> Result<()> {
+        {
+            let st = self.state.lock().expect("chaos state poisoned");
+            if st.down {
+                bail!(self.down_err(self.plan.down_round(self.worker).unwrap_or(0)));
+            }
+        }
+        self.inner.recv_into(buf)?;
+        let tag = buf.first().copied().unwrap_or(0);
+        if tag == TAG_SESS_REQ || tag == TAG_SESS_ACK {
+            return Ok(()); // the recovery channel itself is never mangled
+        }
+        let masked = tag & !SESS_FLAG;
+        let sealed_model = (masked == TAG_MODEL || masked == TAG_MODEL_DELTA)
+            && tag & SESS_FLAG != 0
+            && buf.len() >= 1 + TRAILER;
+        if sealed_model {
+            let body = buf.len() - 4;
+            let seq = u64::from_le_bytes(buf[body - 8..body].try_into().expect("len checked"));
+            let mut st = self.state.lock().expect("chaos state poisoned");
+            if st.last_model_seq.map_or(true, |s| seq > s) {
+                // A NEW model frame: it would open round `models_seen - 1`.
+                let opens = st.models_seen as i64 - 1;
+                if opens >= 0 {
+                    let r = opens as usize;
+                    if self.plan.down_round(self.worker) == Some(r) {
+                        st.down = true;
+                        if self.hard {
+                            self.inner.sever();
+                        }
+                        return Err(self.down_err(r));
+                    }
+                    if self.plan.corrupt_at(self.worker, r)
+                        && !self.dir_is_tx(KIND_CORRUPT, r)
+                        && Self::consume(&mut st, KIND_CORRUPT, r)
+                    {
+                        // Deliver damaged; the clean replay (same seq)
+                        // will be counted instead.
+                        let bit =
+                            self.site_rng(KIND_CORRUPT, r).fork(1).next_below(buf.len() * 8);
+                        buf[bit / 8] ^= 1 << (bit % 8);
+                        return Ok(());
+                    }
+                    if self.plan.reset_at(self.worker, r)
+                        && !self.dir_is_tx(KIND_RESET, r)
+                        && Self::consume(&mut st, KIND_RESET, r)
+                    {
+                        buf.clear();
+                        if self.hard {
+                            self.inner.sever();
+                            bail!(
+                                "chaos: injected connection reset (worker {}, round {r})",
+                                self.worker
+                            );
+                        }
+                        return Err(anyhow::Error::new(TransientLoss));
+                    }
+                }
+                st.models_seen += 1;
+                st.last_model_seq = Some(seq);
+            }
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        self.recv_into(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn sever(&mut self) {
+        self.inner.sever();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = ChaosPlan::parse("reset(0@5), corrupt(1@9), stall(2,3..6,40ms), down(3@7)")
+            .unwrap();
+        assert!(p.reset_at(0, 5) && !p.reset_at(0, 4));
+        assert!(p.corrupt_at(1, 9));
+        assert_eq!(p.stall_ms(2, 3), 40);
+        assert_eq!(p.stall_ms(2, 6), 40);
+        assert_eq!(p.stall_ms(2, 7), 0);
+        assert_eq!(p.down_round(3), Some(7));
+        assert_eq!(p.down_round(0), None);
+        assert_eq!(p.max_worker(), Some(3));
+        assert_eq!(p.max_stall_ms(), 40);
+        assert!(p.has_downs());
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn empty_and_invalid_specs() {
+        assert!(ChaosPlan::parse("").unwrap().is_empty());
+        assert!(ChaosPlan::parse("none").unwrap().is_empty());
+        assert!(ChaosPlan::parse("explode(0@1)").is_err());
+        assert!(ChaosPlan::parse("reset(0)").is_err());
+        assert!(ChaosPlan::parse("stall(0,5..2,10ms)").is_err());
+        assert!(ChaosPlan::parse("stall(0,1..2,0ms)").is_err());
+        // A recoverable fault after the link is down can never fire.
+        assert!(ChaosPlan::parse("down(0@3),reset(0@5)").is_err());
+        assert!(ChaosPlan::parse("down(0@5),reset(0@3)").is_ok());
+    }
+
+    #[test]
+    fn direction_and_bit_choices_are_deterministic() {
+        let p = std::sync::Arc::new(ChaosPlan::parse("corrupt(1@4)").unwrap());
+        let (_, w) = crate::transport::local::pair();
+        let a = ChaosConn::new(Box::new(w), p.clone(), 1, 7, false);
+        assert_eq!(a.dir_is_tx(KIND_CORRUPT, 4), a.dir_is_tx(KIND_CORRUPT, 4));
+        // Distinct specs with the same clause realize independent coins
+        // somewhere — at minimum the spec hash differs.
+        let q = ChaosPlan::parse("corrupt(1@4),stall(0,1..1,5ms)").unwrap();
+        assert_ne!(p.spec_hash, q.spec_hash);
+    }
+
+    #[test]
+    fn counts_rounds_by_new_model_frames_only() {
+        use crate::transport::codec::{encode, Frame};
+        use crate::transport::session::seal;
+        let plan = std::sync::Arc::new(ChaosPlan::parse("none").unwrap());
+        let (mut m, w) = crate::transport::local::pair();
+        let mut c = ChaosConn::new(Box::new(w), plan, 0, 1, false);
+        let model = encode(&Frame::Model(vec![1.0]));
+        m.send(&seal(&model, 0)).unwrap(); // init
+        m.send(&seal(&model, 1)).unwrap(); // round 0
+        m.send(&seal(&model, 1)).unwrap(); // replayed duplicate
+        m.send(&seal(&model, 2)).unwrap(); // round 1
+        for _ in 0..4 {
+            c.recv().unwrap();
+        }
+        assert_eq!(c.current_round(), Some(1), "duplicate must not advance the round");
+    }
+
+    #[test]
+    fn shared_state_survives_rewrap() {
+        use crate::transport::codec::{encode, Frame};
+        use crate::transport::session::seal;
+        let plan = Arc::new(ChaosPlan::parse("none").unwrap());
+        let (mut m1, w1) = crate::transport::local::pair();
+        let mut c1 = ChaosConn::new(Box::new(w1), plan.clone(), 0, 1, false);
+        let model = encode(&Frame::Model(vec![1.0]));
+        m1.send(&seal(&model, 0)).unwrap(); // init
+        m1.send(&seal(&model, 1)).unwrap(); // round 0
+        c1.recv().unwrap();
+        c1.recv().unwrap();
+        // "Redial": fresh transport, same shared fault state.
+        let (mut m2, w2) = crate::transport::local::pair();
+        let mut c2 =
+            ChaosConn::with_state(Box::new(w2), plan, 0, 1, false, c1.shared_state());
+        m2.send(&seal(&model, 2)).unwrap(); // round 1
+        c2.recv().unwrap();
+        assert_eq!(c2.current_round(), Some(1), "round count continues across rewrap");
+    }
+
+    #[test]
+    fn down_kills_the_link_permanently() {
+        use crate::transport::codec::{encode, Frame};
+        use crate::transport::session::seal;
+        let plan = std::sync::Arc::new(ChaosPlan::parse("down(0@1)").unwrap());
+        let (mut m, w) = crate::transport::local::pair();
+        let mut c = ChaosConn::new(Box::new(w), plan, 0, 1, false);
+        let model = encode(&Frame::Model(vec![1.0]));
+        m.send(&seal(&model, 0)).unwrap(); // init
+        m.send(&seal(&model, 1)).unwrap(); // round 0
+        m.send(&seal(&model, 2)).unwrap(); // round 1 -> down
+        c.recv().unwrap();
+        c.recv().unwrap();
+        let err = c.recv().expect_err("round-1 model must kill the link");
+        let down = err.downcast_ref::<LinkDown>().expect("typed LinkDown");
+        assert_eq!((down.worker, down.round), (0, 1));
+        assert!(c.recv().is_err(), "dead is dead");
+        assert!(c.send(b"\x02").is_err());
+    }
+}

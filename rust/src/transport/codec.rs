@@ -33,6 +33,23 @@
 //!                    exact f64 model image the worker must cache — f64, not
 //!                    the f32 data plane, so a resumed delta-broadcast worker
 //!                    patches against precisely the pre-crash image)
+//!   0x0A SessReq   : u64 sid | u64 from_seq    (either direction: replay
+//!                    your session ring from sequence number `from_seq`;
+//!                    sent after a CRC reject or as the first frame of a
+//!                    RESUME handshake. Never enveloped itself.)
+//!   0x0B SessAck   : u64 sid | u64 from_seq    (RESUME reply: the peer
+//!                    adopted the reconnected stream; semantically a
+//!                    SessReq for the opposite direction, but never
+//!                    answered with another ack — that asymmetry is what
+//!                    terminates the handshake)
+//!
+//! Session envelope (`transport/session.rs`): with sessions on, every
+//! frame except SessReq/SessAck travels with bit 0x40 set on the tag
+//! byte and a 12-byte trailer `u64 seq | u32 crc32` appended; unsealing
+//! strips both, so the bytes handed to [`decode`] are exactly the
+//! session-off wire format. Tags stop at 0x0B, so bits 0x40 (session)
+//! and 0x80 are free on the tag byte; the `Up` HEALTH_FLAG lives on the
+//! *kind* byte (offset 1) and never collides.
 //!
 //! Values travel as f32 — the same precision the bit accounting charges —
 //! so the simulated `bits/n` axis and the real byte stream agree (the `Up`
@@ -52,6 +69,8 @@ pub const TAG_STATE_SYNC: u8 = 0x06;
 pub const TAG_CKPT_REQ: u8 = 0x07;
 pub const TAG_CKPT_STATE: u8 = 0x08;
 pub const TAG_RESTORE: u8 = 0x09;
+pub const TAG_SESS_REQ: u8 = 0x0A;
+pub const TAG_SESS_ACK: u8 = 0x0B;
 
 /// High bit of the `Up` kind byte: a trailing f64 health probe follows
 /// the payload. `UpBlock` never sets it (health-on workers send whole
@@ -93,6 +112,12 @@ pub enum Frame {
     /// Resume push (master -> fresh worker): state blob + the exact f64
     /// model image to cache (replaces init on a resumed run).
     Restore { blob: Vec<u8>, model: Vec<f64> },
+    /// Session replay request (either direction): retransmit every ring
+    /// frame with sequence number >= `from_seq` for session `sid`.
+    SessReq { sid: u64, from_seq: u64 },
+    /// Session resume acknowledgement: stream adopted; also a replay
+    /// request for the reverse direction (never answered with an ack).
+    SessAck { sid: u64, from_seq: u64 },
 }
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -286,6 +311,16 @@ fn encode_impl(frame: &Frame, out: &mut Vec<u8>) {
                 put_f64(&mut out, v);
             }
         }
+        Frame::SessReq { sid, from_seq } => {
+            out.push(TAG_SESS_REQ);
+            put_u64(&mut out, *sid);
+            put_u64(&mut out, *from_seq);
+        }
+        Frame::SessAck { sid, from_seq } => {
+            out.push(TAG_SESS_ACK);
+            put_u64(&mut out, *sid);
+            put_u64(&mut out, *from_seq);
+        }
     }
 }
 
@@ -387,6 +422,16 @@ fn decode_impl(bytes: &[u8]) -> Result<Frame> {
                 model.push(r.f64()?);
             }
             Frame::Restore { blob, model }
+        }
+        TAG_SESS_REQ => {
+            let sid = r.u64()?;
+            let from_seq = r.u64()?;
+            Frame::SessReq { sid, from_seq }
+        }
+        TAG_SESS_ACK => {
+            let sid = r.u64()?;
+            let from_seq = r.u64()?;
+            Frame::SessAck { sid, from_seq }
         }
         t => bail!("unknown frame tag {t:#x}"),
     };
@@ -601,6 +646,30 @@ mod tests {
         let mut blk = encode(&Frame::UpBlock { block: 0, n_blocks: 2, msg: sample_msg(), loss: 0.0 });
         blk[1] |= HEALTH_FLAG;
         assert!(decode(&blk).is_err());
+    }
+
+    #[test]
+    fn roundtrip_session_frames() {
+        let req = Frame::SessReq { sid: 0xDEAD_BEEF_0BAD_F00D, from_seq: 17 };
+        match decode(&encode(&req)).unwrap() {
+            Frame::SessReq { sid, from_seq } => {
+                assert_eq!(sid, 0xDEAD_BEEF_0BAD_F00D);
+                assert_eq!(from_seq, 17);
+            }
+            _ => panic!("wrong frame"),
+        }
+        let ack = Frame::SessAck { sid: 7, from_seq: u64::MAX };
+        match decode(&encode(&ack)).unwrap() {
+            Frame::SessAck { sid, from_seq } => {
+                assert_eq!(sid, 7);
+                assert_eq!(from_seq, u64::MAX);
+            }
+            _ => panic!("wrong frame"),
+        }
+        // Fixed 17-byte layout; truncation is rejected.
+        let bytes = encode(&req);
+        assert_eq!(bytes.len(), 17);
+        assert!(decode(&bytes[..16]).is_err());
     }
 
     #[test]

@@ -9,11 +9,17 @@
 //! * [`tcp`]   — length-prefixed frames over real TCP sockets (std::net).
 //! * [`fault`] — scheduler-armed fault injection (straggler delay, frame
 //!   duplication) over any of the above.
+//! * [`session`] — self-healing session envelope: CRC32 + sequence
+//!   numbers, retransmit ring, reconnect/RESUME handshake.
+//! * [`chaos`] — seeded wire-level chaos proxy (resets, bit flips,
+//!   stalls, permanent link death) for exercising the session layer.
 
+pub mod chaos;
 pub mod codec;
 pub mod downlink;
 pub mod fault;
 pub mod local;
+pub mod session;
 pub mod tcp;
 
 use anyhow::Result;
@@ -32,6 +38,12 @@ pub trait Conn: Send {
         *buf = self.recv()?;
         Ok(())
     }
+
+    /// Tear the transport down *hard*, as a network reset would (both
+    /// directions die, the peer sees an error, no clean shutdown frame).
+    /// Default is a no-op: in-process channels have no wire to cut — the
+    /// chaos proxy models their resets as in-flight frame loss instead.
+    fn sever(&mut self) {}
 }
 
 impl<T: Conn + ?Sized> Conn for Box<T> {
@@ -45,5 +57,9 @@ impl<T: Conn + ?Sized> Conn for Box<T> {
 
     fn recv_into(&mut self, buf: &mut Vec<u8>) -> Result<()> {
         (**self).recv_into(buf)
+    }
+
+    fn sever(&mut self) {
+        (**self).sever()
     }
 }

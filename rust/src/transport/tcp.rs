@@ -98,18 +98,9 @@ pub fn io_timeout() -> Option<Duration> {
     resolve_io_timeout(cli, env_ms.as_deref(), env_secs.as_deref())
 }
 
-/// Connect-retry schedule derived from the same knob: 5 attempts with a
-/// doubling backoff whose base is 1/32 of the I/O timeout, clamped to
-/// [10ms, 200ms] (50ms when timeouts are disabled) — so shrinking
-/// `--net-timeout-ms` tightens the whole connection path, not just
-/// established-stream reads.
-pub fn connect_retry_schedule() -> (u32, Duration) {
-    let base = match io_timeout() {
-        Some(t) => Duration::from_millis((t.as_millis() as u64 / 32).clamp(10, 200)),
-        None => Duration::from_millis(50),
-    };
-    (5, base)
-}
+/// High bit of the worker-id hello: set when a worker re-dials to
+/// RESUME an existing session rather than join fresh.
+pub const RESUME_FLAG: u32 = 0x8000_0000;
 
 pub struct TcpConn {
     stream: TcpStream,
@@ -145,25 +136,17 @@ impl TcpConn {
         self.stream
     }
 
-    /// Connect with up to `attempts` tries and doubling `backoff` between
-    /// them — lets workers dial a master that is still binding its
+    /// Connect under the shared exponential-backoff-with-decorrelated-
+    /// jitter policy ([`crate::transport::session::RetryPolicy`]), seeded
+    /// for reproducible schedules and budgeted by the resolved I/O
+    /// timeout — lets workers dial a master that is still binding its
     /// listener, while a genuinely dead address fails in bounded time.
-    pub fn connect_with_retry(addr: &str, attempts: u32, backoff: Duration) -> Result<Self> {
-        let attempts = attempts.max(1);
-        let mut delay = backoff;
-        let mut last_err = None;
-        for attempt in 0..attempts {
-            match TcpStream::connect(addr) {
-                Ok(stream) => return Self::new(stream),
-                Err(e) => last_err = Some(e),
-            }
-            if attempt + 1 < attempts {
-                std::thread::sleep(delay);
-                delay = delay.saturating_mul(2);
-            }
-        }
-        Err(last_err.unwrap())
-            .with_context(|| format!("connect {addr} ({attempts} attempts)"))
+    /// Each retry warns once (never silent).
+    pub fn connect_with_retry(addr: &str, seed: u64) -> Result<Self> {
+        let policy = super::session::RetryPolicy::for_io_timeout(seed);
+        policy.run(&format!("connect {addr}"), || {
+            TcpStream::connect(addr).map_err(anyhow::Error::from).and_then(Self::new)
+        })
     }
 }
 
@@ -196,6 +179,13 @@ impl Conn for TcpConn {
         telemetry::counter(keys::RX_FRAMES).incr(1);
         telemetry::counter(keys::RX_BYTES).incr(len as u64 + 4);
         Ok(())
+    }
+
+    /// Hard teardown, as a real network reset: both directions die and
+    /// the peer sees an error, not a clean close. Used by the chaos
+    /// proxy's `reset`/`down` clauses on redial-capable paths.
+    fn sever(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
     }
 }
 
@@ -239,6 +229,114 @@ pub fn listen_local(n: usize) -> Result<(u16, std::thread::JoinHandle<Result<Vec
         Ok(conns)
     });
     Ok((port, handle))
+}
+
+/// Persistent acceptor for session-enabled TCP runs: keeps the listener
+/// alive for the whole run and routes every accepted stream by its
+/// 4-byte hello — fresh workers (`id`) to the initial-wiring channel,
+/// redialing workers (`id | RESUME_FLAG`) to that worker's resume
+/// channel, where the master-side session adopts them.
+pub(crate) struct TcpSwitchboard {
+    pub(crate) port: u16,
+    init_rx: std::sync::mpsc::Receiver<(usize, TcpConn)>,
+    resume_rx: Vec<Option<std::sync::mpsc::Receiver<TcpConn>>>,
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl TcpSwitchboard {
+    pub(crate) fn bind(n_workers: usize) -> Result<TcpSwitchboard> {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::mpsc::channel;
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind switchboard")?;
+        raise_listen_backlog(&listener, 4096);
+        listener.set_nonblocking(true).context("switchboard set_nonblocking")?;
+        let port = listener.local_addr()?.port();
+        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let (init_tx, init_rx) = channel();
+        let mut resume_txs = Vec::with_capacity(n_workers);
+        let mut resume_rx = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let (tx, rx) = channel();
+            resume_txs.push(tx);
+            resume_rx.push(Some(rx));
+        }
+        let stop2 = stop.clone();
+        std::thread::Builder::new()
+            .name("tcp-switchboard".into())
+            .spawn(move || loop {
+                if stop2.load(Ordering::Relaxed) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let routed = (|| -> Result<()> {
+                            let mut conn = TcpConn::new(stream)?;
+                            let hello = conn.recv()?;
+                            anyhow::ensure!(hello.len() == 4, "bad hello length {}", hello.len());
+                            let raw = u32::from_le_bytes(hello[..].try_into().expect("len"));
+                            let resume = raw & RESUME_FLAG != 0;
+                            let id = (raw & !RESUME_FLAG) as usize;
+                            anyhow::ensure!(id < n_workers, "bad worker id {id}");
+                            if resume {
+                                let _ = resume_txs[id].send(conn);
+                            } else {
+                                let _ = init_tx.send((id, conn));
+                            }
+                            Ok(())
+                        })();
+                        if let Err(e) = routed {
+                            eprintln!("switchboard: rejected a connection: {e:#}");
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(e) => {
+                        eprintln!("switchboard: accept failed, exiting: {e:#}");
+                        return;
+                    }
+                }
+            })
+            .context("spawn tcp switchboard")?;
+        Ok(TcpSwitchboard { port, init_rx, resume_rx, stop })
+    }
+
+    /// Collect the initial connection of every worker (hello already
+    /// consumed by the acceptor), ordered by worker id.
+    pub(crate) fn initial_conns(&self, n_workers: usize) -> Result<Vec<TcpConn>> {
+        let window = io_timeout().unwrap_or(DEFAULT_IO_TIMEOUT);
+        let mut ordered: Vec<Option<TcpConn>> = (0..n_workers).map(|_| None).collect();
+        for _ in 0..n_workers {
+            let (id, conn) = self
+                .init_rx
+                .recv_timeout(window)
+                .context("waiting for initial worker connections")?;
+            ensure_slot_free(&ordered, id)?;
+            ordered[id] = Some(conn);
+        }
+        let mut out = Vec::with_capacity(n_workers);
+        for c in ordered {
+            out.push(c.context("missing worker connection")?);
+        }
+        Ok(out)
+    }
+
+    /// Hand worker `w`'s resume channel to its master-side session (can
+    /// only be taken once).
+    pub(crate) fn take_resume_rx(&mut self, w: usize) -> std::sync::mpsc::Receiver<TcpConn> {
+        self.resume_rx[w].take().expect("resume receiver already taken")
+    }
+}
+
+impl Drop for TcpSwitchboard {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+fn ensure_slot_free(ordered: &[Option<TcpConn>], id: usize) -> Result<()> {
+    anyhow::ensure!(ordered[id].is_none(), "duplicate worker id {id}");
+    Ok(())
 }
 
 #[cfg(test)]
@@ -287,13 +385,9 @@ mod tests {
         let clients: Vec<_> = (0..n as u32)
             .map(|i| {
                 std::thread::spawn(move || {
-                    let (attempts, backoff) = connect_retry_schedule();
-                    let mut c = TcpConn::connect_with_retry(
-                        &format!("127.0.0.1:{port}"),
-                        attempts,
-                        backoff,
-                    )
-                    .unwrap();
+                    let mut c =
+                        TcpConn::connect_with_retry(&format!("127.0.0.1:{port}"), i as u64)
+                            .unwrap();
                     c.send(&i.to_le_bytes()).unwrap();
                     c
                 })
@@ -324,24 +418,31 @@ mod tests {
             let listener = TcpListener::bind(("127.0.0.1", port)).unwrap();
             let _ = listener.accept().unwrap();
         });
-        let conn =
-            TcpConn::connect_with_retry(&addr, 8, Duration::from_millis(25));
+        let conn = TcpConn::connect_with_retry(&addr, 42);
         assert!(conn.is_ok(), "{:?}", conn.err());
         server.join().unwrap();
     }
 
     #[test]
     fn connect_with_retry_fails_in_bounded_time() {
-        // Nothing listens here; all attempts must fail quickly.
+        // Nothing listens here; the retry budget (tied to the resolved
+        // I/O timeout) must bound the failure, not retry forever. Use
+        // the policy directly with a tiny budget so the test is fast
+        // regardless of the process-wide timeout knob.
         let probe = TcpListener::bind("127.0.0.1:0").unwrap();
         let port = probe.local_addr().unwrap().port();
         drop(probe);
-        let t0 = std::time::Instant::now();
-        let r = TcpConn::connect_with_retry(
-            &format!("127.0.0.1:{port}"),
-            3,
+        let addr = format!("127.0.0.1:{port}");
+        let policy = super::super::session::RetryPolicy::new(
             Duration::from_millis(5),
+            Duration::from_millis(20),
+            Some(Duration::from_millis(150)),
+            7,
         );
+        let t0 = std::time::Instant::now();
+        let r = policy.run(&format!("connect {addr}"), || {
+            TcpStream::connect(&addr).map_err(anyhow::Error::from).and_then(TcpConn::new)
+        });
         assert!(r.is_err());
         assert!(t0.elapsed() < Duration::from_secs(5));
     }
@@ -377,13 +478,31 @@ mod tests {
     }
 
     #[test]
-    fn connect_retry_schedule_tracks_the_knob() {
-        // The schedule is derived from io_timeout(); whatever that
-        // resolves to in this process, the invariants hold.
-        let (attempts, backoff) = connect_retry_schedule();
-        assert_eq!(attempts, 5);
-        assert!(backoff >= Duration::from_millis(10));
-        assert!(backoff <= Duration::from_millis(200));
+    fn switchboard_routes_fresh_and_resume_hellos() {
+        let mut sb = TcpSwitchboard::bind(2).unwrap();
+        let port = sb.port;
+        let dial = |hello: u32| {
+            let mut c = TcpConn::connect(&format!("127.0.0.1:{port}")).unwrap();
+            c.send(&hello.to_le_bytes()).unwrap();
+            c
+        };
+        let mut w1 = dial(1);
+        let mut w0 = dial(0);
+        let mut conns = sb.initial_conns(2).unwrap();
+        // Ordered by id regardless of arrival order.
+        w0.send(b"from-0").unwrap();
+        w1.send(b"from-1").unwrap();
+        assert_eq!(conns[0].recv().unwrap(), b"from-0");
+        assert_eq!(conns[1].recv().unwrap(), b"from-1");
+        // A resume hello lands on that worker's resume channel, not the
+        // initial one.
+        let resume_rx = sb.take_resume_rx(1);
+        let mut w1b = dial(1 | RESUME_FLAG);
+        let mut adopted = resume_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        w1b.send(b"resumed").unwrap();
+        assert_eq!(adopted.recv().unwrap(), b"resumed");
+        adopted.send(b"ack").unwrap();
+        assert_eq!(w1b.recv().unwrap(), b"ack");
     }
 
     #[test]

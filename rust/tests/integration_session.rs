@@ -1,0 +1,270 @@
+//! Self-healing session acceptance suite (ISSUE 10): seeded wire chaos
+//! must be *invisible* — a run that survives resets, corrupted frames,
+//! and stalls is bitwise identical to the fault-free run, including the
+//! logical uplink/downlink frame-byte accounting — and recovery that
+//! exhausts its options degrades to EF21-PP absence (provably equal to
+//! the equivalent `--participation` schedule) or aborts through the
+//! quorum floor with a valid blackbox and a loadable checkpoint.
+
+use ef21::algo::WorkerNode;
+use ef21::ckpt::Checkpoint;
+use ef21::compress::{Compressor, TopK};
+use ef21::coordinator::dist::{
+    run_distributed_ckpt_net, run_distributed_sched, run_distributed_sched_ckpt_net, Broadcast,
+    DistOutcome, LossPolicy, NetOpts, TransportKind,
+};
+use ef21::coordinator::runner::CkptOptions;
+use ef21::health::HealthSpec;
+use ef21::oracle::GradOracle;
+use ef21::sched::{FaultPlan, Participation, Scheduler};
+use ef21::transport::chaos::ChaosPlan;
+use ef21::transport::session::SessionCfg;
+use std::sync::Arc;
+
+fn quad(i: usize) -> Box<dyn GradOracle> {
+    Box::new(ef21::oracle::quadratic::divergence_example().remove(i))
+}
+
+fn master() -> Box<ef21::algo::ef21::Ef21Master> {
+    Box::new(ef21::algo::ef21::Ef21Master::new(vec![1.0; 3], 3, 0.01))
+}
+
+fn workers() -> impl Fn(usize) -> Box<dyn WorkerNode> + Send + Sync + 'static {
+    let c: Arc<dyn Compressor> = Arc::new(TopK::new(1));
+    move |i| {
+        let rng = ef21::util::rng::worker_rng(9, i);
+        Box::new(ef21::algo::ef21::Ef21Worker::new(quad(i), c.clone(), rng))
+            as Box<dyn WorkerNode>
+    }
+}
+
+fn net(seed: u64, chaos: &str) -> NetOpts {
+    NetOpts {
+        session: Some(SessionCfg::new(seed)),
+        chaos: if chaos.is_empty() {
+            None
+        } else {
+            Some(Arc::new(ChaosPlan::parse(chaos).expect("chaos spec")))
+        },
+        ..NetOpts::default()
+    }
+}
+
+/// Full bitwise equality: every RoundRecord field, the final model, AND
+/// the frame-byte meters. Sessions account logical payload bytes (what
+/// the protocol accepted, not what the wire retried), so replayed and
+/// corrupt-rejected frames must leave both meters untouched.
+fn assert_outcomes_bitwise(a: &DistOutcome, b: &DistOutcome, what: &str) {
+    assert_eq!(a.history.records.len(), b.history.records.len(), "{what}: record count");
+    for (x, y) in a.history.records.iter().zip(&b.history.records) {
+        assert_eq!(x.round, y.round, "{what}");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: loss at round {}", x.round);
+        assert_eq!(
+            x.grad_norm_sq.to_bits(),
+            y.grad_norm_sq.to_bits(),
+            "{what}: grad at round {}",
+            x.round
+        );
+        assert_eq!(
+            x.bits_per_client.to_bits(),
+            y.bits_per_client.to_bits(),
+            "{what}: bits at round {}",
+            x.round
+        );
+        assert_eq!(x.gt.to_bits(), y.gt.to_bits(), "{what}: gt at round {}", x.round);
+    }
+    assert_eq!(a.final_x.len(), b.final_x.len(), "{what}: final_x dim");
+    for (x, y) in a.final_x.iter().zip(&b.final_x) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: final_x");
+    }
+    assert_eq!(a.uplink_frame_bytes, b.uplink_frame_bytes, "{what}: uplink frame bytes");
+    assert_eq!(
+        a.downlink_frame_bytes, b.downlink_frame_bytes,
+        "{what}: downlink frame bytes"
+    );
+}
+
+fn threads_run(kind: TransportKind, rounds: usize, n: NetOpts) -> DistOutcome {
+    run_distributed_ckpt_net(
+        master(),
+        3,
+        workers(),
+        rounds,
+        kind,
+        "sess-threads",
+        Broadcast::Dense,
+        CkptOptions::default(),
+        n,
+    )
+    .expect("net run")
+}
+
+/// Turning sessions ON with no faults must not move a single bit or a
+/// single accounted byte versus the legacy (sessions-off) protocol —
+/// the envelope is pure overhead that the meters deliberately ignore.
+#[test]
+fn sessions_on_no_faults_equals_sessions_off() {
+    for kind in [TransportKind::Local, TransportKind::Tcp] {
+        let off = threads_run(kind, 12, NetOpts::default());
+        let on = threads_run(kind, 12, net(7, ""));
+        assert_outcomes_bitwise(&off, &on, &format!("sessions on vs off ({kind:?})"));
+    }
+}
+
+/// THE acceptance property: a run that recovers from a connection
+/// reset, a corrupted frame (CRC reject → re-request → replay), and a
+/// mid-run stall is bitwise identical to the fault-free session run —
+/// RoundRecords, final_x, and both frame-byte meters — on local
+/// channels AND real TCP sockets under the thread-per-conn master.
+#[test]
+fn chaos_recovery_is_bitwise_identical_to_fault_free() {
+    let chaos = "reset(0@2),corrupt(1@4),stall(2,3..5,5ms)";
+    for kind in [TransportKind::Local, TransportKind::Tcp] {
+        let clean = threads_run(kind, 12, net(7, ""));
+        let chaotic = threads_run(kind, 12, net(7, chaos));
+        assert_outcomes_bitwise(&clean, &chaotic, &format!("chaos recovery ({kind:?})"));
+    }
+}
+
+/// The reactor master recovers soft chaos (in-stream reset + corrupt)
+/// through its shared SessionMux: bitwise equal to both the fault-free
+/// session run and the sessions-off run.
+#[test]
+fn reactor_recovers_soft_chaos_bitwise() {
+    let run = |kind: TransportKind, n: NetOpts| {
+        ef21::coordinator::reactor::run_reactor_net(
+            master(),
+            3,
+            workers(),
+            12,
+            kind,
+            "sess-reactor",
+            ef21::coordinator::reactor::default_shards(),
+            None,
+            n,
+        )
+        .expect("reactor net run")
+    };
+    for kind in [TransportKind::Local, TransportKind::Tcp] {
+        let off = run(kind, NetOpts::default());
+        let on = run(kind, net(11, ""));
+        let chaotic = run(kind, net(11, "reset(0@2),corrupt(1@3)"));
+        assert_outcomes_bitwise(&off, &on, &format!("reactor sessions ({kind:?})"));
+        assert_outcomes_bitwise(&off, &chaotic, &format!("reactor chaos ({kind:?})"));
+    }
+}
+
+/// Graceful degradation IS EF21-PP: a worker lost for good under
+/// `--on-worker-loss degrade` leaves exactly the trajectory of the same
+/// worker being absent on every remaining round of a participation
+/// schedule (loss, uplink bits, final model — all bitwise).
+#[test]
+fn degrade_path_equals_equivalent_participation_schedule() {
+    let rounds = 12;
+    let mut n = net(13, "down(2@5)");
+    n.on_loss = LossPolicy::Degrade { grace_ms: 500 };
+    let degraded = run_distributed_sched_ckpt_net(
+        master(),
+        3,
+        workers(),
+        rounds,
+        TransportKind::Local,
+        "sess-degrade",
+        Arc::new(Scheduler::noop(3)),
+        CkptOptions::default(),
+        n,
+    )
+    .expect("degrade run");
+
+    let drops: String =
+        (5..rounds).map(|r| format!("drop(2@{r})")).collect::<Vec<_>>().join(",");
+    let sched = Arc::new(
+        Scheduler::new(Participation::Full, FaultPlan::parse(&drops).unwrap(), None, 3, 99)
+            .unwrap(),
+    );
+    let absent = run_distributed_sched(
+        master(),
+        3,
+        workers(),
+        rounds,
+        TransportKind::Local,
+        "sess-absent",
+        sched,
+    )
+    .expect("absence run");
+
+    assert_eq!(degraded.history.records.len(), absent.history.records.len());
+    for (x, y) in degraded.history.records.iter().zip(&absent.history.records) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "loss at round {}", x.round);
+        assert_eq!(
+            x.bits_per_client.to_bits(),
+            y.bits_per_client.to_bits(),
+            "bits at round {}",
+            x.round
+        );
+    }
+    for (x, y) in degraded.final_x.iter().zip(&absent.final_x) {
+        assert_eq!(x.to_bits(), y.to_bits(), "final_x");
+    }
+}
+
+/// Losing the quorum floor aborts the run through the flight recorder:
+/// the error names the breach, the blackbox artifact is a valid
+/// `ef21.blackbox/v1` dump with reason `quorum`, and the last
+/// checkpoint written before the breach decodes and is consistent with
+/// the resume pointer in the error message.
+#[test]
+fn quorum_breach_dumps_blackbox_and_leaves_loadable_checkpoint() {
+    let dir = std::env::temp_dir().join(format!("ef21_sess_quorum_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt_path = dir.join("run.ckpt");
+    let bb_path = dir.join("bb.json");
+
+    let health = HealthSpec {
+        every: 1,
+        window: 8,
+        tol: 1e9, // observation only: no anomaly rule may fire first
+        blackbox: Some(bb_path.display().to_string()),
+    }
+    .build(1.0 / 3.0, 0.01);
+    let opts = CkptOptions::saving(ckpt_path.clone(), 1).with_health(health);
+
+    let mut n = net(17, "down(2@4)");
+    n.on_loss = LossPolicy::Degrade { grace_ms: 500 };
+    n.min_workers = Some(3);
+    let err = match run_distributed_sched_ckpt_net(
+        master(),
+        3,
+        workers(),
+        12,
+        TransportKind::Local,
+        "sess-quorum",
+        Arc::new(Scheduler::noop(3)),
+        opts,
+        n,
+    ) {
+        Ok(_) => panic!("3-worker floor with a downed worker must abort"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("quorum lost"), "unexpected error: {msg}");
+
+    let bb = std::fs::read_to_string(&bb_path).expect("blackbox artifact written");
+    assert!(
+        bb.contains(ef21::health::blackbox::SCHEMA),
+        "blackbox missing schema tag: {bb}"
+    );
+    assert!(bb.contains("quorum"), "blackbox missing dump reason: {bb}");
+
+    let ck = Checkpoint::read(&ckpt_path).expect("checkpoint decodes after the breach");
+    assert!(ck.next_round >= 1, "at least one round must have been captured");
+    assert!(
+        msg.contains(&format!("rounds ..={}", ck.next_round - 1)),
+        "error resume pointer disagrees with the checkpoint on disk \
+         (next_round {}): {msg}",
+        ck.next_round
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
